@@ -1,0 +1,54 @@
+//! Fig. 1 — GWAS catalog statistics (SNP counts and sample sizes per
+//! publication year, medians with quartile bars).
+//!
+//! ```bash
+//! cargo run --release --example catalog_figures
+//! ```
+//!
+//! Prints the two panels as data tables plus a terminal sparkline of the
+//! medians. The catalog itself is synthesized (DESIGN.md §4) with the
+//! growth shape reported in the paper's §1.2.
+
+use cugwas::stats::{summarize_by_year, synthesize_catalog};
+
+fn main() {
+    let rows = synthesize_catalog(2013);
+    let summaries = summarize_by_year(&rows);
+
+    println!("Fig. 1a — SNP count per study (median, Q1–Q3)");
+    println!("{:<6}{:>9}{:>14}{:>14}{:>14}", "year", "studies", "q1", "median", "q3");
+    for s in &summaries {
+        println!(
+            "{:<6}{:>9}{:>14.0}{:>14.0}{:>14.0}",
+            s.year, s.studies, s.snp_count.q1, s.snp_count.median, s.snp_count.q3
+        );
+    }
+    sparkline("snp-count medians", summaries.iter().map(|s| s.snp_count.median).collect());
+
+    println!("\nFig. 1b — sample size per study (median, Q1–Q3)");
+    println!("{:<6}{:>9}{:>12}{:>12}{:>12}", "year", "studies", "q1", "median", "q3");
+    for s in &summaries {
+        println!(
+            "{:<6}{:>9}{:>12.0}{:>12.0}{:>12.0}",
+            s.year, s.studies, s.sample_size.q1, s.sample_size.median, s.sample_size.q3
+        );
+    }
+    sparkline("sample-size medians", summaries.iter().map(|s| s.sample_size.median).collect());
+
+    println!(
+        "\npaper's reading: SNP counts explode after 2009 while sample sizes plateau\n\
+         around 10 000 — hence an algorithm that scales in m at fixed n (§1.2)."
+    );
+}
+
+fn sparkline(label: &str, values: Vec<f64>) {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().cloned().fold(f64::MIN, f64::max);
+    let min = values.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-9);
+    let line: String = values
+        .iter()
+        .map(|v| BARS[(((v - min) / span) * 7.0).round() as usize])
+        .collect();
+    println!("  {label}: {line}");
+}

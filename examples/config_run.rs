@@ -1,0 +1,83 @@
+//! Config-file driven run — the deployment-style entry point.
+//!
+//! Reads a TOML run configuration (dataset geometry + pipeline topology +
+//! simulation profile), generates the dataset if absent, streams it, and
+//! cross-checks the live topology against the DES prediction for the
+//! same configuration at paper scale.
+//!
+//! ```bash
+//! cargo run --release --example config_run [path/to/run.toml]
+//! ```
+
+use cugwas::config::RunConfig;
+use cugwas::coordinator::{run, verify_against_oracle};
+use cugwas::devsim::{simulate, Algo, SimConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::generate;
+use cugwas::util::human_duration;
+use std::time::Duration;
+
+const DEFAULT_CONFIG: &str = r#"
+# cuGWAS run configuration (see rust/src/config/schema.rs for all keys)
+[dataset]
+dir = "/tmp/cugwas_config_run"
+n = 256
+pl = 3
+m = 4096
+seed = 7
+
+[pipeline]
+block = 256
+ngpus = 2
+host_buffers = 3
+mode = "trsm"
+backend = "native"
+
+[sim]
+profile = "tesla"
+"#;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = match std::env::args().nth(1) {
+        Some(path) => RunConfig::load(std::path::Path::new(&path))?,
+        None => {
+            println!("(no config path given — using the built-in example config)\n{DEFAULT_CONFIG}");
+            RunConfig::from_toml(DEFAULT_CONFIG)?
+        }
+    };
+
+    if !cfg.dataset_dir.join("meta.txt").exists() {
+        println!("generating dataset at {} …", cfg.dataset_dir.display());
+        generate(&cfg.dataset_dir, cfg.dims, cfg.gen_block, cfg.seed)?;
+    }
+
+    let report = run(&cfg.pipeline)?;
+    println!(
+        "live: {} SNPs in {} ({:.0} SNPs/s, {} lanes)",
+        report.snps,
+        human_duration(Duration::from_secs_f64(report.wall_secs)),
+        report.snps_per_sec,
+        cfg.pipeline.ngpus
+    );
+    verify_against_oracle(&cfg.dataset_dir, 1e-6)?;
+    println!("verified against the in-core oracle.");
+
+    // Same topology at paper scale through the DES.
+    let sim = simulate(
+        Algo::CuGwas,
+        &SimConfig {
+            dims: Dims::new(10_000, cfg.dims.pl, 100_000)?,
+            block: 5_000 * cfg.pipeline.ngpus,
+            ngpus: cfg.pipeline.ngpus,
+            host_buffers: cfg.pipeline.host_buffers,
+            profile: cfg.sim.profile,
+        },
+    )?;
+    println!(
+        "same topology at paper scale ({}): {} for m=100k — gpu util {:.0}%",
+        cfg.sim.profile.name,
+        human_duration(Duration::from_secs_f64(sim.total_secs)),
+        sim.gpu_util * 100.0
+    );
+    Ok(())
+}

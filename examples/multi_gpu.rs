@@ -1,0 +1,66 @@
+//! Multi-GPU scaling — the live counterpart of Fig. 6b.
+//!
+//! Streams the same study through 1, 2, 3 and 4 device lanes and reports
+//! scaling. On this CPU-only testbed the lanes share cores, so the
+//! *paper-scale* scaling claim (×1.9 per doubling) is reproduced by the
+//! DES instead (printed alongside); what the live run demonstrates is the
+//! coordinator's lane fan-out, split/merge correctness and overlap.
+//!
+//! ```bash
+//! cargo run --release --example multi_gpu
+//! ```
+
+use cugwas::bench::{ratio_cell, Table};
+use cugwas::coordinator::{run, verify_against_oracle, PipelineConfig};
+use cugwas::devsim::{simulate, Algo, HardwareProfile, SimConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::generate;
+use cugwas::util::human_duration;
+use std::time::Duration;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let dir = std::env::temp_dir().join("cugwas_multi_gpu");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dims = Dims::new(256, 3, 8_192)?;
+    generate(&dir, dims, 256, 7)?;
+
+    let mut table = Table::new(
+        "live lanes (this machine) + DES at paper scale (Tesla S2050)",
+        &["lanes", "live wall", "live vs 1", "sim (n=10k, m=100k)", "sim vs 1"],
+    );
+    let mut live_base = 0.0;
+    let mut sim_base = 0.0;
+    for lanes in [1usize, 2, 3, 4] {
+        // Live run: block scales with lane count, like the paper (§3.2).
+        let mut cfg = PipelineConfig::new(&dir, 128 * lanes);
+        cfg.ngpus = lanes;
+        let rep = run(&cfg)?;
+        verify_against_oracle(&dir, 1e-6)?;
+        // Paper-scale DES on the Tesla profile (Fig. 6b's machine).
+        let sim = simulate(
+            Algo::CuGwas,
+            &SimConfig {
+                dims: Dims::new(10_000, 3, 100_000)?,
+                block: 5_000 * lanes,
+                ngpus: lanes,
+                host_buffers: 3,
+                profile: HardwareProfile::tesla(),
+            },
+        )?;
+        if lanes == 1 {
+            live_base = rep.wall_secs;
+            sim_base = sim.total_secs;
+        }
+        table.row(&[
+            lanes.to_string(),
+            human_duration(Duration::from_secs_f64(rep.wall_secs)),
+            ratio_cell(live_base, rep.wall_secs),
+            human_duration(Duration::from_secs_f64(sim.total_secs)),
+            ratio_cell(sim_base, sim.total_secs),
+        ]);
+    }
+    table.print();
+    println!("\npaper claim: ×1.9 per GPU doubling (Fig. 6b) — compare the 'sim vs 1' column.");
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}

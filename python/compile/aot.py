@@ -1,0 +1,142 @@
+"""AOT lowering: JAX entry points → HLO text artifacts + manifest.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. All computations are lowered with
+``return_tuple=True`` and unwrapped with ``to_tuple()`` on the rust side.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--profile small|default|full]
+
+Artifacts: ``<kind>_n{n}_pl{pl}_mb{mb}_nb{nb}_bm{bm}.hlo.txt`` plus
+``manifest.tsv`` with one line per artifact::
+
+    kind  n  pl  mb  nb  bm  dtype  filename
+
+The rust runtime (``rust/src/runtime/artifact.rs``) selects artifacts by
+(kind, shape) from the manifest.
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered):
+    """Lowered jax → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def lower_variant(kind, n, pl, mb, nb, bm):
+    """Lower one (kind, shape) variant; returns HLO text."""
+    if kind == "preprocess":
+        fn = functools.partial(model.preprocess_entry, nb=nb)
+        args = (spec(n, n), spec(n, pl), spec(n))
+    elif kind == "trsm":
+        fn = functools.partial(model.trsm_entry, nb=nb, bm=bm)
+        args = (spec(n, n), spec(n, nb), spec(mb, n))
+    elif kind == "block":
+        fn = functools.partial(model.block_entry, nb=nb, bm=bm)
+        args = (spec(n, n), spec(n, nb), spec(n, pl), spec(n), spec(mb, n))
+    elif kind == "blockfull":
+        fn = functools.partial(model.blockfull_entry, nb=nb, bm=bm)
+        args = (
+            spec(n, n), spec(n, nb), spec(n, pl), spec(n),
+            spec(pl, pl), spec(pl), spec(mb, n),
+        )
+    else:
+        raise ValueError(f"unknown kind {kind}")
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+# (n, pl, mb, nb, bm) shape tuples per profile. Constraints: n % nb == 0,
+# mb % bm == 0. The "small" shapes keep `make artifacts` + the rust test
+# suite fast; "default" adds the shapes the examples and benches use.
+PROFILES = {
+    "small": [
+        (64, 3, 32, 16, 16),
+        (64, 3, 64, 16, 32),
+    ],
+    "default": [
+        (64, 3, 32, 16, 16),
+        (64, 3, 64, 16, 32),
+        (256, 3, 128, 32, 64),
+        (512, 3, 256, 64, 128),
+    ],
+    "full": [
+        (64, 3, 32, 16, 16),
+        (64, 3, 64, 16, 32),
+        (256, 3, 128, 32, 64),
+        (512, 3, 256, 64, 128),
+        (1024, 3, 512, 64, 128),
+        (2048, 3, 512, 64, 128),
+    ],
+}
+
+KINDS = ["preprocess", "trsm", "block", "blockfull"]
+
+
+def build(out_dir, profile):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    shapes = PROFILES[profile]
+    total = len(shapes) * len(KINDS)
+    done = 0
+    seen = set()
+    for (n, pl, mb, nb, bm) in shapes:
+        for kind in KINDS:
+            # The preprocess graph does not depend on (mb, bm): emit it once
+            # per (n, pl, nb) so the manifest stays duplicate-free.
+            key = (kind, n, pl, 0 if kind == "preprocess" else mb)
+            if key in seen:
+                done += 1
+                continue
+            seen.add(key)
+            name = f"{kind}_n{n}_pl{pl}_mb{mb}_nb{nb}_bm{bm}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            text = lower_variant(kind, n, pl, mb, nb, bm)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(
+                f"{kind}\t{n}\t{pl}\t{mb}\t{nb}\t{bm}\tf64\t{name}"
+            )
+            done += 1
+            print(f"[{done}/{total}] {name} ({len(text)} chars)", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# kind\tn\tpl\tmb\tnb\tbm\tdtype\tfile\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {total} artifacts + manifest to {out_dir}", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", choices=sorted(PROFILES), default="default")
+    args = ap.parse_args()
+    build(args.out_dir, args.profile)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for cuGWAS-rs.
+
+Two kernels cover the paper's per-block hot path:
+
+* :mod:`.trsm` — blocked triangular solve ``X̃_b = L^-1 X_b`` (the paper's
+  accelerator bottleneck, Listing 1.2 line 10 / Listing 1.3 line 11).
+* :mod:`.sloop` — the fused S-loop reductions ``G = X̃_L^T X̃_b``,
+  ``rb = X̃_b^T ỹ``, ``d_j = ‖x̃_j‖²`` in a single pass over ``X̃_b``.
+
+Both are authored for TPU-style tiling (VMEM blocks, matmul-only inner
+loops for the MXU) but lowered with ``interpret=True`` so the AOT HLO runs
+on the CPU PJRT client. :mod:`.ref` holds the pure-jnp oracles.
+"""
+
+from . import ref
+from .sloop import sloop_reduce
+from .trsm import invert_diag_blocks, trsm_blocked
+
+__all__ = ["ref", "sloop_reduce", "trsm_blocked", "invert_diag_blocks"]

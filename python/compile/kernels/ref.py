@@ -1,0 +1,85 @@
+"""Pure-jnp correctness oracles for the Layer-1 kernels.
+
+These are the ground truth the pytest/hypothesis suites compare the Pallas
+kernels against, and double as readable documentation of what each kernel
+computes. No Pallas, no tiling — just the math.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def trsm_ref(l, b):
+    """Solve ``L X = B`` for lower-triangular ``L`` (the paper's trsm).
+
+    Args:
+      l: (n, n) lower-triangular Cholesky factor.
+      b: (n, mb) right-hand sides (one SNP per column).
+
+    Returns:
+      (n, mb) solution ``L^-1 B``.
+    """
+    return jsl.solve_triangular(l, b, lower=True)
+
+
+def sloop_reduce_ref(xlt, yt, xbt):
+    """Fused S-loop reductions over a solved block ``X̃_b``.
+
+    Args:
+      xlt: (n, pl) preprocessed covariates ``X̃_L``.
+      yt:  (n,) preprocessed phenotype ``ỹ``.
+      xbt: (n, mb) solved block ``X̃_b``.
+
+    Returns:
+      g:  (pl, mb) — ``X̃_L^T X̃_b``  (paper's per-SNP ``S_BL``, batched)
+      rb: (mb,)    — ``X̃_b^T ỹ``    (paper's per-SNP ``r̃_B``)
+      d:  (mb,)    — column squared norms (paper's per-SNP ``S_BR``)
+    """
+    g = xlt.T @ xbt
+    rb = xbt.T @ yt
+    d = jnp.sum(xbt * xbt, axis=0)
+    return g, rb, d
+
+
+def solve_rs_ref(stl, rtop, g, rb, d):
+    """Per-SNP assembly + SPD solve (paper Listing 1.1 line 11, batched).
+
+    Builds, for every SNP column j::
+
+        S_j = [[S_TL, g_j], [g_j^T, d_j]],   rhs_j = [r̃_T, rb_j]
+
+    and returns ``r_j = S_j^-1 rhs_j`` stacked as (p, mb).
+    """
+    pl_, mb = g.shape
+    p = pl_ + 1
+    s = jnp.zeros((mb, p, p), dtype=g.dtype)
+    s = s.at[:, :pl_, :pl_].set(stl[None, :, :])
+    s = s.at[:, :pl_, pl_].set(g.T)
+    s = s.at[:, pl_, :pl_].set(g.T)
+    s = s.at[:, pl_, pl_].set(d)
+    rhs = jnp.concatenate([jnp.broadcast_to(rtop, (mb, pl_)), rb[:, None]], axis=1)
+    chol = jnp.linalg.cholesky(s)
+    z = jsl.solve_triangular(chol, rhs[..., None], lower=True)
+    r = jsl.solve_triangular(jnp.swapaxes(chol, -1, -2), z, lower=False)
+    return r[..., 0].T  # (p, mb)
+
+
+def gls_direct_ref(m, xl, y, xr):
+    """Definition-level GLS solve for every SNP (tiny sizes only).
+
+    ``r_i = (X_i^T M^-1 X_i)^-1 X_i^T M^-1 y`` with ``X_i = [X_L | xr_i]``.
+    The end-to-end oracle for the whole model pipeline.
+    """
+    minv = jnp.linalg.inv(m)
+
+    def solve_one(xri):
+        x = jnp.concatenate([xl, xri[:, None]], axis=1)
+        s = x.T @ minv @ x
+        rhs = x.T @ minv @ y
+        return jnp.linalg.solve(s, rhs)
+
+    return jax.vmap(solve_one, in_axes=1, out_axes=1)(xr)

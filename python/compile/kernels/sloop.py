@@ -1,0 +1,70 @@
+"""Fused S-loop reductions as a Pallas kernel.
+
+The paper's S-loop (Listing 1.2 lines 11–15) makes three passes over the
+solved block ``X̃_b``: a gemm against ``X̃_L``, a syrk per column, and a
+gemv against ``ỹ``. Fusing them into one kernel reads ``X̃_b`` from HBM
+once instead of three times — on a TPU the three reductions share the same
+VMEM-resident column tile, and the gemm part feeds the MXU while the
+column norms ride the VPU.
+
+Gridded over SNP column tiles like the trsm kernel, so the two kernels
+compose into a single per-block program with matching tiling.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sloop_kernel(xlt_ref, yt_ref, xbt_ref, g_ref, rb_ref, d_ref):
+    xb = xbt_ref[...]                       # (n, bm) — the single HBM read
+    g_ref[...] = xlt_ref[...].T @ xb        # MXU: (pl, n) x (n, bm)
+    rb_ref[...] = yt_ref[...] @ xb          # MXU: (1, n) x (n, bm)
+    d_ref[...] = jnp.sum(xb * xb, axis=0)   # VPU reduction
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def sloop_reduce(xlt, yt, xbt, *, bm=128):
+    """Compute ``(G, rb, d)`` for a solved block.
+
+    Args:
+      xlt: (n, pl) preprocessed covariates ``X̃_L``.
+      yt:  (n,) preprocessed phenotype ``ỹ``.
+      xbt: (n, mb) solved block ``X̃_b``. ``mb % bm == 0``.
+      bm:  column tile per grid program (static).
+
+    Returns:
+      g  — (pl, mb): ``X̃_L^T X̃_b``
+      rb — (mb,):   ``X̃_b^T ỹ``
+      d  — (mb,):   per-column squared norms.
+    """
+    n, mb = xbt.shape
+    pl_ = xlt.shape[1]
+    if mb % bm != 0:
+        raise ValueError(f"mb={mb} not a multiple of bm={bm}")
+    grid = (mb // bm,)
+    return pl.pallas_call(
+        _sloop_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, pl_), lambda i: (0, 0)),  # X̃_L: full, shared
+            pl.BlockSpec((n,), lambda i: (0,)),        # ỹ: full, shared
+            pl.BlockSpec((n, bm), lambda i: (0, i)),   # X̃_b: one tile
+        ],
+        out_specs=[
+            pl.BlockSpec((pl_, bm), lambda i: (0, i)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pl_, mb), xbt.dtype),
+            jax.ShapeDtypeStruct((mb,), xbt.dtype),
+            jax.ShapeDtypeStruct((mb,), xbt.dtype),
+        ],
+        interpret=True,
+    )(xlt, yt, xbt)

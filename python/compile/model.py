@@ -1,0 +1,144 @@
+"""Layer-2 JAX compute graphs — the per-block GWAS math the accelerator
+executes, composed from the Layer-1 Pallas kernels.
+
+Buffer-layout contract with the rust runtime (see ``rust/src/runtime``):
+XLA literals built from flat buffers are **row-major**, while the rust
+coordinator's natural layouts are column-major (one SNP = one contiguous
+column, straight off disk). Every entry point therefore speaks
+"SNP-rows": a block travels as ``xb_rows`` of shape ``(mb, n)`` whose
+row-major image *is* the disk image of the column-major ``(n, mb)`` block.
+Outputs follow the same convention (``xbt_rows``, ``g_rows``, ``r_rows``),
+so the rust side never transposes on the hot path; the transposes below
+are resolved by XLA's layout assignment, not materialized.
+
+Entry points (all AOT-lowered by ``aot.py``):
+
+* :func:`preprocess_entry`  — Listing 1.1 lines 1–5 + ``Dinv`` (once/study)
+* :func:`trsm_entry`        — pure paper mode: device does only the trsm
+* :func:`block_entry`       — fused mode: trsm + S-loop reductions
+* :func:`blockfull_entry`   — full-offload ablation: block → ``r`` directly
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from .kernels import invert_diag_blocks, sloop_reduce, trsm_blocked
+from .kernels.trsm import solve_lower_in_graph
+
+
+def chol_in_graph(m):
+    """Lower-Cholesky without LAPACK custom-calls.
+
+    ``jnp.linalg.cholesky`` lowers to a typed-FFI custom-call on CPU, which
+    the runtime's xla_extension 0.5.1 rejects (see aot.py header). This
+    right-looking rank-1 formulation lowers to pure HLO (`fori_loop` →
+    `while`), is O(n³) like potrf, and runs once per study.
+    """
+    n = m.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, a):
+        pivot = jnp.sqrt(a[j, j])
+        col = jnp.where(idx >= j, a[:, j] / pivot, 0.0).at[j].set(pivot)
+        trailing = (idx[:, None] > j) & (idx[None, :] > j)
+        a = a - jnp.where(trailing, jnp.outer(col, col), 0.0)
+        return a.at[:, j].set(col)
+
+    return jnp.tril(jax.lax.fori_loop(0, n, body, m))
+
+
+def batched_chol_small(s):
+    """Batched Cholesky of tiny SPD systems, unrolled over the static size.
+
+    ``s`` is ``(mb, p, p)`` with p ≤ ~20 (the paper's covariate count), so
+    a trace-time unrolled loop beats any library call and, crucially,
+    avoids the LAPACK custom-call (see :func:`chol_in_graph`).
+    """
+    p = s.shape[-1]
+    l = jnp.zeros_like(s)
+    for j in range(p):
+        d = s[:, j, j] - jnp.sum(l[:, j, :j] * l[:, j, :j], axis=-1)
+        dj = jnp.sqrt(d)
+        l = l.at[:, j, j].set(dj)
+        for i in range(j + 1, p):
+            v = s[:, i, j] - jnp.sum(l[:, i, :j] * l[:, j, :j], axis=-1)
+            l = l.at[:, i, j].set(v / dj)
+    return l
+
+
+def solve_rs_inline(stl, rtop, g, rb, d):
+    """Custom-call-free batched per-SNP assembly + SPD solve.
+
+    Same math as ``kernels.ref.solve_rs_ref`` (which the tests compare
+    against) but with the unrolled Cholesky + substitutions, so the
+    blockfull artifact compiles on the 0.5.1 runtime.
+    """
+    pl_, mb = g.shape
+    p = pl_ + 1
+    s = jnp.zeros((mb, p, p), dtype=g.dtype)
+    s = s.at[:, :pl_, :pl_].set(stl[None, :, :])
+    s = s.at[:, :pl_, pl_].set(g.T)
+    s = s.at[:, pl_, :pl_].set(g.T)
+    s = s.at[:, pl_, pl_].set(d)
+    rhs = jnp.concatenate([jnp.broadcast_to(rtop, (mb, pl_)), rb[:, None]], axis=1)
+    l = batched_chol_small(s)
+    # Forward substitution L z = rhs (unrolled).
+    z = jnp.zeros_like(rhs)
+    for i in range(p):
+        acc = rhs[:, i] - jnp.sum(l[:, i, :i] * z[:, :i], axis=-1)
+        z = z.at[:, i].set(acc / l[:, i, i])
+    # Backward substitution L^T x = z.
+    x = jnp.zeros_like(z)
+    for i in reversed(range(p)):
+        acc = z[:, i] - jnp.sum(l[:, i + 1:, i] * x[:, i + 1:], axis=-1)
+        x = x.at[:, i].set(acc / l[:, i, i])
+    return x.T  # (p, mb)
+
+
+def preprocess_entry(m, xl, y, *, nb):
+    """Study preprocessing: ``L, Dinv, X̃_L, ỹ, S_TL, r̃_T``.
+
+    Runs once (seconds, per the paper) — plain jnp, no Pallas.
+    ``n`` must be a multiple of ``nb`` (aot.py only emits such variants).
+    """
+    l = chol_in_graph(m)                             # potrf
+    dinv = invert_diag_blocks(l, nb)
+    xlt = solve_lower_in_graph(l, xl)                # trsm
+    yt = solve_lower_in_graph(l, y[:, None])[:, 0]   # trsv
+    rtop = xlt.T @ yt                                # gemv
+    stl = xlt.T @ xlt                                # syrk
+    return l, dinv, xlt, yt, stl, rtop
+
+
+def trsm_entry(l, dinv, xb_rows, *, nb, bm):
+    """Device trsm only (the paper's exact GPU work): ``X̃_b = L^-1 X_b``."""
+    xbt = trsm_blocked(l, dinv, xb_rows.T, nb=nb, bm=bm)
+    return (xbt.T,)
+
+
+def block_entry(l, dinv, xlt, yt, xb_rows, *, nb, bm):
+    """Fused device block: trsm + single-pass S-loop reductions.
+
+    Returns ``(xbt_rows, g_rows, rb, d)`` — everything the CPU needs to
+    finish the S-loop with tiny per-SNP ``posv`` solves.
+    """
+    xbt = trsm_blocked(l, dinv, xb_rows.T, nb=nb, bm=bm)
+    g, rb, d = sloop_reduce(xlt, yt, xbt, bm=bm)
+    return xbt.T, g.T, rb, d
+
+
+def blockfull_entry(l, dinv, xlt, yt, stl, rtop, xb_rows, *, nb, bm):
+    """Full offload: the device returns the per-SNP solutions ``r`` alone.
+
+    Ablation target — the paper keeps this half on the CPU to overlap it
+    with the next block's trsm; this graph lets the benches measure what
+    full offload would cost instead.
+    """
+    xbt = trsm_blocked(l, dinv, xb_rows.T, nb=nb, bm=bm)
+    g, rb, d = sloop_reduce(xlt, yt, xbt, bm=bm)
+    r = solve_rs_inline(stl, rtop, g, rb, d)         # batched assembly+posv
+    return (r.T,)                                    # (mb, p) row-major

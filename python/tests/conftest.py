@@ -1,0 +1,27 @@
+"""Shared fixtures/helpers for the cuGWAS python test suite."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rand_lower(rng, n, dtype=jnp.float64):
+    """A well-conditioned lower-triangular factor (as potrf would give)."""
+    a = rng.standard_normal((n, n))
+    l = np.tril(a)
+    l[np.diag_indices(n)] = 2.0 + np.abs(l[np.diag_indices(n)])
+    return jnp.asarray(l, dtype=dtype)
+
+
+def rand_spd(rng, n, dtype=jnp.float64):
+    a = rng.standard_normal((n, n))
+    return jnp.asarray(a @ a.T / n + 4.0 * np.eye(n), dtype=dtype)

@@ -1,0 +1,99 @@
+"""Block-composition properties: the per-block graphs must tile.
+
+The coordinator splits `X_R` into blocks (and blocks into per-lane
+chunks); these tests prove at the L2 level that any such partition
+composes to the same answer — the mathematical backbone of the streaming
+correctness argument.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import gls_direct_ref
+from .conftest import rand_spd
+
+
+def make_study(n, pl, m, seed=0):
+    rng = np.random.default_rng(seed)
+    mm = rand_spd(rng, n)
+    xl = jnp.asarray(rng.standard_normal((n, pl))).at[:, 0].set(1.0)
+    y = jnp.asarray(rng.standard_normal(n))
+    xr = jnp.asarray(rng.integers(0, 3, size=(n, m)).astype(np.float64))
+    return mm, xl, y, xr
+
+
+@pytest.mark.parametrize("splits", [[16], [8, 8], [4, 8, 4]])
+def test_blockwise_trsm_tiles(splits):
+    n, nb, bm = 32, 16, 4
+    mm, xl, y, xr = make_study(n, 3, sum(splits), seed=1)
+    l, dinv, _, _, _, _ = model.preprocess_entry(mm, xl, y, nb=nb)
+    # Whole-matrix solve…
+    (whole,) = model.trsm_entry(l, dinv, xr.T, nb=nb, bm=bm)
+    # …equals the concatenation of independent block solves.
+    parts = []
+    c0 = 0
+    for w in splits:
+        (part,) = model.trsm_entry(l, dinv, xr[:, c0:c0 + w].T, nb=nb, bm=bm)
+        parts.append(np.asarray(part))
+        c0 += w
+    tiled = np.concatenate(parts, axis=0)
+    np.testing.assert_allclose(tiled, np.asarray(whole), rtol=0, atol=0)
+
+
+def test_blockwise_full_pipeline_tiles():
+    """blockfull over chunks == direct GLS over the whole study."""
+    n, pl, nb, bm = 32, 3, 16, 8
+    mm, xl, y, xr = make_study(n, pl, 24, seed=2)
+    l, dinv, xlt, yt, stl, rtop = model.preprocess_entry(mm, xl, y, nb=nb)
+    parts = []
+    for c0 in range(0, 24, 8):
+        (r,) = model.blockfull_entry(
+            l, dinv, xlt, yt, stl, rtop, xr[:, c0:c0 + 8].T, nb=nb, bm=bm
+        )
+        parts.append(np.asarray(r))
+    tiled = np.concatenate(parts, axis=0).T  # (p, m)
+    want = gls_direct_ref(mm, xl, y, xr)
+    np.testing.assert_allclose(tiled, np.asarray(want), rtol=1e-6, atol=1e-8)
+
+
+def test_zero_padded_tail_columns_do_not_corrupt_live_ones():
+    """The coordinator zero-pads ragged tails to the artifact width; the
+    live columns' results must be unaffected by the padding."""
+    n, pl, nb, bm = 32, 3, 16, 8
+    mm, xl, y, xr = make_study(n, pl, 8, seed=3)
+    l, dinv, xlt, yt, _, _ = model.preprocess_entry(mm, xl, y, nb=nb)
+    # Full 8 columns.
+    full, g_full, rb_full, d_full = model.block_entry(l, dinv, xlt, yt, xr.T, nb=nb, bm=bm)
+    # 5 live + 3 zero columns.
+    padded = jnp.concatenate([xr[:, :5], jnp.zeros((n, 3))], axis=1)
+    part, g_part, rb_part, d_part = model.block_entry(l, dinv, xlt, yt, padded.T, nb=nb, bm=bm)
+    np.testing.assert_allclose(np.asarray(part)[:5], np.asarray(full)[:5], rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(g_part)[:5], np.asarray(g_full)[:5], rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(rb_part)[:5], np.asarray(rb_full)[:5], rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(d_part)[:5], np.asarray(d_full)[:5], rtol=0, atol=0)
+    # Padded columns produce exactly zero reductions.
+    assert np.all(np.asarray(d_part)[5:] == 0)
+    assert np.all(np.asarray(rb_part)[5:] == 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 20),
+    cut=st.integers(1, 19),
+    seed=st.integers(0, 2**16),
+)
+def test_any_two_way_split_tiles(m, cut, seed):
+    if cut >= m:
+        return
+    n, pl, nb, bm = 16, 2, 8, 1
+    mm, xl, y, xr = make_study(n, pl, m, seed=seed)
+    l, dinv, xlt, yt, stl, rtop = model.preprocess_entry(mm, xl, y, nb=nb)
+    (whole,) = model.blockfull_entry(l, dinv, xlt, yt, stl, rtop, xr.T, nb=nb, bm=bm)
+    (a,) = model.blockfull_entry(l, dinv, xlt, yt, stl, rtop, xr[:, :cut].T, nb=nb, bm=bm)
+    (b,) = model.blockfull_entry(l, dinv, xlt, yt, stl, rtop, xr[:, cut:].T, nb=nb, bm=bm)
+    tiled = np.concatenate([np.asarray(a), np.asarray(b)], axis=0)
+    np.testing.assert_allclose(tiled, np.asarray(whole), rtol=1e-12, atol=1e-12)

@@ -1,0 +1,73 @@
+"""L2 model graphs vs the definition-level GLS oracle."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import gls_direct_ref, solve_rs_ref
+from .conftest import rand_spd
+
+
+def make_study(n, pl, m, seed=0):
+    rng = np.random.default_rng(seed)
+    mm = rand_spd(rng, n)
+    xl = jnp.asarray(rng.standard_normal((n, pl)))
+    xl = xl.at[:, 0].set(1.0)
+    y = jnp.asarray(rng.standard_normal(n))
+    xr = jnp.asarray(rng.integers(0, 3, size=(n, m)).astype(np.float64))
+    return mm, xl, y, xr
+
+
+def test_preprocess_entry_invariants():
+    n, pl, nb = 32, 3, 16
+    mm, xl, y, _ = make_study(n, pl, 4)
+    l, dinv, xlt, yt, stl, rtop = model.preprocess_entry(mm, xl, y, nb=nb)
+    np.testing.assert_allclose(np.asarray(l @ l.T), np.asarray(mm), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(l @ xlt), np.asarray(xl), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(l @ yt), np.asarray(y), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(stl), np.asarray(xlt.T @ xlt), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(rtop), np.asarray(xlt.T @ yt), rtol=1e-9, atol=1e-9)
+    assert dinv.shape == (n, nb)
+
+
+@pytest.mark.parametrize("n,pl,mb,nb,bm", [(32, 3, 16, 16, 8), (64, 3, 32, 16, 16)])
+def test_blockfull_matches_direct_gls(n, pl, mb, nb, bm):
+    """End-to-end: full-offload graph == definition-level GLS."""
+    mm, xl, y, xr = make_study(n, pl, mb, seed=4)
+    l, dinv, xlt, yt, stl, rtop = model.preprocess_entry(mm, xl, y, nb=nb)
+    (r_rows,) = model.blockfull_entry(l, dinv, xlt, yt, stl, rtop, xr.T, nb=nb, bm=bm)
+    want = gls_direct_ref(mm, xl, y, xr)  # (p, mb)
+    np.testing.assert_allclose(np.asarray(r_rows.T), np.asarray(want), rtol=1e-6, atol=1e-8)
+
+
+def test_block_entry_composes_with_solve_rs():
+    """Fused-mode outputs + CPU-side solve == full-offload output."""
+    n, pl, mb, nb, bm = 32, 3, 16, 16, 8
+    mm, xl, y, xr = make_study(n, pl, mb, seed=5)
+    l, dinv, xlt, yt, stl, rtop = model.preprocess_entry(mm, xl, y, nb=nb)
+    xbt_rows, g_rows, rb, d = model.block_entry(l, dinv, xlt, yt, xr.T, nb=nb, bm=bm)
+    r = solve_rs_ref(stl, rtop, g_rows.T, rb, d)
+    (r_full_rows,) = model.blockfull_entry(l, dinv, xlt, yt, stl, rtop, xr.T, nb=nb, bm=bm)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_full_rows.T), rtol=1e-8, atol=1e-10)
+
+
+def test_trsm_entry_matches_block_entry_xbt():
+    n, pl, mb, nb, bm = 32, 3, 16, 16, 8
+    mm, xl, y, xr = make_study(n, pl, mb, seed=6)
+    l, dinv, xlt, yt, _, _ = model.preprocess_entry(mm, xl, y, nb=nb)
+    (xbt1,) = model.trsm_entry(l, dinv, xr.T, nb=nb, bm=bm)
+    xbt2, _, _, _ = model.block_entry(l, dinv, xlt, yt, xr.T, nb=nb, bm=bm)
+    np.testing.assert_allclose(np.asarray(xbt1), np.asarray(xbt2), rtol=0, atol=0)
+
+
+def test_row_major_contract():
+    """xb_rows really is interpreted as the transposed block."""
+    n, mb, nb, bm = 32, 16, 16, 8
+    rng = np.random.default_rng(7)
+    l = jnp.eye(n)  # identity ⇒ output == input
+    dinv = model.invert_diag_blocks(l, nb)
+    xb = jnp.asarray(rng.standard_normal((n, mb)))
+    (out_rows,) = model.trsm_entry(l, dinv, xb.T, nb=nb, bm=bm)
+    np.testing.assert_array_equal(np.asarray(out_rows), np.asarray(xb.T))

@@ -1,0 +1,78 @@
+"""L1 fused S-loop reduction kernel vs the pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import sloop_reduce
+from compile.kernels.ref import sloop_reduce_ref
+
+
+def run_case(n, pl, mb, bm, seed=0, dtype=jnp.float64):
+    rng = np.random.default_rng(seed)
+    xlt = jnp.asarray(rng.standard_normal((n, pl)), dtype=dtype)
+    yt = jnp.asarray(rng.standard_normal(n), dtype=dtype)
+    xbt = jnp.asarray(rng.standard_normal((n, mb)), dtype=dtype)
+    got = sloop_reduce(xlt, yt, xbt, bm=bm)
+    want = sloop_reduce_ref(xlt, yt, xbt)
+    return got, want
+
+
+@pytest.mark.parametrize(
+    "n,pl,mb,bm",
+    [
+        (16, 1, 8, 8),
+        (64, 3, 32, 16),
+        (64, 3, 64, 32),
+        (128, 5, 48, 16),
+        (256, 3, 128, 64),
+    ],
+)
+def test_sloop_matches_ref(n, pl, mb, bm):
+    (g, rb, d), (g0, rb0, d0) = run_case(n, pl, mb, bm)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0), rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(rb), np.asarray(rb0), rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d0), rtol=1e-10, atol=1e-10)
+
+
+def test_sloop_d_is_nonnegative():
+    (_, _, d), _ = run_case(32, 2, 16, 8, seed=9)
+    assert np.all(np.asarray(d) >= 0)
+
+
+def test_sloop_zero_block():
+    got, _ = run_case(16, 2, 8, 8)
+    g, rb, d = sloop_reduce(jnp.zeros((16, 2)), jnp.zeros(16), jnp.zeros((16, 8)), bm=8)
+    assert np.all(np.asarray(g) == 0)
+    assert np.all(np.asarray(rb) == 0)
+    assert np.all(np.asarray(d) == 0)
+
+
+def test_sloop_rejects_misaligned_tile():
+    with pytest.raises(ValueError):
+        sloop_reduce(jnp.zeros((16, 2)), jnp.zeros(16), jnp.zeros((16, 10)), bm=4)
+
+
+def test_sloop_float32():
+    (g, rb, d), (g0, rb0, d0) = run_case(32, 3, 16, 8, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rb), np.asarray(rb0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d0), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 32, 64]),
+    pl=st.integers(1, 6),
+    tiles=st.integers(1, 3),
+    bm=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**20),
+)
+def test_sloop_hypothesis(n, pl, tiles, bm, seed):
+    mb = tiles * bm
+    (g, rb, d), (g0, rb0, d0) = run_case(n, pl, mb, bm, seed=seed)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(rb), np.asarray(rb0), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d0), rtol=1e-9, atol=1e-9)

@@ -1,0 +1,100 @@
+"""L1 trsm kernel vs the pure-jnp oracle (plus hypothesis shape sweeps)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import invert_diag_blocks, trsm_blocked
+from compile.kernels.ref import trsm_ref
+from .conftest import rand_lower
+
+
+def run_case(n, mb, nb, bm, seed=0, dtype=jnp.float64):
+    rng = np.random.default_rng(seed)
+    l = rand_lower(rng, n, dtype)
+    b = jnp.asarray(rng.standard_normal((n, mb)), dtype=dtype)
+    dinv = invert_diag_blocks(l, nb)
+    got = trsm_blocked(l, dinv, b, nb=nb, bm=bm)
+    want = trsm_ref(l, b)
+    return np.asarray(got), np.asarray(want)
+
+
+@pytest.mark.parametrize(
+    "n,mb,nb,bm",
+    [
+        (16, 8, 16, 8),    # single diagonal block, single column tile
+        (32, 8, 16, 8),    # two diagonal blocks
+        (64, 32, 16, 16),  # the shipped small artifact shape
+        (64, 64, 16, 32),
+        (128, 48, 32, 16), # three column tiles
+        (96, 16, 32, 16),
+    ],
+)
+def test_trsm_matches_ref(n, mb, nb, bm):
+    got, want = run_case(n, mb, nb, bm)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_trsm_residual_is_small():
+    # Independent of the oracle: check L @ X == B directly.
+    rng = np.random.default_rng(3)
+    n, mb, nb, bm = 64, 32, 16, 16
+    l = rand_lower(rng, n)
+    b = jnp.asarray(rng.standard_normal((n, mb)))
+    x = trsm_blocked(l, invert_diag_blocks(l, nb), b, nb=nb, bm=bm)
+    np.testing.assert_allclose(np.asarray(l @ x), np.asarray(b), rtol=1e-9, atol=1e-9)
+
+
+def test_trsm_identity_l():
+    n, mb, nb, bm = 32, 16, 16, 16
+    l = jnp.eye(n)
+    b = jnp.arange(n * mb, dtype=jnp.float64).reshape(n, mb)
+    x = trsm_blocked(l, invert_diag_blocks(l, nb), b, nb=nb, bm=bm)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(b))
+
+
+def test_trsm_rejects_misaligned_shapes():
+    rng = np.random.default_rng(0)
+    l = rand_lower(rng, 48)
+    dinv = invert_diag_blocks(l, 16)
+    b = jnp.zeros((48, 10))
+    with pytest.raises(ValueError):
+        trsm_blocked(l, dinv, b, nb=16, bm=4)  # mb % bm != 0
+    with pytest.raises(ValueError):
+        trsm_blocked(l, dinv, jnp.zeros((48, 8)), nb=20, bm=8)  # n % nb != 0
+    with pytest.raises(ValueError):
+        invert_diag_blocks(l, 20)
+
+
+def test_trsm_float32():
+    got, want = run_case(32, 16, 16, 8, dtype=jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nblocks=st.integers(1, 4),
+    nb_pow=st.sampled_from([8, 16]),
+    tiles=st.integers(1, 3),
+    bm=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**20),
+)
+def test_trsm_hypothesis_shapes(nblocks, nb_pow, tiles, bm, seed):
+    n = nblocks * nb_pow
+    mb = tiles * bm
+    got, want = run_case(n, mb, nb_pow, bm, seed=seed)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_invert_diag_blocks_shape_and_value():
+    rng = np.random.default_rng(5)
+    l = rand_lower(rng, 32)
+    dinv = invert_diag_blocks(l, 16)
+    assert dinv.shape == (32, 16)
+    for k in range(2):
+        blk = np.asarray(l)[k * 16:(k + 1) * 16, k * 16:(k + 1) * 16]
+        inv = np.asarray(dinv)[k * 16:(k + 1) * 16, :]
+        np.testing.assert_allclose(inv @ blk, np.eye(16), rtol=1e-10, atol=1e-10)

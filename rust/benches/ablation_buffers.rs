@@ -1,0 +1,104 @@
+//! Ablation — the §3.1 design choices:
+//!
+//! 1. **host buffers**: 2 vs 3 (vs 4) across disk speeds. The paper's
+//!    double–triple claim: 2 host buffers stall once block reads are not
+//!    ≪ trsm; the third buffer restores full overlap; a fourth buys
+//!    nothing.
+//! 2. **block size**: the streaming-granularity tradeoff (tiny blocks =
+//!    per-iteration overhead; huge blocks = less overlap + more memory).
+//! 3. **offload mode**: trsm-only (paper) vs fused reductions vs full
+//!    offload, live.
+//!
+//! ```bash
+//! cargo bench --bench ablation_buffers
+//! ```
+
+use cugwas::bench::Table;
+use cugwas::coordinator::{run, OffloadMode, PipelineConfig};
+use cugwas::devsim::{simulate, Algo, HardwareProfile, SimConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::{generate, Throttle};
+use cugwas::util::human_duration;
+use std::time::Duration;
+
+fn main() {
+    // ---- 1) host buffers × disk speed (sim, paper scale) -------------------
+    let mut t = Table::new(
+        "host-buffer ablation (sim, n=10k, m=100k; block read : trsm ratio varies with disk)",
+        &["disk MB/s", "hb=2", "hb=3", "hb=4", "3-buf gain over 2"],
+    );
+    for disk in [2_000.0, 500.0, 253.0, 120.0] {
+        let profile = HardwareProfile { disk_mbps: disk, ..HardwareProfile::quadro() };
+        let mut secs = Vec::new();
+        for hb in [2usize, 3, 4] {
+            let cfg = SimConfig {
+                dims: Dims::new(10_000, 3, 100_000).unwrap(),
+                block: 5_000,
+                ngpus: 1,
+                host_buffers: hb,
+                profile,
+            };
+            secs.push(simulate(Algo::CuGwas, &cfg).unwrap().total_secs);
+        }
+        t.row(&[
+            format!("{disk:.0}"),
+            human_duration(Duration::from_secs_f64(secs[0])),
+            human_duration(Duration::from_secs_f64(secs[1])),
+            human_duration(Duration::from_secs_f64(secs[2])),
+            format!("{:.1}%", (secs[0] / secs[1] - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "reading: the third buffer pays exactly where the paper says — when the\n\
+         block read approaches the trsm time (≈253 MB/s row); on a fast cluster\n\
+         FS two suffice, on a saturated HDD the disk is the wall either way."
+    );
+
+    // ---- 2) block size (live) ----------------------------------------------
+    let fast = std::env::var("CUGWAS_BENCH_FAST").is_ok();
+    let dir = std::env::temp_dir().join("cugwas_ablation_block");
+    let _ = std::fs::remove_dir_all(&dir);
+    let m = if fast { 2048 } else { 8192 };
+    generate(&dir, Dims::new(256, 3, m).unwrap(), 256, 17).unwrap();
+    let throttle = Some(Throttle { bytes_per_sec: 120e6 });
+    let mut bt = Table::new(
+        format!("block-size ablation (live, n=256, m={m}, 120 MB/s reads)"),
+        &["block", "wall", "SNPs/s"],
+    );
+    for block in [32usize, 64, 128, 256, 512, 1024] {
+        let mut cfg = PipelineConfig::new(&dir, block);
+        cfg.read_throttle = throttle;
+        let rep = run(&cfg).unwrap();
+        bt.row(&[
+            block.to_string(),
+            human_duration(Duration::from_secs_f64(rep.wall_secs)),
+            format!("{:.0}", rep.snps_per_sec),
+        ]);
+    }
+    bt.print();
+
+    // ---- 3) offload mode (live) ---------------------------------------------
+    let mut mt = Table::new(
+        format!("offload-mode ablation (live, n=256, m={m})"),
+        &["mode", "wall", "coordinator sloop share"],
+    );
+    for mode in [OffloadMode::Trsm, OffloadMode::Block, OffloadMode::BlockFull] {
+        let mut cfg = PipelineConfig::new(&dir, 256);
+        cfg.mode = mode;
+        let rep = run(&cfg).unwrap();
+        let sloop = rep.metrics.total(cugwas::coordinator::Phase::Sloop).as_secs_f64();
+        mt.row(&[
+            mode.as_str().to_string(),
+            human_duration(Duration::from_secs_f64(rep.wall_secs)),
+            format!("{:.1}%", sloop / rep.wall_secs * 100.0),
+        ]);
+    }
+    mt.print();
+    println!(
+        "reading: the paper keeps the S-loop on the CPU (mode=trsm) to overlap it\n\
+         with the next block's trsm; fused/full offload shift that work to the\n\
+         device lane — worthwhile only if the CPU, not the device, is the wall."
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,51 @@
+//! Fig. 1 — GWAS catalog statistics (both panels).
+//!
+//! Regenerates the data behind the paper's Fig. 1a (SNP-count medians +
+//! quartiles per year) and Fig. 1b (sample-size medians + quartiles),
+//! and checks the two qualitative claims of §1.2 hold in the output.
+//!
+//! ```bash
+//! cargo bench --bench fig1_catalog
+//! ```
+
+use cugwas::bench::Table;
+use cugwas::stats::{summarize_by_year, synthesize_catalog};
+
+fn main() {
+    let rows = synthesize_catalog(2013);
+    let summaries = summarize_by_year(&rows);
+
+    let mut a = Table::new("Fig 1a — SNP count per study", &["year", "studies", "q1", "median", "q3"]);
+    let mut b = Table::new("Fig 1b — sample size per study", &["year", "studies", "q1", "median", "q3"]);
+    for s in &summaries {
+        a.row(&[
+            s.year.to_string(),
+            s.studies.to_string(),
+            format!("{:.0}", s.snp_count.q1),
+            format!("{:.0}", s.snp_count.median),
+            format!("{:.0}", s.snp_count.q3),
+        ]);
+        b.row(&[
+            s.year.to_string(),
+            s.studies.to_string(),
+            format!("{:.0}", s.sample_size.q1),
+            format!("{:.0}", s.sample_size.median),
+            format!("{:.0}", s.sample_size.q3),
+        ]);
+    }
+    a.print();
+    b.print();
+
+    // The two claims the paper reads off this figure:
+    let med_snp = |y: u32| summaries.iter().find(|s| s.year == y).unwrap().snp_count.median;
+    let med_n = |y: u32| summaries.iter().find(|s| s.year == y).unwrap().sample_size.median;
+    let snp_growth = med_snp(2012) / med_snp(2008);
+    let n_late = med_n(2012) / med_n(2010);
+    println!("\nshape checks:");
+    println!("  SNP-count median growth 2008→2012: {snp_growth:.1}x (paper: 'tremendous', >3x)  {}", ok(snp_growth > 3.0));
+    println!("  sample-size median 2010→2012:      {n_late:.2}x (paper: plateau ~10k, ±40%)     {}", ok((0.6..1.6).contains(&n_late)));
+}
+
+fn ok(b: bool) -> &'static str {
+    if b { "[OK]" } else { "[MISMATCH]" }
+}

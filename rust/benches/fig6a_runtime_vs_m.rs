@@ -1,0 +1,99 @@
+//! Fig. 6a — runtime vs m: cuGWAS (1 GPU) against OOC-HP-GWAS, with the
+//! red line marking the largest m for which two blocks of X_R fit in GPU
+//! memory (i.e. where a non-streaming implementation would stop).
+//!
+//! Reproduced twice:
+//! 1. **live** — both algorithms on this machine over an m-sweep
+//!    (native backend so CPU vs "device" rates are honest);
+//! 2. **sim** — at paper scale (n = 10 000) with the Quadro profile,
+//!    where the 2.4–2.6× gap and linearity in m should reproduce.
+//!
+//! ```bash
+//! cargo bench --bench fig6a_runtime_vs_m
+//! ```
+
+use cugwas::baselines::run_ooc_cpu;
+use cugwas::bench::{ratio_cell, Table};
+use cugwas::coordinator::{run, PipelineConfig};
+use cugwas::devsim::{simulate, Algo, HardwareProfile, SimConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::generate;
+use cugwas::util::human_duration;
+use std::time::Duration;
+
+fn main() {
+    // ---- live sweep -----------------------------------------------------
+    let fast = std::env::var("CUGWAS_BENCH_FAST").is_ok();
+    let n = 384;
+    let block = 128;
+    let sweep: &[usize] = if fast { &[1024, 2048] } else { &[1024, 2048, 4096, 8192, 16384] };
+    let mut live = Table::new(
+        format!("Fig 6a live — runtime vs m (n={n}, block={block})"),
+        &["m", "OOC-HP-GWAS", "cuGWAS", "speedup"],
+    );
+    for &m in sweep {
+        let dir = std::env::temp_dir().join(format!("cugwas_fig6a_{m}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate(&dir, Dims::new(n, 3, m).unwrap(), block, 5).unwrap();
+        let ooc = run_ooc_cpu(&dir, block, None).unwrap();
+        let cu = run(&PipelineConfig::new(&dir, block)).unwrap();
+        live.row(&[
+            m.to_string(),
+            human_duration(Duration::from_secs_f64(ooc.wall_secs)),
+            human_duration(Duration::from_secs_f64(cu.wall_secs)),
+            ratio_cell(ooc.wall_secs, cu.wall_secs),
+        ]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    live.print();
+
+    // ---- sim at paper scale ----------------------------------------------
+    // Red line: largest m where TWO blocks of X_R fit in the Quadro 6000's
+    // 6 GB next to the 800 MB L (paper: m ≈ 22 500 for n = 10 000).
+    let n_paper = 10_000usize;
+    let gpu_mem = 6.0e9 - 0.8e9;
+    let red_line = (gpu_mem / 2.0 / (n_paper as f64 * 8.0)) as usize;
+    let mut sim = Table::new(
+        format!("Fig 6a sim — paper scale (n={n_paper}, Quadro profile)"),
+        &["m", "OOC-HP-GWAS", "cuGWAS 1GPU", "speedup", "needs streaming?"],
+    );
+    let mut speedups = Vec::new();
+    for m in [25_000usize, 50_000, 100_000, 200_000, 400_000] {
+        let cfg = SimConfig {
+            dims: Dims::new(n_paper, 3, m).unwrap(),
+            block: 5_000,
+            ngpus: 1,
+            host_buffers: 3,
+            profile: HardwareProfile::quadro(),
+        };
+        let ooc = simulate(Algo::OocCpu, &cfg).unwrap();
+        let cu = simulate(Algo::CuGwas, &cfg).unwrap();
+        speedups.push(ooc.total_secs / cu.total_secs);
+        sim.row(&[
+            m.to_string(),
+            human_duration(Duration::from_secs_f64(ooc.total_secs)),
+            human_duration(Duration::from_secs_f64(cu.total_secs)),
+            ratio_cell(ooc.total_secs, cu.total_secs),
+            if m > red_line { "yes (past red line)".into() } else { "no".into() },
+        ]);
+    }
+    sim.print();
+    println!("\nred line (2 blocks in 6 GB GPU memory, n=10 000): m ≈ {red_line}");
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!(
+        "shape checks: speedup ≈ {avg:.2}x (paper: 2.6x) {}; runtime linear in m {}",
+        ok((2.0..3.2).contains(&avg)),
+        ok(linearity_ok(&speedups))
+    );
+}
+
+fn linearity_ok(speedups: &[f64]) -> bool {
+    // Linear runtime in m ⇒ constant speedup across the sweep.
+    let min = speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let max = speedups.iter().cloned().fold(f64::MIN, f64::max);
+    max / min < 1.15
+}
+
+fn ok(b: bool) -> &'static str {
+    if b { "[OK]" } else { "[MISMATCH]" }
+}

@@ -1,0 +1,91 @@
+//! Fig. 6b — multi-GPU scaling: runtime of cuGWAS with 1–4 GPUs on the
+//! Tesla S2050 system, p=4, n=10 000, m=100 000. The paper's claim:
+//! near-ideal scaling, ×1.9 per GPU doubling.
+//!
+//! Reproduced via the DES at the paper's exact configuration, plus a live
+//! lane-fan-out run on this machine (which demonstrates coordinator
+//! correctness under fan-out; CPU lanes share cores so live scaling is
+//! not the claim — see DESIGN.md §4).
+//!
+//! ```bash
+//! cargo bench --bench fig6b_scaling
+//! ```
+
+use cugwas::bench::{ratio_cell, Table};
+use cugwas::coordinator::{run, verify_against_oracle, PipelineConfig};
+use cugwas::devsim::{simulate, Algo, HardwareProfile, SimConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::generate;
+use cugwas::util::human_duration;
+use std::time::Duration;
+
+fn main() {
+    // ---- sim at the paper's exact Fig. 6b configuration -------------------
+    let mut sim = Table::new(
+        "Fig 6b sim — p=4, n=10 000, m=100 000, Tesla S2050 profile",
+        &["gpus", "runtime", "speedup vs 1", "gpu util"],
+    );
+    let mut base = 0.0;
+    let mut s2 = 0.0;
+    let mut s4 = 0.0;
+    for gpus in [1usize, 2, 3, 4] {
+        let cfg = SimConfig {
+            dims: Dims::new(10_000, 3, 100_000).unwrap(),
+            block: 5_000 * gpus,
+            ngpus: gpus,
+            host_buffers: 3,
+            profile: HardwareProfile::tesla(),
+        };
+        let rep = simulate(Algo::CuGwas, &cfg).unwrap();
+        if gpus == 1 {
+            base = rep.total_secs;
+        }
+        if gpus == 2 {
+            s2 = base / rep.total_secs;
+        }
+        if gpus == 4 {
+            s4 = base / rep.total_secs;
+        }
+        sim.row(&[
+            gpus.to_string(),
+            human_duration(Duration::from_secs_f64(rep.total_secs)),
+            ratio_cell(base, rep.total_secs),
+            format!("{:.0}%", rep.gpu_util * 100.0),
+        ]);
+    }
+    sim.print();
+    println!(
+        "\nshape checks: 1→2 GPUs {s2:.2}x (paper 1.9x) {}; 1→4 GPUs {s4:.2}x (paper ~3.6x) {}",
+        ok((1.7..2.05).contains(&s2)),
+        ok((3.0..4.05).contains(&s4))
+    );
+
+    // ---- live fan-out (correctness + overlap on this machine) -----------
+    let fast = std::env::var("CUGWAS_BENCH_FAST").is_ok();
+    let dir = std::env::temp_dir().join("cugwas_fig6b_live");
+    let _ = std::fs::remove_dir_all(&dir);
+    let m = if fast { 2048 } else { 8192 };
+    generate(&dir, Dims::new(256, 3, m).unwrap(), 256, 11).unwrap();
+    let mut live = Table::new(
+        format!("live lane fan-out (n=256, m={m})"),
+        &["lanes", "wall", "SNPs/s", "verified"],
+    );
+    for lanes in [1usize, 2, 3, 4] {
+        let mut cfg = PipelineConfig::new(&dir, 128 * lanes);
+        cfg.ngpus = lanes;
+        let rep = run(&cfg).unwrap();
+        let v = verify_against_oracle(&dir, 1e-6).is_ok();
+        live.row(&[
+            lanes.to_string(),
+            human_duration(Duration::from_secs_f64(rep.wall_secs)),
+            format!("{:.0}", rep.snps_per_sec),
+            if v { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    live.print();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn ok(b: bool) -> &'static str {
+    if b { "[OK]" } else { "[MISMATCH]" }
+}

@@ -1,0 +1,123 @@
+//! The paper's headline numbers (§1, §4, §5), regenerated:
+//!
+//! * 2.6× — cuGWAS (1 GPU) over OOC-HP-GWAS           (§4.1, Fig. 6a)
+//! * ~9×  — cuGWAS (4 GPUs) over OOC-HP-GWAS          (§1)
+//! * 488× — cuGWAS (4 GPUs) over ProbABEL             (§1)
+//! * 2.88 s — the ProbABEL reference problem (p=4, n=1500, m=220 833)
+//!            that took ProbABEL ~4 h                 (§5)
+//!
+//! All at paper scale via the DES with the paper's hardware constants
+//! (this testbed has no Fermi GPUs — DESIGN.md §4), plus a live
+//! small-scale sanity block with honest measured ratios.
+//!
+//! ```bash
+//! cargo bench --bench headline_table
+//! ```
+
+use cugwas::baselines::{run_ooc_cpu, run_probabel};
+use cugwas::bench::Table;
+use cugwas::coordinator::{run, PipelineConfig};
+use cugwas::devsim::{simulate, Algo, HardwareProfile, SimConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::generate;
+use cugwas::util::human_duration;
+use std::time::Duration;
+
+fn main() {
+    // ---- paper scale (sim) ------------------------------------------------
+    let dims = Dims::new(10_000, 3, 100_000).unwrap();
+    let quadro = HardwareProfile::quadro();
+    let tesla = HardwareProfile::tesla();
+    let mk = |block: usize, ngpus: usize, profile: HardwareProfile| SimConfig {
+        dims,
+        block,
+        ngpus,
+        host_buffers: 3,
+        profile,
+    };
+    let ooc = simulate(Algo::OocCpu, &mk(5_000, 1, quadro)).unwrap();
+    let cu1 = simulate(Algo::CuGwas, &mk(5_000, 1, quadro)).unwrap();
+    let cu4 = simulate(Algo::CuGwas, &mk(20_000, 4, tesla)).unwrap();
+
+    let mut t = Table::new(
+        "headline — paper scale (n=10k, m=100k, paper hardware constants)",
+        &["claim", "paper", "reproduced", "status"],
+    );
+    let r1 = ooc.total_secs / cu1.total_secs;
+    let r9 = ooc.total_secs / cu4.total_secs;
+    t.row(&["cuGWAS-1GPU vs OOC-HP-GWAS".into(), "2.6x".into(), format!("{r1:.2}x"), ok((2.0..3.2).contains(&r1))]);
+    t.row(&["cuGWAS-4GPU vs OOC-HP-GWAS".into(), "~9x".into(), format!("{r9:.2}x"), ok((6.0..12.0).contains(&r9))]);
+
+    // The §5 reference problem: p=4, n=1500, m=220 833 → 2.88 s on 4 GPUs.
+    let ref_dims = Dims::new(1_500, 3, 220_833).unwrap();
+    let cu_ref = simulate(
+        Algo::CuGwas,
+        &SimConfig { dims: ref_dims, block: 20_000, ngpus: 4, host_buffers: 3, profile: tesla },
+    )
+    .unwrap();
+    let pa_ref = simulate(
+        Algo::Probabel,
+        &SimConfig { dims: ref_dims, block: 20_000, ngpus: 1, host_buffers: 3, profile: quadro },
+    )
+    .unwrap();
+    t.row(&[
+        "ProbABEL ref problem (cuGWAS)".into(),
+        "2.88 s".into(),
+        human_duration(Duration::from_secs_f64(cu_ref.total_secs)),
+        ok((0.5..30.0).contains(&cu_ref.total_secs)),
+    ]);
+    t.row(&[
+        "ProbABEL ref problem (ProbABEL)".into(),
+        "~4 h".into(),
+        human_duration(Duration::from_secs_f64(pa_ref.total_secs)),
+        ok((3_600.0..40_000.0).contains(&pa_ref.total_secs)),
+    ]);
+    // The 488× claim uses the paper's §5 discounting on the REFERENCE
+    // problem: ProbABEL's 2010 timing halved (Moore's law), cuGWAS plus
+    // ~6 s of GPU/preprocess init the streaming timings exclude.
+    let r488 = (pa_ref.total_secs / 2.0) / (cu_ref.total_secs + 6.0);
+    t.row(&[
+        "cuGWAS vs ProbABEL (§5 arithmetic)".into(),
+        "488x".into(),
+        format!("{r488:.0}x"),
+        ok((150.0..2_000.0).contains(&r488)),
+    ]);
+    t.print();
+
+    // ---- live sanity block (this machine, measured) -------------------------
+    let fast = std::env::var("CUGWAS_BENCH_FAST").is_ok();
+    let dir = std::env::temp_dir().join("cugwas_headline_live");
+    let _ = std::fs::remove_dir_all(&dir);
+    let m = if fast { 2048 } else { 8192 };
+    let live_dims = Dims::new(384, 3, m).unwrap();
+    generate(&dir, live_dims, 128, 13).unwrap();
+    let ooc = run_ooc_cpu(&dir, 128, None).unwrap();
+    let cu = run(&PipelineConfig::new(&dir, 128)).unwrap();
+    let pa = run_probabel(&dir).unwrap();
+    let mut live = Table::new(
+        format!("live — measured on this machine (n=384, m={m}, native lanes)"),
+        &["solver", "wall", "vs cuGWAS"],
+    );
+    for (name, wall) in [
+        ("cuGWAS (pipelined)", cu.wall_secs),
+        ("OOC-HP-GWAS", ooc.wall_secs),
+        ("ProbABEL-like", pa.wall_secs),
+    ] {
+        live.row(&[
+            name.into(),
+            human_duration(Duration::from_secs_f64(wall)),
+            format!("{:.2}x", wall / cu.wall_secs),
+        ]);
+    }
+    live.print();
+    println!(
+        "\nnote: live lanes share this machine's CPU cores, so the live table shows\n\
+         schedule overhead/overlap, not accelerator speedups; the paper-hardware\n\
+         ratios come from the DES above (DESIGN.md §4)."
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn ok(b: bool) -> String {
+    (if b { "[OK]" } else { "[MISMATCH]" }).to_string()
+}

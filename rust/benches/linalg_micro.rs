@@ -1,0 +1,68 @@
+//! Microbenchmarks of the native linalg hot paths (the L3 substrate the
+//! CPU baselines and S-loop run on). Reports effective GFlop/s so the
+//! §Perf log in EXPERIMENTS.md can track the micro-kernel against the
+//! machine's practical roofline.
+//!
+//! ```bash
+//! cargo bench --bench linalg_micro
+//! ```
+
+use cugwas::bench::{Bench, Table};
+use cugwas::linalg::{gemm, potrf, trsm_lower_left, Matrix};
+use cugwas::util::XorShift;
+
+fn main() {
+    let bench = Bench::from_env();
+    let mut rng = XorShift::new(1);
+    let mut t = Table::new("linalg micro", &["kernel", "shape", "median", "GFlop/s"]);
+
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512), (1024, 1024, 128)] {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        let meas = bench.measure(format!("gemm {m}x{k}x{n}"), || {
+            gemm(1.0, &a, &b, 0.0, &mut c).unwrap();
+        });
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        t.row(&[
+            "gemm".into(),
+            format!("{m}x{k}x{n}"),
+            cugwas::bench::dur_cell(meas.median()),
+            format!("{:.2}", flops / meas.median().as_secs_f64() / 1e9),
+        ]);
+    }
+
+    for &(nn, nrhs) in &[(512usize, 256usize), (1024, 256)] {
+        let spd = Matrix::rand_spd(nn, 4.0, &mut rng);
+        let l = potrf(&spd).unwrap();
+        let b0 = Matrix::randn(nn, nrhs, &mut rng);
+        let mut b = b0.clone();
+        let meas = bench.measure(format!("trsm {nn}x{nrhs}"), || {
+            b = b0.clone();
+            trsm_lower_left(&l, &mut b).unwrap();
+        });
+        let flops = nn as f64 * nn as f64 * nrhs as f64;
+        t.row(&[
+            "trsm".into(),
+            format!("{nn}x{nrhs}"),
+            cugwas::bench::dur_cell(meas.median()),
+            format!("{:.2}", flops / meas.median().as_secs_f64() / 1e9),
+        ]);
+    }
+
+    {
+        let nn = 512;
+        let spd = Matrix::rand_spd(nn, 4.0, &mut rng);
+        let meas = bench.measure("potrf 512", || {
+            potrf(&spd).unwrap();
+        });
+        let flops = nn as f64 * nn as f64 * nn as f64 / 3.0;
+        t.row(&[
+            "potrf".into(),
+            format!("{nn}"),
+            cugwas::bench::dur_cell(meas.median()),
+            format!("{:.2}", flops / meas.median().as_secs_f64() / 1e9),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,82 @@
+//! Per-block device-lane cost through PJRT — the L1/L2 §Perf probe.
+//!
+//! Measures one artifact execution per (kind, shape) the way the lane
+//! does it (literal creation + execute + fetch), plus the native-linalg
+//! equivalent for reference. This is the number the L1 kernel
+//! restructurings in EXPERIMENTS.md §Perf are judged by.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench pjrt_block
+//! ```
+
+use cugwas::bench::{Bench, Table};
+use cugwas::gwas::preprocess::preprocess;
+use cugwas::gwas::problem::{Dims, Problem};
+use cugwas::linalg::{trsm_lower_left, Matrix};
+use cugwas::runtime::{
+    default_artifacts_dir, dinv_to_rowmajor, matrix_to_rowmajor, ArtifactKey, Engine, HostTensor,
+    Kind, Manifest,
+};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("no artifacts at {dir:?} — run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let bench = Bench::from_env();
+    let mut t = Table::new(
+        "per-block device cost (PJRT CPU) vs native linalg",
+        &["kind", "n", "mb", "pjrt median", "native median", "pjrt/native"],
+    );
+
+    for &(n, mb) in &[(64usize, 32usize), (256, 128), (512, 256)] {
+        let pl = 3;
+        let prob = Problem::synthetic(Dims::new(n, pl, mb).unwrap(), 1).unwrap();
+        for kind in [Kind::Trsm, Kind::Block, Kind::BlockFull] {
+            let Ok(entry) = manifest.get(&ArtifactKey { kind, n, pl, mb }) else { continue };
+            let pre = preprocess(&prob.m, &prob.xl, &prob.y, entry.nb).unwrap();
+            let mut engine = Engine::cpu().unwrap();
+            engine.load(entry).unwrap();
+            let l_row = matrix_to_rowmajor(&pre.l);
+            let dinv_row = dinv_to_rowmajor(pre.dinv.as_ref().unwrap(), entry.nb, n);
+            let xlt_row = matrix_to_rowmajor(&pre.xl_t);
+            let stl_row = matrix_to_rowmajor(&pre.stl);
+            let xb: Vec<f64> = prob.xr.as_slice().to_vec();
+            let nb = entry.nb;
+            let meas = bench.measure(format!("{}-{n}", kind.as_str()), || {
+                let tsr = |dims: Vec<i64>, data: Vec<f64>| HostTensor::new(dims, data).unwrap();
+                let mut inputs = vec![
+                    tsr(vec![n as i64, n as i64], l_row.clone()),
+                    tsr(vec![n as i64, nb as i64], dinv_row.clone()),
+                ];
+                if kind != Kind::Trsm {
+                    inputs.push(tsr(vec![n as i64, pl as i64], xlt_row.clone()));
+                    inputs.push(tsr(vec![n as i64], pre.y_t.clone()));
+                }
+                if kind == Kind::BlockFull {
+                    inputs.push(tsr(vec![pl as i64, pl as i64], stl_row.clone()));
+                    inputs.push(tsr(vec![pl as i64], pre.rtop.clone()));
+                }
+                inputs.push(tsr(vec![mb as i64, n as i64], xb.clone()));
+                let exe = engine.load(entry).unwrap();
+                exe.run(&inputs).unwrap();
+            });
+            // Native reference: trsm only (the dominant cost).
+            let native = bench.measure("native", || {
+                let mut b = Matrix::from_vec(n, mb, xb.clone()).unwrap();
+                trsm_lower_left(&pre.l, &mut b).unwrap();
+            });
+            t.row(&[
+                kind.as_str().into(),
+                n.to_string(),
+                mb.to_string(),
+                cugwas::bench::dur_cell(meas.median()),
+                cugwas::bench::dur_cell(native.median()),
+                format!("{:.2}", meas.median().as_secs_f64() / native.median().as_secs_f64()),
+            ]);
+        }
+    }
+    t.print();
+}

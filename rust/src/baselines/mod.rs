@@ -1,0 +1,19 @@
+//! The comparison systems the paper measures against, implemented in
+//! full (not stubs) so the benches can regenerate every figure:
+//!
+//! * [`ooc_cpu`] — OOC-HP-GWAS (paper Listing 1.2): the CPU-only
+//!   out-of-core algorithm with double-buffered asynchronous reads.
+//!   The paper's primary baseline (Fig. 6a).
+//! * [`naive`] — GPU offload as an afterthought (paper Fig. 3): same
+//!   work as the pipeline, fully serialized.
+//! * [`probabel`] — a per-SNP BLAS-2 solver in the style of the
+//!   "widespread biology library" (ProbABEL, `--mmscore`): no blocking,
+//!   no out-of-core machinery, explicit `M^-1` application per SNP.
+
+pub mod naive;
+pub mod ooc_cpu;
+pub mod probabel;
+
+pub use naive::run_naive;
+pub use ooc_cpu::run_ooc_cpu;
+pub use probabel::run_probabel;

@@ -1,0 +1,154 @@
+//! The naive offload — paper Fig. 3: "applications in which GPU-offloading
+//! is an after-thought". Identical work to the pipeline, but every step is
+//! synchronous and serialized: read, send, trsm, recv, S-loop, write —
+//! the device idles during I/O and the CPU idles during device compute.
+//!
+//! Shares the lane machinery with the real pipeline (a single lane, one
+//! outstanding chunk, fully waited) so the comparison isolates the
+//! *schedule*, not the implementation.
+
+use crate::coordinator::lane::{Backend, DevIn, DeviceLane, LaneOutputs, OffloadMode};
+use crate::coordinator::metrics::{Metrics, Phase};
+use crate::coordinator::pipeline::BackendKind;
+use crate::error::{Error, Result};
+use crate::gwas::preprocess::preprocess;
+use crate::gwas::sloop::{sloop_block, SloopScratch};
+use crate::linalg::Matrix;
+use crate::runtime::{ArtifactKey, Kind, Manifest};
+use crate::storage::{dataset, Header, Throttle, XrdFile};
+use std::path::Path;
+use std::time::Instant;
+
+/// Run summary.
+#[derive(Debug)]
+pub struct NaiveReport {
+    pub blocks: usize,
+    pub snps: usize,
+    pub wall_secs: f64,
+    pub snps_per_sec: f64,
+    pub metrics: Metrics,
+}
+
+/// Serialized offload run; results land in `r.xrd`.
+pub fn run_naive(
+    dataset_dir: &Path,
+    block: usize,
+    backend: &BackendKind,
+    read_throttle: Option<Throttle>,
+) -> Result<NaiveReport> {
+    if block == 0 {
+        return Err(Error::Config("block must be positive".into()));
+    }
+    let (meta, kin, xl, y) = dataset::load_sidecars(dataset_dir)?;
+    let dims = meta.dims;
+    let n = dims.n;
+    let p = dims.p();
+    let t_wall = Instant::now();
+    let mut metrics = Metrics::new();
+
+    let (lane_backend, dinv_nb) = match backend {
+        BackendKind::Native => (Backend::Native, 0),
+        BackendKind::Pjrt { artifacts } => {
+            let manifest = Manifest::load(artifacts)?;
+            let entry = manifest
+                .get(&ArtifactKey { kind: Kind::Trsm, n, pl: dims.pl, mb: block })?
+                .clone();
+            let nb = entry.nb;
+            (Backend::Pjrt { entry }, nb)
+        }
+    };
+    let pre = preprocess(&kin, &xl, &y, dinv_nb)?;
+
+    let paths = dataset::DatasetPaths::new(dataset_dir);
+    let xr = XrdFile::open(&paths.xr())?.with_throttle(read_throttle);
+    let r_header = Header::new(p as u64, dims.m as u64, block.min(dims.m) as u64, meta.seed)?;
+    let rfile = XrdFile::create(&paths.results(), r_header)?;
+
+    let lane = DeviceLane::spawn(0, OffloadMode::Trsm, lane_backend, &pre, block)?;
+    let nblocks = dims.m.div_ceil(block);
+    let cols_in =
+        |b: usize| if (b + 1) * block <= dims.m { block } else { dims.m - b * block };
+    let mut scratch = SloopScratch::new(dims.pl);
+
+    for b in 0..nblocks {
+        let live = cols_in(b);
+        // Synchronous read — the device idles.
+        let t0 = Instant::now();
+        let mut buf = vec![0.0; n * block];
+        {
+            let sub = &mut buf[..n * live];
+            xr.read_cols_into((b * block) as u64, live as u64, sub)?;
+        }
+        buf[n * live..].fill(0.0);
+        metrics.add(Phase::ReadWait, t0.elapsed());
+        // Send + trsm + recv, fully waited — the CPU idles.
+        let t0 = Instant::now();
+        lane.submit(DevIn { block: b as u64, buf, live })?;
+        let out = lane
+            .rx_out
+            .recv()
+            .map_err(|_| Error::Pipeline("naive lane died".into()))?;
+        metrics.add(Phase::RecvWait, t0.elapsed());
+        let xbt = match out.outs {
+            LaneOutputs::Xbt(x) => x,
+            _ => return Err(Error::Pipeline("naive expects trsm outputs".into())),
+        };
+        // S-loop — the device idles.
+        let t0 = Instant::now();
+        let mut rblk = Matrix::zeros(p, live);
+        sloop_block(&pre, &xbt, &mut scratch, &mut rblk)?;
+        metrics.add(Phase::Sloop, t0.elapsed());
+        // Synchronous write.
+        let t0 = Instant::now();
+        rfile.write_cols((b * block) as u64, live as u64, rblk.as_slice())?;
+        metrics.add(Phase::WriteWait, t0.elapsed());
+    }
+    rfile.sync()?;
+    let lane_metrics = lane.join()?;
+    metrics.merge(&lane_metrics);
+
+    let wall_secs = t_wall.elapsed().as_secs_f64();
+    Ok(NaiveReport {
+        blocks: nblocks,
+        snps: dims.m,
+        wall_secs,
+        snps_per_sec: dims.m as f64 / wall_secs.max(1e-12),
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::verify_against_oracle;
+    use crate::gwas::problem::Dims;
+    use crate::storage::generate;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cugwas_naive_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn naive_matches_oracle() {
+        let dir = tmpdir("oracle");
+        generate(&dir, Dims::new(20, 2, 21).unwrap(), 8, 7).unwrap();
+        let report = run_naive(&dir, 8, &BackendKind::Native, None).unwrap();
+        assert_eq!(report.blocks, 3);
+        verify_against_oracle(&dir, 1e-8).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn naive_phases_are_disjointly_accounted() {
+        let dir = tmpdir("phases");
+        generate(&dir, Dims::new(20, 2, 16).unwrap(), 8, 3).unwrap();
+        let report = run_naive(&dir, 8, &BackendKind::Native, None).unwrap();
+        for ph in [Phase::ReadWait, Phase::RecvWait, Phase::Sloop, Phase::WriteWait] {
+            assert!(report.metrics.count(ph) >= 2, "{ph:?}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,204 @@
+//! Hand-rolled benchmark framework (criterion is unavailable offline —
+//! see DESIGN.md §4). `cargo bench` targets use `harness = false` and
+//! drive this: warmup, repeated timed runs, robust statistics, and
+//! aligned table output that EXPERIMENTS.md captures verbatim.
+
+use crate::util::human_duration;
+use std::time::{Duration, Instant};
+
+/// Samples + summary statistics for one measured case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        v[v.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().expect("non-empty")
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    /// Relative spread: (max-min)/median, a cheap stability indicator.
+    pub fn spread(&self) -> f64 {
+        let max = self.samples.iter().max().unwrap().as_secs_f64();
+        let min = self.min().as_secs_f64();
+        let med = self.median().as_secs_f64();
+        if med > 0.0 {
+            (max - min) / med
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Benchmark runner with fixed warmup/sample counts.
+pub struct Bench {
+    pub warmup: u32,
+    pub samples: u32,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 1, samples: 5 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: u32, samples: u32) -> Self {
+        assert!(samples > 0);
+        Bench { warmup, samples }
+    }
+
+    /// Quick-mode override: `CUGWAS_BENCH_FAST=1` drops to 1 sample (CI).
+    pub fn from_env() -> Self {
+        if std::env::var("CUGWAS_BENCH_FAST").is_ok() {
+            Bench::new(0, 1)
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f` (called once per sample).
+    pub fn measure(&self, label: impl Into<String>, mut f: impl FnMut()) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        Measurement { label: label.into(), samples }
+    }
+}
+
+/// Aligned table output for bench results.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i] + 2))
+                .collect::<Vec<_>>()
+                .join("")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum::<usize>()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        let _ = ncols;
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a duration cell.
+pub fn dur_cell(d: Duration) -> String {
+    human_duration(d)
+}
+
+/// Format a ratio cell like "2.61x".
+pub fn ratio_cell(num: f64, den: f64) -> String {
+    if den > 0.0 {
+        format!("{:.2}x", num / den)
+    } else {
+        "n/a".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_samples() {
+        let b = Bench::new(0, 3);
+        let mut calls = 0;
+        let m = b.measure("noop", || calls += 1);
+        assert_eq!(calls, 3);
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.median() <= m.samples.iter().max().copied().unwrap());
+        assert!(m.min() <= m.mean());
+    }
+
+    #[test]
+    fn warmup_not_counted() {
+        let b = Bench::new(2, 1);
+        let mut calls = 0;
+        let m = b.measure("noop", || calls += 1);
+        assert_eq!(calls, 3);
+        assert_eq!(m.samples.len(), 1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["algo", "time"]);
+        t.row(&["cugwas".into(), "1.00 s".into()]);
+        t.row(&["ooc".into(), "2.61 s".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("cugwas"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn ratio_cell_formats() {
+        assert_eq!(ratio_cell(5.2, 2.0), "2.60x");
+        assert_eq!(ratio_cell(1.0, 0.0), "n/a");
+    }
+}

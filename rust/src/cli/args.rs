@@ -1,0 +1,191 @@
+//! Flag parsing for the `cugwas` binary.
+//!
+//! Grammar: `cugwas <subcommand> [--key value | --key=value | --switch]…`.
+//! Flags are declared per subcommand in `main.rs`; unknown flags are
+//! errors (no silent typos on a tool that runs for hours).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Declared flag (for usage text + validation).
+#[derive(Debug, Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` if the flag takes no value.
+    pub switch: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Flag {
+    pub const fn opt(name: &'static str, default: &'static str, help: &'static str) -> Flag {
+        Flag { name, help, switch: false, default: Some(default) }
+    }
+    pub const fn req(name: &'static str, help: &'static str) -> Flag {
+        Flag { name, help, switch: false, default: None }
+    }
+    pub const fn switch(name: &'static str, help: &'static str) -> Flag {
+        Flag { name, help, switch: true, default: None }
+    }
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (everything after the subcommand) against `flags`.
+    pub fn parse(argv: &[String], flags: &[Flag]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut switches = Vec::new();
+        let find = |name: &str| flags.iter().find(|f| f.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let stripped = arg
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("unexpected argument '{arg}'")))?;
+            let (name, inline_value) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let flag = find(name)
+                .ok_or_else(|| Error::Config(format!("unknown flag --{name}")))?;
+            if flag.switch {
+                if inline_value.is_some() {
+                    return Err(Error::Config(format!("--{name} takes no value")));
+                }
+                switches.push(name.to_string());
+            } else {
+                let value = match inline_value {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
+                    }
+                };
+                if values.insert(name.to_string(), value).is_some() {
+                    return Err(Error::Config(format!("--{name} given twice")));
+                }
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for f in flags {
+            if !f.switch && !values.contains_key(f.name) {
+                match f.default {
+                    Some(d) => {
+                        values.insert(f.name.to_string(), d.to_string());
+                    }
+                    None => return Err(Error::Config(format!("missing required flag --{}", f.name))),
+                }
+            }
+        }
+        Ok(Args { values, switches })
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)
+            .replace('_', "")
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected integer, got '{}'", self.str(name))))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)
+            .replace('_', "")
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected integer, got '{}'", self.str(name))))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name}: expected number, got '{}'", self.str(name))))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, flags: &[Flag]) -> String {
+    let mut out = format!("cugwas {cmd} — {about}\n\nflags:\n");
+    for f in flags {
+        let default = match (f.switch, f.default) {
+            (true, _) => String::new(),
+            (false, Some(d)) => format!(" [default: {d}]"),
+            (false, None) => " (required)".to_string(),
+        };
+        out.push_str(&format!("  --{:<16} {}{}\n", f.name, f.help, default));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FLAGS: &[Flag] = &[
+        Flag::opt("block", "256", "block size"),
+        Flag::req("dataset", "dataset dir"),
+        Flag::switch("verbose", "chatty"),
+    ];
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_defaults_switches() {
+        let a = Args::parse(&argv(&["--dataset", "/d", "--verbose"]), FLAGS).unwrap();
+        assert_eq!(a.str("dataset"), "/d");
+        assert_eq!(a.usize("block").unwrap(), 256);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_underscores() {
+        let a = Args::parse(&argv(&["--dataset=/d", "--block=5_000"]), FLAGS).unwrap();
+        assert_eq!(a.usize("block").unwrap(), 5000);
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(Args::parse(&argv(&["--block", "5"]), FLAGS).is_err());
+    }
+
+    #[test]
+    fn unknown_and_malformed_flags_rejected() {
+        assert!(Args::parse(&argv(&["--dataset", "/d", "--bogus", "1"]), FLAGS).is_err());
+        assert!(Args::parse(&argv(&["positional"]), FLAGS).is_err());
+        assert!(Args::parse(&argv(&["--dataset"]), FLAGS).is_err());
+        assert!(Args::parse(&argv(&["--dataset", "/a", "--dataset", "/b"]), FLAGS).is_err());
+        assert!(Args::parse(&argv(&["--dataset=/d", "--verbose=1"]), FLAGS).is_err());
+    }
+
+    #[test]
+    fn bad_numbers_rejected() {
+        let a = Args::parse(&argv(&["--dataset", "/d", "--block", "abc"]), FLAGS).unwrap();
+        assert!(a.usize("block").is_err());
+    }
+
+    #[test]
+    fn usage_lists_flags() {
+        let u = usage("run", "stream a study", FLAGS);
+        assert!(u.contains("--block"));
+        assert!(u.contains("[default: 256]"));
+        assert!(u.contains("(required)"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline — see
+//! DESIGN.md §4). Subcommands + `--flag value` / `--flag=value` options,
+//! with typed accessors and generated usage text.
+
+pub mod args;
+
+pub use args::{usage, Args, Flag};

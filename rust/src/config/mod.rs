@@ -1,0 +1,8 @@
+//! Configuration: TOML-subset parsing + the typed run configuration the
+//! CLI and examples consume.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{RunConfig, SimSection};
+pub use toml::{Doc, Value};

@@ -1,0 +1,214 @@
+//! Typed run configuration loaded from a TOML file (or defaults).
+//!
+//! ```toml
+//! [dataset]
+//! dir = "data/study1"
+//! n = 512
+//! pl = 3
+//! m = 4096
+//! seed = 42
+//!
+//! [pipeline]
+//! block = 256        # SNP columns per iteration (whole pipeline)
+//! ngpus = 1
+//! host_buffers = 3
+//! mode = "trsm"      # trsm | block | blockfull
+//! backend = "pjrt"   # pjrt | native
+//! artifacts = "artifacts"
+//! read_mbps = 0      # 0 = unthrottled; >0 emulates that storage speed
+//! write_mbps = 0
+//!
+//! [sim]
+//! profile = "quadro" # quadro | tesla | hdd
+//! ```
+
+use crate::config::toml::Doc;
+use crate::coordinator::{BackendKind, OffloadMode, PipelineConfig};
+use crate::devsim::HardwareProfile;
+use crate::error::{Error, Result};
+use crate::gwas::problem::Dims;
+use crate::storage::Throttle;
+use std::path::PathBuf;
+
+/// Simulation section.
+#[derive(Debug, Clone)]
+pub struct SimSection {
+    pub profile: HardwareProfile,
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dataset_dir: PathBuf,
+    pub dims: Dims,
+    pub gen_block: usize,
+    pub seed: u64,
+    pub pipeline: PipelineConfig,
+    pub sim: SimSection,
+}
+
+impl RunConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = Doc::parse(text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("reading config {}", path.display()), e))?;
+        Self::from_toml(&text)
+    }
+
+    /// Built from a parsed document; unknown keys are errors (typo guard).
+    pub fn from_doc(doc: &Doc) -> Result<RunConfig> {
+        for section in doc.sections() {
+            let allowed: &[&str] = match section {
+                "dataset" => &["dir", "n", "pl", "m", "seed", "block"],
+                "pipeline" => &[
+                    "block",
+                    "ngpus",
+                    "host_buffers",
+                    "mode",
+                    "backend",
+                    "artifacts",
+                    "read_mbps",
+                    "write_mbps",
+                ],
+                "sim" => &["profile"],
+                "" => &[],
+                other => {
+                    return Err(Error::Config(format!("unknown section [{other}]")));
+                }
+            };
+            for key in doc.keys_in(section) {
+                if !allowed.contains(&key) {
+                    return Err(Error::Config(format!("unknown key {section}.{key}")));
+                }
+            }
+        }
+        let dataset_dir = PathBuf::from(doc.str_or("dataset", "dir", "data/study")?);
+        let n = doc.int_or("dataset", "n", 512)? as usize;
+        let pl = doc.int_or("dataset", "pl", 3)? as usize;
+        let m = doc.int_or("dataset", "m", 4096)? as usize;
+        let dims = Dims::new(n, pl, m)?;
+        let gen_block = doc.int_or("dataset", "block", 256)? as usize;
+        let seed = doc.int_or("dataset", "seed", 42)? as u64;
+
+        let block = doc.int_or("pipeline", "block", 256)? as usize;
+        let ngpus = doc.int_or("pipeline", "ngpus", 1)? as usize;
+        let host_buffers = doc.int_or("pipeline", "host_buffers", 3)? as usize;
+        let mode = match doc.str_or("pipeline", "mode", "trsm")? {
+            "trsm" => OffloadMode::Trsm,
+            "block" => OffloadMode::Block,
+            "blockfull" => OffloadMode::BlockFull,
+            other => return Err(Error::Config(format!("unknown mode '{other}'"))),
+        };
+        let backend = match doc.str_or("pipeline", "backend", "native")? {
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt {
+                artifacts: PathBuf::from(doc.str_or("pipeline", "artifacts", "artifacts")?),
+            },
+            other => return Err(Error::Config(format!("unknown backend '{other}'"))),
+        };
+        let throttle = |mbps: f64| {
+            if mbps > 0.0 {
+                Some(Throttle { bytes_per_sec: mbps * 1e6 })
+            } else {
+                None
+            }
+        };
+        let read_throttle = throttle(doc.float_or("pipeline", "read_mbps", 0.0)?);
+        let write_throttle = throttle(doc.float_or("pipeline", "write_mbps", 0.0)?);
+
+        let profile = match doc.str_or("sim", "profile", "quadro")? {
+            "quadro" => HardwareProfile::quadro(),
+            "tesla" => HardwareProfile::tesla(),
+            "hdd" => HardwareProfile::hdd(),
+            other => return Err(Error::Config(format!("unknown sim profile '{other}'"))),
+        };
+
+        Ok(RunConfig {
+            dataset_dir: dataset_dir.clone(),
+            dims,
+            gen_block,
+            seed,
+            pipeline: PipelineConfig {
+                dataset: dataset_dir,
+                block,
+                ngpus,
+                host_buffers,
+                mode,
+                backend,
+                read_throttle,
+                write_throttle,
+                resume: false,
+            },
+            sim: SimSection { profile },
+        })
+    }
+
+    /// All defaults (native backend, synthetic mid-size study).
+    pub fn defaults() -> RunConfig {
+        Self::from_toml("").expect("defaults parse")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::defaults();
+        assert_eq!(c.dims.n, 512);
+        assert_eq!(c.pipeline.block, 256);
+        assert_eq!(c.pipeline.host_buffers, 3);
+        assert!(matches!(c.pipeline.backend, BackendKind::Native));
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let c = RunConfig::from_toml(
+            r#"
+[dataset]
+dir = "/tmp/ds"
+n = 64
+pl = 3
+m = 128
+seed = 7
+
+[pipeline]
+block = 32
+ngpus = 2
+mode = "block"
+backend = "pjrt"
+artifacts = "arts"
+read_mbps = 120.0
+
+[sim]
+profile = "tesla"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.dims.m, 128);
+        assert_eq!(c.pipeline.ngpus, 2);
+        assert!(matches!(c.pipeline.mode, OffloadMode::Block));
+        match &c.pipeline.backend {
+            BackendKind::Pjrt { artifacts } => assert_eq!(artifacts.to_str(), Some("arts")),
+            _ => panic!(),
+        }
+        assert!(c.pipeline.read_throttle.is_some());
+        assert_eq!(c.sim.profile.name, "tesla");
+    }
+
+    #[test]
+    fn unknown_keys_and_values_rejected() {
+        assert!(RunConfig::from_toml("[pipeline]\nblok = 2\n").is_err());
+        assert!(RunConfig::from_toml("[pipelin]\nblock = 2\n").is_err());
+        assert!(RunConfig::from_toml("[pipeline]\nmode = \"warp\"\n").is_err());
+        assert!(RunConfig::from_toml("[sim]\nprofile = \"cray\"\n").is_err());
+        assert!(RunConfig::from_toml("[dataset]\nn = 0\n").is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! A minimal TOML-subset parser (std-only substrate — the crates.io
+//! `toml` stack is unavailable offline; see DESIGN.md §4).
+//!
+//! Supported: `[section]` headers, `key = value` with string, integer,
+//! float, and boolean values, `#` comments, and blank lines. That covers
+//! every config this repo ships. Unsupported syntax is a hard error — no
+//! silent misparses.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key → value`. Top-level keys use section "".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    values: BTreeMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let errline = |msg: String| Error::Config(format!("line {}: {msg}", lineno + 1));
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| errline("unterminated section header".into()))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(errline("empty section name".into()));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| errline(format!("expected key = value, got '{line}'")))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(errline("empty key".into()));
+            }
+            let value = parse_value(v.trim()).map_err(|m| errline(m))?;
+            if doc
+                .values
+                .insert((section.clone(), key.to_string()), value)
+                .is_some()
+            {
+                return Err(errline(format!("duplicate key '{key}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// Typed getters with defaulting.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> Result<i64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_int()
+                .ok_or_else(|| Error::Config(format!("{section}.{key}: expected integer"))),
+        }
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_float()
+                .ok_or_else(|| Error::Config(format!("{section}.{key}: expected number"))),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> Result<&'a str> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| Error::Config(format!("{section}.{key}: expected string"))),
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| Error::Config(format!("{section}.{key}: expected bool"))),
+        }
+    }
+
+    /// Keys present in a section (for unknown-key validation).
+    pub fn keys_in(&self, section: &str) -> Vec<&str> {
+        self.values
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.values.keys().map(|(s, _)| s.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::String(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Integer(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_document() {
+        let doc = Doc::parse(
+            r#"
+# a comment
+title = "cugwas"
+[pipeline]
+block = 5_000   # SNPs per iteration
+ngpus = 4
+saturate = true
+[hardware]
+disk_mbps = 120.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("cugwas"));
+        assert_eq!(doc.get("pipeline", "block").unwrap().as_int(), Some(5000));
+        assert_eq!(doc.get("pipeline", "saturate").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("hardware", "disk_mbps").unwrap().as_float(), Some(120.5));
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let doc = Doc::parse("[a]\nx = 3\n").unwrap();
+        assert_eq!(doc.int_or("a", "x", 9).unwrap(), 3);
+        assert_eq!(doc.int_or("a", "missing", 9).unwrap(), 9);
+        assert!(doc.str_or("a", "x", "d").is_err()); // wrong type
+        assert_eq!(doc.float_or("a", "x", 0.0).unwrap(), 3.0); // int coerces
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Doc::parse("[unterminated\n").is_err());
+        assert!(Doc::parse("keyonly\n").is_err());
+        assert!(Doc::parse("k = \n").is_err());
+        assert!(Doc::parse("k = \"open\n").is_err());
+        assert!(Doc::parse("k = maybe\n").is_err());
+        assert!(Doc::parse("x = 1\nx = 2\n").is_err());
+        assert!(Doc::parse("[]\n").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_survives() {
+        let doc = Doc::parse("k = \"a # b\"\n").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn sections_and_keys_enumerate() {
+        let doc = Doc::parse("[b]\nx=1\n[a]\ny=2\nz=3\n").unwrap();
+        assert_eq!(doc.sections(), vec!["a", "b"]);
+        let mut keys = doc.keys_in("a");
+        keys.sort_unstable();
+        assert_eq!(keys, vec!["y", "z"]);
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Doc::parse("a = -5\nb = 1e3\nc = -2.5e-2\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_int(), Some(-5));
+        assert_eq!(doc.get("", "b").unwrap().as_float(), Some(1000.0));
+        assert_eq!(doc.get("", "c").unwrap().as_float(), Some(-0.025));
+    }
+}

@@ -1,0 +1,148 @@
+//! Phase-level timing of the live pipeline — the measured counterpart of
+//! the simulator's timeline, and the data behind the Fig. 3 reproduction
+//! (how much time each lane spends working vs waiting).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Pipeline phases, matching the paper's profile categories (Fig. 3/4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Waiting on `aio_read` of the next block (disk).
+    ReadWait,
+    /// Staging a block into a device lane (the "send" copy).
+    Send,
+    /// Device compute (trsm or fused block), measured inside the lane.
+    DeviceCompute,
+    /// Waiting on device results (the "recv").
+    RecvWait,
+    /// CPU S-loop.
+    Sloop,
+    /// Waiting on `aio_write` of results.
+    WriteWait,
+    /// Everything else on the coordinator thread (rotation, bookkeeping).
+    Other,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::ReadWait => "read_wait",
+            Phase::Send => "send",
+            Phase::DeviceCompute => "device_compute",
+            Phase::RecvWait => "recv_wait",
+            Phase::Sloop => "sloop",
+            Phase::WriteWait => "write_wait",
+            Phase::Other => "other",
+        }
+    }
+
+    pub const ALL: [Phase; 7] = [
+        Phase::ReadWait,
+        Phase::Send,
+        Phase::DeviceCompute,
+        Phase::RecvWait,
+        Phase::Sloop,
+        Phase::WriteWait,
+        Phase::Other,
+    ];
+}
+
+/// Accumulated phase durations + counts.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    totals: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        let e = self.totals.entry(phase.as_str()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Merge another metrics object (e.g. a lane's) into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, (d, c)) in &other.totals {
+            let e = self.totals.entry(k).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *c;
+        }
+    }
+
+    pub fn total(&self, phase: Phase) -> Duration {
+        self.totals.get(phase.as_str()).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, phase: Phase) -> u64 {
+        self.totals.get(phase.as_str()).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Render a compact per-phase table (for logs / bench output).
+    pub fn table(&self, wall: Duration) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:<16}{:>12}{:>8}{:>8}\n", "phase", "total", "count", "%wall"));
+        for ph in Phase::ALL {
+            let t = self.total(ph);
+            let c = self.count(ph);
+            if c == 0 {
+                continue;
+            }
+            let pct = if wall.as_secs_f64() > 0.0 {
+                100.0 * t.as_secs_f64() / wall.as_secs_f64()
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<16}{:>12}{:>8}{:>7.1}%\n",
+                ph.as_str(),
+                crate::util::human_duration(t),
+                c,
+                pct
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_totals() {
+        let mut m = Metrics::new();
+        m.add(Phase::Sloop, Duration::from_millis(10));
+        m.add(Phase::Sloop, Duration::from_millis(5));
+        m.add(Phase::ReadWait, Duration::from_millis(1));
+        assert_eq!(m.total(Phase::Sloop), Duration::from_millis(15));
+        assert_eq!(m.count(Phase::Sloop), 2);
+        assert_eq!(m.count(Phase::DeviceCompute), 0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics::new();
+        a.add(Phase::Send, Duration::from_millis(2));
+        let mut b = Metrics::new();
+        b.add(Phase::Send, Duration::from_millis(3));
+        b.add(Phase::RecvWait, Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.total(Phase::Send), Duration::from_millis(5));
+        assert_eq!(a.count(Phase::RecvWait), 1);
+    }
+
+    #[test]
+    fn table_renders_nonempty_phases_only() {
+        let mut m = Metrics::new();
+        m.add(Phase::Sloop, Duration::from_millis(10));
+        let t = m.table(Duration::from_millis(20));
+        assert!(t.contains("sloop"));
+        assert!(!t.contains("recv_wait"));
+        assert!(t.contains("50.0%"));
+    }
+}

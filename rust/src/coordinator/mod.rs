@@ -1,0 +1,17 @@
+//! Layer-3 coordinator — the paper's contribution.
+//!
+//! * [`pipeline`] — the cuGWAS streaming loop (Listing 1.3): triple-
+//!   buffered host ring, double-buffered device lanes, pipelined S-loop.
+//! * [`lane`] — one worker thread per emulated GPU, PJRT or native.
+//! * [`pool`] — the fixed buffer pools that realize the rotation.
+//! * [`metrics`] — per-phase accounting (the live Fig. 3).
+
+pub mod lane;
+pub mod metrics;
+pub mod pipeline;
+pub mod pool;
+
+pub use lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
+pub use metrics::{Metrics, Phase};
+pub use pipeline::{run, verify_against_oracle, BackendKind, PipelineConfig, PipelineReport};
+pub use pool::BufPool;

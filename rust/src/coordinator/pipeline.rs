@@ -1,0 +1,489 @@
+//! The cuGWAS streaming pipeline — paper Listing 1.3, live.
+//!
+//! ```text
+//!        disk ──aio──▶ host ring (hb bufs) ──send──▶ device pair (2/lane)
+//!                                                         │ trsm (+fused)
+//!        disk ◀──aio── result bufs ◀──S-loop(CPU)◀──recv──┘
+//! ```
+//!
+//! One coordinator thread drives the schedule; the I/O threads (storage
+//! [`AioEngine`]) and the device lanes ([`DeviceLane`]) supply the
+//! asynchrony. All steady-state buffers come from fixed pools
+//! ([`BufPool`]) — the rotation discipline of the paper's Fig. 5, with
+//! pool exhaustion providing the back-pressure (`aio_wait`,
+//! `cu_send_wait`) the listing spells out explicitly.
+//!
+//! The S-loop for block `b-1` runs on the coordinator thread while the
+//! lanes compute block `b` — the paper's pipelining — because lane results
+//! are drained opportunistically between submissions.
+
+use crate::coordinator::lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
+use crate::coordinator::metrics::{Metrics, Phase};
+use crate::coordinator::pool::BufPool;
+use crate::error::{Error, Result};
+use crate::gwas::preprocess::{preprocess, Preprocessed};
+use crate::gwas::sloop::{sloop_block, sloop_from_reductions, SloopScratch};
+use crate::linalg::Matrix;
+use crate::runtime::{ArtifactKey, Kind, Manifest};
+use crate::storage::{dataset, AioEngine, AioHandle, Header, Throttle, XrdFile};
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Which compute backend the lanes use.
+#[derive(Debug, Clone)]
+pub enum BackendKind {
+    /// In-crate linalg (no artifacts needed).
+    Native,
+    /// AOT HLO artifacts through PJRT.
+    Pjrt { artifacts: PathBuf },
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Dataset directory (from `storage::generate`).
+    pub dataset: PathBuf,
+    /// SNP columns per iteration, across all lanes.
+    pub block: usize,
+    /// Emulated GPU count (device lanes).
+    pub ngpus: usize,
+    /// Host buffer count (paper: 3; 2 = the ablation).
+    pub host_buffers: usize,
+    pub mode: OffloadMode,
+    pub backend: BackendKind,
+    /// Optional bandwidth throttles emulating slower storage.
+    pub read_throttle: Option<Throttle>,
+    pub write_throttle: Option<Throttle>,
+    /// Resume an interrupted run: blocks journaled in `r.progress` are
+    /// skipped (their results are already on disk). Studies at paper
+    /// scale run for hours-to-days — a crash must not restart from zero.
+    pub resume: bool,
+}
+
+impl PipelineConfig {
+    /// Sensible defaults for a dataset directory: paper topology
+    /// (3 host buffers, 1 GPU, trsm offload, native backend).
+    pub fn new(dataset: impl Into<PathBuf>, block: usize) -> Self {
+        PipelineConfig {
+            dataset: dataset.into(),
+            block,
+            ngpus: 1,
+            host_buffers: 3,
+            mode: OffloadMode::Trsm,
+            backend: BackendKind::Native,
+            read_throttle: None,
+            write_throttle: None,
+            resume: false,
+        }
+    }
+}
+
+/// Read the checkpoint journal (complete u64 records only — a torn tail
+/// from a crash is ignored).
+fn read_progress(path: &std::path::Path) -> std::collections::HashSet<usize> {
+    let mut done = std::collections::HashSet::new();
+    if let Ok(bytes) = std::fs::read(path) {
+        for chunk in bytes.chunks_exact(8) {
+            done.insert(u64::from_le_bytes(chunk.try_into().unwrap()) as usize);
+        }
+    }
+    done
+}
+
+/// Run summary.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub blocks: usize,
+    pub snps: usize,
+    pub wall_secs: f64,
+    pub snps_per_sec: f64,
+    /// Coordinator-thread phase accounting + merged lane compute time.
+    pub metrics: Metrics,
+    /// Sum of device-side compute seconds across lanes.
+    pub device_secs: f64,
+}
+
+/// Per-block assembly state: the result buffer filling up chunk by chunk.
+struct BlockAssembly {
+    buf: Vec<f64>,
+    live_total: usize,
+    chunks_left: usize,
+}
+
+/// Run the streaming solver over a dataset; results land in `r.xrd`.
+pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
+    validate(cfg)?;
+    let (meta, kin, xl, y) = dataset::load_sidecars(&cfg.dataset)?;
+    let dims = meta.dims;
+    let n = dims.n;
+    let p = dims.p();
+    let mb_gpu = cfg.block / cfg.ngpus;
+
+    // Resolve backend + the diagonal block size for preprocessing.
+    let (backend_proto, dinv_nb) = match &cfg.backend {
+        BackendKind::Native => (None, 0),
+        BackendKind::Pjrt { artifacts } => {
+            let manifest = Manifest::load(artifacts)?;
+            let kind = match cfg.mode {
+                OffloadMode::Trsm => Kind::Trsm,
+                OffloadMode::Block => Kind::Block,
+                OffloadMode::BlockFull => Kind::BlockFull,
+            };
+            let entry = manifest
+                .get(&ArtifactKey { kind, n, pl: dims.pl, mb: mb_gpu })?
+                .clone();
+            let nb = entry.nb;
+            (Some(entry), nb)
+        }
+    };
+
+    // Preprocessing (Listing 1.3 lines 1–7; seconds, excluded by the
+    // paper from streaming timings but included in our wall clock).
+    let pre: Preprocessed = preprocess(&kin, &xl, &y, dinv_nb)?;
+
+    // Storage engines (one I/O thread each — read and write devices).
+    let paths = dataset::DatasetPaths::new(&cfg.dataset);
+    let xr = XrdFile::open(&paths.xr())?.with_throttle(cfg.read_throttle);
+    let r_header = Header::new(p as u64, dims.m as u64, cfg.block.min(dims.m) as u64, meta.seed)?;
+    // Resume: reuse the existing results file + checkpoint journal when
+    // their geometry matches; otherwise start clean.
+    let mut done: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    let rfile = if cfg.resume {
+        match XrdFile::open_rw(&paths.results()) {
+            Ok(f) if *f.header() == r_header => {
+                done = read_progress(&paths.progress());
+                f
+            }
+            _ => {
+                let _ = std::fs::remove_file(&paths.progress());
+                XrdFile::create(&paths.results(), r_header)?
+            }
+        }
+    } else {
+        let _ = std::fs::remove_file(&paths.progress());
+        XrdFile::create(&paths.results(), r_header)?
+    }
+    .with_throttle(cfg.write_throttle);
+    let mut journal = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(paths.progress())
+        .map_err(|e| Error::io("opening progress journal", e))?;
+    let reader = AioEngine::new(xr);
+    let writer = AioEngine::new(rfile);
+
+    // Device lanes.
+    let mut lanes: Vec<DeviceLane> = (0..cfg.ngpus)
+        .map(|gi| {
+            let backend = match (&cfg.backend, &backend_proto) {
+                (BackendKind::Native, _) => Backend::Native,
+                (BackendKind::Pjrt { .. }, Some(entry)) => Backend::Pjrt { entry: entry.clone() },
+                _ => unreachable!(),
+            };
+            DeviceLane::spawn(gi, cfg.mode, backend, &pre, mb_gpu)
+        })
+        .collect::<Result<_>>()?;
+
+    // Buffer pools: hb host blocks, hb result blocks, 2 chunks per lane.
+    let mut host_pool = BufPool::new(cfg.host_buffers, n * cfg.block);
+    let mut result_pool = BufPool::new(cfg.host_buffers, p * cfg.block);
+    let mut chunk_pools: Vec<BufPool> =
+        (0..cfg.ngpus).map(|_| BufPool::new(2, n * mb_gpu)).collect();
+
+    let nblocks = dims.m.div_ceil(cfg.block);
+    // Work list: skip journaled blocks when resuming.
+    let todo: Vec<usize> = (0..nblocks).filter(|b| !done.contains(b)).collect();
+    let njobs = todo.len();
+    let read_ahead = cfg.host_buffers.saturating_sub(1).max(1);
+    let mut metrics = Metrics::new();
+    let mut scratch = SloopScratch::new(dims.pl);
+    let t_wall = Instant::now();
+
+    // ---- pipeline state ------------------------------------------------
+    let mut pending_reads: VecDeque<(usize, AioHandle)> = VecDeque::new();
+    let mut next_read = 0usize; // index into `todo`
+    let mut assemblies: HashMap<usize, BlockAssembly> = HashMap::new();
+    let mut pending_writes: VecDeque<(usize, AioHandle)> = VecDeque::new();
+    let mut retired = 0usize;
+
+    let cols_in = |b: usize| -> usize {
+        if (b + 1) * cfg.block <= dims.m { cfg.block } else { dims.m - b * cfg.block }
+    };
+
+    // Submit disk reads up to the ring's read-ahead.
+    macro_rules! pump_reads {
+        () => {
+            while next_read < njobs && pending_reads.len() < read_ahead {
+                match host_pool.take() {
+                    Some(mut buf) => {
+                        let b = todo[next_read];
+                        let live = cols_in(b);
+                        buf.truncate(n * live);
+                        let h = reader.read_cols((b * cfg.block) as u64, live as u64, buf);
+                        pending_reads.push_back((b, h));
+                        next_read += 1;
+                    }
+                    None => break,
+                }
+            }
+        };
+    }
+
+    // Journal a persisted block (crash-safe resume point).
+    macro_rules! journal_block {
+        ($id:expr) => {
+            std::io::Write::write_all(&mut journal, &($id as u64).to_le_bytes())
+                .map_err(|e| Error::io("appending progress journal", e))?;
+        };
+    }
+
+    let mut completed_writes: Vec<usize> = Vec::new();
+
+    // Retire one lane result: run the CPU tail, fill the assembly, and
+    // kick the write when the block is complete.
+    let process_out = |out: DevOut,
+                           metrics: &mut Metrics,
+                           scratch: &mut SloopScratch,
+                           chunk_pools: &mut Vec<BufPool>,
+                           result_pool: &mut BufPool,
+                           pending_writes: &mut VecDeque<(usize, AioHandle)>,
+                           completed_writes: &mut Vec<usize>,
+                           assemblies: &mut HashMap<usize, BlockAssembly>,
+                           retired: &mut usize|
+     -> Result<()> {
+        let b = out.block as usize;
+        chunk_pools[out.lane].put(out.inbuf);
+        let live_total = cols_in(b);
+        // Ensure an assembly buffer exists (may need to wait on a write).
+        if !assemblies.contains_key(&b) {
+            let buf = loop {
+                if let Some(buf) = result_pool.take() {
+                    break buf;
+                }
+                let (wb, h) = pending_writes.pop_front().ok_or_else(|| {
+                    Error::Pipeline("result pool empty with no writes in flight".into())
+                })?;
+                let t0 = Instant::now();
+                let (wbuf, res) = h.wait();
+                metrics.add(Phase::WriteWait, t0.elapsed());
+                res?;
+                completed_writes.push(wb);
+                result_pool.put(wbuf);
+            };
+            let chunks = live_total.div_ceil(mb_gpu);
+            assemblies.insert(b, BlockAssembly { buf, live_total, chunks_left: chunks });
+        }
+        let asm = assemblies.get_mut(&b).expect("assembly exists");
+        let col0 = out.lane * mb_gpu; // chunk's first column within block
+        let t0 = Instant::now();
+        match out.outs {
+            LaneOutputs::Xbt(xbt) => {
+                let live = xbt.cols();
+                let mut rblk = Matrix::zeros(p, live);
+                sloop_block(&pre, &xbt, scratch, &mut rblk)?;
+                asm.buf[col0 * p..(col0 + live) * p].copy_from_slice(rblk.as_slice());
+            }
+            LaneOutputs::Reductions { xbt: _, g, rb, d } => {
+                let live = d.len();
+                let mut rblk = Matrix::zeros(p, live);
+                sloop_from_reductions(&pre, &g, &d, &rb, scratch, &mut rblk)?;
+                asm.buf[col0 * p..(col0 + live) * p].copy_from_slice(rblk.as_slice());
+            }
+            LaneOutputs::Solutions(rblk) => {
+                let live = rblk.cols();
+                asm.buf[col0 * p..(col0 + live) * p].copy_from_slice(rblk.as_slice());
+            }
+        }
+        metrics.add(Phase::Sloop, t0.elapsed());
+        asm.chunks_left -= 1;
+        if asm.chunks_left == 0 {
+            let mut asm = assemblies.remove(&b).expect("assembly exists");
+            asm.buf.truncate(p * asm.live_total);
+            let h = writer.write_cols((b * cfg.block) as u64, asm.live_total as u64, asm.buf);
+            pending_writes.push_back((b, h));
+            *retired += 1;
+        }
+        Ok(())
+    };
+
+    // ---- main loop (Listing 1.3) ----------------------------------------
+    for &b in &todo {
+        pump_reads!();
+        let (rb_idx, handle) = pending_reads
+            .pop_front()
+            .ok_or_else(|| Error::Pipeline("no pending read (pool starved?)".into()))?;
+        debug_assert_eq!(rb_idx, b);
+        let t0 = Instant::now();
+        let (buf, res) = handle.wait(); // aio_wait Xr[b]
+        metrics.add(Phase::ReadWait, t0.elapsed());
+        res?;
+        let live_total = cols_in(b);
+        let chunks = live_total.div_ceil(mb_gpu);
+
+        // Split-send to lanes (cu_send; blocking on pool = cu_send_wait).
+        for gi in 0..chunks {
+            let live = (live_total - gi * mb_gpu).min(mb_gpu);
+            // Opportunistically drain results while waiting for a chunk buffer
+            // — this is where the S-loop of block b-1 overlaps the trsm of b.
+            let mut chunkbuf = loop {
+                if let Some(cb) = chunk_pools[gi].take() {
+                    break cb;
+                }
+                let t0 = Instant::now();
+                let out = lanes[gi]
+                    .rx_out
+                    .recv()
+                    .map_err(|_| Error::Pipeline(format!("lane {gi} closed early")))?;
+                metrics.add(Phase::RecvWait, t0.elapsed());
+                process_out(
+                    out,
+                    &mut metrics,
+                    &mut scratch,
+                    &mut chunk_pools,
+                    &mut result_pool,
+                    &mut pending_writes,
+                    &mut completed_writes,
+                    &mut assemblies,
+                    &mut retired,
+                )?;
+            };
+            let t0 = Instant::now();
+            chunkbuf[..n * live].copy_from_slice(&buf[gi * mb_gpu * n..gi * mb_gpu * n + n * live]);
+            chunkbuf[n * live..].fill(0.0); // zero-pad the artifact width
+            metrics.add(Phase::Send, t0.elapsed());
+            lanes[gi].submit(DevIn { block: b as u64, buf: chunkbuf, live })?;
+        }
+        host_pool.put(buf);
+
+        // Drain any already-finished results without blocking.
+        for gi in 0..cfg.ngpus {
+            while let Ok(out) = lanes[gi].rx_out.try_recv() {
+                process_out(
+                    out,
+                    &mut metrics,
+                    &mut scratch,
+                    &mut chunk_pools,
+                    &mut result_pool,
+                    &mut pending_writes,
+                    &mut completed_writes,
+                    &mut assemblies,
+                    &mut retired,
+                )?;
+            }
+        }
+    }
+
+    // ---- drain ----------------------------------------------------------
+    // Closing the input channels lets lanes finish their queues and exit,
+    // which disconnects their output channels — the natural end-of-stream.
+    for lane in &mut lanes {
+        lane.close();
+    }
+    let mut open = vec![true; cfg.ngpus];
+    while retired < njobs && open.iter().any(|&o| o) {
+        for gi in 0..cfg.ngpus {
+            if !open[gi] {
+                continue;
+            }
+            match lanes[gi].rx_out.recv_timeout(std::time::Duration::from_millis(20)) {
+                Ok(out) => {
+                    let t0 = Instant::now();
+                    metrics.add(Phase::RecvWait, t0.elapsed());
+                    process_out(
+                        out,
+                        &mut metrics,
+                        &mut scratch,
+                        &mut chunk_pools,
+                        &mut result_pool,
+                        &mut pending_writes,
+                        &mut completed_writes,
+                        &mut assemblies,
+                        &mut retired,
+                    )?;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open[gi] = false,
+            }
+        }
+    }
+    if retired < njobs {
+        // Lanes exited without delivering everything — surface their errors.
+        for lane in lanes {
+            lane.join()?;
+        }
+        return Err(Error::Pipeline(format!(
+            "lanes exited after {retired}/{njobs} blocks"
+        )));
+    }
+    // Flush writes.
+    while let Some((wb, h)) = pending_writes.pop_front() {
+        let t0 = Instant::now();
+        let (wbuf, res) = h.wait();
+        metrics.add(Phase::WriteWait, t0.elapsed());
+        res?;
+        completed_writes.push(wb);
+        result_pool.put(wbuf);
+    }
+    writer.sync().wait().1?;
+    // Journal after the data sync so a journaled block is truly durable.
+    for wb in completed_writes.drain(..) {
+        journal_block!(wb);
+    }
+    journal.sync_data().map_err(|e| Error::io("syncing progress journal", e))?;
+
+    // Merge lane metrics.
+    let mut device_secs = 0.0;
+    for lane in lanes {
+        let lm = lane.join()?;
+        device_secs += lm.total(Phase::DeviceCompute).as_secs_f64();
+        metrics.merge(&lm);
+    }
+
+    let wall_secs = t_wall.elapsed().as_secs_f64();
+    Ok(PipelineReport {
+        blocks: njobs,
+        snps: dims.m,
+        wall_secs,
+        snps_per_sec: dims.m as f64 / wall_secs.max(1e-12),
+        metrics,
+        device_secs,
+    })
+}
+
+fn validate(cfg: &PipelineConfig) -> Result<()> {
+    if cfg.ngpus == 0 {
+        return Err(Error::Config("ngpus must be ≥ 1".into()));
+    }
+    if cfg.block == 0 || cfg.block % cfg.ngpus != 0 {
+        return Err(Error::Config(format!(
+            "block {} must be positive and divisible by ngpus {}",
+            cfg.block, cfg.ngpus
+        )));
+    }
+    if cfg.host_buffers < 2 {
+        return Err(Error::Config("host_buffers must be ≥ 2 (double buffering)".into()));
+    }
+    Ok(())
+}
+
+/// Compare the pipeline's `r.xrd` against the in-core oracle (test sizes).
+pub fn verify_against_oracle(dataset_dir: &std::path::Path, tol: f64) -> Result<f64> {
+    let (meta, kin, xl, y) = dataset::load_sidecars(dataset_dir)?;
+    let xr = dataset::load_xr_incore(dataset_dir)?;
+    let prob = crate::gwas::problem::Problem { dims: meta.dims, m: kin, xl, y, xr };
+    let want = crate::gwas::solve_incore(&prob)?;
+    let paths = dataset::DatasetPaths::new(dataset_dir);
+    let rfile = XrdFile::open(&paths.results())?;
+    let p = meta.dims.p();
+    let mut got = vec![0.0; p * meta.dims.m];
+    rfile.read_cols_into(0, meta.dims.m as u64, &mut got)?;
+    let got = Matrix::from_vec(p, meta.dims.m, got)?;
+    let diff = got.max_abs_diff(&want);
+    if diff > tol {
+        return Err(Error::Numerical(format!(
+            "pipeline result differs from oracle by {diff:.3e} (tol {tol:.1e})"
+        )));
+    }
+    Ok(diff)
+}

@@ -1,0 +1,112 @@
+//! Fixed-capacity buffer pools — the in-code form of the paper's
+//! "3 host buffers / 2 device buffers".
+//!
+//! The paper rotates a fixed set of buffers by pointer swaps; in rust the
+//! same discipline is ownership moving through the pipeline stages and
+//! back into the pool. The pool *is* the backpressure mechanism: when all
+//! buffers of a stage are in flight, the producer blocks — exactly the
+//! stall the multibuffering analysis in §3.1 reasons about. Pool size is
+//! therefore a first-class experiment knob (see `ablation_buffers`).
+
+use std::collections::VecDeque;
+
+/// A pool of same-capacity `Vec<f64>` buffers recycled through the
+/// pipeline. Never grows: `take` on an empty pool returns `None` (callers
+/// then drain downstream stages — see `pipeline.rs`).
+#[derive(Debug)]
+pub struct BufPool {
+    bufs: VecDeque<Vec<f64>>,
+    cap_each: usize,
+    total: usize,
+}
+
+impl BufPool {
+    /// `count` buffers of `cap_each` elements, pre-zeroed (pre-faulted).
+    pub fn new(count: usize, cap_each: usize) -> Self {
+        let bufs = (0..count).map(|_| vec![0.0; cap_each]).collect();
+        BufPool { bufs, cap_each, total: count }
+    }
+
+    /// Take a buffer if one is free. Length is reset to full capacity.
+    pub fn take(&mut self) -> Option<Vec<f64>> {
+        self.bufs.pop_front().map(|mut b| {
+            debug_assert_eq!(b.capacity() >= self.cap_each, true);
+            b.resize(self.cap_each, 0.0);
+            b
+        })
+    }
+
+    /// Return a buffer to the pool.
+    ///
+    /// Panics if the pool would exceed its configured size (a returned
+    /// foreign buffer means the rotation invariant broke — fail loudly).
+    pub fn put(&mut self, buf: Vec<f64>) {
+        assert!(
+            self.bufs.len() < self.total,
+            "BufPool::put would exceed pool size {} — buffer leak or double-put",
+            self.total
+        );
+        self.bufs.push_back(buf);
+    }
+
+    pub fn free(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.total - self.bufs.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn cap_each(&self) -> usize {
+        self.cap_each
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_until_empty_then_put_back() {
+        let mut p = BufPool::new(3, 8);
+        let a = p.take().unwrap();
+        let b = p.take().unwrap();
+        let c = p.take().unwrap();
+        assert!(p.take().is_none());
+        assert_eq!(p.in_flight(), 3);
+        p.put(a);
+        p.put(b);
+        assert_eq!(p.free(), 2);
+        p.put(c);
+        assert_eq!(p.free(), 3);
+    }
+
+    #[test]
+    fn buffers_are_zeroed_initially_and_full_length() {
+        let mut p = BufPool::new(1, 5);
+        let b = p.take().unwrap();
+        assert_eq!(b.len(), 5);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn take_restores_capacity_after_shrink() {
+        let mut p = BufPool::new(1, 10);
+        let mut b = p.take().unwrap();
+        b.truncate(3); // stage shrank it (tail block)
+        p.put(b);
+        let b2 = p.take().unwrap();
+        assert_eq!(b2.len(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-put")]
+    fn overfilling_panics() {
+        let mut p = BufPool::new(1, 4);
+        p.put(vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Discrete-event simulation of the streaming pipeline at paper scale.
+//!
+//! The paper's results were measured on hardware this repo does not have
+//! (Fermi GPUs, a cluster filesystem feeding them). Per the substitution
+//! rule in DESIGN.md §4, this module reproduces the *shape* of Fig. 3,
+//! Fig. 6a and Fig. 6b by simulating the exact task graphs of the three
+//! algorithms (naive offload, OOC-HP-GWAS, cuGWAS) over a hardware profile
+//! with the paper's published constants. The real code path (PJRT + disk
+//! + threads) is validated separately at laptop scale; the simulator's
+//! task graphs follow the same scheduling rules the live coordinator
+//! uses, so the two cannot drift apart silently.
+
+pub mod des;
+pub mod pipeline_model;
+pub mod profile;
+
+pub use des::{Des, TaskId, Timeline};
+pub use pipeline_model::{simulate, Algo, SimConfig, SimReport};
+pub use profile::HardwareProfile;

@@ -1,0 +1,146 @@
+//! Hardware profiles: the paper's published machine constants, plus
+//! op-cost functions mapping GWAS operations to seconds.
+
+/// Machine model for the simulator. Rates are *effective* (already
+/// derated to achievable efficiency, as the paper reports them).
+#[derive(Debug, Clone, Copy)]
+pub struct HardwareProfile {
+    pub name: &'static str,
+    /// Effective GPU trsm rate, per GPU (GFlop/s). Paper: cuBLAS dtrsm
+    /// reaches ~60 % of Fermi's 515 GF/s peak ⇒ 309.
+    pub gpu_trsm_gflops: f64,
+    /// Effective CPU BLAS-3 rate (GFlop/s), whole socket set. Paper:
+    /// OOC-HP-GWAS attains >90 % of peak.
+    pub cpu_gflops: f64,
+    /// Host↔device link bandwidth (GB/s). PCIe 2.0 x16 ≈ 6 effective.
+    pub pcie_gbps: f64,
+    /// Storage streaming bandwidth (MB/s). The Quadro cluster reads from
+    /// a parallel filesystem the paper reports as "an order of magnitude
+    /// faster than the trsm"; the `hdd()` profile models a literal
+    /// spinning disk instead.
+    pub disk_mbps: f64,
+    /// Effective rate of a naive per-SNP BLAS-2 code (GFlop/s), used for
+    /// the ProbABEL-like baseline. Order 0.1 = unblocked C++ loops.
+    pub probabel_gflops: f64,
+}
+
+impl HardwareProfile {
+    /// RWTH *Quadro* cluster (§4.1): 2× Quadro 6000 (515 GF each, 6 GB),
+    /// 2× Xeon X5650 (128 GF combined), 24 GB RAM.
+    pub fn quadro() -> Self {
+        HardwareProfile {
+            name: "quadro",
+            gpu_trsm_gflops: 309.0,
+            cpu_gflops: 128.0 * 0.9,
+            pcie_gbps: 6.0,
+            disk_mbps: 2000.0,
+            probabel_gflops: 0.12,
+        }
+    }
+
+    /// UJI *Tesla* cluster (§4.2): Tesla S2050, 4 Fermi chips (2.06 TF
+    /// total), Xeon E5440 ≈ 90 GF host.
+    pub fn tesla() -> Self {
+        HardwareProfile {
+            name: "tesla",
+            gpu_trsm_gflops: 309.0,
+            cpu_gflops: 90.0 * 0.9,
+            pcie_gbps: 6.0,
+            disk_mbps: 2000.0,
+            probabel_gflops: 0.12,
+        }
+    }
+
+    /// A literal single spinning disk (the title's HDD), for the ablation
+    /// that shows where the I/O-bound crossover sits.
+    pub fn hdd() -> Self {
+        HardwareProfile { name: "hdd", disk_mbps: 120.0, ..Self::quadro() }
+    }
+
+    // ---- op costs (seconds) -------------------------------------------
+
+    /// trsm of `L (n×n)` against `mb` RHS columns: `n² · mb` flops.
+    pub fn t_trsm_gpu(&self, n: usize, mb: usize) -> f64 {
+        (n as f64) * (n as f64) * (mb as f64) / (self.gpu_trsm_gflops * 1e9)
+    }
+
+    /// Same trsm on the CPU (the OOC-HP-GWAS baseline).
+    pub fn t_trsm_cpu(&self, n: usize, mb: usize) -> f64 {
+        (n as f64) * (n as f64) * (mb as f64) / (self.cpu_gflops * 1e9)
+    }
+
+    /// S-loop over a block: gemm `(pl×n)(n×mb)` + per-column syrk/gemv +
+    /// m tiny posv solves.
+    pub fn t_sloop_cpu(&self, n: usize, pl: usize, mb: usize) -> f64 {
+        let p = (pl + 1) as f64;
+        let gemm = 2.0 * (pl as f64) * (n as f64) * (mb as f64);
+        let vec_ops = 4.0 * (n as f64) * (mb as f64); // syrk col + gemv
+        let posv = (mb as f64) * p * p * p / 3.0;
+        (gemm + vec_ops + posv) / (self.cpu_gflops * 1e9)
+    }
+
+    /// Host↔device transfer of a block (n×mb f64).
+    pub fn t_pcie(&self, n: usize, mb: usize) -> f64 {
+        (n as f64) * (mb as f64) * 8.0 / (self.pcie_gbps * 1e9)
+    }
+
+    /// Disk read/write of `bytes`.
+    pub fn t_disk(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.disk_mbps * 1e6)
+    }
+
+    /// ProbABEL-like per-SNP work: two `n²` gemv-class ops per SNP plus
+    /// per-SNP `p³` solves, at unblocked BLAS-2 rate.
+    pub fn t_probabel(&self, n: usize, pl: usize, m: usize) -> f64 {
+        let p = (pl + 1) as f64;
+        let per_snp = 3.0 * (n as f64) * (n as f64) + 2.0 * p * p * (n as f64);
+        (m as f64) * per_snp / (self.probabel_gflops * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_sanity() {
+        // n = 10 000, block of 5 000 SNPs on the Quadro profile.
+        let p = HardwareProfile::quadro();
+        let t_gpu = p.t_trsm_gpu(10_000, 5_000);
+        let t_cpu = p.t_trsm_cpu(10_000, 5_000);
+        // GPU ≈ 2.6–2.7× the CPU rate (309 vs 115 GF) — the paper's core ratio.
+        let ratio = t_cpu / t_gpu;
+        assert!((2.2..3.2).contains(&ratio), "ratio={ratio}");
+        // Disk read of the block is ~an order of magnitude faster than trsm
+        // on the cluster FS profile (the paper's multi-GPU scaling premise).
+        let t_read = p.t_disk(10_000 * 5_000 * 8);
+        assert!(t_read * 5.0 < t_gpu, "read={t_read}, trsm={t_gpu}");
+        // ...but NOT on a literal HDD.
+        let hdd = HardwareProfile::hdd();
+        assert!(hdd.t_disk(10_000 * 5_000 * 8) > t_gpu);
+    }
+
+    #[test]
+    fn sloop_is_cheaper_than_trsm_at_scale() {
+        // The pipeline premise: the delayed S-loop hides under the trsm.
+        let p = HardwareProfile::quadro();
+        assert!(p.t_sloop_cpu(10_000, 3, 5_000) < p.t_trsm_gpu(10_000, 5_000));
+    }
+
+    #[test]
+    fn probabel_reference_runtime_magnitude() {
+        // Paper §1.4: ProbABEL took ~4 h for p=4, n=1500, m=220 833 (2010
+        // hardware). Our model should land within the same decade.
+        let p = HardwareProfile::quadro();
+        let t = p.t_probabel(1_500, 3, 220_833);
+        assert!((3_600.0..40_000.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn costs_scale_linearly_in_mb() {
+        let p = HardwareProfile::quadro();
+        let a = p.t_trsm_gpu(1000, 100);
+        let b = p.t_trsm_gpu(1000, 200);
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,102 @@
+//! Crate-wide error type.
+//!
+//! A single enum covering every failure domain (I/O, format, config,
+//! numerics, runtime, pipeline). `anyhow` is reserved for binaries; the
+//! library surfaces typed errors so callers can branch on them.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes of the cuGWAS library.
+#[derive(Debug)]
+pub enum Error {
+    /// Underlying OS-level I/O failure, annotated with the operation.
+    Io { context: String, source: std::io::Error },
+    /// A file did not conform to the XRD / artifact / config format.
+    Format(String),
+    /// Invalid or inconsistent configuration.
+    Config(String),
+    /// Numerical failure (e.g. a non-SPD matrix handed to `potrf`).
+    Numerical(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Pipeline-level failure (lane died, channel closed, drain mismatch).
+    Pipeline(String),
+    /// Shape/dimension mismatch between operands.
+    Shape(String),
+}
+
+impl Error {
+    /// Attach file/operation context to an `std::io::Error`.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { context: context.into(), source }
+    }
+
+    /// Convenience constructor used by parsers.
+    pub fn format(msg: impl Into<String>) -> Self {
+        Error::Format(msg.into())
+    }
+
+    /// Convenience constructor for dimension mismatches.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { context, source } => write!(f, "io error ({context}): {source}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io { context: String::new(), source: e }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::io("reading header", std::io::Error::other("boom"));
+        let s = e.to_string();
+        assert!(s.contains("reading header"), "{s}");
+        assert!(s.contains("boom"), "{s}");
+    }
+
+    #[test]
+    fn from_io_error() {
+        let e: Error = std::io::Error::other("x").into();
+        assert!(matches!(e, Error::Io { .. }));
+    }
+
+    #[test]
+    fn source_chain() {
+        use std::error::Error as _;
+        let e = Error::io("ctx", std::io::Error::other("inner"));
+        assert!(e.source().is_some());
+        assert!(Error::Format("f".into()).source().is_none());
+    }
+}

@@ -1,0 +1,120 @@
+//! Association statistics — the deliverable a GWAS actually reports.
+//!
+//! The paper computes the GLS estimates `r_i`; a study then tests each
+//! SNP via its effect's standard error. For GLS with known covariance
+//! `M` (the mixed-model score setting of ProbABEL's `--mmscore`):
+//!
+//! ```text
+//! Var(r̂_i)      = σ̂_i² · S_i^-1                     (S_i = X_i^T M^-1 X_i)
+//! σ̂_i²          = (ỹ^T ỹ − r̂_i^T rhs_i) / (n − p)   (GLS residual variance)
+//! se(β̂_snp)     = sqrt(σ̂_i² · (S_i^-1)_{pp})
+//! z_i            = β̂_snp / se(β̂_snp)
+//! ```
+//!
+//! `(S_i^-1)_{pp}` comes for free from the Cholesky factor the S-loop
+//! already computes: with `S = L L^T`, `(S^-1)_{pp} = ‖L^-1 e_p‖²` — one
+//! extra forward substitution per SNP.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// Per-SNP statistics block: rows = [beta_snp, se, z], one column per SNP.
+pub const STAT_ROWS: usize = 3;
+
+/// Compute `(S^-1)_{pp}` from the in-place Cholesky factor produced by
+/// `posv_small` (lower triangle of `s`, column-major `p×p`).
+#[inline]
+pub fn inv_pp_from_factor(s_factored: &[f64], p: usize) -> f64 {
+    // Solve L w = e_{p-1} by forward substitution; only rows ≥ p-1 matter,
+    // and e_{p-1} has a single 1 at the last row, so w = e_p / L[p-1,p-1].
+    let lpp = s_factored[(p - 1) * p + (p - 1)];
+    let w = 1.0 / lpp;
+    w * w
+}
+
+/// Residual variance of one GLS fit: `(ỹ·ỹ − r·rhs) / (n − p)`.
+#[inline]
+pub fn sigma2(yty: f64, r: &[f64], rhs: &[f64], n: usize, p: usize) -> Result<f64> {
+    if n <= p {
+        return Err(Error::Numerical(format!("sigma2: n={n} ≤ p={p}")));
+    }
+    let explained: f64 = r.iter().zip(rhs).map(|(a, b)| a * b).sum();
+    // Guard tiny negative values from roundoff.
+    Ok(((yty - explained) / (n - p) as f64).max(0.0))
+}
+
+/// Assemble the `[beta, se, z]` column for one SNP.
+#[inline]
+pub fn stat_column(beta: f64, var_pp: f64, s2: f64) -> [f64; STAT_ROWS] {
+    let se = (var_pp * s2).sqrt();
+    let z = if se > 0.0 { beta / se } else { 0.0 };
+    [beta, se, z]
+}
+
+/// Convenience: significance ranking of a stats matrix (3×m) by |z|.
+/// Returns SNP indices sorted most-significant first.
+pub fn rank_by_z(stats: &Matrix) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..stats.cols()).collect();
+    idx.sort_by(|&a, &b| {
+        stats
+            .get(2, b)
+            .abs()
+            .partial_cmp(&stats.get(2, a).abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::posv_small;
+    use crate::linalg::posv;
+    use crate::util::XorShift;
+
+    #[test]
+    fn inv_pp_matches_explicit_inverse() {
+        let mut rng = XorShift::new(4);
+        for p in [2usize, 4, 6] {
+            let s = Matrix::rand_spd(p, 2.0, &mut rng);
+            // Explicit (S^-1)_{pp} via posv on e_p.
+            let mut e = vec![0.0; p];
+            e[p - 1] = 1.0;
+            posv(&s, &mut e).unwrap();
+            let want = e[p - 1];
+            // Via the factored path.
+            let mut flat = s.as_slice().to_vec();
+            let mut b = vec![0.0; p];
+            posv_small(&mut flat, &mut b, p).unwrap();
+            let got = inv_pp_from_factor(&flat, p);
+            assert!((got - want).abs() < 1e-10 * want.abs().max(1.0), "p={p}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sigma2_basics() {
+        // Perfect fit: residual variance 0 (clamped).
+        assert_eq!(sigma2(10.0, &[1.0, 3.0], &[1.0, 3.0], 12, 2).unwrap(), 0.0);
+        // Simple case.
+        let s2 = sigma2(20.0, &[1.0], &[4.0], 6, 1).unwrap();
+        assert!((s2 - 16.0 / 5.0).abs() < 1e-12);
+        assert!(sigma2(1.0, &[], &[], 2, 2).is_err());
+    }
+
+    #[test]
+    fn stat_column_math() {
+        let [b, se, z] = stat_column(2.0, 0.25, 4.0);
+        assert_eq!(b, 2.0);
+        assert_eq!(se, 1.0);
+        assert_eq!(z, 2.0);
+        let [_, _, z0] = stat_column(1.0, 0.0, 0.0);
+        assert_eq!(z0, 0.0); // degenerate → no blow-up
+    }
+
+    #[test]
+    fn rank_by_z_orders_by_significance() {
+        let stats =
+            Matrix::from_rows(&[&[0.1, 0.5, 0.2], &[1.0, 1.0, 1.0], &[0.5, -3.0, 1.5]]);
+        assert_eq!(rank_by_z(&stats), vec![1, 2, 0]);
+    }
+}

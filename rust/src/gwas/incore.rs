@@ -1,0 +1,151 @@
+//! In-core reference solver — paper Listing 1.1, the algorithm every
+//! streaming/out-of-core variant must agree with. This is the correctness
+//! oracle for the whole repo: the pipeline integration tests stream a
+//! dataset from disk and compare bit-tolerance against this.
+
+use crate::error::Result;
+use crate::gwas::preprocess::preprocess;
+use crate::gwas::problem::Problem;
+use crate::gwas::sloop::SloopScratch;
+use crate::linalg::{trsm_lower_left, Matrix};
+
+/// Solve the full sequence of GLS problems in memory.
+/// Returns `r` as a `(pl+1) × m` matrix (one solution vector per SNP).
+pub fn solve_incore(prob: &Problem) -> Result<Matrix> {
+    Ok(solve_incore_with_stats(prob)?.0)
+}
+
+/// [`solve_incore`] plus per-SNP association statistics
+/// (`3 × m`: beta, se, z — see [`crate::gwas::assoc`]).
+pub fn solve_incore_with_stats(prob: &Problem) -> Result<(Matrix, Matrix)> {
+    let pre = preprocess(&prob.m, &prob.xl, &prob.y, 0)?;
+    // X̃_R ← trsm L, X_R   (the BLAS-3 bulk — Listing 1.1 line 7 blocked)
+    let mut xr_t = prob.xr.clone();
+    trsm_lower_left(&pre.l, &mut xr_t)?;
+    // S-loop over all columns at once.
+    let p = prob.dims.p();
+    let mut out = Matrix::zeros(p, prob.dims.m);
+    let mut stats = Matrix::zeros(crate::gwas::assoc::STAT_ROWS, prob.dims.m);
+    let mut scratch = SloopScratch::new(prob.dims.pl);
+    crate::gwas::sloop::sloop_block_stats(&pre, &xr_t, &mut scratch, &mut out, Some(&mut stats))?;
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gwas::problem::Dims;
+    use crate::linalg::{gemv_n, gemv_t, posv, syrk_t};
+
+    /// Fully independent oracle: explicitly invert M via posv column by
+    /// column, then form the normal equations from the definition.
+    fn definition_gls(prob: &Problem, i: usize) -> Vec<f64> {
+        let n = prob.dims.n;
+        let pl = prob.dims.pl;
+        let p = pl + 1;
+        // Build X_i
+        let mut x = Matrix::zeros(n, p);
+        for j in 0..pl {
+            x.col_mut(j).copy_from_slice(prob.xl.col(j));
+        }
+        x.col_mut(pl).copy_from_slice(prob.xr.col(i));
+        // Minv_x = M^-1 X_i (column-wise posv), Minv_y = M^-1 y
+        let mut minv_x = Matrix::zeros(n, p);
+        for j in 0..p {
+            let mut col = x.col(j).to_vec();
+            posv(&prob.m, &mut col).unwrap();
+            minv_x.col_mut(j).copy_from_slice(&col);
+        }
+        let mut minv_y = prob.y.clone();
+        posv(&prob.m, &mut minv_y).unwrap();
+        // S = X^T M^-1 X, rhs = X^T M^-1 y
+        let mut s = Matrix::zeros(p, p);
+        crate::linalg::gemm(1.0, &x.transpose(), &minv_x, 0.0, &mut s).unwrap();
+        let mut rhs = gemv_t(&x, &minv_y).unwrap();
+        posv(&s, &mut rhs).unwrap();
+        rhs
+    }
+
+    #[test]
+    fn incore_matches_definition() {
+        let prob = Problem::synthetic(Dims::new(28, 3, 7).unwrap(), 99).unwrap();
+        let r = solve_incore(&prob).unwrap();
+        assert_eq!(r.rows(), 4);
+        assert_eq!(r.cols(), 7);
+        for i in 0..7 {
+            let want = definition_gls(&prob, i);
+            for k in 0..4 {
+                assert!(
+                    (r.get(k, i) - want[k]).abs() < 1e-6,
+                    "snp {i} comp {k}: {} vs {}",
+                    r.get(k, i),
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incore_recovers_planted_signal() {
+        // The synthetic phenotype plants effect 0.3 on SNP 0; with enough
+        // samples the estimate should be near it, and SNP effects for null
+        // SNPs should be near zero.
+        let prob = Problem::synthetic(Dims::new(600, 2, 4).unwrap(), 5).unwrap();
+        let r = solve_incore(&prob).unwrap();
+        let beta_snp0 = r.get(2, 0); // last row = SNP effect
+        assert!((beta_snp0 - 0.3).abs() < 0.15, "beta={beta_snp0}");
+        for i in 1..4 {
+            assert!(r.get(2, i).abs() < 0.2, "null snp {i} got {}", r.get(2, i));
+        }
+    }
+
+    #[test]
+    fn incore_single_snp() {
+        let prob = Problem::synthetic(Dims::new(16, 2, 1).unwrap(), 2).unwrap();
+        let r = solve_incore(&prob).unwrap();
+        assert_eq!(r.cols(), 1);
+        assert!(r.as_slice().iter().all(|v| v.is_finite()));
+    }
+}
+
+#[cfg(test)]
+mod stats_tests {
+    use super::*;
+    use crate::gwas::assoc::rank_by_z;
+    use crate::gwas::problem::Dims;
+
+    #[test]
+    fn planted_snp_is_most_significant() {
+        // The synthetic phenotype plants effect 0.3 on SNP 0; with enough
+        // samples its |z| must dominate the null SNPs.
+        let prob = Problem::synthetic(Dims::new(400, 2, 8).unwrap(), 21).unwrap();
+        let (_, stats) = solve_incore_with_stats(&prob).unwrap();
+        assert_eq!(stats.rows(), 3);
+        let ranked = rank_by_z(&stats);
+        assert_eq!(ranked[0], 0, "planted SNP should rank first: {ranked:?}");
+        assert!(stats.get(2, 0).abs() > 3.0, "z={}", stats.get(2, 0));
+    }
+
+    #[test]
+    fn stats_are_consistent_with_estimates() {
+        let prob = Problem::synthetic(Dims::new(60, 3, 6).unwrap(), 4).unwrap();
+        let (r, stats) = solve_incore_with_stats(&prob).unwrap();
+        for i in 0..6 {
+            // Row 0 is the SNP effect itself.
+            assert_eq!(stats.get(0, i), r.get(3, i));
+            // se > 0 and z = beta/se.
+            let (beta, se, z) = (stats.get(0, i), stats.get(1, i), stats.get(2, i));
+            assert!(se > 0.0);
+            assert!((z - beta / se).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn null_snps_have_moderate_z() {
+        // SNPs 1.. carry no signal: |z| should mostly stay near 0.
+        let prob = Problem::synthetic(Dims::new(500, 2, 10).unwrap(), 9).unwrap();
+        let (_, stats) = solve_incore_with_stats(&prob).unwrap();
+        let high = (1..10).filter(|&i| stats.get(2, i).abs() > 4.0).count();
+        assert!(high <= 1, "too many significant null SNPs");
+    }
+}

@@ -1,0 +1,15 @@
+//! The GWAS generalized-least-squares problem itself: dimensions,
+//! preprocessing (Listing 1.1 lines 1–5), the per-block S-loop
+//! (lines 11–15 / Listing 1.2 lines 11–15), and the in-core reference
+//! solver used as the correctness oracle for every streaming variant.
+
+pub mod assoc;
+pub mod incore;
+pub mod preprocess;
+pub mod problem;
+pub mod sloop;
+
+pub use incore::{solve_incore, solve_incore_with_stats};
+pub use preprocess::{preprocess, Preprocessed};
+pub use problem::{Dims, Problem};
+pub use sloop::{sloop_block, sloop_block_stats, sloop_from_reductions, SloopScratch};

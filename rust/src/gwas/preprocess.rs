@@ -1,0 +1,109 @@
+//! Preprocessing — Listing 1.1 lines 1–5 (plus the inverted diagonal
+//! blocks of `L` the accelerator trsm kernel consumes).
+//!
+//! Runs once per study, cost `O(n^3)`; the paper measures it "in the order
+//! of seconds" and excludes it from the streaming timings. Everything the
+//! per-block hot path needs is captured in [`Preprocessed`].
+
+use crate::error::Result;
+use crate::linalg::{gemv_t, potrf, potrf_invert_diag_blocks, syrk_t, trsm_lower_left, trsv_lower, Matrix};
+
+/// Everything the streaming loop needs, computed once.
+#[derive(Debug, Clone)]
+pub struct Preprocessed {
+    /// Cholesky factor: `L L^T = M` (lower).
+    pub l: Matrix,
+    /// `X̃_L = L^-1 X_L` (n × pl).
+    pub xl_t: Matrix,
+    /// `ỹ = L^-1 y`.
+    pub y_t: Vec<f64>,
+    /// `S_TL = X̃_L^T X̃_L` (pl × pl).
+    pub stl: Matrix,
+    /// `r̃_T = X̃_L^T ỹ` (pl).
+    pub rtop: Vec<f64>,
+    /// Inverted `nb×nb` diagonal blocks of `L`, side by side (nb × nb·ceil(n/nb)).
+    /// Consumed by the L1 Pallas trsm kernel; `None` when running CPU-only.
+    pub dinv: Option<Matrix>,
+    /// Diagonal block size used for `dinv`.
+    pub dinv_nb: usize,
+    /// `ỹ·ỹ` — precomputed for the per-SNP residual variance (assoc stats).
+    pub yty: f64,
+}
+
+/// Run the preprocessing over `(M, X_L, y)`.
+///
+/// `dinv_nb` — diagonal block size for the accelerator trsm formulation;
+/// pass 0 to skip computing `dinv` (CPU-only paths).
+pub fn preprocess(m: &Matrix, xl: &Matrix, y: &[f64], dinv_nb: usize) -> Result<Preprocessed> {
+    let l = potrf(m)?; // L ← potrf M
+    let mut xl_t = xl.clone();
+    trsm_lower_left(&l, &mut xl_t)?; // X̃_L ← trsm L, X_L
+    let mut y_t = y.to_vec();
+    trsv_lower(&l, &mut y_t)?; // ỹ ← trsv L, y
+    let rtop = gemv_t(&xl_t, &y_t)?; // r̃_T ← gemv X̃_L, ỹ
+    let stl = syrk_t(&xl_t); // S_TL ← syrk X̃_L
+    let dinv = if dinv_nb > 0 { Some(potrf_invert_diag_blocks(&l, dinv_nb)?) } else { None };
+    let yty = crate::linalg::dot(&y_t, &y_t);
+    Ok(Preprocessed { l, xl_t, y_t, stl, rtop, dinv, dinv_nb, yty })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gwas::problem::{Dims, Problem};
+    use crate::linalg::{gemm, gemv_n};
+
+    fn small_problem() -> Problem {
+        Problem::synthetic(Dims::new(32, 3, 4).unwrap(), 11).unwrap()
+    }
+
+    #[test]
+    fn preprocess_invariants() {
+        let p = small_problem();
+        let pre = preprocess(&p.m, &p.xl, &p.y, 8).unwrap();
+
+        // L L^T == M
+        let mut rec = Matrix::zeros(32, 32);
+        gemm(1.0, &pre.l, &pre.l.transpose(), 0.0, &mut rec).unwrap();
+        assert!(rec.max_abs_diff(&p.m) < 1e-9);
+
+        // L X̃_L == X_L (trsm correctness)
+        for j in 0..p.xl.cols() {
+            let lx = gemv_n(&pre.l, pre.xl_t.col(j)).unwrap();
+            for i in 0..32 {
+                assert!((lx[i] - p.xl.get(i, j)).abs() < 1e-9);
+            }
+        }
+
+        // L ỹ == y
+        let ly = gemv_n(&pre.l, &pre.y_t).unwrap();
+        for (a, b) in ly.iter().zip(&p.y) {
+            assert!((a - b).abs() < 1e-9);
+        }
+
+        // S_TL symmetric pl×pl, r̃_T length pl
+        assert_eq!(pre.stl.rows(), 3);
+        assert_eq!(pre.rtop.len(), 3);
+
+        // dinv present with the requested block size
+        let dinv = pre.dinv.as_ref().unwrap();
+        assert_eq!(dinv.rows(), 8);
+        assert_eq!(dinv.cols(), 8 * 4); // ceil(32/8) = 4 blocks
+        assert_eq!(pre.dinv_nb, 8);
+    }
+
+    #[test]
+    fn preprocess_skips_dinv_when_nb_zero() {
+        let p = small_problem();
+        let pre = preprocess(&p.m, &p.xl, &p.y, 0).unwrap();
+        assert!(pre.dinv.is_none());
+    }
+
+    #[test]
+    fn preprocess_rejects_indefinite_m() {
+        let p = small_problem();
+        let mut bad = p.m.clone();
+        bad.set(0, 0, -5.0);
+        assert!(preprocess(&bad, &p.xl, &p.y, 0).is_err());
+    }
+}

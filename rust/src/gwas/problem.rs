@@ -1,0 +1,164 @@
+//! Problem definition: dimensions and the in-memory representation of one
+//! GWAS study (used by generators, oracles, and tests; the streaming path
+//! never holds a whole `Problem` — that is the point of the paper).
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::util::XorShift;
+
+/// Study dimensions, in the paper's notation.
+///
+/// * `n` — sample count (individuals). Paper median: 10 000.
+/// * `pl` — fixed covariates (columns of `X_L`). Paper: `p` between 4 and
+///   20 *including* the SNP column, so `pl = p - 1`.
+/// * `m` — SNP count (columns of `X_R`). Paper: up to 190 M.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    pub n: usize,
+    pub pl: usize,
+    pub m: usize,
+}
+
+impl Dims {
+    pub fn new(n: usize, pl: usize, m: usize) -> Result<Self> {
+        if n == 0 || pl == 0 || m == 0 {
+            return Err(Error::Config(format!("dims must be positive: n={n} pl={pl} m={m}")));
+        }
+        if pl + 1 >= n {
+            return Err(Error::Config(format!(
+                "need n > p = pl+1 for a well-posed GLS (n={n}, pl={pl})"
+            )));
+        }
+        Ok(Dims { n, pl, m })
+    }
+
+    /// Total design-matrix width `p = pl + 1` (covariates + the SNP).
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.pl + 1
+    }
+
+    /// Bytes of one f64 SNP column.
+    #[inline]
+    pub fn col_bytes(&self) -> u64 {
+        (self.n * 8) as u64
+    }
+
+    /// Total size of `X_R` on disk in bytes (the paper's "14 TB" number
+    /// for n=10 000, m=190 M).
+    #[inline]
+    pub fn xr_bytes(&self) -> u64 {
+        self.col_bytes() * self.m as u64
+    }
+}
+
+/// A fully in-memory study instance. Only sensible for small `m`; the
+/// dataset generator writes the streaming-scale equivalent to disk.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub dims: Dims,
+    /// Kinship / covariance matrix `M ∈ R^{n×n}`, SPD.
+    pub m: Matrix,
+    /// Fixed covariates `X_L ∈ R^{n×pl}` (first column is the intercept).
+    pub xl: Matrix,
+    /// Phenotype `y ∈ R^n`.
+    pub y: Vec<f64>,
+    /// SNP genotypes `X_R ∈ R^{n×m}`.
+    pub xr: Matrix,
+}
+
+impl Problem {
+    /// Deterministic synthetic study. Mirrors what a real GWAS feeds the
+    /// solver: `M` = SPD kinship, intercept + standard-normal covariates,
+    /// Hardy–Weinberg genotype columns with per-SNP random MAF, and a
+    /// phenotype with genetic signal + noise.
+    pub fn synthetic(dims: Dims, seed: u64) -> Result<Self> {
+        let Dims { n, pl, m } = dims;
+        let mut rng = XorShift::new(seed);
+        let kin = Matrix::rand_spd(n, 4.0, &mut rng);
+        let mut xl = Matrix::randn(n, pl, &mut rng);
+        for i in 0..n {
+            xl.set(i, 0, 1.0); // intercept column
+        }
+        let mut xr = Matrix::zeros(n, m);
+        for j in 0..m {
+            let maf = rng.uniform_in(0.05, 0.5);
+            let col = xr.col_mut(j);
+            for v in col.iter_mut() {
+                *v = rng.genotype(maf);
+            }
+            // Keep columns polymorphic (constant columns are collinear
+            // with the intercept; real pipelines drop such SNPs).
+            if col.iter().all(|&v| v == col[0]) {
+                col[0] = if col[0] == 1.0 { 2.0 } else { 1.0 };
+            }
+        }
+        // Phenotype: a little real signal on the first SNP + covariates + noise.
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut v = 0.3 * xr.get(i, 0);
+            for k in 0..pl {
+                v += 0.1 * xl.get(i, k);
+            }
+            y[i] = v + rng.normal();
+        }
+        Ok(Problem { dims, m: kin, xl, y, xr })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_validation() {
+        assert!(Dims::new(0, 3, 10).is_err());
+        assert!(Dims::new(100, 0, 10).is_err());
+        assert!(Dims::new(100, 3, 0).is_err());
+        assert!(Dims::new(4, 3, 10).is_err()); // n must exceed p
+        assert!(Dims::new(100, 3, 10).is_ok());
+    }
+
+    #[test]
+    fn p_and_sizes() {
+        let d = Dims::new(10_000, 3, 190_000_000).unwrap();
+        assert_eq!(d.p(), 4);
+        assert_eq!(d.col_bytes(), 80_000);
+        // The paper's 14 TB claim: 190M SNPs × 10k samples × 8 bytes ≈ 13.8 TiB.
+        let tib = d.xr_bytes() as f64 / (1u64 << 40) as f64;
+        assert!((13.0..15.0).contains(&tib), "{tib}");
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let d = Dims::new(50, 3, 8).unwrap();
+        let a = Problem::synthetic(d, 7).unwrap();
+        let b = Problem::synthetic(d, 7).unwrap();
+        assert_eq!(a.xr, b.xr);
+        assert_eq!(a.y, b.y);
+        let c = Problem::synthetic(d, 8).unwrap();
+        assert!(a.xr.max_abs_diff(&c.xr) > 0.0);
+    }
+
+    #[test]
+    fn synthetic_shapes_and_intercept() {
+        let d = Dims::new(40, 4, 6).unwrap();
+        let p = Problem::synthetic(d, 1).unwrap();
+        assert_eq!(p.m.rows(), 40);
+        assert_eq!(p.xl.cols(), 4);
+        assert_eq!(p.xr.cols(), 6);
+        assert_eq!(p.y.len(), 40);
+        for i in 0..40 {
+            assert_eq!(p.xl.get(i, 0), 1.0);
+        }
+    }
+
+    #[test]
+    fn genotypes_are_allele_counts() {
+        let d = Dims::new(60, 2, 5).unwrap();
+        let p = Problem::synthetic(d, 3).unwrap();
+        for v in p.xr.as_slice() {
+            assert!(*v == 0.0 || *v == 1.0 || *v == 2.0);
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! The S-loop (paper Listing 1.2 lines 11–15): per-SNP assembly and solve
+//! of the small `(p×p)` system, given the block solution `X̃_b = L^-1 X_b`.
+//!
+//! This is the CPU half of the paper's pipeline — it runs on block `b-1`
+//! while the accelerator solves the trsm of block `b`. Two entry points:
+//!
+//! * [`sloop_block`] — the pure-native version: computes the block
+//!   reductions itself (`G = X̃_L^T X̃_b` via gemm, `d_j = ‖x̃_j‖²`,
+//!   `rb = X̃_b^T ỹ`) then assembles + solves per SNP.
+//! * [`sloop_from_reductions`] — the offload-ablation version: the
+//!   reductions were already produced by the L1 `sloop` kernel on the
+//!   device; only the tiny per-SNP `posv`s remain.
+//!
+//! Both are allocation-free in the per-SNP loop ([`SloopScratch`]).
+
+use crate::error::{Error, Result};
+use crate::gwas::assoc::{inv_pp_from_factor, sigma2, stat_column, STAT_ROWS};
+use crate::gwas::preprocess::Preprocessed;
+use crate::linalg::{chol::posv_small, dot, gemm, sumsq, Matrix};
+
+/// Reusable scratch for the per-SNP loop: the assembled `p×p` system and
+/// its right-hand side.
+#[derive(Debug, Clone)]
+pub struct SloopScratch {
+    p: usize,
+    s: Vec<f64>,
+    rhs: Vec<f64>,
+}
+
+impl SloopScratch {
+    pub fn new(pl: usize) -> Self {
+        let p = pl + 1;
+        SloopScratch { p, s: vec![0.0; p * p], rhs: vec![0.0; p] }
+    }
+}
+
+/// Native S-loop over a solved block `xb_t = X̃_b` (n × mb). Appends one
+/// `p`-vector `r_i` per SNP column into `out` (column-major `p × mb`).
+pub fn sloop_block(pre: &Preprocessed, xb_t: &Matrix, scratch: &mut SloopScratch, out: &mut Matrix) -> Result<()> {
+    sloop_block_stats(pre, xb_t, scratch, out, None)
+}
+
+/// [`sloop_block`] plus optional association statistics: when `stats` is
+/// given (a `3 × mb` matrix), each column receives `[beta_snp, se, z]`
+/// (see [`crate::gwas::assoc`]).
+pub fn sloop_block_stats(
+    pre: &Preprocessed,
+    xb_t: &Matrix,
+    scratch: &mut SloopScratch,
+    out: &mut Matrix,
+    stats: Option<&mut Matrix>,
+) -> Result<()> {
+    let pl = pre.xl_t.cols();
+    let mb = xb_t.cols();
+    check_out(out, pl, mb)?;
+    if xb_t.rows() != pre.xl_t.rows() {
+        return Err(Error::shape(format!(
+            "sloop_block: X̃_b has {} rows, X̃_L has {}",
+            xb_t.rows(),
+            pre.xl_t.rows()
+        )));
+    }
+    // Block reductions (BLAS-3/1): G = X̃_L^T X̃_b  (pl × mb),
+    // d_j = ‖x̃_j‖², rb_j = x̃_j · ỹ.
+    let mut g = Matrix::zeros(pl, mb);
+    gemm(1.0, &pre.xl_t.transpose(), xb_t, 0.0, &mut g)?;
+    let mut d = vec![0.0; mb];
+    let mut rb = vec![0.0; mb];
+    for j in 0..mb {
+        let col = xb_t.col(j);
+        d[j] = sumsq(col);
+        rb[j] = dot(col, &pre.y_t);
+    }
+    solve_columns(pre, &g, &d, &rb, scratch, out, stats)
+}
+
+/// S-loop tail when the reductions `(G, d, rb)` come from the device
+/// (the fused L1 kernel): only assembly + the per-SNP `posv` runs here.
+pub fn sloop_from_reductions(
+    pre: &Preprocessed,
+    g: &Matrix,
+    d: &[f64],
+    rb: &[f64],
+    scratch: &mut SloopScratch,
+    out: &mut Matrix,
+) -> Result<()> {
+    let pl = pre.xl_t.cols();
+    let mb = d.len();
+    check_out(out, pl, mb)?;
+    if g.rows() != pl || g.cols() != mb || rb.len() != mb {
+        return Err(Error::shape(format!(
+            "sloop_from_reductions: G {}x{}, d {}, rb {}",
+            g.rows(),
+            g.cols(),
+            mb,
+            rb.len()
+        )));
+    }
+    solve_columns(pre, g, d, rb, scratch, out, None)
+}
+
+/// Shared per-SNP assembly + solve:
+///
+/// ```text
+/// S_i = | S_TL      g_i |      rhs_i = | r̃_T  |
+///       | g_i^T     d_i |              | rb_i |
+/// r_i = S_i^-1 rhs_i
+/// ```
+fn solve_columns(
+    pre: &Preprocessed,
+    g: &Matrix,
+    d: &[f64],
+    rb: &[f64],
+    scratch: &mut SloopScratch,
+    out: &mut Matrix,
+    mut stats: Option<&mut Matrix>,
+) -> Result<()> {
+    let pl = pre.stl.rows();
+    let p = pl + 1;
+    let n = pre.y_t.len();
+    debug_assert_eq!(scratch.p, p, "scratch built for wrong p");
+    if let Some(st) = stats.as_deref() {
+        if st.rows() != STAT_ROWS || st.cols() != d.len() {
+            return Err(Error::shape(format!(
+                "stats must be {STAT_ROWS}x{}, got {}x{}",
+                d.len(),
+                st.rows(),
+                st.cols()
+            )));
+        }
+    }
+    let mut rhs_orig = vec![0.0; p];
+    for j in 0..d.len() {
+        let s = &mut scratch.s;
+        // Top-left block: S_TL (symmetric).
+        for c in 0..pl {
+            for r in 0..pl {
+                s[c * p + r] = pre.stl.get(r, c);
+            }
+        }
+        // Border: g_j and d_j.
+        for r in 0..pl {
+            let v = g.get(r, j);
+            s[pl * p + r] = v; // last column
+            s[r * p + pl] = v; // last row
+        }
+        s[pl * p + pl] = d[j];
+        // RHS.
+        scratch.rhs[..pl].copy_from_slice(&pre.rtop);
+        scratch.rhs[pl] = rb[j];
+        rhs_orig.copy_from_slice(&scratch.rhs);
+        posv_small(s, &mut scratch.rhs, p)
+            .map_err(|e| Error::Numerical(format!("S-loop posv failed at column {j}: {e}")))?;
+        out.col_mut(j).copy_from_slice(&scratch.rhs);
+        if let Some(st) = stats.as_deref_mut() {
+            // `s` now holds the Cholesky factor of S_j (posv_small is
+            // in-place), so the extra statistics are nearly free.
+            let var_pp = inv_pp_from_factor(s, p);
+            let s2 = sigma2(pre.yty, &scratch.rhs, &rhs_orig, n, p)?;
+            let col = stat_column(scratch.rhs[pl], var_pp, s2);
+            st.col_mut(j).copy_from_slice(&col);
+        }
+    }
+    Ok(())
+}
+
+fn check_out(out: &Matrix, pl: usize, mb: usize) -> Result<()> {
+    if out.rows() != pl + 1 || out.cols() != mb {
+        return Err(Error::shape(format!(
+            "sloop out must be {}x{mb}, got {}x{}",
+            pl + 1,
+            out.rows(),
+            out.cols()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gwas::preprocess::preprocess;
+    use crate::gwas::problem::{Dims, Problem};
+    use crate::linalg::trsm_lower_left;
+
+    fn setup(n: usize, pl: usize, m: usize, seed: u64) -> (Problem, Preprocessed, Matrix) {
+        let prob = Problem::synthetic(Dims::new(n, pl, m).unwrap(), seed).unwrap();
+        let pre = preprocess(&prob.m, &prob.xl, &prob.y, 0).unwrap();
+        let mut xb_t = prob.xr.clone();
+        trsm_lower_left(&pre.l, &mut xb_t).unwrap();
+        (prob, pre, xb_t)
+    }
+
+    #[test]
+    fn sloop_matches_direct_gls() {
+        // Compare each r_i against a direct dense GLS solve built from the
+        // definition r_i = (X_i^T M^-1 X_i)^-1 X_i^T M^-1 y.
+        let (prob, pre, xb_t) = setup(24, 3, 5, 42);
+        let p = 4;
+        let mut out = Matrix::zeros(p, 5);
+        let mut scratch = SloopScratch::new(3);
+        sloop_block(&pre, &xb_t, &mut scratch, &mut out).unwrap();
+
+        for i in 0..5 {
+            let r_direct = direct_gls(&prob, i);
+            for k in 0..p {
+                assert!(
+                    (out.get(k, i) - r_direct[k]).abs() < 1e-7,
+                    "snp {i} comp {k}: {} vs {}",
+                    out.get(k, i),
+                    r_direct[k]
+                );
+            }
+        }
+    }
+
+    /// Direct dense solve from the definition (independent of our fast path).
+    fn direct_gls(prob: &Problem, i: usize) -> Vec<f64> {
+        use crate::linalg::{gemv_t, posv, trsv_lower};
+        let n = prob.dims.n;
+        let pl = prob.dims.pl;
+        let p = pl + 1;
+        // X_i = [X_L | xr_i], Ã = L^-1 X_i, ỹ = L^-1 y
+        let l = crate::linalg::potrf(&prob.m).unwrap();
+        let mut a = Matrix::zeros(n, p);
+        for j in 0..pl {
+            a.col_mut(j).copy_from_slice(prob.xl.col(j));
+        }
+        a.col_mut(pl).copy_from_slice(prob.xr.col(i));
+        trsm_lower_left(&l, &mut a).unwrap();
+        let mut yt = prob.y.clone();
+        trsv_lower(&l, &mut yt).unwrap();
+        let s = crate::linalg::syrk_t(&a);
+        let mut rhs = gemv_t(&a, &yt).unwrap();
+        posv(&s, &mut rhs).unwrap();
+        rhs
+    }
+
+    #[test]
+    fn reductions_path_matches_native_path() {
+        let (_, pre, xb_t) = setup(20, 2, 6, 7);
+        let pl = 2;
+        let mb = 6;
+        let mut out_native = Matrix::zeros(pl + 1, mb);
+        let mut scratch = SloopScratch::new(pl);
+        sloop_block(&pre, &xb_t, &mut scratch, &mut out_native).unwrap();
+
+        // Build reductions "as the device would".
+        let mut g = Matrix::zeros(pl, mb);
+        gemm(1.0, &pre.xl_t.transpose(), &xb_t, 0.0, &mut g).unwrap();
+        let d: Vec<f64> = (0..mb).map(|j| sumsq(xb_t.col(j))).collect();
+        let rb: Vec<f64> = (0..mb).map(|j| dot(xb_t.col(j), &pre.y_t)).collect();
+        let mut out_red = Matrix::zeros(pl + 1, mb);
+        sloop_from_reductions(&pre, &g, &d, &rb, &mut scratch, &mut out_red).unwrap();
+        assert!(out_native.max_abs_diff(&out_red) < 1e-12);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let (_, pre, xb_t) = setup(20, 2, 3, 9);
+        let mut scratch = SloopScratch::new(2);
+        let mut bad_out = Matrix::zeros(2, 3); // should be 3x3
+        assert!(sloop_block(&pre, &xb_t, &mut scratch, &mut bad_out).is_err());
+        let mut out = Matrix::zeros(3, 3);
+        let bad_g = Matrix::zeros(1, 3);
+        assert!(sloop_from_reductions(&pre, &bad_g, &[0.0; 3], &[0.0; 3], &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn empty_block_is_ok() {
+        let (_, pre, _) = setup(20, 2, 3, 9);
+        let xb_t = Matrix::zeros(20, 0);
+        let mut out = Matrix::zeros(3, 0);
+        let mut scratch = SloopScratch::new(2);
+        sloop_block(&pre, &xb_t, &mut scratch, &mut out).unwrap();
+    }
+}

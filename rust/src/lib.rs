@@ -1,0 +1,51 @@
+//! # cuGWAS-rs
+//!
+//! A reproduction of *"Streaming Data from HDD to GPUs for Sustained Peak
+//! Performance"* (Beyer & Bientinesi, 2013): out-of-core generalized
+//! least-squares solves for genome-wide association studies, streamed from
+//! disk through a triple-buffered host ring into double-buffered
+//! accelerator lanes, with the dependent S-loop pipelined one block behind.
+//!
+//! The crate is organized in three layers:
+//!
+//! * **Layer 3 (this crate)** — the streaming coordinator, storage engine,
+//!   baselines and benchmark harness, in pure rust (std only + the `xla`
+//!   PJRT bindings).
+//! * **Layer 2 (build time)** — the JAX compute graphs in
+//!   `python/compile/model.py`, AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 1 (build time)** — the Pallas kernels (`trsm`, fused S-loop
+//!   reduction) in `python/compile/kernels/`.
+//!
+//! Python never runs at request time: the rust binary loads the AOT HLO
+//! through PJRT (`runtime`) and owns the entire hot path.
+//!
+//! ## Quick tour
+//!
+//! * [`linalg`] — from-scratch dense f64 BLAS/LAPACK subset.
+//! * [`gwas`] — the GLS problem, native preprocessing and the in-core
+//!   oracle (paper Listing 1.1).
+//! * [`storage`] — the XRD on-disk block format and the async I/O engine.
+//! * [`runtime`] — PJRT artifact loading and typed execution.
+//! * [`devsim`] — discrete-event simulator with the paper's hardware
+//!   constants (Quadro 6000 / Tesla S2050 clusters).
+//! * [`coordinator`] — the paper's contribution: the multibuffered
+//!   streaming pipeline (Listing 1.3).
+//! * [`baselines`] — naive offload (Fig. 3), OOC-HP-GWAS (Listing 1.2),
+//!   and a ProbABEL-like per-SNP solver.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod devsim;
+pub mod error;
+pub mod gwas;
+pub mod linalg;
+pub mod proptest;
+pub mod runtime;
+pub mod stats;
+pub mod storage;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,129 @@
+//! BLAS-2: matrix-vector kernels. `trsv` (preprocessing of `y`) and the
+//! `gemv`s of the S-loop live here.
+
+use super::blas1::{axpy, dot};
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// `y = A x` (no transpose). Column-sweep formulation: each column of `A`
+/// is contiguous, so the inner loop is an `axpy` over a unit-stride slice.
+pub fn gemv_n(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    if a.cols() != x.len() {
+        return Err(Error::shape(format!("gemv_n: A is {}x{}, x has {}", a.rows(), a.cols(), x.len())));
+    }
+    let mut y = vec![0.0; a.rows()];
+    for (j, &xj) in x.iter().enumerate() {
+        if xj != 0.0 {
+            axpy(xj, a.col(j), &mut y);
+        }
+    }
+    Ok(y)
+}
+
+/// `y = A^T x`. Row of `A^T` = column of `A` ⇒ each output element is a
+/// unit-stride `dot`.
+pub fn gemv_t(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    if a.rows() != x.len() {
+        return Err(Error::shape(format!("gemv_t: A is {}x{}, x has {}", a.rows(), a.cols(), x.len())));
+    }
+    Ok((0..a.cols()).map(|j| dot(a.col(j), x)).collect())
+}
+
+/// Solve `L z = b` in place for lower-triangular `L` (the paper's `trsv`).
+/// Forward substitution, column-oriented so updates stream through
+/// contiguous memory.
+pub fn trsv_lower(l: &Matrix, b: &mut [f64]) -> Result<()> {
+    let n = l.rows();
+    if l.cols() != n || b.len() != n {
+        return Err(Error::shape(format!("trsv_lower: L is {}x{}, b has {}", l.rows(), l.cols(), b.len())));
+    }
+    for j in 0..n {
+        let ljj = l.get(j, j);
+        if ljj == 0.0 {
+            return Err(Error::Numerical(format!("trsv: zero diagonal at {j}")));
+        }
+        b[j] /= ljj;
+        let bj = b[j];
+        let col = l.col(j);
+        // b[j+1..] -= bj * L[j+1.., j]
+        for i in j + 1..n {
+            b[i] -= bj * col[i];
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn gemv_n_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let y = gemv_n(&a, &[1.0, -1.0]).unwrap();
+        assert_eq!(y, vec![-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn gemv_t_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let y = gemv_t(&a, &[1.0, 1.0]).unwrap();
+        assert_eq!(y, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn gemv_shape_errors() {
+        let a = Matrix::zeros(3, 2);
+        assert!(gemv_n(&a, &[0.0; 3]).is_err());
+        assert!(gemv_t(&a, &[0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn gemv_t_is_transpose_of_gemv_n() {
+        let mut rng = XorShift::new(5);
+        let a = Matrix::randn(7, 4, &mut rng);
+        let x: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let direct = gemv_t(&a, &x).unwrap();
+        let via_t = gemv_n(&a.transpose(), &x).unwrap();
+        for (d, v) in direct.iter().zip(&via_t) {
+            assert!((d - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trsv_solves_lower_system() {
+        // L = [[2,0],[1,3]], b = [4, 7] → z = [2, 5/3]
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let mut b = vec![4.0, 7.0];
+        trsv_lower(&l, &mut b).unwrap();
+        assert!((b[0] - 2.0).abs() < 1e-15);
+        assert!((b[1] - 5.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn trsv_residual_random() {
+        let mut rng = XorShift::new(9);
+        let n = 32;
+        // Well-conditioned lower-triangular matrix.
+        let mut l = Matrix::randn(n, n, &mut rng).tril();
+        for i in 0..n {
+            l.set(i, i, 2.0 + l.get(i, i).abs());
+        }
+        let b0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut z = b0.clone();
+        trsv_lower(&l, &mut z).unwrap();
+        // Check L z == b0.
+        let lz = gemv_n(&l, &z).unwrap();
+        for (a, b) in lz.iter().zip(&b0) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn trsv_zero_diag_is_error() {
+        let l = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        let mut b = vec![1.0, 1.0];
+        assert!(trsv_lower(&l, &mut b).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Column-major dense `f64` matrix.
+//!
+//! One SNP block on disk is exactly the byte image of one of these (n rows
+//! = samples, columns = SNPs), so the storage layer reads straight into a
+//! `Matrix` buffer with no transposition.
+
+use crate::error::{Error, Result};
+use crate::util::XorShift;
+use std::fmt;
+
+/// Dense column-major matrix. Row index varies fastest in memory.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zeros `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity `n × n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Wrap an existing column-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "from_vec: buffer has {} elements, expected {rows}x{cols}={}",
+                data.len(),
+                rows * cols
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a row-major slice-of-rows literal (tests/readability).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    /// Random i.i.d. standard-normal entries (deterministic under `rng`).
+    pub fn randn(rows: usize, cols: usize, rng: &mut XorShift) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// A random symmetric positive-definite matrix: `A A^T / cols + diag`.
+    /// Used for synthetic kinship matrices `M`.
+    pub fn rand_spd(n: usize, diag_boost: f64, rng: &mut XorShift) -> Self {
+        let a = Matrix::randn(n, n, rng);
+        let mut m = Matrix::zeros(n, n);
+        // m = a a^T / n  (small n only; fine for generation)
+        for j in 0..n {
+            for i in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a.get(i, k) * a.get(j, k);
+                }
+                m.set(i, j, s / n as f64);
+            }
+        }
+        for i in 0..n {
+            *m.get_mut(i, i) += diag_boost;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element access (column-major).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        *self.get_mut(i, j) = v;
+    }
+
+    /// Borrow column `j` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Full backing buffer (column-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Copy columns `[j0, j1)` into a new matrix.
+    pub fn slice_cols(&self, j0: usize, j1: usize) -> Matrix {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        Matrix {
+            rows: self.rows,
+            cols: j1 - j0,
+            data: self.data[j0 * self.rows..j1 * self.rows].to_vec(),
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Max-abs elementwise difference; `inf` on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        if self.rows != other.rows || self.cols != other.cols {
+            return f64::INFINITY;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Lower-triangular copy (zeroes strictly-upper part). Used to
+    /// normalize `potrf` output for comparisons.
+    pub fn tril(&self) -> Matrix {
+        let mut m = self.clone();
+        for j in 0..m.cols {
+            for i in 0..j.min(m.rows) {
+                m.set(i, j, 0.0);
+            }
+        }
+        m
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>10.4} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if cmax < self.cols { "…" } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_eye() {
+        let z = Matrix::zeros(3, 2);
+        assert_eq!(z.rows(), 3);
+        assert_eq!(z.cols(), 2);
+        assert!(z.as_slice().iter().all(|&v| v == 0.0));
+        let i = Matrix::eye(3);
+        assert_eq!(i.get(1, 1), 1.0);
+        assert_eq!(i.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn column_major_layout() {
+        // [[1,3],[2,4]] stored as [1,2,3,4]
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.get(1, 1), 4.0);
+        assert_eq!(m.col(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(Matrix::from_vec(2, 2, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn from_rows_matches_get() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.get(0, 1), 2.0);
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = XorShift::new(3);
+        let m = Matrix::randn(5, 3, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(2, 4), m.get(4, 2));
+    }
+
+    #[test]
+    fn slice_cols_takes_contiguous_block() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let s = m.slice_cols(1, 3);
+        assert_eq!(s.cols(), 2);
+        assert_eq!(s.get(0, 0), 2.0);
+        assert_eq!(s.get(1, 1), 6.0);
+    }
+
+    #[test]
+    fn spd_matrix_is_symmetric_with_big_diag() {
+        let mut rng = XorShift::new(7);
+        let m = Matrix::rand_spd(16, 4.0, &mut rng);
+        for i in 0..16 {
+            assert!(m.get(i, i) >= 4.0 - 1e-9);
+            for j in 0..16 {
+                assert!((m.get(i, j) - m.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn max_abs_diff_shape_mismatch_is_inf() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(2, 3);
+        assert_eq!(a.max_abs_diff(&b), f64::INFINITY);
+    }
+
+    #[test]
+    fn tril_zeroes_upper() {
+        let m = Matrix::from_rows(&[&[1.0, 9.0], &[2.0, 3.0]]);
+        let t = m.tril();
+        assert_eq!(t.get(0, 1), 0.0);
+        assert_eq!(t.get(1, 0), 2.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! From-scratch dense linear algebra over `f64`, column-major.
+//!
+//! This is the substrate OOC-HP-GWAS (the paper's baseline, Listing 1.2)
+//! and the native S-loop run on. It is a deliberately small BLAS/LAPACK
+//! subset — exactly the calls the paper's listings name:
+//!
+//! | paper call | here |
+//! |------------|------|
+//! | `potrf`    | [`chol::potrf`] |
+//! | `trsm`     | [`blas3::trsm_lower_left`] |
+//! | `trsv`     | [`blas2::trsv_lower`] |
+//! | `gemv`     | [`blas2::gemv_t`] / [`blas2::gemv_n`] |
+//! | `gemm`     | [`blas3::gemm`] |
+//! | `syrk`     | [`blas3::syrk_t`] |
+//! | `dot`      | [`blas1::dot`] |
+//! | `posv`     | [`chol::posv`] |
+//!
+//! Layout is column-major (BLAS convention, and the layout of blocks of
+//! `X_R` on disk: one SNP = one contiguous column). The BLAS-3 kernels are
+//! register-blocked and cache-tiled; see `blas3.rs` for the micro-kernel
+//! notes and `EXPERIMENTS.md` §Perf for measured rates.
+
+pub mod blas1;
+pub mod blas2;
+pub mod blas3;
+pub mod chol;
+pub mod matrix;
+
+pub use blas1::{axpy, dot, nrm2, sumsq};
+pub use blas2::{gemv_n, gemv_t, trsv_lower};
+pub use blas3::{gemm, syrk_t, trsm_lower_left};
+pub use chol::{posv, potrf, potrf_invert_diag_blocks};
+pub use matrix::Matrix;

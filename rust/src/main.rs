@@ -1,0 +1,497 @@
+//! `cugwas` — the Layer-3 coordinator CLI.
+//!
+//! ```text
+//! cugwas gen-data  --dir data/s1 --n 512 --m 4096          # synthesize a study
+//! cugwas run       --dataset data/s1 --block 256 --backend pjrt
+//! cugwas baseline  --dataset data/s1 --algo ooc            # OOC-HP-GWAS / naive / probabel
+//! cugwas sim       --algo cugwas --m 1000000 --ngpus 4     # paper-scale DES
+//! cugwas catalog                                           # Fig. 1 data
+//! cugwas artifacts                                         # list AOT artifacts
+//! cugwas verify    --dataset data/s1                       # r.xrd vs in-core oracle
+//! ```
+
+use cugwas::baselines::{run_naive, run_ooc_cpu, run_probabel};
+use cugwas::cli::{usage, Args, Flag};
+use cugwas::coordinator::{self, BackendKind, OffloadMode, PipelineConfig};
+use cugwas::devsim::{simulate, Algo, HardwareProfile, SimConfig};
+use cugwas::error::{Error, Result};
+use cugwas::gwas::problem::Dims;
+use cugwas::runtime::Manifest;
+use cugwas::stats::{summarize_by_year, synthesize_catalog};
+use cugwas::storage::{self, Throttle};
+use cugwas::util::{human_bytes, human_duration};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+use std::time::Duration;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_global_usage();
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "gen-data" => cmd_gen_data(rest),
+        "inspect" => cmd_inspect(rest),
+        "run" => cmd_run(rest),
+        "baseline" => cmd_baseline(rest),
+        "sim" => cmd_sim(rest),
+        "assoc" => cmd_assoc(rest),
+        "catalog" => cmd_catalog(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "verify" => cmd_verify(rest),
+        "help" | "--help" | "-h" => {
+            print_global_usage();
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown subcommand '{other}' (try `cugwas help`)"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_global_usage() {
+    eprintln!(
+        "cugwas — streaming GLS solves from disk through buffered accelerator lanes\n\
+         (reproduction of Beyer & Bientinesi 2013)\n\n\
+         subcommands:\n\
+         \x20 gen-data    synthesize a study dataset on disk\n\
+         \x20 inspect     describe a dataset directory\n\
+         \x20 run         stream a study through the cuGWAS pipeline\n\
+         \x20 baseline    run a comparison solver (ooc | naive | probabel)\n\
+         \x20 assoc       association statistics (beta, se, z) per SNP\n\
+         \x20 sim         discrete-event simulation at paper scale\n\
+         \x20 catalog     Fig. 1 catalog statistics\n\
+         \x20 artifacts   list available AOT artifacts\n\
+         \x20 verify      compare r.xrd against the in-core oracle\n\n\
+         `cugwas <subcommand> --help` shows per-command flags."
+    );
+}
+
+fn wants_help(argv: &[String]) -> bool {
+    argv.iter().any(|a| a == "--help" || a == "-h")
+}
+
+// ---------------------------------------------------------------- gen-data
+
+const GEN_FLAGS: &[Flag] = &[
+    Flag::req("dir", "output dataset directory"),
+    Flag::opt("n", "512", "samples (individuals)"),
+    Flag::opt("pl", "3", "fixed covariates (p = pl + 1)"),
+    Flag::opt("m", "4096", "SNP count"),
+    Flag::opt("block", "256", "file chunk size (columns)"),
+    Flag::opt("seed", "42", "RNG seed"),
+    Flag::opt("dtype", "f64", "X_R storage type: f64 | f32 (half the disk)"),
+];
+
+fn cmd_gen_data(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("gen-data", "synthesize a study dataset", GEN_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, GEN_FLAGS)?;
+    let dims = Dims::new(a.usize("n")?, a.usize("pl")?, a.usize("m")?)?;
+    let dir = PathBuf::from(a.str("dir"));
+    let dtype = match a.str("dtype") {
+        "f64" => storage::Dtype::F64,
+        "f32" => storage::Dtype::F32,
+        other => return Err(Error::Config(format!("unknown dtype '{other}'"))),
+    };
+    let meta =
+        storage::generate_with_dtype(&dir, dims, a.usize("block")?, a.u64("seed")?, dtype)?;
+    println!(
+        "wrote dataset to {} (n={}, pl={}, m={}, X_R = {} as {})",
+        dir.display(),
+        meta.dims.n,
+        meta.dims.pl,
+        meta.dims.m,
+        human_bytes(meta.dims.xr_bytes() / (8 / dtype.bytes())),
+        dtype.as_str()
+    );
+    Ok(())
+}
+
+// ----------------------------------------------------------------- inspect
+
+const INSPECT_FLAGS: &[Flag] = &[Flag::req("dataset", "dataset directory")];
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("inspect", "describe a dataset directory", INSPECT_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, INSPECT_FLAGS)?;
+    let dir = PathBuf::from(a.str("dataset"));
+    let (meta, kin, xl, y) = storage::load_sidecars(&dir)?;
+    println!("dataset {}:", dir.display());
+    println!("  n={} pl={} m={} (p={})", meta.dims.n, meta.dims.pl, meta.dims.m, meta.dims.p());
+    println!("  seed={} file-chunk={}", meta.seed, meta.block);
+    println!("  kinship: {}x{}, covariates: {}x{}, phenotype: {}",
+        kin.rows(), kin.cols(), xl.rows(), xl.cols(), y.len());
+    for (name, path) in [("xr", dir.join("xr.xrd")), ("r", dir.join("r.xrd"))] {
+        match storage::XrdFile::open(&path) {
+            Ok(f) => {
+                let h = f.header();
+                println!(
+                    "  {name}.xrd: {}x{} {} blocks of {} ({} on disk, dtype {})",
+                    h.rows,
+                    h.cols,
+                    h.block_count(),
+                    h.block_cols,
+                    human_bytes(h.file_bytes()),
+                    h.dtype.as_str()
+                );
+            }
+            Err(e) => println!("  {name}.xrd: unavailable ({e})"),
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------- run
+
+const RUN_FLAGS: &[Flag] = &[
+    Flag::req("dataset", "dataset directory"),
+    Flag::opt("block", "256", "SNP columns per pipeline iteration"),
+    Flag::opt("ngpus", "1", "device lanes"),
+    Flag::opt("host-buffers", "3", "host ring size (paper: 3)"),
+    Flag::opt("mode", "trsm", "offload mode: trsm | block | blockfull"),
+    Flag::opt("backend", "native", "native | pjrt"),
+    Flag::opt("artifacts", "artifacts", "AOT artifacts directory (pjrt)"),
+    Flag::opt("read-mbps", "0", "throttle reads to emulate slower storage (0 = off)"),
+    Flag::opt("write-mbps", "0", "throttle writes (0 = off)"),
+    Flag::switch("resume", "skip blocks journaled in r.progress (crash recovery)"),
+    Flag::switch("verify", "check r.xrd against the in-core oracle (small studies)"),
+];
+
+fn parse_mode(s: &str) -> Result<OffloadMode> {
+    match s {
+        "trsm" => Ok(OffloadMode::Trsm),
+        "block" => Ok(OffloadMode::Block),
+        "blockfull" => Ok(OffloadMode::BlockFull),
+        other => Err(Error::Config(format!("unknown mode '{other}'"))),
+    }
+}
+
+fn parse_backend(a: &Args) -> Result<BackendKind> {
+    match a.str("backend") {
+        "native" => Ok(BackendKind::Native),
+        "pjrt" => Ok(BackendKind::Pjrt { artifacts: PathBuf::from(a.str("artifacts")) }),
+        other => Err(Error::Config(format!("unknown backend '{other}'"))),
+    }
+}
+
+fn parse_throttle(a: &Args, flag: &str) -> Result<Option<Throttle>> {
+    let mbps = a.f64(flag)?;
+    Ok(if mbps > 0.0 { Some(Throttle { bytes_per_sec: mbps * 1e6 }) } else { None })
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("run", "stream a study through the cuGWAS pipeline", RUN_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, RUN_FLAGS)?;
+    let cfg = PipelineConfig {
+        dataset: PathBuf::from(a.str("dataset")),
+        block: a.usize("block")?,
+        ngpus: a.usize("ngpus")?,
+        host_buffers: a.usize("host-buffers")?,
+        mode: parse_mode(a.str("mode"))?,
+        backend: parse_backend(&a)?,
+        read_throttle: parse_throttle(&a, "read-mbps")?,
+        write_throttle: parse_throttle(&a, "write-mbps")?,
+        resume: a.switch("resume"),
+    };
+    let report = coordinator::run(&cfg)?;
+    println!(
+        "cuGWAS: {} SNPs in {} blocks — {} ({:.0} SNPs/s, device busy {})",
+        report.snps,
+        report.blocks,
+        human_duration(Duration::from_secs_f64(report.wall_secs)),
+        report.snps_per_sec,
+        human_duration(Duration::from_secs_f64(report.device_secs)),
+    );
+    print!("{}", report.metrics.table(Duration::from_secs_f64(report.wall_secs)));
+    if a.switch("verify") {
+        let diff = coordinator::verify_against_oracle(Path::new(a.str("dataset")), 1e-7)?;
+        println!("verified against in-core oracle: max |Δ| = {diff:.2e}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- baseline
+
+const BASE_FLAGS: &[Flag] = &[
+    Flag::req("dataset", "dataset directory"),
+    Flag::opt("algo", "ooc", "ooc | naive | probabel"),
+    Flag::opt("block", "256", "block size (ooc / naive)"),
+    Flag::opt("backend", "native", "naive backend: native | pjrt"),
+    Flag::opt("artifacts", "artifacts", "AOT artifacts directory"),
+    Flag::opt("read-mbps", "0", "read throttle (0 = off)"),
+    Flag::switch("verify", "check results against the in-core oracle"),
+];
+
+fn cmd_baseline(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("baseline", "run a comparison solver", BASE_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, BASE_FLAGS)?;
+    let dataset = PathBuf::from(a.str("dataset"));
+    let throttle = parse_throttle(&a, "read-mbps")?;
+    let (name, wall, snps_per_sec) = match a.str("algo") {
+        "ooc" => {
+            let r = run_ooc_cpu(&dataset, a.usize("block")?, throttle)?;
+            ("OOC-HP-GWAS (CPU)", r.wall_secs, r.snps_per_sec)
+        }
+        "naive" => {
+            let r = run_naive(&dataset, a.usize("block")?, &parse_backend(&a)?, throttle)?;
+            ("naive offload", r.wall_secs, r.snps_per_sec)
+        }
+        "probabel" => {
+            let r = run_probabel(&dataset)?;
+            ("ProbABEL-like per-SNP", r.wall_secs, r.snps_per_sec)
+        }
+        other => return Err(Error::Config(format!("unknown algo '{other}'"))),
+    };
+    println!(
+        "{name}: {} ({snps_per_sec:.0} SNPs/s)",
+        human_duration(Duration::from_secs_f64(wall))
+    );
+    if a.switch("verify") {
+        let diff = coordinator::verify_against_oracle(&dataset, 1e-6)?;
+        println!("verified against in-core oracle: max |Δ| = {diff:.2e}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- assoc
+
+const ASSOC_FLAGS: &[Flag] = &[
+    Flag::req("dataset", "dataset directory"),
+    Flag::opt("block", "256", "SNP columns per streaming step"),
+    Flag::opt("top", "10", "print the K most significant SNPs"),
+];
+
+/// Stream the study once, computing per-SNP association statistics
+/// (beta, se, z) alongside the estimates; writes `stats.xrd` (3×m) and
+/// prints the top-K SNPs by |z| — the end product a study reports.
+fn cmd_assoc(argv: &[String]) -> Result<()> {
+    use cugwas::gwas::assoc::STAT_ROWS;
+    use cugwas::gwas::{preprocess, sloop_block_stats, SloopScratch};
+    use cugwas::linalg::{trsm_lower_left, Matrix};
+    use cugwas::storage::{dataset::DatasetPaths, Header, XrdFile};
+
+    if wants_help(argv) {
+        print!("{}", usage("assoc", "per-SNP association statistics", ASSOC_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, ASSOC_FLAGS)?;
+    let dir = PathBuf::from(a.str("dataset"));
+    let block = a.usize("block")?;
+    let (meta, kin, xl, y) = storage::load_sidecars(&dir)?;
+    let dims = meta.dims;
+    let pre = preprocess(&kin, &xl, &y, 0)?;
+    let paths = DatasetPaths::new(&dir);
+    let xr = XrdFile::open(&paths.xr())?;
+    let stats_path = dir.join("stats.xrd");
+    let sh = Header::new(STAT_ROWS as u64, dims.m as u64, block.min(dims.m) as u64, meta.seed)?;
+    let sfile = XrdFile::create(&stats_path, sh)?;
+
+    let mut scratch = SloopScratch::new(dims.pl);
+    let mut top: Vec<(f64, usize, f64, f64)> = Vec::new(); // (|z|, snp, beta, se)
+    let k = a.usize("top")?;
+    let mut c0 = 0usize;
+    while c0 < dims.m {
+        let live = block.min(dims.m - c0);
+        let mut buf = vec![0.0; dims.n * live];
+        xr.read_cols_into(c0 as u64, live as u64, &mut buf)?;
+        let mut xb = Matrix::from_vec(dims.n, live, buf)?;
+        trsm_lower_left(&pre.l, &mut xb)?;
+        let mut r = Matrix::zeros(dims.p(), live);
+        let mut st = Matrix::zeros(STAT_ROWS, live);
+        sloop_block_stats(&pre, &xb, &mut scratch, &mut r, Some(&mut st))?;
+        sfile.write_cols(c0 as u64, live as u64, st.as_slice())?;
+        for j in 0..live {
+            top.push((st.get(2, j).abs(), c0 + j, st.get(0, j), st.get(1, j)));
+        }
+        top.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap_or(std::cmp::Ordering::Equal));
+        top.truncate(k.max(1));
+        c0 += live;
+    }
+    sfile.sync()?;
+    println!("wrote per-SNP statistics to {} (3×{})", stats_path.display(), dims.m);
+    println!("{:>8}{:>12}{:>12}{:>10}", "snp", "beta", "se", "|z|");
+    for (absz, snp, beta, se) in &top {
+        println!("{snp:>8}{beta:>12.4}{se:>12.4}{absz:>10.2}");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------- sim
+
+const SIM_FLAGS: &[Flag] = &[
+    Flag::opt("algo", "cugwas", "cugwas | ooc | naive | probabel"),
+    Flag::opt("profile", "quadro", "hardware profile: quadro | tesla | hdd"),
+    Flag::opt("n", "10000", "samples"),
+    Flag::opt("pl", "3", "fixed covariates"),
+    Flag::opt("m", "1000000", "SNP count"),
+    Flag::opt("block", "5000", "SNP columns per iteration"),
+    Flag::opt("ngpus", "1", "GPUs"),
+    Flag::opt("host-buffers", "3", "host buffers"),
+    Flag::opt("timeline", "", "write the task timeline as CSV to this path"),
+];
+
+fn parse_profile(s: &str) -> Result<HardwareProfile> {
+    match s {
+        "quadro" => Ok(HardwareProfile::quadro()),
+        "tesla" => Ok(HardwareProfile::tesla()),
+        "hdd" => Ok(HardwareProfile::hdd()),
+        other => Err(Error::Config(format!("unknown profile '{other}'"))),
+    }
+}
+
+fn cmd_sim(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("sim", "paper-scale discrete-event simulation", SIM_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, SIM_FLAGS)?;
+    let algo = match a.str("algo") {
+        "cugwas" => Algo::CuGwas,
+        "ooc" => Algo::OocCpu,
+        "naive" => Algo::NaiveGpu,
+        "probabel" => Algo::Probabel,
+        other => return Err(Error::Config(format!("unknown algo '{other}'"))),
+    };
+    let cfg = SimConfig {
+        dims: Dims::new(a.usize("n")?, a.usize("pl")?, a.usize("m")?)?,
+        block: a.usize("block")?,
+        ngpus: a.usize("ngpus")?,
+        host_buffers: a.usize("host-buffers")?,
+        profile: parse_profile(a.str("profile"))?,
+    };
+    let rep = simulate(algo, &cfg)?;
+    println!(
+        "{} on '{}': {} for m={} (n={}, block={}, {} GPUs)",
+        rep.algo.as_str(),
+        cfg.profile.name,
+        human_duration(Duration::from_secs_f64(rep.total_secs)),
+        cfg.dims.m,
+        cfg.dims.n,
+        cfg.block,
+        cfg.ngpus
+    );
+    println!(
+        "  throughput {:.0} SNPs/s | util: gpu {:.0}% cpu {:.0}% pcie {:.0}% disk {:.0}%",
+        rep.snps_per_sec,
+        rep.gpu_util * 100.0,
+        rep.cpu_util * 100.0,
+        rep.pcie_util * 100.0,
+        rep.disk_util * 100.0
+    );
+    for (phase, busy) in &rep.phase_busy {
+        println!("  {phase:<8} {}", human_duration(Duration::from_secs_f64(*busy)));
+    }
+    let timeline_path = a.str("timeline");
+    if !timeline_path.is_empty() {
+        let mut csv = String::from("label,resource,start,finish\n");
+        for iv in &rep.timeline.intervals {
+            csv.push_str(&format!("{},{},{:.6},{:.6}\n", iv.label, iv.resource, iv.start, iv.finish));
+        }
+        std::fs::write(timeline_path, csv)
+            .map_err(|e| Error::io(format!("writing {timeline_path}"), e))?;
+        println!("wrote timeline CSV to {timeline_path} ({} tasks)", rep.timeline.intervals.len());
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- catalog
+
+const CATALOG_FLAGS: &[Flag] = &[Flag::opt("seed", "2013", "catalog RNG seed")];
+
+fn cmd_catalog(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("catalog", "Fig. 1 GWAS-catalog statistics", CATALOG_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, CATALOG_FLAGS)?;
+    let rows = synthesize_catalog(a.u64("seed")?);
+    println!(
+        "{:<6}{:>9}{:>14}{:>14}{:>14}{:>12}{:>12}{:>12}",
+        "year", "studies", "snps_q1", "snps_med", "snps_q3", "n_q1", "n_med", "n_q3"
+    );
+    for s in summarize_by_year(&rows) {
+        println!(
+            "{:<6}{:>9}{:>14.0}{:>14.0}{:>14.0}{:>12.0}{:>12.0}{:>12.0}",
+            s.year,
+            s.studies,
+            s.snp_count.q1,
+            s.snp_count.median,
+            s.snp_count.q3,
+            s.sample_size.q1,
+            s.sample_size.median,
+            s.sample_size.q3
+        );
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- artifacts
+
+const ART_FLAGS: &[Flag] = &[Flag::opt("artifacts", "artifacts", "artifacts directory")];
+
+fn cmd_artifacts(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("artifacts", "list available AOT artifacts", ART_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, ART_FLAGS)?;
+    let dir = PathBuf::from(a.str("artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    println!("{:<12}{:>8}{:>6}{:>8}{:>6}{:>6}  file", "kind", "n", "pl", "mb", "nb", "bm");
+    for kind in [
+        cugwas::runtime::Kind::Preprocess,
+        cugwas::runtime::Kind::Trsm,
+        cugwas::runtime::Kind::Block,
+        cugwas::runtime::Kind::BlockFull,
+    ] {
+        for e in manifest.of_kind(kind) {
+            println!(
+                "{:<12}{:>8}{:>6}{:>8}{:>6}{:>6}  {}",
+                e.key.kind.as_str(),
+                e.key.n,
+                e.key.pl,
+                e.key.mb,
+                e.nb,
+                e.bm,
+                e.path.file_name().and_then(|s| s.to_str()).unwrap_or("?")
+            );
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ verify
+
+const VERIFY_FLAGS: &[Flag] = &[
+    Flag::req("dataset", "dataset directory (with r.xrd present)"),
+    Flag::opt("tol", "1e-7", "max |Δ| tolerance"),
+];
+
+fn cmd_verify(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        print!("{}", usage("verify", "compare r.xrd against the in-core oracle", VERIFY_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, VERIFY_FLAGS)?;
+    let diff = coordinator::verify_against_oracle(Path::new(a.str("dataset")), a.f64("tol")?)?;
+    println!("OK: max |Δ| = {diff:.2e}");
+    Ok(())
+}

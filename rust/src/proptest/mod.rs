@@ -1,0 +1,218 @@
+//! A miniature property-testing framework (the `proptest` crate is
+//! unavailable offline — see DESIGN.md §4).
+//!
+//! Provides what the coordinator invariants need: seeded generators,
+//! `forall`-style runners with iteration counts, and greedy input
+//! shrinking on failure. Deterministic: failures print the seed and the
+//! shrunk case so they replay exactly.
+
+use crate::util::XorShift;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Convenience assertion for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Seeded input generator handed to property bodies.
+pub struct Gen {
+    rng: XorShift,
+    /// Log of generated scalars, used for shrinking replay.
+    log: Vec<u64>,
+    /// When replaying a shrink candidate: predetermined values.
+    replay: Option<Vec<u64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: XorShift::new(seed), log: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn replaying(values: Vec<u64>, seed: u64) -> Self {
+        Gen { rng: XorShift::new(seed), log: Vec::new(), replay: Some(values), cursor: 0 }
+    }
+
+    fn next_raw(&mut self, fresh: impl FnOnce(&mut XorShift) -> u64) -> u64 {
+        let v = match &self.replay {
+            Some(vals) if self.cursor < vals.len() => vals[self.cursor],
+            _ => fresh(&mut self.rng),
+        };
+        self.cursor += 1;
+        self.log.push(v);
+        v
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        let raw = self.next_raw(|r| r.below(span));
+        lo + (raw % span) as usize
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.next_raw(|r| r.next_u64())
+    }
+
+    /// Boolean with probability `p` of true.
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        let raw = self.next_raw(|r| r.below(1 << 32));
+        (raw as f64 / (1u64 << 32) as f64) < p
+    }
+
+    /// f64 in `[lo, hi)` with 2^32 grain (replayable/shrinkable).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let raw = self.next_raw(|r| r.below(1 << 32));
+        lo + (hi - lo) * (raw as f64 / (1u64 << 32) as f64)
+    }
+
+    /// Pick one of the provided options.
+    pub fn choose<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        assert!(!options.is_empty());
+        let i = self.usize_in(0, options.len() - 1);
+        &options[i]
+    }
+}
+
+/// Run `prop` for `iterations` random cases. Panics with seed + shrunk
+/// input log on the first failure.
+pub fn forall(name: &str, iterations: u32, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let base_seed = match std::env::var("CUGWAS_PROPTEST_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for i in 0..iterations {
+        let seed = base_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            let log = g.log.clone();
+            let (shrunk_log, shrunk_msg) = shrink(&log, seed, &mut prop).unwrap_or((log, msg));
+            panic!(
+                "property '{name}' failed (seed {seed:#x}, iteration {i}):\n  {shrunk_msg}\n  inputs: {shrunk_log:?}\n  replay: CUGWAS_PROPTEST_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly try halving each logged scalar (toward 0)
+/// and keep any candidate that still fails.
+fn shrink(
+    log: &[u64],
+    seed: u64,
+    prop: &mut impl FnMut(&mut Gen) -> PropResult,
+) -> Option<(Vec<u64>, String)> {
+    let mut current = log.to_vec();
+    let mut last_msg: Option<String> = None;
+    let mut improved = true;
+    let mut budget = 200;
+    while improved && budget > 0 {
+        improved = false;
+        for idx in 0..current.len() {
+            if current[idx] == 0 {
+                continue;
+            }
+            let mut candidate = current.clone();
+            candidate[idx] /= 2;
+            let mut g = Gen::replaying(candidate.clone(), seed);
+            if let Err(msg) = prop(&mut g) {
+                current = candidate;
+                last_msg = Some(msg);
+                improved = true;
+            }
+            budget -= 1;
+            if budget == 0 {
+                break;
+            }
+        }
+    }
+    last_msg.map(|m| (current, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall("tautology", 50, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert(x <= 100, "bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("fails", 50, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert(x < 95, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_magnitude() {
+        let result = std::panic::catch_unwind(|| {
+            forall("shrinks", 100, |g| {
+                let x = g.usize_in(0, 1_000_000);
+                prop_assert(x < 10, format!("x={x}"))
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        let inputs: Vec<u64> = msg
+            .split("inputs: [")
+            .nth(1)
+            .and_then(|s| s.split(']').next())
+            .unwrap()
+            .split(", ")
+            .map(|v| v.parse().unwrap())
+            .collect();
+        assert!(inputs[0] <= 20, "shrunk to {inputs:?}\n{msg}");
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(1);
+        let mut b = Gen::new(1);
+        for _ in 0..20 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+
+    #[test]
+    fn choose_covers_options() {
+        let mut g = Gen::new(3);
+        let opts = [1, 2, 3];
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[*g.choose(&opts) - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_in_bounds() {
+        let mut g = Gen::new(5);
+        for _ in 0..100 {
+            let v = g.f64_in(2.0, 3.0);
+            assert!((2.0..3.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn bool_p_extremes() {
+        let mut g = Gen::new(7);
+        assert!(!(0..50).any(|_| g.bool_p(0.0)));
+        assert!((0..50).all(|_| g.bool_p(1.0)));
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest: what `python/compile/aot.py` produced and where.
+//!
+//! `artifacts/manifest.tsv` maps `(kind, shape)` keys to HLO text files.
+//! The runtime looks artifacts up by the exact shapes the coordinator is
+//! about to stream; a missing artifact is a configuration error reported
+//! with the available alternatives.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The graph kinds aot.py emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Kind {
+    /// Study preprocessing (runs once).
+    Preprocess,
+    /// Device does only the trsm (the paper's exact split).
+    Trsm,
+    /// Device does trsm + fused S-loop reductions.
+    Block,
+    /// Device returns final per-SNP solutions (full-offload ablation).
+    BlockFull,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Result<Kind> {
+        match s {
+            "preprocess" => Ok(Kind::Preprocess),
+            "trsm" => Ok(Kind::Trsm),
+            "block" => Ok(Kind::Block),
+            "blockfull" => Ok(Kind::BlockFull),
+            other => Err(Error::format(format!("unknown artifact kind '{other}'"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Preprocess => "preprocess",
+            Kind::Trsm => "trsm",
+            Kind::Block => "block",
+            Kind::BlockFull => "blockfull",
+        }
+    }
+}
+
+/// Shape key of one artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArtifactKey {
+    pub kind: Kind,
+    pub n: usize,
+    pub pl: usize,
+    /// Block width (SNP columns per device call). 0 for `Preprocess`.
+    pub mb: usize,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub key: ArtifactKey,
+    /// Diagonal block size baked into the kernel.
+    pub nb: usize,
+    /// Column tile baked into the kernel grid.
+    pub bm: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest with lookup by key.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<ArtifactKey, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::io(format!("reading {} (run `make artifacts`?)", path.display()), e)
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` is prepended to file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 8 {
+                return Err(Error::format(format!(
+                    "manifest line {}: expected 8 tab-separated fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                )));
+            }
+            let kind = Kind::parse(fields[0])?;
+            let parse_num = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| Error::format(format!("manifest: bad {what} '{s}'")))
+            };
+            let n = parse_num(fields[1], "n")?;
+            let pl = parse_num(fields[2], "pl")?;
+            let mb = parse_num(fields[3], "mb")?;
+            let nb = parse_num(fields[4], "nb")?;
+            let bm = parse_num(fields[5], "bm")?;
+            if fields[6] != "f64" {
+                return Err(Error::format(format!("manifest: unsupported dtype {}", fields[6])));
+            }
+            let key = ArtifactKey { kind, n, pl, mb: if kind == Kind::Preprocess { 0 } else { mb } };
+            let entry = ArtifactEntry { key, nb, bm, path: dir.join(fields[7]) };
+            if entries.insert(key, entry).is_some() {
+                return Err(Error::format(format!("manifest: duplicate key {key:?}")));
+            }
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Exact lookup.
+    pub fn get(&self, key: &ArtifactKey) -> Result<&ArtifactEntry> {
+        self.entries.get(key).ok_or_else(|| {
+            let available: Vec<String> = self
+                .entries
+                .keys()
+                .filter(|k| k.kind == key.kind)
+                .map(|k| format!("(n={}, pl={}, mb={})", k.n, k.pl, k.mb))
+                .collect();
+            Error::Config(format!(
+                "no '{}' artifact for n={}, pl={}, mb={}; available: [{}] — \
+                 re-run `make artifacts` with a matching profile",
+                key.kind.as_str(),
+                key.n,
+                key.pl,
+                key.mb,
+                available.join(", ")
+            ))
+        })
+    }
+
+    /// All entries of a kind (for CLI listings).
+    pub fn of_kind(&self, kind: Kind) -> Vec<&ArtifactEntry> {
+        self.entries.values().filter(|e| e.key.kind == kind).collect()
+    }
+
+    /// Shapes available for block-processing kinds, useful for choosing a
+    /// compatible (n, mb) when planning a run.
+    pub fn block_shapes(&self, kind: Kind, pl: usize) -> Vec<(usize, usize)> {
+        self.entries
+            .keys()
+            .filter(|k| k.kind == kind && k.pl == pl)
+            .map(|k| (k.n, k.mb))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# kind\tn\tpl\tmb\tnb\tbm\tdtype\tfile
+trsm\t64\t3\t32\t16\t16\tf64\ttrsm_a.hlo.txt
+block\t64\t3\t32\t16\t16\tf64\tblock_a.hlo.txt
+preprocess\t64\t3\t32\t16\t16\tf64\tpre_a.hlo.txt
+";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.len(), 3);
+        let e = m
+            .get(&ArtifactKey { kind: Kind::Trsm, n: 64, pl: 3, mb: 32 })
+            .unwrap();
+        assert_eq!(e.nb, 16);
+        assert_eq!(e.path, PathBuf::from("/art/trsm_a.hlo.txt"));
+        // Preprocess keys normalize mb to 0.
+        assert!(m.get(&ArtifactKey { kind: Kind::Preprocess, n: 64, pl: 3, mb: 0 }).is_ok());
+    }
+
+    #[test]
+    fn missing_artifact_reports_alternatives() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        let err = m
+            .get(&ArtifactKey { kind: Kind::Trsm, n: 999, pl: 3, mb: 32 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("n=64"), "{err}");
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("trsm\t64\t3\n", Path::new("/a")).is_err()); // too few
+        assert!(Manifest::parse("warp\t64\t3\t32\t16\t16\tf64\tx\n", Path::new("/a")).is_err()); // bad kind
+        assert!(Manifest::parse("trsm\t64\t3\t32\t16\t16\tf32\tx\n", Path::new("/a")).is_err()); // dtype
+        assert!(Manifest::parse("trsm\tx\t3\t32\t16\t16\tf64\tx\n", Path::new("/a")).is_err()); // number
+        let dup = format!("{SAMPLE}trsm\t64\t3\t32\t16\t16\tf64\tother.hlo.txt\n");
+        assert!(Manifest::parse(&dup, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = Manifest::parse("# hi\n\n  \n", Path::new("/a")).unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn block_shapes_filters() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.block_shapes(Kind::Trsm, 3), vec![(64, 32)]);
+        assert!(m.block_shapes(Kind::Trsm, 9).is_empty());
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT execution engine: load HLO text, compile once, run many.
+//!
+//! One [`Engine`] per thread (PJRT handles in the `xla` crate are not
+//! `Send`, and per-lane clients mirror the paper's one-CUDA-context-per-GPU
+//! model). Inputs/outputs are flat `f64` buffers + dims; layout contracts
+//! with the AOT graphs are documented in `python/compile/model.py` and
+//! enforced by the conversion helpers in [`super::layout`].
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::ArtifactEntry;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A typed flat tensor crossing the PJRT boundary (row-major).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f64>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<i64>, data: Vec<f64>) -> Result<Self> {
+        let want: i64 = dims.iter().product();
+        if want as usize != data.len() {
+            return Err(Error::shape(format!(
+                "HostTensor: dims {dims:?} imply {want} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(HostTensor { dims, data })
+    }
+
+    pub fn scalar_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Build an XLA literal from a host tensor (copies the buffer).
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    xla::Literal::vec1(&t.data)
+        .reshape(&t.dims)
+        .map_err(|e| Error::Runtime(format!("literal reshape {:?}: {e}", t.dims)))
+}
+
+/// A compiled artifact, executable on this thread.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human tag for error messages.
+    tag: String,
+}
+
+impl Executable {
+    /// Run with the given inputs; returns the flattened tuple outputs.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Run with pre-built literals (the hot path: constant inputs such as
+    /// `L`/`Dinv` are converted once per lane, not once per block —
+    /// see EXPERIMENTS.md §Perf). Accepts borrowed literals so callers
+    /// can mix cached and per-call inputs without moves.
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        literals: &[L],
+    ) -> Result<Vec<HostTensor>> {
+        let result = self
+            .exe
+            .execute::<L>(literals)
+            .map_err(|e| Error::Runtime(format!("{}: execute: {e}", self.tag)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{}: fetch: {e}", self.tag)))?;
+        // aot.py lowers with return_tuple=True: unpack every element.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("{}: tuple unpack: {e}", self.tag)))?;
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| Error::Runtime(format!("{}: out {i} shape: {e}", self.tag)))?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = lit
+                    .to_vec::<f64>()
+                    .map_err(|e| Error::Runtime(format!("{}: out {i} to_vec: {e}", self.tag)))?;
+                HostTensor::new(dims, data)
+            })
+            .collect()
+    }
+}
+
+/// Per-thread PJRT client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("creating PJRT CPU client: {e}")))?;
+        Ok(Engine { client, cache: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (uncached).
+    pub fn compile_file(&self, path: &Path, tag: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("parsing {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compiling {}: {e}", path.display())))?;
+        Ok(Executable { exe, tag: tag.to_string() })
+    }
+
+    /// Compile a manifest entry, caching by path.
+    pub fn load(&mut self, entry: &ArtifactEntry) -> Result<&Executable> {
+        let key = entry.path.to_string_lossy().into_owned();
+        if !self.cache.contains_key(&key) {
+            let tag = format!("{}(n={},mb={})", entry.key.kind.as_str(), entry.key.n, entry.key.mb);
+            let exe = self.compile_file(&entry.path, &tag)?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_check() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs and
+    // are gated on built artifacts; here we only check pure logic.
+}

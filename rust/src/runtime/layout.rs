@@ -1,0 +1,104 @@
+//! Layout conversions between the rust coordinator's column-major world
+//! and the row-major XLA literal world.
+//!
+//! The contract (see `python/compile/model.py`): block data crosses the
+//! boundary as "SNP-rows" — an `(mb, n)` row-major tensor whose flat image
+//! equals the column-major `(n, mb)` disk block. These helpers produce the
+//! remaining (cold-path) conversions; the hot-path block buffers cross
+//! with **zero copies or transposes** by construction.
+
+use crate::linalg::Matrix;
+
+/// Column-major `Matrix` → row-major flat buffer (cold path: `L`, `X̃_L`).
+pub fn matrix_to_rowmajor(m: &Matrix) -> Vec<f64> {
+    let (r, c) = (m.rows(), m.cols());
+    let mut out = vec![0.0; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[i * c + j] = m.get(i, j);
+        }
+    }
+    out
+}
+
+/// Row-major flat buffer → column-major `Matrix` (cold path).
+pub fn rowmajor_to_matrix(rows: usize, cols: usize, data: &[f64]) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            m.set(i, j, data[i * cols + j]);
+        }
+    }
+    m
+}
+
+/// Convert `potrf_invert_diag_blocks` output (an `nb × nb·nblocks`
+/// column-major matrix, block k in columns `k*nb..`) into the `(n, nb)`
+/// row-major stack the AOT kernels expect (block k in rows `k*nb..`).
+pub fn dinv_to_rowmajor(dinv: &Matrix, nb: usize, n: usize) -> Vec<f64> {
+    let nblocks = n / nb;
+    debug_assert_eq!(dinv.rows(), nb);
+    debug_assert!(dinv.cols() >= nb * nblocks);
+    let mut out = vec![0.0; n * nb];
+    for k in 0..nblocks {
+        for r in 0..nb {
+            for c in 0..nb {
+                out[(k * nb + r) * nb + c] = dinv.get(r, k * nb + c);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{potrf, potrf_invert_diag_blocks};
+    use crate::util::XorShift;
+
+    #[test]
+    fn rowmajor_roundtrip() {
+        let mut rng = XorShift::new(1);
+        let m = Matrix::randn(5, 3, &mut rng);
+        let flat = matrix_to_rowmajor(&m);
+        assert_eq!(flat[0 * 3 + 2], m.get(0, 2));
+        assert_eq!(flat[4 * 3 + 1], m.get(4, 1));
+        let back = rowmajor_to_matrix(5, 3, &flat);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn block_buffer_needs_no_conversion() {
+        // The defining property: col-major (n, mb) flat == row-major (mb, n) flat.
+        let mut rng = XorShift::new(2);
+        let n = 4;
+        let mb = 3;
+        let block = Matrix::randn(n, mb, &mut rng); // col-major (n, mb)
+        let as_rowmajor_mbn = block.as_slice(); // claim: this is (mb, n) row-major
+        for s in 0..mb {
+            for i in 0..n {
+                assert_eq!(as_rowmajor_mbn[s * n + i], block.get(i, s));
+            }
+        }
+    }
+
+    #[test]
+    fn dinv_layout_matches_python() {
+        let mut rng = XorShift::new(3);
+        let nb = 4;
+        let n = 12;
+        let m = Matrix::rand_spd(n, 2.0, &mut rng);
+        let l = potrf(&m).unwrap();
+        let dinv = potrf_invert_diag_blocks(&l, nb).unwrap();
+        let flat = dinv_to_rowmajor(&dinv, nb, n);
+        assert_eq!(flat.len(), n * nb);
+        // Row k*nb+r, col c of the (n, nb) row-major stack == dinv[r, k*nb+c].
+        for k in 0..3 {
+            for r in 0..nb {
+                for c in 0..nb {
+                    assert_eq!(flat[(k * nb + r) * nb + c], dinv.get(r, k * nb + c));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Runtime layer: load the AOT-compiled HLO artifacts and execute them on
+//! the PJRT CPU client from the rust hot path.
+//!
+//! Start-to-finish: `Manifest::load` finds the artifact for the requested
+//! `(kind, n, pl, mb)`, `Engine::load` parses the HLO **text** (the
+//! interchange format — see `python/compile/aot.py`), compiles it once,
+//! and `Executable::run` moves flat f64 buffers across with the layout
+//! contract of [`layout`].
+
+pub mod artifact;
+pub mod exec;
+pub mod layout;
+
+pub use artifact::{ArtifactEntry, ArtifactKey, Kind, Manifest};
+pub use exec::{Engine, Executable, HostTensor};
+pub use layout::{dinv_to_rowmajor, matrix_to_rowmajor, rowmajor_to_matrix};
+
+/// Default artifacts directory relative to the repo root / CWD.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("CUGWAS_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,139 @@
+//! Synthetic GWAS catalog — the data pipeline behind Fig. 1.
+//!
+//! The paper derives Fig. 1 from the NHGRI "Catalog of Published GWAS"
+//! (genome.gov/gwastudies): per published study, its year, SNP count and
+//! sample size; the figure plots per-year medians with quartile bars.
+//! That catalog snapshot is not redistributable here, so per DESIGN.md §4
+//! we synthesize a catalog with the paper's reported growth shape —
+//! study counts rising to ~2300/yr by 2011, SNP counts exploding after
+//! 2009, sample sizes plateauing around 10 000 — and regenerate the
+//! figure's data through the same medians/quartiles pipeline.
+
+use crate::stats::quartiles::{quartiles, Quartiles};
+use crate::util::XorShift;
+
+/// One published study in the catalog.
+#[derive(Debug, Clone, Copy)]
+pub struct CatalogRow {
+    pub year: u32,
+    pub snp_count: f64,
+    pub sample_size: f64,
+}
+
+/// Per-year aggregate — one point of each Fig. 1 panel.
+#[derive(Debug, Clone, Copy)]
+pub struct YearSummary {
+    pub year: u32,
+    pub studies: usize,
+    pub snp_count: Quartiles,
+    pub sample_size: Quartiles,
+}
+
+/// Log-normal sampler (catalog quantities span decades).
+fn lognormal(rng: &mut XorShift, median: f64, sigma: f64) -> f64 {
+    (median.ln() + sigma * rng.normal()).exp()
+}
+
+/// Synthesize the 2005–2012 catalog.
+pub fn synthesize_catalog(seed: u64) -> Vec<CatalogRow> {
+    let mut rng = XorShift::new(seed);
+    // (year, #studies, median SNPs, median sample size) following the
+    // trends reported in §1.2 and visible in Fig. 1.
+    let shape: [(u32, usize, f64, f64); 8] = [
+        (2005, 4, 80_000.0, 900.0),
+        (2006, 12, 100_000.0, 1_200.0),
+        (2007, 90, 300_000.0, 2_500.0),
+        (2008, 160, 500_000.0, 5_000.0),
+        (2009, 380, 550_000.0, 8_000.0),
+        (2010, 680, 900_000.0, 10_000.0),
+        (2011, 2_300, 1_200_000.0, 10_000.0),
+        (2012, 1_800, 2_200_000.0, 11_000.0),
+    ];
+    let mut rows = Vec::new();
+    for (year, count, snp_med, n_med) in shape {
+        for _ in 0..count {
+            rows.push(CatalogRow {
+                year,
+                snp_count: lognormal(&mut rng, snp_med, 0.8),
+                sample_size: lognormal(&mut rng, n_med, 0.6),
+            });
+        }
+    }
+    rows
+}
+
+/// Aggregate a catalog into the per-year summaries Fig. 1 plots.
+pub fn summarize_by_year(rows: &[CatalogRow]) -> Vec<YearSummary> {
+    let mut years: Vec<u32> = rows.iter().map(|r| r.year).collect();
+    years.sort_unstable();
+    years.dedup();
+    years
+        .into_iter()
+        .filter_map(|year| {
+            let snps: Vec<f64> =
+                rows.iter().filter(|r| r.year == year).map(|r| r.snp_count).collect();
+            let sizes: Vec<f64> =
+                rows.iter().filter(|r| r.year == year).map(|r| r.sample_size).collect();
+            Some(YearSummary {
+                year,
+                studies: snps.len(),
+                snp_count: quartiles(&snps)?,
+                sample_size: quartiles(&sizes)?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_deterministic() {
+        let a = synthesize_catalog(1);
+        let b = synthesize_catalog(1);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[0].snp_count, b[0].snp_count);
+    }
+
+    #[test]
+    fn fig1a_snp_growth_shape() {
+        // The paper's observation: SNP counts grow tremendously after 2009.
+        let rows = synthesize_catalog(7);
+        let sum = summarize_by_year(&rows);
+        let med = |y: u32| sum.iter().find(|s| s.year == y).unwrap().snp_count.median;
+        assert!(med(2011) > 2.0 * med(2008), "{} vs {}", med(2011), med(2008));
+        assert!(med(2012) > 3.0 * med(2008));
+        assert!(med(2012) > med(2009));
+    }
+
+    #[test]
+    fn fig1b_sample_size_plateaus() {
+        // ...while sample sizes settle around 10 000 (§1.2).
+        let rows = synthesize_catalog(7);
+        let sum = summarize_by_year(&rows);
+        let med = |y: u32| sum.iter().find(|s| s.year == y).unwrap().sample_size.median;
+        let late_growth = med(2012) / med(2010);
+        assert!((0.7..1.6).contains(&late_growth), "late growth {late_growth}");
+        assert!(med(2010) > 3.0 * med(2005));
+    }
+
+    #[test]
+    fn study_counts_rise_to_2011_peak() {
+        let rows = synthesize_catalog(3);
+        let sum = summarize_by_year(&rows);
+        let n = |y: u32| sum.iter().find(|s| s.year == y).unwrap().studies;
+        assert!(n(2011) > 2000);
+        assert!(n(2005) < 10);
+    }
+
+    #[test]
+    fn quartile_bars_are_ordered() {
+        let rows = synthesize_catalog(9);
+        for s in summarize_by_year(&rows) {
+            assert!(s.snp_count.q1 <= s.snp_count.median);
+            assert!(s.snp_count.median <= s.snp_count.q3);
+            assert!(s.sample_size.q1 <= s.sample_size.q3);
+        }
+    }
+}

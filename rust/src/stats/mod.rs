@@ -1,0 +1,7 @@
+//! Descriptive statistics + the synthetic GWAS catalog behind Fig. 1.
+
+pub mod catalog;
+pub mod quartiles;
+
+pub use catalog::{summarize_by_year, synthesize_catalog, CatalogRow, YearSummary};
+pub use quartiles::{median, quartiles, Quartiles};

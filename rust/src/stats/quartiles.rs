@@ -1,0 +1,89 @@
+//! Medians and quartiles — the statistics Fig. 1 plots per publication
+//! year (median with first/second-quartile error bars).
+
+/// First quartile, median, third quartile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quartiles {
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+}
+
+/// Linear-interpolation quantile (R-7, the spreadsheet default).
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let h = q * (sorted.len() - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    let frac = h - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Median of a sample (not required sorted). `None` on empty input.
+pub fn median(values: &[f64]) -> Option<f64> {
+    let mut v: Vec<f64> = values.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(quantile(&v, 0.5))
+}
+
+/// Q1/median/Q3 of a sample. `None` on empty input.
+pub fn quartiles(values: &[f64]) -> Option<Quartiles> {
+    let mut v: Vec<f64> = values.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(Quartiles {
+        q1: quantile(&v, 0.25),
+        median: quantile(&v, 0.5),
+        q3: quantile(&v, 0.75),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), Some(2.0));
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), Some(2.5));
+        assert_eq!(median(&[5.0]), Some(5.0));
+        assert_eq!(median(&[]), None);
+    }
+
+    #[test]
+    fn quartiles_known_sample() {
+        let q = quartiles(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(q.q1, 2.0);
+        assert_eq!(q.median, 3.0);
+        assert_eq!(q.q3, 4.0);
+    }
+
+    #[test]
+    fn quartiles_interpolate() {
+        let q = quartiles(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(q.q1, 1.75);
+        assert_eq!(q.median, 2.5);
+        assert_eq!(q.q3, 3.25);
+    }
+
+    #[test]
+    fn non_finite_values_ignored() {
+        assert_eq!(median(&[f64::NAN, 1.0, 3.0]), Some(2.0));
+        assert_eq!(median(&[f64::NAN]), None);
+    }
+
+    #[test]
+    fn order_invariant() {
+        let a = quartiles(&[9.0, 1.0, 5.0, 3.0, 7.0]).unwrap();
+        let b = quartiles(&[1.0, 3.0, 5.0, 7.0, 9.0]).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,339 @@
+//! Dataset directory layout + generation and loading of study sidecar data.
+//!
+//! A *dataset directory* holds one study:
+//!
+//! ```text
+//! <dir>/
+//!   meta.txt        key=value: n, pl, m, block, seed
+//!   kinship.bin     M   (n×n f64 LE, col-major)
+//!   covariates.bin  X_L (n×pl)
+//!   phenotype.bin   y   (n)
+//!   xr.xrd          X_R (n×m, blocked — the streamed file)
+//!   r.xrd           output (p×m, written by the solvers)
+//! ```
+//!
+//! Generation streams `X_R` block by block so arbitrarily large datasets
+//! can be produced in constant memory — the generator is itself
+//! out-of-core, like everything in this repo.
+
+use crate::error::{Error, Result};
+use crate::gwas::problem::Dims;
+use crate::linalg::Matrix;
+use crate::storage::format::{f32s_as_bytes, f64s_as_bytes, f64s_as_bytes_mut, Dtype, Header};
+use crate::util::XorShift;
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Study metadata persisted in `meta.txt`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Meta {
+    pub dims: Dims,
+    pub block: usize,
+    pub seed: u64,
+}
+
+/// Paths of a dataset directory.
+#[derive(Debug, Clone)]
+pub struct DatasetPaths {
+    pub dir: PathBuf,
+}
+
+impl DatasetPaths {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        DatasetPaths { dir: dir.into() }
+    }
+    pub fn meta(&self) -> PathBuf {
+        self.dir.join("meta.txt")
+    }
+    pub fn kinship(&self) -> PathBuf {
+        self.dir.join("kinship.bin")
+    }
+    pub fn covariates(&self) -> PathBuf {
+        self.dir.join("covariates.bin")
+    }
+    pub fn phenotype(&self) -> PathBuf {
+        self.dir.join("phenotype.bin")
+    }
+    pub fn xr(&self) -> PathBuf {
+        self.dir.join("xr.xrd")
+    }
+    pub fn results(&self) -> PathBuf {
+        self.dir.join("r.xrd")
+    }
+    /// Checkpoint journal: one LE u64 block id per fully-persisted block.
+    pub fn progress(&self) -> PathBuf {
+        self.dir.join("r.progress")
+    }
+}
+
+/// Generate a full synthetic dataset on disk (f64 storage).
+pub fn generate(dir: &Path, dims: Dims, block: usize, seed: u64) -> Result<Meta> {
+    generate_with_dtype(dir, dims, block, seed, Dtype::F64)
+}
+
+/// Generate a full synthetic dataset on disk. `X_R` is written blockwise
+/// (constant memory in `m`). Deterministic in `seed` and *independent of
+/// `block`*: column j's genotypes depend only on (seed, j), so re-chunking
+/// the same study produces identical data. `dtype` selects the on-disk
+/// element type of `X_R` (the paper's footnote-3 half-storage mode:
+/// genotypes are exact small integers, so `F32` is lossless for `X_R`).
+pub fn generate_with_dtype(dir: &Path, dims: Dims, block: usize, seed: u64, dtype: Dtype) -> Result<Meta> {
+    if block == 0 || block > dims.m {
+        return Err(Error::Config(format!("block {block} must be in 1..={}", dims.m)));
+    }
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(format!("mkdir {}", dir.display()), e))?;
+    let paths = DatasetPaths::new(dir);
+    let mut rng = XorShift::new(seed);
+
+    // Sidecars (small; in memory).
+    let kin = Matrix::rand_spd(dims.n, 4.0, &mut rng);
+    write_f64_file(&paths.kinship(), kin.as_slice())?;
+    let mut xl = Matrix::randn(dims.n, dims.pl, &mut rng);
+    for i in 0..dims.n {
+        xl.set(i, 0, 1.0);
+    }
+    write_f64_file(&paths.covariates(), xl.as_slice())?;
+
+    // X_R blockwise, per-column forked RNG streams for chunking invariance.
+    let header = Header::with_dtype(dims.n as u64, dims.m as u64, block as u64, seed, dtype)?;
+    let f = File::create(paths.xr()).map_err(|e| Error::io("create xr.xrd", e))?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    header.write_to(&mut w)?;
+    let mut col = vec![0.0f64; dims.n];
+    let mut col_seed_rng = XorShift::new(seed ^ 0x5eed_c01);
+    let col_base = col_seed_rng.next_u64();
+    // Also accumulate the planted-signal contribution of SNP 0 for y.
+    let mut snp0 = vec![0.0f64; dims.n];
+    for j in 0..dims.m {
+        let mut crng = XorShift::new(col_base ^ (j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let maf = crng.uniform_in(0.05, 0.5);
+        for v in col.iter_mut() {
+            *v = crng.genotype(maf);
+        }
+        depolarize(&mut col);
+        if j == 0 {
+            snp0.copy_from_slice(&col);
+        }
+        match dtype {
+            Dtype::F64 => {
+                w.write_all(f64s_as_bytes(&col)).map_err(|e| Error::io("writing xr block", e))?
+            }
+            Dtype::F32 => {
+                let narrow: Vec<f32> = col.iter().map(|&v| v as f32).collect();
+                w.write_all(f32s_as_bytes(&narrow))
+                    .map_err(|e| Error::io("writing xr block", e))?
+            }
+        }
+    }
+    w.flush().map_err(|e| Error::io("flushing xr.xrd", e))?;
+
+    // Phenotype with planted signal (matches Problem::synthetic's recipe).
+    let mut y = vec![0.0f64; dims.n];
+    for i in 0..dims.n {
+        let mut v = 0.3 * snp0[i];
+        for k in 0..dims.pl {
+            v += 0.1 * xl.get(i, k);
+        }
+        y[i] = v + rng.normal();
+    }
+    write_f64_file(&paths.phenotype(), &y)?;
+
+    let meta = Meta { dims, block, seed };
+    write_meta(&paths.meta(), &meta)?;
+    Ok(meta)
+}
+
+/// Load the small sidecar data of a dataset (everything except `X_R`).
+pub fn load_sidecars(dir: &Path) -> Result<(Meta, Matrix, Matrix, Vec<f64>)> {
+    let paths = DatasetPaths::new(dir);
+    let meta = read_meta(&paths.meta())?;
+    let n = meta.dims.n;
+    let kin = Matrix::from_vec(n, n, read_f64_file(&paths.kinship(), n * n)?)?;
+    let xl = Matrix::from_vec(n, meta.dims.pl, read_f64_file(&paths.covariates(), n * meta.dims.pl)?)?;
+    let y = read_f64_file(&paths.phenotype(), n)?;
+    Ok((meta, kin, xl, y))
+}
+
+/// Load the whole `X_R` into memory (tests/small studies only).
+/// Dtype-aware: F32 files are widened on load.
+pub fn load_xr_incore(dir: &Path) -> Result<Matrix> {
+    let paths = DatasetPaths::new(dir);
+    let f = crate::storage::xrd::XrdFile::open(&paths.xr())?;
+    let h = *f.header();
+    let mut data = vec![0.0f64; (h.rows * h.cols) as usize];
+    f.read_cols_into(0, h.cols, &mut data)?;
+    Matrix::from_vec(h.rows as usize, h.cols as usize, data)
+}
+
+/// Make a genotype column polymorphic. Real studies drop monomorphic
+/// SNPs (a constant column is collinear with the intercept and makes
+/// `S_i` singular); the generator instead flips one sample, keeping the
+/// column a valid allele-count vector.
+fn depolarize(col: &mut [f64]) {
+    if let Some(&first) = col.first() {
+        if col.iter().all(|&v| v == first) {
+            col[0] = if first == 1.0 { 2.0 } else { 1.0 };
+        }
+    }
+}
+
+fn write_meta(path: &Path, meta: &Meta) -> Result<()> {
+    let s = format!(
+        "n={}\npl={}\nm={}\nblock={}\nseed={}\n",
+        meta.dims.n, meta.dims.pl, meta.dims.m, meta.block, meta.seed
+    );
+    std::fs::write(path, s).map_err(|e| Error::io("writing meta.txt", e))
+}
+
+fn read_meta(path: &Path) -> Result<Meta> {
+    let s = std::fs::read_to_string(path).map_err(|e| Error::io("reading meta.txt", e))?;
+    let mut n = None;
+    let mut pl = None;
+    let mut m = None;
+    let mut block = None;
+    let mut seed = None;
+    for (lineno, line) in s.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| Error::format(format!("meta.txt line {}: no '='", lineno + 1)))?;
+        let v: u64 = v
+            .trim()
+            .parse()
+            .map_err(|_| Error::format(format!("meta.txt: bad value for {k}")))?;
+        match k.trim() {
+            "n" => n = Some(v),
+            "pl" => pl = Some(v),
+            "m" => m = Some(v),
+            "block" => block = Some(v),
+            "seed" => seed = Some(v),
+            other => return Err(Error::format(format!("meta.txt: unknown key {other}"))),
+        }
+    }
+    let miss = |k: &str| Error::format(format!("meta.txt: missing key {k}"));
+    let dims = Dims::new(
+        n.ok_or_else(|| miss("n"))? as usize,
+        pl.ok_or_else(|| miss("pl"))? as usize,
+        m.ok_or_else(|| miss("m"))? as usize,
+    )?;
+    Ok(Meta {
+        dims,
+        block: block.ok_or_else(|| miss("block"))? as usize,
+        seed: seed.ok_or_else(|| miss("seed"))?,
+    })
+}
+
+fn write_f64_file(path: &Path, data: &[f64]) -> Result<()> {
+    let f = File::create(path).map_err(|e| Error::io(format!("create {}", path.display()), e))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(f64s_as_bytes(data)).map_err(|e| Error::io("writing f64 file", e))?;
+    w.flush().map_err(|e| Error::io("flush", e))
+}
+
+fn read_f64_file(path: &Path, expect: usize) -> Result<Vec<f64>> {
+    let mut f = File::open(path).map_err(|e| Error::io(format!("open {}", path.display()), e))?;
+    let mut data = vec![0.0f64; expect];
+    f.read_exact(f64s_as_bytes_mut(&mut data))
+        .map_err(|e| Error::io(format!("reading {} ({expect} f64s)", path.display()), e))?;
+    // Reject trailing garbage.
+    let mut probe = [0u8; 1];
+    match f.read(&mut probe) {
+        Ok(0) => Ok(data),
+        Ok(_) => Err(Error::format(format!("{} longer than expected", path.display()))),
+        Err(e) => Err(Error::io("probing EOF", e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cugwas_test_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn generate_and_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let dims = Dims::new(20, 3, 11).unwrap();
+        let meta = generate(&dir, dims, 4, 77).unwrap();
+        assert_eq!(meta.dims, dims);
+
+        let (meta2, kin, xl, y) = load_sidecars(&dir).unwrap();
+        assert_eq!(meta, meta2);
+        assert_eq!(kin.rows(), 20);
+        assert_eq!(xl.cols(), 3);
+        assert_eq!(y.len(), 20);
+        // Intercept column.
+        for i in 0..20 {
+            assert_eq!(xl.get(i, 0), 1.0);
+        }
+
+        let xr = load_xr_incore(&dir).unwrap();
+        assert_eq!(xr.rows(), 20);
+        assert_eq!(xr.cols(), 11);
+        for v in xr.as_slice() {
+            assert!(*v == 0.0 || *v == 1.0 || *v == 2.0);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_block_invariant() {
+        let dims = Dims::new(12, 2, 9).unwrap();
+        let d1 = tmpdir("det1");
+        let d2 = tmpdir("det2");
+        generate(&d1, dims, 3, 5).unwrap();
+        generate(&d2, dims, 4, 5).unwrap(); // different chunking, same seed
+        let x1 = load_xr_incore(&d1).unwrap();
+        let x2 = load_xr_incore(&d2).unwrap();
+        assert_eq!(x1, x2, "data must not depend on block size");
+        let (_, _, _, y1) = load_sidecars(&d1).unwrap();
+        let (_, _, _, y2) = load_sidecars(&d2).unwrap();
+        assert_eq!(y1, y2);
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn meta_parser_rejects_garbage() {
+        let dir = tmpdir("meta");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("meta.txt");
+        std::fs::write(&p, "n=10\npl=2\nm=abc\nblock=2\nseed=0\n").unwrap();
+        assert!(read_meta(&p).is_err());
+        std::fs::write(&p, "n=10\npl=2\nblock=2\nseed=0\n").unwrap(); // missing m
+        assert!(read_meta(&p).is_err());
+        std::fs::write(&p, "bogus line\n").unwrap();
+        assert!(read_meta(&p).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_block_size_rejected() {
+        let dir = tmpdir("badblock");
+        let dims = Dims::new(10, 2, 5).unwrap();
+        assert!(generate(&dir, dims, 0, 1).is_err());
+        assert!(generate(&dir, dims, 6, 1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_sidecar_is_detected() {
+        let dir = tmpdir("trunc");
+        let dims = Dims::new(10, 2, 4).unwrap();
+        generate(&dir, dims, 2, 3).unwrap();
+        // Truncate the phenotype file.
+        let p = DatasetPaths::new(&dir).phenotype();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() - 8]).unwrap();
+        assert!(load_sidecars(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

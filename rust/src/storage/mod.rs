@@ -1,0 +1,13 @@
+//! Storage layer: the XRD on-disk block format, dataset directories, the
+//! synchronous positioned-I/O core, and the asynchronous engine providing
+//! the paper's `aio_read` / `aio_wait` / `aio_write` primitives.
+
+pub mod aio;
+pub mod dataset;
+pub mod format;
+pub mod xrd;
+
+pub use aio::{AioEngine, AioHandle};
+pub use dataset::{generate, generate_with_dtype, load_sidecars, load_xr_incore, DatasetPaths, Meta};
+pub use format::{Dtype, Header};
+pub use xrd::{Throttle, XrdFile};

@@ -1,0 +1,75 @@
+//! Human-readable formatting of byte counts, durations and rates, used by
+//! the CLI, logs, and benchmark tables.
+
+use std::time::Duration;
+
+/// `1536 → "1.50 KiB"`. Binary units, two decimals above bytes.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 7] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB", "EiB"];
+    if bytes < 1024 {
+        return format!("{bytes} B");
+    }
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    format!("{v:.2} {}", UNITS[unit])
+}
+
+/// Pretty duration: ns/µs/ms/s/min scales, ~3 significant figures.
+pub fn human_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns < 60 * 1_000_000_000u128 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else {
+        let s = d.as_secs_f64();
+        format!("{}m {:04.1}s", (s / 60.0) as u64, s % 60.0)
+    }
+}
+
+/// Throughput: `bytes` moved over `d` → "X/s" string.
+pub fn human_rate(bytes: u64, d: Duration) -> String {
+    let secs = d.as_secs_f64();
+    if secs <= 0.0 {
+        return "∞/s".to_string();
+    }
+    format!("{}/s", human_bytes((bytes as f64 / secs) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_scales() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1024), "1.00 KiB");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(1024 * 1024), "1.00 MiB");
+        assert_eq!(human_bytes(14 * 1024u64.pow(4)), "14.00 TiB"); // the paper's X_R
+    }
+
+    #[test]
+    fn duration_scales() {
+        assert_eq!(human_duration(Duration::from_nanos(12)), "12 ns");
+        assert_eq!(human_duration(Duration::from_micros(12)), "12.00 µs");
+        assert_eq!(human_duration(Duration::from_millis(12)), "12.00 ms");
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.00 s");
+        assert!(human_duration(Duration::from_secs(150)).starts_with("2m"));
+    }
+
+    #[test]
+    fn rate_basic() {
+        let r = human_rate(100 * 1024 * 1024, Duration::from_secs(1));
+        assert_eq!(r, "100.00 MiB/s");
+    }
+}

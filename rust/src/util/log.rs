@@ -1,0 +1,101 @@
+//! Minimal leveled logger (stderr). The vendored crate set has no `log`
+//! facade consumers here, so we keep a tiny global with the same spirit:
+//! levels, timestamps relative to process start, and zero allocation when
+//! a level is disabled.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log verbosity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Set the global verbosity.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current verbosity.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Whether `l` would be printed.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Print a log line (used through the macros below).
+pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t0 = *START.get_or_init(Instant::now);
+    let secs = t0.elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{secs:9.3}s {tag} {target}] {msg}");
+}
+
+/// `info!(target, "fmt {}", arg)`-style macros.
+#[macro_export]
+macro_rules! log_error { ($t:expr, $($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($t:expr, $($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($t:expr, $($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($t:expr, $($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($t:expr, $($a:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Trace, $t, format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_check() {
+        let prev = level();
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_level(prev);
+    }
+
+    #[test]
+    fn macros_compile() {
+        let prev = level();
+        set_level(Level::Error);
+        log_info!("test", "suppressed {}", 1);
+        log_error!("test", "printed {}", 2);
+        set_level(prev);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic RNG, wall-clock timers, humanized
+//! quantities, and a leveled logger. All std-only.
+
+pub mod human;
+pub mod log;
+pub mod rng;
+pub mod timer;
+
+pub use human::{human_bytes, human_duration, human_rate};
+pub use rng::XorShift;
+pub use timer::Timer;

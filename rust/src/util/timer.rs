@@ -1,0 +1,74 @@
+//! Wall-clock timing helpers used by the coordinator metrics and the
+//! benchmark framework.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/lap timer.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    /// Total elapsed time since `start()`.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Time since the previous `lap()` (or since start for the first lap).
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        d
+    }
+
+    /// Elapsed seconds as f64 (convenience for throughput math).
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning `(result, duration)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let l1 = t.lap();
+        let l2 = t.lap();
+        assert!(l1 >= Duration::from_millis(1));
+        assert!(l2 <= l1);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, d) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! All four implementations (cuGWAS pipeline, OOC-HP-GWAS, naive offload,
+//! ProbABEL-like) must produce the same numbers for the same dataset —
+//! the paper compares their *speed*, never their answers.
+
+use cugwas::baselines::{run_naive, run_ooc_cpu, run_probabel};
+use cugwas::coordinator::{run, BackendKind, PipelineConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::linalg::Matrix;
+use cugwas::storage::{dataset::DatasetPaths, generate, XrdFile};
+use std::path::{Path, PathBuf};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_base_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn read_results(dir: &Path, p: usize, m: usize) -> Matrix {
+    let rfile = XrdFile::open(&DatasetPaths::new(dir).results()).unwrap();
+    let mut buf = vec![0.0; p * m];
+    rfile.read_cols_into(0, m as u64, &mut buf).unwrap();
+    Matrix::from_vec(p, m, buf).unwrap()
+}
+
+#[test]
+fn all_solvers_agree() {
+    let dims = Dims::new(28, 3, 26).unwrap();
+    let (p, m) = (dims.p(), dims.m);
+    let dir = tmpdir("agree");
+    generate(&dir, dims, 8, 123).unwrap();
+
+    run(&PipelineConfig::new(&dir, 8)).unwrap();
+    let r_pipeline = read_results(&dir, p, m);
+
+    run_ooc_cpu(&dir, 8, None).unwrap();
+    let r_ooc = read_results(&dir, p, m);
+
+    run_naive(&dir, 8, &BackendKind::Native, None).unwrap();
+    let r_naive = read_results(&dir, p, m);
+
+    run_probabel(&dir).unwrap();
+    let r_pa = read_results(&dir, p, m);
+
+    assert!(r_pipeline.max_abs_diff(&r_ooc) < 1e-10, "{}", r_pipeline.max_abs_diff(&r_ooc));
+    assert!(r_pipeline.max_abs_diff(&r_naive) < 1e-10);
+    // ProbABEL uses a different (explicit-inverse) algorithm: looser tol.
+    assert!(r_pipeline.max_abs_diff(&r_pa) < 1e-6, "{}", r_pipeline.max_abs_diff(&r_pa));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn agreement_holds_across_block_sizes() {
+    let dims = Dims::new(20, 2, 30).unwrap();
+    let (p, m) = (dims.p(), dims.m);
+    let dir = tmpdir("blocks");
+    generate(&dir, dims, 5, 7).unwrap();
+
+    run(&PipelineConfig::new(&dir, 10)).unwrap();
+    let a = read_results(&dir, p, m);
+    run(&PipelineConfig::new(&dir, 7)).unwrap(); // non-divisor block size
+    let b = read_results(&dir, p, m);
+    run_ooc_cpu(&dir, 13, None).unwrap();
+    let c = read_results(&dir, p, m);
+
+    assert!(a.max_abs_diff(&b) < 1e-10);
+    assert!(a.max_abs_diff(&c) < 1e-10);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn multi_lane_agrees_with_single_lane() {
+    let dims = Dims::new(24, 3, 32).unwrap();
+    let (p, m) = (dims.p(), dims.m);
+    let dir = tmpdir("lanes");
+    generate(&dir, dims, 8, 55).unwrap();
+
+    run(&PipelineConfig::new(&dir, 8)).unwrap();
+    let one = read_results(&dir, p, m);
+    let mut cfg = PipelineConfig::new(&dir, 8);
+    cfg.ngpus = 4;
+    run(&cfg).unwrap();
+    let four = read_results(&dir, p, m);
+
+    assert!(one.max_abs_diff(&four) < 1e-12, "{}", one.max_abs_diff(&four));
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,297 @@
+//! End-to-end integration: stream a dataset from disk through the full
+//! multibuffered pipeline and compare against the in-core oracle
+//! (Listing 1.1). Native backend — PJRT-artifact runs live in
+//! `runtime_integration.rs` (gated on `make artifacts`).
+
+use cugwas::coordinator::{run, verify_against_oracle, OffloadMode, PipelineConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::{generate, Throttle};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_e2e_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn run_and_verify(tag: &str, dims: Dims, cfg_mut: impl FnOnce(&mut PipelineConfig)) {
+    let dir = tmpdir(tag);
+    generate(&dir, dims, 8.min(dims.m), 42).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 8);
+    cfg_mut(&mut cfg);
+    let report = run(&cfg).unwrap();
+    assert_eq!(report.snps, dims.m);
+    let diff = verify_against_oracle(&dir, 1e-8).unwrap();
+    assert!(diff < 1e-8, "diff={diff}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn single_lane_trsm_mode_matches_oracle() {
+    run_and_verify("single", Dims::new(32, 3, 40).unwrap(), |_| {});
+}
+
+#[test]
+fn tail_block_handled() {
+    // 37 SNPs with block 8 → 5 blocks, last has 5 columns.
+    run_and_verify("tail", Dims::new(24, 2, 37).unwrap(), |_| {});
+}
+
+#[test]
+fn single_block_study() {
+    // m < block: one partial block, exercises warmup==drain.
+    run_and_verify("oneblock", Dims::new(24, 2, 5).unwrap(), |_| {});
+}
+
+#[test]
+fn exactly_two_blocks() {
+    run_and_verify("twoblocks", Dims::new(24, 2, 16).unwrap(), |_| {});
+}
+
+#[test]
+fn multi_lane_matches_oracle() {
+    for ngpus in [2, 4] {
+        run_and_verify(&format!("multi{ngpus}"), Dims::new(24, 3, 48).unwrap(), |c| {
+            c.ngpus = ngpus;
+        });
+    }
+}
+
+#[test]
+fn multi_lane_with_ragged_tail() {
+    // Tail block smaller than one lane chunk: some lanes idle on the tail.
+    run_and_verify("ragged", Dims::new(20, 2, 35).unwrap(), |c| {
+        c.ngpus = 4;
+    });
+}
+
+#[test]
+fn fused_block_mode_matches_oracle() {
+    run_and_verify("fused", Dims::new(28, 3, 30).unwrap(), |c| {
+        c.mode = OffloadMode::Block;
+    });
+}
+
+#[test]
+fn blockfull_mode_matches_oracle() {
+    run_and_verify("blockfull", Dims::new(28, 3, 30).unwrap(), |c| {
+        c.mode = OffloadMode::BlockFull;
+        c.ngpus = 2;
+    });
+}
+
+#[test]
+fn two_host_buffers_still_correct() {
+    run_and_verify("hb2", Dims::new(24, 2, 33).unwrap(), |c| {
+        c.host_buffers = 2;
+    });
+}
+
+#[test]
+fn many_host_buffers_still_correct() {
+    run_and_verify("hb6", Dims::new(24, 2, 33).unwrap(), |c| {
+        c.host_buffers = 6;
+    });
+}
+
+#[test]
+fn throttled_storage_still_correct() {
+    run_and_verify("throttle", Dims::new(24, 2, 24).unwrap(), |c| {
+        c.read_throttle = Some(Throttle { bytes_per_sec: 2e6 });
+        c.write_throttle = Some(Throttle { bytes_per_sec: 2e6 });
+    });
+}
+
+#[test]
+fn report_metrics_are_populated() {
+    use cugwas::coordinator::Phase;
+    let dir = tmpdir("metrics");
+    generate(&dir, Dims::new(24, 2, 32).unwrap(), 8, 1).unwrap();
+    let cfg = PipelineConfig::new(&dir, 8);
+    let report = run(&cfg).unwrap();
+    assert_eq!(report.blocks, 4);
+    assert!(report.wall_secs > 0.0);
+    assert!(report.snps_per_sec > 0.0);
+    assert!(report.device_secs > 0.0);
+    assert_eq!(report.metrics.count(Phase::DeviceCompute), 4);
+    assert!(report.metrics.count(Phase::Sloop) >= 4);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    let dir = tmpdir("invalid");
+    generate(&dir, Dims::new(16, 2, 8).unwrap(), 4, 1).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 4);
+    cfg.ngpus = 0;
+    assert!(run(&cfg).is_err());
+    let mut cfg = PipelineConfig::new(&dir, 5);
+    cfg.ngpus = 2; // 5 % 2 != 0
+    assert!(run(&cfg).is_err());
+    let mut cfg = PipelineConfig::new(&dir, 4);
+    cfg.host_buffers = 1;
+    assert!(run(&cfg).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn missing_dataset_is_clean_error() {
+    let cfg = PipelineConfig::new("/nonexistent/dataset", 8);
+    assert!(run(&cfg).is_err());
+}
+
+#[test]
+fn rerun_overwrites_results() {
+    let dir = tmpdir("rerun");
+    let dims = Dims::new(20, 2, 16).unwrap();
+    generate(&dir, dims, 8, 9).unwrap();
+    let cfg = PipelineConfig::new(&dir, 8);
+    run(&cfg).unwrap();
+    run(&cfg).unwrap(); // second run must recreate r.xrd cleanly
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- XRD v2: f32 storage (the paper's footnote-3 half-storage mode) ----
+
+#[test]
+fn f32_storage_halves_the_file_and_matches_oracle() {
+    use cugwas::storage::{generate_with_dtype, Dtype};
+    let dims = Dims::new(24, 2, 32).unwrap();
+    let d64 = tmpdir("f64mode");
+    let d32 = tmpdir("f32mode");
+    generate(&d64, dims, 8, 99).unwrap();
+    generate_with_dtype(&d32, dims, 8, 99, Dtype::F32).unwrap();
+
+    // Half the X_R bytes (modulo the fixed header).
+    let sz = |d: &std::path::Path| std::fs::metadata(d.join("xr.xrd")).unwrap().len() - 64;
+    assert_eq!(sz(&d32) * 2, sz(&d64));
+
+    // Identical genotype payload (allele counts are exact in f32)…
+    let x64 = cugwas::storage::load_xr_incore(&d64).unwrap();
+    let x32 = cugwas::storage::load_xr_incore(&d32).unwrap();
+    assert_eq!(x64, x32);
+
+    // …so the streamed solve matches the oracle bit-for-bit tolerance.
+    run(&PipelineConfig::new(&d32, 8)).unwrap();
+    verify_against_oracle(&d32, 1e-8).unwrap();
+    std::fs::remove_dir_all(&d64).unwrap();
+    std::fs::remove_dir_all(&d32).unwrap();
+}
+
+#[test]
+fn f32_results_file_roundtrips_with_precision_loss_bounded() {
+    use cugwas::storage::{Dtype, Header, XrdFile};
+    let p = std::env::temp_dir().join(format!("cugwas_f32r_{}.xrd", std::process::id()));
+    let h = Header::with_dtype(4, 6, 3, 0, Dtype::F32).unwrap();
+    let f = XrdFile::create(&p, h).unwrap();
+    let vals: Vec<f64> = (0..12).map(|i| 0.1 * i as f64 + 1e-9).collect();
+    f.write_cols(0, 3, &vals).unwrap();
+    let mut back = vec![0.0; 12];
+    f.read_cols_into(0, 3, &mut back).unwrap();
+    for (a, b) in vals.iter().zip(&back) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}"); // f32 rounding only
+    }
+    std::fs::remove_file(&p).unwrap();
+}
+
+// ---- checkpoint / resume (long runs must survive interruption) ----------
+
+#[test]
+fn resume_skips_journaled_blocks_and_result_is_complete() {
+    use cugwas::storage::dataset::DatasetPaths;
+    let dims = Dims::new(24, 2, 40).unwrap(); // 5 blocks of 8
+    let dir = tmpdir("resume");
+    generate(&dir, dims, 8, 31).unwrap();
+
+    // Full run with journaling (resume=true on a fresh dir journals all).
+    let mut cfg = PipelineConfig::new(&dir, 8);
+    cfg.resume = true;
+    let r1 = run(&cfg).unwrap();
+    assert_eq!(r1.blocks, 5);
+    let paths = DatasetPaths::new(&dir);
+    let journal = std::fs::read(paths.progress()).unwrap();
+    assert_eq!(journal.len(), 5 * 8);
+
+    // Simulate a crash after 2 blocks: truncate the journal and clobber
+    // the "unfinished" blocks' results with garbage.
+    std::fs::write(paths.progress(), &journal[..2 * 8]).unwrap();
+    {
+        use cugwas::storage::XrdFile;
+        let f = XrdFile::open_rw(&paths.results()).unwrap();
+        let junk = vec![f64::NAN; 3 * 8];
+        for b in [2u64, 3] {
+            f.write_cols(b * 8, 8, &junk).unwrap();
+        }
+    }
+    // Resume: only the 3 unjournaled blocks are recomputed…
+    let r2 = run(&cfg).unwrap();
+    assert_eq!(r2.blocks, 3, "resume must skip journaled blocks");
+    // …and the full result matches the oracle again.
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    // Journal now covers everything.
+    let journal = std::fs::read(paths.progress()).unwrap();
+    assert_eq!(journal.len(), 5 * 8);
+
+    // A third resume is a no-op.
+    let r3 = run(&cfg).unwrap();
+    assert_eq!(r3.blocks, 0);
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn non_resume_run_clears_stale_journal() {
+    use cugwas::storage::dataset::DatasetPaths;
+    let dims = Dims::new(20, 2, 16).unwrap();
+    let dir = tmpdir("clearjournal");
+    generate(&dir, dims, 8, 7).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 8);
+    cfg.resume = true;
+    run(&cfg).unwrap();
+    // A fresh (non-resume) run must recompute everything.
+    cfg.resume = false;
+    let r = run(&cfg).unwrap();
+    assert_eq!(r.blocks, 2);
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    let journal = std::fs::read(DatasetPaths::new(&dir).progress()).unwrap();
+    assert_eq!(journal.len(), 2 * 8);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn resume_with_changed_geometry_restarts_clean() {
+    let dims = Dims::new(20, 2, 24).unwrap();
+    let dir = tmpdir("regeom");
+    generate(&dir, dims, 8, 3).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 8);
+    cfg.resume = true;
+    run(&cfg).unwrap();
+    // Different block size ⇒ different r.xrd geometry ⇒ journal invalid.
+    let mut cfg2 = PipelineConfig::new(&dir, 12);
+    cfg2.resume = true;
+    let r = run(&cfg2).unwrap();
+    assert_eq!(r.blocks, 2); // 24/12 — full recompute, not a skip
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn torn_journal_tail_is_ignored() {
+    use cugwas::storage::dataset::DatasetPaths;
+    let dims = Dims::new(20, 2, 24).unwrap();
+    let dir = tmpdir("torn");
+    generate(&dir, dims, 8, 5).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 8);
+    cfg.resume = true;
+    run(&cfg).unwrap();
+    // Append a torn (partial) record — must be ignored, not crash.
+    let paths = DatasetPaths::new(&dir);
+    let mut j = std::fs::read(paths.progress()).unwrap();
+    j.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+    std::fs::write(paths.progress(), &j).unwrap();
+    let r = run(&cfg).unwrap();
+    assert_eq!(r.blocks, 0);
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}

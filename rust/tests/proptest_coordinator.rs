@@ -1,0 +1,342 @@
+//! Property tests over the coordinator's invariants (mini-proptest).
+//!
+//! The paper's correctness argument is entirely about scheduling: every
+//! block is read, solved, and written exactly once, buffers never alias,
+//! and the result is independent of topology (lanes, buffer counts,
+//! block sizes, throttles). These properties check that over randomized
+//! configurations, end-to-end on real files, against the in-core oracle.
+
+use cugwas::coordinator::{run, verify_against_oracle, OffloadMode, PipelineConfig};
+use cugwas::devsim::{simulate, Algo, HardwareProfile, SimConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::proptest::{forall, prop_assert, Gen};
+use cugwas::storage::generate;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static CASE: AtomicU64 = AtomicU64::new(0);
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let c = CASE.fetch_add(1, Ordering::Relaxed);
+    let d = std::env::temp_dir().join(format!("cugwas_prop_{}_{tag}_{c}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Any valid topology must reproduce the oracle exactly.
+#[test]
+fn prop_pipeline_matches_oracle_for_any_topology() {
+    forall("pipeline_topology", 12, |g: &mut Gen| {
+        let n = *g.choose(&[16usize, 24, 32]);
+        let pl = g.usize_in(1, 3);
+        let m = g.usize_in(1, 60);
+        let ngpus = *g.choose(&[1usize, 2, 3]);
+        let per_gpu = g.usize_in(1, 8);
+        let block = ngpus * per_gpu;
+        let host_buffers = g.usize_in(2, 5);
+        let mode = *g.choose(&[OffloadMode::Trsm, OffloadMode::Block, OffloadMode::BlockFull]);
+        let seed = g.u64();
+
+        let dims = match Dims::new(n, pl, m) {
+            Ok(d) => d,
+            Err(_) => return Ok(()), // skip invalid dims draws
+        };
+        let dir = tmpdir("topo");
+        generate(&dir, dims, block.min(m), seed).map_err(|e| e.to_string())?;
+        let mut cfg = PipelineConfig::new(&dir, block);
+        cfg.ngpus = ngpus;
+        cfg.host_buffers = host_buffers;
+        cfg.mode = mode;
+        let report = run(&cfg).map_err(|e| {
+            format!("run failed (n={n} pl={pl} m={m} block={block} ngpus={ngpus} hb={host_buffers} mode={mode:?}): {e}")
+        })?;
+        let blocks_expected = m.div_ceil(block);
+        let ok1 = prop_assert(
+            report.blocks == blocks_expected,
+            format!("blocks {} != {}", report.blocks, blocks_expected),
+        );
+        let verify = verify_against_oracle(&dir, 1e-7).map_err(|e| {
+            format!("mismatch (n={n} pl={pl} m={m} block={block} ngpus={ngpus} hb={host_buffers} mode={mode:?}): {e}")
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+        ok1?;
+        verify.map(|_| ())
+    });
+}
+
+/// Dataset generation is invariant to the file's chunking and the same
+/// study re-chunked must solve to the same results.
+#[test]
+fn prop_results_independent_of_file_chunking() {
+    forall("chunk_invariance", 8, |g: &mut Gen| {
+        let n = 20;
+        let m = g.usize_in(4, 40);
+        let chunk_a = g.usize_in(1, m);
+        let chunk_b = g.usize_in(1, m);
+        let block = g.usize_in(1, 12);
+        let seed = g.u64();
+        let dims = Dims::new(n, 2, m).map_err(|e| e.to_string())?;
+
+        let da = tmpdir("ca");
+        let db = tmpdir("cb");
+        generate(&da, dims, chunk_a, seed).map_err(|e| e.to_string())?;
+        generate(&db, dims, chunk_b, seed).map_err(|e| e.to_string())?;
+        run(&PipelineConfig::new(&da, block)).map_err(|e| e.to_string())?;
+        run(&PipelineConfig::new(&db, block)).map_err(|e| e.to_string())?;
+
+        use cugwas::storage::{dataset::DatasetPaths, XrdFile};
+        let read = |dir: &PathBuf| -> Result<Vec<f64>, String> {
+            let f = XrdFile::open(&DatasetPaths::new(dir).results()).map_err(|e| e.to_string())?;
+            let mut buf = vec![0.0; 3 * m];
+            f.read_cols_into(0, m as u64, &mut buf).map_err(|e| e.to_string())?;
+            Ok(buf)
+        };
+        let ra = read(&da)?;
+        let rb = read(&db)?;
+        let _ = std::fs::remove_dir_all(&da);
+        let _ = std::fs::remove_dir_all(&db);
+        prop_assert(ra == rb, format!("chunk {chunk_a} vs {chunk_b} differ (m={m}, block={block})"))
+    });
+}
+
+/// DES sanity over random configurations: the pipelined schedule is never
+/// slower than the serialized one, and utilizations stay in [0, 1].
+#[test]
+fn prop_sim_pipelined_never_loses_to_naive() {
+    forall("sim_dominance", 40, |g: &mut Gen| {
+        let n = g.usize_in(1_000, 20_000);
+        let ngpus = *g.choose(&[1usize, 2, 4]);
+        let block = ngpus * g.usize_in(200, 8_000);
+        let m = block * g.usize_in(2, 20);
+        let profile = *g.choose(&[
+            HardwareProfile::quadro(),
+            HardwareProfile::tesla(),
+            HardwareProfile::hdd(),
+        ]);
+        let cfg = SimConfig {
+            dims: Dims::new(n, 3, m).map_err(|e| e.to_string())?,
+            block,
+            ngpus,
+            host_buffers: g.usize_in(2, 4),
+            profile,
+        };
+        let cu = simulate(Algo::CuGwas, &cfg).map_err(|e| e.to_string())?;
+        let naive = simulate(Algo::NaiveGpu, &cfg).map_err(|e| e.to_string())?;
+        prop_assert(
+            cu.total_secs <= naive.total_secs * 1.0001,
+            format!("cugwas {} > naive {} ({cfg:?})", cu.total_secs, naive.total_secs),
+        )?;
+        for (name, u) in [
+            ("gpu", cu.gpu_util),
+            ("cpu", cu.cpu_util),
+            ("pcie", cu.pcie_util),
+            ("disk", cu.disk_util),
+        ] {
+            prop_assert((0.0..=1.0001).contains(&u), format!("{name} util {u} out of range"))?;
+        }
+        Ok(())
+    });
+}
+
+/// DES conservation: every block appears exactly once per phase.
+#[test]
+fn prop_sim_timeline_covers_every_block_once() {
+    forall("sim_coverage", 30, |g: &mut Gen| {
+        let ngpus = *g.choose(&[1usize, 2, 3]);
+        let block = ngpus * g.usize_in(100, 2_000);
+        let nblocks = g.usize_in(1, 12);
+        let m = block * nblocks;
+        let cfg = SimConfig {
+            dims: Dims::new(5_000, 3, m).map_err(|e| e.to_string())?,
+            block,
+            ngpus,
+            host_buffers: 3,
+            profile: HardwareProfile::quadro(),
+        };
+        let rep = simulate(Algo::CuGwas, &cfg).map_err(|e| e.to_string())?;
+        let count = |prefix: &str| {
+            rep.timeline.intervals.iter().filter(|iv| iv.label.starts_with(prefix)).count()
+        };
+        prop_assert(count("read[") == nblocks, format!("reads {} != {nblocks}", count("read[")))?;
+        prop_assert(
+            count("trsm[") == nblocks * ngpus,
+            format!("trsms {} != {}", count("trsm["), nblocks * ngpus),
+        )?;
+        prop_assert(count("sloop[") == nblocks, "sloop count".to_string())?;
+        prop_assert(count("write[") == nblocks, "write count".to_string())?;
+        // Dependency spot check: the first trsm can never start before the
+        // first read (which feeds it) has finished.
+        let first_read_end = rep
+            .timeline
+            .intervals
+            .iter()
+            .find(|iv| iv.label == "read[0]")
+            .map(|iv| iv.finish)
+            .unwrap_or(0.0);
+        let first_trsm_start = rep
+            .timeline
+            .intervals
+            .iter()
+            .find(|iv| iv.label.starts_with("trsm[0."))
+            .map(|iv| iv.start)
+            .unwrap_or(0.0);
+        prop_assert(
+            first_trsm_start >= first_read_end,
+            format!("trsm[0] at {first_trsm_start} before read[0] done {first_read_end}"),
+        )
+    });
+}
+
+/// XRD header round-trips for arbitrary geometry.
+#[test]
+fn prop_xrd_header_roundtrip() {
+    use cugwas::storage::Header;
+    forall("xrd_header", 200, |g: &mut Gen| {
+        let rows = g.usize_in(1, 1 << 20) as u64;
+        let cols = g.usize_in(1, 1 << 20) as u64;
+        let block = g.usize_in(1, cols as usize) as u64;
+        let seed = g.u64();
+        let h = Header::new(rows, cols, block, seed).map_err(|e| e.to_string())?;
+        let back = Header::from_bytes(&h.to_bytes()).map_err(|e| e.to_string())?;
+        prop_assert(h == back, format!("{h:?} != {back:?}"))?;
+        // Block geometry partitions the columns exactly.
+        let total: u64 = (0..h.block_count()).map(|b| h.cols_in_block(b)).sum();
+        prop_assert(total == cols, format!("blocks sum to {total}, cols {cols}"))
+    });
+}
+
+/// TOML parser: parse(print(x)) == x for generated documents.
+#[test]
+fn prop_toml_roundtrip() {
+    use cugwas::config::{Doc, Value};
+    forall("toml_roundtrip", 60, |g: &mut Gen| {
+        // Generate a small random document.
+        let nsec = g.usize_in(1, 3);
+        let mut text = String::new();
+        let mut expect: Vec<(String, String, Value)> = Vec::new();
+        for s in 0..nsec {
+            let section = format!("sec{s}");
+            text.push_str(&format!("[{section}]\n"));
+            let nkeys = g.usize_in(1, 4);
+            for k in 0..nkeys {
+                let key = format!("k{k}");
+                let (vtext, value) = match g.usize_in(0, 3) {
+                    0 => {
+                        let v = g.usize_in(0, 1 << 30) as i64;
+                        (format!("{v}"), Value::Integer(v))
+                    }
+                    1 => {
+                        let v = g.f64_in(-1e3, 1e3);
+                        let v = (v * 1e6).round() / 1e6;
+                        let formatted = format!("{v:?}");
+                        (formatted, Value::Float(v))
+                    }
+                    2 => {
+                        let b = g.bool_p(0.5);
+                        (format!("{b}"), Value::Bool(b))
+                    }
+                    _ => {
+                        let v = format!("str-{}", g.usize_in(0, 999));
+                        (format!("\"{v}\""), Value::String(v))
+                    }
+                };
+                text.push_str(&format!("{key} = {vtext}\n"));
+                expect.push((section.clone(), key, value));
+            }
+        }
+        let doc = Doc::parse(&text).map_err(|e| format!("{e}\n{text}"))?;
+        for (section, key, want) in expect {
+            let got = doc
+                .get(&section, &key)
+                .ok_or_else(|| format!("missing {section}.{key}\n{text}"))?;
+            // Integers may parse as Integer, which Float values never do
+            // (we format floats with a decimal point via {:?}).
+            prop_assert(got == &want, format!("{section}.{key}: {got:?} != {want:?}\n{text}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// The optimized register-blocked kernels must agree with naive
+/// reference implementations at arbitrary shapes (the 4×2 fusion has
+/// remainder paths at every edge — this sweeps them all).
+#[test]
+fn prop_linalg_kernels_match_naive() {
+    use cugwas::linalg::{gemm, potrf, trsm_lower_left, Matrix};
+    use cugwas::util::XorShift;
+    forall("linalg_kernels", 40, |g: &mut Gen| {
+        let mut rng = XorShift::new(g.u64());
+        let m = g.usize_in(1, 70);
+        let k = g.usize_in(1, 70);
+        let n = g.usize_in(1, 70);
+        // gemm vs naive triple loop.
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let mut c = Matrix::zeros(m, n);
+        gemm(1.0, &a, &b, 0.0, &mut c).map_err(|e| e.to_string())?;
+        for j in 0..n {
+            for i in 0..m {
+                let want: f64 = (0..k).map(|s| a.get(i, s) * b.get(s, j)).sum();
+                prop_assert(
+                    (c.get(i, j) - want).abs() < 1e-9 * (1.0 + want.abs()),
+                    format!("gemm {m}x{k}x{n} at ({i},{j}): {} vs {want}", c.get(i, j)),
+                )?;
+            }
+        }
+        // trsm: residual L X == B.
+        let nn = g.usize_in(1, 60);
+        let nrhs = g.usize_in(1, 20);
+        let spd = Matrix::rand_spd(nn, 3.0, &mut rng);
+        let l = potrf(&spd).map_err(|e| e.to_string())?;
+        let b0 = Matrix::randn(nn, nrhs, &mut rng);
+        let mut x = b0.clone();
+        trsm_lower_left(&l, &mut x).map_err(|e| e.to_string())?;
+        for j in 0..nrhs {
+            for i in 0..nn {
+                let lx: f64 = (0..=i).map(|s| l.get(i, s) * x.get(s, j)).sum();
+                prop_assert(
+                    (lx - b0.get(i, j)).abs() < 1e-8,
+                    format!("trsm n={nn} nrhs={nrhs} at ({i},{j})"),
+                )?;
+            }
+        }
+        // potrf: L L^T == M and lower-triangular.
+        let mut rec = Matrix::zeros(nn, nn);
+        gemm(1.0, &l, &l.transpose(), 0.0, &mut rec).map_err(|e| e.to_string())?;
+        prop_assert(
+            rec.max_abs_diff(&spd) < 1e-8,
+            format!("potrf n={nn}: reconstruction diff {}", rec.max_abs_diff(&spd)),
+        )?;
+        for j in 1..nn {
+            for i in 0..j {
+                prop_assert(l.get(i, j) == 0.0, format!("potrf upper non-zero at ({i},{j})"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Association statistics invariants over random well-posed studies.
+#[test]
+fn prop_assoc_stats_well_formed() {
+    use cugwas::gwas::problem::{Dims, Problem};
+    use cugwas::gwas::solve_incore_with_stats;
+    forall("assoc_stats", 10, |g: &mut Gen| {
+        let n = g.usize_in(30, 80);
+        let pl = g.usize_in(1, 3);
+        let m = g.usize_in(1, 12);
+        let dims = Dims::new(n, pl, m).map_err(|e| e.to_string())?;
+        let prob = Problem::synthetic(dims, g.u64()).map_err(|e| e.to_string())?;
+        let (r, stats) = solve_incore_with_stats(&prob).map_err(|e| e.to_string())?;
+        for i in 0..m {
+            let (beta, se, z) = (stats.get(0, i), stats.get(1, i), stats.get(2, i));
+            prop_assert(beta == r.get(pl, i), format!("beta mismatch snp {i}"))?;
+            prop_assert(se.is_finite() && se >= 0.0, format!("se {se} snp {i}"))?;
+            prop_assert(z.is_finite(), format!("z {z} snp {i}"))?;
+            if se > 0.0 {
+                prop_assert((z - beta / se).abs() < 1e-10, format!("z≠beta/se snp {i}"))?;
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,180 @@
+//! PJRT-backend integration: the full python→HLO→rust round trip.
+//!
+//! These tests need `make artifacts` (they are skipped with a notice when
+//! `artifacts/manifest.tsv` is absent, so `cargo test` stays green on a
+//! fresh clone). They prove the production configuration: the rust
+//! coordinator executing the AOT-compiled Pallas/JAX graphs end to end.
+
+use cugwas::coordinator::{run, verify_against_oracle, BackendKind, OffloadMode, PipelineConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::runtime::{default_artifacts_dir, ArtifactKey, Engine, HostTensor, Kind, Manifest};
+use cugwas::storage::generate;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_pjrt_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The smallest artifact shape shipped in every profile.
+const N: usize = 64;
+const PL: usize = 3;
+const MB: usize = 32;
+
+#[test]
+fn pjrt_trsm_artifact_matches_native_linalg() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest
+        .get(&ArtifactKey { kind: Kind::Trsm, n: N, pl: PL, mb: MB })
+        .unwrap();
+
+    use cugwas::linalg::{potrf, potrf_invert_diag_blocks, trsm_lower_left, Matrix};
+    use cugwas::runtime::{dinv_to_rowmajor, matrix_to_rowmajor};
+    use cugwas::util::XorShift;
+    let mut rng = XorShift::new(17);
+    let m = Matrix::rand_spd(N, 4.0, &mut rng);
+    let l = potrf(&m).unwrap();
+    let dinv = potrf_invert_diag_blocks(&l, entry.nb).unwrap();
+    let xb = Matrix::randn(N, MB, &mut rng);
+
+    let mut engine = Engine::cpu().unwrap();
+    let exe = engine.load(entry).unwrap();
+    let outs = exe
+        .run(&[
+            HostTensor::new(vec![N as i64, N as i64], matrix_to_rowmajor(&l)).unwrap(),
+            HostTensor::new(vec![N as i64, entry.nb as i64], dinv_to_rowmajor(&dinv, entry.nb, N))
+                .unwrap(),
+            // (mb, n) row-major == our (n, mb) col-major buffer, as-is.
+            HostTensor::new(vec![MB as i64, N as i64], xb.as_slice().to_vec()).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    let got = Matrix::from_vec(N, MB, outs[0].data.clone()).unwrap();
+
+    let mut want = xb.clone();
+    trsm_lower_left(&l, &mut want).unwrap();
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-9, "pjrt vs native trsm diff {diff}");
+}
+
+#[test]
+fn pjrt_pipeline_trsm_mode_matches_oracle() {
+    let Some(art) = artifacts_dir() else { return };
+    let dir = tmpdir("trsm");
+    generate(&dir, Dims::new(N, PL, 3 * MB + 7).unwrap(), MB, 21).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, MB);
+    cfg.backend = BackendKind::Pjrt { artifacts: art };
+    let report = run(&cfg).unwrap();
+    assert!(report.device_secs > 0.0);
+    verify_against_oracle(&dir, 1e-7).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pjrt_pipeline_fused_block_mode_matches_oracle() {
+    let Some(art) = artifacts_dir() else { return };
+    let dir = tmpdir("block");
+    generate(&dir, Dims::new(N, PL, 2 * MB).unwrap(), MB, 22).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, MB);
+    cfg.backend = BackendKind::Pjrt { artifacts: art };
+    cfg.mode = OffloadMode::Block;
+    run(&cfg).unwrap();
+    verify_against_oracle(&dir, 1e-7).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pjrt_pipeline_blockfull_mode_matches_oracle() {
+    let Some(art) = artifacts_dir() else { return };
+    let dir = tmpdir("blockfull");
+    generate(&dir, Dims::new(N, PL, 2 * MB + 3).unwrap(), MB, 23).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, MB);
+    cfg.backend = BackendKind::Pjrt { artifacts: art };
+    cfg.mode = OffloadMode::BlockFull;
+    run(&cfg).unwrap();
+    verify_against_oracle(&dir, 1e-7).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pjrt_multi_lane_matches_oracle() {
+    let Some(art) = artifacts_dir() else { return };
+    let dir = tmpdir("multi");
+    generate(&dir, Dims::new(N, PL, 4 * MB).unwrap(), MB, 24).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 2 * MB); // 2 lanes × MB each
+    cfg.ngpus = 2;
+    cfg.backend = BackendKind::Pjrt { artifacts: art };
+    run(&cfg).unwrap();
+    verify_against_oracle(&dir, 1e-7).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn missing_artifact_shape_is_clean_config_error() {
+    let Some(art) = artifacts_dir() else { return };
+    let dir = tmpdir("missing");
+    // n=48 exists in no profile.
+    generate(&dir, Dims::new(48, PL, 64).unwrap(), 32, 25).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 32);
+    cfg.backend = BackendKind::Pjrt { artifacts: art };
+    let err = run(&cfg).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pjrt_preprocess_artifact_matches_native_preprocess() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest
+        .get(&ArtifactKey { kind: Kind::Preprocess, n: N, pl: PL, mb: 0 })
+        .unwrap();
+
+    use cugwas::gwas::preprocess::preprocess;
+    use cugwas::gwas::problem::{Dims, Problem};
+    use cugwas::runtime::{matrix_to_rowmajor, rowmajor_to_matrix};
+    let prob = Problem::synthetic(Dims::new(N, PL, 4).unwrap(), 33).unwrap();
+    let native = preprocess(&prob.m, &prob.xl, &prob.y, entry.nb).unwrap();
+
+    let mut engine = Engine::cpu().unwrap();
+    let exe = engine.load(entry).unwrap();
+    let outs = exe
+        .run(&[
+            HostTensor::new(vec![N as i64, N as i64], matrix_to_rowmajor(&prob.m)).unwrap(),
+            HostTensor::new(vec![N as i64, PL as i64], matrix_to_rowmajor(&prob.xl)).unwrap(),
+            HostTensor::new(vec![N as i64], prob.y.clone()).unwrap(),
+        ])
+        .unwrap();
+    // Outputs: l, dinv, xlt, yt, stl, rtop (model.preprocess_entry).
+    assert_eq!(outs.len(), 6);
+    let l = rowmajor_to_matrix(N, N, &outs[0].data);
+    assert!(l.max_abs_diff(&native.l) < 1e-8, "L: {}", l.max_abs_diff(&native.l));
+    let xlt = rowmajor_to_matrix(N, PL, &outs[2].data);
+    assert!(xlt.max_abs_diff(&native.xl_t) < 1e-8);
+    for (a, b) in outs[3].data.iter().zip(&native.y_t) {
+        assert!((a - b).abs() < 1e-8);
+    }
+    let stl = rowmajor_to_matrix(PL, PL, &outs[4].data);
+    assert!(stl.max_abs_diff(&native.stl) < 1e-8);
+    for (a, b) in outs[5].data.iter().zip(&native.rtop) {
+        assert!((a - b).abs() < 1e-8);
+    }
+    // Dinv: the artifact's (n, nb) row-major stack vs native layout.
+    use cugwas::runtime::dinv_to_rowmajor;
+    let want = dinv_to_rowmajor(native.dinv.as_ref().unwrap(), entry.nb, N);
+    for (a, b) in outs[1].data.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-8);
+    }
+}
