@@ -1,0 +1,72 @@
+//! Service demo: the `cugwas serve` acceptance scenario, driven through
+//! the library API — three queued jobs, two sharing one dataset, one
+//! worker pair, and the shared block cache turning the second pass over
+//! the shared dataset into pure RAM reads.
+//!
+//! ```bash
+//! cargo run --release --example service_demo
+//! ```
+//!
+//! The equivalent CLI session (what the example also writes for you to
+//! replay) is:
+//!
+//! ```bash
+//! cugwas gen-data --dir /tmp/cugwas_service_demo/s1 --n 256 --m 4096
+//! cugwas gen-data --dir /tmp/cugwas_service_demo/s2 --n 256 --m 2048
+//! cugwas serve --config /tmp/cugwas_service_demo/service.toml
+//! ```
+
+use cugwas::config::ServiceConfig;
+use cugwas::gwas::problem::Dims;
+use cugwas::service::serve;
+use cugwas::storage::generate;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let root = std::env::temp_dir().join("cugwas_service_demo");
+    let _ = std::fs::remove_dir_all(&root);
+    let s1 = root.join("s1");
+    let s2 = root.join("s2");
+    println!("generating two synthetic studies under {} …", root.display());
+    generate(&s1, Dims::new(256, 3, 4096)?, 256, 42)?;
+    generate(&s2, Dims::new(256, 3, 2048)?, 256, 43)?;
+
+    // The same config `cugwas serve --config …` would load: alpha and
+    // gamma share dataset s1 — alpha (higher priority) streams it from
+    // disk, gamma then streams it from the shared cache.
+    let toml = format!(
+        r#"[service]
+workers = 2
+mem_budget_mb = 1024
+cache_mb = 128
+
+[job.alpha]
+dataset = "{s1}"
+block = 256
+priority = 2
+
+[job.beta]
+dataset = "{s2}"
+block = 256
+
+[job.gamma]
+dataset = "{s1}"
+block = 256
+"#,
+        s1 = s1.display(),
+        s2 = s2.display(),
+    );
+    let config_path = root.join("service.toml");
+    std::fs::write(&config_path, &toml)?;
+    println!("service config written to {} — replayable via:", config_path.display());
+    println!("  cugwas serve --config {}\n", config_path.display());
+
+    let report = serve(&ServiceConfig::from_toml(&toml)?)?;
+    print!("{}", report.render());
+    assert_eq!(report.failed(), 0, "all three jobs must complete");
+    assert!(
+        report.cache.hits > 0,
+        "the second pass over the shared dataset must hit the cache"
+    );
+    std::fs::remove_dir_all(&root)?;
+    Ok(())
+}

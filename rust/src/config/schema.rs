@@ -21,14 +21,35 @@
 //! [sim]
 //! profile = "quadro" # quadro | tesla | hdd
 //! ```
+//!
+//! A *service* configuration (for `cugwas serve`) instead uses a
+//! `[service]` section plus one `[job.<name>]` section per study:
+//!
+//! ```toml
+//! [service]
+//! workers = 2          # concurrent worker lanes
+//! mem_budget_mb = 4096 # admission budget for jobs' host footprints
+//! cache_mb = 256       # shared block cache (0 disables)
+//! spool = "spool"      # optional: watched directory of job TOMLs
+//! watch = false        # keep serving after the queue drains
+//!
+//! [job.alpha]
+//! dataset = "data/s1"
+//! block = 256
+//! priority = 2         # higher runs first; FIFO within a priority
+//!
+//! [job.beta]
+//! dataset = "data/s1"  # same dataset → second pass hits the cache
+//! ```
 
 use crate::config::toml::Doc;
 use crate::coordinator::{BackendKind, OffloadMode, PipelineConfig};
 use crate::devsim::HardwareProfile;
 use crate::error::{Error, Result};
 use crate::gwas::problem::Dims;
+use crate::service::JobSpec;
 use crate::storage::Throttle;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Simulation section.
 #[derive(Debug, Clone)]
@@ -99,28 +120,10 @@ impl RunConfig {
         let block = doc.int_or("pipeline", "block", 256)? as usize;
         let ngpus = doc.int_or("pipeline", "ngpus", 1)? as usize;
         let host_buffers = doc.int_or("pipeline", "host_buffers", 3)? as usize;
-        let mode = match doc.str_or("pipeline", "mode", "trsm")? {
-            "trsm" => OffloadMode::Trsm,
-            "block" => OffloadMode::Block,
-            "blockfull" => OffloadMode::BlockFull,
-            other => return Err(Error::Config(format!("unknown mode '{other}'"))),
-        };
-        let backend = match doc.str_or("pipeline", "backend", "native")? {
-            "native" => BackendKind::Native,
-            "pjrt" => BackendKind::Pjrt {
-                artifacts: PathBuf::from(doc.str_or("pipeline", "artifacts", "artifacts")?),
-            },
-            other => return Err(Error::Config(format!("unknown backend '{other}'"))),
-        };
-        let throttle = |mbps: f64| {
-            if mbps > 0.0 {
-                Some(Throttle { bytes_per_sec: mbps * 1e6 })
-            } else {
-                None
-            }
-        };
-        let read_throttle = throttle(doc.float_or("pipeline", "read_mbps", 0.0)?);
-        let write_throttle = throttle(doc.float_or("pipeline", "write_mbps", 0.0)?);
+        let mode = parse_mode(doc.str_or("pipeline", "mode", "trsm")?)?;
+        let backend = parse_backend(doc, "pipeline")?;
+        let read_throttle = throttle_of(doc.float_or("pipeline", "read_mbps", 0.0)?);
+        let write_throttle = throttle_of(doc.float_or("pipeline", "write_mbps", 0.0)?);
 
         let profile = match doc.str_or("sim", "profile", "quadro")? {
             "quadro" => HardwareProfile::quadro(),
@@ -144,6 +147,7 @@ impl RunConfig {
                 read_throttle,
                 write_throttle,
                 resume: false,
+                cache: None,
             },
             sim: SimSection { profile },
         })
@@ -152,6 +156,182 @@ impl RunConfig {
     /// All defaults (native backend, synthetic mid-size study).
     pub fn defaults() -> RunConfig {
         Self::from_toml("").expect("defaults parse")
+    }
+}
+
+fn parse_mode(s: &str) -> Result<OffloadMode> {
+    match s {
+        "trsm" => Ok(OffloadMode::Trsm),
+        "block" => Ok(OffloadMode::Block),
+        "blockfull" => Ok(OffloadMode::BlockFull),
+        other => Err(Error::Config(format!("unknown mode '{other}'"))),
+    }
+}
+
+fn parse_backend(doc: &Doc, section: &str) -> Result<BackendKind> {
+    match doc.str_or(section, "backend", "native")? {
+        "native" => Ok(BackendKind::Native),
+        "pjrt" => Ok(BackendKind::Pjrt {
+            artifacts: PathBuf::from(doc.str_or(section, "artifacts", "artifacts")?),
+        }),
+        other => Err(Error::Config(format!("unknown backend '{other}'"))),
+    }
+}
+
+fn throttle_of(mbps: f64) -> Option<Throttle> {
+    if mbps > 0.0 {
+        Some(Throttle { bytes_per_sec: mbps * 1e6 })
+    } else {
+        None
+    }
+}
+
+/// Integer in `[min, max]` — out-of-range config (negative worker
+/// counts, zero block sizes, absurd budgets) becomes `Error::Config`
+/// instead of a wrapped cast or a downstream panic.
+fn int_in(doc: &Doc, section: &str, key: &str, default: i64, min: i64, max: i64) -> Result<i64> {
+    let v = doc.int_or(section, key, default)?;
+    if v < min || v > max {
+        return Err(Error::Config(format!(
+            "{section}.{key} = {v}: must be in {min}..={max}"
+        )));
+    }
+    Ok(v)
+}
+
+/// Keys a `[job.*]` (or spool `[job]`) section may carry.
+const JOB_KEYS: &[&str] = &[
+    "dataset",
+    "block",
+    "ngpus",
+    "host_buffers",
+    "mode",
+    "backend",
+    "artifacts",
+    "priority",
+    "read_mbps",
+    "write_mbps",
+];
+
+/// Parse one job section into a [`JobSpec`]. `dataset` is required;
+/// everything else falls back to the pipeline defaults.
+fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
+    for key in doc.keys_in(section) {
+        if !JOB_KEYS.contains(&key) {
+            return Err(Error::Config(format!("unknown key {section}.{key}")));
+        }
+    }
+    let dataset = doc
+        .get(section, "dataset")
+        .ok_or_else(|| Error::Config(format!("job '{name}': missing dataset")))?
+        .as_str()
+        .ok_or_else(|| Error::Config(format!("job '{name}': dataset must be a string")))?;
+    let mut spec = JobSpec::new(name, dataset);
+    spec.block = int_in(doc, section, "block", spec.block as i64, 1, 1 << 30)? as usize;
+    spec.ngpus = int_in(doc, section, "ngpus", spec.ngpus as i64, 1, 4096)? as usize;
+    spec.host_buffers =
+        int_in(doc, section, "host_buffers", spec.host_buffers as i64, 2, 1024)? as usize;
+    spec.mode = parse_mode(doc.str_or(section, "mode", "trsm")?)?;
+    spec.backend = parse_backend(doc, section)?;
+    spec.priority =
+        int_in(doc, section, "priority", 0, i32::MIN as i64, i32::MAX as i64)? as i32;
+    spec.read_throttle = throttle_of(doc.float_or(section, "read_mbps", 0.0)?);
+    spec.write_throttle = throttle_of(doc.float_or(section, "write_mbps", 0.0)?);
+    Ok(spec)
+}
+
+/// `cugwas serve` configuration: the `[service]` section plus one
+/// `[job.<name>]` per queued study (see module docs for the grammar).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Concurrent worker lanes (each one full pipeline).
+    pub workers: usize,
+    /// Admission budget for the jobs' estimated host footprints.
+    pub mem_budget_bytes: u64,
+    /// Shared block-cache budget; 0 disables caching.
+    pub cache_bytes: u64,
+    /// Optional spool directory of single-job TOML files.
+    pub spool: Option<PathBuf>,
+    /// Keep polling the spool after the queue drains (a true daemon).
+    pub watch: bool,
+    /// Jobs from `[job.*]` sections, in section (alphabetical) order —
+    /// `priority` is the scheduling knob, not file order.
+    pub jobs: Vec<JobSpec>,
+}
+
+impl ServiceConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<ServiceConfig> {
+        Self::from_doc(&Doc::parse(text)?)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<ServiceConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("reading config {}", path.display()), e))?;
+        Self::from_toml(&text)
+    }
+
+    /// Built from a parsed document; unknown sections/keys are errors.
+    pub fn from_doc(doc: &Doc) -> Result<ServiceConfig> {
+        for section in doc.sections() {
+            match section {
+                "service" => {}
+                "" => {
+                    if let Some(key) = doc.keys_in("").first() {
+                        return Err(Error::Config(format!("unknown top-level key {key}")));
+                    }
+                }
+                s if s.strip_prefix("job.").is_some_and(|n| !n.is_empty()) => {}
+                other => return Err(Error::Config(format!("unknown section [{other}]"))),
+            }
+        }
+        for key in doc.keys_in("service") {
+            if !["workers", "mem_budget_mb", "cache_mb", "spool", "watch"].contains(&key) {
+                return Err(Error::Config(format!("unknown key service.{key}")));
+            }
+        }
+        let workers = int_in(doc, "service", "workers", 2, 1, 4096)? as usize;
+        // ≤ 2^40 MB keeps the <<20 shift far from u64 overflow.
+        let mem_budget_mb = int_in(doc, "service", "mem_budget_mb", 4096, 1, 1 << 40)?;
+        let cache_mb = int_in(doc, "service", "cache_mb", 256, 0, 1 << 40)?;
+        let spool = match doc.get("service", "spool") {
+            None => None,
+            Some(v) => Some(PathBuf::from(v.as_str().ok_or_else(|| {
+                Error::Config("service.spool: expected string".into())
+            })?)),
+        };
+        let watch = doc.bool_or("service", "watch", false)?;
+        let mut jobs = Vec::new();
+        for section in doc.sections() {
+            if let Some(name) = section.strip_prefix("job.") {
+                jobs.push(job_from_doc(doc, section, name)?);
+            }
+        }
+        Ok(ServiceConfig {
+            workers,
+            mem_budget_bytes: (mem_budget_mb as u64) << 20,
+            cache_bytes: (cache_mb as u64) << 20,
+            spool,
+            watch,
+            jobs,
+        })
+    }
+
+    /// Parse a spool job file: a single `[job]` section; the job's name
+    /// is the file stem (passed in by the scheduler).
+    pub fn job_from_file(path: &Path, name: &str) -> Result<JobSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("reading job file {}", path.display()), e))?;
+        let doc = Doc::parse(&text)?;
+        for section in doc.sections() {
+            if section != "job" {
+                return Err(Error::Config(format!(
+                    "spool job file: unexpected section [{section}] (expected [job])"
+                )));
+            }
+        }
+        job_from_doc(&doc, "job", name)
     }
 }
 
@@ -210,5 +390,113 @@ profile = "tesla"
         assert!(RunConfig::from_toml("[pipeline]\nmode = \"warp\"\n").is_err());
         assert!(RunConfig::from_toml("[sim]\nprofile = \"cray\"\n").is_err());
         assert!(RunConfig::from_toml("[dataset]\nn = 0\n").is_err());
+    }
+
+    #[test]
+    fn service_config_parses() {
+        let c = ServiceConfig::from_toml(
+            r#"
+[service]
+workers = 3
+mem_budget_mb = 1024
+cache_mb = 64
+spool = "spool"
+watch = true
+
+[job.alpha]
+dataset = "data/s1"
+block = 128
+priority = 2
+read_mbps = 120.0
+
+[job.beta]
+dataset = "data/s1"
+mode = "block"
+backend = "pjrt"
+artifacts = "arts"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.mem_budget_bytes, 1024 << 20);
+        assert_eq!(c.cache_bytes, 64 << 20);
+        assert_eq!(c.spool.as_deref(), Some(std::path::Path::new("spool")));
+        assert!(c.watch);
+        assert_eq!(c.jobs.len(), 2);
+        // Sections come back in alphabetical order.
+        assert_eq!(c.jobs[0].name, "alpha");
+        assert_eq!(c.jobs[0].block, 128);
+        assert_eq!(c.jobs[0].priority, 2);
+        assert!(c.jobs[0].read_throttle.is_some());
+        assert_eq!(c.jobs[1].name, "beta");
+        assert!(matches!(c.jobs[1].mode, OffloadMode::Block));
+        match &c.jobs[1].backend {
+            BackendKind::Pjrt { artifacts } => assert_eq!(artifacts.to_str(), Some("arts")),
+            _ => panic!("expected pjrt backend"),
+        }
+    }
+
+    #[test]
+    fn service_defaults_are_sane() {
+        let c = ServiceConfig::from_toml("").unwrap();
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.mem_budget_bytes, 4096 << 20);
+        assert_eq!(c.cache_bytes, 256 << 20);
+        assert!(c.spool.is_none());
+        assert!(!c.watch);
+        assert!(c.jobs.is_empty());
+    }
+
+    #[test]
+    fn service_config_rejects_garbage() {
+        // Unknown section / key, missing dataset, empty job name, bad budget.
+        assert!(ServiceConfig::from_toml("[servce]\nworkers = 1\n").is_err());
+        assert!(ServiceConfig::from_toml("[service]\nworker = 1\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\nblock = 8\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nblokc = 8\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.]\ndataset = \"d\"\n").is_err());
+        assert!(ServiceConfig::from_toml("[service]\nmem_budget_mb = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nmode = \"warp\"\n").is_err());
+    }
+
+    #[test]
+    fn service_config_rejects_out_of_range_integers() {
+        // Negative/zero values must become Error::Config, not wrapped
+        // casts that panic (or allocate absurdly) downstream.
+        assert!(ServiceConfig::from_toml("[service]\nworkers = -1\n").is_err());
+        assert!(ServiceConfig::from_toml("[service]\nworkers = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[service]\ncache_mb = -5\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nblock = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nblock = -1\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nngpus = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nhost_buffers = 1\n").is_err());
+    }
+
+    #[test]
+    fn empty_job_section_is_an_error_not_a_silent_drop() {
+        // `[job.gamma]` with its body deleted must fail loudly (missing
+        // dataset), not parse to a config with one fewer job.
+        let err = ServiceConfig::from_toml("[job.gamma]\n").unwrap_err();
+        assert!(err.to_string().contains("missing dataset"), "{err}");
+        // Same for a typo'd empty section.
+        assert!(ServiceConfig::from_toml("[servce]\n").is_err());
+    }
+
+    #[test]
+    fn spool_job_file_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("cugwas_schema_{}_spool", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("myjob.toml");
+        std::fs::write(&p, "[job]\ndataset = \"data/x\"\npriority = 7\n").unwrap();
+        let spec = ServiceConfig::job_from_file(&p, "myjob").unwrap();
+        assert_eq!(spec.name, "myjob");
+        assert_eq!(spec.priority, 7);
+        assert_eq!(spec.dataset.to_str(), Some("data/x"));
+        // A stray section is rejected.
+        std::fs::write(&p, "[job]\ndataset = \"d\"\n[extra]\nx = 1\n").unwrap();
+        assert!(ServiceConfig::job_from_file(&p, "myjob").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

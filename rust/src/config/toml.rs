@@ -47,9 +47,13 @@ impl Value {
 }
 
 /// Parsed document: `section.key → value`. Top-level keys use section "".
+/// Section headers are tracked even when the section body is empty, so
+/// schema validators see (and can reject or require keys in) a section
+/// the author declared but left blank.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Doc {
     values: BTreeMap<(String, String), Value>,
+    headers: std::collections::BTreeSet<String>,
 }
 
 impl Doc {
@@ -71,6 +75,7 @@ impl Doc {
                     return Err(errline("empty section name".into()));
                 }
                 section = name.to_string();
+                doc.headers.insert(section.clone());
                 continue;
             }
             let (k, v) = line
@@ -142,8 +147,15 @@ impl Doc {
             .collect()
     }
 
+    /// All declared sections — including ones with no keys (a header
+    /// whose body was forgotten must not silently vanish).
     pub fn sections(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.values.keys().map(|(s, _)| s.as_str()).collect();
+        let mut v: Vec<&str> = self
+            .values
+            .keys()
+            .map(|(s, _)| s.as_str())
+            .chain(self.headers.iter().map(|s| s.as_str()))
+            .collect();
         v.sort_unstable();
         v.dedup();
         v
@@ -247,6 +259,15 @@ disk_mbps = 120.5
         let mut keys = doc.keys_in("a");
         keys.sort_unstable();
         assert_eq!(keys, vec!["y", "z"]);
+    }
+
+    #[test]
+    fn empty_sections_are_still_declared() {
+        // A header whose body was forgotten must be visible to schema
+        // validators, not silently dropped.
+        let doc = Doc::parse("[a]\nx = 1\n[empty]\n").unwrap();
+        assert_eq!(doc.sections(), vec!["a", "empty"]);
+        assert!(doc.keys_in("empty").is_empty());
     }
 
     #[test]

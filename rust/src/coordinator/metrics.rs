@@ -20,6 +20,12 @@ pub enum Phase {
     Sloop,
     /// Waiting on `aio_write` of results.
     WriteWait,
+    /// Block served from the shared block cache (no disk read issued);
+    /// the duration is the RAM memcpy.
+    CacheHit,
+    /// Block absent from the cache — a real disk read was issued (count
+    /// tracks misses; the read time itself lands in `ReadWait`).
+    CacheMiss,
     /// Everything else on the coordinator thread (rotation, bookkeeping).
     Other,
 }
@@ -33,17 +39,21 @@ impl Phase {
             Phase::RecvWait => "recv_wait",
             Phase::Sloop => "sloop",
             Phase::WriteWait => "write_wait",
+            Phase::CacheHit => "cache_hit",
+            Phase::CacheMiss => "cache_miss",
             Phase::Other => "other",
         }
     }
 
-    pub const ALL: [Phase; 7] = [
+    pub const ALL: [Phase; 9] = [
         Phase::ReadWait,
         Phase::Send,
         Phase::DeviceCompute,
         Phase::RecvWait,
         Phase::Sloop,
         Phase::WriteWait,
+        Phase::CacheHit,
+        Phase::CacheMiss,
         Phase::Other,
     ];
 }

@@ -25,10 +25,13 @@ use crate::gwas::preprocess::{preprocess, Preprocessed};
 use crate::gwas::sloop::{sloop_block, sloop_from_reductions, SloopScratch};
 use crate::linalg::Matrix;
 use crate::runtime::{ArtifactKey, Kind, Manifest};
-use crate::storage::{dataset, AioEngine, AioHandle, Header, Throttle, XrdFile};
+use crate::storage::{
+    dataset, AioEngine, AioHandle, BlockCache, BlockKey, Header, Throttle, XrdFile,
+};
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Which compute backend the lanes use.
 #[derive(Debug, Clone)]
@@ -59,6 +62,11 @@ pub struct PipelineConfig {
     /// skipped (their results are already on disk). Studies at paper
     /// scale run for hours-to-days — a crash must not restart from zero.
     pub resume: bool,
+    /// Shared block cache (the multi-study service hands the same
+    /// `Arc` to every job): reads probe it first and misses populate it,
+    /// so repeated studies over one dataset skip the HDD entirely.
+    /// `None` (the default) streams straight from disk, as the paper does.
+    pub cache: Option<Arc<BlockCache>>,
 }
 
 impl PipelineConfig {
@@ -75,6 +83,7 @@ impl PipelineConfig {
             read_throttle: None,
             write_throttle: None,
             resume: false,
+            cache: None,
         }
     }
 }
@@ -198,10 +207,22 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
     let read_ahead = cfg.host_buffers.saturating_sub(1).max(1);
     let mut metrics = Metrics::new();
     let mut scratch = SloopScratch::new(dims.pl);
+    // Canonical dataset identity for cache keys — the same helper the
+    // scheduler's per-dataset lock uses, so the two can never diverge.
+    let cache_dataset: Option<String> = cfg
+        .cache
+        .as_ref()
+        .map(|_| dataset::canonical_key(&cfg.dataset).to_string_lossy().into_owned());
+    let block_key = |ds: &str, b: usize, live: usize| BlockKey {
+        dataset: ds.to_string(),
+        col0: (b * cfg.block) as u64,
+        ncols: live as u64,
+    };
     let t_wall = Instant::now();
 
     // ---- pipeline state ------------------------------------------------
-    let mut pending_reads: VecDeque<(usize, AioHandle)> = VecDeque::new();
+    // (block id, in-flight read, whether it was served from the cache)
+    let mut pending_reads: VecDeque<(usize, AioHandle, bool)> = VecDeque::new();
     let mut next_read = 0usize; // index into `todo`
     let mut assemblies: HashMap<usize, BlockAssembly> = HashMap::new();
     let mut pending_writes: VecDeque<(usize, AioHandle)> = VecDeque::new();
@@ -211,7 +232,10 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         if (b + 1) * cfg.block <= dims.m { cfg.block } else { dims.m - b * cfg.block }
     };
 
-    // Submit disk reads up to the ring's read-ahead.
+    // Submit disk reads up to the ring's read-ahead. With a shared cache
+    // attached, each block first probes it: a hit is an already-complete
+    // "read" served from RAM (no disk I/O), a miss goes to the engine as
+    // usual and is inserted into the cache on arrival.
     macro_rules! pump_reads {
         () => {
             while next_read < njobs && pending_reads.len() < read_ahead {
@@ -220,8 +244,25 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
                         let b = todo[next_read];
                         let live = cols_in(b);
                         buf.truncate(n * live);
-                        let h = reader.read_cols((b * cfg.block) as u64, live as u64, buf);
-                        pending_reads.push_back((b, h));
+                        let mut from_cache = false;
+                        if let (Some(cache), Some(ds)) =
+                            (cfg.cache.as_deref(), cache_dataset.as_deref())
+                        {
+                            let key = block_key(ds, b, live);
+                            let t0 = Instant::now();
+                            if cache.get_into(&key, &mut buf) {
+                                metrics.add(Phase::CacheHit, t0.elapsed());
+                                from_cache = true;
+                            } else {
+                                metrics.add(Phase::CacheMiss, Duration::ZERO);
+                            }
+                        }
+                        let h = if from_cache {
+                            AioHandle::ready(buf, Ok(()))
+                        } else {
+                            reader.read_cols((b * cfg.block) as u64, live as u64, buf)
+                        };
+                        pending_reads.push_back((b, h, from_cache));
                         next_read += 1;
                     }
                     None => break,
@@ -310,7 +351,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
     // ---- main loop (Listing 1.3) ----------------------------------------
     for &b in &todo {
         pump_reads!();
-        let (rb_idx, handle) = pending_reads
+        let (rb_idx, handle, from_cache) = pending_reads
             .pop_front()
             .ok_or_else(|| Error::Pipeline("no pending read (pool starved?)".into()))?;
         debug_assert_eq!(rb_idx, b);
@@ -319,6 +360,13 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         metrics.add(Phase::ReadWait, t0.elapsed());
         res?;
         let live_total = cols_in(b);
+        // A freshly read (miss) block becomes cache residency for the
+        // next job streaming this dataset.
+        if !from_cache {
+            if let (Some(cache), Some(ds)) = (cfg.cache.as_deref(), cache_dataset.as_deref()) {
+                cache.insert(block_key(ds, b, live_total), &buf);
+            }
+        }
         let chunks = live_total.div_ceil(mb_gpu);
 
         // Split-send to lanes (cu_send; blocking on pool = cu_send_wait).

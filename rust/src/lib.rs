@@ -30,6 +30,10 @@
 //!   constants (Quadro 6000 / Tesla S2050 clusters).
 //! * [`coordinator`] — the paper's contribution: the multibuffered
 //!   streaming pipeline (Listing 1.3).
+//! * [`service`] — the multi-study scheduler behind `cugwas serve`: a
+//!   priority job queue with memory-budget admission, worker lanes over
+//!   the coordinator, and the shared [`storage::BlockCache`] that lets
+//!   concurrent/repeated studies on one dataset skip the HDD.
 //! * [`baselines`] — naive offload (Fig. 3), OOC-HP-GWAS (Listing 1.2),
 //!   and a ProbABEL-like per-SNP solver.
 
@@ -44,6 +48,7 @@ pub mod gwas;
 pub mod linalg;
 pub mod proptest;
 pub mod runtime;
+pub mod service;
 pub mod stats;
 pub mod storage;
 pub mod util;

@@ -3,6 +3,7 @@
 //! ```text
 //! cugwas gen-data  --dir data/s1 --n 512 --m 4096          # synthesize a study
 //! cugwas run       --dataset data/s1 --block 256 --backend pjrt
+//! cugwas serve     --config service.toml                   # multi-study scheduler
 //! cugwas baseline  --dataset data/s1 --algo ooc            # OOC-HP-GWAS / naive / probabel
 //! cugwas sim       --algo cugwas --m 1000000 --ngpus 4     # paper-scale DES
 //! cugwas catalog                                           # Fig. 1 data
@@ -34,6 +35,7 @@ fn main() -> ExitCode {
         "gen-data" => cmd_gen_data(rest),
         "inspect" => cmd_inspect(rest),
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "baseline" => cmd_baseline(rest),
         "sim" => cmd_sim(rest),
         "assoc" => cmd_assoc(rest),
@@ -63,6 +65,7 @@ fn print_global_usage() {
          \x20 gen-data    synthesize a study dataset on disk\n\
          \x20 inspect     describe a dataset directory\n\
          \x20 run         stream a study through the cuGWAS pipeline\n\
+         \x20 serve       multi-study scheduler with a shared block cache\n\
          \x20 baseline    run a comparison solver (ooc | naive | probabel)\n\
          \x20 assoc       association statistics (beta, se, z) per SNP\n\
          \x20 sim         discrete-event simulation at paper scale\n\
@@ -207,6 +210,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         read_throttle: parse_throttle(&a, "read-mbps")?,
         write_throttle: parse_throttle(&a, "write-mbps")?,
         resume: a.switch("resume"),
+        cache: None,
     };
     let report = coordinator::run(&cfg)?;
     println!(
@@ -221,6 +225,36 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     if a.switch("verify") {
         let diff = coordinator::verify_against_oracle(Path::new(a.str("dataset")), 1e-7)?;
         println!("verified against in-core oracle: max |Δ| = {diff:.2e}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- serve
+
+const SERVE_FLAGS: &[Flag] = &[
+    Flag::req("config", "service TOML ([service] + [job.*] sections)"),
+    Flag::opt("spool", "", "spool directory of job TOMLs (overrides config)"),
+    Flag::switch("watch", "keep polling the spool after the queue drains"),
+];
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    if wants_help(argv) {
+        let about = "run queued studies through the multi-study scheduler";
+        print!("{}", usage("serve", about, SERVE_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, SERVE_FLAGS)?;
+    let mut cfg = cugwas::config::ServiceConfig::load(Path::new(a.str("config")))?;
+    if !a.str("spool").is_empty() {
+        cfg.spool = Some(PathBuf::from(a.str("spool")));
+    }
+    if a.switch("watch") {
+        cfg.watch = true;
+    }
+    let report = cugwas::service::serve(&cfg)?;
+    print!("{}", report.render());
+    if report.failed() > 0 {
+        return Err(Error::Pipeline(format!("{} job(s) failed", report.failed())));
     }
     Ok(())
 }

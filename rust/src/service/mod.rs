@@ -1,0 +1,25 @@
+//! The multi-study streaming service — the layer that turns the batch
+//! tool into a server.
+//!
+//! The paper's pipeline sustains one study at the disk's peak; the
+//! service multiplexes *many* studies over that machinery and amortizes
+//! disk reads across them through the shared
+//! [`BlockCache`](crate::storage::BlockCache):
+//!
+//! * [`queue`] — [`JobQueue`]: priority + FIFO ordering, admission
+//!   under an explicit host-memory budget, per-job lifecycle states.
+//! * [`scheduler`] — [`serve`]: fixed worker lanes driving
+//!   `coordinator::run`, a watched spool directory, the dispatch loop.
+//! * [`report`] — [`JobReport`] / [`ServiceReport`]: per-job phase
+//!   metrics and aggregate throughput, printed by `cugwas serve`.
+//!
+//! Configuration comes from the `[service]` and `[job.*]` sections of a
+//! TOML file (see [`crate::config::ServiceConfig`]).
+
+pub mod queue;
+pub mod report;
+pub mod scheduler;
+
+pub use queue::{Job, JobQueue, JobSpec, JobState, Priority};
+pub use report::{JobReport, ServiceReport};
+pub use scheduler::serve;

@@ -1,0 +1,305 @@
+//! Job queue: priority + FIFO ordering, admission under a host-memory
+//! budget, and per-job lifecycle states.
+//!
+//! A [`Job`] is one study to stream through the coordinator. The queue
+//! orders runnable work by **priority (higher first), then submission
+//! order (FIFO within a priority)** — the classic batch-scheduler
+//! discipline. Admission is *first-fit under constraints*: the best-
+//! ranked job whose estimated host footprint fits the remaining memory
+//! budget and whose dataset is not already being streamed is admitted;
+//! a job that does not fit right now is skipped, not cancelled, and is
+//! reconsidered every time capacity frees up.
+//!
+//! The dataset exclusivity rule exists because the pipeline writes its
+//! results to `<dataset>/r.xrd` — two concurrent jobs on one dataset
+//! would race on that file. Serializing them is also exactly what makes
+//! the shared [`BlockCache`](crate::storage::BlockCache) pay: the first
+//! job faults the blocks in, the follow-ups stream from RAM.
+
+use crate::coordinator::{BackendKind, OffloadMode};
+use crate::storage::Throttle;
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+/// Scheduling priority: higher runs first; FIFO within equal priority.
+pub type Priority = i32;
+
+/// Everything one queued study needs from the pipeline.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Display / report name (config section name or spool file stem).
+    pub name: String,
+    /// Dataset directory (from `storage::generate`).
+    pub dataset: PathBuf,
+    /// SNP columns per pipeline iteration.
+    pub block: usize,
+    /// Device lanes.
+    pub ngpus: usize,
+    /// Host ring size (paper: 3).
+    pub host_buffers: usize,
+    pub mode: OffloadMode,
+    pub backend: BackendKind,
+    pub priority: Priority,
+    pub read_throttle: Option<Throttle>,
+    pub write_throttle: Option<Throttle>,
+}
+
+impl JobSpec {
+    /// Paper-topology defaults: block 256, 1 lane, 3 host buffers,
+    /// trsm offload, native backend, priority 0.
+    pub fn new(name: impl Into<String>, dataset: impl Into<PathBuf>) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            dataset: dataset.into(),
+            block: 256,
+            ngpus: 1,
+            host_buffers: 3,
+            mode: OffloadMode::Trsm,
+            backend: BackendKind::Native,
+            priority: 0,
+            read_throttle: None,
+            write_throttle: None,
+        }
+    }
+
+    /// Estimated steady-state host bytes for this job given the study's
+    /// sample count `n` and result rows `p`: the host ring, the result
+    /// ring, the per-lane device staging chunks, and the dense sidecars
+    /// (kinship dominates at n²). Deliberately a slight over-estimate —
+    /// admission errs toward not thrashing.
+    pub fn host_bytes(&self, n: usize, p: usize) -> u64 {
+        let mb_gpu = self.block / self.ngpus.max(1);
+        let host_ring = self.host_buffers * n * self.block;
+        let result_ring = self.host_buffers * p * self.block;
+        let chunks = 2 * self.ngpus * n * mb_gpu;
+        let sidecars = n * n + n * p + n;
+        (8 * (host_ring + result_ring + chunks + sidecars)) as u64
+    }
+}
+
+/// Lifecycle of a job inside the service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted, waiting for admission.
+    Queued,
+    /// Admitted under the memory budget, handed to a worker lane.
+    Admitted,
+    /// A worker lane is streaming it through the coordinator.
+    Streaming,
+    /// Finished successfully; results are on disk.
+    Done,
+    /// Failed (admission impossible, dataset missing, or pipeline error).
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Admitted => "admitted",
+            JobState::Streaming => "streaming",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// A submitted job with its queue bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Monotone submission id — the FIFO tiebreaker.
+    pub id: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Admission-time host-memory estimate (bytes).
+    pub est_bytes: u64,
+    /// Canonical dataset identity (for the one-job-per-dataset rule and
+    /// the shared cache key).
+    pub dataset_key: PathBuf,
+}
+
+/// The service's job queue (see module docs for the ordering rules).
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    jobs: Vec<Job>,
+    next_id: u64,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&mut self, spec: JobSpec, est_bytes: u64, dataset_key: PathBuf) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.push(Job { id, spec, state: JobState::Queued, est_bytes, dataset_key });
+        id
+    }
+
+    /// Admit the next runnable job: highest priority, FIFO within
+    /// priority, skipping jobs that don't fit `budget_left` or whose
+    /// dataset is in `busy_datasets`. The admitted job transitions
+    /// `Queued → Admitted` and a copy is returned.
+    pub fn admit_next(
+        &mut self,
+        budget_left: u64,
+        busy_datasets: &HashSet<PathBuf>,
+    ) -> Option<Job> {
+        let idx = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| {
+                j.state == JobState::Queued
+                    && j.est_bytes <= budget_left
+                    && !busy_datasets.contains(&j.dataset_key)
+            })
+            .max_by_key(|(_, j)| (j.spec.priority, std::cmp::Reverse(j.id)))
+            .map(|(i, _)| i)?;
+        self.jobs[idx].state = JobState::Admitted;
+        Some(self.jobs[idx].clone())
+    }
+
+    /// Mark every queued job whose estimate exceeds the *total* budget as
+    /// failed (it could never be admitted, even on an idle service) and
+    /// return copies for reporting.
+    pub fn fail_oversized(&mut self, total_budget: u64) -> Vec<Job> {
+        let mut failed = Vec::new();
+        for j in &mut self.jobs {
+            if j.state == JobState::Queued && j.est_bytes > total_budget {
+                j.state = JobState::Failed;
+                failed.push(j.clone());
+            }
+        }
+        failed
+    }
+
+    pub fn set_state(&mut self, id: u64, state: JobState) {
+        if let Some(j) = self.jobs.iter_mut().find(|j| j.id == id) {
+            j.state = state;
+        }
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Job> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    pub fn all(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// Jobs still waiting for admission.
+    pub fn queued(&self) -> usize {
+        self.jobs.iter().filter(|j| j.state == JobState::Queued).count()
+    }
+
+    /// No job is queued, admitted, or streaming — the service may exit.
+    pub fn is_drained(&self) -> bool {
+        self.jobs
+            .iter()
+            .all(|j| matches!(j.state, JobState::Done | JobState::Failed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, priority: Priority) -> JobSpec {
+        let mut s = JobSpec::new(name, format!("/data/{name}"));
+        s.priority = priority;
+        s
+    }
+
+    fn submit(q: &mut JobQueue, name: &str, priority: Priority, est: u64) -> u64 {
+        let s = spec(name, priority);
+        let key = s.dataset.clone();
+        q.submit(s, est, key)
+    }
+
+    fn no_busy() -> HashSet<PathBuf> {
+        HashSet::new()
+    }
+
+    #[test]
+    fn priority_then_fifo_ordering() {
+        let mut q = JobQueue::new();
+        submit(&mut q, "low", 0, 10);
+        submit(&mut q, "hi-first", 5, 10);
+        submit(&mut q, "hi-second", 5, 10);
+        let order: Vec<String> = std::iter::from_fn(|| q.admit_next(u64::MAX, &no_busy()))
+            .map(|j| j.spec.name)
+            .collect();
+        assert_eq!(order, ["hi-first", "hi-second", "low"]);
+        assert_eq!(q.queued(), 0);
+    }
+
+    #[test]
+    fn admission_respects_memory_budget() {
+        let mut q = JobQueue::new();
+        submit(&mut q, "big", 9, 1000); // best priority but does not fit
+        submit(&mut q, "small", 0, 100);
+        let j = q.admit_next(500, &no_busy()).expect("small fits");
+        assert_eq!(j.spec.name, "small");
+        // Nothing else fits in the remaining budget.
+        assert!(q.admit_next(400, &no_busy()).is_none());
+        assert_eq!(q.queued(), 1, "big is still queued, not cancelled");
+        // Capacity frees up → big is admitted.
+        let j = q.admit_next(1000, &no_busy()).expect("big fits now");
+        assert_eq!(j.spec.name, "big");
+    }
+
+    #[test]
+    fn one_job_per_dataset_at_a_time() {
+        let mut q = JobQueue::new();
+        let s1 = JobSpec::new("a", "/data/shared");
+        let s2 = JobSpec::new("b", "/data/shared");
+        q.submit(s1, 10, PathBuf::from("/data/shared"));
+        q.submit(s2, 10, PathBuf::from("/data/shared"));
+        let first = q.admit_next(u64::MAX, &no_busy()).expect("first admits");
+        let mut busy = HashSet::new();
+        busy.insert(first.dataset_key.clone());
+        assert!(q.admit_next(u64::MAX, &busy).is_none(), "dataset is locked");
+        busy.clear();
+        let second = q.admit_next(u64::MAX, &busy).expect("unlocked");
+        assert_eq!(second.spec.name, "b");
+    }
+
+    #[test]
+    fn oversized_jobs_fail_fast() {
+        let mut q = JobQueue::new();
+        submit(&mut q, "fits", 0, 100);
+        submit(&mut q, "never", 0, 10_000);
+        let failed = q.fail_oversized(1000);
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].spec.name, "never");
+        assert_eq!(q.get(failed[0].id).unwrap().state, JobState::Failed);
+        assert_eq!(q.queued(), 1);
+    }
+
+    #[test]
+    fn lifecycle_and_drained() {
+        let mut q = JobQueue::new();
+        let id = submit(&mut q, "a", 0, 10);
+        assert!(!q.is_drained());
+        let j = q.admit_next(u64::MAX, &no_busy()).unwrap();
+        assert_eq!(j.id, id);
+        assert_eq!(q.get(id).unwrap().state, JobState::Admitted);
+        q.set_state(id, JobState::Streaming);
+        assert!(!q.is_drained());
+        q.set_state(id, JobState::Done);
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn host_bytes_scales_with_dims() {
+        let s = JobSpec::new("x", "/d");
+        let small = s.host_bytes(64, 4);
+        let big = s.host_bytes(512, 4);
+        assert!(big > small);
+        // Kinship (n²) is included: doubling n more than doubles the bill.
+        assert!(s.host_bytes(1024, 4) > 2 * s.host_bytes(512, 4));
+    }
+}

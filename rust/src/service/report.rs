@@ -1,0 +1,214 @@
+//! Per-job and aggregate reporting for the multi-study service — the
+//! service-level counterpart of the pipeline's `Metrics` table.
+
+use crate::coordinator::{Metrics, Phase};
+use crate::storage::CacheStats;
+use crate::util::{human_bytes, human_duration};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Outcome of one job, in completion order.
+#[derive(Debug)]
+pub struct JobReport {
+    pub name: String,
+    pub dataset: PathBuf,
+    pub priority: i32,
+    /// Wall seconds spent streaming (0 for jobs failed before running).
+    pub wall_secs: f64,
+    pub snps: usize,
+    pub blocks: usize,
+    pub snps_per_sec: f64,
+    /// Blocks served from the shared cache / read from disk.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Full phase accounting (absent for jobs that never ran).
+    pub metrics: Option<Metrics>,
+    /// `Some` means the job failed with this error.
+    pub error: Option<String>,
+}
+
+impl JobReport {
+    /// A job that failed before (or instead of) streaming.
+    pub fn failed(name: impl Into<String>, dataset: PathBuf, priority: i32, error: String) -> Self {
+        JobReport {
+            name: name.into(),
+            dataset,
+            priority,
+            wall_secs: 0.0,
+            snps: 0,
+            blocks: 0,
+            snps_per_sec: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+            metrics: None,
+            error: Some(error),
+        }
+    }
+
+    /// A job that streamed to completion.
+    pub fn done(
+        name: impl Into<String>,
+        dataset: PathBuf,
+        priority: i32,
+        wall_secs: f64,
+        snps: usize,
+        blocks: usize,
+        metrics: Metrics,
+    ) -> Self {
+        JobReport {
+            name: name.into(),
+            dataset,
+            priority,
+            wall_secs,
+            snps,
+            blocks,
+            snps_per_sec: snps as f64 / wall_secs.max(1e-12),
+            cache_hits: metrics.count(Phase::CacheHit),
+            cache_misses: metrics.count(Phase::CacheMiss),
+            metrics: Some(metrics),
+            error: None,
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Aggregate run summary printed by `cugwas serve`.
+#[derive(Debug)]
+pub struct ServiceReport {
+    /// Jobs in completion order (failures included).
+    pub jobs: Vec<JobReport>,
+    /// Service wall clock, submission of the first job to the last drain.
+    pub wall_secs: f64,
+    pub workers: usize,
+    pub mem_budget_bytes: u64,
+    /// Final counters of the shared block cache.
+    pub cache: CacheStats,
+}
+
+impl ServiceReport {
+    pub fn total_snps(&self) -> usize {
+        self.jobs.iter().map(|j| j.snps).sum()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.jobs.iter().filter(|j| !j.ok()).count()
+    }
+
+    /// Aggregate throughput: all streamed SNPs over the service wall time.
+    pub fn agg_snps_per_sec(&self) -> f64 {
+        self.total_snps() as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// Render the full report: one row per job, per-job phase tables,
+    /// then the aggregate and cache lines.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<16}{:>9}{:>6}{:>8}{:>10}{:>12}{:>12}{:>8}{:>8}\n",
+            "job", "state", "prio", "blocks", "snps", "wall", "SNPs/s", "hits", "miss"
+        ));
+        for j in &self.jobs {
+            let state = if j.ok() { "done" } else { "failed" };
+            out.push_str(&format!(
+                "{:<16}{:>9}{:>6}{:>8}{:>10}{:>12}{:>12.0}{:>8}{:>8}\n",
+                truncate(&j.name, 15),
+                state,
+                j.priority,
+                j.blocks,
+                j.snps,
+                human_duration(Duration::from_secs_f64(j.wall_secs)),
+                j.snps_per_sec,
+                j.cache_hits,
+                j.cache_misses,
+            ));
+            if let Some(err) = &j.error {
+                out.push_str(&format!("  ^ error: {err}\n"));
+            }
+        }
+        for j in &self.jobs {
+            if let Some(m) = &j.metrics {
+                out.push_str(&format!("\nphases for job '{}':\n", j.name));
+                out.push_str(&m.table(Duration::from_secs_f64(j.wall_secs)));
+            }
+        }
+        out.push_str(&format!(
+            "\nservice: {} job(s) ({} failed) on {} worker lane(s), mem budget {}\n",
+            self.jobs.len(),
+            self.failed(),
+            self.workers,
+            human_bytes(self.mem_budget_bytes),
+        ));
+        out.push_str(&format!(
+            "aggregate: {} SNPs in {} — {:.0} SNPs/s across the fleet\n",
+            self.total_snps(),
+            human_duration(Duration::from_secs_f64(self.wall_secs)),
+            self.agg_snps_per_sec(),
+        ));
+        out.push_str(&format!(
+            "block cache: {} hits / {} misses, {} resident in {} entries (budget {}), \
+             {} eviction(s)\n",
+            self.cache.hits,
+            self.cache.misses,
+            human_bytes(self.cache.bytes),
+            self.cache.entries,
+            human_bytes(self.cache.capacity_bytes),
+            self.cache.evictions,
+        ));
+        out
+    }
+}
+
+fn truncate(s: &str, max: usize) -> &str {
+    match s.char_indices().nth(max) {
+        Some((i, _)) => &s[..i],
+        None => s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_includes_jobs_aggregate_and_cache() {
+        let mut m = Metrics::new();
+        m.add(Phase::CacheHit, Duration::from_millis(1));
+        m.add(Phase::CacheHit, Duration::from_millis(1));
+        m.add(Phase::CacheMiss, Duration::ZERO);
+        let rep = ServiceReport {
+            jobs: vec![
+                JobReport::done("alpha", PathBuf::from("/d1"), 1, 2.0, 4096, 16, m),
+                JobReport::failed("beta", PathBuf::from("/d2"), 0, "dataset missing".into()),
+            ],
+            wall_secs: 2.5,
+            workers: 2,
+            mem_budget_bytes: 1 << 30,
+            cache: CacheStats { hits: 2, misses: 1, ..CacheStats::default() },
+        };
+        assert_eq!(rep.total_snps(), 4096);
+        assert_eq!(rep.failed(), 1);
+        let s = rep.render();
+        assert!(s.contains("alpha"), "{s}");
+        assert!(s.contains("beta"), "{s}");
+        assert!(s.contains("dataset missing"), "{s}");
+        assert!(s.contains("block cache: 2 hits / 1 misses"), "{s}");
+        assert!(s.contains("phases for job 'alpha'"), "{s}");
+        assert!(s.contains("cache_hit"), "{s}");
+    }
+
+    #[test]
+    fn done_report_pulls_cache_counts_from_metrics() {
+        let mut m = Metrics::new();
+        for _ in 0..3 {
+            m.add(Phase::CacheHit, Duration::ZERO);
+        }
+        m.add(Phase::CacheMiss, Duration::ZERO);
+        let j = JobReport::done("x", PathBuf::from("/d"), 0, 1.0, 100, 4, m);
+        assert_eq!(j.cache_hits, 3);
+        assert_eq!(j.cache_misses, 1);
+        assert!(j.ok());
+    }
+}

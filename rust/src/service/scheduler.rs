@@ -1,0 +1,444 @@
+//! The multi-study scheduler: a fixed set of worker lanes multiplexing
+//! GWAS jobs over the streaming coordinator.
+//!
+//! Topology (one more level of the paper's own pattern — fixed lanes,
+//! bounded queues, backpressure by rendezvous):
+//!
+//! ```text
+//!   config [job.*] ─┐
+//!                   ├─▶ JobQueue ─admit─▶ worker lanes ──▶ coordinator::run
+//!   spool *.toml ───┘   (priority,        (N threads,         │
+//!                        mem budget,       rendezvous          ▼
+//!                        dataset lock)     channels)      shared BlockCache
+//! ```
+//!
+//! The dispatcher thread owns the queue and the memory ledger; workers
+//! own nothing but the job they are streaming. Admission charges a job's
+//! estimated host footprint against `mem_budget_bytes` and releases it
+//! on completion, so a burst of submissions degrades to queueing — never
+//! to swapping, which on the paper's analysis would destroy the
+//! disk-bound pipeline's sustained peak.
+
+use crate::config::ServiceConfig;
+use crate::coordinator::{self, PipelineConfig};
+use crate::error::{Error, Result};
+use crate::service::queue::{Job, JobQueue, JobSpec, JobState};
+use crate::service::report::{JobReport, ServiceReport};
+use crate::storage::{dataset, BlockCache};
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How often the dispatcher wakes to poll the spool directory while
+/// jobs are in flight or the service is watching.
+const SPOOL_POLL: Duration = Duration::from_millis(200);
+
+struct WorkerLane {
+    tx: Option<SyncSender<Job>>,
+    handle: JoinHandle<()>,
+    busy: bool,
+}
+
+/// Run the service to completion (or forever with `watch = true`):
+/// enqueue the config's jobs plus any spool files, admit them under the
+/// memory budget, stream them across the worker lanes, and return the
+/// aggregate report once everything has drained.
+pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
+    if cfg.workers == 0 {
+        return Err(Error::Config("service.workers must be ≥ 1".into()));
+    }
+    if cfg.mem_budget_bytes == 0 {
+        return Err(Error::Config("service.mem_budget_mb must be > 0".into()));
+    }
+    let cache = Arc::new(BlockCache::new(cfg.cache_bytes));
+    let t_wall = Instant::now();
+
+    // Worker lanes: rendezvous submission (depth 0 = the dispatcher only
+    // hands a job to a lane that is ready to take it), shared results
+    // channel back.
+    let (res_tx, res_rx) = channel::<(usize, JobReport)>();
+    let mut lanes: Vec<WorkerLane> = Vec::with_capacity(cfg.workers);
+    for wi in 0..cfg.workers {
+        let (tx, rx) = sync_channel::<Job>(0);
+        let res_tx = res_tx.clone();
+        // cache_bytes = 0 disables the cache entirely: jobs stream
+        // straight from disk exactly as `cugwas run` does.
+        let cache = (cfg.cache_bytes > 0).then(|| Arc::clone(&cache));
+        let handle = std::thread::Builder::new()
+            .name(format!("cugwas-svc-{wi}"))
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    // A panic inside the pipeline (poisoned pool assert,
+                    // debug overflow, …) must become a failed report, not
+                    // a silently dead lane: with other lanes still alive
+                    // the dispatcher would otherwise wait on this job's
+                    // completion forever.
+                    let cache = cache.clone();
+                    let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || run_job(&job, cache),
+                    ))
+                    .unwrap_or_else(|_| {
+                        JobReport::failed(
+                            job.spec.name.clone(),
+                            job.spec.dataset.clone(),
+                            job.spec.priority,
+                            "worker panicked while streaming (see stderr)".into(),
+                        )
+                    });
+                    if res_tx.send((wi, report)).is_err() {
+                        break; // dispatcher gone — shut down
+                    }
+                }
+            })
+            .map_err(|e| Error::io("spawning service worker", e))?;
+        lanes.push(WorkerLane { tx: Some(tx), handle, busy: false });
+    }
+    drop(res_tx); // workers hold the only senders now
+
+    // Seed the queue from the config, then from the spool.
+    let mut queue = JobQueue::new();
+    let mut reports: Vec<JobReport> = Vec::new();
+    for spec in &cfg.jobs {
+        submit_spec(&mut queue, spec.clone(), &mut reports);
+    }
+    let mut spool_state = SpoolState::default();
+    scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports);
+    for job in queue.fail_oversized(cfg.mem_budget_bytes) {
+        reports.push(oversized_report(&job, cfg.mem_budget_bytes));
+    }
+
+    // ---- dispatch loop --------------------------------------------------
+    let mut mem_in_use = 0u64;
+    let mut busy_datasets: HashSet<PathBuf> = HashSet::new();
+    let mut inflight: HashMap<usize, Job> = HashMap::new();
+    loop {
+        // Hand admissible jobs to idle lanes.
+        while let Some(wi) = lanes.iter().position(|l| !l.busy) {
+            let budget_left = cfg.mem_budget_bytes - mem_in_use;
+            let Some(job) = queue.admit_next(budget_left, &busy_datasets) else { break };
+            mem_in_use += job.est_bytes;
+            busy_datasets.insert(job.dataset_key.clone());
+            queue.set_state(job.id, JobState::Streaming);
+            inflight.insert(wi, job.clone());
+            let lane = &mut lanes[wi];
+            lane.busy = true;
+            lane.tx
+                .as_ref()
+                .expect("lane sender alive")
+                .send(job)
+                .map_err(|_| Error::Pipeline("service worker lane died".into()))?;
+        }
+
+        if inflight.is_empty() && queue.is_drained() {
+            // Idle. One more spool scan; exit unless watching, new work
+            // arrived, or a spool file is still settling (mid-write).
+            let before = queue.all().len();
+            scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports);
+            for job in queue.fail_oversized(cfg.mem_budget_bytes) {
+                reports.push(oversized_report(&job, cfg.mem_budget_bytes));
+            }
+            if queue.all().len() > before {
+                continue;
+            }
+            if cfg.watch || !spool_state.pending_bad.is_empty() {
+                std::thread::sleep(SPOOL_POLL);
+                continue;
+            }
+            break;
+        }
+
+        // Wait for a completion, polling the spool in between.
+        match res_rx.recv_timeout(SPOOL_POLL) {
+            Ok((wi, report)) => {
+                let job = inflight.remove(&wi).expect("completion from a dispatched lane");
+                mem_in_use -= job.est_bytes;
+                busy_datasets.remove(&job.dataset_key);
+                lanes[wi].busy = false;
+                queue.set_state(
+                    job.id,
+                    if report.ok() { JobState::Done } else { JobState::Failed },
+                );
+                reports.push(report);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(Error::Pipeline("all service worker lanes exited".into()));
+            }
+        }
+        scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports);
+        for job in queue.fail_oversized(cfg.mem_budget_bytes) {
+            reports.push(oversized_report(&job, cfg.mem_budget_bytes));
+        }
+    }
+
+    // Drop the submission side so lanes exit, then join them.
+    for lane in &mut lanes {
+        lane.tx.take();
+    }
+    for lane in lanes {
+        let _ = lane.handle.join();
+    }
+
+    Ok(ServiceReport {
+        jobs: reports,
+        wall_secs: t_wall.elapsed().as_secs_f64(),
+        workers: cfg.workers,
+        mem_budget_bytes: cfg.mem_budget_bytes,
+        cache: cache.stats(),
+    })
+}
+
+/// Estimate a spec's host footprint from the dataset's metadata (cheap:
+/// reads `meta.txt` only).
+fn estimate_bytes(spec: &JobSpec) -> Result<u64> {
+    let meta = dataset::load_meta(&spec.dataset)?;
+    Ok(spec.host_bytes(meta.dims.n, meta.dims.p()))
+}
+
+/// Queue a spec, or record an immediate failure (bad dataset, bad dims).
+fn submit_spec(queue: &mut JobQueue, spec: JobSpec, reports: &mut Vec<JobReport>) {
+    match estimate_bytes(&spec) {
+        Ok(est) => {
+            // Same canonicalization the pipeline keys the cache by.
+            let key = dataset::canonical_key(&spec.dataset);
+            queue.submit(spec, est, key);
+        }
+        Err(e) => reports.push(JobReport::failed(
+            spec.name.clone(),
+            spec.dataset.clone(),
+            spec.priority,
+            format!("cannot estimate job footprint: {e}"),
+        )),
+    }
+}
+
+fn oversized_report(job: &Job, budget: u64) -> JobReport {
+    JobReport::failed(
+        job.spec.name.clone(),
+        job.spec.dataset.clone(),
+        job.spec.priority,
+        format!(
+            "estimated host footprint {} exceeds the service memory budget {}",
+            crate::util::human_bytes(job.est_bytes),
+            crate::util::human_bytes(budget)
+        ),
+    )
+}
+
+/// Spool ingestion state: paths already ingested or reported, plus
+/// parse failures awaiting confirmation (a file copied into the spool
+/// non-atomically can be caught mid-write — it is only reported as bad
+/// once a later scan sees it unchanged *and* still unparsable).
+#[derive(Default)]
+struct SpoolState {
+    seen: HashSet<PathBuf>,
+    pending_bad: HashMap<PathBuf, std::time::SystemTime>,
+}
+
+/// Ingest new `*.toml` job files from the spool directory. Malformed
+/// files become failed-job reports rather than crashing the service.
+/// Files are never deleted — the spool is an inbox the operator owns.
+fn scan_spool(
+    spool: Option<&Path>,
+    state: &mut SpoolState,
+    queue: &mut JobQueue,
+    reports: &mut Vec<JobReport>,
+) {
+    let Some(dir) = spool else { return };
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|s| s.to_str()) == Some("toml"))
+        .filter(|p| !state.seen.contains(p))
+        .collect();
+    paths.sort(); // deterministic FIFO for same-priority spool jobs
+    for path in paths {
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("spool-job")
+            .to_string();
+        match ServiceConfig::job_from_file(&path, &name) {
+            Ok(spec) => {
+                state.seen.insert(path.clone());
+                state.pending_bad.remove(&path);
+                submit_spec(queue, spec, reports);
+            }
+            Err(e) => {
+                let mtime = std::fs::metadata(&path).and_then(|m| m.modified()).ok();
+                match (state.pending_bad.get(&path), mtime) {
+                    // Unchanged since the last failing scan → genuinely bad.
+                    (Some(prev), Some(now)) if *prev == now => {
+                        state.seen.insert(path.clone());
+                        state.pending_bad.remove(&path);
+                        reports.push(JobReport::failed(
+                            name,
+                            path.clone(),
+                            0,
+                            format!("bad spool job file: {e}"),
+                        ));
+                    }
+                    // First failure or still changing → retry next scan.
+                    (_, Some(now)) => {
+                        state.pending_bad.insert(path.clone(), now);
+                    }
+                    // File vanished / unstattable → report it as it is.
+                    (_, None) => {
+                        state.seen.insert(path.clone());
+                        state.pending_bad.remove(&path);
+                        reports.push(JobReport::failed(
+                            name,
+                            path.clone(),
+                            0,
+                            format!("bad spool job file: {e}"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Stream one job through the coordinator on this worker lane.
+fn run_job(job: &Job, cache: Option<Arc<BlockCache>>) -> JobReport {
+    let spec = &job.spec;
+    let cfg = PipelineConfig {
+        dataset: spec.dataset.clone(),
+        block: spec.block,
+        ngpus: spec.ngpus,
+        host_buffers: spec.host_buffers,
+        mode: spec.mode,
+        backend: spec.backend.clone(),
+        read_throttle: spec.read_throttle,
+        write_throttle: spec.write_throttle,
+        resume: false,
+        cache,
+    };
+    match coordinator::run(&cfg) {
+        Ok(rep) => JobReport::done(
+            spec.name.clone(),
+            spec.dataset.clone(),
+            spec.priority,
+            rep.wall_secs,
+            rep.snps,
+            rep.blocks,
+            rep.metrics,
+        ),
+        Err(e) => JobReport::failed(
+            spec.name.clone(),
+            spec.dataset.clone(),
+            spec.priority,
+            e.to_string(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gwas::problem::Dims;
+    use crate::storage::generate;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cugwas_svc_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_cfg(jobs: Vec<JobSpec>, workers: usize, cache_mb: u64) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            mem_budget_bytes: 1 << 30,
+            cache_bytes: cache_mb << 20,
+            spool: None,
+            watch: false,
+            jobs,
+        }
+    }
+
+    /// The acceptance scenario: three jobs, two sharing a dataset — all
+    /// complete, and the shared dataset's second pass hits the cache.
+    #[test]
+    fn three_jobs_two_sharing_a_dataset() {
+        let d1 = tmpdir("shared");
+        let d2 = tmpdir("solo");
+        generate(&d1, Dims::new(32, 2, 96).unwrap(), 16, 11).unwrap();
+        generate(&d2, Dims::new(32, 2, 64).unwrap(), 16, 12).unwrap();
+        let mut j1 = JobSpec::new("shared-a", &d1);
+        j1.block = 16;
+        j1.priority = 2; // runs first → faults the cache in
+        let mut j2 = JobSpec::new("shared-b", &d1);
+        j2.block = 16;
+        let mut j3 = JobSpec::new("solo", &d2);
+        j3.block = 16;
+        let rep = serve(&small_cfg(vec![j1, j2, j3], 2, 64)).unwrap();
+        assert_eq!(rep.jobs.len(), 3);
+        assert_eq!(rep.failed(), 0, "{}", rep.render());
+        assert!(rep.cache.hits > 0, "second pass over the shared dataset must hit");
+        let shared_b = rep.jobs.iter().find(|j| j.name == "shared-b").unwrap();
+        assert_eq!(shared_b.cache_hits, 6, "all 6 blocks of shared-b served from RAM");
+        assert_eq!(rep.total_snps(), 96 + 96 + 64);
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+
+    #[test]
+    fn missing_dataset_fails_without_sinking_the_service() {
+        let d = tmpdir("good");
+        generate(&d, Dims::new(24, 2, 32).unwrap(), 8, 5).unwrap();
+        let mut ok = JobSpec::new("ok", &d);
+        ok.block = 8;
+        let bad = JobSpec::new("bad", "/nonexistent/dataset");
+        let rep = serve(&small_cfg(vec![ok, bad], 1, 16)).unwrap();
+        assert_eq!(rep.jobs.len(), 2);
+        assert_eq!(rep.failed(), 1);
+        assert!(rep.jobs.iter().any(|j| j.name == "ok" && j.ok()));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn oversized_job_fails_fast_under_tiny_budget() {
+        let d = tmpdir("tiny");
+        generate(&d, Dims::new(24, 2, 32).unwrap(), 8, 5).unwrap();
+        let mut j = JobSpec::new("too-big", &d);
+        j.block = 8;
+        let mut cfg = small_cfg(vec![j], 1, 16);
+        cfg.mem_budget_bytes = 1; // nothing fits
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.failed(), 1);
+        assert!(rep.jobs[0].error.as_deref().unwrap().contains("memory budget"));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn spool_jobs_are_ingested() {
+        let d = tmpdir("spoolds");
+        generate(&d, Dims::new(24, 2, 32).unwrap(), 8, 5).unwrap();
+        let spool = tmpdir("spooldir");
+        std::fs::create_dir_all(&spool).unwrap();
+        std::fs::write(
+            spool.join("late.toml"),
+            format!("[job]\ndataset = \"{}\"\nblock = 8\n", d.display()),
+        )
+        .unwrap();
+        std::fs::write(spool.join("broken.toml"), "[job]\nblock = 8\n").unwrap(); // no dataset
+        std::fs::write(spool.join("notes.txt"), "ignored").unwrap();
+        let mut cfg = small_cfg(vec![], 1, 16);
+        cfg.spool = Some(spool.clone());
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.jobs.len(), 2, "{}", rep.render());
+        assert!(rep.jobs.iter().any(|j| j.name == "late" && j.ok()));
+        assert!(rep.jobs.iter().any(|j| j.name == "broken" && !j.ok()));
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&spool).unwrap();
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(serve(&small_cfg(vec![], 0, 0)).is_err());
+    }
+}

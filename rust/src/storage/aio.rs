@@ -22,18 +22,40 @@ use std::thread::JoinHandle;
 /// A submitted I/O operation; `wait()` yields the buffer back.
 pub struct AioHandle {
     rx: Receiver<(Vec<f64>, Result<()>)>,
+    /// Element count of the submitted buffer. If the engine dies before
+    /// completing, the original buffer is lost inside the dead thread —
+    /// a replacement of this size keeps the caller's pool invariant
+    /// (fixed buffer count, fixed capacity) intact through the error.
+    capacity: usize,
 }
 
 impl AioHandle {
+    /// A handle that is already complete — e.g. a block served from the
+    /// shared [`BlockCache`](crate::storage::BlockCache) with no disk
+    /// read issued. Lets cache hits flow through the same `aio_wait`
+    /// plumbing as real reads.
+    pub fn ready(buf: Vec<f64>, res: Result<()>) -> AioHandle {
+        let (tx, rx) = channel();
+        let capacity = buf.len();
+        let _ = tx.send((buf, res));
+        AioHandle { rx, capacity }
+    }
+
+    /// Replacement buffer for a request lost inside a dead engine.
+    fn lost(&self) -> (Vec<f64>, Result<()>) {
+        (
+            vec![0.0; self.capacity],
+            Err(Error::Pipeline("aio engine died before completing request".into())),
+        )
+    }
+
     /// Block until the operation completes. Returns the buffer (always —
-    /// also on error, so callers can keep their pool intact) plus status.
+    /// also on error or engine death, so callers can keep their pool
+    /// intact) plus status.
     pub fn wait(self) -> (Vec<f64>, Result<()>) {
         match self.rx.recv() {
             Ok(pair) => pair,
-            Err(_) => (
-                Vec::new(),
-                Err(Error::Pipeline("aio engine died before completing request".into())),
-            ),
+            Err(_) => self.lost(),
         }
     }
 
@@ -43,10 +65,7 @@ impl AioHandle {
         match self.rx.try_recv() {
             Ok(pair) => Ok(pair),
             Err(std::sync::mpsc::TryRecvError::Empty) => Err(self),
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => Ok((
-                Vec::new(),
-                Err(Error::Pipeline("aio engine died before completing request".into())),
-            )),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Ok(self.lost()),
         }
     }
 }
@@ -113,36 +132,40 @@ impl AioEngine {
     /// `aio_read`: fill `buf` from block `b` asynchronously.
     pub fn read(&self, block: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
+        let capacity = buf.len();
         self.submit(Req::Read { block, buf, done });
-        AioHandle { rx }
+        AioHandle { rx, capacity }
     }
 
     /// `aio_write`: write `buf` to block `b` asynchronously.
     pub fn write(&self, block: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
+        let capacity = buf.len();
         self.submit(Req::Write { block, buf, done });
-        AioHandle { rx }
+        AioHandle { rx, capacity }
     }
 
     /// `aio_read` of an arbitrary column range (block-size-agnostic).
     pub fn read_cols(&self, col0: u64, ncols: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
+        let capacity = buf.len();
         self.submit(Req::ReadCols { col0, ncols, buf, done });
-        AioHandle { rx }
+        AioHandle { rx, capacity }
     }
 
     /// `aio_write` of an arbitrary column range.
     pub fn write_cols(&self, col0: u64, ncols: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
+        let capacity = buf.len();
         self.submit(Req::WriteCols { col0, ncols, buf, done });
-        AioHandle { rx }
+        AioHandle { rx, capacity }
     }
 
     /// Queue a data sync behind all submitted operations.
     pub fn sync(&self) -> AioHandle {
         let (done, rx) = channel();
         self.submit(Req::Sync { done });
-        AioHandle { rx }
+        AioHandle { rx, capacity: 0 }
     }
 }
 
@@ -225,6 +248,39 @@ mod tests {
         assert_eq!(buf.len(), 8);
         drop(eng);
         std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn dead_engine_returns_correctly_sized_buffer() {
+        // Simulate engine death with a request in flight: the completion
+        // sender is gone without ever delivering. The caller must get a
+        // buffer of the submitted size back, not an empty Vec — otherwise
+        // the pool would silently shrink its capacity on error.
+        let (tx, rx) = channel::<(Vec<f64>, Result<()>)>();
+        drop(tx);
+        let h = AioHandle { rx, capacity: 24 };
+        let (buf, res) = h.wait();
+        assert!(res.is_err());
+        assert_eq!(buf.len(), 24);
+
+        let (tx, rx) = channel::<(Vec<f64>, Result<()>)>();
+        drop(tx);
+        let h = AioHandle { rx, capacity: 7 };
+        let (buf, res) = h.try_wait().expect("disconnected resolves immediately");
+        assert!(res.is_err());
+        assert_eq!(buf.len(), 7);
+    }
+
+    #[test]
+    fn ready_handle_completes_immediately() {
+        let h = AioHandle::ready(vec![3.0; 5], Ok(()));
+        let (buf, res) = h.wait();
+        res.unwrap();
+        assert_eq!(buf, vec![3.0; 5]);
+        // try_wait path too.
+        let h = AioHandle::ready(vec![1.0; 2], Ok(()));
+        let (buf, _) = h.try_wait().expect("ready");
+        assert_eq!(buf.len(), 2);
     }
 
     #[test]

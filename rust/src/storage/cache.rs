@@ -1,0 +1,274 @@
+//! Shared, byte-budgeted block cache — the amortization layer of the
+//! multi-study service.
+//!
+//! The paper streams ONE study's `X_R` from disk at the platter's pace;
+//! when *many* studies read the same dataset (re-runs, permutation
+//! batches, multi-trait analyses), every job after the first can be fed
+//! from RAM instead. The cache sits between the pipeline's `aio_read`
+//! and the disk: a read first probes the cache, and a miss's freshly
+//! read block is inserted on arrival, so the HDD sees each block at
+//! most once per residency.
+//!
+//! Design constraints, in the spirit of the pipeline's fixed pools:
+//!
+//! * **Hard byte budget** — the cache never exceeds `capacity_bytes`;
+//!   insertion evicts least-recently-used entries first. A budget of 0
+//!   disables caching entirely (every probe misses, nothing is stored).
+//! * **Copy in, copy out** — entries are owned copies. The pipeline's
+//!   buffer-rotation invariant (fixed pools, zero steady-state
+//!   allocation) is untouched; a hit is one `memcpy` at RAM speed,
+//!   which is exactly the regime the paper's Fig. 3 calls "free"
+//!   relative to an HDD read.
+//! * **Shared + thread-safe** — one `Arc<BlockCache>` is handed to all
+//!   service workers; a single mutex suffices because the critical
+//!   sections are memcpys, orders of magnitude shorter than the disk
+//!   reads they replace.
+//!
+//! Hit/miss counts surface both here ([`CacheStats`]) and as
+//! `Phase::CacheHit` / `Phase::CacheMiss` in the per-job
+//! [`coordinator::metrics`](crate::coordinator::Metrics).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Identity of one streamed block of one dataset file.
+///
+/// Keyed by column range rather than block ordinal so that jobs with
+/// different pipeline block sizes never alias each other's data.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    /// Canonical dataset identity (the canonicalized dataset directory).
+    pub dataset: String,
+    /// First column of the block within the XRD file.
+    pub col0: u64,
+    /// Column count of the block.
+    pub ncols: u64,
+}
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Bytes currently resident.
+    pub bytes: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Configured budget.
+    pub capacity_bytes: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    data: Vec<f64>,
+    /// Last-touch logical timestamp (monotone per cache).
+    stamp: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<BlockKey, Entry>,
+    bytes: u64,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+/// Reference-counted LRU block cache (see module docs).
+#[derive(Debug)]
+pub struct BlockCache {
+    inner: Mutex<Inner>,
+    capacity_bytes: u64,
+}
+
+impl BlockCache {
+    /// A cache holding at most `capacity_bytes` of block data. 0 disables.
+    pub fn new(capacity_bytes: u64) -> Self {
+        BlockCache { inner: Mutex::new(Inner::default()), capacity_bytes }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Probe for `key`; on a hit, copy the block into `buf` (whose length
+    /// must equal the entry's) and refresh its recency. Every probe is
+    /// counted as a hit or a miss — the pipeline probes exactly once per
+    /// block, so `misses` equals the disk reads actually issued.
+    pub fn get_into(&self, key: &BlockKey, buf: &mut [f64]) -> bool {
+        let mut guard = self.inner.lock().expect("cache lock poisoned");
+        let inner = &mut *guard;
+        inner.clock += 1;
+        let stamp = inner.clock;
+        match inner.map.get_mut(key) {
+            Some(e) if e.data.len() == buf.len() => {
+                buf.copy_from_slice(&e.data);
+                e.stamp = stamp;
+                inner.hits += 1;
+                true
+            }
+            _ => {
+                inner.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Insert (a copy of) a block, evicting LRU entries until it fits.
+    /// Blocks larger than the whole budget are not cached.
+    pub fn insert(&self, key: BlockKey, data: &[f64]) {
+        let bytes = (data.len() * std::mem::size_of::<f64>()) as u64;
+        if bytes == 0 || bytes > self.capacity_bytes {
+            return;
+        }
+        let mut guard = self.inner.lock().expect("cache lock poisoned");
+        let inner = &mut *guard;
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= (old.data.len() * std::mem::size_of::<f64>()) as u64;
+        }
+        while inner.bytes + bytes > self.capacity_bytes {
+            let Some(lru) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let old = inner.map.remove(&lru).expect("lru entry exists");
+            inner.bytes -= (old.data.len() * std::mem::size_of::<f64>()) as u64;
+            inner.evictions += 1;
+        }
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.bytes += bytes;
+        inner.insertions += 1;
+        inner.map.insert(key, Entry { data: data.to_vec(), stamp });
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().expect("cache lock poisoned");
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            insertions: g.insertions,
+            evictions: g.evictions,
+            bytes: g.bytes,
+            entries: g.map.len(),
+            capacity_bytes: self.capacity_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(ds: &str, col0: u64) -> BlockKey {
+        BlockKey { dataset: ds.to_string(), col0, ncols: 4 }
+    }
+
+    #[test]
+    fn hit_returns_data_and_counts() {
+        let c = BlockCache::new(1 << 20);
+        let data = vec![1.0, 2.0, 3.0, 4.0];
+        c.insert(key("a", 0), &data);
+        let mut buf = vec![0.0; 4];
+        assert!(c.get_into(&key("a", 0), &mut buf));
+        assert_eq!(buf, data);
+        assert!(!c.get_into(&key("a", 4), &mut buf)); // absent
+        assert!(!c.get_into(&key("b", 0), &mut buf)); // other dataset
+        let s = c.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.insertions, 1);
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 32);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        // Budget of exactly two 4-element blocks (64 bytes).
+        let c = BlockCache::new(64);
+        c.insert(key("a", 0), &[0.0; 4]);
+        c.insert(key("a", 4), &[1.0; 4]);
+        // Touch block 0 so block 4 becomes the LRU.
+        let mut buf = vec![0.0; 4];
+        assert!(c.get_into(&key("a", 0), &mut buf));
+        // A third block evicts the LRU (block 4), not the recently-used.
+        c.insert(key("a", 8), &[2.0; 4]);
+        assert!(c.get_into(&key("a", 0), &mut buf), "recently used survives");
+        assert!(c.get_into(&key("a", 8), &mut buf), "new entry resident");
+        assert!(!c.get_into(&key("a", 4), &mut buf), "LRU evicted");
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(s.bytes <= 64);
+    }
+
+    #[test]
+    fn oversized_block_is_not_cached() {
+        let c = BlockCache::new(16); // < one 4-element block
+        c.insert(key("a", 0), &[0.0; 4]);
+        let s = c.stats();
+        assert_eq!(s.insertions, 0);
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.bytes, 0);
+    }
+
+    #[test]
+    fn zero_budget_disables() {
+        let c = BlockCache::new(0);
+        c.insert(key("a", 0), &[1.0; 4]);
+        let mut buf = vec![0.0; 4];
+        assert!(!c.get_into(&key("a", 0), &mut buf));
+        assert_eq!(c.stats().entries, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leaking_bytes() {
+        let c = BlockCache::new(1 << 10);
+        c.insert(key("a", 0), &[1.0; 4]);
+        c.insert(key("a", 0), &[2.0; 4]);
+        let s = c.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 32);
+        let mut buf = vec![0.0; 4];
+        assert!(c.get_into(&key("a", 0), &mut buf));
+        assert_eq!(buf, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn length_mismatch_is_a_miss() {
+        let c = BlockCache::new(1 << 10);
+        c.insert(key("a", 0), &[1.0; 4]);
+        let mut short = vec![0.0; 3];
+        assert!(!c.get_into(&key("a", 0), &mut short));
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let c = Arc::new(BlockCache::new(1 << 20));
+        c.insert(key("a", 0), &[7.0; 4]);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    let mut buf = vec![0.0; 4];
+                    assert!(c.get_into(&key("a", 0), &mut buf));
+                    assert_eq!(buf, vec![7.0; 4]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.stats().hits, 4);
+    }
+}

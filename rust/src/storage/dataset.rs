@@ -144,6 +144,23 @@ pub fn generate_with_dtype(dir: &Path, dims: Dims, block: usize, seed: u64, dtyp
     Ok(meta)
 }
 
+/// Load only the study metadata (`meta.txt`) — cheap, no matrix I/O.
+/// The service scheduler uses this to estimate a job's host-memory
+/// footprint before admitting it.
+pub fn load_meta(dir: &Path) -> Result<Meta> {
+    read_meta(&DatasetPaths::new(dir).meta())
+}
+
+/// Canonical identity of a dataset directory. The service's
+/// one-job-per-dataset lock and the shared block cache's keys both use
+/// this, so jobs naming one directory through different paths collide
+/// on the lock *and* share cache entries — the two rules must never
+/// diverge. Falls back to the path as given when it doesn't resolve
+/// (e.g. not created yet); such jobs fail later with a clear error.
+pub fn canonical_key(dir: &Path) -> PathBuf {
+    std::fs::canonicalize(dir).unwrap_or_else(|_| dir.to_path_buf())
+}
+
 /// Load the small sidecar data of a dataset (everything except `X_R`).
 pub fn load_sidecars(dir: &Path) -> Result<(Meta, Matrix, Matrix, Vec<f64>)> {
     let paths = DatasetPaths::new(dir);

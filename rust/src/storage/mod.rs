@@ -1,13 +1,18 @@
 //! Storage layer: the XRD on-disk block format, dataset directories, the
-//! synchronous positioned-I/O core, and the asynchronous engine providing
-//! the paper's `aio_read` / `aio_wait` / `aio_write` primitives.
+//! synchronous positioned-I/O core, the asynchronous engine providing
+//! the paper's `aio_read` / `aio_wait` / `aio_write` primitives, and the
+//! shared block cache that amortizes disk reads across studies.
 
 pub mod aio;
+pub mod cache;
 pub mod dataset;
 pub mod format;
 pub mod xrd;
 
 pub use aio::{AioEngine, AioHandle};
-pub use dataset::{generate, generate_with_dtype, load_sidecars, load_xr_incore, DatasetPaths, Meta};
+pub use cache::{BlockCache, BlockKey, CacheStats};
+pub use dataset::{
+    generate, generate_with_dtype, load_meta, load_sidecars, load_xr_incore, DatasetPaths, Meta,
+};
 pub use format::{Dtype, Header};
 pub use xrd::{Throttle, XrdFile};

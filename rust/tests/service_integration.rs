@@ -1,0 +1,97 @@
+//! End-to-end service integration: the `cugwas serve` acceptance
+//! scenario through the public API — a TOML-configured queue of three
+//! jobs (two sharing a dataset) runs to completion, the shared-dataset
+//! second pass is served by the block cache, and the streamed results
+//! still match the in-core oracle.
+
+use cugwas::config::ServiceConfig;
+use cugwas::coordinator::verify_against_oracle;
+use cugwas::gwas::problem::Dims;
+use cugwas::service::serve;
+use cugwas::storage::generate;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_svc_it_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn toml_configured_service_runs_shared_and_solo_jobs() {
+    let s1 = tmpdir("shared");
+    let s2 = tmpdir("solo");
+    generate(&s1, Dims::new(48, 3, 128).unwrap(), 16, 101).unwrap();
+    generate(&s2, Dims::new(40, 2, 96).unwrap(), 16, 102).unwrap();
+
+    let toml = format!(
+        r#"[service]
+workers = 2
+mem_budget_mb = 512
+cache_mb = 32
+
+[job.alpha]
+dataset = "{s1}"
+block = 16
+priority = 2
+
+[job.beta]
+dataset = "{s2}"
+block = 16
+
+[job.gamma]
+dataset = "{s1}"
+block = 16
+"#,
+        s1 = s1.display(),
+        s2 = s2.display(),
+    );
+    let cfg = ServiceConfig::from_toml(&toml).unwrap();
+    assert_eq!(cfg.jobs.len(), 3);
+    let rep = serve(&cfg).unwrap();
+
+    // All three jobs completed.
+    assert_eq!(rep.jobs.len(), 3, "{}", rep.render());
+    assert_eq!(rep.failed(), 0, "{}", rep.render());
+    assert_eq!(rep.total_snps(), 128 + 96 + 128);
+
+    // gamma (same dataset as alpha, lower priority → runs after it)
+    // streamed entirely from the cache: 128/16 = 8 block hits.
+    let gamma = rep.jobs.iter().find(|j| j.name == "gamma").unwrap();
+    assert_eq!(gamma.cache_hits, 8, "{}", rep.render());
+    assert_eq!(gamma.cache_misses, 0, "{}", rep.render());
+    assert!(rep.cache.hits >= 8);
+    assert!(rep.cache.misses > 0, "first passes still read the disk");
+
+    // The report surfaces per-job phase metrics and the cache lines.
+    let rendered = rep.render();
+    assert!(rendered.contains("phases for job 'gamma'"), "{rendered}");
+    assert!(rendered.contains("cache_hit"), "{rendered}");
+    assert!(rendered.contains("block cache:"), "{rendered}");
+
+    // Streamed results are still correct on both datasets.
+    verify_against_oracle(&s1, 1e-7).unwrap();
+    verify_against_oracle(&s2, 1e-7).unwrap();
+
+    std::fs::remove_dir_all(&s1).unwrap();
+    std::fs::remove_dir_all(&s2).unwrap();
+}
+
+#[test]
+fn repeated_serve_reuses_nothing_across_instances() {
+    // Each serve() owns a fresh cache: counters start from zero, so
+    // reports are attributable to one service run.
+    let d = tmpdir("fresh");
+    generate(&d, Dims::new(32, 2, 64).unwrap(), 16, 7).unwrap();
+    let toml = format!(
+        "[service]\nworkers = 1\ncache_mb = 16\n\n[job.only]\ndataset = \"{}\"\nblock = 16\n",
+        d.display()
+    );
+    let cfg = ServiceConfig::from_toml(&toml).unwrap();
+    let first = serve(&cfg).unwrap();
+    let second = serve(&cfg).unwrap();
+    assert_eq!(first.cache.hits, 0, "single pass cannot hit");
+    assert_eq!(second.cache.hits, 0, "new instance starts cold");
+    assert_eq!(first.cache.misses, second.cache.misses);
+    std::fs::remove_dir_all(&d).unwrap();
+}
