@@ -1,7 +1,18 @@
 //! Microbenchmarks of the native linalg hot paths (the L3 substrate the
 //! CPU baselines and S-loop run on). Reports effective GFlop/s so the
 //! §Perf log in EXPERIMENTS.md can track the micro-kernel against the
-//! machine's practical roofline.
+//! machine's practical roofline, plus a thread-count sweep (1/2/4/ncpu)
+//! of the parallel gemm/trsm panels.
+//!
+//! Besides the human-readable tables, every measurement is emitted as a
+//! machine-readable JSON line (`{"bench":"linalg_micro",...}`) so future
+//! PRs — and the CI smoke job — can track the perf trajectory by
+//! grepping the log instead of parsing tables.
+//!
+//! The sweep also re-checks determinism on the spot: each parallel
+//! result is compared bit-for-bit against the single-thread result, so a
+//! kernel regression that breaks the reduction order fails this bench
+//! loudly rather than shifting numbers quietly.
 //!
 //! ```bash
 //! cargo bench --bench linalg_micro
@@ -9,26 +20,37 @@
 
 use cugwas::bench::{Bench, Table};
 use cugwas::linalg::{gemm, potrf, trsm_lower_left, Matrix};
-use cugwas::util::XorShift;
+use cugwas::util::{threads, XorShift};
+
+fn json_line(kernel: &str, shape: &str, nthreads: usize, median_secs: f64, gflops: f64) {
+    println!(
+        "{{\"bench\":\"linalg_micro\",\"kernel\":\"{kernel}\",\"shape\":\"{shape}\",\
+         \"threads\":{nthreads},\"median_secs\":{median_secs:.6},\"gflops\":{gflops:.3}}}"
+    );
+}
 
 fn main() {
     let bench = Bench::from_env();
     let mut rng = XorShift::new(1);
-    let mut t = Table::new("linalg micro", &["kernel", "shape", "median", "GFlop/s"]);
+    let mut t =
+        Table::new("linalg micro (single thread)", &["kernel", "shape", "median", "GFlop/s"]);
 
     for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512), (1024, 1024, 128)] {
         let a = Matrix::randn(m, k, &mut rng);
         let b = Matrix::randn(k, n, &mut rng);
         let mut c = Matrix::zeros(m, n);
+        let _g = threads::with_budget(1);
         let meas = bench.measure(format!("gemm {m}x{k}x{n}"), || {
             gemm(1.0, &a, &b, 0.0, &mut c).unwrap();
         });
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let gflops = flops / meas.median().as_secs_f64() / 1e9;
+        json_line("gemm", &format!("{m}x{k}x{n}"), 1, meas.median().as_secs_f64(), gflops);
         t.row(&[
             "gemm".into(),
             format!("{m}x{k}x{n}"),
             cugwas::bench::dur_cell(meas.median()),
-            format!("{:.2}", flops / meas.median().as_secs_f64() / 1e9),
+            format!("{gflops:.2}"),
         ]);
     }
 
@@ -37,16 +59,19 @@ fn main() {
         let l = potrf(&spd).unwrap();
         let b0 = Matrix::randn(nn, nrhs, &mut rng);
         let mut b = b0.clone();
+        let _g = threads::with_budget(1);
         let meas = bench.measure(format!("trsm {nn}x{nrhs}"), || {
             b = b0.clone();
             trsm_lower_left(&l, &mut b).unwrap();
         });
         let flops = nn as f64 * nn as f64 * nrhs as f64;
+        let gflops = flops / meas.median().as_secs_f64() / 1e9;
+        json_line("trsm", &format!("{nn}x{nrhs}"), 1, meas.median().as_secs_f64(), gflops);
         t.row(&[
             "trsm".into(),
             format!("{nn}x{nrhs}"),
             cugwas::bench::dur_cell(meas.median()),
-            format!("{:.2}", flops / meas.median().as_secs_f64() / 1e9),
+            format!("{gflops:.2}"),
         ]);
     }
 
@@ -57,12 +82,98 @@ fn main() {
             potrf(&spd).unwrap();
         });
         let flops = nn as f64 * nn as f64 * nn as f64 / 3.0;
+        let gflops = flops / meas.median().as_secs_f64() / 1e9;
+        json_line("potrf", "512", 1, meas.median().as_secs_f64(), gflops);
         t.row(&[
             "potrf".into(),
             format!("{nn}"),
             cugwas::bench::dur_cell(meas.median()),
-            format!("{:.2}", flops / meas.median().as_secs_f64() / 1e9),
+            format!("{gflops:.2}"),
         ]);
     }
     t.print();
+
+    // ---- thread sweep (the tentpole metric: gemm/trsm panel scaling) ----
+    let ncpu = threads::available();
+    let mut sweep: Vec<usize> = vec![1, 2, 4];
+    if !sweep.contains(&ncpu) {
+        sweep.push(ncpu);
+    }
+
+    let mut ts = Table::new(
+        format!("thread sweep ({ncpu} cores) — 512³ gemm, 512×512 trsm"),
+        &["kernel", "threads", "median", "GFlop/s", "vs 1T"],
+    );
+
+    // gemm 512³
+    {
+        let (m, k, n) = (512usize, 512usize, 512usize);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let mut base = 0.0f64;
+        let mut reference: Option<Matrix> = None;
+        for &nt in &sweep {
+            let mut c = Matrix::zeros(m, n);
+            let _g = threads::with_budget(nt);
+            let meas = bench.measure(format!("gemm 512³ @{nt}T"), || {
+                gemm(1.0, &a, &b, 0.0, &mut c).unwrap();
+            });
+            // Determinism spot-check: parallel == serial, bit for bit.
+            match &reference {
+                None => reference = Some(c.clone()),
+                Some(r) => assert_eq!(&c, r, "gemm result changed at {nt} threads"),
+            }
+            let secs = meas.median().as_secs_f64();
+            let gflops = flops / secs / 1e9;
+            if nt == 1 {
+                base = secs;
+            }
+            json_line("gemm", "512x512x512", nt, secs, gflops);
+            ts.row(&[
+                "gemm".into(),
+                nt.to_string(),
+                cugwas::bench::dur_cell(meas.median()),
+                format!("{gflops:.2}"),
+                cugwas::bench::ratio_cell(base, secs),
+            ]);
+        }
+    }
+
+    // trsm 512 × 512
+    {
+        let (nn, nrhs) = (512usize, 512usize);
+        let spd = Matrix::rand_spd(nn, 4.0, &mut rng);
+        let l = potrf(&spd).unwrap();
+        let b0 = Matrix::randn(nn, nrhs, &mut rng);
+        let flops = nn as f64 * nn as f64 * nrhs as f64;
+        let mut base = 0.0f64;
+        let mut reference: Option<Matrix> = None;
+        for &nt in &sweep {
+            let mut b = b0.clone();
+            let _g = threads::with_budget(nt);
+            let meas = bench.measure(format!("trsm 512x512 @{nt}T"), || {
+                b = b0.clone();
+                trsm_lower_left(&l, &mut b).unwrap();
+            });
+            match &reference {
+                None => reference = Some(b.clone()),
+                Some(r) => assert_eq!(&b, r, "trsm result changed at {nt} threads"),
+            }
+            let secs = meas.median().as_secs_f64();
+            let gflops = flops / secs / 1e9;
+            if nt == 1 {
+                base = secs;
+            }
+            json_line("trsm", "512x512", nt, secs, gflops);
+            ts.row(&[
+                "trsm".into(),
+                nt.to_string(),
+                cugwas::bench::dur_cell(meas.median()),
+                format!("{gflops:.2}"),
+                cugwas::bench::ratio_cell(base, secs),
+            ]);
+        }
+    }
+    ts.print();
 }

@@ -47,6 +47,7 @@ fn main() {
             workers: 1, // serialize: per-dataset lock forces this anyway
             mem_budget_bytes: 4 << 30,
             cache_bytes,
+            threads: 0,
             spool: None,
             watch: false,
             jobs: jobs(),

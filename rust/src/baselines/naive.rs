@@ -64,7 +64,8 @@ pub fn run_naive(
     let r_header = Header::new(p as u64, dims.m as u64, block.min(dims.m) as u64, meta.seed)?;
     let rfile = XrdFile::create(&paths.results(), r_header)?;
 
-    let lane = DeviceLane::spawn(0, OffloadMode::Trsm, lane_backend, &pre, block)?;
+    // Single synchronous lane — it may use the whole pool (threads = 0).
+    let lane = DeviceLane::spawn(0, OffloadMode::Trsm, lane_backend, &pre, block, 0)?;
     let nblocks = dims.m.div_ceil(block);
     let cols_in =
         |b: usize| if (b + 1) * block <= dims.m { block } else { dims.m - b * block };

@@ -12,6 +12,7 @@
 //! block = 256        # SNP columns per iteration (whole pipeline)
 //! ngpus = 1
 //! host_buffers = 3
+//! threads = 0        # compute threads (0 = all cores), split lanes/S-loop
 //! mode = "trsm"      # trsm | block | blockfull
 //! backend = "pjrt"   # pjrt | native
 //! artifacts = "artifacts"
@@ -30,6 +31,7 @@
 //! workers = 2          # concurrent worker lanes
 //! mem_budget_mb = 4096 # admission budget for jobs' host footprints
 //! cache_mb = 256       # shared block cache (0 disables)
+//! threads = 0          # compute threads across all workers (0 = all cores)
 //! spool = "spool"      # optional: watched directory of job TOMLs
 //! watch = false        # keep serving after the queue drains
 //!
@@ -91,6 +93,7 @@ impl RunConfig {
                     "block",
                     "ngpus",
                     "host_buffers",
+                    "threads",
                     "mode",
                     "backend",
                     "artifacts",
@@ -120,6 +123,7 @@ impl RunConfig {
         let block = doc.int_or("pipeline", "block", 256)? as usize;
         let ngpus = doc.int_or("pipeline", "ngpus", 1)? as usize;
         let host_buffers = doc.int_or("pipeline", "host_buffers", 3)? as usize;
+        let threads = int_in(doc, "pipeline", "threads", 0, 0, 4096)? as usize;
         let mode = parse_mode(doc.str_or("pipeline", "mode", "trsm")?)?;
         let backend = parse_backend(doc, "pipeline")?;
         let read_throttle = throttle_of(doc.float_or("pipeline", "read_mbps", 0.0)?);
@@ -148,6 +152,7 @@ impl RunConfig {
                 write_throttle,
                 resume: false,
                 cache: None,
+                threads,
             },
             sim: SimSection { profile },
         })
@@ -205,6 +210,7 @@ const JOB_KEYS: &[&str] = &[
     "block",
     "ngpus",
     "host_buffers",
+    "threads",
     "mode",
     "backend",
     "artifacts",
@@ -231,6 +237,7 @@ fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
     spec.ngpus = int_in(doc, section, "ngpus", spec.ngpus as i64, 1, 4096)? as usize;
     spec.host_buffers =
         int_in(doc, section, "host_buffers", spec.host_buffers as i64, 2, 1024)? as usize;
+    spec.threads = int_in(doc, section, "threads", spec.threads as i64, 0, 4096)? as usize;
     spec.mode = parse_mode(doc.str_or(section, "mode", "trsm")?)?;
     spec.backend = parse_backend(doc, section)?;
     spec.priority =
@@ -250,6 +257,9 @@ pub struct ServiceConfig {
     pub mem_budget_bytes: u64,
     /// Shared block-cache budget; 0 disables caching.
     pub cache_bytes: u64,
+    /// Total compute threads partitioned across the worker lanes
+    /// (0 = all cores). A job's own `threads` key overrides its share.
+    pub threads: usize,
     /// Optional spool directory of single-job TOML files.
     pub spool: Option<PathBuf>,
     /// Keep polling the spool after the queue drains (a true daemon).
@@ -287,7 +297,9 @@ impl ServiceConfig {
             }
         }
         for key in doc.keys_in("service") {
-            if !["workers", "mem_budget_mb", "cache_mb", "spool", "watch"].contains(&key) {
+            if !["workers", "mem_budget_mb", "cache_mb", "threads", "spool", "watch"]
+                .contains(&key)
+            {
                 return Err(Error::Config(format!("unknown key service.{key}")));
             }
         }
@@ -295,6 +307,7 @@ impl ServiceConfig {
         // ≤ 2^40 MB keeps the <<20 shift far from u64 overflow.
         let mem_budget_mb = int_in(doc, "service", "mem_budget_mb", 4096, 1, 1 << 40)?;
         let cache_mb = int_in(doc, "service", "cache_mb", 256, 0, 1 << 40)?;
+        let threads = int_in(doc, "service", "threads", 0, 0, 4096)? as usize;
         let spool = match doc.get("service", "spool") {
             None => None,
             Some(v) => Some(PathBuf::from(v.as_str().ok_or_else(|| {
@@ -312,6 +325,7 @@ impl ServiceConfig {
             workers,
             mem_budget_bytes: (mem_budget_mb as u64) << 20,
             cache_bytes: (cache_mb as u64) << 20,
+            threads,
             spool,
             watch,
             jobs,
@@ -345,6 +359,7 @@ mod tests {
         assert_eq!(c.dims.n, 512);
         assert_eq!(c.pipeline.block, 256);
         assert_eq!(c.pipeline.host_buffers, 3);
+        assert_eq!(c.pipeline.threads, 0);
         assert!(matches!(c.pipeline.backend, BackendKind::Native));
     }
 
@@ -362,6 +377,7 @@ seed = 7
 [pipeline]
 block = 32
 ngpus = 2
+threads = 6
 mode = "block"
 backend = "pjrt"
 artifacts = "arts"
@@ -374,6 +390,7 @@ profile = "tesla"
         .unwrap();
         assert_eq!(c.dims.m, 128);
         assert_eq!(c.pipeline.ngpus, 2);
+        assert_eq!(c.pipeline.threads, 6);
         assert!(matches!(c.pipeline.mode, OffloadMode::Block));
         match &c.pipeline.backend {
             BackendKind::Pjrt { artifacts } => assert_eq!(artifacts.to_str(), Some("arts")),
@@ -400,12 +417,14 @@ profile = "tesla"
 workers = 3
 mem_budget_mb = 1024
 cache_mb = 64
+threads = 12
 spool = "spool"
 watch = true
 
 [job.alpha]
 dataset = "data/s1"
 block = 128
+threads = 4
 priority = 2
 read_mbps = 120.0
 
@@ -420,13 +439,16 @@ artifacts = "arts"
         assert_eq!(c.workers, 3);
         assert_eq!(c.mem_budget_bytes, 1024 << 20);
         assert_eq!(c.cache_bytes, 64 << 20);
+        assert_eq!(c.threads, 12);
         assert_eq!(c.spool.as_deref(), Some(std::path::Path::new("spool")));
         assert!(c.watch);
         assert_eq!(c.jobs.len(), 2);
         // Sections come back in alphabetical order.
         assert_eq!(c.jobs[0].name, "alpha");
         assert_eq!(c.jobs[0].block, 128);
+        assert_eq!(c.jobs[0].threads, 4);
         assert_eq!(c.jobs[0].priority, 2);
+        assert_eq!(c.jobs[1].threads, 0, "threads defaults to auto");
         assert!(c.jobs[0].read_throttle.is_some());
         assert_eq!(c.jobs[1].name, "beta");
         assert!(matches!(c.jobs[1].mode, OffloadMode::Block));
@@ -442,6 +464,7 @@ artifacts = "arts"
         assert_eq!(c.workers, 2);
         assert_eq!(c.mem_budget_bytes, 4096 << 20);
         assert_eq!(c.cache_bytes, 256 << 20);
+        assert_eq!(c.threads, 0, "compute threads default to all cores");
         assert!(c.spool.is_none());
         assert!(!c.watch);
         assert!(c.jobs.is_empty());
@@ -470,6 +493,8 @@ artifacts = "arts"
         assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nblock = -1\n").is_err());
         assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nngpus = 0\n").is_err());
         assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nhost_buffers = 1\n").is_err());
+        assert!(ServiceConfig::from_toml("[service]\nthreads = -2\n").is_err());
+        assert!(ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\nthreads = -1\n").is_err());
     }
 
     #[test]

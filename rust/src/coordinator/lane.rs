@@ -110,13 +110,17 @@ pub struct DeviceLane {
 }
 
 impl DeviceLane {
-    /// Spawn lane `lane` with chunk width `mb` columns.
+    /// Spawn lane `lane` with chunk width `mb` columns. `threads` is the
+    /// lane's compute-thread budget — its share of the host cores (see
+    /// `PipelineConfig::threads`); the native trsm/gemm kernels fan out
+    /// up to that many workers. 0 = inherit the process-wide pool size.
     pub fn spawn(
         lane: usize,
         mode: OffloadMode,
         backend: Backend,
         pre: &Preprocessed,
         mb: usize,
+        threads: usize,
     ) -> Result<DeviceLane> {
         let n = pre.l.rows();
         let pl = pre.xl_t.cols();
@@ -147,7 +151,10 @@ impl DeviceLane {
         let (tx_out, rx_out) = channel::<DevOut>();
         let worker = std::thread::Builder::new()
             .name(format!("cugwas-lane{lane}"))
-            .spawn(move || lane_main(lane, mode, backend, statics, rx, tx_out))
+            .spawn(move || {
+                let _budget = crate::util::threads::with_budget(threads);
+                lane_main(lane, mode, backend, statics, rx, tx_out)
+            })
             .map_err(|e| Error::Pipeline(format!("spawning lane {lane}: {e}")))?;
         Ok(DeviceLane { lane, tx: Some(tx), rx_out, worker: Some(worker) })
     }
@@ -320,7 +327,7 @@ fn process_native(
         OffloadMode::Trsm => LaneOutputs::Xbt(xbt),
         OffloadMode::Block => {
             let mut g = Matrix::zeros(st.pl, live);
-            crate::linalg::gemm(1.0, &st.pre.xl_t.transpose(), &xbt, 0.0, &mut g)?;
+            crate::linalg::gemm(1.0, &st.pre.xl_tt, &xbt, 0.0, &mut g)?;
             let rb: Vec<f64> = (0..live).map(|j| crate::linalg::dot(xbt.col(j), &st.yt)).collect();
             let d: Vec<f64> = (0..live).map(|j| crate::linalg::sumsq(xbt.col(j))).collect();
             LaneOutputs::Reductions { xbt, g, rb, d }
@@ -360,7 +367,7 @@ mod tests {
     #[test]
     fn native_lane_trsm_roundtrip() {
         let (prob, pre) = setup(24, 3, 8);
-        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 4).unwrap();
+        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 4, 1).unwrap();
         lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 4, 4), live: 4 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         assert_eq!(out.block, 0);
@@ -385,7 +392,7 @@ mod tests {
     fn native_lane_blockfull_matches_incore() {
         let (prob, pre) = setup(20, 2, 6);
         let lane =
-            DeviceLane::spawn(0, OffloadMode::BlockFull, Backend::Native, &pre, 6).unwrap();
+            DeviceLane::spawn(0, OffloadMode::BlockFull, Backend::Native, &pre, 6, 1).unwrap();
         lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 6, 6), live: 6 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         let want = crate::gwas::solve_incore(&prob).unwrap();
@@ -399,7 +406,7 @@ mod tests {
     #[test]
     fn padded_tail_columns_are_dropped() {
         let (prob, pre) = setup(16, 2, 3);
-        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 8).unwrap();
+        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 8, 1).unwrap();
         lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 3, 8), live: 3 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         match out.outs {
@@ -412,7 +419,7 @@ mod tests {
     #[test]
     fn lane_processes_stream_in_order() {
         let (prob, pre) = setup(16, 2, 8);
-        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 2).unwrap();
+        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 2, 1).unwrap();
         // More submissions than device buffers: exercises backpressure.
         let feeder = std::thread::spawn({
             let chunks: Vec<Vec<f64>> = (0..4).map(|b| chunk(&prob, b * 2, 2, 2)).collect();

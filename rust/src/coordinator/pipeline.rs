@@ -22,12 +22,13 @@ use crate::coordinator::metrics::{Metrics, Phase};
 use crate::coordinator::pool::BufPool;
 use crate::error::{Error, Result};
 use crate::gwas::preprocess::{preprocess, Preprocessed};
-use crate::gwas::sloop::{sloop_block, sloop_from_reductions, SloopScratch};
+use crate::gwas::sloop::{sloop_block_into, sloop_from_reductions_into, SloopScratch};
 use crate::linalg::Matrix;
 use crate::runtime::{ArtifactKey, Kind, Manifest};
 use crate::storage::{
     dataset, AioEngine, AioHandle, BlockCache, BlockKey, Header, Throttle, XrdFile,
 };
+use crate::util::threads;
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -67,6 +68,16 @@ pub struct PipelineConfig {
     /// so repeated studies over one dataset skip the HDD entirely.
     /// `None` (the default) streams straight from disk, as the paper does.
     pub cache: Option<Arc<BlockCache>>,
+    /// Total compute threads for this run (0 = all cores). Partitioned
+    /// between the device lanes and the coordinator-side S-loop: each of
+    /// the `ngpus` lanes gets an equal share for its trsm/gemm kernels
+    /// and the coordinator keeps the remainder, so a `serve` worker
+    /// running on a slice of the machine doesn't fan its kernels out
+    /// past its share. Note the floor: the pipeline always runs its
+    /// `ngpus` lane threads plus the coordinator, so a budget below
+    /// `ngpus + 1` clamps to one (serial) kernel worker per thread —
+    /// it cannot shrink the pipeline's own `ngpus + 1` concurrency.
+    pub threads: usize,
 }
 
 impl PipelineConfig {
@@ -84,6 +95,7 @@ impl PipelineConfig {
             write_throttle: None,
             resume: false,
             cache: None,
+            threads: 0,
         }
     }
 }
@@ -147,9 +159,21 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         }
     };
 
+    // Core partition: each lane gets an equal share for its kernels, the
+    // coordinator keeps the remainder for the S-loop (both ≥ 1).
+    let total = if cfg.threads == 0 { threads::available() } else { cfg.threads };
+    let lane_threads = (total / (cfg.ngpus + 1)).max(1);
+    let coord_threads = total.saturating_sub(lane_threads * cfg.ngpus).max(1);
+
     // Preprocessing (Listing 1.3 lines 1–7; seconds, excluded by the
-    // paper from streaming timings but included in our wall clock).
-    let pre: Preprocessed = preprocess(&kin, &xl, &y, dinv_nb)?;
+    // paper from streaming timings but included in our wall clock). The
+    // lanes don't exist yet, so it may use the full budget.
+    let pre: Preprocessed = {
+        let _full = threads::with_budget(total);
+        preprocess(&kin, &xl, &y, dinv_nb)?
+    };
+    // From here on this thread runs the S-loop on its core share.
+    let _coord_budget = threads::with_budget(coord_threads);
 
     // Storage engines (one I/O thread each — read and write devices).
     let paths = dataset::DatasetPaths::new(&cfg.dataset);
@@ -190,7 +214,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
                 (BackendKind::Pjrt { .. }, Some(entry)) => Backend::Pjrt { entry: entry.clone() },
                 _ => unreachable!(),
             };
-            DeviceLane::spawn(gi, cfg.mode, backend, &pre, mb_gpu)
+            DeviceLane::spawn(gi, cfg.mode, backend, &pre, mb_gpu, lane_threads)
         })
         .collect::<Result<_>>()?;
 
@@ -318,18 +342,18 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         let asm = assemblies.get_mut(&b).expect("assembly exists");
         let col0 = out.lane * mb_gpu; // chunk's first column within block
         let t0 = Instant::now();
+        // The S-loop writes its solutions straight into this chunk's
+        // segment of the assembly buffer — no per-chunk result matrix,
+        // no copy: the retire path is allocation-free in steady state.
         match out.outs {
             LaneOutputs::Xbt(xbt) => {
                 let live = xbt.cols();
-                let mut rblk = Matrix::zeros(p, live);
-                sloop_block(&pre, &xbt, scratch, &mut rblk)?;
-                asm.buf[col0 * p..(col0 + live) * p].copy_from_slice(rblk.as_slice());
+                sloop_block_into(&pre, &xbt, scratch, &mut asm.buf[col0 * p..(col0 + live) * p])?;
             }
             LaneOutputs::Reductions { xbt: _, g, rb, d } => {
                 let live = d.len();
-                let mut rblk = Matrix::zeros(p, live);
-                sloop_from_reductions(&pre, &g, &d, &rb, scratch, &mut rblk)?;
-                asm.buf[col0 * p..(col0 + live) * p].copy_from_slice(rblk.as_slice());
+                let seg = &mut asm.buf[col0 * p..(col0 + live) * p];
+                sloop_from_reductions_into(&pre, &g, &d, &rb, scratch, seg)?;
             }
             LaneOutputs::Solutions(rblk) => {
                 let live = rblk.cols();

@@ -12,4 +12,7 @@ pub mod sloop;
 pub use incore::{solve_incore, solve_incore_with_stats};
 pub use preprocess::{preprocess, Preprocessed};
 pub use problem::{Dims, Problem};
-pub use sloop::{sloop_block, sloop_block_stats, sloop_from_reductions, SloopScratch};
+pub use sloop::{
+    sloop_block, sloop_block_into, sloop_block_stats, sloop_block_stats_into,
+    sloop_from_reductions, sloop_from_reductions_into, SloopScratch,
+};

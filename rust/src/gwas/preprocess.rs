@@ -6,7 +6,10 @@
 //! per-block hot path needs is captured in [`Preprocessed`].
 
 use crate::error::Result;
-use crate::linalg::{gemv_t, potrf, potrf_invert_diag_blocks, syrk_t, trsm_lower_left, trsv_lower, Matrix};
+use crate::linalg::{
+    gemv_t, potrf, potrf_invert_diag_blocks, syrk_t_pretransposed, trsm_lower_left, trsv_lower,
+    Matrix,
+};
 
 /// Everything the streaming loop needs, computed once.
 #[derive(Debug, Clone)]
@@ -15,6 +18,10 @@ pub struct Preprocessed {
     pub l: Matrix,
     /// `X̃_L = L^-1 X_L` (n × pl).
     pub xl_t: Matrix,
+    /// `X̃_L^T` (pl × n) — precomputed so the per-block reduction
+    /// `G = X̃_L^T X̃_b` never re-transposes (or re-allocates) in the
+    /// steady state.
+    pub xl_tt: Matrix,
     /// `ỹ = L^-1 y`.
     pub y_t: Vec<f64>,
     /// `S_TL = X̃_L^T X̃_L` (pl × pl).
@@ -41,10 +48,11 @@ pub fn preprocess(m: &Matrix, xl: &Matrix, y: &[f64], dinv_nb: usize) -> Result<
     let mut y_t = y.to_vec();
     trsv_lower(&l, &mut y_t)?; // ỹ ← trsv L, y
     let rtop = gemv_t(&xl_t, &y_t)?; // r̃_T ← gemv X̃_L, ỹ
-    let stl = syrk_t(&xl_t); // S_TL ← syrk X̃_L
+    let xl_tt = xl_t.transpose(); // cached once: syrk below + per-block G reductions
+    let stl = syrk_t_pretransposed(&xl_tt, &xl_t); // S_TL ← syrk X̃_L
     let dinv = if dinv_nb > 0 { Some(potrf_invert_diag_blocks(&l, dinv_nb)?) } else { None };
     let yty = crate::linalg::dot(&y_t, &y_t);
-    Ok(Preprocessed { l, xl_t, y_t, stl, rtop, dinv, dinv_nb, yty })
+    Ok(Preprocessed { l, xl_t, xl_tt, y_t, stl, rtop, dinv, dinv_nb, yty })
 }
 
 #[cfg(test)]
@@ -84,6 +92,9 @@ mod tests {
         // S_TL symmetric pl×pl, r̃_T length pl
         assert_eq!(pre.stl.rows(), 3);
         assert_eq!(pre.rtop.len(), 3);
+
+        // Cached transpose is exactly X̃_L^T.
+        assert_eq!(pre.xl_tt, pre.xl_t.transpose());
 
         // dinv present with the requested block size
         let dinv = pre.dinv.as_ref().unwrap();

@@ -11,32 +11,123 @@
 //!   reductions were already produced by the L1 `sloop` kernel on the
 //!   device; only the tiny per-SNP `posv`s remain.
 //!
-//! Both are allocation-free in the per-SNP loop ([`SloopScratch`]).
+//! The `*_into` variants write straight into a caller-provided
+//! column-major `p × mb` slice (the pipeline points them at its block
+//! assembly buffer, so the retire path never allocates or copies).
+//!
+//! Parallelism: the SNP columns are independent, so both the reductions
+//! and the per-SNP solves shard their columns across the compute pool
+//! ([`crate::util::threads`]) in [`SLOOP_PANEL`]-wide panels, each worker
+//! with its own scratch. Per-column arithmetic is untouched by the
+//! sharding, so results are bit-identical at every thread count.
+//!
+//! All paths are allocation-free in the per-SNP loop, and — with the
+//! block reductions hoisted into [`SloopScratch`] — allocation-free per
+//! block in the steady state too (buffers reallocate only when the block
+//! geometry changes, i.e. once at the tail block).
 
 use crate::error::{Error, Result};
 use crate::gwas::assoc::{inv_pp_from_factor, sigma2, stat_column, STAT_ROWS};
 use crate::gwas::preprocess::Preprocessed;
 use crate::linalg::{chol::posv_small, dot, gemm, sumsq, Matrix};
+use crate::util::threads;
 
-/// Reusable scratch for the per-SNP loop: the assembled `p×p` system and
-/// its right-hand side.
+/// Column-panel width for sharding SNP columns across the pool.
+const SLOOP_PANEL: usize = 64;
+/// Minimum columns per worker before sharding pays for the spawns.
+const SLOOP_COLS_PER_WORKER: usize = 128;
+/// Rough per-column cost of the assembly + posv + statistics in
+/// flop-equivalents for [`threads::for_flops`]. The per-SNP loop is
+/// latency-bound, not flop-bound (the `p×p` systems are tiny), so this
+/// is calibrated to wall time: a block only goes parallel when the
+/// serial sweep costs on the order of a millisecond — small blocks on
+/// the hot retire path must not pay a spawn for microseconds of work.
+const SLOOP_COL_COST: f64 = 4000.0;
+
+/// Per-SNP assembly scratch: the `p×p` system, its right-hand side, and
+/// the RHS copy the statistics path needs.
 #[derive(Debug, Clone)]
-pub struct SloopScratch {
+struct SnpScratch {
     p: usize,
     s: Vec<f64>,
     rhs: Vec<f64>,
+    rhs_orig: Vec<f64>,
+}
+
+impl SnpScratch {
+    fn new(p: usize) -> Self {
+        SnpScratch { p, s: vec![0.0; p * p], rhs: vec![0.0; p], rhs_orig: vec![0.0; p] }
+    }
+}
+
+/// Per-block reduction scratch (`G`, `d`, `rb`), reused across blocks.
+#[derive(Debug, Clone)]
+struct BlockScratch {
+    g: Matrix,
+    d: Vec<f64>,
+    rb: Vec<f64>,
+}
+
+impl BlockScratch {
+    fn new() -> Self {
+        BlockScratch { g: Matrix::zeros(0, 0), d: Vec::new(), rb: Vec::new() }
+    }
+
+    /// Fill `G = X̃_L^T X̃_b` (pl × mb), `d_j = ‖x̃_j‖²`, `rb_j = x̃_j · ỹ`.
+    /// `G` goes through the parallel gemm; `d`/`rb` shard their columns
+    /// directly. Buffers only reallocate when the block geometry changes.
+    fn reduce(&mut self, pre: &Preprocessed, xb_t: &Matrix) -> Result<()> {
+        let pl = pre.xl_t.cols();
+        let mb = xb_t.cols();
+        if self.g.rows() != pl || self.g.cols() != mb {
+            self.g = Matrix::zeros(pl, mb);
+        }
+        gemm(1.0, &pre.xl_tt, xb_t, 0.0, &mut self.g)?;
+        self.d.clear();
+        self.d.resize(mb, 0.0);
+        self.rb.clear();
+        self.rb.resize(mb, 0.0);
+        let nt = threads::for_flops(4.0 * pre.y_t.len() as f64 * mb as f64);
+        let chunks: Vec<(&mut [f64], &mut [f64])> = self
+            .d
+            .chunks_mut(SLOOP_PANEL)
+            .zip(self.rb.chunks_mut(SLOOP_PANEL))
+            .collect();
+        threads::scatter(nt, chunks, || (), |_, ci, (dc, rc)| {
+            let j0 = ci * SLOOP_PANEL;
+            for (jj, (dv, rv)) in dc.iter_mut().zip(rc.iter_mut()).enumerate() {
+                let col = xb_t.col(j0 + jj);
+                *dv = sumsq(col);
+                *rv = dot(col, &pre.y_t);
+            }
+            Ok(())
+        })
+    }
+}
+
+/// Reusable scratch for the S-loop: the per-SNP `p×p` system plus the
+/// hoisted per-block reduction buffers. One instance per study/stream —
+/// parallel workers build their own per-SNP scratch internally.
+#[derive(Debug, Clone)]
+pub struct SloopScratch {
+    snp: SnpScratch,
+    blk: BlockScratch,
 }
 
 impl SloopScratch {
     pub fn new(pl: usize) -> Self {
-        let p = pl + 1;
-        SloopScratch { p, s: vec![0.0; p * p], rhs: vec![0.0; p] }
+        SloopScratch { snp: SnpScratch::new(pl + 1), blk: BlockScratch::new() }
     }
 }
 
 /// Native S-loop over a solved block `xb_t = X̃_b` (n × mb). Appends one
 /// `p`-vector `r_i` per SNP column into `out` (column-major `p × mb`).
-pub fn sloop_block(pre: &Preprocessed, xb_t: &Matrix, scratch: &mut SloopScratch, out: &mut Matrix) -> Result<()> {
+pub fn sloop_block(
+    pre: &Preprocessed,
+    xb_t: &Matrix,
+    scratch: &mut SloopScratch,
+    out: &mut Matrix,
+) -> Result<()> {
     sloop_block_stats(pre, xb_t, scratch, out, None)
 }
 
@@ -53,6 +144,35 @@ pub fn sloop_block_stats(
     let pl = pre.xl_t.cols();
     let mb = xb_t.cols();
     check_out(out, pl, mb)?;
+    let stats_slice = match stats {
+        Some(st) => {
+            if st.rows() != STAT_ROWS || st.cols() != mb {
+                return Err(Error::shape(format!(
+                    "stats must be {STAT_ROWS}x{mb}, got {}x{}",
+                    st.rows(),
+                    st.cols()
+                )));
+            }
+            Some(st.as_mut_slice())
+        }
+        None => None,
+    };
+    sloop_block_stats_into(pre, xb_t, scratch, out.as_mut_slice(), stats_slice)
+}
+
+/// [`sloop_block_stats`] writing into raw column-major slices: `out` is
+/// `p × mb`, `stats` (optional) is `3 × mb`. The pipeline points `out`
+/// at its block assembly buffer so retiring a chunk never allocates.
+pub fn sloop_block_stats_into(
+    pre: &Preprocessed,
+    xb_t: &Matrix,
+    scratch: &mut SloopScratch,
+    out: &mut [f64],
+    stats: Option<&mut [f64]>,
+) -> Result<()> {
+    let pl = pre.xl_t.cols();
+    let mb = xb_t.cols();
+    check_out_len(out.len(), pl, mb)?;
     if xb_t.rows() != pre.xl_t.rows() {
         return Err(Error::shape(format!(
             "sloop_block: X̃_b has {} rows, X̃_L has {}",
@@ -60,18 +180,19 @@ pub fn sloop_block_stats(
             pre.xl_t.rows()
         )));
     }
-    // Block reductions (BLAS-3/1): G = X̃_L^T X̃_b  (pl × mb),
-    // d_j = ‖x̃_j‖², rb_j = x̃_j · ỹ.
-    let mut g = Matrix::zeros(pl, mb);
-    gemm(1.0, &pre.xl_t.transpose(), xb_t, 0.0, &mut g)?;
-    let mut d = vec![0.0; mb];
-    let mut rb = vec![0.0; mb];
-    for j in 0..mb {
-        let col = xb_t.col(j);
-        d[j] = sumsq(col);
-        rb[j] = dot(col, &pre.y_t);
-    }
-    solve_columns(pre, &g, &d, &rb, scratch, out, stats)
+    let SloopScratch { snp, blk } = scratch;
+    blk.reduce(pre, xb_t)?;
+    solve_columns(pre, &blk.g, &blk.d, &blk.rb, snp, out, stats)
+}
+
+/// [`sloop_block_stats_into`] without statistics.
+pub fn sloop_block_into(
+    pre: &Preprocessed,
+    xb_t: &Matrix,
+    scratch: &mut SloopScratch,
+    out: &mut [f64],
+) -> Result<()> {
+    sloop_block_stats_into(pre, xb_t, scratch, out, None)
 }
 
 /// S-loop tail when the reductions `(G, d, rb)` come from the device
@@ -85,8 +206,23 @@ pub fn sloop_from_reductions(
     out: &mut Matrix,
 ) -> Result<()> {
     let pl = pre.xl_t.cols();
+    check_out(out, pl, d.len())?;
+    sloop_from_reductions_into(pre, g, d, rb, scratch, out.as_mut_slice())
+}
+
+/// [`sloop_from_reductions`] writing into a raw column-major `p × mb`
+/// slice (the pipeline's assembly buffer).
+pub fn sloop_from_reductions_into(
+    pre: &Preprocessed,
+    g: &Matrix,
+    d: &[f64],
+    rb: &[f64],
+    scratch: &mut SloopScratch,
+    out: &mut [f64],
+) -> Result<()> {
+    let pl = pre.xl_t.cols();
     let mb = d.len();
-    check_out(out, pl, mb)?;
+    check_out_len(out.len(), pl, mb)?;
     if g.rows() != pl || g.cols() != mb || rb.len() != mb {
         return Err(Error::shape(format!(
             "sloop_from_reductions: G {}x{}, d {}, rb {}",
@@ -96,7 +232,7 @@ pub fn sloop_from_reductions(
             rb.len()
         )));
     }
-    solve_columns(pre, g, d, rb, scratch, out, None)
+    solve_columns(pre, g, d, rb, &mut scratch.snp, out, None)
 }
 
 /// Shared per-SNP assembly + solve:
@@ -106,32 +242,74 @@ pub fn sloop_from_reductions(
 ///       | g_i^T     d_i |              | rb_i |
 /// r_i = S_i^-1 rhs_i
 /// ```
+///
+/// Columns are sharded across the pool in [`SLOOP_PANEL`]-wide panels,
+/// each worker with its own [`SnpScratch`]; column `j`'s arithmetic is
+/// independent of every other column, so sharding cannot change a single
+/// bit of the result. A `posv` failure reports the **lowest** failing
+/// column — exactly the column the serial loop would have stopped at.
 fn solve_columns(
     pre: &Preprocessed,
     g: &Matrix,
     d: &[f64],
     rb: &[f64],
-    scratch: &mut SloopScratch,
-    out: &mut Matrix,
-    mut stats: Option<&mut Matrix>,
+    snp: &mut SnpScratch,
+    out: &mut [f64],
+    stats: Option<&mut [f64]>,
+) -> Result<()> {
+    let pl = pre.stl.rows();
+    let p = pl + 1;
+    let mb = d.len();
+    debug_assert_eq!(snp.p, p, "scratch built for wrong p");
+    if let Some(st) = stats.as_deref() {
+        if st.len() != STAT_ROWS * mb {
+            return Err(Error::shape(format!(
+                "stats must be {STAT_ROWS}x{mb}, got {} elements",
+                st.len()
+            )));
+        }
+    }
+    if mb == 0 {
+        return Ok(());
+    }
+    let nt = threads::for_flops(SLOOP_COL_COST * mb as f64)
+        .min(mb / SLOOP_COLS_PER_WORKER)
+        .max(1);
+    if nt <= 1 {
+        return solve_panel(pre, g, d, rb, snp, 0, out, stats);
+    }
+    let nchunks = mb.div_ceil(SLOOP_PANEL);
+    let stat_chunks: Vec<Option<&mut [f64]>> = match stats {
+        Some(st) => st.chunks_mut(SLOOP_PANEL * STAT_ROWS).map(Some).collect(),
+        None => (0..nchunks).map(|_| None).collect(),
+    };
+    let items: Vec<(&mut [f64], Option<&mut [f64]>)> =
+        out.chunks_mut(SLOOP_PANEL * p).zip(stat_chunks).collect();
+    threads::scatter(nt, items, || SnpScratch::new(p), |sc, ci, (outp, stp)| {
+        solve_panel(pre, g, d, rb, sc, ci * SLOOP_PANEL, outp, stp)
+    })
+}
+
+/// Serial assembly + solve over one panel: columns `[j0, j0 + ncols)`,
+/// with `out`/`stats` holding exactly that panel's column-major storage.
+#[allow(clippy::too_many_arguments)]
+fn solve_panel(
+    pre: &Preprocessed,
+    g: &Matrix,
+    d: &[f64],
+    rb: &[f64],
+    snp: &mut SnpScratch,
+    j0: usize,
+    out: &mut [f64],
+    mut stats: Option<&mut [f64]>,
 ) -> Result<()> {
     let pl = pre.stl.rows();
     let p = pl + 1;
     let n = pre.y_t.len();
-    debug_assert_eq!(scratch.p, p, "scratch built for wrong p");
-    if let Some(st) = stats.as_deref() {
-        if st.rows() != STAT_ROWS || st.cols() != d.len() {
-            return Err(Error::shape(format!(
-                "stats must be {STAT_ROWS}x{}, got {}x{}",
-                d.len(),
-                st.rows(),
-                st.cols()
-            )));
-        }
-    }
-    let mut rhs_orig = vec![0.0; p];
-    for j in 0..d.len() {
-        let s = &mut scratch.s;
+    let ncols = out.len() / p;
+    for jj in 0..ncols {
+        let j = j0 + jj;
+        let s = &mut snp.s;
         // Top-left block: S_TL (symmetric).
         for c in 0..pl {
             for r in 0..pl {
@@ -146,19 +324,19 @@ fn solve_columns(
         }
         s[pl * p + pl] = d[j];
         // RHS.
-        scratch.rhs[..pl].copy_from_slice(&pre.rtop);
-        scratch.rhs[pl] = rb[j];
-        rhs_orig.copy_from_slice(&scratch.rhs);
-        posv_small(s, &mut scratch.rhs, p)
+        snp.rhs[..pl].copy_from_slice(&pre.rtop);
+        snp.rhs[pl] = rb[j];
+        snp.rhs_orig.copy_from_slice(&snp.rhs);
+        posv_small(s, &mut snp.rhs, p)
             .map_err(|e| Error::Numerical(format!("S-loop posv failed at column {j}: {e}")))?;
-        out.col_mut(j).copy_from_slice(&scratch.rhs);
+        out[jj * p..(jj + 1) * p].copy_from_slice(&snp.rhs);
         if let Some(st) = stats.as_deref_mut() {
             // `s` now holds the Cholesky factor of S_j (posv_small is
             // in-place), so the extra statistics are nearly free.
             let var_pp = inv_pp_from_factor(s, p);
-            let s2 = sigma2(pre.yty, &scratch.rhs, &rhs_orig, n, p)?;
-            let col = stat_column(scratch.rhs[pl], var_pp, s2);
-            st.col_mut(j).copy_from_slice(&col);
+            let s2 = sigma2(pre.yty, &snp.rhs, &snp.rhs_orig, n, p)?;
+            let col = stat_column(snp.rhs[pl], var_pp, s2);
+            st[jj * STAT_ROWS..(jj + 1) * STAT_ROWS].copy_from_slice(&col);
         }
     }
     Ok(())
@@ -171,6 +349,17 @@ fn check_out(out: &Matrix, pl: usize, mb: usize) -> Result<()> {
             pl + 1,
             out.rows(),
             out.cols()
+        )));
+    }
+    Ok(())
+}
+
+fn check_out_len(len: usize, pl: usize, mb: usize) -> Result<()> {
+    if len != (pl + 1) * mb {
+        return Err(Error::shape(format!(
+            "sloop out slice must hold {}x{mb} = {} elements, got {len}",
+            pl + 1,
+            (pl + 1) * mb
         )));
     }
     Ok(())
@@ -247,12 +436,78 @@ mod tests {
 
         // Build reductions "as the device would".
         let mut g = Matrix::zeros(pl, mb);
-        gemm(1.0, &pre.xl_t.transpose(), &xb_t, 0.0, &mut g).unwrap();
+        gemm(1.0, &pre.xl_tt, &xb_t, 0.0, &mut g).unwrap();
         let d: Vec<f64> = (0..mb).map(|j| sumsq(xb_t.col(j))).collect();
         let rb: Vec<f64> = (0..mb).map(|j| dot(xb_t.col(j), &pre.y_t)).collect();
         let mut out_red = Matrix::zeros(pl + 1, mb);
         sloop_from_reductions(&pre, &g, &d, &rb, &mut scratch, &mut out_red).unwrap();
         assert!(out_native.max_abs_diff(&out_red) < 1e-12);
+    }
+
+    #[test]
+    fn into_variants_match_matrix_variants() {
+        let (_, pre, xb_t) = setup(20, 2, 6, 7);
+        let (pl, mb, p) = (2, 6, 3);
+        let mut out = Matrix::zeros(p, mb);
+        let mut stats = Matrix::zeros(STAT_ROWS, mb);
+        let mut scratch = SloopScratch::new(pl);
+        sloop_block_stats(&pre, &xb_t, &mut scratch, &mut out, Some(&mut stats)).unwrap();
+
+        let mut out_flat = vec![f64::NAN; p * mb];
+        let mut stats_flat = vec![f64::NAN; STAT_ROWS * mb];
+        sloop_block_stats_into(&pre, &xb_t, &mut scratch, &mut out_flat, Some(&mut stats_flat))
+            .unwrap();
+        assert_eq!(out_flat, out.as_slice());
+        assert_eq!(stats_flat, stats.as_slice());
+
+        // Bad slice lengths are rejected, not written past.
+        let mut short = vec![0.0; p * mb - 1];
+        assert!(sloop_block_into(&pre, &xb_t, &mut scratch, &mut short).is_err());
+    }
+
+    #[test]
+    fn sharded_sloop_is_bit_identical_to_serial() {
+        // Enough columns that the work gate (SLOOP_COL_COST * mb) and the
+        // per-worker column floor both clear, so the parallel path
+        // actually engages rather than falling back to serial.
+        let (_, pre, xb_t) = setup(16, 2, 8192, 13);
+        let (p, mb) = (3, 8192);
+        let mut out_serial = Matrix::zeros(p, mb);
+        let mut stats_serial = Matrix::zeros(STAT_ROWS, mb);
+        {
+            let _g = crate::util::threads::with_budget(1);
+            let mut scratch = SloopScratch::new(2);
+            sloop_block_stats(&pre, &xb_t, &mut scratch, &mut out_serial, Some(&mut stats_serial))
+                .unwrap();
+        }
+        for nt in [2, 3, 8] {
+            let _g = crate::util::threads::with_budget(nt);
+            let mut scratch = SloopScratch::new(2);
+            let mut out = Matrix::zeros(p, mb);
+            let mut stats = Matrix::zeros(STAT_ROWS, mb);
+            sloop_block_stats(&pre, &xb_t, &mut scratch, &mut out, Some(&mut stats)).unwrap();
+            assert_eq!(out, out_serial, "threads={nt}");
+            assert_eq!(stats, stats_serial, "threads={nt}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_block_geometries_is_clean() {
+        // Steady-state blocks then a smaller tail block: the hoisted
+        // reduction buffers must resize without leaking stale values.
+        let (_, pre, xb_t) = setup(18, 2, 48, 3);
+        let mut scratch = SloopScratch::new(2);
+        let full = xb_t.slice_cols(0, 32);
+        let tail = xb_t.slice_cols(32, 48);
+        let mut out_full = Matrix::zeros(3, 32);
+        let mut out_tail = Matrix::zeros(3, 16);
+        sloop_block(&pre, &full, &mut scratch, &mut out_full).unwrap();
+        sloop_block(&pre, &tail, &mut scratch, &mut out_tail).unwrap();
+        // Fresh scratch gives the same tail answers.
+        let mut scratch2 = SloopScratch::new(2);
+        let mut out_tail2 = Matrix::zeros(3, 16);
+        sloop_block(&pre, &tail, &mut scratch2, &mut out_tail2).unwrap();
+        assert_eq!(out_tail, out_tail2);
     }
 
     #[test]
@@ -263,7 +518,10 @@ mod tests {
         assert!(sloop_block(&pre, &xb_t, &mut scratch, &mut bad_out).is_err());
         let mut out = Matrix::zeros(3, 3);
         let bad_g = Matrix::zeros(1, 3);
-        assert!(sloop_from_reductions(&pre, &bad_g, &[0.0; 3], &[0.0; 3], &mut scratch, &mut out).is_err());
+        assert!(
+            sloop_from_reductions(&pre, &bad_g, &[0.0; 3], &[0.0; 3], &mut scratch, &mut out)
+                .is_err()
+        );
     }
 
     #[test]

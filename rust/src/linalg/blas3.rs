@@ -7,13 +7,29 @@
 //! inner 4×4 register micro-kernel over unit-stride columns. Not MKL, but
 //! within a small factor of peak for the sizes the pipeline feeds it — see
 //! EXPERIMENTS.md §Perf for measured GFlop/s.
+//!
+//! §Perf (threading): `gemm`, `trsm` and `syrk_t` fan their NC-wide
+//! column panels of B/C out over the compute pool
+//! ([`crate::util::threads`]). Panels are independent — every output
+//! element is produced by exactly one panel task running the exact
+//! serial loop nest — so parallel results are **bit-identical** to the
+//! serial path at every thread count, and the paper's multi-threaded
+//! BLAS baseline is finally matched on multi-core hosts (the
+//! `linalg_micro` bench sweeps 1/2/4/ncpu threads and reports GFlop/s;
+//! ≥ 2× at 4 threads on 512³ is the acceptance bar). Small shapes stay
+//! on the serial path — [`crate::util::threads::for_flops`] only opens a
+//! parallel region when each worker gets ≥ ~1 ms of arithmetic.
 
 use super::matrix::Matrix;
 use crate::error::{Error, Result};
+use crate::util::threads;
 
 /// Cache-tile sizes for the gemm loop nest (f64 elements).
 const MC: usize = 128;
 const KC: usize = 256;
+/// Column-panel width: the cache tile of the serial loop nest and the
+/// unit of parallel work distribution (a multiple of the 4-column
+/// micro-kernel, so panel boundaries never split a register block).
 const NC: usize = 64;
 
 /// `C += A^T_or_A * B` driver — here the plain `C = alpha*A*B + beta*C`
@@ -35,44 +51,67 @@ pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) -> Re
     if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
         return Ok(());
     }
-    // Cache-tiled loop nest; micro-kernel works on raw slices.
-    for jc in (0..n).step_by(NC) {
-        let nb = NC.min(n - jc);
-        for pc in (0..k).step_by(KC) {
-            let kb = KC.min(k - pc);
-            for ic in (0..m).step_by(MC) {
-                let mb = MC.min(m - ic);
-                gemm_block(alpha, a, b, c, ic, jc, pc, mb, nb, kb);
-            }
-        }
-    }
-    Ok(())
+    // NC-wide column panels of B/C are independent: distribute them over
+    // the pool (1 worker ⇒ plain serial sweep, identical either way).
+    let nt = threads::for_flops(2.0 * m as f64 * k as f64 * n as f64);
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    let b_rows = b.rows();
+    let c_rows = m;
+    let panels: Vec<&mut [f64]> = c.as_mut_slice().chunks_mut(NC * c_rows).collect();
+    threads::scatter(nt, panels, || (), |_, pi, panel| {
+        let nb = panel.len() / c_rows;
+        gemm_panel(alpha, a_data, m, k, b_data, b_rows, pi * NC, panel, c_rows, nb);
+        Ok(())
+    })
 }
 
-/// Inner block: C[ic..ic+mb, jc..jc+nb] += alpha * A[ic.., pc..] * B[pc.., jc..].
+/// Serial loop nest over one NC-wide panel: columns `[jc, jc+nb)` of C
+/// (`panel` is their contiguous column-major storage).
+fn gemm_panel(
+    alpha: f64,
+    a_data: &[f64],
+    m: usize,
+    k: usize,
+    b_data: &[f64],
+    b_rows: usize,
+    jc: usize,
+    panel: &mut [f64],
+    c_rows: usize,
+    nb: usize,
+) {
+    for pc in (0..k).step_by(KC) {
+        let kb = KC.min(k - pc);
+        for ic in (0..m).step_by(MC) {
+            let mb = MC.min(m - ic);
+            gemm_block(alpha, a_data, m, b_data, b_rows, jc, panel, c_rows, ic, pc, mb, nb, kb);
+        }
+    }
+}
+
+/// Inner block: panel[ic..ic+mb, 0..nb] += alpha * A[ic.., pc..] * B[pc.., jc..].
 /// 4-column × 2-rank register kernel; columns of A, B, C are contiguous
 /// so all accesses below are unit-stride. Each loaded A column feeds four
 /// output columns and two k-ranks are fused per sweep, which cuts C
 /// traffic 2× and A traffic 4× vs the naive axpy form (§Perf: 8.6 →
 /// ~11 GFlop/s at 512³ on this machine).
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn gemm_block(
     alpha: f64,
-    a: &Matrix,
-    b: &Matrix,
-    c: &mut Matrix,
-    ic: usize,
+    a_data: &[f64],
+    m: usize,
+    b_data: &[f64],
+    b_rows: usize,
     jc: usize,
+    panel: &mut [f64],
+    c_rows: usize,
+    ic: usize,
     pc: usize,
     mb: usize,
     nb: usize,
     kb: usize,
 ) {
-    let m = a.rows();
-    let a_data = a.as_slice();
-    let b_data = b.as_slice();
-    let b_rows = b.rows();
-    let c_rows = c.rows();
     let w_at = |p: usize, j: usize| alpha * b_data[(jc + j) * b_rows + pc + p];
     // 4-column panels of C.
     let mut j = 0;
@@ -85,34 +124,32 @@ fn gemm_block(
             let (w00, w01, w02, w03) = (w_at(p, j), w_at(p, j + 1), w_at(p, j + 2), w_at(p, j + 3));
             let (w10, w11, w12, w13) =
                 (w_at(p + 1, j), w_at(p + 1, j + 1), w_at(p + 1, j + 2), w_at(p + 1, j + 3));
-            let cdata = c.as_mut_slice();
-            let o0 = (jc + j) * c_rows + ic;
-            let o1 = (jc + j + 1) * c_rows + ic;
-            let o2 = (jc + j + 2) * c_rows + ic;
-            let o3 = (jc + j + 3) * c_rows + ic;
+            let o0 = j * c_rows + ic;
+            let o1 = (j + 1) * c_rows + ic;
+            let o2 = (j + 2) * c_rows + ic;
+            let o3 = (j + 3) * c_rows + ic;
             for i in 0..mb {
                 let (x, y) = (a0[i], a1[i]);
-                cdata[o0 + i] += w00 * x + w10 * y;
-                cdata[o1 + i] += w01 * x + w11 * y;
-                cdata[o2 + i] += w02 * x + w12 * y;
-                cdata[o3 + i] += w03 * x + w13 * y;
+                panel[o0 + i] += w00 * x + w10 * y;
+                panel[o1 + i] += w01 * x + w11 * y;
+                panel[o2 + i] += w02 * x + w12 * y;
+                panel[o3 + i] += w03 * x + w13 * y;
             }
             p += 2;
         }
         if p < kb {
             let a0 = &a_data[(pc + p) * m + ic..(pc + p) * m + ic + mb];
             let (w0, w1, w2, w3) = (w_at(p, j), w_at(p, j + 1), w_at(p, j + 2), w_at(p, j + 3));
-            let cdata = c.as_mut_slice();
-            let o0 = (jc + j) * c_rows + ic;
-            let o1 = (jc + j + 1) * c_rows + ic;
-            let o2 = (jc + j + 2) * c_rows + ic;
-            let o3 = (jc + j + 3) * c_rows + ic;
+            let o0 = j * c_rows + ic;
+            let o1 = (j + 1) * c_rows + ic;
+            let o2 = (j + 2) * c_rows + ic;
+            let o3 = (j + 3) * c_rows + ic;
             for i in 0..mb {
                 let x = a0[i];
-                cdata[o0 + i] += w0 * x;
-                cdata[o1 + i] += w1 * x;
-                cdata[o2 + i] += w2 * x;
-                cdata[o3 + i] += w3 * x;
+                panel[o0 + i] += w0 * x;
+                panel[o1 + i] += w1 * x;
+                panel[o2 + i] += w2 * x;
+                panel[o3 + i] += w3 * x;
             }
         }
         j += 4;
@@ -125,10 +162,9 @@ fn gemm_block(
             if w == 0.0 {
                 continue;
             }
-            let cdata = c.as_mut_slice();
-            let c_off = (jc + j) * c_rows + ic;
+            let c_off = j * c_rows + ic;
             for i in 0..mb {
-                cdata[c_off + i] += w * acol[i];
+                panel[c_off + i] += w * acol[i];
             }
         }
         j += 1;
@@ -138,14 +174,30 @@ fn gemm_block(
 /// `C = A^T A` (the paper's `syrk`, transposed variant: `S_TL = X̃_L^T X̃_L`,
 /// `S_BR = X̃_R^T X̃_R`). Returns the full symmetric matrix (both halves
 /// filled) because downstream assembly reads both.
+///
+/// Built on the tiled [`gemm`] kernel (one transpose of the narrow
+/// operand, then the full register-blocked sweep — parallel over column
+/// panels like every other BLAS-3 call) instead of the old per-entry
+/// `dot` double loop. The lower triangle is mirrored onto the upper
+/// afterwards so both halves stay bit-identical, which the per-entry
+/// version guaranteed by construction.
 pub fn syrk_t(a: &Matrix) -> Matrix {
+    syrk_t_pretransposed(&a.transpose(), a)
+}
+
+/// [`syrk_t`] when the caller already holds `A^T` (e.g. the cached
+/// `Preprocessed::xl_tt`) — skips the re-transpose. Panics (via the gemm
+/// shape check) if `at` is not the transpose shape of `a`.
+pub fn syrk_t_pretransposed(at: &Matrix, a: &Matrix) -> Matrix {
     let k = a.cols();
     let mut c = Matrix::zeros(k, k);
+    if k == 0 {
+        return c;
+    }
+    gemm(1.0, at, a, 0.0, &mut c).expect("syrk_t: `at` must be the transpose shape of `a`");
     for j in 0..k {
-        let cj = a.col(j);
-        for i in j..k {
-            let v = super::blas1::dot(a.col(i), cj);
-            c.set(i, j, v);
+        for i in (j + 1)..k {
+            let v = c.get(i, j);
             c.set(j, i, v);
         }
     }
@@ -158,49 +210,67 @@ const TRSM_NB: usize = 32;
 /// Solve `L X = B` in place over `B` (the paper's `trsm`: left, lower,
 /// non-transposed, unit-stride RHS columns). Blocked forward substitution:
 /// diagonal-block `trsv`s plus rank-`kb` `gemm` updates, so the bulk of the
-/// flops run through the BLAS-3 micro-kernel.
+/// flops run through the BLAS-3 micro-kernel. RHS columns are solved
+/// independently, NC at a time, across the compute pool (each panel runs
+/// the exact serial schedule, so results are bit-identical at every
+/// thread count). The diagonal is checked up front: a singular `L` errors
+/// before any column of `B` is touched.
 pub fn trsm_lower_left(l: &Matrix, b: &mut Matrix) -> Result<()> {
     let n = l.rows();
     if l.cols() != n || b.rows() != n {
         return Err(Error::shape(format!(
             "trsm: L {}x{}, B {}x{}",
-            l.rows(), l.cols(), b.rows(), b.cols()
+            l.rows(),
+            l.cols(),
+            b.rows(),
+            b.cols()
         )));
     }
     let nrhs = b.cols();
-    if nrhs == 0 {
+    if n == 0 || nrhs == 0 {
         return Ok(());
     }
-    let nb = TRSM_NB;
-    let mut kb_start = 0;
-    while kb_start < n {
-        let kb = nb.min(n - kb_start);
-        // 1) Solve the diagonal block for all RHS columns:
-        //    B[kb_start..kb_start+kb, :] ← L[diag]^-1 * same.
-        for j in 0..nrhs {
-            let col = b.col_mut(j);
+    for row in 0..n {
+        if l.get(row, row) == 0.0 {
+            return Err(Error::Numerical(format!("trsm: zero diagonal at {row}")));
+        }
+    }
+    let nt = threads::for_flops(n as f64 * n as f64 * nrhs as f64);
+    let l_data = l.as_slice();
+    let panels: Vec<&mut [f64]> = b.as_mut_slice().chunks_mut(NC * n).collect();
+    threads::scatter(nt, panels, || (), |_, _, panel| {
+        trsm_panel(l_data, n, panel);
+        Ok(())
+    })
+}
+
+/// Blocked forward substitution over one panel of RHS columns.
+fn trsm_panel(l_data: &[f64], n: usize, panel: &mut [f64]) {
+    let ncols = panel.len() / n;
+    let mut k0 = 0;
+    while k0 < n {
+        let kb = TRSM_NB.min(n - k0);
+        // 1) Solve the diagonal block for this panel's RHS columns:
+        //    B[k0..k0+kb, :] ← L[diag]^-1 * same.
+        for j in 0..ncols {
+            let col = &mut panel[j * n..(j + 1) * n];
             for r in 0..kb {
-                let row = kb_start + r;
-                let lrr = l.get(row, row);
-                if lrr == 0.0 {
-                    return Err(Error::Numerical(format!("trsm: zero diagonal at {row}")));
-                }
+                let row = k0 + r;
                 let mut v = col[row];
                 for s in 0..r {
-                    v -= l.get(row, kb_start + s) * col[kb_start + s];
+                    v -= l_data[(k0 + s) * n + row] * col[k0 + s];
                 }
-                col[row] = v / lrr;
+                col[row] = v / l_data[row * n + row];
             }
         }
         // 2) Update the trailing rows with a gemm:
-        //    B[kb_start+kb.., :] -= L[kb_start+kb.., kb_start..kb_start+kb] * B[diag rows, :]
-        let rest = n - kb_start - kb;
+        //    B[k0+kb.., :] -= L[k0+kb.., k0..k0+kb] * B[diag rows, :]
+        let rest = n - k0 - kb;
         if rest > 0 {
-            update_trailing(l, b, kb_start, kb, rest);
+            update_trailing(l_data, n, panel, ncols, k0, kb, rest);
         }
-        kb_start += kb;
+        k0 += kb;
     }
-    Ok(())
 }
 
 /// Trailing update of the blocked trsm, written directly over the strided
@@ -208,17 +278,19 @@ pub fn trsm_lower_left(l: &Matrix, b: &mut Matrix) -> Result<()> {
 /// register kernel as `gemm_block` — each loaded L column feeds four RHS
 /// columns (§Perf).
 #[inline]
-fn update_trailing(l: &Matrix, b: &mut Matrix, k0: usize, kb: usize, rest: usize) {
-    let n = l.rows();
-    let l_data = l.as_slice();
+fn update_trailing(
+    l_data: &[f64],
+    n: usize,
+    bdata: &mut [f64],
+    ncols: usize,
+    k0: usize,
+    kb: usize,
+    rest: usize,
+) {
     let row0 = k0 + kb;
-    let b_rows = b.rows();
-    let ncols = b.cols();
-    let bdata = b.as_mut_slice();
     let mut j = 0;
     while j + 4 <= ncols {
-        let (o0, o1, o2, o3) =
-            (j * b_rows, (j + 1) * b_rows, (j + 2) * b_rows, (j + 3) * b_rows);
+        let (o0, o1, o2, o3) = (j * n, (j + 1) * n, (j + 2) * n, (j + 3) * n);
         let mut p = 0;
         while p + 2 <= kb {
             let lc0 = &l_data[(k0 + p) * n + row0..(k0 + p) * n + row0 + rest];
@@ -259,7 +331,7 @@ fn update_trailing(l: &Matrix, b: &mut Matrix, k0: usize, kb: usize, rest: usize
         j += 4;
     }
     while j < ncols {
-        let off = j * b_rows;
+        let off = j * n;
         for p in 0..kb {
             let w = bdata[off + k0 + p];
             if w == 0.0 {
@@ -297,7 +369,9 @@ mod tests {
     #[test]
     fn gemm_matches_naive_over_shapes() {
         let mut rng = XorShift::new(21);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 13), (64, 64, 64), (130, 70, 65), (257, 300, 3)] {
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 5, 2), (17, 9, 13), (64, 64, 64), (130, 70, 65), (257, 300, 3)]
+        {
             let a = Matrix::randn(m, k, &mut rng);
             let b = Matrix::randn(k, n, &mut rng);
             let mut c = Matrix::zeros(m, n);
@@ -341,6 +415,25 @@ mod tests {
     }
 
     #[test]
+    fn gemm_parallel_is_bit_identical_to_serial() {
+        // Big enough to clear the for_flops threshold (320³ ≈ 65 MFlop).
+        let mut rng = XorShift::new(31);
+        let a = Matrix::randn(320, 320, &mut rng);
+        let b = Matrix::randn(320, 320, &mut rng);
+        let mut c_serial = Matrix::zeros(320, 320);
+        {
+            let _g = crate::util::threads::with_budget(1);
+            gemm(1.5, &a, &b, 0.0, &mut c_serial).unwrap();
+        }
+        for nt in [2, 4, 8] {
+            let mut c_par = Matrix::zeros(320, 320);
+            let _g = crate::util::threads::with_budget(nt);
+            gemm(1.5, &a, &b, 0.0, &mut c_par).unwrap();
+            assert_eq!(c_par, c_serial, "threads={nt}");
+        }
+    }
+
+    #[test]
     fn syrk_matches_gemm_transpose() {
         let mut rng = XorShift::new(23);
         let a = Matrix::randn(20, 6, &mut rng);
@@ -353,6 +446,35 @@ mod tests {
                 assert_eq!(s.get(i, j), s.get(j, i));
             }
         }
+    }
+
+    #[test]
+    fn syrk_parallel_is_bit_identical_and_symmetric() {
+        // Tall-skinny (the S-loop shape) and wide enough to go parallel.
+        let mut rng = XorShift::new(33);
+        let a = Matrix::randn(2048, 96, &mut rng);
+        let s_serial = {
+            let _g = crate::util::threads::with_budget(1);
+            syrk_t(&a)
+        };
+        let s_par = {
+            let _g = crate::util::threads::with_budget(4);
+            syrk_t(&a)
+        };
+        assert_eq!(s_par, s_serial);
+        for i in 0..96 {
+            for j in 0..96 {
+                assert_eq!(s_par.get(i, j), s_par.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_degenerate_dims() {
+        assert_eq!(syrk_t(&Matrix::zeros(0, 0)).rows(), 0);
+        let s = syrk_t(&Matrix::zeros(0, 3));
+        assert_eq!((s.rows(), s.cols()), (3, 3));
+        assert!(s.as_slice().iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -380,6 +502,28 @@ mod tests {
     }
 
     #[test]
+    fn trsm_parallel_is_bit_identical_to_serial() {
+        // 256² × 384 ≈ 25 MFlop — clears the threshold at 2+ workers.
+        let mut rng = XorShift::new(34);
+        let mut l = Matrix::randn(256, 256, &mut rng).tril();
+        for i in 0..256 {
+            l.set(i, i, 2.0 + l.get(i, i).abs());
+        }
+        let b0 = Matrix::randn(256, 384, &mut rng);
+        let mut b_serial = b0.clone();
+        {
+            let _g = crate::util::threads::with_budget(1);
+            trsm_lower_left(&l, &mut b_serial).unwrap();
+        }
+        for nt in [2, 4, 8] {
+            let mut b_par = b0.clone();
+            let _g = crate::util::threads::with_budget(nt);
+            trsm_lower_left(&l, &mut b_par).unwrap();
+            assert_eq!(b_par, b_serial, "threads={nt}");
+        }
+    }
+
+    #[test]
     fn trsm_identity_is_noop() {
         let mut rng = XorShift::new(25);
         let l = Matrix::eye(10);
@@ -390,11 +534,15 @@ mod tests {
     }
 
     #[test]
-    fn trsm_zero_diag_error() {
+    fn trsm_zero_diag_error_leaves_b_untouched() {
+        let mut rng = XorShift::new(26);
         let mut l = Matrix::eye(4);
         l.set(2, 2, 0.0);
-        let mut b = Matrix::zeros(4, 1);
+        let b0 = Matrix::randn(4, 2, &mut rng);
+        let mut b = b0.clone();
         assert!(trsm_lower_left(&l, &mut b).is_err());
+        // The singular diagonal is rejected before any column is modified.
+        assert_eq!(b, b0);
     }
 
     #[test]

@@ -163,6 +163,7 @@ const RUN_FLAGS: &[Flag] = &[
     Flag::opt("block", "256", "SNP columns per pipeline iteration"),
     Flag::opt("ngpus", "1", "device lanes"),
     Flag::opt("host-buffers", "3", "host ring size (paper: 3)"),
+    Flag::opt("threads", "0", "compute threads, split lanes/S-loop (0 = all cores)"),
     Flag::opt("mode", "trsm", "offload mode: trsm | block | blockfull"),
     Flag::opt("backend", "native", "native | pjrt"),
     Flag::opt("artifacts", "artifacts", "AOT artifacts directory (pjrt)"),
@@ -211,6 +212,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         write_throttle: parse_throttle(&a, "write-mbps")?,
         resume: a.switch("resume"),
         cache: None,
+        threads: a.usize("threads")?,
     };
     let report = coordinator::run(&cfg)?;
     println!(
@@ -234,6 +236,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
 const SERVE_FLAGS: &[Flag] = &[
     Flag::req("config", "service TOML ([service] + [job.*] sections)"),
     Flag::opt("spool", "", "spool directory of job TOMLs (overrides config)"),
+    Flag::opt("threads", "0", "compute threads across workers (0 = config, then all cores)"),
     Flag::switch("watch", "keep polling the spool after the queue drains"),
 ];
 
@@ -250,6 +253,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     if a.switch("watch") {
         cfg.watch = true;
+    }
+    let threads = a.usize("threads")?;
+    if threads > 0 {
+        cfg.threads = threads;
     }
     let report = cugwas::service::serve(&cfg)?;
     print!("{}", report.render());

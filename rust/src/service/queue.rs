@@ -42,6 +42,10 @@ pub struct JobSpec {
     pub priority: Priority,
     pub read_throttle: Option<Throttle>,
     pub write_throttle: Option<Throttle>,
+    /// Compute threads for this job's pipeline. 0 = take the service's
+    /// per-worker share (total threads / workers) so concurrent jobs
+    /// never oversubscribe the host.
+    pub threads: usize,
 }
 
 impl JobSpec {
@@ -59,6 +63,7 @@ impl JobSpec {
             priority: 0,
             read_throttle: None,
             write_throttle: None,
+            threads: 0,
         }
     }
 

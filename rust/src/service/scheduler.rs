@@ -54,6 +54,14 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
         return Err(Error::Config("service.mem_budget_mb must be > 0".into()));
     }
     let cache = Arc::new(BlockCache::new(cfg.cache_bytes));
+    // Partition the compute cores across the worker lanes: each job
+    // inherits an equal share unless its spec pins `threads` itself.
+    // (A share below a job's `ngpus + 1` clamps to serial kernels but
+    // cannot shrink the pipeline's structural lane threads — see
+    // `PipelineConfig::threads`.)
+    let total_threads =
+        if cfg.threads == 0 { crate::util::threads::available() } else { cfg.threads };
+    let worker_threads = (total_threads / cfg.workers).max(1);
     let t_wall = Instant::now();
 
     // Worker lanes: rendezvous submission (depth 0 = the dispatcher only
@@ -78,7 +86,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                     // completion forever.
                     let cache = cache.clone();
                     let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || run_job(&job, cache),
+                        || run_job(&job, cache, worker_threads),
                     ))
                     .unwrap_or_else(|_| {
                         JobReport::failed(
@@ -304,7 +312,9 @@ fn scan_spool(
 }
 
 /// Stream one job through the coordinator on this worker lane.
-fn run_job(job: &Job, cache: Option<Arc<BlockCache>>) -> JobReport {
+/// `worker_threads` is this lane's share of the host cores; a job spec
+/// with an explicit `threads` overrides it.
+fn run_job(job: &Job, cache: Option<Arc<BlockCache>>, worker_threads: usize) -> JobReport {
     let spec = &job.spec;
     let cfg = PipelineConfig {
         dataset: spec.dataset.clone(),
@@ -317,6 +327,7 @@ fn run_job(job: &Job, cache: Option<Arc<BlockCache>>) -> JobReport {
         write_throttle: spec.write_throttle,
         resume: false,
         cache,
+        threads: if spec.threads > 0 { spec.threads } else { worker_threads },
     };
     match coordinator::run(&cfg) {
         Ok(rep) => JobReport::done(
@@ -354,6 +365,7 @@ mod tests {
             workers,
             mem_budget_bytes: 1 << 30,
             cache_bytes: cache_mb << 20,
+            threads: 0,
             spool: None,
             watch: false,
             jobs,

@@ -1,9 +1,10 @@
 //! Small shared utilities: deterministic RNG, wall-clock timers, humanized
-//! quantities, and a leveled logger. All std-only.
+//! quantities, a leveled logger, and the compute thread pool. All std-only.
 
 pub mod human;
 pub mod log;
 pub mod rng;
+pub mod threads;
 pub mod timer;
 
 pub use human::{human_bytes, human_duration, human_rate};

@@ -1,0 +1,278 @@
+//! The crate-wide compute thread pool (std-only).
+//!
+//! Every BLAS-3 kernel and the S-loop route their data-parallel work
+//! through [`scatter`]: column-panel tasks go into a shared FIFO queue and
+//! scoped workers (the calling thread plus up to `budget − 1` spawned
+//! ones) claim them dynamically — the load-balancing effect of work
+//! stealing without per-worker deques. Workers are scoped
+//! (`std::thread::scope`), so tasks may borrow the caller's matrices and
+//! panic propagation is automatic.
+//!
+//! Sizing is a two-level *budget*:
+//!
+//! * a process-wide pool size ([`set_pool_size`], 0 = all cores), and
+//! * an optional per-thread override ([`with_budget`]) — how the pipeline
+//!   partitions cores between device lanes and the coordinator-side
+//!   S-loop so `serve` with N workers doesn't oversubscribe the host.
+//!
+//! Kernels then clamp the budget by available work ([`for_flops`]): a
+//! parallel region is only opened when each worker gets enough flops to
+//! amortize the spawn, so the tiny shapes the tests use stay on the
+//! serial path with zero overhead.
+//!
+//! Determinism: callers split work so that no two tasks touch the same
+//! output element and each task performs the exact serial operation
+//! sequence on its slice; results are therefore bit-identical at every
+//! thread count (enforced by `tests/determinism.rs`).
+
+use crate::error::Result;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+/// Process-wide pool size; 0 = resolve to [`available`] at use.
+static POOL_SIZE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread budget override; 0 = inherit the process-wide size.
+    static BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Hardware parallelism of this host (≥ 1).
+pub fn available() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the process-wide pool size. 0 restores the default (all cores).
+pub fn set_pool_size(n: usize) {
+    POOL_SIZE.store(n, Ordering::Relaxed);
+}
+
+/// Effective compute-thread budget for the calling thread: the innermost
+/// [`with_budget`] override, else the process-wide pool size, else all
+/// cores. Always ≥ 1.
+pub fn budget() -> usize {
+    let local = BUDGET.with(|b| b.get());
+    if local > 0 {
+        return local;
+    }
+    let global = POOL_SIZE.load(Ordering::Relaxed);
+    if global > 0 {
+        global
+    } else {
+        available()
+    }
+}
+
+/// RAII guard restoring the previous per-thread budget on drop.
+pub struct BudgetGuard {
+    prev: usize,
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        BUDGET.with(|b| b.set(self.prev));
+    }
+}
+
+/// Override the calling thread's budget (e.g. a device lane pinning
+/// itself to its core share). `n = 0` clears back to the pool default.
+pub fn with_budget(n: usize) -> BudgetGuard {
+    let prev = BUDGET.with(|b| b.replace(n));
+    BudgetGuard { prev }
+}
+
+/// Minimum useful work per worker: ≈ 1 ms of micro-kernel time. Below
+/// this, spawn + queue overhead beats the speedup.
+const FLOPS_PER_WORKER: f64 = 8e6;
+
+/// Workers worth opening for `flops` of arithmetic: the thread budget
+/// clamped so each worker gets at least [`FLOPS_PER_WORKER`].
+pub fn for_flops(flops: f64) -> usize {
+    let b = budget();
+    if b <= 1 {
+        return 1;
+    }
+    let by_work = (flops / FLOPS_PER_WORKER) as usize;
+    b.min(by_work.max(1))
+}
+
+/// Run `items` across up to `threads` scoped workers (the caller counts
+/// as one). Items are claimed from a shared FIFO queue, so a slow panel
+/// doesn't stall the rest. `init` builds one private state per worker
+/// (scratch buffers); `f(state, index, item)` receives the item's
+/// position in the original vector.
+///
+/// Errors: every item runs (no cancellation — tasks are short); the
+/// error with the **lowest item index** is returned, which for
+/// independent tasks is exactly the error the serial loop would have hit
+/// first, keeping failure behavior deterministic and thread-count
+/// independent.
+pub fn scatter<S, T, G, F>(threads: usize, items: Vec<T>, init: G, f: F) -> Result<()>
+where
+    T: Send,
+    G: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, T) -> Result<()> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let nw = threads.max(1).min(n);
+    if nw == 1 {
+        let mut state = init();
+        for (i, item) in items.into_iter().enumerate() {
+            f(&mut state, i, item)?;
+        }
+        return Ok(());
+    }
+
+    // Pre-fill the queue, then drop the sender: try_recv drains Ok(..)
+    // until empty and then yields Disconnected — no blocking recv while
+    // holding the lock.
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    for pair in items.into_iter().enumerate() {
+        let _ = tx.send(pair);
+    }
+    drop(tx);
+    let queue = Mutex::new(rx);
+    let first_err: Mutex<Option<(usize, crate::error::Error)>> = Mutex::new(None);
+
+    let worker = || {
+        let mut state = init();
+        loop {
+            let next = match queue.lock() {
+                Ok(rx) => rx.try_recv(),
+                Err(_) => break, // another worker panicked; stop cleanly
+            };
+            let Ok((i, item)) = next else { break };
+            if let Err(e) = f(&mut state, i, item) {
+                let mut slot = match first_err.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                if slot.as_ref().map_or(true, |(j, _)| i < *j) {
+                    *slot = Some((i, e));
+                }
+            }
+        }
+    };
+    std::thread::scope(|s| {
+        for _ in 1..nw {
+            s.spawn(&worker);
+        }
+        worker();
+    });
+
+    match first_err.into_inner() {
+        Ok(Some((_, e))) => Err(e),
+        Ok(None) => Ok(()),
+        Err(poisoned) => match poisoned.into_inner() {
+            Some((_, e)) => Err(e),
+            None => Ok(()),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    #[test]
+    fn budget_resolves_layers() {
+        assert!(available() >= 1);
+        set_pool_size(3);
+        assert_eq!(budget(), 3);
+        {
+            let _g = with_budget(7);
+            assert_eq!(budget(), 7);
+            {
+                let _g2 = with_budget(2);
+                assert_eq!(budget(), 2);
+            }
+            assert_eq!(budget(), 7);
+        }
+        assert_eq!(budget(), 3);
+        set_pool_size(0);
+        assert_eq!(budget(), available());
+    }
+
+    #[test]
+    fn for_flops_clamps_by_work() {
+        let _g = with_budget(8);
+        assert_eq!(for_flops(1.0), 1);
+        assert_eq!(for_flops(FLOPS_PER_WORKER * 3.0), 3);
+        assert_eq!(for_flops(FLOPS_PER_WORKER * 100.0), 8);
+    }
+
+    #[test]
+    fn scatter_runs_every_item_once() {
+        use std::sync::atomic::AtomicU64;
+        for threads in [1, 2, 4, 9] {
+            let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+            let items: Vec<usize> = (0..100).collect();
+            scatter(threads, items, || (), |_, i, item| {
+                assert_eq!(i, item);
+                hits[item].fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })
+            .unwrap();
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn scatter_reports_lowest_index_error() {
+        for threads in [1, 2, 4] {
+            let items: Vec<usize> = (0..64).collect();
+            let err = scatter(threads, items, || (), |_, i, _| {
+                if i == 7 || i == 50 {
+                    Err(Error::Numerical(format!("boom {i}")))
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+            assert!(err.to_string().contains("boom 7"), "{err}");
+        }
+    }
+
+    #[test]
+    fn scatter_worker_state_is_private() {
+        // Each worker's state starts fresh; mutating it never races.
+        let items: Vec<usize> = (0..32).collect();
+        scatter(4, items, || 0usize, |count, _, _| {
+            *count += 1;
+            assert!(*count <= 32);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn scatter_empty_and_single() {
+        scatter(4, Vec::<usize>::new(), || (), |_, _, _| Ok(())).unwrap();
+        scatter(4, vec![1usize], || (), |_, i, v| {
+            assert_eq!((i, v), (0, 1));
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn scatter_tasks_can_borrow_and_mutate_disjoint_slices() {
+        let mut buf = vec![0.0f64; 64];
+        let chunks: Vec<&mut [f64]> = buf.chunks_mut(16).collect();
+        scatter(3, chunks, || (), |_, i, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 16 + k) as f64;
+            }
+            Ok(())
+        })
+        .unwrap();
+        for (k, v) in buf.iter().enumerate() {
+            assert_eq!(*v, k as f64);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Thread-count determinism: the parallel compute plane must not change
+//! a single bit of any result. The kernels shard work so that every
+//! output element is produced by exactly one task running the exact
+//! serial operation sequence — so `r.xrd` (and the oracle diff) must be
+//! byte-identical for `threads = 1, 2, 8` on the same dataset, in every
+//! offload mode and lane count.
+
+use cugwas::coordinator::{run, verify_against_oracle, OffloadMode, PipelineConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::generate;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_det_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Run the pipeline at each thread count and return the raw `r.xrd`
+/// bytes plus the oracle diff.
+fn results_at(
+    dir: &std::path::Path,
+    block: usize,
+    threads: usize,
+    mutate: impl FnOnce(&mut PipelineConfig),
+) -> (Vec<u8>, f64) {
+    let mut cfg = PipelineConfig::new(dir, block);
+    cfg.threads = threads;
+    mutate(&mut cfg);
+    run(&cfg).unwrap();
+    let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
+    let diff = verify_against_oracle(dir, 1e-7).unwrap();
+    (bytes, diff)
+}
+
+#[test]
+fn pipeline_results_are_bit_identical_across_thread_counts() {
+    // n=128, block=4096 puts the per-block trsm (≈67 MFlop) and the
+    // 4096-column S-loop over both parallel gates (flops and columns
+    // per worker), so threads=8 genuinely exercises the sharded paths
+    // rather than falling back to the serial ones.
+    let dir = tmpdir("trsm");
+    let dims = Dims::new(128, 3, 8192).unwrap();
+    generate(&dir, dims, 256, 4242).unwrap();
+
+    let (ref_bytes, ref_diff) = results_at(&dir, 4096, 1, |_| {});
+    for threads in [2, 8] {
+        let (bytes, diff) = results_at(&dir, 4096, threads, |_| {});
+        assert_eq!(bytes, ref_bytes, "r.xrd changed at threads={threads}");
+        assert_eq!(
+            diff.to_bits(),
+            ref_diff.to_bits(),
+            "oracle diff changed at threads={threads}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fused_modes_and_multi_lane_are_bit_identical_across_thread_counts() {
+    for (tag, mode, ngpus) in [
+        ("block", OffloadMode::Block, 1),
+        ("blockfull", OffloadMode::BlockFull, 1),
+        ("multilane", OffloadMode::Trsm, 2),
+    ] {
+        let dir = tmpdir(tag);
+        // 500 SNPs at block 256 leaves a ragged 244-column tail (split
+        // unevenly across lanes in the multi-lane case).
+        let dims = Dims::new(128, 2, 500).unwrap();
+        generate(&dir, dims, 128, 77).unwrap();
+        let mutate = |c: &mut PipelineConfig| {
+            c.mode = mode;
+            c.ngpus = ngpus;
+        };
+        let (ref_bytes, _) = results_at(&dir, 256, 1, mutate);
+        for threads in [2, 8] {
+            let (bytes, _) = results_at(&dir, 256, threads, mutate);
+            assert_eq!(bytes, ref_bytes, "{tag}: r.xrd changed at threads={threads}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,184 @@
+//! API-compatible stub of the `xla` PJRT bindings.
+//!
+//! The production build links the real bindings (PJRT CPU client + HLO
+//! compilation); this environment cannot, so the stub mirrors exactly the
+//! surface `cugwas` uses. Host-side literal plumbing ([`Literal::vec1`],
+//! [`Literal::reshape`], [`Literal::to_vec`]) is functional; anything that
+//! would need a live PJRT runtime ([`PjRtClient::cpu`] and everything
+//! behind it) returns an error, which the coordinator surfaces as
+//! `Error::Runtime` — the native backend never reaches these paths.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries only a message, like the real crate's `Error`
+/// does for the failure modes we surface.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate's signatures.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT/XLA runtime not available in this build (offline xla stub — use the native backend)"
+    ))
+}
+
+/// Element types `Literal::to_vec` can produce. Only `f64` is used by the
+/// cuGWAS layout contract.
+pub trait NativeType: Sized {
+    fn from_f64_slice(v: &[f64]) -> Vec<Self>;
+}
+
+impl NativeType for f64 {
+    fn from_f64_slice(v: &[f64]) -> Vec<f64> {
+        v.to_vec()
+    }
+}
+
+/// Host-side literal: shape + flat `f64` payload.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice (copies).
+    pub fn vec1(data: &[f64]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    /// Reinterpret with new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: dims {dims:?} imply {want} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Unpack a tuple literal — only produced by a live runtime.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Array shape of this literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Copy out the payload as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(T::from_f64_slice(&self.data))
+    }
+}
+
+/// Dimensions of an array-shaped literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module — construction requires the real parser.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. `cpu()` is the only constructor `cugwas` calls and
+/// it fails in the stub, so the remaining methods are unreachable but keep
+/// the call sites typechecking.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled, device-loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device-resident buffer returned by `execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7, 7]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+        assert!(Literal::vec1(&[0.0]).to_tuple().is_err());
+    }
+}
