@@ -23,6 +23,15 @@ use cugwas::storage::generate;
 use cugwas::util::human_duration;
 use std::time::Duration;
 
+/// Machine-readable trajectory line (one per row); the CI smoke job
+/// collects these into the per-push BENCH_<sha>.json artifact.
+fn json_line(row: &str, value: f64, unit: &str) {
+    println!(
+        "{{\"bench\":\"headline_table\",\"row\":\"{row}\",\
+         \"value\":{value:.6},\"unit\":\"{unit}\"}}"
+    );
+}
+
 fn main() {
     // ---- paper scale (sim) ------------------------------------------------
     let dims = Dims::new(10_000, 3, 100_000).unwrap();
@@ -47,6 +56,8 @@ fn main() {
     let r9 = ooc.total_secs / cu4.total_secs;
     t.row(&["cuGWAS-1GPU vs OOC-HP-GWAS".into(), "2.6x".into(), format!("{r1:.2}x"), ok((2.0..3.2).contains(&r1))]);
     t.row(&["cuGWAS-4GPU vs OOC-HP-GWAS".into(), "~9x".into(), format!("{r9:.2}x"), ok((6.0..12.0).contains(&r9))]);
+    json_line("cugwas1_vs_ooc", r1, "x");
+    json_line("cugwas4_vs_ooc", r9, "x");
 
     // The §5 reference problem: p=4, n=1500, m=220 833 → 2.88 s on 4 GPUs.
     let ref_dims = Dims::new(1_500, 3, 220_833).unwrap();
@@ -82,6 +93,9 @@ fn main() {
         format!("{r488:.0}x"),
         ok((150.0..2_000.0).contains(&r488)),
     ]);
+    json_line("probabel_ref_cugwas", cu_ref.total_secs, "s");
+    json_line("probabel_ref_probabel", pa_ref.total_secs, "s");
+    json_line("cugwas_vs_probabel_488", r488, "x");
     t.print();
 
     // ---- live sanity block (this machine, measured) -------------------------
@@ -98,16 +112,17 @@ fn main() {
         format!("live — measured on this machine (n=384, m={m}, native lanes)"),
         &["solver", "wall", "vs cuGWAS"],
     );
-    for (name, wall) in [
-        ("cuGWAS (pipelined)", cu.wall_secs),
-        ("OOC-HP-GWAS", ooc.wall_secs),
-        ("ProbABEL-like", pa.wall_secs),
+    for (name, key, wall) in [
+        ("cuGWAS (pipelined)", "live_cugwas", cu.wall_secs),
+        ("OOC-HP-GWAS", "live_ooc", ooc.wall_secs),
+        ("ProbABEL-like", "live_probabel", pa.wall_secs),
     ] {
         live.row(&[
             name.into(),
             human_duration(Duration::from_secs_f64(wall)),
             format!("{:.2}x", wall / cu.wall_secs),
         ]);
+        json_line(key, wall, "s");
     }
     live.print();
     println!(

@@ -65,7 +65,7 @@ pub fn run_naive(
     let rfile = XrdFile::create(&paths.results(), r_header)?;
 
     // Single synchronous lane — it may use the whole pool (threads = 0).
-    let lane = DeviceLane::spawn(0, OffloadMode::Trsm, lane_backend, &pre, block, 0)?;
+    let lane = DeviceLane::spawn(0, OffloadMode::Trsm, lane_backend, &pre, block, 0, 2)?;
     let nblocks = dims.m.div_ceil(block);
     let cols_in =
         |b: usize| if (b + 1) * block <= dims.m { block } else { dims.m - b * block };

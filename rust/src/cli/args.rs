@@ -34,6 +34,9 @@ impl Flag {
 pub struct Args {
     values: BTreeMap<String, String>,
     switches: Vec<String>,
+    /// Flags the user typed (as opposed to filled-in defaults) — lets a
+    /// tuned profile supply defaults while explicit flags still win.
+    explicit: std::collections::BTreeSet<String>,
 }
 
 impl Args {
@@ -41,6 +44,7 @@ impl Args {
     pub fn parse(argv: &[String], flags: &[Flag]) -> Result<Args> {
         let mut values = BTreeMap::new();
         let mut switches = Vec::new();
+        let mut explicit = std::collections::BTreeSet::new();
         let find = |name: &str| flags.iter().find(|f| f.name == name);
         let mut i = 0;
         while i < argv.len() {
@@ -54,6 +58,7 @@ impl Args {
             };
             let flag = find(name)
                 .ok_or_else(|| Error::Config(format!("unknown flag --{name}")))?;
+            explicit.insert(name.to_string());
             if flag.switch {
                 if inline_value.is_some() {
                     return Err(Error::Config(format!("--{name} takes no value")));
@@ -86,11 +91,17 @@ impl Args {
                 }
             }
         }
-        Ok(Args { values, switches })
+        Ok(Args { values, switches, explicit })
     }
 
     pub fn str(&self, name: &str) -> &str {
         self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Whether the user typed `--name` themselves (a filled-in default
+    /// returns false).
+    pub fn given(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn usize(&self, name: &str) -> Result<usize> {
@@ -153,6 +164,9 @@ mod tests {
         assert_eq!(a.usize("block").unwrap(), 256);
         assert!(a.switch("verbose"));
         assert!(!a.switch("quiet"));
+        // Explicit flags are distinguishable from filled-in defaults.
+        assert!(a.given("dataset") && a.given("verbose"));
+        assert!(!a.given("block"));
     }
 
     #[test]

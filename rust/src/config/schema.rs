@@ -12,12 +12,17 @@
 //! block = 256        # SNP columns per iteration (whole pipeline)
 //! ngpus = 1
 //! host_buffers = 3
+//! device_buffers = 2 # device buffers per lane (paper: 2)
 //! threads = 0        # compute threads (0 = all cores), split lanes/S-loop
+//! lane_threads = 0   # kernel threads per lane (0 = auto split)
 //! mode = "trsm"      # trsm | block | blockfull
 //! backend = "pjrt"   # pjrt | native
 //! artifacts = "artifacts"
 //! read_mbps = 0      # 0 = unthrottled; >0 emulates that storage speed
 //! write_mbps = 0
+//! profile = ""       # tuned profile TOML (its knobs become the defaults)
+//! adapt = false      # re-plan block size live at segment boundaries
+//! adapt_every = 16   # blocks per adaptive segment
 //!
 //! [sim]
 //! profile = "quadro" # quadro | tesla | hdd
@@ -51,6 +56,7 @@ use crate::error::{Error, Result};
 use crate::gwas::problem::Dims;
 use crate::service::JobSpec;
 use crate::storage::Throttle;
+use crate::tune::TunedProfile;
 use std::path::{Path, PathBuf};
 
 /// Simulation section.
@@ -93,12 +99,17 @@ impl RunConfig {
                     "block",
                     "ngpus",
                     "host_buffers",
+                    "device_buffers",
                     "threads",
+                    "lane_threads",
                     "mode",
                     "backend",
                     "artifacts",
                     "read_mbps",
                     "write_mbps",
+                    "profile",
+                    "adapt",
+                    "adapt_every",
                 ],
                 "sim" => &["profile"],
                 "" => &[],
@@ -120,10 +131,21 @@ impl RunConfig {
         let gen_block = doc.int_or("dataset", "block", 256)? as usize;
         let seed = doc.int_or("dataset", "seed", 42)? as u64;
 
-        let block = doc.int_or("pipeline", "block", 256)? as usize;
-        let ngpus = doc.int_or("pipeline", "ngpus", 1)? as usize;
-        let host_buffers = doc.int_or("pipeline", "host_buffers", 3)? as usize;
-        let threads = int_in(doc, "pipeline", "threads", 0, 0, 4096)? as usize;
+        // A tuned profile's knobs become the *defaults*; explicit keys in
+        // this config still win (same precedence as `run --profile`).
+        let base =
+            load_profile(doc, "pipeline")?.unwrap_or_else(|| TunedProfile::safe_defaults(m, 0));
+        let block = doc.int_or("pipeline", "block", base.block as i64)? as usize;
+        let ngpus = int_in(doc, "pipeline", "ngpus", base.ngpus as i64, 1, 4096)? as usize;
+        let host_buffers =
+            int_in(doc, "pipeline", "host_buffers", base.host_buffers as i64, 2, 1024)? as usize;
+        let device_buffers =
+            int_in(doc, "pipeline", "device_buffers", base.device_buffers as i64, 2, 64)? as usize;
+        let threads = int_in(doc, "pipeline", "threads", base.threads as i64, 0, 4096)? as usize;
+        let lane_threads =
+            int_in(doc, "pipeline", "lane_threads", base.lane_threads as i64, 0, 4096)? as usize;
+        let adapt = doc.bool_or("pipeline", "adapt", false)?;
+        let adapt_every = int_in(doc, "pipeline", "adapt_every", 16, 1, 1 << 30)? as usize;
         let mode = parse_mode(doc.str_or("pipeline", "mode", "trsm")?)?;
         let backend = parse_backend(doc, "pipeline")?;
         let read_throttle = throttle_of(doc.float_or("pipeline", "read_mbps", 0.0)?);
@@ -146,6 +168,7 @@ impl RunConfig {
                 block,
                 ngpus,
                 host_buffers,
+                device_buffers,
                 mode,
                 backend,
                 read_throttle,
@@ -153,6 +176,9 @@ impl RunConfig {
                 resume: false,
                 cache: None,
                 threads,
+                lane_threads,
+                adapt,
+                adapt_every,
             },
             sim: SimSection { profile },
         })
@@ -191,6 +217,22 @@ fn throttle_of(mbps: f64) -> Option<Throttle> {
     }
 }
 
+/// Load the tuned profile a section's `profile` key points at (if any).
+fn load_profile(doc: &Doc, section: &str) -> Result<Option<TunedProfile>> {
+    match doc.get(section, "profile") {
+        None => Ok(None),
+        Some(v) => {
+            let path = v
+                .as_str()
+                .ok_or_else(|| Error::Config(format!("{section}.profile: expected string")))?;
+            if path.is_empty() {
+                return Ok(None);
+            }
+            TunedProfile::load(Path::new(path)).map(Some)
+        }
+    }
+}
+
 /// Integer in `[min, max]` — out-of-range config (negative worker
 /// counts, zero block sizes, absurd budgets) becomes `Error::Config`
 /// instead of a wrapped cast or a downstream panic.
@@ -210,17 +252,25 @@ const JOB_KEYS: &[&str] = &[
     "block",
     "ngpus",
     "host_buffers",
+    "device_buffers",
     "threads",
+    "lane_threads",
     "mode",
     "backend",
     "artifacts",
     "priority",
     "read_mbps",
     "write_mbps",
+    "profile",
+    "adapt",
+    "adapt_every",
 ];
 
-/// Parse one job section into a [`JobSpec`]. `dataset` is required;
-/// everything else falls back to the pipeline defaults.
+/// Parse one job section into a [`JobSpec`]. `dataset` is required; a
+/// `profile` key makes that tuned profile's knobs the defaults (and its
+/// predicted duration the scheduler's admission-ordering hint);
+/// explicit keys still win; everything else falls back to the pipeline
+/// defaults.
 fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
     for key in doc.keys_in(section) {
         if !JOB_KEYS.contains(&key) {
@@ -233,11 +283,27 @@ fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
         .as_str()
         .ok_or_else(|| Error::Config(format!("job '{name}': dataset must be a string")))?;
     let mut spec = JobSpec::new(name, dataset);
+    if let Some(tuned) = load_profile(doc, section)? {
+        spec.block = tuned.block;
+        spec.ngpus = tuned.ngpus;
+        spec.host_buffers = tuned.host_buffers;
+        spec.device_buffers = tuned.device_buffers;
+        spec.threads = tuned.threads;
+        spec.lane_threads = tuned.lane_threads;
+        spec.predicted_secs = tuned.predicted();
+    }
     spec.block = int_in(doc, section, "block", spec.block as i64, 1, 1 << 30)? as usize;
     spec.ngpus = int_in(doc, section, "ngpus", spec.ngpus as i64, 1, 4096)? as usize;
     spec.host_buffers =
         int_in(doc, section, "host_buffers", spec.host_buffers as i64, 2, 1024)? as usize;
+    spec.device_buffers =
+        int_in(doc, section, "device_buffers", spec.device_buffers as i64, 2, 64)? as usize;
     spec.threads = int_in(doc, section, "threads", spec.threads as i64, 0, 4096)? as usize;
+    spec.lane_threads =
+        int_in(doc, section, "lane_threads", spec.lane_threads as i64, 0, 4096)? as usize;
+    spec.adapt = doc.bool_or(section, "adapt", false)?;
+    spec.adapt_every =
+        int_in(doc, section, "adapt_every", spec.adapt_every as i64, 1, 1 << 30)? as usize;
     spec.mode = parse_mode(doc.str_or(section, "mode", "trsm")?)?;
     spec.backend = parse_backend(doc, section)?;
     spec.priority =
@@ -505,6 +571,57 @@ artifacts = "arts"
         assert!(err.to_string().contains("missing dataset"), "{err}");
         // Same for a typo'd empty section.
         assert!(ServiceConfig::from_toml("[servce]\n").is_err());
+    }
+
+    #[test]
+    fn tuned_profile_supplies_defaults_but_explicit_keys_win() {
+        let dir = std::env::temp_dir()
+            .join(format!("cugwas_schema_{}_prof", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let prof = dir.join("tuned.toml");
+        let tuned = TunedProfile {
+            block: 1024,
+            host_buffers: 4,
+            device_buffers: 3,
+            ngpus: 2,
+            threads: 8,
+            lane_threads: 3,
+            predicted_secs: 7.5,
+            disk_mbps: 100.0,
+            pcie_gbps: 8.0,
+            trsm_gflops: 4.0,
+            cpu_gflops: 4.0,
+        };
+        tuned.save(&prof).unwrap();
+
+        // [pipeline] profile: knobs default from the profile…
+        let c = RunConfig::from_toml(&format!(
+            "[pipeline]\nprofile = \"{}\"\nblock = 512\n",
+            prof.display()
+        ))
+        .unwrap();
+        assert_eq!(c.pipeline.block, 512, "explicit key wins");
+        assert_eq!(c.pipeline.host_buffers, 4);
+        assert_eq!(c.pipeline.device_buffers, 3);
+        assert_eq!(c.pipeline.ngpus, 2);
+        assert_eq!(c.pipeline.threads, 8);
+        assert_eq!(c.pipeline.lane_threads, 3);
+
+        // [job.*] profile: same semantics, plus the predicted duration.
+        let s = ServiceConfig::from_toml(&format!(
+            "[job.a]\ndataset = \"d\"\nprofile = \"{}\"\nngpus = 1\n",
+            prof.display()
+        ))
+        .unwrap();
+        assert_eq!(s.jobs[0].block, 1024);
+        assert_eq!(s.jobs[0].ngpus, 1, "explicit key wins");
+        assert_eq!(s.jobs[0].device_buffers, 3);
+        assert_eq!(s.jobs[0].predicted_secs, Some(7.5));
+
+        // A missing profile file is a config error, not a silent default.
+        assert!(RunConfig::from_toml("[pipeline]\nprofile = \"/nonexistent.toml\"\n").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

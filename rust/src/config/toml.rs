@@ -85,7 +85,7 @@ impl Doc {
             if key.is_empty() {
                 return Err(errline("empty key".into()));
             }
-            let value = parse_value(v.trim()).map_err(|m| errline(m))?;
+            let value = parse_value(v.trim()).map_err(errline)?;
             if doc
                 .values
                 .insert((section.clone(), key.to_string()), value)

@@ -1,0 +1,249 @@
+//! Checkpoint journal v2 — crash-safe progress for multi-hour streams.
+//!
+//! The v1 journal was a bare sequence of block indices, which made a
+//! resumed run *silently mis-indexed* whenever the block size differed
+//! from the original run (a tuned profile is exactly such a change). v2
+//! fixes both problems at once:
+//!
+//! * a **header** persists the run parameters that define block indices
+//!   (`m`, the starting block size `nb`) — resuming with different
+//!   parameters is refused with a clear [`Error::Config`], never
+//!   silently misread;
+//! * records are **column ranges** `(col0, ncols)` rather than block
+//!   indices, so a run whose block size changed mid-stream (the adaptive
+//!   re-planner) journals each persisted window exactly as written and
+//!   resume recomputes precisely the uncovered columns.
+//!
+//! Layout (all little-endian u64):
+//!
+//! ```text
+//! magic "CGWJRNL2" | m | nb          — 24-byte header
+//! (col0, ncols)*                     — 16-byte records, appended after
+//!                                      the corresponding data sync
+//! ```
+//!
+//! A torn tail (crash mid-append) is truncated away on resume, so later
+//! appends can never land misaligned behind a partial record.
+
+use crate::error::{Error, Result};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// Format magic — bump the trailing digit on layout changes.
+pub const MAGIC: [u8; 8] = *b"CGWJRNL2";
+const HEADER_BYTES: usize = 24;
+const RECORD_BYTES: usize = 16;
+
+/// An open journal, positioned for appending.
+pub struct Journal {
+    file: std::fs::File,
+}
+
+impl Journal {
+    /// Start a fresh journal (truncates any previous one).
+    pub fn create(path: &Path, m: u64, nb: u64) -> Result<Journal> {
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .map_err(|e| Error::io("creating progress journal", e))?;
+        let mut header = [0u8; HEADER_BYTES];
+        header[..8].copy_from_slice(&MAGIC);
+        header[8..16].copy_from_slice(&m.to_le_bytes());
+        header[16..24].copy_from_slice(&nb.to_le_bytes());
+        file.write_all(&header).map_err(|e| Error::io("writing journal header", e))?;
+        Ok(Journal { file })
+    }
+
+    /// Open an existing journal for resume, validating its header against
+    /// this run's parameters. Returns the journal plus the persisted
+    /// column ranges. A missing or header-less file starts clean; a
+    /// journal written under different `(m, nb)` is refused — resuming it
+    /// with this geometry would recompute the wrong columns.
+    pub fn open_resume(path: &Path, m: u64, nb: u64) -> Result<(Journal, Vec<(u64, u64)>)> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok((Journal::create(path, m, nb)?, Vec::new()));
+            }
+            Err(e) => return Err(Error::io("reading progress journal", e)),
+        };
+        if bytes.len() < HEADER_BYTES {
+            // Crash before the header landed — nothing usable, start clean.
+            return Ok((Journal::create(path, m, nb)?, Vec::new()));
+        }
+        if bytes[..8] != MAGIC {
+            return Err(Error::Config(format!(
+                "{}: unrecognized journal format — delete it to start clean",
+                path.display()
+            )));
+        }
+        let jm = u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes"));
+        let jnb = u64::from_le_bytes(bytes[16..24].try_into().expect("8 bytes"));
+        if jm != m || jnb != nb {
+            return Err(Error::Config(format!(
+                "{}: journal was written for m={jm}, block={jnb} but this run has m={m}, \
+                 block={nb} — resume with the original --block, or delete the journal to \
+                 recompute from scratch",
+                path.display()
+            )));
+        }
+        // Parse records up to the first invalid one: everything after it
+        // is untrustworthy, and truncating exactly there keeps the file a
+        // valid prefix (a mid-file filter would misalign the truncation
+        // length against the surviving bytes).
+        let mut ranges = Vec::new();
+        for rec in bytes[HEADER_BYTES..].chunks_exact(RECORD_BYTES) {
+            let col0 = u64::from_le_bytes(rec[..8].try_into().expect("8 bytes"));
+            let ncols = u64::from_le_bytes(rec[8..].try_into().expect("8 bytes"));
+            if ncols == 0 || !col0.checked_add(ncols).is_some_and(|end| end <= m) {
+                break;
+            }
+            ranges.push((col0, ncols));
+        }
+        let valid = (HEADER_BYTES + ranges.len() * RECORD_BYTES) as u64;
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| Error::io("opening progress journal", e))?;
+        // Drop a torn tail so future appends stay record-aligned.
+        file.set_len(valid).map_err(|e| Error::io("truncating torn journal tail", e))?;
+        Ok((Journal { file }, ranges))
+    }
+
+    /// Append one persisted column range (call only after the data sync —
+    /// a journaled range must be durable on disk).
+    pub fn append(&mut self, col0: u64, ncols: u64) -> Result<()> {
+        let mut rec = [0u8; RECORD_BYTES];
+        rec[..8].copy_from_slice(&col0.to_le_bytes());
+        rec[8..].copy_from_slice(&ncols.to_le_bytes());
+        self.file.seek(SeekFrom::End(0)).map_err(|e| Error::io("seeking journal", e))?;
+        self.file.write_all(&rec).map_err(|e| Error::io("appending progress journal", e))
+    }
+
+    /// Flush appended records to stable storage.
+    pub fn sync(&self) -> Result<()> {
+        self.file.sync_data().map_err(|e| Error::io("syncing progress journal", e))
+    }
+}
+
+/// Complement of the persisted ranges over `[0, m)`: the column spans a
+/// resumed run still has to compute. Overlapping/adjacent records merge.
+pub fn uncovered(m: u64, ranges: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut spans: Vec<(u64, u64)> = ranges
+        .iter()
+        .filter(|&&(_, n)| n > 0)
+        .map(|&(c, n)| (c.min(m), (c.saturating_add(n)).min(m)))
+        .filter(|&(a, b)| b > a)
+        .collect();
+    spans.sort_unstable();
+    let mut out = Vec::new();
+    let mut cursor = 0u64;
+    for (a, b) in spans {
+        if a > cursor {
+            out.push((cursor, a - cursor));
+        }
+        cursor = cursor.max(b);
+    }
+    if cursor < m {
+        out.push((cursor, m - cursor));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cugwas_jnl_{}_{tag}.progress", std::process::id()))
+    }
+
+    #[test]
+    fn create_append_resume_roundtrip() {
+        let p = tmpfile("rt");
+        let mut j = Journal::create(&p, 40, 8).unwrap();
+        j.append(0, 8).unwrap();
+        j.append(8, 8).unwrap();
+        j.sync().unwrap();
+        drop(j);
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        assert_eq!(ranges, vec![(0, 8), (8, 8)]);
+        assert_eq!(uncovered(40, &ranges), vec![(16, 24)]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn mismatched_parameters_are_refused() {
+        let p = tmpfile("mismatch");
+        Journal::create(&p, 40, 8).unwrap();
+        let err = Journal::open_resume(&p, 40, 12).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("block=8"), "{err}");
+        let err = Journal::open_resume(&p, 48, 8).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn foreign_file_is_refused_and_missing_starts_clean() {
+        let p = tmpfile("foreign");
+        std::fs::write(&p, b"not a journal, definitely long enough").unwrap();
+        assert!(matches!(Journal::open_resume(&p, 8, 4), Err(Error::Config(_))));
+        std::fs::remove_file(&p).unwrap();
+        let (_j, ranges) = Journal::open_resume(&p, 8, 4).unwrap();
+        assert!(ranges.is_empty());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_before_appending() {
+        let p = tmpfile("torn");
+        let mut j = Journal::create(&p, 40, 8).unwrap();
+        j.append(0, 8).unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF]); // partial record
+        std::fs::write(&p, &bytes).unwrap();
+        let (mut j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        assert_eq!(ranges, vec![(0, 8)]);
+        j.append(8, 8).unwrap();
+        drop(j);
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        assert_eq!(ranges, vec![(0, 8), (8, 8)], "append after torn tail stays aligned");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn parsing_stops_at_the_first_invalid_record() {
+        // A zeroed/corrupt record mid-file invalidates everything after
+        // it: the survivors are a clean prefix, the rest is truncated
+        // (those columns simply get recomputed).
+        let p = tmpfile("midcorrupt");
+        let mut j = Journal::create(&p, 40, 8).unwrap();
+        j.append(0, 8).unwrap();
+        j.append(0, 0).unwrap(); // corrupt: zero width
+        j.append(16, 8).unwrap();
+        drop(j);
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        assert_eq!(ranges, vec![(0, 8)]);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 24 + 16);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn uncovered_merges_overlaps_and_mixed_widths() {
+        // Ranges from an adaptive run: different widths, out of order,
+        // overlapping.
+        let ranges = vec![(16, 16), (0, 8), (8, 8), (24, 16)];
+        assert_eq!(uncovered(64, &ranges), vec![(40, 24)]);
+        assert_eq!(uncovered(64, &[]), vec![(0, 64)]);
+        assert_eq!(uncovered(8, &[(0, 8)]), Vec::<(u64, u64)>::new());
+        // Records past m are clamped, zero-width ignored.
+        assert_eq!(uncovered(10, &[(4, 100), (2, 0)]), vec![(0, 4)]);
+    }
+}

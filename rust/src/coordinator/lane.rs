@@ -114,6 +114,9 @@ impl DeviceLane {
     /// lane's compute-thread budget — its share of the host cores (see
     /// `PipelineConfig::threads`); the native trsm/gemm kernels fan out
     /// up to that many workers. 0 = inherit the process-wide pool size.
+    /// `depth` is the device-buffer count (paper: 2): the submission
+    /// channel holds `depth - 1` staged chunks plus the one in flight, so
+    /// submission `depth + 1` blocks — the paper's `cu_send_wait`.
     pub fn spawn(
         lane: usize,
         mode: OffloadMode,
@@ -121,6 +124,7 @@ impl DeviceLane {
         pre: &Preprocessed,
         mb: usize,
         threads: usize,
+        depth: usize,
     ) -> Result<DeviceLane> {
         let n = pre.l.rows();
         let pl = pre.xl_t.cols();
@@ -146,8 +150,12 @@ impl DeviceLane {
                 "PJRT backend needs preprocess(dinv_nb > 0) matching the artifact".into(),
             ));
         }
-        // Depth-1 bounded queue + the item being processed = 2 device buffers.
-        let (tx, rx) = sync_channel::<DevIn>(1);
+        if depth < 2 {
+            return Err(Error::Config("device buffer depth must be ≥ 2".into()));
+        }
+        // Bounded queue of depth-1 + the item being processed = `depth`
+        // device buffers (paper default: 2).
+        let (tx, rx) = sync_channel::<DevIn>(depth - 1);
         let (tx_out, rx_out) = channel::<DevOut>();
         let worker = std::thread::Builder::new()
             .name(format!("cugwas-lane{lane}"))
@@ -367,7 +375,7 @@ mod tests {
     #[test]
     fn native_lane_trsm_roundtrip() {
         let (prob, pre) = setup(24, 3, 8);
-        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 4, 1).unwrap();
+        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 4, 1, 2).unwrap();
         lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 4, 4), live: 4 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         assert_eq!(out.block, 0);
@@ -392,7 +400,7 @@ mod tests {
     fn native_lane_blockfull_matches_incore() {
         let (prob, pre) = setup(20, 2, 6);
         let lane =
-            DeviceLane::spawn(0, OffloadMode::BlockFull, Backend::Native, &pre, 6, 1).unwrap();
+            DeviceLane::spawn(0, OffloadMode::BlockFull, Backend::Native, &pre, 6, 1, 2).unwrap();
         lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 6, 6), live: 6 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         let want = crate::gwas::solve_incore(&prob).unwrap();
@@ -406,7 +414,7 @@ mod tests {
     #[test]
     fn padded_tail_columns_are_dropped() {
         let (prob, pre) = setup(16, 2, 3);
-        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 8, 1).unwrap();
+        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 8, 1, 2).unwrap();
         lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 3, 8), live: 3 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         match out.outs {
@@ -419,7 +427,7 @@ mod tests {
     #[test]
     fn lane_processes_stream_in_order() {
         let (prob, pre) = setup(16, 2, 8);
-        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 2, 1).unwrap();
+        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 2, 1, 2).unwrap();
         // More submissions than device buffers: exercises backpressure.
         let feeder = std::thread::spawn({
             let chunks: Vec<Vec<f64>> = (0..4).map(|b| chunk(&prob, b * 2, 2, 2)).collect();

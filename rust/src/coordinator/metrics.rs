@@ -26,6 +26,9 @@ pub enum Phase {
     /// Block absent from the cache — a real disk read was issued (count
     /// tracks misses; the read time itself lands in `ReadWait`).
     CacheMiss,
+    /// Adaptive re-planning at a segment boundary (count = number of
+    /// re-plan decisions taken; duration = time spent in the DES search).
+    Replan,
     /// Everything else on the coordinator thread (rotation, bookkeeping).
     Other,
 }
@@ -41,11 +44,12 @@ impl Phase {
             Phase::WriteWait => "write_wait",
             Phase::CacheHit => "cache_hit",
             Phase::CacheMiss => "cache_miss",
+            Phase::Replan => "replan",
             Phase::Other => "other",
         }
     }
 
-    pub const ALL: [Phase; 9] = [
+    pub const ALL: [Phase; 10] = [
         Phase::ReadWait,
         Phase::Send,
         Phase::DeviceCompute,
@@ -54,6 +58,7 @@ impl Phase {
         Phase::WriteWait,
         Phase::CacheHit,
         Phase::CacheMiss,
+        Phase::Replan,
         Phase::Other,
     ];
 }

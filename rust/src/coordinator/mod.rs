@@ -1,16 +1,21 @@
 //! Layer-3 coordinator — the paper's contribution.
 //!
 //! * [`pipeline`] — the cuGWAS streaming loop (Listing 1.3): triple-
-//!   buffered host ring, double-buffered device lanes, pipelined S-loop.
+//!   buffered host ring, double-buffered device lanes, pipelined S-loop,
+//!   run as journaled segments so the autotuner can re-plan in flight.
 //! * [`lane`] — one worker thread per emulated GPU, PJRT or native.
 //! * [`pool`] — the fixed buffer pools that realize the rotation.
 //! * [`metrics`] — per-phase accounting (the live Fig. 3).
+//! * [`journal`] — the v2 checkpoint journal (parameter header +
+//!   column-range records) behind `--resume`.
 
+pub mod journal;
 pub mod lane;
 pub mod metrics;
 pub mod pipeline;
 pub mod pool;
 
+pub use journal::Journal;
 pub use lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
 pub use metrics::{Metrics, Phase};
 pub use pipeline::{run, verify_against_oracle, BackendKind, PipelineConfig, PipelineReport};

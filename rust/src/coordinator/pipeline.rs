@@ -1,7 +1,7 @@
 //! The cuGWAS streaming pipeline — paper Listing 1.3, live.
 //!
 //! ```text
-//!        disk ──aio──▶ host ring (hb bufs) ──send──▶ device pair (2/lane)
+//!        disk ──aio──▶ host ring (hb bufs) ──send──▶ device ring (db/lane)
 //!                                                         │ trsm (+fused)
 //!        disk ◀──aio── result bufs ◀──S-loop(CPU)◀──recv──┘
 //! ```
@@ -16,18 +16,30 @@
 //! The S-loop for block `b-1` runs on the coordinator thread while the
 //! lanes compute block `b` — the paper's pipelining — because lane results
 //! are drained opportunistically between submissions.
+//!
+//! Since the autotuner landed, a run is a sequence of **segments**: the
+//! work is a list of column windows, each segment streams a batch of them
+//! under one block size, and (with [`PipelineConfig::adapt`] on) the
+//! coordinator compares the live stall profile against the model between
+//! segments and re-plans the block size for the remainder — journaling
+//! every persisted window ([`journal`]) so `--resume` stays correct
+//! across a mid-run switch.
 
+use crate::coordinator::journal::{self, Journal};
 use crate::coordinator::lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
 use crate::coordinator::metrics::{Metrics, Phase};
 use crate::coordinator::pool::BufPool;
+use crate::devsim::{sloop_flops, trsm_flops};
 use crate::error::{Error, Result};
 use crate::gwas::preprocess::{preprocess, Preprocessed};
+use crate::gwas::problem::Dims;
 use crate::gwas::sloop::{sloop_block_into, sloop_from_reductions_into, SloopScratch};
 use crate::linalg::Matrix;
-use crate::runtime::{ArtifactKey, Kind, Manifest};
+use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
 use crate::storage::{
-    dataset, AioEngine, AioHandle, BlockCache, BlockKey, Header, Throttle, XrdFile,
+    dataset, AioEngine, AioHandle, AioStats, BlockCache, BlockKey, Header, Throttle, XrdFile,
 };
+use crate::tune::{replan_block, LiveObs};
 use crate::util::threads;
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
@@ -54,14 +66,18 @@ pub struct PipelineConfig {
     pub ngpus: usize,
     /// Host buffer count (paper: 3; 2 = the ablation).
     pub host_buffers: usize,
+    /// Device buffers per lane (paper: 2; the autotuner may pick more).
+    pub device_buffers: usize,
     pub mode: OffloadMode,
     pub backend: BackendKind,
     /// Optional bandwidth throttles emulating slower storage.
     pub read_throttle: Option<Throttle>,
     pub write_throttle: Option<Throttle>,
-    /// Resume an interrupted run: blocks journaled in `r.progress` are
-    /// skipped (their results are already on disk). Studies at paper
+    /// Resume an interrupted run: column ranges journaled in `r.progress`
+    /// are skipped (their results are already on disk). Studies at paper
     /// scale run for hours-to-days — a crash must not restart from zero.
+    /// The journal header pins the run parameters; resuming with a
+    /// different `block`/`m` is refused with [`Error::Config`].
     pub resume: bool,
     /// Shared block cache (the multi-study service hands the same
     /// `Arc` to every job): reads probe it first and misses populate it,
@@ -78,17 +94,28 @@ pub struct PipelineConfig {
     /// `ngpus + 1` clamps to one (serial) kernel worker per thread —
     /// it cannot shrink the pipeline's own `ngpus + 1` concurrency.
     pub threads: usize,
+    /// Explicit kernel threads per lane (0 = the equal split above).
+    /// The autotuner searches this split; a tuned profile pins it.
+    pub lane_threads: usize,
+    /// Re-plan the block size at segment boundaries from the live stall
+    /// profile (read-starved → larger, compute-starved → smaller).
+    /// Native backend only — PJRT artifacts are compiled per block size.
+    pub adapt: bool,
+    /// Blocks per adaptive segment (how often the re-planner looks).
+    pub adapt_every: usize,
 }
 
 impl PipelineConfig {
     /// Sensible defaults for a dataset directory: paper topology
-    /// (3 host buffers, 1 GPU, trsm offload, native backend).
+    /// (3 host buffers, 2 device buffers, 1 GPU, trsm offload, native
+    /// backend, no adaptation).
     pub fn new(dataset: impl Into<PathBuf>, block: usize) -> Self {
         PipelineConfig {
             dataset: dataset.into(),
             block,
             ngpus: 1,
             host_buffers: 3,
+            device_buffers: 2,
             mode: OffloadMode::Trsm,
             backend: BackendKind::Native,
             read_throttle: None,
@@ -96,20 +123,11 @@ impl PipelineConfig {
             resume: false,
             cache: None,
             threads: 0,
+            lane_threads: 0,
+            adapt: false,
+            adapt_every: 16,
         }
     }
-}
-
-/// Read the checkpoint journal (complete u64 records only — a torn tail
-/// from a crash is ignored).
-fn read_progress(path: &std::path::Path) -> std::collections::HashSet<usize> {
-    let mut done = std::collections::HashSet::new();
-    if let Ok(bytes) = std::fs::read(path) {
-        for chunk in bytes.chunks_exact(8) {
-            done.insert(u64::from_le_bytes(chunk.try_into().unwrap()) as usize);
-        }
-    }
-    done
 }
 
 /// Run summary.
@@ -123,6 +141,8 @@ pub struct PipelineReport {
     pub metrics: Metrics,
     /// Sum of device-side compute seconds across lanes.
     pub device_secs: f64,
+    /// Adaptive block-size switches taken (0 without `adapt`).
+    pub replans: usize,
 }
 
 /// Per-block assembly state: the result buffer filling up chunk by chunk.
@@ -130,6 +150,49 @@ struct BlockAssembly {
     buf: Vec<f64>,
     live_total: usize,
     chunks_left: usize,
+}
+
+/// Immutable per-run context shared by every segment.
+struct RunCtx<'a> {
+    cfg: &'a PipelineConfig,
+    pre: &'a Preprocessed,
+    backend_proto: &'a Option<ArtifactEntry>,
+    reader: &'a AioEngine,
+    writer: &'a AioEngine,
+    cache_dataset: Option<String>,
+    n: usize,
+    p: usize,
+}
+
+/// Mutable streaming state of one segment.
+struct SegmentState {
+    host_pool: BufPool,
+    result_pool: BufPool,
+    chunk_pools: Vec<BufPool>,
+    pending_writes: VecDeque<(u64, u64, AioHandle)>,
+    completed: Vec<(u64, u64)>,
+    assemblies: HashMap<u64, BlockAssembly>,
+    live_of: HashMap<u64, usize>,
+    retired: usize,
+}
+
+/// Pop up to `max_windows` column windows of at most `block` columns off
+/// the remaining work list (splitting the front range as needed).
+fn take_windows(
+    remaining: &mut VecDeque<(u64, u64)>,
+    block: u64,
+    max_windows: usize,
+) -> Vec<(u64, usize)> {
+    let mut out = Vec::new();
+    while out.len() < max_windows {
+        let Some((c0, len)) = remaining.pop_front() else { break };
+        let take = block.min(len);
+        out.push((c0, take as usize));
+        if take < len {
+            remaining.push_front((c0 + take, len - take));
+        }
+    }
+    out
 }
 
 /// Run the streaming solver over a dataset; results land in `r.xrd`.
@@ -159,10 +222,14 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         }
     };
 
-    // Core partition: each lane gets an equal share for its kernels, the
-    // coordinator keeps the remainder for the S-loop (both ≥ 1).
+    // Core partition: each lane gets an equal share (or the tuned pin)
+    // for its kernels, the coordinator keeps the remainder (both ≥ 1).
     let total = if cfg.threads == 0 { threads::available() } else { cfg.threads };
-    let lane_threads = (total / (cfg.ngpus + 1)).max(1);
+    let lane_threads = if cfg.lane_threads > 0 {
+        cfg.lane_threads
+    } else {
+        (total / (cfg.ngpus + 1)).max(1)
+    };
     let coord_threads = total.saturating_sub(lane_threads * cfg.ngpus).max(1);
 
     // Preprocessing (Listing 1.3 lines 1–7; seconds, excluded by the
@@ -179,100 +246,329 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
     let paths = dataset::DatasetPaths::new(&cfg.dataset);
     let xr = XrdFile::open(&paths.xr())?.with_throttle(cfg.read_throttle);
     let r_header = Header::new(p as u64, dims.m as u64, cfg.block.min(dims.m) as u64, meta.seed)?;
-    // Resume: reuse the existing results file + checkpoint journal when
-    // their geometry matches; otherwise start clean.
-    let mut done: std::collections::HashSet<usize> = std::collections::HashSet::new();
-    let rfile = if cfg.resume {
+    // Resume: validate the journal header (refusal on a parameter
+    // mismatch — see `journal`), then reuse the results file when its
+    // geometry matches; a missing/foreign results file restarts clean.
+    let fresh = |paths: &dataset::DatasetPaths| -> Result<(XrdFile, Journal)> {
+        let j = Journal::create(&paths.progress(), dims.m as u64, cfg.block as u64)?;
+        Ok((XrdFile::create(&paths.results(), r_header)?, j))
+    };
+    let (rfile, mut journal, done_ranges) = if cfg.resume {
+        let (journal, ranges) =
+            Journal::open_resume(&paths.progress(), dims.m as u64, cfg.block as u64)?;
         match XrdFile::open_rw(&paths.results()) {
-            Ok(f) if *f.header() == r_header => {
-                done = read_progress(&paths.progress());
-                f
-            }
+            Ok(f) if *f.header() == r_header => (f, journal, ranges),
             _ => {
-                let _ = std::fs::remove_file(&paths.progress());
-                XrdFile::create(&paths.results(), r_header)?
+                // Journaled progress points at a results file that no
+                // longer matches — recompute everything.
+                drop(journal);
+                let (f, j) = fresh(&paths)?;
+                (f, j, Vec::new())
             }
         }
     } else {
-        let _ = std::fs::remove_file(&paths.progress());
-        XrdFile::create(&paths.results(), r_header)?
-    }
-    .with_throttle(cfg.write_throttle);
-    let mut journal = std::fs::OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open(paths.progress())
-        .map_err(|e| Error::io("opening progress journal", e))?;
+        let (f, j) = fresh(&paths)?;
+        (f, j, Vec::new())
+    };
+    let rfile = rfile.with_throttle(cfg.write_throttle);
     let reader = AioEngine::new(xr);
     let writer = AioEngine::new(rfile);
 
-    // Device lanes.
-    let mut lanes: Vec<DeviceLane> = (0..cfg.ngpus)
-        .map(|gi| {
-            let backend = match (&cfg.backend, &backend_proto) {
-                (BackendKind::Native, _) => Backend::Native,
-                (BackendKind::Pjrt { .. }, Some(entry)) => Backend::Pjrt { entry: entry.clone() },
-                _ => unreachable!(),
-            };
-            DeviceLane::spawn(gi, cfg.mode, backend, &pre, mb_gpu, lane_threads)
-        })
-        .collect::<Result<_>>()?;
+    // Work list: the uncovered column ranges, streamed as block windows.
+    let mut remaining: VecDeque<(u64, u64)> =
+        journal::uncovered(dims.m as u64, &done_ranges).into();
 
-    // Buffer pools: hb host blocks, hb result blocks, 2 chunks per lane.
-    let mut host_pool = BufPool::new(cfg.host_buffers, n * cfg.block);
-    let mut result_pool = BufPool::new(cfg.host_buffers, p * cfg.block);
-    let mut chunk_pools: Vec<BufPool> =
-        (0..cfg.ngpus).map(|_| BufPool::new(2, n * mb_gpu)).collect();
-
-    let nblocks = dims.m.div_ceil(cfg.block);
-    // Work list: skip journaled blocks when resuming.
-    let todo: Vec<usize> = (0..nblocks).filter(|b| !done.contains(b)).collect();
-    let njobs = todo.len();
-    let read_ahead = cfg.host_buffers.saturating_sub(1).max(1);
-    let mut metrics = Metrics::new();
-    let mut scratch = SloopScratch::new(dims.pl);
-    // Canonical dataset identity for cache keys — the same helper the
-    // scheduler's per-dataset lock uses, so the two can never diverge.
     let cache_dataset: Option<String> = cfg
         .cache
         .as_ref()
         .map(|_| dataset::canonical_key(&cfg.dataset).to_string_lossy().into_owned());
-    let block_key = |ds: &str, b: usize, live: usize| BlockKey {
-        dataset: ds.to_string(),
-        col0: (b * cfg.block) as u64,
-        ncols: live as u64,
+    let ctx = RunCtx {
+        cfg,
+        pre: &pre,
+        backend_proto: &backend_proto,
+        reader: &reader,
+        writer: &writer,
+        cache_dataset,
+        n,
+        p,
     };
+
+    let mut metrics = Metrics::new();
+    let mut scratch = SloopScratch::new(dims.pl);
+    let mut device_secs = 0.0f64;
+    let mut windows_done = 0usize;
+    let mut replans = 0usize;
+    let mut plan_block = cfg.block;
+    let seg_windows = if cfg.adapt { cfg.adapt_every } else { usize::MAX };
     let t_wall = Instant::now();
 
-    // ---- pipeline state ------------------------------------------------
-    // (block id, in-flight read, whether it was served from the cache)
-    let mut pending_reads: VecDeque<(usize, AioHandle, bool)> = VecDeque::new();
-    let mut next_read = 0usize; // index into `todo`
-    let mut assemblies: HashMap<usize, BlockAssembly> = HashMap::new();
-    let mut pending_writes: VecDeque<(usize, AioHandle)> = VecDeque::new();
-    let mut retired = 0usize;
+    loop {
+        let items = take_windows(&mut remaining, plan_block as u64, seg_windows);
+        if items.is_empty() {
+            break;
+        }
+        let seg_cols: usize = items.iter().map(|&(_, live)| live).sum();
+        let before = SegmentSnapshot::take(&metrics, reader.stats());
+        let t_seg = Instant::now();
+        device_secs += run_segment(
+            &ctx,
+            plan_block,
+            lane_threads,
+            &items,
+            &mut metrics,
+            &mut scratch,
+            &mut journal,
+        )?;
+        windows_done += items.len();
 
-    let cols_in = |b: usize| -> usize {
-        if (b + 1) * cfg.block <= dims.m { cfg.block } else { dims.m - b * cfg.block }
+        if cfg.adapt && !remaining.is_empty() {
+            let t0 = Instant::now();
+            let obs = before.observe(
+                &metrics,
+                reader.stats(),
+                t_seg.elapsed().as_secs_f64(),
+                n,
+                dims.pl,
+                seg_cols,
+            );
+            let left: u64 = remaining.iter().map(|&(_, len)| len).sum();
+            let rdims = Dims::new(n, dims.pl, left as usize)?;
+            if let Some(nb) = replan_block(
+                &obs,
+                rdims,
+                plan_block,
+                cfg.ngpus,
+                cfg.host_buffers,
+                cfg.device_buffers,
+            ) {
+                crate::log_info!(
+                    "pipeline",
+                    "adapt: block {plan_block} → {nb} (read {:.0}%, recv {:.0}%, disk {:.0} MB/s)",
+                    100.0 * obs.read_wait_secs / obs.wall_secs.max(1e-12),
+                    100.0 * obs.recv_wait_secs / obs.wall_secs.max(1e-12),
+                    obs.disk_mbps
+                );
+                plan_block = nb;
+                replans += 1;
+            }
+            metrics.add(Phase::Replan, t0.elapsed());
+        }
+    }
+
+    let wall_secs = t_wall.elapsed().as_secs_f64();
+    Ok(PipelineReport {
+        blocks: windows_done,
+        snps: dims.m,
+        wall_secs,
+        snps_per_sec: dims.m as f64 / wall_secs.max(1e-12),
+        metrics,
+        device_secs,
+        replans,
+    })
+}
+
+/// Phase/engine counters at a segment boundary, for live-rate deltas.
+struct SegmentSnapshot {
+    read_wait: Duration,
+    recv_wait: Duration,
+    send: Duration,
+    sloop: Duration,
+    device: Duration,
+    reader: AioStats,
+}
+
+impl SegmentSnapshot {
+    fn take(metrics: &Metrics, reader: AioStats) -> SegmentSnapshot {
+        SegmentSnapshot {
+            read_wait: metrics.total(Phase::ReadWait),
+            recv_wait: metrics.total(Phase::RecvWait),
+            send: metrics.total(Phase::Send),
+            sloop: metrics.total(Phase::Sloop),
+            device: metrics.total(Phase::DeviceCompute),
+            reader,
+        }
+    }
+
+    /// Turn the counter deltas since this snapshot into live rates.
+    fn observe(
+        &self,
+        metrics: &Metrics,
+        reader: AioStats,
+        wall_secs: f64,
+        n: usize,
+        pl: usize,
+        cols: usize,
+    ) -> LiveObs {
+        let secs = |now: Duration, then: Duration| now.saturating_sub(then).as_secs_f64();
+        let rate = |units: f64, secs: f64| if secs > 0.0 { units / secs } else { 0.0 };
+        let device = secs(metrics.total(Phase::DeviceCompute), self.device);
+        let sloop = secs(metrics.total(Phase::Sloop), self.sloop);
+        let send = secs(metrics.total(Phase::Send), self.send);
+        LiveObs {
+            wall_secs,
+            read_wait_secs: secs(metrics.total(Phase::ReadWait), self.read_wait),
+            recv_wait_secs: secs(metrics.total(Phase::RecvWait), self.recv_wait),
+            disk_mbps: reader.since(&self.reader).mbps(),
+            trsm_gflops: rate(trsm_flops(n, cols), device) / 1e9,
+            cpu_gflops: rate(sloop_flops(n, pl, cols), sloop) / 1e9,
+            pcie_gbps: rate((n * cols * 8) as f64, send) / 1e9,
+        }
+    }
+}
+
+/// Retire one lane result: run the CPU tail, fill the assembly, and
+/// kick the write when the block is complete.
+fn process_out(
+    ctx: &RunCtx<'_>,
+    mb_gpu: usize,
+    out: DevOut,
+    st: &mut SegmentState,
+    metrics: &mut Metrics,
+    scratch: &mut SloopScratch,
+) -> Result<()> {
+    let col0 = out.block;
+    let p = ctx.p;
+    st.chunk_pools[out.lane].put(out.inbuf);
+    let live_total = *st
+        .live_of
+        .get(&col0)
+        .ok_or_else(|| Error::Pipeline(format!("lane returned unknown window {col0}")))?;
+    // Ensure an assembly buffer exists (may need to wait on a write).
+    if !st.assemblies.contains_key(&col0) {
+        let buf = loop {
+            if let Some(buf) = st.result_pool.take() {
+                break buf;
+            }
+            let (wc0, wlen, h) = st.pending_writes.pop_front().ok_or_else(|| {
+                Error::Pipeline("result pool empty with no writes in flight".into())
+            })?;
+            let t0 = Instant::now();
+            let (wbuf, res) = h.wait();
+            metrics.add(Phase::WriteWait, t0.elapsed());
+            res?;
+            st.completed.push((wc0, wlen));
+            st.result_pool.put(wbuf);
+        };
+        let chunks = live_total.div_ceil(mb_gpu);
+        st.assemblies.insert(col0, BlockAssembly { buf, live_total, chunks_left: chunks });
+    }
+    let asm = st.assemblies.get_mut(&col0).expect("assembly exists");
+    let c_off = out.lane * mb_gpu; // chunk's first column within window
+    let t0 = Instant::now();
+    // The S-loop writes its solutions straight into this chunk's
+    // segment of the assembly buffer — no per-chunk result matrix,
+    // no copy: the retire path is allocation-free in steady state.
+    match out.outs {
+        LaneOutputs::Xbt(xbt) => {
+            let live = xbt.cols();
+            sloop_block_into(ctx.pre, &xbt, scratch, &mut asm.buf[c_off * p..(c_off + live) * p])?;
+        }
+        LaneOutputs::Reductions { xbt: _, g, rb, d } => {
+            let live = d.len();
+            let seg = &mut asm.buf[c_off * p..(c_off + live) * p];
+            sloop_from_reductions_into(ctx.pre, &g, &d, &rb, scratch, seg)?;
+        }
+        LaneOutputs::Solutions(rblk) => {
+            let live = rblk.cols();
+            asm.buf[c_off * p..(c_off + live) * p].copy_from_slice(rblk.as_slice());
+        }
+    }
+    metrics.add(Phase::Sloop, t0.elapsed());
+    asm.chunks_left -= 1;
+    if asm.chunks_left == 0 {
+        let mut asm = st.assemblies.remove(&col0).expect("assembly exists");
+        st.live_of.remove(&col0);
+        asm.buf.truncate(p * asm.live_total);
+        let h = ctx.writer.write_cols(col0, asm.live_total as u64, asm.buf);
+        st.pending_writes.push_back((col0, asm.live_total as u64, h));
+        st.retired += 1;
+    }
+    Ok(())
+}
+
+/// Stream one batch of column windows under a single block size: the
+/// body of paper Listing 1.3. Returns the lanes' device-compute seconds.
+fn run_segment(
+    ctx: &RunCtx<'_>,
+    block: usize,
+    lane_threads: usize,
+    items: &[(u64, usize)],
+    metrics: &mut Metrics,
+    scratch: &mut SloopScratch,
+    journal: &mut Journal,
+) -> Result<f64> {
+    let cfg = ctx.cfg;
+    let n = ctx.n;
+    let p = ctx.p;
+    let mb_gpu = block / cfg.ngpus;
+
+    // Device lanes (fresh per segment — a block-size switch changes the
+    // chunk width every lane is sized for). Known trade-off: with
+    // `adapt` on, lanes and pools are rebuilt even at boundaries where
+    // the re-planner keeps the block; reusing them across unchanged
+    // segments is a ROADMAP item. Without `adapt` there is exactly one
+    // segment, so the default path pays nothing.
+    let mut lanes: Vec<DeviceLane> = (0..cfg.ngpus)
+        .map(|gi| {
+            let backend = match (&cfg.backend, ctx.backend_proto) {
+                (BackendKind::Native, _) => Backend::Native,
+                (BackendKind::Pjrt { .. }, Some(entry)) => Backend::Pjrt { entry: entry.clone() },
+                _ => unreachable!(),
+            };
+            DeviceLane::spawn(
+                gi,
+                cfg.mode,
+                backend,
+                ctx.pre,
+                mb_gpu,
+                lane_threads,
+                cfg.device_buffers,
+            )
+        })
+        .collect::<Result<_>>()?;
+
+    // Buffer pools: hb host blocks, hb result blocks, db chunks per lane.
+    let mut st = SegmentState {
+        host_pool: BufPool::new(cfg.host_buffers, n * block),
+        result_pool: BufPool::new(cfg.host_buffers, p * block),
+        chunk_pools: (0..cfg.ngpus)
+            .map(|_| BufPool::new(cfg.device_buffers, n * mb_gpu))
+            .collect(),
+        pending_writes: VecDeque::new(),
+        completed: Vec::new(),
+        assemblies: HashMap::new(),
+        live_of: HashMap::new(),
+        retired: 0,
+    };
+    let njobs = items.len();
+    let read_ahead = cfg.host_buffers.saturating_sub(1).max(1);
+    let block_key = |ds: &str, col0: u64, live: usize| BlockKey {
+        dataset: ds.to_string(),
+        col0,
+        ncols: live as u64,
     };
 
+    // ---- pipeline state ------------------------------------------------
+    // (window col0, in-flight read, whether it was served from the cache)
+    let mut pending_reads: VecDeque<(u64, AioHandle, bool)> = VecDeque::new();
+    let mut next_read = 0usize; // index into `items`
+
     // Submit disk reads up to the ring's read-ahead. With a shared cache
-    // attached, each block first probes it: a hit is an already-complete
+    // attached, each window first probes it: a hit is an already-complete
     // "read" served from RAM (no disk I/O), a miss goes to the engine as
     // usual and is inserted into the cache on arrival.
     macro_rules! pump_reads {
         () => {
             while next_read < njobs && pending_reads.len() < read_ahead {
-                match host_pool.take() {
+                match st.host_pool.take() {
                     Some(mut buf) => {
-                        let b = todo[next_read];
-                        let live = cols_in(b);
+                        let (col0, live) = items[next_read];
                         buf.truncate(n * live);
                         let mut from_cache = false;
                         if let (Some(cache), Some(ds)) =
-                            (cfg.cache.as_deref(), cache_dataset.as_deref())
+                            (cfg.cache.as_deref(), ctx.cache_dataset.as_deref())
                         {
-                            let key = block_key(ds, b, live);
+                            let key = block_key(ds, col0, live);
                             let t0 = Instant::now();
                             if cache.get_into(&key, &mut buf) {
                                 metrics.add(Phase::CacheHit, t0.elapsed());
@@ -284,9 +580,9 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
                         let h = if from_cache {
                             AioHandle::ready(buf, Ok(()))
                         } else {
-                            reader.read_cols((b * cfg.block) as u64, live as u64, buf)
+                            ctx.reader.read_cols(col0, live as u64, buf)
                         };
-                        pending_reads.push_back((b, h, from_cache));
+                        pending_reads.push_back((col0, h, from_cache));
                         next_read += 1;
                     }
                     None => break,
@@ -295,100 +591,23 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         };
     }
 
-    // Journal a persisted block (crash-safe resume point).
-    macro_rules! journal_block {
-        ($id:expr) => {
-            std::io::Write::write_all(&mut journal, &($id as u64).to_le_bytes())
-                .map_err(|e| Error::io("appending progress journal", e))?;
-        };
-    }
-
-    let mut completed_writes: Vec<usize> = Vec::new();
-
-    // Retire one lane result: run the CPU tail, fill the assembly, and
-    // kick the write when the block is complete.
-    let process_out = |out: DevOut,
-                           metrics: &mut Metrics,
-                           scratch: &mut SloopScratch,
-                           chunk_pools: &mut Vec<BufPool>,
-                           result_pool: &mut BufPool,
-                           pending_writes: &mut VecDeque<(usize, AioHandle)>,
-                           completed_writes: &mut Vec<usize>,
-                           assemblies: &mut HashMap<usize, BlockAssembly>,
-                           retired: &mut usize|
-     -> Result<()> {
-        let b = out.block as usize;
-        chunk_pools[out.lane].put(out.inbuf);
-        let live_total = cols_in(b);
-        // Ensure an assembly buffer exists (may need to wait on a write).
-        if !assemblies.contains_key(&b) {
-            let buf = loop {
-                if let Some(buf) = result_pool.take() {
-                    break buf;
-                }
-                let (wb, h) = pending_writes.pop_front().ok_or_else(|| {
-                    Error::Pipeline("result pool empty with no writes in flight".into())
-                })?;
-                let t0 = Instant::now();
-                let (wbuf, res) = h.wait();
-                metrics.add(Phase::WriteWait, t0.elapsed());
-                res?;
-                completed_writes.push(wb);
-                result_pool.put(wbuf);
-            };
-            let chunks = live_total.div_ceil(mb_gpu);
-            assemblies.insert(b, BlockAssembly { buf, live_total, chunks_left: chunks });
-        }
-        let asm = assemblies.get_mut(&b).expect("assembly exists");
-        let col0 = out.lane * mb_gpu; // chunk's first column within block
-        let t0 = Instant::now();
-        // The S-loop writes its solutions straight into this chunk's
-        // segment of the assembly buffer — no per-chunk result matrix,
-        // no copy: the retire path is allocation-free in steady state.
-        match out.outs {
-            LaneOutputs::Xbt(xbt) => {
-                let live = xbt.cols();
-                sloop_block_into(&pre, &xbt, scratch, &mut asm.buf[col0 * p..(col0 + live) * p])?;
-            }
-            LaneOutputs::Reductions { xbt: _, g, rb, d } => {
-                let live = d.len();
-                let seg = &mut asm.buf[col0 * p..(col0 + live) * p];
-                sloop_from_reductions_into(&pre, &g, &d, &rb, scratch, seg)?;
-            }
-            LaneOutputs::Solutions(rblk) => {
-                let live = rblk.cols();
-                asm.buf[col0 * p..(col0 + live) * p].copy_from_slice(rblk.as_slice());
-            }
-        }
-        metrics.add(Phase::Sloop, t0.elapsed());
-        asm.chunks_left -= 1;
-        if asm.chunks_left == 0 {
-            let mut asm = assemblies.remove(&b).expect("assembly exists");
-            asm.buf.truncate(p * asm.live_total);
-            let h = writer.write_cols((b * cfg.block) as u64, asm.live_total as u64, asm.buf);
-            pending_writes.push_back((b, h));
-            *retired += 1;
-        }
-        Ok(())
-    };
-
     // ---- main loop (Listing 1.3) ----------------------------------------
-    for &b in &todo {
+    for &(col0, live_total) in items {
+        st.live_of.insert(col0, live_total);
         pump_reads!();
-        let (rb_idx, handle, from_cache) = pending_reads
+        let (rc0, handle, from_cache) = pending_reads
             .pop_front()
             .ok_or_else(|| Error::Pipeline("no pending read (pool starved?)".into()))?;
-        debug_assert_eq!(rb_idx, b);
+        debug_assert_eq!(rc0, col0);
         let t0 = Instant::now();
         let (buf, res) = handle.wait(); // aio_wait Xr[b]
         metrics.add(Phase::ReadWait, t0.elapsed());
         res?;
-        let live_total = cols_in(b);
-        // A freshly read (miss) block becomes cache residency for the
+        // A freshly read (miss) window becomes cache residency for the
         // next job streaming this dataset.
         if !from_cache {
-            if let (Some(cache), Some(ds)) = (cfg.cache.as_deref(), cache_dataset.as_deref()) {
-                cache.insert(block_key(ds, b, live_total), &buf);
+            if let (Some(cache), Some(ds)) = (cfg.cache.as_deref(), ctx.cache_dataset.as_deref()) {
+                cache.insert(block_key(ds, col0, live_total), &buf);
             }
         }
         let chunks = live_total.div_ceil(mb_gpu);
@@ -399,7 +618,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
             // Opportunistically drain results while waiting for a chunk buffer
             // — this is where the S-loop of block b-1 overlaps the trsm of b.
             let mut chunkbuf = loop {
-                if let Some(cb) = chunk_pools[gi].take() {
+                if let Some(cb) = st.chunk_pools[gi].take() {
                     break cb;
                 }
                 let t0 = Instant::now();
@@ -408,40 +627,20 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
                     .recv()
                     .map_err(|_| Error::Pipeline(format!("lane {gi} closed early")))?;
                 metrics.add(Phase::RecvWait, t0.elapsed());
-                process_out(
-                    out,
-                    &mut metrics,
-                    &mut scratch,
-                    &mut chunk_pools,
-                    &mut result_pool,
-                    &mut pending_writes,
-                    &mut completed_writes,
-                    &mut assemblies,
-                    &mut retired,
-                )?;
+                process_out(ctx, mb_gpu, out, &mut st, metrics, scratch)?;
             };
             let t0 = Instant::now();
             chunkbuf[..n * live].copy_from_slice(&buf[gi * mb_gpu * n..gi * mb_gpu * n + n * live]);
             chunkbuf[n * live..].fill(0.0); // zero-pad the artifact width
             metrics.add(Phase::Send, t0.elapsed());
-            lanes[gi].submit(DevIn { block: b as u64, buf: chunkbuf, live })?;
+            lanes[gi].submit(DevIn { block: col0, buf: chunkbuf, live })?;
         }
-        host_pool.put(buf);
+        st.host_pool.put(buf);
 
         // Drain any already-finished results without blocking.
-        for gi in 0..cfg.ngpus {
-            while let Ok(out) = lanes[gi].rx_out.try_recv() {
-                process_out(
-                    out,
-                    &mut metrics,
-                    &mut scratch,
-                    &mut chunk_pools,
-                    &mut result_pool,
-                    &mut pending_writes,
-                    &mut completed_writes,
-                    &mut assemblies,
-                    &mut retired,
-                )?;
+        for lane in &lanes {
+            while let Ok(out) = lane.rx_out.try_recv() {
+                process_out(ctx, mb_gpu, out, &mut st, metrics, scratch)?;
             }
         }
     }
@@ -453,56 +652,44 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         lane.close();
     }
     let mut open = vec![true; cfg.ngpus];
-    while retired < njobs && open.iter().any(|&o| o) {
+    while st.retired < njobs && open.iter().any(|&o| o) {
         for gi in 0..cfg.ngpus {
             if !open[gi] {
                 continue;
             }
-            match lanes[gi].rx_out.recv_timeout(std::time::Duration::from_millis(20)) {
+            let t0 = Instant::now();
+            match lanes[gi].rx_out.recv_timeout(Duration::from_millis(20)) {
                 Ok(out) => {
-                    let t0 = Instant::now();
                     metrics.add(Phase::RecvWait, t0.elapsed());
-                    process_out(
-                        out,
-                        &mut metrics,
-                        &mut scratch,
-                        &mut chunk_pools,
-                        &mut result_pool,
-                        &mut pending_writes,
-                        &mut completed_writes,
-                        &mut assemblies,
-                        &mut retired,
-                    )?;
+                    process_out(ctx, mb_gpu, out, &mut st, metrics, scratch)?;
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open[gi] = false,
             }
         }
     }
-    if retired < njobs {
+    if st.retired < njobs {
         // Lanes exited without delivering everything — surface their errors.
         for lane in lanes {
             lane.join()?;
         }
-        return Err(Error::Pipeline(format!(
-            "lanes exited after {retired}/{njobs} blocks"
-        )));
+        return Err(Error::Pipeline(format!("lanes exited after {}/{njobs} blocks", st.retired)));
     }
     // Flush writes.
-    while let Some((wb, h)) = pending_writes.pop_front() {
+    while let Some((wc0, wlen, h)) = st.pending_writes.pop_front() {
         let t0 = Instant::now();
         let (wbuf, res) = h.wait();
         metrics.add(Phase::WriteWait, t0.elapsed());
         res?;
-        completed_writes.push(wb);
-        result_pool.put(wbuf);
+        st.completed.push((wc0, wlen));
+        st.result_pool.put(wbuf);
     }
-    writer.sync().wait().1?;
-    // Journal after the data sync so a journaled block is truly durable.
-    for wb in completed_writes.drain(..) {
-        journal_block!(wb);
+    ctx.writer.sync().wait().1?;
+    // Journal after the data sync so a journaled window is truly durable.
+    for (wc0, wlen) in st.completed.drain(..) {
+        journal.append(wc0, wlen)?;
     }
-    journal.sync_data().map_err(|e| Error::io("syncing progress journal", e))?;
+    journal.sync()?;
 
     // Merge lane metrics.
     let mut device_secs = 0.0;
@@ -511,16 +698,7 @@ pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
         device_secs += lm.total(Phase::DeviceCompute).as_secs_f64();
         metrics.merge(&lm);
     }
-
-    let wall_secs = t_wall.elapsed().as_secs_f64();
-    Ok(PipelineReport {
-        blocks: njobs,
-        snps: dims.m,
-        wall_secs,
-        snps_per_sec: dims.m as f64 / wall_secs.max(1e-12),
-        metrics,
-        device_secs,
-    })
+    Ok(device_secs)
 }
 
 fn validate(cfg: &PipelineConfig) -> Result<()> {
@@ -535,6 +713,21 @@ fn validate(cfg: &PipelineConfig) -> Result<()> {
     }
     if cfg.host_buffers < 2 {
         return Err(Error::Config("host_buffers must be ≥ 2 (double buffering)".into()));
+    }
+    if !(2..=64).contains(&cfg.device_buffers) {
+        return Err(Error::Config("device_buffers must be in 2..=64".into()));
+    }
+    if cfg.adapt {
+        if cfg.adapt_every == 0 {
+            return Err(Error::Config("adapt_every must be ≥ 1".into()));
+        }
+        if matches!(cfg.backend, BackendKind::Pjrt { .. }) {
+            return Err(Error::Config(
+                "adaptive re-planning requires the native backend \
+                 (PJRT artifacts are compiled per block size)"
+                    .into(),
+            ));
+        }
     }
     Ok(())
 }

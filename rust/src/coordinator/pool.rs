@@ -30,7 +30,7 @@ impl BufPool {
     /// Take a buffer if one is free. Length is reset to full capacity.
     pub fn take(&mut self) -> Option<Vec<f64>> {
         self.bufs.pop_front().map(|mut b| {
-            debug_assert_eq!(b.capacity() >= self.cap_each, true);
+            debug_assert!(b.capacity() >= self.cap_each);
             b.resize(self.cap_each, 0.0);
             b
         })

@@ -15,5 +15,5 @@ pub mod pipeline_model;
 pub mod profile;
 
 pub use des::{Des, TaskId, Timeline};
-pub use pipeline_model::{simulate, Algo, SimConfig, SimReport};
-pub use profile::HardwareProfile;
+pub use pipeline_model::{simulate, simulate_cugwas_with, Algo, SimConfig, SimReport};
+pub use profile::{sloop_flops, trsm_flops, HardwareProfile};

@@ -62,17 +62,28 @@ pub struct SimReport {
     pub timeline: Timeline,
 }
 
-/// Simulate `algo` under `cfg`.
+/// Simulate `algo` under `cfg` (cuGWAS with the paper's 2 device buffers).
 pub fn simulate(algo: Algo, cfg: &SimConfig) -> Result<SimReport> {
     validate(cfg)?;
     let des = match algo {
         Algo::NaiveGpu => build_naive(cfg),
         Algo::OocCpu => build_ooc_cpu(cfg),
-        Algo::CuGwas => build_cugwas(cfg),
+        Algo::CuGwas => build_cugwas(cfg, 2),
         Algo::Probabel => build_probabel(cfg),
     };
     let tl = des.run()?;
     Ok(summarize(algo, cfg, tl))
+}
+
+/// Simulate cuGWAS with an explicit device-buffer count per lane (the
+/// autotuner's search knob; `simulate` fixes it at the paper's 2).
+pub fn simulate_cugwas_with(cfg: &SimConfig, dev_buffers: usize) -> Result<SimReport> {
+    validate(cfg)?;
+    if !(2..=8).contains(&dev_buffers) {
+        return Err(Error::Config("dev_buffers must be in 2..=8".into()));
+    }
+    let tl = build_cugwas(cfg, dev_buffers).run()?;
+    Ok(summarize(Algo::CuGwas, cfg, tl))
 }
 
 fn validate(cfg: &SimConfig) -> Result<()> {
@@ -117,15 +128,16 @@ fn xr_bytes(cfg: &SimConfig, mb: usize) -> u64 {
 
 /// cuGWAS (Listing 1.3). Buffer-reuse dependencies:
 /// * host ring of `hb` buffers ⇒ `read[b]` waits on `write[b-hb]`;
-/// * two device buffers per GPU  ⇒ `send[b]` waits on `recv[b-2]`.
+/// * `db` device buffers per GPU ⇒ `send[b]` waits on `recv[b-db]`
+///   (paper: db = 2, one computing while the next is staged).
 ///
 /// Submission order mirrors the listing's iteration order because the
 /// PCIe link is FIFO: at iteration b the link first drains the *results*
-/// of block b-2 (`recv[b-2]`) and then stages block b (`send[b]`) — both
-/// while `trsm[b-1]` runs. Emitting recv[b-1] before send[b] instead
+/// of block b-db (`recv[b-db]`) and then stages block b (`send[b]`) —
+/// both while `trsm[b-1]` runs. Emitting recv[b-1] before send[b] instead
 /// would inject a full trsm into the link's critical path and the GPU
 /// could never saturate (the exact mistake the naive schedule makes).
-fn build_cugwas(cfg: &SimConfig) -> Des {
+fn build_cugwas(cfg: &SimConfig, db: usize) -> Des {
     let p = &cfg.profile;
     let n = cfg.dims.n;
     let g = cfg.ngpus;
@@ -165,11 +177,11 @@ fn build_cugwas(cfg: &SimConfig) -> Des {
     for b in 0..nb {
         let mb = block_cols(cfg, b);
         let mb_gpu = mb.div_ceil(g);
-        // Retire block b-2 first (its recv precedes send[b] on the link,
-        // frees the device buffer send[b] targets, and — when hb == 2 —
+        // Retire block b-db first (its recv precedes send[b] on the link,
+        // frees the device buffer send[b] targets, and — when hb == db —
         // frees the very host buffer read[b] needs).
-        if b >= 2 {
-            retire(&mut des, b - 2, &trsm, &mut recv, &mut write);
+        if b >= db {
+            retire(&mut des, b - db, &trsm, &mut recv, &mut write);
         }
         // read[b] — host buffer freed once block b-hb's results are on disk.
         let mut deps = Vec::new();
@@ -182,8 +194,8 @@ fn build_cugwas(cfg: &SimConfig) -> Des {
         let mut sends = Vec::with_capacity(g);
         for gi in 0..g {
             let mut sdeps = vec![rd];
-            if b >= 2 {
-                sdeps.push(recv[b - 2][gi]); // device buffer pair
+            if b >= db {
+                sdeps.push(recv[b - db][gi]); // device buffer ring
             }
             sends.push(des.task(format!("send[{b}.{gi}]"), "pcie", p.t_pcie(n, mb_gpu), &sdeps));
         }
@@ -198,8 +210,8 @@ fn build_cugwas(cfg: &SimConfig) -> Des {
         }
         trsm.push(trsms);
     }
-    // Drain the last two blocks.
-    for b in nb.saturating_sub(2)..nb {
+    // Drain the last db blocks.
+    for b in nb.saturating_sub(db)..nb {
         retire(&mut des, b, &trsm, &mut recv, &mut write);
     }
     des
@@ -430,6 +442,37 @@ mod tests {
         c.ngpus = 2;
         c.host_buffers = 1;
         assert!(simulate(Algo::CuGwas, &c).is_err());
+    }
+
+    #[test]
+    fn explicit_two_device_buffers_match_the_default_schedule() {
+        let c = cfg(100_000, 5_000, 1);
+        let a = simulate(Algo::CuGwas, &c).unwrap();
+        let b = simulate_cugwas_with(&c, 2).unwrap();
+        assert_eq!(a.total_secs, b.total_secs);
+    }
+
+    #[test]
+    fn extra_device_buffers_never_hurt_and_bounds_enforced() {
+        // On a profile where the link is the constraint, a third device
+        // buffer can only relax dependencies — never add any.
+        let mut c = cfg(100_000, 5_000, 1);
+        c.profile = HardwareProfile { pcie_gbps: 1.0, ..HardwareProfile::quadro() };
+        let two = simulate_cugwas_with(&c, 2).unwrap();
+        let three = simulate_cugwas_with(&c, 3).unwrap();
+        assert!(three.total_secs <= two.total_secs * (1.0 + 1e-9));
+        assert!(simulate_cugwas_with(&c, 1).is_err());
+        assert!(simulate_cugwas_with(&c, 9).is_err());
+    }
+
+    #[test]
+    fn more_device_buffers_than_blocks_still_drains() {
+        let c = cfg(9_000, 5_000, 1); // 2 blocks, db = 4
+        let r = simulate_cugwas_with(&c, 4).unwrap();
+        assert!(r.total_secs > 0.0);
+        let writes =
+            r.timeline.intervals.iter().filter(|iv| iv.label.starts_with("write")).count();
+        assert_eq!(writes, 2);
     }
 
     #[test]

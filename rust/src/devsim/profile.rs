@@ -61,22 +61,18 @@ impl HardwareProfile {
 
     /// trsm of `L (n×n)` against `mb` RHS columns: `n² · mb` flops.
     pub fn t_trsm_gpu(&self, n: usize, mb: usize) -> f64 {
-        (n as f64) * (n as f64) * (mb as f64) / (self.gpu_trsm_gflops * 1e9)
+        trsm_flops(n, mb) / (self.gpu_trsm_gflops * 1e9)
     }
 
     /// Same trsm on the CPU (the OOC-HP-GWAS baseline).
     pub fn t_trsm_cpu(&self, n: usize, mb: usize) -> f64 {
-        (n as f64) * (n as f64) * (mb as f64) / (self.cpu_gflops * 1e9)
+        trsm_flops(n, mb) / (self.cpu_gflops * 1e9)
     }
 
     /// S-loop over a block: gemm `(pl×n)(n×mb)` + per-column syrk/gemv +
     /// m tiny posv solves.
     pub fn t_sloop_cpu(&self, n: usize, pl: usize, mb: usize) -> f64 {
-        let p = (pl + 1) as f64;
-        let gemm = 2.0 * (pl as f64) * (n as f64) * (mb as f64);
-        let vec_ops = 4.0 * (n as f64) * (mb as f64); // syrk col + gemv
-        let posv = (mb as f64) * p * p * p / 3.0;
-        (gemm + vec_ops + posv) / (self.cpu_gflops * 1e9)
+        sloop_flops(n, pl, mb) / (self.cpu_gflops * 1e9)
     }
 
     /// Host↔device transfer of a block (n×mb f64).
@@ -96,6 +92,25 @@ impl HardwareProfile {
         let per_snp = 3.0 * (n as f64) * (n as f64) + 2.0 * p * p * (n as f64);
         (m as f64) * per_snp / (self.probabel_gflops * 1e9)
     }
+}
+
+// ---- flop counts (shared by the model and the live rate observer) ------
+
+/// Flops of a trsm of `L (n×n)` against `mb` RHS columns. The autotuner's
+/// live observer divides measured device seconds by this same count, so
+/// model and measurement can never disagree on the flop convention.
+pub fn trsm_flops(n: usize, mb: usize) -> f64 {
+    (n as f64) * (n as f64) * (mb as f64)
+}
+
+/// Flops of the CPU S-loop over an `mb`-column block (gemm + per-column
+/// syrk/gemv + `mb` tiny posv solves).
+pub fn sloop_flops(n: usize, pl: usize, mb: usize) -> f64 {
+    let p = (pl + 1) as f64;
+    let gemm = 2.0 * (pl as f64) * (n as f64) * (mb as f64);
+    let vec_ops = 4.0 * (n as f64) * (mb as f64); // syrk col + gemv
+    let posv = (mb as f64) * p * p * p / 3.0;
+    gemm + vec_ops + posv
 }
 
 #[cfg(test)]

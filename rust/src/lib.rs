@@ -34,6 +34,10 @@
 //!   priority job queue with memory-budget admission, worker lanes over
 //!   the coordinator, and the shared [`storage::BlockCache`] that lets
 //!   concurrent/repeated studies on one dataset skip the HDD.
+//! * [`tune`] — the model-driven autotuner behind `cugwas tune`:
+//!   probe the machine, search the knob space with the DES as the
+//!   objective, emit a profile `run`/`serve` apply — and re-plan live
+//!   at segment boundaries when the stall profile diverges.
 //! * [`baselines`] — naive offload (Fig. 3), OOC-HP-GWAS (Listing 1.2),
 //!   and a ProbABEL-like per-SNP solver.
 
@@ -51,6 +55,7 @@ pub mod runtime;
 pub mod service;
 pub mod stats;
 pub mod storage;
+pub mod tune;
 pub mod util;
 
 pub use error::{Error, Result};

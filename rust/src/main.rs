@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! cugwas gen-data  --dir data/s1 --n 512 --m 4096          # synthesize a study
-//! cugwas run       --dataset data/s1 --block 256 --backend pjrt
+//! cugwas tune      --dataset data/s1                       # probe + plan → tuned.toml
+//! cugwas run       --dataset data/s1 --profile data/s1/tuned.toml --adapt
 //! cugwas serve     --config service.toml                   # multi-study scheduler
 //! cugwas baseline  --dataset data/s1 --algo ooc            # OOC-HP-GWAS / naive / probabel
 //! cugwas sim       --algo cugwas --m 1000000 --ngpus 4     # paper-scale DES
@@ -34,6 +35,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "gen-data" => cmd_gen_data(rest),
         "inspect" => cmd_inspect(rest),
+        "tune" => cmd_tune(rest),
         "run" => cmd_run(rest),
         "serve" => cmd_serve(rest),
         "baseline" => cmd_baseline(rest),
@@ -64,6 +66,7 @@ fn print_global_usage() {
          subcommands:\n\
          \x20 gen-data    synthesize a study dataset on disk\n\
          \x20 inspect     describe a dataset directory\n\
+         \x20 tune        probe the machine + plan pipeline knobs (autotuner)\n\
          \x20 run         stream a study through the cuGWAS pipeline\n\
          \x20 serve       multi-study scheduler with a shared block cache\n\
          \x20 baseline    run a comparison solver (ooc | naive | probabel)\n\
@@ -156,6 +159,91 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+// -------------------------------------------------------------------- tune
+
+const TUNE_FLAGS: &[Flag] = &[
+    Flag::req("dataset", "dataset directory to calibrate against"),
+    Flag::opt("out", "", "profile output path (default: <dataset>/tuned.toml)"),
+    Flag::opt("threads", "0", "total compute threads to plan for (0 = all cores)"),
+    Flag::opt("max-lanes", "1", "largest device-lane count to consider"),
+    Flag::opt("max-block", "0", "largest block size to consider (0 = 65536)"),
+    Flag::opt("probe-mb", "64", "disk-probe read budget (MB)"),
+    Flag::opt("read-mbps", "0", "probe through an emulated storage throttle (0 = off)"),
+    Flag::opt("host-mem-mb", "0", "cap the rings' host memory (0 = no cap)"),
+    Flag::switch("quick", "smaller kernel probes (CI smoke)"),
+];
+
+fn cmd_tune(argv: &[String]) -> Result<()> {
+    use cugwas::tune::{plan, probe_dataset, PlanOpts, ProbeOpts};
+    if wants_help(argv) {
+        print!("{}", usage("tune", "probe the machine, plan pipeline knobs", TUNE_FLAGS));
+        return Ok(());
+    }
+    let a = Args::parse(argv, TUNE_FLAGS)?;
+    let dataset = PathBuf::from(a.str("dataset"));
+    let meta = storage::load_meta(&dataset)?;
+    let popts = ProbeOpts {
+        threads: a.usize("threads")?,
+        max_disk_bytes: (a.u64("probe-mb")?.max(1)) << 20,
+        read_throttle: parse_throttle(&a, "read-mbps")?,
+        quick: a.switch("quick"),
+    };
+    let rates = probe_dataset(&dataset, &popts)?;
+    let total = if popts.threads == 0 {
+        cugwas::util::threads::available()
+    } else {
+        popts.threads
+    };
+    println!(
+        "probe: disk {:.0} MB/s over {}, memcpy {:.1} GB/s, kernels at {} thread counts{}",
+        rates.disk_mbps,
+        human_bytes(rates.disk_bytes),
+        rates.pcie_gbps,
+        rates.kernels.len(),
+        if rates.reliable { "" } else { " (dataset too small — probe unreliable)" }
+    );
+    for (t, k) in &rates.kernels {
+        println!(
+            "  {t:>3} threads: trsm {:.2} GF/s, gemm {:.2} GF/s",
+            k.trsm_gflops, k.gemm_gflops
+        );
+    }
+    let opts = PlanOpts {
+        total_threads: total,
+        max_lanes: a.usize("max-lanes")?.max(1),
+        host_mem_bytes: a.u64("host-mem-mb")? << 20,
+        max_block: a.usize("max-block")?,
+    };
+    let profile = plan(&rates, meta.dims, &opts);
+    let out = if a.str("out").is_empty() {
+        dataset.join("tuned.toml")
+    } else {
+        PathBuf::from(a.str("out"))
+    };
+    profile.save(&out)?;
+    println!(
+        "plan: block {} × {} lane(s), {} host / {} device buffers, lane threads {} \
+         (of {} total)",
+        profile.block,
+        profile.ngpus,
+        profile.host_buffers,
+        profile.device_buffers,
+        profile.lane_threads,
+        profile.threads
+    );
+    match profile.predicted() {
+        Some(secs) => println!(
+            "      predicted {} for m={} — wrote {}",
+            human_duration(Duration::from_secs_f64(secs)),
+            meta.dims.m,
+            out.display()
+        ),
+        None => println!("      probe was degenerate; wrote safe defaults to {}", out.display()),
+    }
+    println!("apply: cugwas run --dataset {} --profile {}", dataset.display(), out.display());
+    Ok(())
+}
+
 // --------------------------------------------------------------------- run
 
 const RUN_FLAGS: &[Flag] = &[
@@ -163,13 +251,18 @@ const RUN_FLAGS: &[Flag] = &[
     Flag::opt("block", "256", "SNP columns per pipeline iteration"),
     Flag::opt("ngpus", "1", "device lanes"),
     Flag::opt("host-buffers", "3", "host ring size (paper: 3)"),
+    Flag::opt("device-buffers", "2", "device buffers per lane (paper: 2)"),
     Flag::opt("threads", "0", "compute threads, split lanes/S-loop (0 = all cores)"),
+    Flag::opt("lane-threads", "0", "kernel threads per lane (0 = auto split)"),
     Flag::opt("mode", "trsm", "offload mode: trsm | block | blockfull"),
     Flag::opt("backend", "native", "native | pjrt"),
     Flag::opt("artifacts", "artifacts", "AOT artifacts directory (pjrt)"),
     Flag::opt("read-mbps", "0", "throttle reads to emulate slower storage (0 = off)"),
     Flag::opt("write-mbps", "0", "throttle writes (0 = off)"),
-    Flag::switch("resume", "skip blocks journaled in r.progress (crash recovery)"),
+    Flag::opt("profile", "", "tuned profile TOML (explicit flags still win)"),
+    Flag::opt("adapt-every", "16", "blocks per adaptive segment"),
+    Flag::switch("adapt", "re-plan block size live from the stall profile (native)"),
+    Flag::switch("resume", "skip column ranges journaled in r.progress (crash recovery)"),
     Flag::switch("verify", "check r.xrd against the in-core oracle (small studies)"),
 ];
 
@@ -201,11 +294,12 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let a = Args::parse(argv, RUN_FLAGS)?;
-    let cfg = PipelineConfig {
+    let mut cfg = PipelineConfig {
         dataset: PathBuf::from(a.str("dataset")),
         block: a.usize("block")?,
         ngpus: a.usize("ngpus")?,
         host_buffers: a.usize("host-buffers")?,
+        device_buffers: a.usize("device-buffers")?,
         mode: parse_mode(a.str("mode"))?,
         backend: parse_backend(&a)?,
         read_throttle: parse_throttle(&a, "read-mbps")?,
@@ -213,15 +307,45 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         resume: a.switch("resume"),
         cache: None,
         threads: a.usize("threads")?,
+        lane_threads: a.usize("lane-threads")?,
+        adapt: a.switch("adapt"),
+        adapt_every: a.usize("adapt-every")?,
     };
+    // A tuned profile supplies defaults; flags the user typed still win.
+    if !a.str("profile").is_empty() {
+        let prof = cugwas::tune::TunedProfile::load(Path::new(a.str("profile")))?;
+        if !a.given("block") {
+            cfg.block = prof.block;
+        }
+        if !a.given("ngpus") {
+            cfg.ngpus = prof.ngpus;
+        }
+        if !a.given("host-buffers") {
+            cfg.host_buffers = prof.host_buffers;
+        }
+        if !a.given("device-buffers") {
+            cfg.device_buffers = prof.device_buffers;
+        }
+        if !a.given("threads") {
+            cfg.threads = prof.threads;
+        }
+        if !a.given("lane-threads") {
+            cfg.lane_threads = prof.lane_threads;
+        }
+    }
     let report = coordinator::run(&cfg)?;
     println!(
-        "cuGWAS: {} SNPs in {} blocks — {} ({:.0} SNPs/s, device busy {})",
+        "cuGWAS: {} SNPs in {} blocks — {} ({:.0} SNPs/s, device busy {}{})",
         report.snps,
         report.blocks,
         human_duration(Duration::from_secs_f64(report.wall_secs)),
         report.snps_per_sec,
         human_duration(Duration::from_secs_f64(report.device_secs)),
+        if report.replans > 0 {
+            format!(", {} adaptive switch(es)", report.replans)
+        } else {
+            String::new()
+        },
     );
     print!("{}", report.metrics.table(Duration::from_secs_f64(report.wall_secs)));
     if a.switch("verify") {

@@ -37,6 +37,8 @@ pub struct JobSpec {
     pub ngpus: usize,
     /// Host ring size (paper: 3).
     pub host_buffers: usize,
+    /// Device buffers per lane (paper: 2).
+    pub device_buffers: usize,
     pub mode: OffloadMode,
     pub backend: BackendKind,
     pub priority: Priority,
@@ -46,11 +48,22 @@ pub struct JobSpec {
     /// per-worker share (total threads / workers) so concurrent jobs
     /// never oversubscribe the host.
     pub threads: usize,
+    /// Kernel threads per lane (0 = auto split).
+    pub lane_threads: usize,
+    /// Adaptive block-size re-planning for this job.
+    pub adapt: bool,
+    /// Blocks per adaptive segment.
+    pub adapt_every: usize,
+    /// Tuned-profile prediction of this job's wall seconds, if one was
+    /// attached. Within a priority, admission runs predicted-shorter
+    /// jobs first (shortest-job-first); unprofiled jobs keep FIFO order
+    /// after them.
+    pub predicted_secs: Option<f64>,
 }
 
 impl JobSpec {
     /// Paper-topology defaults: block 256, 1 lane, 3 host buffers,
-    /// trsm offload, native backend, priority 0.
+    /// 2 device buffers, trsm offload, native backend, priority 0.
     pub fn new(name: impl Into<String>, dataset: impl Into<PathBuf>) -> JobSpec {
         JobSpec {
             name: name.into(),
@@ -58,12 +71,17 @@ impl JobSpec {
             block: 256,
             ngpus: 1,
             host_buffers: 3,
+            device_buffers: 2,
             mode: OffloadMode::Trsm,
             backend: BackendKind::Native,
             priority: 0,
             read_throttle: None,
             write_throttle: None,
             threads: 0,
+            lane_threads: 0,
+            adapt: false,
+            adapt_every: 16,
+            predicted_secs: None,
         }
     }
 
@@ -76,7 +94,7 @@ impl JobSpec {
         let mb_gpu = self.block / self.ngpus.max(1);
         let host_ring = self.host_buffers * n * self.block;
         let result_ring = self.host_buffers * p * self.block;
-        let chunks = 2 * self.ngpus * n * mb_gpu;
+        let chunks = self.device_buffers * self.ngpus * n * mb_gpu;
         let sidecars = n * n + n * p + n;
         (8 * (host_ring + result_ring + chunks + sidecars)) as u64
     }
@@ -143,10 +161,12 @@ impl JobQueue {
         id
     }
 
-    /// Admit the next runnable job: highest priority, FIFO within
-    /// priority, skipping jobs that don't fit `budget_left` or whose
-    /// dataset is in `busy_datasets`. The admitted job transitions
-    /// `Queued → Admitted` and a copy is returned.
+    /// Admit the next runnable job: highest priority first; within a
+    /// priority, profiled jobs run shortest-predicted-first (the tuned
+    /// profile's DES estimate), unprofiled jobs after them in FIFO
+    /// order. Jobs that don't fit `budget_left` or whose dataset is in
+    /// `busy_datasets` are skipped, not cancelled. The admitted job
+    /// transitions `Queued → Admitted` and a copy is returned.
     pub fn admit_next(
         &mut self,
         budget_left: u64,
@@ -161,7 +181,18 @@ impl JobQueue {
                     && j.est_bytes <= budget_left
                     && !busy_datasets.contains(&j.dataset_key)
             })
-            .max_by_key(|(_, j)| (j.spec.priority, std::cmp::Reverse(j.id)))
+            .max_by(|(_, a), (_, b)| {
+                a.spec
+                    .priority
+                    .cmp(&b.spec.priority)
+                    .then_with(|| {
+                        // Shorter predicted duration ⇒ better ⇒ larger key.
+                        let da = a.spec.predicted_secs.unwrap_or(f64::INFINITY);
+                        let db = b.spec.predicted_secs.unwrap_or(f64::INFINITY);
+                        db.partial_cmp(&da).unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .then(b.id.cmp(&a.id))
+            })
             .map(|(i, _)| i)?;
         self.jobs[idx].state = JobState::Admitted;
         Some(self.jobs[idx].clone())
@@ -239,6 +270,29 @@ mod tests {
             .collect();
         assert_eq!(order, ["hi-first", "hi-second", "low"]);
         assert_eq!(q.queued(), 0);
+    }
+
+    #[test]
+    fn profiled_jobs_run_shortest_first_within_a_priority() {
+        let mut q = JobQueue::new();
+        // Same priority: two profiled jobs (out of order), two unprofiled.
+        let mut slow = spec("slow", 1);
+        slow.predicted_secs = Some(30.0);
+        let mut fast = spec("fast", 1);
+        fast.predicted_secs = Some(5.0);
+        let plain_a = spec("plain-a", 1);
+        let plain_b = spec("plain-b", 1);
+        // Higher priority always beats a shorter prediction.
+        let mut urgent = spec("urgent", 9);
+        urgent.predicted_secs = Some(1000.0);
+        for s in [slow, plain_a, fast, plain_b, urgent] {
+            let key = s.dataset.clone();
+            q.submit(s, 10, key);
+        }
+        let order: Vec<String> = std::iter::from_fn(|| q.admit_next(u64::MAX, &no_busy()))
+            .map(|j| j.spec.name)
+            .collect();
+        assert_eq!(order, ["urgent", "fast", "slow", "plain-a", "plain-b"]);
     }
 
     #[test]

@@ -321,6 +321,7 @@ fn run_job(job: &Job, cache: Option<Arc<BlockCache>>, worker_threads: usize) -> 
         block: spec.block,
         ngpus: spec.ngpus,
         host_buffers: spec.host_buffers,
+        device_buffers: spec.device_buffers,
         mode: spec.mode,
         backend: spec.backend.clone(),
         read_throttle: spec.read_throttle,
@@ -328,6 +329,9 @@ fn run_job(job: &Job, cache: Option<Arc<BlockCache>>, worker_threads: usize) -> 
         resume: false,
         cache,
         threads: if spec.threads > 0 { spec.threads } else { worker_threads },
+        lane_threads: spec.lane_threads,
+        adapt: spec.adapt,
+        adapt_every: spec.adapt_every,
     };
     match coordinator::run(&cfg) {
         Ok(rep) => JobReport::done(

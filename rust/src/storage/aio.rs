@@ -16,8 +16,11 @@
 
 use crate::error::{Error, Result};
 use crate::storage::xrd::XrdFile;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// A submitted I/O operation; `wait()` yields the buffer back.
 pub struct AioHandle {
@@ -79,35 +82,98 @@ enum Req {
     Shutdown,
 }
 
+/// Device-side accounting snapshot of one engine: operations completed,
+/// on-disk bytes moved (dtype-aware), and the I/O thread's busy time. Because the
+/// engine thread measures each operation itself, `busy` is overlap-free —
+/// `bytes / busy` is the *effective device bandwidth*, independent of how
+/// much of the latency the pipeline managed to hide. The autotuner's
+/// adaptive re-planner reads deltas of this to feed the model live rates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AioStats {
+    pub ops: u64,
+    pub bytes: u64,
+    pub busy: Duration,
+}
+
+impl AioStats {
+    /// Effective bandwidth in MB/s (0 when nothing completed yet).
+    pub fn mbps(&self) -> f64 {
+        let secs = self.busy.as_secs_f64();
+        if secs > 0.0 {
+            self.bytes as f64 / secs / 1e6
+        } else {
+            0.0
+        }
+    }
+
+    /// Counter difference since an earlier snapshot.
+    pub fn since(&self, earlier: &AioStats) -> AioStats {
+        AioStats {
+            ops: self.ops.saturating_sub(earlier.ops),
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+            busy: self.busy.saturating_sub(earlier.busy),
+        }
+    }
+}
+
+#[derive(Default)]
+struct StatsCells {
+    ops: AtomicU64,
+    bytes: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+impl StatsCells {
+    fn record(&self, bytes: u64, elapsed: Duration) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.busy_nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
 /// Async engine over one [`XrdFile`].
 pub struct AioEngine {
     tx: Option<Sender<Req>>,
     worker: Option<JoinHandle<()>>,
+    stats: Arc<StatsCells>,
 }
 
 impl AioEngine {
     /// Spawn the I/O thread owning `file`.
     pub fn new(file: XrdFile) -> Self {
         let (tx, rx) = channel::<Req>();
+        let stats = Arc::new(StatsCells::default());
+        let cells = Arc::clone(&stats);
+        // Stats count *on-disk* bytes (dtype-aware): `bytes / busy` must
+        // be the device's real bandwidth, also for half-width f32 files.
+        let elem_bytes = file.header().dtype.bytes();
         let worker = std::thread::Builder::new()
             .name("cugwas-aio".into())
             .spawn(move || {
                 while let Ok(req) = rx.recv() {
                     match req {
                         Req::Read { block, mut buf, done } => {
+                            let t0 = Instant::now();
                             let res = file.read_block_into(block, &mut buf);
+                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
                             let _ = done.send((buf, res));
                         }
                         Req::Write { block, buf, done } => {
+                            let t0 = Instant::now();
                             let res = file.write_block(block, &buf);
+                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
                             let _ = done.send((buf, res));
                         }
                         Req::ReadCols { col0, ncols, mut buf, done } => {
+                            let t0 = Instant::now();
                             let res = file.read_cols_into(col0, ncols, &mut buf);
+                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
                             let _ = done.send((buf, res));
                         }
                         Req::WriteCols { col0, ncols, buf, done } => {
+                            let t0 = Instant::now();
                             let res = file.write_cols(col0, ncols, &buf);
+                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
                             let _ = done.send((buf, res));
                         }
                         Req::Sync { done } => {
@@ -118,7 +184,16 @@ impl AioEngine {
                 }
             })
             .expect("spawning aio thread");
-        AioEngine { tx: Some(tx), worker: Some(worker) }
+        AioEngine { tx: Some(tx), worker: Some(worker), stats }
+    }
+
+    /// Snapshot the engine's device-side counters.
+    pub fn stats(&self) -> AioStats {
+        AioStats {
+            ops: self.stats.ops.load(Ordering::Relaxed),
+            bytes: self.stats.bytes.load(Ordering::Relaxed),
+            busy: Duration::from_nanos(self.stats.busy_nanos.load(Ordering::Relaxed)),
+        }
     }
 
     fn submit(&self, req: Req) {
@@ -178,6 +253,63 @@ impl Drop for AioEngine {
             let _ = w.join();
         }
     }
+}
+
+/// Result of a sequential read-bandwidth probe.
+#[derive(Debug, Clone, Copy)]
+pub struct ReadProbe {
+    /// On-disk bytes streamed (dtype-aware, excludes the header).
+    pub bytes: u64,
+    /// Wall seconds from first submission to last completion.
+    pub secs: f64,
+}
+
+impl ReadProbe {
+    pub fn mbps(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.bytes as f64 / self.secs / 1e6
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Measure effective sequential read bandwidth of `file` by streaming up
+/// to `max_bytes` of it through an [`AioEngine`] with `depth` requests in
+/// flight — the exact I/O pattern the pipeline's read-ahead produces, so
+/// the probed rate is what the coordinator will actually see. The file's
+/// throttle (if attached) is honored, which lets `cugwas tune` calibrate
+/// against an emulated slower device.
+pub fn probe_read_bandwidth(file: XrdFile, max_bytes: u64, depth: usize) -> Result<ReadProbe> {
+    let h = *file.header();
+    if h.rows == 0 || h.cols == 0 {
+        return Err(Error::Config("probe: file has no data".into()));
+    }
+    let col_disk_bytes = h.rows * h.dtype.bytes();
+    // ~4 MB windows (never more than the caller's byte budget): big
+    // enough to amortize per-request overhead, small enough that several
+    // fit in flight at `depth` ≥ 2.
+    let window_bytes = (4u64 << 20).min(max_bytes.max(col_disk_bytes));
+    let wcols = (window_bytes / col_disk_bytes).clamp(1, h.cols);
+    let engine = AioEngine::new(file);
+    let depth = depth.max(1);
+    let mut inflight: std::collections::VecDeque<AioHandle> =
+        std::collections::VecDeque::with_capacity(depth);
+    let mut col0 = 0u64;
+    let mut bytes = 0u64;
+    let t0 = Instant::now();
+    loop {
+        while col0 < h.cols && bytes < max_bytes && inflight.len() < depth {
+            let ncols = wcols.min(h.cols - col0);
+            let buf = vec![0.0f64; (h.rows * ncols) as usize];
+            inflight.push_back(engine.read_cols(col0, ncols, buf));
+            col0 += ncols;
+            bytes += ncols * col_disk_bytes;
+        }
+        let Some(handle) = inflight.pop_front() else { break };
+        handle.wait().1?;
+    }
+    Ok(ReadProbe { bytes, secs: t0.elapsed().as_secs_f64() })
 }
 
 #[cfg(test)]
@@ -281,6 +413,45 @@ mod tests {
         let h = AioHandle::ready(vec![1.0; 2], Ok(()));
         let (buf, _) = h.try_wait().expect("ready");
         assert_eq!(buf.len(), 2);
+    }
+
+    #[test]
+    fn stats_track_ops_bytes_and_busy_time() {
+        let p = tmpfile("stats");
+        let h = Header::new(8, 6, 3, 0).unwrap();
+        let eng = AioEngine::new(XrdFile::create(&p, h).unwrap());
+        assert_eq!(eng.stats().ops, 0);
+        eng.write(0, vec![1.0; 24]).wait().1.unwrap();
+        eng.read(0, vec![0.0; 24]).wait().1.unwrap();
+        let s = eng.stats();
+        assert_eq!(s.ops, 2);
+        assert_eq!(s.bytes, 2 * 24 * 8);
+        let base = s;
+        eng.read(1, vec![0.0; 24]).wait().1.unwrap();
+        let d = eng.stats().since(&base);
+        assert_eq!(d.ops, 1);
+        assert_eq!(d.bytes, 24 * 8);
+        drop(eng);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn probe_read_bandwidth_streams_the_file() {
+        let p = tmpfile("probe");
+        let h = Header::new(32, 64, 8, 0).unwrap();
+        let f = XrdFile::create(&p, h).unwrap();
+        for b in 0..h.block_count() {
+            let n = (h.cols_in_block(b) * h.rows) as usize;
+            f.write_block(b, &vec![1.0; n]).unwrap();
+        }
+        drop(f);
+        let probe = probe_read_bandwidth(XrdFile::open(&p).unwrap(), u64::MAX, 2).unwrap();
+        assert_eq!(probe.bytes, 32 * 64 * 8);
+        assert!(probe.mbps() > 0.0);
+        // A byte cap stops the probe early (whole windows only).
+        let capped = probe_read_bandwidth(XrdFile::open(&p).unwrap(), 1, 2).unwrap();
+        assert!(capped.bytes >= 32 * 8 && capped.bytes < 32 * 64 * 8);
+        std::fs::remove_file(&p).unwrap();
     }
 
     #[test]

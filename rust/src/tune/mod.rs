@@ -1,0 +1,36 @@
+//! Model-driven autotuner for the streaming plane.
+//!
+//! The paper's "sophisticated transfer strategy" is not a fixed
+//! configuration but a *derived* one: §3.1's multibuffering analysis
+//! picks the block size and buffer counts that balance disk bandwidth
+//! against compute rate. This module closes that loop for the live
+//! pipeline in three steps, with a fourth running inside the coordinator:
+//!
+//! 1. **Probe** ([`probe`]) — short calibration runs measure effective
+//!    disk read bandwidth (through [`crate::storage::probe_read_bandwidth`],
+//!    i.e. the same aio engine + read-ahead pattern the pipeline uses),
+//!    kernel GFlop/s at each feasible thread count (the `linalg` kernels
+//!    as a library, not a bench), and host memcpy bandwidth (the
+//!    emulated PCIe link).
+//! 2. **Plan** ([`plan`]) — feed the probed rates into
+//!    [`crate::devsim::pipeline_model`] and search the (block size, host
+//!    buffers, device buffers, lane count, lane-vs-S-loop thread split)
+//!    space with the DES as the objective, so the search costs
+//!    milliseconds instead of runs. The winner is a [`TunedProfile`].
+//! 3. **Apply** — `cugwas tune` writes the profile as TOML; `run` and
+//!    `serve` accept it via `--profile` / a `[job.*] profile` key, and
+//!    the service scheduler orders admission by the profile's predicted
+//!    duration (shortest-job-first within a priority).
+//! 4. **Adapt** ([`plan::replan_block`]) — at segment boundaries the
+//!    coordinator compares its live `Metrics` stall profile against the
+//!    model's prediction and re-plans the block size (read-starved →
+//!    larger blocks, compute-starved → smaller), journaling every
+//!    persisted window so resume stays correct across a switch.
+
+pub mod plan;
+pub mod probe;
+pub mod profile;
+
+pub use plan::{candidates, plan, predict, replan_block, Candidate, LiveObs, PlanOpts};
+pub use probe::{probe_dataset, probe_kernels, KernelRates, ProbeOpts, ProbedRates};
+pub use profile::TunedProfile;

@@ -1,0 +1,409 @@
+//! Plan: search the pipeline's knob space with the DES model as the
+//! objective. Each candidate configuration is priced by simulating the
+//! cuGWAS task graph ([`crate::devsim::pipeline_model`]) under a
+//! [`HardwareProfile`] built from *probed* rates, so the whole search
+//! costs milliseconds — no trial runs.
+//!
+//! [`plan`] is literally `argmin(predict)` over [`candidates`]: the unit
+//! tests prove the planner inverts the model by recomputing the
+//! predictions independently and checking the argmin matches.
+//!
+//! [`replan_block`] is the in-flight variant the coordinator calls at
+//! segment boundaries: the observed stall profile picks a direction
+//! (read-starved → larger blocks, compute-starved → smaller — the
+//! real-machine effects of sequential locality and per-request overhead
+//! that a linear disk model cannot see), and the DES veto-guards the
+//! move against pipeline-structure regressions (fill/drain, buffer
+//! dependencies) before the switch is taken.
+
+use crate::devsim::{simulate_cugwas_with, HardwareProfile, SimConfig};
+use crate::error::Result;
+use crate::gwas::problem::Dims;
+use crate::tune::probe::ProbedRates;
+use crate::tune::profile::TunedProfile;
+
+/// Planner search bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOpts {
+    /// Total compute threads available (resolved, ≥ 1).
+    pub total_threads: usize,
+    /// Largest lane count to consider.
+    pub max_lanes: usize,
+    /// Host-memory cap on the rings + staging chunks (0 = uncapped).
+    pub host_mem_bytes: u64,
+    /// Largest block size to consider (0 = 65536).
+    pub max_block: usize,
+}
+
+impl Default for PlanOpts {
+    fn default() -> Self {
+        PlanOpts { total_threads: 1, max_lanes: 1, host_mem_bytes: 0, max_block: 0 }
+    }
+}
+
+/// One point of the search space, with the rate profile priced for it.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub block: usize,
+    pub host_buffers: usize,
+    pub device_buffers: usize,
+    pub ngpus: usize,
+    pub lane_threads: usize,
+    pub coord_threads: usize,
+    pub profile: HardwareProfile,
+}
+
+/// Steady-state host bytes of a candidate (host ring + result ring +
+/// device staging chunks) for the memory cap.
+fn candidate_bytes(c: &Candidate, n: usize, p: usize) -> u64 {
+    let mb_gpu = c.block / c.ngpus;
+    let ring = c.host_buffers * c.block * (n + p);
+    let chunks = c.device_buffers * c.ngpus * n * mb_gpu;
+    (8 * (ring + chunks)) as u64
+}
+
+/// Enumerate the search space for `dims` under `opts`, pricing each point
+/// with the probed rates. Deterministic order (the argmin tie-break).
+pub fn candidates(rates: &ProbedRates, dims: Dims, opts: &PlanOpts) -> Vec<Candidate> {
+    let total = opts.total_threads.max(1);
+    let max_block = if opts.max_block == 0 { 65_536 } else { opts.max_block };
+    let mut blocks = Vec::new();
+    let mut b = 64usize;
+    while b < max_block.min(dims.m) {
+        blocks.push(b);
+        b *= 2;
+    }
+    blocks.push(max_block.min(dims.m));
+    blocks.dedup();
+
+    let mut out = Vec::new();
+    for ngpus in 1..=opts.max_lanes.max(1) {
+        // Feasible per-lane thread budgets: probed counts that leave the
+        // coordinator at least one thread. Oversubscribed fallback: 1.
+        let mut lane_counts: Vec<usize> = rates
+            .kernels
+            .keys()
+            .copied()
+            .filter(|&lt| lt * ngpus < total)
+            .collect();
+        if lane_counts.is_empty() {
+            lane_counts.push(1);
+        }
+        for &raw in &blocks {
+            let block = (raw / ngpus) * ngpus;
+            if block == 0 || block > dims.m {
+                continue;
+            }
+            for host_buffers in [2usize, 3, 4] {
+                for device_buffers in [2usize, 3] {
+                    for &lane_threads in &lane_counts {
+                        let coord_threads = total.saturating_sub(lane_threads * ngpus).max(1);
+                        let c = Candidate {
+                            block,
+                            host_buffers,
+                            device_buffers,
+                            ngpus,
+                            lane_threads,
+                            coord_threads,
+                            profile: HardwareProfile {
+                                name: "probed",
+                                gpu_trsm_gflops: rates.trsm_at(lane_threads),
+                                cpu_gflops: rates.gemm_at(coord_threads),
+                                pcie_gbps: rates.pcie_gbps,
+                                disk_mbps: rates.disk_mbps,
+                                probabel_gflops: 0.1,
+                            },
+                        };
+                        if opts.host_mem_bytes > 0
+                            && candidate_bytes(&c, dims.n, dims.p()) > opts.host_mem_bytes
+                        {
+                            continue;
+                        }
+                        out.push(c);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// DES-predicted wall seconds for one candidate over `dims`.
+pub fn predict(c: &Candidate, dims: Dims) -> Result<f64> {
+    let cfg = SimConfig {
+        dims,
+        block: c.block,
+        ngpus: c.ngpus,
+        host_buffers: c.host_buffers.clamp(2, 8),
+        profile: c.profile,
+    };
+    Ok(simulate_cugwas_with(&cfg, c.device_buffers.clamp(2, 8))?.total_secs)
+}
+
+/// Pick the candidate the model simulates fastest. A degenerate probe
+/// (or an empty/unpriceable search space) falls back to
+/// [`TunedProfile::safe_defaults`] — tuning must never panic or emit a
+/// plan built on garbage rates.
+pub fn plan(rates: &ProbedRates, dims: Dims, opts: &PlanOpts) -> TunedProfile {
+    let total = opts.total_threads.max(1);
+    if rates.degenerate() {
+        return TunedProfile::safe_defaults(dims.m, total);
+    }
+    let mut best: Option<(f64, Candidate)> = None;
+    for c in candidates(rates, dims, opts) {
+        let Ok(secs) = predict(&c, dims) else { continue };
+        if !secs.is_finite() {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some((bs, _)) => secs < *bs,
+        };
+        if better {
+            best = Some((secs, c));
+        }
+    }
+    match best {
+        Some((secs, c)) => TunedProfile {
+            block: c.block,
+            host_buffers: c.host_buffers,
+            device_buffers: c.device_buffers,
+            ngpus: c.ngpus,
+            threads: total,
+            lane_threads: c.lane_threads,
+            predicted_secs: secs,
+            disk_mbps: rates.disk_mbps,
+            pcie_gbps: rates.pcie_gbps,
+            trsm_gflops: c.profile.gpu_trsm_gflops,
+            cpu_gflops: c.profile.cpu_gflops,
+        },
+        None => TunedProfile::safe_defaults(dims.m, total),
+    }
+}
+
+// ---- adaptive re-planning (step 4: the coordinator's in-flight loop) ---
+
+/// Live rates + stall profile observed over one pipeline segment.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveObs {
+    /// Segment wall seconds.
+    pub wall_secs: f64,
+    /// Coordinator seconds stalled on `aio_read` (Phase::ReadWait).
+    pub read_wait_secs: f64,
+    /// Coordinator seconds stalled on device results (Phase::RecvWait).
+    pub recv_wait_secs: f64,
+    /// Effective disk bandwidth from the reader engine's own accounting.
+    pub disk_mbps: f64,
+    /// Observed lane trsm rate (device seconds vs trsm flops).
+    pub trsm_gflops: f64,
+    /// Observed coordinator S-loop rate (sloop seconds vs its flops).
+    pub cpu_gflops: f64,
+    /// Observed staging-copy bandwidth (the emulated PCIe link).
+    pub pcie_gbps: f64,
+}
+
+/// Stall fraction below which the live profile counts as matching the
+/// model's prediction of a balanced pipeline — no re-plan.
+pub const STALL_THRESHOLD: f64 = 0.10;
+/// The DES veto: a directional switch is taken only if the model does
+/// not predict the candidate to be worse than staying put by more than
+/// this factor (the model cannot see the sequential-locality gains that
+/// motivate growing, so it guards rather than drives).
+const VETO_FACTOR: f64 = 1.02;
+const MIN_BLOCK: usize = 64;
+const MAX_BLOCK: usize = 1 << 20;
+
+/// Decide a new block size for the remaining work, or `None` to keep the
+/// current one. `dims.m` must be the *remaining* SNP columns.
+pub fn replan_block(
+    obs: &LiveObs,
+    dims: Dims,
+    cur_block: usize,
+    ngpus: usize,
+    host_buffers: usize,
+    device_buffers: usize,
+) -> Option<usize> {
+    if obs.wall_secs <= 0.0 {
+        return None;
+    }
+    let read_frac = obs.read_wait_secs / obs.wall_secs;
+    let recv_frac = obs.recv_wait_secs / obs.wall_secs;
+    // Model prediction for a healthy multibuffered pipeline: neither
+    // stall dominates. Within threshold → observed matches → keep.
+    if read_frac < STALL_THRESHOLD && recv_frac < STALL_THRESHOLD {
+        return None;
+    }
+    let rates = [obs.disk_mbps, obs.trsm_gflops, obs.cpu_gflops, obs.pcie_gbps];
+    if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
+        return None;
+    }
+    let grow = read_frac >= recv_frac; // read-starved → larger blocks
+    let raw = if grow { cur_block.saturating_mul(2) } else { cur_block / 2 };
+    let clamp = |b: usize| -> usize {
+        let b = b.clamp(MIN_BLOCK.min(dims.m), MAX_BLOCK.min(dims.m));
+        ((b / ngpus) * ngpus).max(ngpus)
+    };
+    let cand = clamp(raw);
+    let cur = clamp(cur_block);
+    if cand == cur {
+        return None;
+    }
+    let profile = HardwareProfile {
+        name: "live",
+        gpu_trsm_gflops: obs.trsm_gflops,
+        cpu_gflops: obs.cpu_gflops,
+        pcie_gbps: obs.pcie_gbps,
+        disk_mbps: obs.disk_mbps,
+        probabel_gflops: 0.1,
+    };
+    let predict_at = |block: usize| -> Option<f64> {
+        let cfg = SimConfig {
+            dims,
+            block,
+            ngpus,
+            host_buffers: host_buffers.clamp(2, 8),
+            profile,
+        };
+        simulate_cugwas_with(&cfg, device_buffers.clamp(2, 8))
+            .ok()
+            .map(|r| r.total_secs)
+            .filter(|s| s.is_finite())
+    };
+    let p_cur = predict_at(cur)?;
+    let p_cand = predict_at(cand)?;
+    if p_cand <= p_cur * VETO_FACTOR {
+        Some(cand)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::probe::KernelRates;
+    use std::collections::BTreeMap;
+
+    fn rates() -> ProbedRates {
+        let mut kernels = BTreeMap::new();
+        kernels.insert(1, KernelRates { trsm_gflops: 2.0, gemm_gflops: 2.5 });
+        kernels.insert(2, KernelRates { trsm_gflops: 3.6, gemm_gflops: 4.5 });
+        kernels.insert(4, KernelRates { trsm_gflops: 6.0, gemm_gflops: 8.0 });
+        ProbedRates {
+            disk_mbps: 120.0,
+            disk_bytes: 8 << 20,
+            pcie_gbps: 8.0,
+            kernels,
+            reliable: true,
+        }
+    }
+
+    #[test]
+    fn planner_inverts_the_model() {
+        // The profile the planner picks must be the one the DES simulates
+        // fastest — recompute every prediction independently and check
+        // the argmin matches.
+        let dims = Dims::new(256, 3, 4096).unwrap();
+        let opts = PlanOpts { total_threads: 4, max_lanes: 2, host_mem_bytes: 0, max_block: 2048 };
+        let r = rates();
+        let chosen = plan(&r, dims, &opts);
+        let mut best = f64::INFINITY;
+        let mut best_c = None;
+        for c in candidates(&r, dims, &opts) {
+            let secs = predict(&c, dims).unwrap();
+            if secs < best {
+                best = secs;
+                best_c = Some(c);
+            }
+        }
+        let best_c = best_c.expect("non-empty grid");
+        assert_eq!(chosen.block, best_c.block);
+        assert_eq!(chosen.host_buffers, best_c.host_buffers);
+        assert_eq!(chosen.device_buffers, best_c.device_buffers);
+        assert_eq!(chosen.ngpus, best_c.ngpus);
+        assert_eq!(chosen.lane_threads, best_c.lane_threads);
+        assert!((chosen.predicted_secs - best).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_probe_falls_back_to_safe_defaults() {
+        let dims = Dims::new(64, 2, 100).unwrap();
+        let opts = PlanOpts { total_threads: 2, ..PlanOpts::default() };
+        for bad in [
+            ProbedRates { disk_mbps: 0.0, ..rates() },
+            ProbedRates { reliable: false, ..rates() },
+            ProbedRates { kernels: BTreeMap::new(), ..rates() },
+            ProbedRates { pcie_gbps: f64::NAN, ..rates() },
+        ] {
+            let p = plan(&bad, dims, &opts);
+            assert_eq!(p, TunedProfile::safe_defaults(100, 2), "probe: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn candidates_respect_memory_cap_and_block_bounds() {
+        let dims = Dims::new(256, 3, 4096).unwrap();
+        let mut opts =
+            PlanOpts { total_threads: 4, max_lanes: 2, host_mem_bytes: 0, max_block: 2048 };
+        let all = candidates(&rates(), dims, &opts);
+        assert!(!all.is_empty());
+        for c in &all {
+            assert!(c.block <= 2048 && c.block % c.ngpus == 0);
+            assert!(c.coord_threads >= 1);
+        }
+        // A tight cap prunes the big-block candidates but never empties
+        // the space entirely at the small end.
+        opts.host_mem_bytes = 8 * 1024 * (256 + 4) * 3; // ≈ 3 host buffers of 1024 cols
+        let capped = candidates(&rates(), dims, &opts);
+        assert!(!capped.is_empty());
+        assert!(capped.iter().all(|c| c.block < 2048));
+        assert!(capped.len() < all.len());
+    }
+
+    fn obs() -> LiveObs {
+        LiveObs {
+            wall_secs: 10.0,
+            read_wait_secs: 0.2,
+            recv_wait_secs: 0.2,
+            disk_mbps: 80.0,
+            trsm_gflops: 4.0,
+            cpu_gflops: 4.0,
+            pcie_gbps: 8.0,
+        }
+    }
+
+    #[test]
+    fn balanced_pipeline_is_left_alone() {
+        let dims = Dims::new(256, 3, 100_000).unwrap();
+        assert_eq!(replan_block(&obs(), dims, 1024, 1, 3, 2), None);
+    }
+
+    #[test]
+    fn read_starved_grows_the_block() {
+        let dims = Dims::new(256, 3, 100_000).unwrap();
+        let o = LiveObs { read_wait_secs: 6.0, ..obs() };
+        assert_eq!(replan_block(&o, dims, 1024, 1, 3, 2), Some(2048));
+        // Multi-lane: the new block still divides across lanes.
+        let switched = replan_block(&o, dims, 1024, 2, 3, 2).unwrap();
+        assert_eq!(switched % 2, 0);
+    }
+
+    #[test]
+    fn compute_starved_shrinks_the_block() {
+        let dims = Dims::new(256, 3, 100_000).unwrap();
+        let o = LiveObs { recv_wait_secs: 6.0, ..obs() };
+        assert_eq!(replan_block(&o, dims, 1024, 1, 3, 2), Some(512));
+    }
+
+    #[test]
+    fn degenerate_observations_never_switch() {
+        let dims = Dims::new(256, 3, 100_000).unwrap();
+        let o = LiveObs { read_wait_secs: 6.0, disk_mbps: 0.0, ..obs() };
+        assert_eq!(replan_block(&o, dims, 1024, 1, 3, 2), None);
+        let o = LiveObs { wall_secs: 0.0, ..obs() };
+        assert_eq!(replan_block(&o, dims, 1024, 1, 3, 2), None);
+        // Already at the floor/ceiling → no switch.
+        let o = LiveObs { recv_wait_secs: 6.0, ..obs() };
+        assert_eq!(replan_block(&o, dims, MIN_BLOCK, 1, 3, 2), None);
+    }
+}

@@ -1,0 +1,255 @@
+//! Probe: short calibration runs that measure what this machine (and
+//! this dataset's storage) can actually do. The numbers feed the planner
+//! — and, re-measured live per segment, the adaptive re-planner.
+//!
+//! Three measurements:
+//!
+//! * **disk** — [`crate::storage::probe_read_bandwidth`] streams a
+//!   bounded prefix of the dataset's `xr.xrd` through the same aio
+//!   engine + read-ahead pattern the pipeline uses, honoring any
+//!   emulated-storage throttle;
+//! * **kernels** — the `linalg` trsm/gemm kernels (as a library, not a
+//!   bench) timed at every feasible thread count, so the planner can
+//!   price each lane-vs-S-loop thread split with a measured rate
+//!   instead of an interpolation;
+//! * **memcpy** — host copy bandwidth, the stand-in for the PCIe link
+//!   the native lanes cross.
+
+use crate::error::Result;
+use crate::linalg::{gemm, potrf, trsm_lower_left, Matrix};
+use crate::storage::{dataset::DatasetPaths, probe_read_bandwidth, Throttle, XrdFile};
+use crate::util::{threads, XorShift};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Below this many probed bytes the disk estimate is noise, not signal;
+/// the planner falls back to safe defaults instead of planning on it.
+pub const MIN_DISK_PROBE_BYTES: u64 = 1 << 20;
+
+/// Measured kernel rates at one thread count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelRates {
+    pub trsm_gflops: f64,
+    pub gemm_gflops: f64,
+}
+
+/// Everything the probe learned about this machine + dataset.
+#[derive(Debug, Clone)]
+pub struct ProbedRates {
+    /// Effective sequential disk read bandwidth (MB/s).
+    pub disk_mbps: f64,
+    /// Bytes the disk probe actually streamed.
+    pub disk_bytes: u64,
+    /// Host memcpy bandwidth (GB/s) — the emulated PCIe link.
+    pub pcie_gbps: f64,
+    /// Kernel rates keyed by thread count (every feasible split).
+    pub kernels: BTreeMap<usize, KernelRates>,
+    /// False when the dataset was too small (or the clock too coarse)
+    /// for the disk number to mean anything.
+    pub reliable: bool,
+}
+
+impl ProbedRates {
+    /// trsm rate at the largest probed thread count ≤ `threads`.
+    pub fn trsm_at(&self, threads: usize) -> f64 {
+        self.at(threads).map(|k| k.trsm_gflops).unwrap_or(0.0)
+    }
+
+    /// gemm rate at the largest probed thread count ≤ `threads`.
+    pub fn gemm_at(&self, threads: usize) -> f64 {
+        self.at(threads).map(|k| k.gemm_gflops).unwrap_or(0.0)
+    }
+
+    fn at(&self, threads: usize) -> Option<&KernelRates> {
+        self.kernels
+            .range(..=threads.max(1))
+            .next_back()
+            .or_else(|| self.kernels.iter().next())
+            .map(|(_, k)| k)
+    }
+
+    /// A probe the planner must not trust: unreliable disk numbers or
+    /// any non-positive (or non-finite) rate. Plans fall back to safe
+    /// defaults.
+    pub fn degenerate(&self) -> bool {
+        fn bad(x: f64) -> bool {
+            !x.is_finite() || x <= 0.0
+        }
+        !self.reliable
+            || bad(self.disk_mbps)
+            || bad(self.pcie_gbps)
+            || self.kernels.is_empty()
+            || self.kernels.values().any(|k| bad(k.trsm_gflops) || bad(k.gemm_gflops))
+    }
+}
+
+/// Probe configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeOpts {
+    /// Total compute threads to calibrate for (0 = all cores).
+    pub threads: usize,
+    /// Disk-probe read budget in bytes.
+    pub max_disk_bytes: u64,
+    /// Probe through an emulated storage throttle (plan for that device).
+    pub read_throttle: Option<Throttle>,
+    /// Smaller kernel/memcpy shapes — for tests and CI smoke.
+    pub quick: bool,
+}
+
+impl Default for ProbeOpts {
+    fn default() -> Self {
+        ProbeOpts { threads: 0, max_disk_bytes: 64 << 20, read_throttle: None, quick: false }
+    }
+}
+
+/// Run the full probe against a dataset directory.
+pub fn probe_dataset(dir: &Path, opts: &ProbeOpts) -> Result<ProbedRates> {
+    let paths = DatasetPaths::new(dir);
+    let xr = XrdFile::open(&paths.xr())?.with_throttle(opts.read_throttle);
+    let disk = probe_read_bandwidth(xr, opts.max_disk_bytes.max(1), 2)?;
+    let total = if opts.threads == 0 { threads::available() } else { opts.threads };
+    let kernels = probe_kernels(total, opts.quick)?;
+    let pcie_gbps = probe_memcpy_gbps(if opts.quick { 4 << 20 } else { 32 << 20 });
+    let mbps = disk.mbps();
+    // `secs` floor is about clock resolution, not measurement quality —
+    // a page-cached read of the minimum probe size can finish in tens
+    // of microseconds and still yield a usable (if flattering) rate.
+    let reliable =
+        disk.bytes >= MIN_DISK_PROBE_BYTES && disk.secs > 1e-5 && mbps.is_finite() && mbps > 0.0;
+    Ok(ProbedRates { disk_mbps: mbps, disk_bytes: disk.bytes, pcie_gbps, kernels, reliable })
+}
+
+/// Time the trsm/gemm kernels at 1, 2, 4, … and `total_threads` threads.
+/// Each rate is the kernel's effective GFlop/s under that per-thread
+/// budget — the exact quantity the DES profile wants.
+pub fn probe_kernels(total_threads: usize, quick: bool) -> Result<BTreeMap<usize, KernelRates>> {
+    let total = total_threads.max(1);
+    let mut ladder = vec![1usize];
+    while ladder.last().copied().unwrap_or(1) * 2 <= total {
+        let next = ladder.last().copied().unwrap_or(1) * 2;
+        ladder.push(next);
+    }
+    if !ladder.contains(&total) {
+        ladder.push(total);
+    }
+    let (nn, rhs) = if quick { (192, 96) } else { (512, 256) };
+    let mut rng = XorShift::new(0xCA11B8);
+    let spd = Matrix::rand_spd(nn, 4.0, &mut rng);
+    let l = potrf(&spd)?;
+    let a = Matrix::randn(nn, nn, &mut rng);
+    let b = Matrix::randn(nn, rhs, &mut rng);
+    let b0 = Matrix::randn(nn, rhs, &mut rng);
+    let reps = if quick { 1 } else { 2 };
+    let mut out = BTreeMap::new();
+    for &t in &ladder {
+        let _g = threads::with_budget(t);
+        let gemm_flops = 2.0 * (nn * nn * rhs) as f64;
+        let mut c = Matrix::zeros(nn, rhs);
+        gemm(1.0, &a, &b, 0.0, &mut c)?; // warm
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            gemm(1.0, &a, &b, 0.0, &mut c)?;
+        }
+        let gemm_gflops = gflops(gemm_flops, reps, t0.elapsed().as_secs_f64());
+
+        let trsm_flops = (nn * nn * rhs) as f64;
+        let mut x = b0.clone();
+        trsm_lower_left(&l, &mut x)?; // warm
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            x = b0.clone();
+            trsm_lower_left(&l, &mut x)?;
+        }
+        let trsm_gflops = gflops(trsm_flops, reps, t0.elapsed().as_secs_f64());
+        out.insert(t, KernelRates { trsm_gflops, gemm_gflops });
+    }
+    Ok(out)
+}
+
+/// Host copy bandwidth in GB/s over a `bytes`-sized buffer.
+pub fn probe_memcpy_gbps(bytes: usize) -> f64 {
+    let elems = (bytes / 8).max(1);
+    let src = vec![1.0f64; elems];
+    let mut dst = vec![0.0f64; elems];
+    dst.copy_from_slice(&src); // warm / fault pages
+    let reps = 3u32;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        dst.copy_from_slice(&src);
+    }
+    std::hint::black_box(&dst);
+    let secs = t0.elapsed().as_secs_f64();
+    if secs > 0.0 {
+        (elems * 8) as f64 * reps as f64 / secs / 1e9
+    } else {
+        0.0
+    }
+}
+
+fn gflops(flops: f64, reps: u32, total_secs: f64) -> f64 {
+    let per = total_secs / reps as f64;
+    if per > 0.0 {
+        flops / per / 1e9
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_probe_yields_positive_rates_per_thread_count() {
+        let rates = probe_kernels(2, true).unwrap();
+        assert!(rates.contains_key(&1));
+        assert!(rates.contains_key(&2));
+        for k in rates.values() {
+            assert!(k.trsm_gflops > 0.0 && k.gemm_gflops > 0.0, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn rate_lookup_floors_to_probed_counts() {
+        let mut kernels = BTreeMap::new();
+        kernels.insert(1, KernelRates { trsm_gflops: 1.0, gemm_gflops: 1.5 });
+        kernels.insert(4, KernelRates { trsm_gflops: 3.0, gemm_gflops: 4.0 });
+        let r = ProbedRates {
+            disk_mbps: 100.0,
+            disk_bytes: 2 << 20,
+            pcie_gbps: 8.0,
+            kernels,
+            reliable: true,
+        };
+        assert_eq!(r.trsm_at(1), 1.0);
+        assert_eq!(r.trsm_at(3), 1.0, "floors to the largest probed count ≤ 3");
+        assert_eq!(r.trsm_at(4), 3.0);
+        assert_eq!(r.gemm_at(100), 4.0);
+        assert_eq!(r.trsm_at(0), 1.0, "clamps up to the smallest probed count");
+        assert!(!r.degenerate());
+    }
+
+    #[test]
+    fn degenerate_probes_are_flagged() {
+        let mut kernels = BTreeMap::new();
+        kernels.insert(1, KernelRates { trsm_gflops: 1.0, gemm_gflops: 1.0 });
+        let good = ProbedRates {
+            disk_mbps: 50.0,
+            disk_bytes: 2 << 20,
+            pcie_gbps: 8.0,
+            kernels: kernels.clone(),
+            reliable: true,
+        };
+        assert!(!good.degenerate());
+        assert!(ProbedRates { disk_mbps: 0.0, ..good.clone() }.degenerate());
+        assert!(ProbedRates { reliable: false, ..good.clone() }.degenerate());
+        assert!(ProbedRates { kernels: BTreeMap::new(), ..good.clone() }.degenerate());
+        assert!(ProbedRates { disk_mbps: f64::NAN, ..good }.degenerate());
+    }
+
+    #[test]
+    fn memcpy_probe_is_positive() {
+        assert!(probe_memcpy_gbps(1 << 20) > 0.0);
+    }
+}

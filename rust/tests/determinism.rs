@@ -56,6 +56,33 @@ fn pipeline_results_are_bit_identical_across_thread_counts() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// One cell of the CI determinism matrix: CUGWAS_DET_THREADS ×
+/// CUGWAS_DET_LANES select a configuration from the environment, and its
+/// `r.xrd` must be byte-identical to the single-thread run of the same
+/// lane count. CI fans this out over threads ∈ {1,2,8} × lanes ∈ {1,2}
+/// on every push, so the bit-identical guarantee is enforced there, not
+/// just locally. Without the env vars it checks the 2-thread/1-lane cell.
+#[test]
+fn matrix_cell_from_env_is_bit_identical() {
+    let threads: usize = std::env::var("CUGWAS_DET_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let lanes: usize = std::env::var("CUGWAS_DET_LANES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let dir = tmpdir(&format!("matrix_t{threads}_l{lanes}"));
+    let dims = Dims::new(96, 2, 2048).unwrap();
+    generate(&dir, dims, 256, 99).unwrap();
+    let mutate = |c: &mut PipelineConfig| c.ngpus = lanes;
+    let (ref_bytes, ref_diff) = results_at(&dir, 1024, 1, mutate);
+    let (bytes, diff) = results_at(&dir, 1024, threads, mutate);
+    assert_eq!(bytes, ref_bytes, "r.xrd changed at threads={threads}, lanes={lanes}");
+    assert_eq!(diff.to_bits(), ref_diff.to_bits());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn fused_modes_and_multi_lane_are_bit_identical_across_thread_counts() {
     for (tag, mode, ngpus) in [

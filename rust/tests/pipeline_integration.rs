@@ -197,6 +197,11 @@ fn f32_results_file_roundtrips_with_precision_loss_bounded() {
 
 // ---- checkpoint / resume (long runs must survive interruption) ----------
 
+/// v2 journal layout: 24-byte header (magic + m + block) then 16-byte
+/// (col0, ncols) records.
+const JHEADER: usize = 24;
+const JRECORD: usize = 16;
+
 #[test]
 fn resume_skips_journaled_blocks_and_result_is_complete() {
     use cugwas::storage::dataset::DatasetPaths;
@@ -211,11 +216,11 @@ fn resume_skips_journaled_blocks_and_result_is_complete() {
     assert_eq!(r1.blocks, 5);
     let paths = DatasetPaths::new(&dir);
     let journal = std::fs::read(paths.progress()).unwrap();
-    assert_eq!(journal.len(), 5 * 8);
+    assert_eq!(journal.len(), JHEADER + 5 * JRECORD);
 
     // Simulate a crash after 2 blocks: truncate the journal and clobber
     // the "unfinished" blocks' results with garbage.
-    std::fs::write(paths.progress(), &journal[..2 * 8]).unwrap();
+    std::fs::write(paths.progress(), &journal[..JHEADER + 2 * JRECORD]).unwrap();
     {
         use cugwas::storage::XrdFile;
         let f = XrdFile::open_rw(&paths.results()).unwrap();
@@ -231,7 +236,7 @@ fn resume_skips_journaled_blocks_and_result_is_complete() {
     verify_against_oracle(&dir, 1e-8).unwrap();
     // Journal now covers everything.
     let journal = std::fs::read(paths.progress()).unwrap();
-    assert_eq!(journal.len(), 5 * 8);
+    assert_eq!(journal.len(), JHEADER + 5 * JRECORD);
 
     // A third resume is a no-op.
     let r3 = run(&cfg).unwrap();
@@ -255,23 +260,33 @@ fn non_resume_run_clears_stale_journal() {
     assert_eq!(r.blocks, 2);
     verify_against_oracle(&dir, 1e-8).unwrap();
     let journal = std::fs::read(DatasetPaths::new(&dir).progress()).unwrap();
-    assert_eq!(journal.len(), 2 * 8);
+    assert_eq!(journal.len(), JHEADER + 2 * JRECORD);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
-fn resume_with_changed_geometry_restarts_clean() {
+fn resume_with_changed_block_size_is_refused() {
+    // The journal header pins the run parameters that define block
+    // indices. Resuming with a different block size used to silently
+    // restart (or worse, mis-index); now it must fail loudly with
+    // Error::Config, and tell the operator how to proceed.
+    use cugwas::storage::dataset::DatasetPaths;
     let dims = Dims::new(20, 2, 24).unwrap();
     let dir = tmpdir("regeom");
     generate(&dir, dims, 8, 3).unwrap();
     let mut cfg = PipelineConfig::new(&dir, 8);
     cfg.resume = true;
     run(&cfg).unwrap();
-    // Different block size ⇒ different r.xrd geometry ⇒ journal invalid.
+    // Different block size ⇒ parameter mismatch ⇒ refusal.
     let mut cfg2 = PipelineConfig::new(&dir, 12);
     cfg2.resume = true;
+    let err = run(&cfg2).unwrap_err();
+    assert!(matches!(err, cugwas::error::Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("block=8"), "{err}");
+    // Deleting the journal (the remedy the error names) starts clean.
+    std::fs::remove_file(DatasetPaths::new(&dir).progress()).unwrap();
     let r = run(&cfg2).unwrap();
-    assert_eq!(r.blocks, 2); // 24/12 — full recompute, not a skip
+    assert_eq!(r.blocks, 2); // 24/12 — full recompute
     verify_against_oracle(&dir, 1e-8).unwrap();
     std::fs::remove_dir_all(&dir).unwrap();
 }

@@ -1,0 +1,141 @@
+//! End-to-end autotuner coverage: probe a real dataset file, plan from
+//! the probed rates, apply the profile to a live run, and exercise the
+//! adaptive re-planning path — including crash-resume across an
+//! adaptive run's mixed-width journal records.
+
+use cugwas::coordinator::{run, verify_against_oracle, Phase, PipelineConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::dataset::DatasetPaths;
+use cugwas::storage::{generate, Throttle};
+use cugwas::tune::{plan, probe_dataset, PlanOpts, ProbeOpts, TunedProfile};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_tune_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn quick_probe() -> ProbeOpts {
+    ProbeOpts { threads: 2, max_disk_bytes: 8 << 20, read_throttle: None, quick: true }
+}
+
+#[test]
+fn tune_plan_apply_roundtrip_matches_oracle() {
+    // 128 × 2048 f64 = 2 MiB — big enough for a reliable disk probe.
+    let dir = tmpdir("roundtrip");
+    let dims = Dims::new(128, 3, 2048).unwrap();
+    generate(&dir, dims, 256, 7).unwrap();
+
+    let rates = probe_dataset(&dir, &quick_probe()).unwrap();
+    assert!(rates.reliable, "2 MiB dataset must probe reliably");
+    assert!(rates.disk_mbps > 0.0 && rates.pcie_gbps > 0.0);
+
+    let opts = PlanOpts { total_threads: 2, max_lanes: 1, host_mem_bytes: 0, max_block: 1024 };
+    let profile = plan(&rates, dims, &opts);
+    assert!(profile.predicted().is_some(), "reliable probe must yield a prediction");
+    assert!(profile.block >= 64 && profile.block <= 1024);
+
+    // Persist + reload (what `run --profile` does), then stream with it.
+    let ppath = dir.join("tuned.toml");
+    profile.save(&ppath).unwrap();
+    let loaded = TunedProfile::load(&ppath).unwrap();
+    assert_eq!(loaded, profile);
+
+    let mut cfg = PipelineConfig::new(&dir, loaded.block);
+    cfg.ngpus = loaded.ngpus;
+    cfg.host_buffers = loaded.host_buffers;
+    cfg.device_buffers = loaded.device_buffers;
+    cfg.threads = loaded.threads;
+    cfg.lane_threads = loaded.lane_threads;
+    let report = run(&cfg).unwrap();
+    assert_eq!(report.snps, dims.m);
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn degenerate_probe_on_tiny_dataset_falls_back_to_safe_defaults() {
+    // 16 × 8 f64 = 1 KiB — far below the probe's reliability floor. The
+    // plan must come back as the paper defaults, and still run fine.
+    let dir = tmpdir("tiny");
+    let dims = Dims::new(16, 2, 8).unwrap();
+    generate(&dir, dims, 4, 5).unwrap();
+    let rates = probe_dataset(&dir, &quick_probe()).unwrap();
+    assert!(!rates.reliable);
+    let profile = plan(&rates, dims, &PlanOpts { total_threads: 2, ..PlanOpts::default() });
+    assert_eq!(profile, TunedProfile::safe_defaults(8, 2));
+    let mut cfg = PipelineConfig::new(&dir, profile.block);
+    cfg.host_buffers = profile.host_buffers;
+    cfg.device_buffers = profile.device_buffers;
+    run(&cfg).unwrap();
+    verify_against_oracle(&dir, 1e-8).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Parse the v2 journal's records (the test double-checks the on-disk
+/// format the adaptive path journals its mixed-width windows in).
+fn journal_ranges(path: &std::path::Path) -> Vec<(u64, u64)> {
+    let bytes = std::fs::read(path).unwrap();
+    assert!(bytes.len() >= 24 && &bytes[..8] == b"CGWJRNL2", "v2 journal header");
+    bytes[24..]
+        .chunks_exact(16)
+        .map(|r| {
+            (
+                u64::from_le_bytes(r[..8].try_into().unwrap()),
+                u64::from_le_bytes(r[8..].try_into().unwrap()),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn adaptive_run_is_correct_observed_in_metrics_and_resumable_mid_switch() {
+    // Throttle reads hard so the pipeline is demonstrably read-starved:
+    // the re-planner evaluates at every segment boundary (visible as
+    // Phase::Replan in the metrics) and may grow the block mid-run.
+    let dir = tmpdir("adapt");
+    let dims = Dims::new(64, 2, 4096).unwrap(); // xr = 2 MiB
+    generate(&dir, dims, 256, 13).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 128);
+    cfg.read_throttle = Some(Throttle { bytes_per_sec: 4e6 });
+    cfg.adapt = true;
+    cfg.adapt_every = 4;
+    cfg.resume = true; // journal every window
+    let report = run(&cfg).unwrap();
+    assert_eq!(report.snps, dims.m);
+    assert!(
+        report.metrics.count(Phase::Replan) >= 1,
+        "re-plan evaluations must appear in the metrics"
+    );
+    verify_against_oracle(&dir, 1e-8).unwrap();
+
+    // Crash-resume across whatever geometry the adaptive run journaled:
+    // keep the first half of the records, clobber every column they do
+    // NOT cover, and resume with the ORIGINAL block size.
+    let paths = DatasetPaths::new(&dir);
+    let ranges = journal_ranges(&paths.progress());
+    assert_eq!(ranges.iter().map(|&(_, n)| n).sum::<u64>(), dims.m as u64);
+    let keep = ranges.len() / 2;
+    let bytes = std::fs::read(paths.progress()).unwrap();
+    std::fs::write(&paths.progress(), &bytes[..24 + keep * 16]).unwrap();
+    {
+        use cugwas::storage::XrdFile;
+        let covered: Vec<(u64, u64)> = ranges[..keep].to_vec();
+        let f = XrdFile::open_rw(&paths.results()).unwrap();
+        let p = dims.pl as u64 + 1;
+        for col in 0..dims.m as u64 {
+            if !covered.iter().any(|&(c0, n)| col >= c0 && col < c0 + n) {
+                f.write_cols(col, 1, &vec![f64::NAN; p as usize]).unwrap();
+            }
+        }
+    }
+    let report2 = run(&cfg).unwrap();
+    assert!(report2.blocks >= 1, "uncovered columns must be recomputed");
+    verify_against_oracle(&dir, 1e-8).unwrap();
+
+    // A completed adaptive run resumes as a no-op.
+    let report3 = run(&cfg).unwrap();
+    assert_eq!(report3.blocks, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
