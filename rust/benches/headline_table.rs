@@ -124,6 +124,9 @@ fn main() {
         ]);
         json_line(key, wall, "s");
     }
+    // The headline streaming throughput: what the perf-trajectory gate
+    // (tools/bench_trend.py) compares across pushes.
+    json_line("live_cugwas_snps_per_sec", cu.snps_per_sec, "snps/s");
     live.print();
     println!(
         "\nnote: live lanes share this machine's CPU cores, so the live table shows\n\

@@ -50,6 +50,7 @@ fn main() {
             threads: 0,
             spool: None,
             watch: false,
+            auto_tune: false, // measure the configured knobs, not a plan
             jobs: jobs(),
         };
         let rep = serve(&cfg).expect("service run");

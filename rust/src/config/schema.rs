@@ -39,6 +39,7 @@
 //! threads = 0          # compute threads across all workers (0 = all cores)
 //! spool = "spool"      # optional: watched directory of job TOMLs
 //! watch = false        # keep serving after the queue drains
+//! auto_tune = true     # probe + plan each dataset on first contact
 //!
 //! [job.alpha]
 //! dataset = "data/s1"
@@ -56,7 +57,6 @@ use crate::error::{Error, Result};
 use crate::gwas::problem::Dims;
 use crate::service::JobSpec;
 use crate::storage::Throttle;
-use crate::tune::TunedProfile;
 use std::path::{Path, PathBuf};
 
 /// Simulation section.
@@ -134,7 +134,7 @@ impl RunConfig {
         // A tuned profile's knobs become the *defaults*; explicit keys in
         // this config still win (same precedence as `run --profile`).
         let base =
-            load_profile(doc, "pipeline")?.unwrap_or_else(|| TunedProfile::safe_defaults(m, 0));
+            crate::tune::profile::load_or_default(profile_path(doc, "pipeline")?.as_deref(), m, 0)?;
         let block = doc.int_or("pipeline", "block", base.block as i64)? as usize;
         let ngpus = int_in(doc, "pipeline", "ngpus", base.ngpus as i64, 1, 4096)? as usize;
         let host_buffers =
@@ -217,8 +217,11 @@ fn throttle_of(mbps: f64) -> Option<Throttle> {
     }
 }
 
-/// Load the tuned profile a section's `profile` key points at (if any).
-fn load_profile(doc: &Doc, section: &str) -> Result<Option<TunedProfile>> {
+/// Resolve a section's `profile` key to a path (`None` when absent or
+/// empty). Loading goes through [`crate::tune::profile::load_or_default`]
+/// — the same single error path `run --profile` and the service's
+/// first-contact tuner use.
+fn profile_path(doc: &Doc, section: &str) -> Result<Option<PathBuf>> {
     match doc.get(section, "profile") {
         None => Ok(None),
         Some(v) => {
@@ -226,9 +229,10 @@ fn load_profile(doc: &Doc, section: &str) -> Result<Option<TunedProfile>> {
                 .as_str()
                 .ok_or_else(|| Error::Config(format!("{section}.profile: expected string")))?;
             if path.is_empty() {
-                return Ok(None);
+                Ok(None)
+            } else {
+                Ok(Some(PathBuf::from(path)))
             }
-            TunedProfile::load(Path::new(path)).map(Some)
         }
     }
 }
@@ -283,14 +287,9 @@ fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
         .as_str()
         .ok_or_else(|| Error::Config(format!("job '{name}': dataset must be a string")))?;
     let mut spec = JobSpec::new(name, dataset);
-    if let Some(tuned) = load_profile(doc, section)? {
-        spec.block = tuned.block;
-        spec.ngpus = tuned.ngpus;
-        spec.host_buffers = tuned.host_buffers;
-        spec.device_buffers = tuned.device_buffers;
-        spec.threads = tuned.threads;
-        spec.lane_threads = tuned.lane_threads;
-        spec.predicted_secs = tuned.predicted();
+    if let Some(path) = profile_path(doc, section)? {
+        let tuned = crate::tune::profile::load_or_default(Some(&path), usize::MAX, 0)?;
+        spec.apply_profile(&tuned);
     }
     spec.block = int_in(doc, section, "block", spec.block as i64, 1, 1 << 30)? as usize;
     spec.ngpus = int_in(doc, section, "ngpus", spec.ngpus as i64, 1, 4096)? as usize;
@@ -301,6 +300,16 @@ fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
     spec.threads = int_in(doc, section, "threads", spec.threads as i64, 0, 4096)? as usize;
     spec.lane_threads =
         int_in(doc, section, "lane_threads", spec.lane_threads as i64, 0, 4096)? as usize;
+    // Record which knobs the operator pinned — the service's first-
+    // contact tuner must not override an explicit key.
+    spec.pins = crate::service::KnobPins {
+        block: doc.get(section, "block").is_some(),
+        ngpus: doc.get(section, "ngpus").is_some(),
+        host_buffers: doc.get(section, "host_buffers").is_some(),
+        device_buffers: doc.get(section, "device_buffers").is_some(),
+        threads: doc.get(section, "threads").is_some(),
+        lane_threads: doc.get(section, "lane_threads").is_some(),
+    };
     spec.adapt = doc.bool_or(section, "adapt", false)?;
     spec.adapt_every =
         int_in(doc, section, "adapt_every", spec.adapt_every as i64, 1, 1 << 30)? as usize;
@@ -330,6 +339,13 @@ pub struct ServiceConfig {
     pub spool: Option<PathBuf>,
     /// Keep polling the spool after the queue drains (a true daemon).
     pub watch: bool,
+    /// Tune each dataset on first contact: load `<dataset>/tuned.toml`
+    /// if present, else run a cheap probe + plan and persist it, filling
+    /// the job's unpinned knobs and feeding the prediction to
+    /// shortest-job-first admission. Explicit job keys always win.
+    /// `false` streams *exactly* the configured knobs — no probing and
+    /// no profile application (an explicit `profile` key still works).
+    pub auto_tune: bool,
     /// Jobs from `[job.*]` sections, in section (alphabetical) order —
     /// `priority` is the scheduling knob, not file order.
     pub jobs: Vec<JobSpec>,
@@ -363,7 +379,7 @@ impl ServiceConfig {
             }
         }
         for key in doc.keys_in("service") {
-            if !["workers", "mem_budget_mb", "cache_mb", "threads", "spool", "watch"]
+            if !["workers", "mem_budget_mb", "cache_mb", "threads", "spool", "watch", "auto_tune"]
                 .contains(&key)
             {
                 return Err(Error::Config(format!("unknown key service.{key}")));
@@ -381,6 +397,7 @@ impl ServiceConfig {
             })?)),
         };
         let watch = doc.bool_or("service", "watch", false)?;
+        let auto_tune = doc.bool_or("service", "auto_tune", true)?;
         let mut jobs = Vec::new();
         for section in doc.sections() {
             if let Some(name) = section.strip_prefix("job.") {
@@ -394,6 +411,7 @@ impl ServiceConfig {
             threads,
             spool,
             watch,
+            auto_tune,
             jobs,
         })
     }
@@ -418,6 +436,7 @@ impl ServiceConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tune::TunedProfile;
 
     #[test]
     fn defaults_are_sane() {
@@ -533,7 +552,23 @@ artifacts = "arts"
         assert_eq!(c.threads, 0, "compute threads default to all cores");
         assert!(c.spool.is_none());
         assert!(!c.watch);
+        assert!(c.auto_tune, "first-contact tuning is on by default");
         assert!(c.jobs.is_empty());
+    }
+
+    #[test]
+    fn auto_tune_can_be_disabled_and_pins_track_explicit_keys() {
+        let c = ServiceConfig::from_toml(
+            "[service]\nauto_tune = false\n\n[job.a]\ndataset = \"d\"\nblock = 64\nthreads = 2\n",
+        )
+        .unwrap();
+        assert!(!c.auto_tune);
+        let pins = c.jobs[0].pins;
+        assert!(pins.block && pins.threads);
+        assert!(!pins.ngpus && !pins.host_buffers && !pins.device_buffers && !pins.lane_threads);
+        // A job with no explicit knobs pins nothing.
+        let c = ServiceConfig::from_toml("[job.b]\ndataset = \"d\"\n").unwrap();
+        assert_eq!(c.jobs[0].pins, crate::service::KnobPins::default());
     }
 
     #[test]
@@ -589,6 +624,7 @@ artifacts = "arts"
             lane_threads: 3,
             predicted_secs: 7.5,
             disk_mbps: 100.0,
+            disk_lat_secs: 0.0,
             pcie_gbps: 8.0,
             trsm_gflops: 4.0,
             cpu_gflops: 4.0,

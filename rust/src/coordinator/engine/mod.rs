@@ -1,0 +1,630 @@
+//! The unified streaming engine — the long-lived execution core behind
+//! both `cugwas run` and `cugwas serve`.
+//!
+//! The paper's sustained-peak result comes from keeping ONE pipeline
+//! saturated end to end. The old coordinator tore that pipeline down and
+//! rebuilt it at every adaptive segment boundary and for every queued
+//! job; this module owns the expensive resources with an explicit
+//! lifecycle instead:
+//!
+//! ```text
+//! Engine::open(cfg)          preprocess, aio reader, lane/pool slots
+//!   ├─ execute(cfg)          one full run: segments + adaptation
+//!   ├─ execute(cfg)          … next job on the same dataset: the
+//!   │                        preprocess, reader, lanes and pools are
+//!   │                        still warm (serve's back-to-back reuse)
+//!   └─ execute_plans(cfg,…)  explicit segment schedule (tests/benches)
+//! ```
+//!
+//! Between segments only the resources a [`SegmentPlan`] actually
+//! changes are resized: native lanes are block-size-agnostic, so a block
+//! switch re-rings the buffer pools but keeps the lane threads (and
+//! their warmed kernel workers) alive; a lane-thread or channel-depth
+//! switch respawns lanes but keeps the pools; and a boundary that
+//! changes nothing reuses everything. The in-flight re-planner
+//! ([`crate::tune::replan_knobs`]) now moves the full knob depth the
+//! offline planner searches — block size, host/device buffer counts and
+//! the lane-vs-S-loop thread split — with the DES pricing every
+//! candidate switch *including* its transition cost
+//! ([`crate::devsim::transition_secs`]).
+
+pub mod segment;
+
+use crate::coordinator::journal::{self, Journal};
+use crate::coordinator::lane::{Backend, DeviceLane, OffloadMode};
+use crate::coordinator::metrics::{Metrics, Phase};
+use crate::coordinator::pipeline::{validate, BackendKind, PipelineConfig, PipelineReport};
+use crate::coordinator::pool::BufPool;
+use crate::devsim::{sloop_flops, trsm_flops, SegmentKnobs};
+use crate::error::{Error, Result};
+use crate::gwas::preprocess::{preprocess, Preprocessed};
+use crate::gwas::problem::Dims;
+use crate::gwas::sloop::SloopScratch;
+use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
+use crate::storage::{
+    dataset, AioEngine, AioStats, BlockCache, Header, ReadProbe, Throttle, XrdFile,
+};
+use crate::tune::{fit_disk_latency, replan_knobs, LiveObs};
+use crate::util::threads;
+use segment::{run_segment, take_windows, SegmentCtx};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub use segment::SegmentPlan;
+
+/// Cumulative resource accounting of one engine — the observable proof
+/// of reuse (`tests/engine_adaptive.rs` asserts on it).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    /// Times the device-lane set was (re)spawned.
+    pub lane_builds: u64,
+    /// Times the buffer rings were (re)allocated.
+    pub pool_builds: u64,
+    /// Completed `execute`/`execute_plans` calls.
+    pub runs: u64,
+}
+
+/// What the current lane set was built for; a segment whose knobs hash
+/// to the same key keeps the lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct LaneKey {
+    ngpus: usize,
+    lane_threads: usize,
+    device_buffers: usize,
+    /// PJRT artifacts bake the chunk width in; native lanes are
+    /// block-size-agnostic (keyed as 0).
+    mb_gpu: usize,
+}
+
+/// What the current buffer rings were built for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PoolKey {
+    block: usize,
+    host_buffers: usize,
+    device_buffers: usize,
+    ngpus: usize,
+}
+
+/// Two-point live fit of the disk's per-request latency: once two
+/// segments have streamed at different request sizes, their per-request
+/// timings solve `t = lat + bytes/bw` — the in-flight analogue of the
+/// probe's two-window measurement, reusing the same
+/// [`fit_disk_latency`] solver.
+#[derive(Default)]
+struct DiskLatFit {
+    last: Option<ReadProbe>,
+    lat_secs: f64,
+    /// Asymptotic bandwidth from the fit (0 = no fit yet).
+    bw_mbps: f64,
+}
+
+impl DiskLatFit {
+    fn update(&mut self, delta: AioStats) {
+        if delta.ops == 0 {
+            return;
+        }
+        let cur = ReadProbe { bytes: delta.bytes, secs: delta.busy.as_secs_f64(), ops: delta.ops };
+        if let Some(prev) = self.last {
+            let per_op = |r: &ReadProbe| r.bytes as f64 / r.ops as f64;
+            let (small, big) =
+                if per_op(&prev) <= per_op(&cur) { (prev, cur) } else { (cur, prev) };
+            if let Some((lat, bw_bps)) = fit_disk_latency(&small, &big) {
+                self.lat_secs = lat;
+                self.bw_mbps = bw_bps / 1e6;
+            }
+        }
+        self.last = Some(cur);
+    }
+}
+
+/// Phase/engine counters at a segment boundary, for live-rate deltas.
+struct SegmentSnapshot {
+    read_wait: Duration,
+    recv_wait: Duration,
+    send: Duration,
+    sloop: Duration,
+    device: Duration,
+    reader: AioStats,
+}
+
+impl SegmentSnapshot {
+    fn take(metrics: &Metrics, reader: AioStats) -> SegmentSnapshot {
+        SegmentSnapshot {
+            read_wait: metrics.total(Phase::ReadWait),
+            recv_wait: metrics.total(Phase::RecvWait),
+            send: metrics.total(Phase::Send),
+            sloop: metrics.total(Phase::Sloop),
+            device: metrics.total(Phase::DeviceCompute),
+            reader,
+        }
+    }
+
+    /// Turn the counter deltas since this snapshot into live rates.
+    #[allow(clippy::too_many_arguments)]
+    fn observe(
+        &self,
+        metrics: &Metrics,
+        reader: AioStats,
+        wall_secs: f64,
+        n: usize,
+        pl: usize,
+        cols: usize,
+        lat: &DiskLatFit,
+    ) -> LiveObs {
+        let secs = |now: Duration, then: Duration| now.saturating_sub(then).as_secs_f64();
+        let rate = |units: f64, secs: f64| if secs > 0.0 { units / secs } else { 0.0 };
+        let device = secs(metrics.total(Phase::DeviceCompute), self.device);
+        let sloop = secs(metrics.total(Phase::Sloop), self.sloop);
+        let send = secs(metrics.total(Phase::Send), self.send);
+        let effective_mbps = reader.since(&self.reader).mbps();
+        LiveObs {
+            wall_secs,
+            read_wait_secs: secs(metrics.total(Phase::ReadWait), self.read_wait),
+            recv_wait_secs: secs(metrics.total(Phase::RecvWait), self.recv_wait),
+            disk_mbps: if lat.bw_mbps > 0.0 { lat.bw_mbps } else { effective_mbps },
+            disk_lat_secs: lat.lat_secs,
+            trsm_gflops: rate(trsm_flops(n, cols), device) / 1e9,
+            cpu_gflops: rate(sloop_flops(n, pl, cols), sloop) / 1e9,
+            pcie_gbps: rate((n * cols * 8) as f64, send) / 1e9,
+        }
+    }
+}
+
+/// The long-lived streaming engine (see module docs).
+pub struct Engine {
+    // ---- identity: what this engine was opened for ---------------------
+    dataset: PathBuf,
+    canonical: PathBuf,
+    mode: OffloadMode,
+    backend: BackendKind,
+    opened_block: usize,
+    opened_ngpus: usize,
+    read_throttle: Option<Throttle>,
+    cache: Option<Arc<BlockCache>>,
+    cache_dataset: Option<String>,
+    total_threads: usize,
+    // ---- long-lived resources ------------------------------------------
+    meta: dataset::Meta,
+    pre: Preprocessed,
+    backend_proto: Option<ArtifactEntry>,
+    reader: AioEngine,
+    lanes: Vec<DeviceLane>,
+    lane_key: Option<LaneKey>,
+    host_pool: BufPool,
+    result_pool: BufPool,
+    chunk_pools: Vec<BufPool>,
+    pool_key: Option<PoolKey>,
+    scratch: SloopScratch,
+    stats: EngineStats,
+}
+
+impl Engine {
+    /// Open an engine for `cfg`'s dataset: load the sidecars, run the
+    /// preprocessing (Listing 1.3 lines 1–7, with the full thread
+    /// budget — the lanes don't exist yet), and spin up the aio reader.
+    /// Lanes and pools are built lazily by the first segment.
+    pub fn open(cfg: &PipelineConfig) -> Result<Engine> {
+        validate(cfg)?;
+        let (meta, kin, xl, y) = dataset::load_sidecars(&cfg.dataset)?;
+        let dims = meta.dims;
+        let mb_gpu = cfg.block / cfg.ngpus;
+
+        // Resolve backend + the diagonal block size for preprocessing.
+        let (backend_proto, dinv_nb) = match &cfg.backend {
+            BackendKind::Native => (None, 0),
+            BackendKind::Pjrt { artifacts } => {
+                let manifest = Manifest::load(artifacts)?;
+                let kind = match cfg.mode {
+                    OffloadMode::Trsm => Kind::Trsm,
+                    OffloadMode::Block => Kind::Block,
+                    OffloadMode::BlockFull => Kind::BlockFull,
+                };
+                let entry = manifest
+                    .get(&ArtifactKey { kind, n: dims.n, pl: dims.pl, mb: mb_gpu })?
+                    .clone();
+                let nb = entry.nb;
+                (Some(entry), nb)
+            }
+        };
+
+        let total = if cfg.threads == 0 { threads::available() } else { cfg.threads };
+        let pre: Preprocessed = {
+            let _full = threads::with_budget(total);
+            preprocess(&kin, &xl, &y, dinv_nb)?
+        };
+
+        let paths = dataset::DatasetPaths::new(&cfg.dataset);
+        let xr = XrdFile::open(&paths.xr())?.with_throttle(cfg.read_throttle);
+        let reader = AioEngine::new(xr);
+        let canonical = dataset::canonical_key(&cfg.dataset);
+        let cache_dataset = cfg.cache.as_ref().map(|_| canonical.to_string_lossy().into_owned());
+
+        Ok(Engine {
+            dataset: cfg.dataset.clone(),
+            canonical,
+            mode: cfg.mode,
+            backend: cfg.backend.clone(),
+            opened_block: cfg.block,
+            opened_ngpus: cfg.ngpus,
+            read_throttle: cfg.read_throttle,
+            cache: cfg.cache.clone(),
+            cache_dataset,
+            total_threads: total,
+            meta,
+            pre,
+            backend_proto,
+            reader,
+            lanes: Vec::new(),
+            lane_key: None,
+            host_pool: BufPool::new(0, 0),
+            result_pool: BufPool::new(0, 0),
+            chunk_pools: Vec::new(),
+            pool_key: None,
+            scratch: SloopScratch::new(dims.pl),
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Cumulative resource accounting.
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Dataset dimensions the engine was opened on.
+    pub fn dims(&self) -> Dims {
+        self.meta.dims
+    }
+
+    /// Can this engine serve `cfg` without rebuilding its long-lived
+    /// resources? Same dataset (canonical identity), same offload mode,
+    /// same backend (PJRT additionally pins block/lanes — the artifact
+    /// and `Dinv` geometry bake the chunk width in), same resolved
+    /// thread budget, same read throttle and same shared cache. The
+    /// service's worker lanes use this to decide whether a back-to-back
+    /// job can ride the warm engine.
+    pub fn compatible(&self, cfg: &PipelineConfig) -> bool {
+        let total = if cfg.threads == 0 { threads::available() } else { cfg.threads };
+        let backend_ok = match (&self.backend, &cfg.backend) {
+            (BackendKind::Native, BackendKind::Native) => true,
+            (BackendKind::Pjrt { artifacts: a }, BackendKind::Pjrt { artifacts: b }) => {
+                // The artifact entry and `Dinv` geometry were resolved
+                // for the opening chunk width (block / ngpus) — both
+                // knobs must match or the cached entry is wrong.
+                a == b && cfg.block == self.opened_block && cfg.ngpus == self.opened_ngpus
+            }
+            _ => false,
+        };
+        let throttle_ok = match (self.read_throttle, cfg.read_throttle) {
+            (None, None) => true,
+            (Some(a), Some(b)) => a.bytes_per_sec == b.bytes_per_sec,
+            _ => false,
+        };
+        let cache_ok = match (&self.cache, &cfg.cache) {
+            (None, None) => true,
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        };
+        backend_ok
+            && throttle_ok
+            && cache_ok
+            && self.mode == cfg.mode
+            && self.total_threads == total
+            && self.canonical == dataset::canonical_key(&cfg.dataset)
+    }
+
+    /// Run one full study through the engine: stream every uncovered
+    /// column window, adapting the knobs at segment boundaries when
+    /// `cfg.adapt` is on. Repeated calls reuse the warm resources.
+    pub fn execute(&mut self, cfg: &PipelineConfig) -> Result<PipelineReport> {
+        self.run_with(cfg, None)
+    }
+
+    /// Run with an explicit segment schedule: each plan streams its
+    /// window count under its knobs, and any remainder streams under the
+    /// last plan's knobs (plus adaptation if `cfg.adapt`). This is the
+    /// determinism suite's lever for forcing mid-stream switches at
+    /// exact boundaries.
+    pub fn execute_plans(
+        &mut self,
+        cfg: &PipelineConfig,
+        plans: &[SegmentPlan],
+    ) -> Result<PipelineReport> {
+        self.run_with(cfg, Some(plans))
+    }
+
+    fn run_with(
+        &mut self,
+        cfg: &PipelineConfig,
+        plans: Option<&[SegmentPlan]>,
+    ) -> Result<PipelineReport> {
+        let out = self.run_inner(cfg, plans);
+        if out.is_err() {
+            // A failed run can leave lanes holding chunks and pools short
+            // of buffers; tear the streaming resources down so the next
+            // run (if any) rebuilds them clean.
+            self.teardown_streaming();
+        }
+        out
+    }
+
+    fn run_inner(
+        &mut self,
+        cfg: &PipelineConfig,
+        plans: Option<&[SegmentPlan]>,
+    ) -> Result<PipelineReport> {
+        validate(cfg)?;
+        if !self.compatible(cfg) {
+            return Err(Error::Config(
+                "engine was opened for a different dataset/backend/thread configuration \
+                 — open a fresh one"
+                    .into(),
+            ));
+        }
+        let dims = self.meta.dims;
+        let (n, p) = (dims.n, dims.p());
+
+        // Per-run outputs: results file + journal (resume validates the
+        // journal header; a mismatched results file restarts clean).
+        let paths = dataset::DatasetPaths::new(&self.dataset);
+        let r_header =
+            Header::new(p as u64, dims.m as u64, cfg.block.min(dims.m) as u64, self.meta.seed)?;
+        let fresh = |paths: &dataset::DatasetPaths| -> Result<(XrdFile, Journal)> {
+            let j = Journal::create(&paths.progress(), dims.m as u64, cfg.block as u64)?;
+            Ok((XrdFile::create(&paths.results(), r_header)?, j))
+        };
+        let (rfile, mut journal, done_ranges) = if cfg.resume {
+            let (journal, ranges) =
+                Journal::open_resume(&paths.progress(), dims.m as u64, cfg.block as u64)?;
+            match XrdFile::open_rw(&paths.results()) {
+                Ok(f) if *f.header() == r_header => (f, journal, ranges),
+                _ => {
+                    // Journaled progress points at a results file that no
+                    // longer matches — recompute everything.
+                    drop(journal);
+                    let (f, j) = fresh(&paths)?;
+                    (f, j, Vec::new())
+                }
+            }
+        } else {
+            let (f, j) = fresh(&paths)?;
+            (f, j, Vec::new())
+        };
+        let writer = AioEngine::new(rfile.with_throttle(cfg.write_throttle));
+
+        // Work list: the uncovered column ranges, streamed as windows.
+        let mut remaining: VecDeque<(u64, u64)> =
+            journal::uncovered(dims.m as u64, &done_ranges).into();
+
+        let mut knobs = SegmentKnobs {
+            block: cfg.block,
+            host_buffers: cfg.host_buffers,
+            device_buffers: cfg.device_buffers,
+            lane_threads: self.resolve_lane_threads(cfg),
+        };
+        let mut metrics = Metrics::new();
+        let mut device_secs = 0.0f64;
+        let mut windows_done = 0usize;
+        let mut replans = 0usize;
+        let mut lat_fit = DiskLatFit::default();
+        let mut plan_cursor = 0usize;
+        let t_wall = Instant::now();
+
+        loop {
+            // Segment length: the explicit schedule wins while it lasts,
+            // then the adaptive cadence (or one segment for the rest).
+            let seg_windows = match plans {
+                Some(list) if plan_cursor < list.len() => {
+                    let sp = list[plan_cursor];
+                    plan_cursor += 1;
+                    if sp.knobs != knobs {
+                        replans += 1;
+                        knobs = sp.knobs;
+                    }
+                    sp.windows
+                }
+                _ if cfg.adapt => cfg.adapt_every,
+                _ => usize::MAX,
+            };
+            let items = take_windows(&mut remaining, knobs.block as u64, seg_windows);
+            if items.is_empty() {
+                if remaining.is_empty() {
+                    break;
+                }
+                continue; // zero-window plan entry: knobs applied, no work
+            }
+            let seg_cols: usize = items.iter().map(|&(_, live)| live).sum();
+            self.ensure_resources(&knobs, cfg.ngpus)?;
+
+            let before = SegmentSnapshot::take(&metrics, self.reader.stats());
+            let t_seg = Instant::now();
+            {
+                // The coordinator thread keeps the S-loop's core share
+                // for this segment's split.
+                let lane_total = knobs.lane_threads * cfg.ngpus;
+                let coord = self.total_threads.saturating_sub(lane_total).max(1);
+                let _coord_budget = threads::with_budget(coord);
+                let ctx = SegmentCtx {
+                    n,
+                    p,
+                    mb_gpu: knobs.block / cfg.ngpus,
+                    pre: &self.pre,
+                    reader: &self.reader,
+                    writer: &writer,
+                    cache: self.cache.as_deref(),
+                    cache_dataset: self.cache_dataset.as_deref(),
+                    lanes: &self.lanes,
+                    host_pool: &mut self.host_pool,
+                    result_pool: &mut self.result_pool,
+                    chunk_pools: &mut self.chunk_pools,
+                    scratch: &mut self.scratch,
+                };
+                run_segment(ctx, &items, &mut metrics, &mut journal, &mut device_secs)?;
+            }
+            windows_done += items.len();
+            lat_fit.update(self.reader.stats().since(&before.reader));
+
+            let schedule_done = plans.map_or(true, |list| plan_cursor >= list.len());
+            if cfg.adapt && !remaining.is_empty() && schedule_done {
+                let t0 = Instant::now();
+                let obs = before.observe(
+                    &metrics,
+                    self.reader.stats(),
+                    t_seg.elapsed().as_secs_f64(),
+                    n,
+                    dims.pl,
+                    seg_cols,
+                    &lat_fit,
+                );
+                let left: u64 = remaining.iter().map(|&(_, len)| len).sum();
+                let rdims = Dims::new(n, dims.pl, left as usize)?;
+                let switch = replan_knobs(&obs, rdims, knobs, cfg.ngpus, self.total_threads);
+                if let Some(nk) = switch {
+                    crate::log_info!(
+                        "engine",
+                        "adapt: block {}→{}, host {}→{}, device {}→{}, lane threads {}→{} \
+                         (read {:.0}%, recv {:.0}%, disk {:.0} MB/s + {:.2} ms/req)",
+                        knobs.block,
+                        nk.block,
+                        knobs.host_buffers,
+                        nk.host_buffers,
+                        knobs.device_buffers,
+                        nk.device_buffers,
+                        knobs.lane_threads,
+                        nk.lane_threads,
+                        100.0 * obs.read_wait_secs / obs.wall_secs.max(1e-12),
+                        100.0 * obs.recv_wait_secs / obs.wall_secs.max(1e-12),
+                        obs.disk_mbps,
+                        obs.disk_lat_secs * 1e3,
+                    );
+                    knobs = nk;
+                    replans += 1;
+                }
+                metrics.add(Phase::Replan, t0.elapsed());
+            }
+        }
+
+        self.stats.runs += 1;
+        let wall_secs = t_wall.elapsed().as_secs_f64();
+        Ok(PipelineReport {
+            blocks: windows_done,
+            snps: dims.m,
+            wall_secs,
+            snps_per_sec: dims.m as f64 / wall_secs.max(1e-12),
+            metrics,
+            device_secs,
+            replans,
+        })
+    }
+
+    /// The per-lane kernel-thread share for `cfg` (explicit pin wins).
+    fn resolve_lane_threads(&self, cfg: &PipelineConfig) -> usize {
+        if cfg.lane_threads > 0 {
+            cfg.lane_threads
+        } else {
+            (self.total_threads / (cfg.ngpus + 1)).max(1)
+        }
+    }
+
+    /// Resize only what `knobs` actually changes: lanes survive any
+    /// switch that keeps their key (for native backends that includes
+    /// every block-size change), pools survive any switch that keeps the
+    /// ring geometry.
+    fn ensure_resources(&mut self, knobs: &SegmentKnobs, ngpus: usize) -> Result<()> {
+        validate_knobs(knobs, ngpus)?;
+        let dims = self.meta.dims;
+        let (n, p) = (dims.n, dims.p());
+        let mb_gpu = knobs.block / ngpus;
+        let lane_key = LaneKey {
+            ngpus,
+            lane_threads: knobs.lane_threads,
+            device_buffers: knobs.device_buffers,
+            mb_gpu: if matches!(self.backend, BackendKind::Pjrt { .. }) { mb_gpu } else { 0 },
+        };
+        if self.lane_key != Some(lane_key) {
+            for mut lane in self.lanes.drain(..) {
+                lane.close();
+                lane.join()?;
+            }
+            self.lanes = (0..ngpus)
+                .map(|gi| {
+                    let backend = match (&self.backend, &self.backend_proto) {
+                        (BackendKind::Native, _) => Backend::Native,
+                        (BackendKind::Pjrt { .. }, Some(entry)) => {
+                            Backend::Pjrt { entry: entry.clone() }
+                        }
+                        _ => unreachable!("pjrt engines always hold an artifact entry"),
+                    };
+                    DeviceLane::spawn(
+                        gi,
+                        self.mode,
+                        backend,
+                        &self.pre,
+                        mb_gpu,
+                        knobs.lane_threads,
+                        knobs.device_buffers,
+                    )
+                })
+                .collect::<Result<_>>()?;
+            self.lane_key = Some(lane_key);
+            self.stats.lane_builds += 1;
+        }
+        let pool_key = PoolKey {
+            block: knobs.block,
+            host_buffers: knobs.host_buffers,
+            device_buffers: knobs.device_buffers,
+            ngpus,
+        };
+        if self.pool_key != Some(pool_key) {
+            self.host_pool = BufPool::new(knobs.host_buffers, n * knobs.block);
+            self.result_pool = BufPool::new(knobs.host_buffers, p * knobs.block);
+            self.chunk_pools =
+                (0..ngpus).map(|_| BufPool::new(knobs.device_buffers, n * mb_gpu)).collect();
+            self.pool_key = Some(pool_key);
+            self.stats.pool_builds += 1;
+        }
+        Ok(())
+    }
+
+    /// Drop lanes and pools (joining the lane threads). The next run
+    /// rebuilds them; the preprocess and reader stay warm.
+    fn teardown_streaming(&mut self) {
+        for mut lane in self.lanes.drain(..) {
+            lane.close();
+            let _ = lane.join();
+        }
+        self.lane_key = None;
+        self.pool_key = None;
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.teardown_streaming();
+    }
+}
+
+/// The pipeline invariants every segment must satisfy. The adaptive
+/// re-planner's neighborhood enforces these by construction; an explicit
+/// [`SegmentPlan`] schedule comes from outside the engine and is
+/// validated here so a bad plan is a config error, not a zero-width
+/// chunk pool or a division by zero deep in the stream.
+fn validate_knobs(knobs: &SegmentKnobs, ngpus: usize) -> Result<()> {
+    if knobs.block == 0 || knobs.block % ngpus != 0 {
+        return Err(Error::Config(format!(
+            "segment plan: block {} must be positive and divisible by ngpus {ngpus}",
+            knobs.block
+        )));
+    }
+    if knobs.host_buffers < 2 {
+        return Err(Error::Config("segment plan: host_buffers must be ≥ 2".into()));
+    }
+    if !(2..=64).contains(&knobs.device_buffers) {
+        return Err(Error::Config("segment plan: device_buffers must be in 2..=64".into()));
+    }
+    if knobs.lane_threads == 0 {
+        return Err(Error::Config("segment plan: lane_threads must be ≥ 1".into()));
+    }
+    Ok(())
+}

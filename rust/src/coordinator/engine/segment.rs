@@ -1,0 +1,345 @@
+//! One segment of the stream: a batch of column windows executed under a
+//! single [`SegmentKnobs`] configuration against the engine's long-lived
+//! resources.
+//!
+//! This is the body of paper Listing 1.3, lifted out of the old
+//! monolithic pipeline with one structural change: the device lanes are
+//! **not** closed at the end of the segment. The coordinator instead
+//! tracks how many chunks each lane still owes (`outstanding`) and
+//! drains exactly those, so the lane threads — and their warmed-up
+//! kernel workers — survive into the next segment. Only the write flush
+//! and the journal sync mark the boundary (a journaled window must be
+//! durable before it is recorded).
+
+use crate::coordinator::lane::{DevIn, DevOut, DeviceLane, LaneOutputs};
+use crate::coordinator::metrics::{Metrics, Phase};
+use crate::coordinator::pool::BufPool;
+use crate::devsim::SegmentKnobs;
+use crate::error::{Error, Result};
+use crate::gwas::preprocess::Preprocessed;
+use crate::gwas::sloop::{sloop_block_into, sloop_from_reductions_into, SloopScratch};
+use crate::storage::{AioEngine, AioHandle, BlockCache, BlockKey};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// One entry of an explicit segment schedule (the testing/benchmark
+/// face of the engine — the adaptive loop builds the same thing from
+/// [`crate::tune::replan_knobs`] decisions).
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentPlan {
+    /// Knobs this segment streams under.
+    pub knobs: SegmentKnobs,
+    /// Column windows to stream (`usize::MAX` = everything remaining).
+    pub windows: usize,
+}
+
+/// Pop up to `max_windows` column windows of at most `block` columns off
+/// the remaining work list (splitting the front range as needed).
+pub(super) fn take_windows(
+    remaining: &mut VecDeque<(u64, u64)>,
+    block: u64,
+    max_windows: usize,
+) -> Vec<(u64, usize)> {
+    let mut out = Vec::new();
+    while out.len() < max_windows {
+        let Some((c0, len)) = remaining.pop_front() else { break };
+        let take = block.min(len);
+        out.push((c0, take as usize));
+        if take < len {
+            remaining.push_front((c0 + take, len - take));
+        }
+    }
+    out
+}
+
+/// Per-block assembly state: the result buffer filling up chunk by chunk.
+struct BlockAssembly {
+    buf: Vec<f64>,
+    live_total: usize,
+    chunks_left: usize,
+}
+
+/// The engine resources one segment borrows. Shared references are
+/// copied out where the borrow checker needs the mutable parts free.
+pub(super) struct SegmentCtx<'a> {
+    pub n: usize,
+    pub p: usize,
+    pub mb_gpu: usize,
+    pub pre: &'a Preprocessed,
+    pub reader: &'a AioEngine,
+    pub writer: &'a AioEngine,
+    pub cache: Option<&'a BlockCache>,
+    pub cache_dataset: Option<&'a str>,
+    pub lanes: &'a [DeviceLane],
+    pub host_pool: &'a mut BufPool,
+    pub result_pool: &'a mut BufPool,
+    pub chunk_pools: &'a mut [BufPool],
+    pub scratch: &'a mut SloopScratch,
+}
+
+/// Mutable streaming state of one segment.
+struct SegmentState {
+    pending_writes: VecDeque<(u64, u64, AioHandle)>,
+    completed: Vec<(u64, u64)>,
+    assemblies: HashMap<u64, BlockAssembly>,
+    live_of: HashMap<u64, usize>,
+    retired: usize,
+    /// Chunks submitted to each lane and not yet received back — what
+    /// the end-of-segment drain collects instead of closing the lane.
+    outstanding: Vec<usize>,
+}
+
+/// A lane's output channel disconnected mid-stream. The lane thread
+/// itself (and its underlying error, if any) is joined by the engine's
+/// error-path teardown.
+fn lane_died(gi: usize) -> Error {
+    Error::Pipeline(format!("lane {gi} exited mid-stream"))
+}
+
+/// Retire one lane result: run the CPU tail, fill the assembly, and
+/// kick the write when the block is complete.
+fn process_out(
+    ctx: &mut SegmentCtx<'_>,
+    out: DevOut,
+    st: &mut SegmentState,
+    metrics: &mut Metrics,
+    device_secs: &mut f64,
+) -> Result<()> {
+    let col0 = out.block;
+    let p = ctx.p;
+    let mb_gpu = ctx.mb_gpu;
+    st.outstanding[out.lane] = st.outstanding[out.lane].saturating_sub(1);
+    metrics.add(Phase::DeviceCompute, Duration::from_secs_f64(out.compute_secs));
+    *device_secs += out.compute_secs;
+    ctx.chunk_pools[out.lane].put(out.inbuf);
+    let live_total = *st
+        .live_of
+        .get(&col0)
+        .ok_or_else(|| Error::Pipeline(format!("lane returned unknown window {col0}")))?;
+    // Ensure an assembly buffer exists (may need to wait on a write).
+    if !st.assemblies.contains_key(&col0) {
+        let buf = loop {
+            if let Some(buf) = ctx.result_pool.take() {
+                break buf;
+            }
+            let (wc0, wlen, h) = st.pending_writes.pop_front().ok_or_else(|| {
+                Error::Pipeline("result pool empty with no writes in flight".into())
+            })?;
+            let t0 = Instant::now();
+            let (wbuf, res) = h.wait();
+            metrics.add(Phase::WriteWait, t0.elapsed());
+            res?;
+            st.completed.push((wc0, wlen));
+            ctx.result_pool.put(wbuf);
+        };
+        let chunks = live_total.div_ceil(mb_gpu);
+        st.assemblies.insert(col0, BlockAssembly { buf, live_total, chunks_left: chunks });
+    }
+    let asm = st.assemblies.get_mut(&col0).expect("assembly exists");
+    let c_off = out.lane * mb_gpu; // chunk's first column within window
+    let t0 = Instant::now();
+    // The S-loop writes its solutions straight into this chunk's
+    // segment of the assembly buffer — no per-chunk result matrix,
+    // no copy: the retire path is allocation-free in steady state.
+    match out.outs {
+        LaneOutputs::Xbt(xbt) => {
+            let live = xbt.cols();
+            sloop_block_into(
+                ctx.pre,
+                &xbt,
+                ctx.scratch,
+                &mut asm.buf[c_off * p..(c_off + live) * p],
+            )?;
+        }
+        LaneOutputs::Reductions { xbt: _, g, rb, d } => {
+            let live = d.len();
+            let seg = &mut asm.buf[c_off * p..(c_off + live) * p];
+            sloop_from_reductions_into(ctx.pre, &g, &d, &rb, ctx.scratch, seg)?;
+        }
+        LaneOutputs::Solutions(rblk) => {
+            let live = rblk.cols();
+            asm.buf[c_off * p..(c_off + live) * p].copy_from_slice(rblk.as_slice());
+        }
+    }
+    metrics.add(Phase::Sloop, t0.elapsed());
+    asm.chunks_left -= 1;
+    if asm.chunks_left == 0 {
+        let mut asm = st.assemblies.remove(&col0).expect("assembly exists");
+        st.live_of.remove(&col0);
+        asm.buf.truncate(p * asm.live_total);
+        let h = ctx.writer.write_cols(col0, asm.live_total as u64, asm.buf);
+        st.pending_writes.push_back((col0, asm.live_total as u64, h));
+        st.retired += 1;
+    }
+    Ok(())
+}
+
+/// Stream one batch of column windows under a single knob configuration.
+/// The journal is appended (after the data sync) for every persisted
+/// window; device-compute seconds accumulate into `device_secs`.
+pub(super) fn run_segment(
+    mut ctx: SegmentCtx<'_>,
+    items: &[(u64, usize)],
+    metrics: &mut Metrics,
+    journal: &mut crate::coordinator::journal::Journal,
+    device_secs: &mut f64,
+) -> Result<()> {
+    let n = ctx.n;
+    let mb_gpu = ctx.mb_gpu;
+    let ngpus = ctx.lanes.len();
+    let lanes = ctx.lanes; // shared ref, copied out so `ctx` can be &mut
+    let reader = ctx.reader;
+    let cache = ctx.cache;
+    let cache_dataset = ctx.cache_dataset;
+
+    let mut st = SegmentState {
+        pending_writes: VecDeque::new(),
+        completed: Vec::new(),
+        assemblies: HashMap::new(),
+        live_of: HashMap::new(),
+        retired: 0,
+        outstanding: vec![0; ngpus],
+    };
+    let njobs = items.len();
+    let read_ahead = ctx.host_pool.total().saturating_sub(1).max(1);
+    let block_key = |ds: &str, col0: u64, live: usize| BlockKey {
+        dataset: ds.to_string(),
+        col0,
+        ncols: live as u64,
+    };
+
+    // ---- pipeline state ------------------------------------------------
+    // (window col0, in-flight read, whether it was served from the cache)
+    let mut pending_reads: VecDeque<(u64, AioHandle, bool)> = VecDeque::new();
+    let mut next_read = 0usize; // index into `items`
+
+    // Submit disk reads up to the ring's read-ahead. With a shared cache
+    // attached, each window first probes it: a hit is an already-complete
+    // "read" served from RAM (no disk I/O), a miss goes to the engine as
+    // usual and is inserted into the cache on arrival.
+    macro_rules! pump_reads {
+        () => {
+            while next_read < njobs && pending_reads.len() < read_ahead {
+                match ctx.host_pool.take() {
+                    Some(mut buf) => {
+                        let (col0, live) = items[next_read];
+                        buf.truncate(n * live);
+                        let mut from_cache = false;
+                        if let (Some(cache), Some(ds)) = (cache, cache_dataset) {
+                            let key = block_key(ds, col0, live);
+                            let t0 = Instant::now();
+                            if cache.get_into(&key, &mut buf) {
+                                metrics.add(Phase::CacheHit, t0.elapsed());
+                                from_cache = true;
+                            } else {
+                                metrics.add(Phase::CacheMiss, Duration::ZERO);
+                            }
+                        }
+                        let h = if from_cache {
+                            AioHandle::ready(buf, Ok(()))
+                        } else {
+                            reader.read_cols(col0, live as u64, buf)
+                        };
+                        pending_reads.push_back((col0, h, from_cache));
+                        next_read += 1;
+                    }
+                    None => break,
+                }
+            }
+        };
+    }
+
+    // ---- main loop (Listing 1.3) ----------------------------------------
+    for &(col0, live_total) in items {
+        st.live_of.insert(col0, live_total);
+        pump_reads!();
+        let (rc0, handle, from_cache) = pending_reads
+            .pop_front()
+            .ok_or_else(|| Error::Pipeline("no pending read (pool starved?)".into()))?;
+        debug_assert_eq!(rc0, col0);
+        let t0 = Instant::now();
+        let (buf, res) = handle.wait(); // aio_wait Xr[b]
+        metrics.add(Phase::ReadWait, t0.elapsed());
+        res?;
+        // A freshly read (miss) window becomes cache residency for the
+        // next job streaming this dataset.
+        if !from_cache {
+            if let (Some(cache), Some(ds)) = (cache, cache_dataset) {
+                cache.insert(block_key(ds, col0, live_total), &buf);
+            }
+        }
+        let chunks = live_total.div_ceil(mb_gpu);
+
+        // Split-send to lanes (cu_send; blocking on pool = cu_send_wait).
+        for gi in 0..chunks {
+            let live = (live_total - gi * mb_gpu).min(mb_gpu);
+            // Opportunistically drain results while waiting for a chunk buffer
+            // — this is where the S-loop of block b-1 overlaps the trsm of b.
+            let mut chunkbuf = loop {
+                if let Some(cb) = ctx.chunk_pools[gi].take() {
+                    break cb;
+                }
+                let t0 = Instant::now();
+                let out = lanes[gi].rx_out.recv().map_err(|_| lane_died(gi))?;
+                metrics.add(Phase::RecvWait, t0.elapsed());
+                process_out(&mut ctx, out, &mut st, metrics, device_secs)?;
+            };
+            let t0 = Instant::now();
+            chunkbuf[..n * live].copy_from_slice(&buf[gi * mb_gpu * n..gi * mb_gpu * n + n * live]);
+            chunkbuf[n * live..].fill(0.0); // zero-pad the artifact width
+            metrics.add(Phase::Send, t0.elapsed());
+            lanes[gi].submit(DevIn { block: col0, buf: chunkbuf, live })?;
+            st.outstanding[gi] += 1;
+        }
+        ctx.host_pool.put(buf);
+
+        // Drain any already-finished results without blocking.
+        for gi in 0..ngpus {
+            while st.outstanding[gi] > 0 {
+                match lanes[gi].rx_out.try_recv() {
+                    Ok(out) => process_out(&mut ctx, out, &mut st, metrics, device_secs)?,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return Err(lane_died(gi)),
+                }
+            }
+        }
+    }
+
+    // ---- drain ----------------------------------------------------------
+    // The lanes stay alive (they are the engine's, not the segment's):
+    // collect exactly the chunks each lane still owes us.
+    while st.retired < njobs {
+        let Some(gi) = (0..ngpus).find(|&gi| st.outstanding[gi] > 0) else {
+            return Err(Error::Pipeline(format!(
+                "pipeline stalled after {}/{njobs} blocks with no chunks in flight",
+                st.retired
+            )));
+        };
+        let t0 = Instant::now();
+        match lanes[gi].rx_out.recv_timeout(Duration::from_millis(20)) {
+            Ok(out) => {
+                metrics.add(Phase::RecvWait, t0.elapsed());
+                process_out(&mut ctx, out, &mut st, metrics, device_secs)?;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return Err(lane_died(gi)),
+        }
+    }
+    // Flush writes.
+    while let Some((wc0, wlen, h)) = st.pending_writes.pop_front() {
+        let t0 = Instant::now();
+        let (wbuf, res) = h.wait();
+        metrics.add(Phase::WriteWait, t0.elapsed());
+        res?;
+        st.completed.push((wc0, wlen));
+        ctx.result_pool.put(wbuf);
+    }
+    ctx.writer.sync().wait().1?;
+    // Journal after the data sync so a journaled window is truly durable.
+    for (wc0, wlen) in st.completed.drain(..) {
+        journal.append(wc0, wlen)?;
+    }
+    journal.sync()?;
+    Ok(())
+}

@@ -1,20 +1,28 @@
 //! Layer-3 coordinator — the paper's contribution.
 //!
-//! * [`pipeline`] — the cuGWAS streaming loop (Listing 1.3): triple-
-//!   buffered host ring, double-buffered device lanes, pipelined S-loop,
-//!   run as journaled segments so the autotuner can re-plan in flight.
+//! * [`engine`] — the unified streaming engine: a long-lived execution
+//!   core owning the aio engines, buffer rings, device lanes and S-loop
+//!   scratch, executing segment plans against them with resources
+//!   reused across segments *and* across back-to-back runs (the
+//!   `serve` path). The full-depth in-flight re-planner lives here.
+//! * [`pipeline`] — the configuration face (Listing 1.3's knobs):
+//!   [`PipelineConfig`], validation, the one-shot [`run`] wrapper, and
+//!   the oracle check.
 //! * [`lane`] — one worker thread per emulated GPU, PJRT or native.
 //! * [`pool`] — the fixed buffer pools that realize the rotation.
 //! * [`metrics`] — per-phase accounting (the live Fig. 3).
 //! * [`journal`] — the v2 checkpoint journal (parameter header +
 //!   column-range records) behind `--resume`.
 
+pub mod engine;
 pub mod journal;
 pub mod lane;
 pub mod metrics;
 pub mod pipeline;
 pub mod pool;
 
+pub use crate::devsim::SegmentKnobs;
+pub use engine::{Engine, EngineStats, SegmentPlan};
 pub use journal::Journal;
 pub use lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
 pub use metrics::{Metrics, Phase};

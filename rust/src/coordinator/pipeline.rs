@@ -7,44 +7,31 @@
 //! ```
 //!
 //! One coordinator thread drives the schedule; the I/O threads (storage
-//! [`AioEngine`]) and the device lanes ([`DeviceLane`]) supply the
+//! [`AioEngine`](crate::storage::AioEngine)) and the device lanes
+//! ([`DeviceLane`](crate::coordinator::lane::DeviceLane)) supply the
 //! asynchrony. All steady-state buffers come from fixed pools
-//! ([`BufPool`]) — the rotation discipline of the paper's Fig. 5, with
-//! pool exhaustion providing the back-pressure (`aio_wait`,
-//! `cu_send_wait`) the listing spells out explicitly.
+//! ([`BufPool`](crate::coordinator::pool::BufPool)) — the rotation
+//! discipline of the paper's Fig. 5, with pool exhaustion providing the
+//! back-pressure (`aio_wait`, `cu_send_wait`) the listing spells out
+//! explicitly.
 //!
-//! The S-loop for block `b-1` runs on the coordinator thread while the
-//! lanes compute block `b` — the paper's pipelining — because lane results
-//! are drained opportunistically between submissions.
-//!
-//! Since the autotuner landed, a run is a sequence of **segments**: the
-//! work is a list of column windows, each segment streams a batch of them
-//! under one block size, and (with [`PipelineConfig::adapt`] on) the
-//! coordinator compares the live stall profile against the model between
-//! segments and re-plans the block size for the remainder — journaling
-//! every persisted window ([`journal`]) so `--resume` stays correct
-//! across a mid-run switch.
+//! Since the unified engine landed, this module is the *configuration*
+//! face of the stream: [`PipelineConfig`] describes a run,
+//! [`run`] hands it to a freshly opened
+//! [`Engine`](crate::coordinator::engine::Engine), and the engine owns
+//! the long-lived resources (aio engines, buffer rings, device lanes,
+//! S-loop scratch, journal) across segments — and, for the service,
+//! across back-to-back jobs on one dataset. See
+//! [`engine`](crate::coordinator::engine) for the execution core.
 
-use crate::coordinator::journal::{self, Journal};
-use crate::coordinator::lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
-use crate::coordinator::metrics::{Metrics, Phase};
-use crate::coordinator::pool::BufPool;
-use crate::devsim::{sloop_flops, trsm_flops};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::lane::OffloadMode;
+use crate::coordinator::metrics::Metrics;
 use crate::error::{Error, Result};
-use crate::gwas::preprocess::{preprocess, Preprocessed};
-use crate::gwas::problem::Dims;
-use crate::gwas::sloop::{sloop_block_into, sloop_from_reductions_into, SloopScratch};
 use crate::linalg::Matrix;
-use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
-use crate::storage::{
-    dataset, AioEngine, AioHandle, AioStats, BlockCache, BlockKey, Header, Throttle, XrdFile,
-};
-use crate::tune::{replan_block, LiveObs};
-use crate::util::threads;
-use std::collections::{HashMap, VecDeque};
+use crate::storage::{dataset, BlockCache, Throttle, XrdFile};
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 /// Which compute backend the lanes use.
 #[derive(Debug, Clone)]
@@ -97,9 +84,12 @@ pub struct PipelineConfig {
     /// Explicit kernel threads per lane (0 = the equal split above).
     /// The autotuner searches this split; a tuned profile pins it.
     pub lane_threads: usize,
-    /// Re-plan the block size at segment boundaries from the live stall
-    /// profile (read-starved → larger, compute-starved → smaller).
-    /// Native backend only — PJRT artifacts are compiled per block size.
+    /// Re-plan the pipeline knobs at segment boundaries from the live
+    /// stall profile: block size, host/device buffer counts and the
+    /// lane-vs-S-loop thread split — the full depth the offline planner
+    /// searches — with the DES pricing every candidate switch including
+    /// its transition cost. Native backend only — PJRT artifacts are
+    /// compiled per block size.
     pub adapt: bool,
     /// Blocks per adaptive segment (how often the re-planner looks).
     pub adapt_every: usize,
@@ -141,567 +131,22 @@ pub struct PipelineReport {
     pub metrics: Metrics,
     /// Sum of device-side compute seconds across lanes.
     pub device_secs: f64,
-    /// Adaptive block-size switches taken (0 without `adapt`).
+    /// Adaptive knob switches taken (0 without `adapt`).
     pub replans: usize,
 }
 
-/// Per-block assembly state: the result buffer filling up chunk by chunk.
-struct BlockAssembly {
-    buf: Vec<f64>,
-    live_total: usize,
-    chunks_left: usize,
-}
-
-/// Immutable per-run context shared by every segment.
-struct RunCtx<'a> {
-    cfg: &'a PipelineConfig,
-    pre: &'a Preprocessed,
-    backend_proto: &'a Option<ArtifactEntry>,
-    reader: &'a AioEngine,
-    writer: &'a AioEngine,
-    cache_dataset: Option<String>,
-    n: usize,
-    p: usize,
-}
-
-/// Mutable streaming state of one segment.
-struct SegmentState {
-    host_pool: BufPool,
-    result_pool: BufPool,
-    chunk_pools: Vec<BufPool>,
-    pending_writes: VecDeque<(u64, u64, AioHandle)>,
-    completed: Vec<(u64, u64)>,
-    assemblies: HashMap<u64, BlockAssembly>,
-    live_of: HashMap<u64, usize>,
-    retired: usize,
-}
-
-/// Pop up to `max_windows` column windows of at most `block` columns off
-/// the remaining work list (splitting the front range as needed).
-fn take_windows(
-    remaining: &mut VecDeque<(u64, u64)>,
-    block: u64,
-    max_windows: usize,
-) -> Vec<(u64, usize)> {
-    let mut out = Vec::new();
-    while out.len() < max_windows {
-        let Some((c0, len)) = remaining.pop_front() else { break };
-        let take = block.min(len);
-        out.push((c0, take as usize));
-        if take < len {
-            remaining.push_front((c0 + take, len - take));
-        }
-    }
-    out
-}
-
 /// Run the streaming solver over a dataset; results land in `r.xrd`.
+///
+/// This is the one-shot face of the engine: open, execute, drop. Callers
+/// that stream several runs over one dataset (the service's worker
+/// lanes) hold the [`Engine`] instead and call
+/// [`Engine::execute`] repeatedly to keep the preprocess, reader, lanes
+/// and pools warm.
 pub fn run(cfg: &PipelineConfig) -> Result<PipelineReport> {
-    validate(cfg)?;
-    let (meta, kin, xl, y) = dataset::load_sidecars(&cfg.dataset)?;
-    let dims = meta.dims;
-    let n = dims.n;
-    let p = dims.p();
-    let mb_gpu = cfg.block / cfg.ngpus;
-
-    // Resolve backend + the diagonal block size for preprocessing.
-    let (backend_proto, dinv_nb) = match &cfg.backend {
-        BackendKind::Native => (None, 0),
-        BackendKind::Pjrt { artifacts } => {
-            let manifest = Manifest::load(artifacts)?;
-            let kind = match cfg.mode {
-                OffloadMode::Trsm => Kind::Trsm,
-                OffloadMode::Block => Kind::Block,
-                OffloadMode::BlockFull => Kind::BlockFull,
-            };
-            let entry = manifest
-                .get(&ArtifactKey { kind, n, pl: dims.pl, mb: mb_gpu })?
-                .clone();
-            let nb = entry.nb;
-            (Some(entry), nb)
-        }
-    };
-
-    // Core partition: each lane gets an equal share (or the tuned pin)
-    // for its kernels, the coordinator keeps the remainder (both ≥ 1).
-    let total = if cfg.threads == 0 { threads::available() } else { cfg.threads };
-    let lane_threads = if cfg.lane_threads > 0 {
-        cfg.lane_threads
-    } else {
-        (total / (cfg.ngpus + 1)).max(1)
-    };
-    let coord_threads = total.saturating_sub(lane_threads * cfg.ngpus).max(1);
-
-    // Preprocessing (Listing 1.3 lines 1–7; seconds, excluded by the
-    // paper from streaming timings but included in our wall clock). The
-    // lanes don't exist yet, so it may use the full budget.
-    let pre: Preprocessed = {
-        let _full = threads::with_budget(total);
-        preprocess(&kin, &xl, &y, dinv_nb)?
-    };
-    // From here on this thread runs the S-loop on its core share.
-    let _coord_budget = threads::with_budget(coord_threads);
-
-    // Storage engines (one I/O thread each — read and write devices).
-    let paths = dataset::DatasetPaths::new(&cfg.dataset);
-    let xr = XrdFile::open(&paths.xr())?.with_throttle(cfg.read_throttle);
-    let r_header = Header::new(p as u64, dims.m as u64, cfg.block.min(dims.m) as u64, meta.seed)?;
-    // Resume: validate the journal header (refusal on a parameter
-    // mismatch — see `journal`), then reuse the results file when its
-    // geometry matches; a missing/foreign results file restarts clean.
-    let fresh = |paths: &dataset::DatasetPaths| -> Result<(XrdFile, Journal)> {
-        let j = Journal::create(&paths.progress(), dims.m as u64, cfg.block as u64)?;
-        Ok((XrdFile::create(&paths.results(), r_header)?, j))
-    };
-    let (rfile, mut journal, done_ranges) = if cfg.resume {
-        let (journal, ranges) =
-            Journal::open_resume(&paths.progress(), dims.m as u64, cfg.block as u64)?;
-        match XrdFile::open_rw(&paths.results()) {
-            Ok(f) if *f.header() == r_header => (f, journal, ranges),
-            _ => {
-                // Journaled progress points at a results file that no
-                // longer matches — recompute everything.
-                drop(journal);
-                let (f, j) = fresh(&paths)?;
-                (f, j, Vec::new())
-            }
-        }
-    } else {
-        let (f, j) = fresh(&paths)?;
-        (f, j, Vec::new())
-    };
-    let rfile = rfile.with_throttle(cfg.write_throttle);
-    let reader = AioEngine::new(xr);
-    let writer = AioEngine::new(rfile);
-
-    // Work list: the uncovered column ranges, streamed as block windows.
-    let mut remaining: VecDeque<(u64, u64)> =
-        journal::uncovered(dims.m as u64, &done_ranges).into();
-
-    let cache_dataset: Option<String> = cfg
-        .cache
-        .as_ref()
-        .map(|_| dataset::canonical_key(&cfg.dataset).to_string_lossy().into_owned());
-    let ctx = RunCtx {
-        cfg,
-        pre: &pre,
-        backend_proto: &backend_proto,
-        reader: &reader,
-        writer: &writer,
-        cache_dataset,
-        n,
-        p,
-    };
-
-    let mut metrics = Metrics::new();
-    let mut scratch = SloopScratch::new(dims.pl);
-    let mut device_secs = 0.0f64;
-    let mut windows_done = 0usize;
-    let mut replans = 0usize;
-    let mut plan_block = cfg.block;
-    let seg_windows = if cfg.adapt { cfg.adapt_every } else { usize::MAX };
-    let t_wall = Instant::now();
-
-    loop {
-        let items = take_windows(&mut remaining, plan_block as u64, seg_windows);
-        if items.is_empty() {
-            break;
-        }
-        let seg_cols: usize = items.iter().map(|&(_, live)| live).sum();
-        let before = SegmentSnapshot::take(&metrics, reader.stats());
-        let t_seg = Instant::now();
-        device_secs += run_segment(
-            &ctx,
-            plan_block,
-            lane_threads,
-            &items,
-            &mut metrics,
-            &mut scratch,
-            &mut journal,
-        )?;
-        windows_done += items.len();
-
-        if cfg.adapt && !remaining.is_empty() {
-            let t0 = Instant::now();
-            let obs = before.observe(
-                &metrics,
-                reader.stats(),
-                t_seg.elapsed().as_secs_f64(),
-                n,
-                dims.pl,
-                seg_cols,
-            );
-            let left: u64 = remaining.iter().map(|&(_, len)| len).sum();
-            let rdims = Dims::new(n, dims.pl, left as usize)?;
-            if let Some(nb) = replan_block(
-                &obs,
-                rdims,
-                plan_block,
-                cfg.ngpus,
-                cfg.host_buffers,
-                cfg.device_buffers,
-            ) {
-                crate::log_info!(
-                    "pipeline",
-                    "adapt: block {plan_block} → {nb} (read {:.0}%, recv {:.0}%, disk {:.0} MB/s)",
-                    100.0 * obs.read_wait_secs / obs.wall_secs.max(1e-12),
-                    100.0 * obs.recv_wait_secs / obs.wall_secs.max(1e-12),
-                    obs.disk_mbps
-                );
-                plan_block = nb;
-                replans += 1;
-            }
-            metrics.add(Phase::Replan, t0.elapsed());
-        }
-    }
-
-    let wall_secs = t_wall.elapsed().as_secs_f64();
-    Ok(PipelineReport {
-        blocks: windows_done,
-        snps: dims.m,
-        wall_secs,
-        snps_per_sec: dims.m as f64 / wall_secs.max(1e-12),
-        metrics,
-        device_secs,
-        replans,
-    })
+    Engine::open(cfg)?.execute(cfg)
 }
 
-/// Phase/engine counters at a segment boundary, for live-rate deltas.
-struct SegmentSnapshot {
-    read_wait: Duration,
-    recv_wait: Duration,
-    send: Duration,
-    sloop: Duration,
-    device: Duration,
-    reader: AioStats,
-}
-
-impl SegmentSnapshot {
-    fn take(metrics: &Metrics, reader: AioStats) -> SegmentSnapshot {
-        SegmentSnapshot {
-            read_wait: metrics.total(Phase::ReadWait),
-            recv_wait: metrics.total(Phase::RecvWait),
-            send: metrics.total(Phase::Send),
-            sloop: metrics.total(Phase::Sloop),
-            device: metrics.total(Phase::DeviceCompute),
-            reader,
-        }
-    }
-
-    /// Turn the counter deltas since this snapshot into live rates.
-    fn observe(
-        &self,
-        metrics: &Metrics,
-        reader: AioStats,
-        wall_secs: f64,
-        n: usize,
-        pl: usize,
-        cols: usize,
-    ) -> LiveObs {
-        let secs = |now: Duration, then: Duration| now.saturating_sub(then).as_secs_f64();
-        let rate = |units: f64, secs: f64| if secs > 0.0 { units / secs } else { 0.0 };
-        let device = secs(metrics.total(Phase::DeviceCompute), self.device);
-        let sloop = secs(metrics.total(Phase::Sloop), self.sloop);
-        let send = secs(metrics.total(Phase::Send), self.send);
-        LiveObs {
-            wall_secs,
-            read_wait_secs: secs(metrics.total(Phase::ReadWait), self.read_wait),
-            recv_wait_secs: secs(metrics.total(Phase::RecvWait), self.recv_wait),
-            disk_mbps: reader.since(&self.reader).mbps(),
-            trsm_gflops: rate(trsm_flops(n, cols), device) / 1e9,
-            cpu_gflops: rate(sloop_flops(n, pl, cols), sloop) / 1e9,
-            pcie_gbps: rate((n * cols * 8) as f64, send) / 1e9,
-        }
-    }
-}
-
-/// Retire one lane result: run the CPU tail, fill the assembly, and
-/// kick the write when the block is complete.
-fn process_out(
-    ctx: &RunCtx<'_>,
-    mb_gpu: usize,
-    out: DevOut,
-    st: &mut SegmentState,
-    metrics: &mut Metrics,
-    scratch: &mut SloopScratch,
-) -> Result<()> {
-    let col0 = out.block;
-    let p = ctx.p;
-    st.chunk_pools[out.lane].put(out.inbuf);
-    let live_total = *st
-        .live_of
-        .get(&col0)
-        .ok_or_else(|| Error::Pipeline(format!("lane returned unknown window {col0}")))?;
-    // Ensure an assembly buffer exists (may need to wait on a write).
-    if !st.assemblies.contains_key(&col0) {
-        let buf = loop {
-            if let Some(buf) = st.result_pool.take() {
-                break buf;
-            }
-            let (wc0, wlen, h) = st.pending_writes.pop_front().ok_or_else(|| {
-                Error::Pipeline("result pool empty with no writes in flight".into())
-            })?;
-            let t0 = Instant::now();
-            let (wbuf, res) = h.wait();
-            metrics.add(Phase::WriteWait, t0.elapsed());
-            res?;
-            st.completed.push((wc0, wlen));
-            st.result_pool.put(wbuf);
-        };
-        let chunks = live_total.div_ceil(mb_gpu);
-        st.assemblies.insert(col0, BlockAssembly { buf, live_total, chunks_left: chunks });
-    }
-    let asm = st.assemblies.get_mut(&col0).expect("assembly exists");
-    let c_off = out.lane * mb_gpu; // chunk's first column within window
-    let t0 = Instant::now();
-    // The S-loop writes its solutions straight into this chunk's
-    // segment of the assembly buffer — no per-chunk result matrix,
-    // no copy: the retire path is allocation-free in steady state.
-    match out.outs {
-        LaneOutputs::Xbt(xbt) => {
-            let live = xbt.cols();
-            sloop_block_into(ctx.pre, &xbt, scratch, &mut asm.buf[c_off * p..(c_off + live) * p])?;
-        }
-        LaneOutputs::Reductions { xbt: _, g, rb, d } => {
-            let live = d.len();
-            let seg = &mut asm.buf[c_off * p..(c_off + live) * p];
-            sloop_from_reductions_into(ctx.pre, &g, &d, &rb, scratch, seg)?;
-        }
-        LaneOutputs::Solutions(rblk) => {
-            let live = rblk.cols();
-            asm.buf[c_off * p..(c_off + live) * p].copy_from_slice(rblk.as_slice());
-        }
-    }
-    metrics.add(Phase::Sloop, t0.elapsed());
-    asm.chunks_left -= 1;
-    if asm.chunks_left == 0 {
-        let mut asm = st.assemblies.remove(&col0).expect("assembly exists");
-        st.live_of.remove(&col0);
-        asm.buf.truncate(p * asm.live_total);
-        let h = ctx.writer.write_cols(col0, asm.live_total as u64, asm.buf);
-        st.pending_writes.push_back((col0, asm.live_total as u64, h));
-        st.retired += 1;
-    }
-    Ok(())
-}
-
-/// Stream one batch of column windows under a single block size: the
-/// body of paper Listing 1.3. Returns the lanes' device-compute seconds.
-fn run_segment(
-    ctx: &RunCtx<'_>,
-    block: usize,
-    lane_threads: usize,
-    items: &[(u64, usize)],
-    metrics: &mut Metrics,
-    scratch: &mut SloopScratch,
-    journal: &mut Journal,
-) -> Result<f64> {
-    let cfg = ctx.cfg;
-    let n = ctx.n;
-    let p = ctx.p;
-    let mb_gpu = block / cfg.ngpus;
-
-    // Device lanes (fresh per segment — a block-size switch changes the
-    // chunk width every lane is sized for). Known trade-off: with
-    // `adapt` on, lanes and pools are rebuilt even at boundaries where
-    // the re-planner keeps the block; reusing them across unchanged
-    // segments is a ROADMAP item. Without `adapt` there is exactly one
-    // segment, so the default path pays nothing.
-    let mut lanes: Vec<DeviceLane> = (0..cfg.ngpus)
-        .map(|gi| {
-            let backend = match (&cfg.backend, ctx.backend_proto) {
-                (BackendKind::Native, _) => Backend::Native,
-                (BackendKind::Pjrt { .. }, Some(entry)) => Backend::Pjrt { entry: entry.clone() },
-                _ => unreachable!(),
-            };
-            DeviceLane::spawn(
-                gi,
-                cfg.mode,
-                backend,
-                ctx.pre,
-                mb_gpu,
-                lane_threads,
-                cfg.device_buffers,
-            )
-        })
-        .collect::<Result<_>>()?;
-
-    // Buffer pools: hb host blocks, hb result blocks, db chunks per lane.
-    let mut st = SegmentState {
-        host_pool: BufPool::new(cfg.host_buffers, n * block),
-        result_pool: BufPool::new(cfg.host_buffers, p * block),
-        chunk_pools: (0..cfg.ngpus)
-            .map(|_| BufPool::new(cfg.device_buffers, n * mb_gpu))
-            .collect(),
-        pending_writes: VecDeque::new(),
-        completed: Vec::new(),
-        assemblies: HashMap::new(),
-        live_of: HashMap::new(),
-        retired: 0,
-    };
-    let njobs = items.len();
-    let read_ahead = cfg.host_buffers.saturating_sub(1).max(1);
-    let block_key = |ds: &str, col0: u64, live: usize| BlockKey {
-        dataset: ds.to_string(),
-        col0,
-        ncols: live as u64,
-    };
-
-    // ---- pipeline state ------------------------------------------------
-    // (window col0, in-flight read, whether it was served from the cache)
-    let mut pending_reads: VecDeque<(u64, AioHandle, bool)> = VecDeque::new();
-    let mut next_read = 0usize; // index into `items`
-
-    // Submit disk reads up to the ring's read-ahead. With a shared cache
-    // attached, each window first probes it: a hit is an already-complete
-    // "read" served from RAM (no disk I/O), a miss goes to the engine as
-    // usual and is inserted into the cache on arrival.
-    macro_rules! pump_reads {
-        () => {
-            while next_read < njobs && pending_reads.len() < read_ahead {
-                match st.host_pool.take() {
-                    Some(mut buf) => {
-                        let (col0, live) = items[next_read];
-                        buf.truncate(n * live);
-                        let mut from_cache = false;
-                        if let (Some(cache), Some(ds)) =
-                            (cfg.cache.as_deref(), ctx.cache_dataset.as_deref())
-                        {
-                            let key = block_key(ds, col0, live);
-                            let t0 = Instant::now();
-                            if cache.get_into(&key, &mut buf) {
-                                metrics.add(Phase::CacheHit, t0.elapsed());
-                                from_cache = true;
-                            } else {
-                                metrics.add(Phase::CacheMiss, Duration::ZERO);
-                            }
-                        }
-                        let h = if from_cache {
-                            AioHandle::ready(buf, Ok(()))
-                        } else {
-                            ctx.reader.read_cols(col0, live as u64, buf)
-                        };
-                        pending_reads.push_back((col0, h, from_cache));
-                        next_read += 1;
-                    }
-                    None => break,
-                }
-            }
-        };
-    }
-
-    // ---- main loop (Listing 1.3) ----------------------------------------
-    for &(col0, live_total) in items {
-        st.live_of.insert(col0, live_total);
-        pump_reads!();
-        let (rc0, handle, from_cache) = pending_reads
-            .pop_front()
-            .ok_or_else(|| Error::Pipeline("no pending read (pool starved?)".into()))?;
-        debug_assert_eq!(rc0, col0);
-        let t0 = Instant::now();
-        let (buf, res) = handle.wait(); // aio_wait Xr[b]
-        metrics.add(Phase::ReadWait, t0.elapsed());
-        res?;
-        // A freshly read (miss) window becomes cache residency for the
-        // next job streaming this dataset.
-        if !from_cache {
-            if let (Some(cache), Some(ds)) = (cfg.cache.as_deref(), ctx.cache_dataset.as_deref()) {
-                cache.insert(block_key(ds, col0, live_total), &buf);
-            }
-        }
-        let chunks = live_total.div_ceil(mb_gpu);
-
-        // Split-send to lanes (cu_send; blocking on pool = cu_send_wait).
-        for gi in 0..chunks {
-            let live = (live_total - gi * mb_gpu).min(mb_gpu);
-            // Opportunistically drain results while waiting for a chunk buffer
-            // — this is where the S-loop of block b-1 overlaps the trsm of b.
-            let mut chunkbuf = loop {
-                if let Some(cb) = st.chunk_pools[gi].take() {
-                    break cb;
-                }
-                let t0 = Instant::now();
-                let out = lanes[gi]
-                    .rx_out
-                    .recv()
-                    .map_err(|_| Error::Pipeline(format!("lane {gi} closed early")))?;
-                metrics.add(Phase::RecvWait, t0.elapsed());
-                process_out(ctx, mb_gpu, out, &mut st, metrics, scratch)?;
-            };
-            let t0 = Instant::now();
-            chunkbuf[..n * live].copy_from_slice(&buf[gi * mb_gpu * n..gi * mb_gpu * n + n * live]);
-            chunkbuf[n * live..].fill(0.0); // zero-pad the artifact width
-            metrics.add(Phase::Send, t0.elapsed());
-            lanes[gi].submit(DevIn { block: col0, buf: chunkbuf, live })?;
-        }
-        st.host_pool.put(buf);
-
-        // Drain any already-finished results without blocking.
-        for lane in &lanes {
-            while let Ok(out) = lane.rx_out.try_recv() {
-                process_out(ctx, mb_gpu, out, &mut st, metrics, scratch)?;
-            }
-        }
-    }
-
-    // ---- drain ----------------------------------------------------------
-    // Closing the input channels lets lanes finish their queues and exit,
-    // which disconnects their output channels — the natural end-of-stream.
-    for lane in &mut lanes {
-        lane.close();
-    }
-    let mut open = vec![true; cfg.ngpus];
-    while st.retired < njobs && open.iter().any(|&o| o) {
-        for gi in 0..cfg.ngpus {
-            if !open[gi] {
-                continue;
-            }
-            let t0 = Instant::now();
-            match lanes[gi].rx_out.recv_timeout(Duration::from_millis(20)) {
-                Ok(out) => {
-                    metrics.add(Phase::RecvWait, t0.elapsed());
-                    process_out(ctx, mb_gpu, out, &mut st, metrics, scratch)?;
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => open[gi] = false,
-            }
-        }
-    }
-    if st.retired < njobs {
-        // Lanes exited without delivering everything — surface their errors.
-        for lane in lanes {
-            lane.join()?;
-        }
-        return Err(Error::Pipeline(format!("lanes exited after {}/{njobs} blocks", st.retired)));
-    }
-    // Flush writes.
-    while let Some((wc0, wlen, h)) = st.pending_writes.pop_front() {
-        let t0 = Instant::now();
-        let (wbuf, res) = h.wait();
-        metrics.add(Phase::WriteWait, t0.elapsed());
-        res?;
-        st.completed.push((wc0, wlen));
-        st.result_pool.put(wbuf);
-    }
-    ctx.writer.sync().wait().1?;
-    // Journal after the data sync so a journaled window is truly durable.
-    for (wc0, wlen) in st.completed.drain(..) {
-        journal.append(wc0, wlen)?;
-    }
-    journal.sync()?;
-
-    // Merge lane metrics.
-    let mut device_secs = 0.0;
-    for lane in lanes {
-        let lm = lane.join()?;
-        device_secs += lm.total(Phase::DeviceCompute).as_secs_f64();
-        metrics.merge(&lm);
-    }
-    Ok(device_secs)
-}
-
-fn validate(cfg: &PipelineConfig) -> Result<()> {
+pub(crate) fn validate(cfg: &PipelineConfig) -> Result<()> {
     if cfg.ngpus == 0 {
         return Err(Error::Config("ngpus must be ≥ 1".into()));
     }

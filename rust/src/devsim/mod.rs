@@ -13,7 +13,9 @@
 pub mod des;
 pub mod pipeline_model;
 pub mod profile;
+pub mod transition;
 
 pub use des::{Des, TaskId, Timeline};
 pub use pipeline_model::{simulate, simulate_cugwas_with, Algo, SimConfig, SimReport};
 pub use profile::{sloop_flops, trsm_flops, HardwareProfile};
+pub use transition::{transition_secs, SegmentKnobs};

@@ -19,6 +19,12 @@ pub struct HardwareProfile {
     /// faster than the trsm"; the `hdd()` profile models a literal
     /// spinning disk instead.
     pub disk_mbps: f64,
+    /// Per-request storage latency (seconds): seek + dispatch overhead
+    /// paid once per read/write regardless of its size. This is what
+    /// makes small-block reads slower than the linear `bytes / bw` model
+    /// predicts — and therefore what lets the DES *drive* the
+    /// grow-on-read-starved rule instead of only veto-guarding it.
+    pub disk_lat_secs: f64,
     /// Effective rate of a naive per-SNP BLAS-2 code (GFlop/s), used for
     /// the ProbABEL-like baseline. Order 0.1 = unblocked C++ loops.
     pub probabel_gflops: f64,
@@ -34,6 +40,7 @@ impl HardwareProfile {
             cpu_gflops: 128.0 * 0.9,
             pcie_gbps: 6.0,
             disk_mbps: 2000.0,
+            disk_lat_secs: 1e-4,
             probabel_gflops: 0.12,
         }
     }
@@ -47,6 +54,7 @@ impl HardwareProfile {
             cpu_gflops: 90.0 * 0.9,
             pcie_gbps: 6.0,
             disk_mbps: 2000.0,
+            disk_lat_secs: 1e-4,
             probabel_gflops: 0.12,
         }
     }
@@ -54,7 +62,9 @@ impl HardwareProfile {
     /// A literal single spinning disk (the title's HDD), for the ablation
     /// that shows where the I/O-bound crossover sits.
     pub fn hdd() -> Self {
-        HardwareProfile { name: "hdd", disk_mbps: 120.0, ..Self::quadro() }
+        // ~8 ms average seek/rotational latency per request: the number
+        // that makes tiny blocks on a spinning disk pay for themselves.
+        HardwareProfile { name: "hdd", disk_mbps: 120.0, disk_lat_secs: 8e-3, ..Self::quadro() }
     }
 
     // ---- op costs (seconds) -------------------------------------------
@@ -80,9 +90,12 @@ impl HardwareProfile {
         (n as f64) * (mb as f64) * 8.0 / (self.pcie_gbps * 1e9)
     }
 
-    /// Disk read/write of `bytes`.
+    /// Disk read/write of `bytes` as ONE request: per-request latency
+    /// plus the linear transfer term. Fewer, larger requests amortize
+    /// the latency — the model-side reason to grow the block size when
+    /// the pipeline observes itself read-starved.
     pub fn t_disk(&self, bytes: u64) -> f64 {
-        bytes as f64 / (self.disk_mbps * 1e6)
+        self.disk_lat_secs + bytes as f64 / (self.disk_mbps * 1e6)
     }
 
     /// ProbABEL-like per-SNP work: two `n²` gemv-class ops per SNP plus
@@ -149,6 +162,19 @@ mod tests {
         let p = HardwareProfile::quadro();
         let t = p.t_probabel(1_500, 3, 220_833);
         assert!((3_600.0..40_000.0).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn disk_latency_penalizes_small_requests() {
+        // Same bytes in 100 requests vs 1: the per-request term makes
+        // the split strictly slower, and dominates on the HDD profile.
+        let hdd = HardwareProfile::hdd();
+        let total = 100 * (1 << 20);
+        let one = hdd.t_disk(total);
+        let hundred = 100.0 * hdd.t_disk(total / 100);
+        assert!(hundred > one + 99.0 * hdd.disk_lat_secs * 0.999);
+        // The cluster-FS profiles keep latency nearly negligible.
+        assert!(HardwareProfile::quadro().disk_lat_secs < 1e-3);
     }
 
     #[test]

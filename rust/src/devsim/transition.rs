@@ -1,0 +1,116 @@
+//! Pricing of a mid-stream knob switch — the cost side of the in-flight
+//! re-planner's ledger.
+//!
+//! The steady-state DES ([`super::pipeline_model`]) prices what the
+//! remaining work costs *under* a configuration; it cannot see what it
+//! costs to *get there* from the configuration currently streaming. A
+//! switch is not free: buffer rings are reallocated and faulted, and a
+//! change to the per-lane threading or queue depth tears down and
+//! respawns the device lanes (their thread budget and channel depth are
+//! fixed at spawn). The re-planner adds [`transition_secs`] to every
+//! candidate's DES prediction, so a switch is only taken when the
+//! remaining work amortizes its own migration.
+
+use super::profile::HardwareProfile;
+
+/// The knobs a pipeline segment streams under — the full depth the
+/// offline planner searches, now also switchable in flight. The lane
+/// count (`ngpus`) is deliberately absent: lanes are the pipeline's
+/// structural concurrency and stay fixed for a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentKnobs {
+    /// SNP columns per pipeline iteration (across all lanes).
+    pub block: usize,
+    /// Host ring size (read + result rings).
+    pub host_buffers: usize,
+    /// Device buffers per lane (the lane channel depth).
+    pub device_buffers: usize,
+    /// Kernel threads per device lane (the lane-vs-S-loop split).
+    pub lane_threads: usize,
+}
+
+/// Thread + statics setup cost of respawning one device lane.
+const LANE_SPAWN_SECS: f64 = 1e-3;
+
+/// Seconds a live pipeline pays to move from `cur` to `cand` at a
+/// segment boundary, beyond what both configurations pay anyway (the
+/// boundary's write flush + journal sync). `n`/`p` are the study's
+/// sample count and result rows, `ngpus` the lane count.
+pub fn transition_secs(
+    cur: &SegmentKnobs,
+    cand: &SegmentKnobs,
+    n: usize,
+    p: usize,
+    ngpus: usize,
+    profile: &HardwareProfile,
+) -> f64 {
+    if cur == cand {
+        return 0.0;
+    }
+    let g = ngpus.max(1);
+    let memcpy_bps = (profile.pcie_gbps * 1e9).max(1.0);
+    let mut secs = 0.0;
+    // Ring geometry changed → the host ring, result ring, and per-lane
+    // staging chunks are reallocated, zeroed, and page-faulted.
+    if (cand.block, cand.host_buffers, cand.device_buffers)
+        != (cur.block, cur.host_buffers, cur.device_buffers)
+    {
+        let mb = cand.block / g;
+        let ring = cand.host_buffers * cand.block * (n + p);
+        let chunks = cand.device_buffers * g * n * mb;
+        secs += (8 * (ring + chunks)) as f64 / memcpy_bps;
+    }
+    // Lane thread budget or channel depth changed → every lane is torn
+    // down and respawned, re-cloning its statics (L plus the preprocess
+    // products, ≈ 3 n² f64).
+    if cand.lane_threads != cur.lane_threads || cand.device_buffers != cur.device_buffers {
+        secs += g as f64 * (LANE_SPAWN_SECS + (3 * n * n * 8) as f64 / memcpy_bps);
+    }
+    secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn knobs(block: usize, hb: usize, db: usize, lt: usize) -> SegmentKnobs {
+        SegmentKnobs { block, host_buffers: hb, device_buffers: db, lane_threads: lt }
+    }
+
+    #[test]
+    fn staying_put_is_free_and_any_switch_is_not() {
+        let p = HardwareProfile::quadro();
+        let a = knobs(1024, 3, 2, 2);
+        assert_eq!(transition_secs(&a, &a, 512, 4, 1, &p), 0.0);
+        let moves = [
+            knobs(2048, 3, 2, 2),
+            knobs(1024, 4, 2, 2),
+            knobs(1024, 3, 3, 2),
+            knobs(1024, 3, 2, 4),
+        ];
+        for b in moves {
+            assert!(transition_secs(&a, &b, 512, 4, 1, &p) > 0.0, "{b:?}");
+        }
+    }
+
+    #[test]
+    fn lane_respawn_costs_more_than_a_pool_resize() {
+        // Same ring geometry, threading changed vs a small block change:
+        // the lane teardown (fixed spawn cost + statics re-clone) must
+        // dominate at modest n.
+        let p = HardwareProfile::quadro();
+        let a = knobs(256, 3, 2, 2);
+        let threads = transition_secs(&a, &knobs(256, 3, 2, 4), 512, 4, 2, &p);
+        let pools = transition_secs(&a, &knobs(512, 3, 2, 2), 512, 4, 2, &p);
+        assert!(threads > pools, "{threads} vs {pools}");
+    }
+
+    #[test]
+    fn bigger_candidates_cost_more_to_build() {
+        let p = HardwareProfile::quadro();
+        let a = knobs(1024, 3, 2, 2);
+        let small = transition_secs(&a, &knobs(2048, 3, 2, 2), 512, 4, 1, &p);
+        let big = transition_secs(&a, &knobs(8192, 6, 2, 2), 512, 4, 1, &p);
+        assert!(big > small);
+    }
+}

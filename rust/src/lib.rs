@@ -29,15 +29,20 @@
 //! * [`devsim`] — discrete-event simulator with the paper's hardware
 //!   constants (Quadro 6000 / Tesla S2050 clusters).
 //! * [`coordinator`] — the paper's contribution: the multibuffered
-//!   streaming pipeline (Listing 1.3).
+//!   streaming pipeline (Listing 1.3), executed by the unified
+//!   [`coordinator::engine::Engine`] — a long-lived core owning the aio
+//!   engines, device lanes and buffer rings, reused across adaptive
+//!   segments and across back-to-back runs.
 //! * [`service`] — the multi-study scheduler behind `cugwas serve`: a
-//!   priority job queue with memory-budget admission, worker lanes over
-//!   the coordinator, and the shared [`storage::BlockCache`] that lets
-//!   concurrent/repeated studies on one dataset skip the HDD.
+//!   priority job queue with memory-budget admission, worker lanes each
+//!   holding a warm engine, tune-on-first-contact per dataset, and the
+//!   shared [`storage::BlockCache`] that lets concurrent/repeated
+//!   studies on one dataset skip the HDD.
 //! * [`tune`] — the model-driven autotuner behind `cugwas tune`:
-//!   probe the machine, search the knob space with the DES as the
-//!   objective, emit a profile `run`/`serve` apply — and re-plan live
-//!   at segment boundaries when the stall profile diverges.
+//!   probe the machine (disk bandwidth *and* per-request latency),
+//!   search the knob space with the DES as the objective, emit a
+//!   profile `run`/`serve` apply — and re-plan the full knob depth live
+//!   at segment boundaries, transition costs included.
 //! * [`baselines`] — naive offload (Fig. 3), OOC-HP-GWAS (Listing 1.2),
 //!   and a ProbABEL-like per-SNP solver.
 

@@ -195,8 +195,10 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         popts.threads
     };
     println!(
-        "probe: disk {:.0} MB/s over {}, memcpy {:.1} GB/s, kernels at {} thread counts{}",
+        "probe: disk {:.0} MB/s + {:.2} ms/request over {}, memcpy {:.1} GB/s, kernels at {} \
+         thread counts{}",
         rates.disk_mbps,
+        rates.disk_lat_secs * 1e3,
         human_bytes(rates.disk_bytes),
         rates.pcie_gbps,
         rates.kernels.len(),
@@ -216,7 +218,7 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     };
     let profile = plan(&rates, meta.dims, &opts);
     let out = if a.str("out").is_empty() {
-        dataset.join("tuned.toml")
+        cugwas::tune::TunedProfile::default_path(&dataset)
     } else {
         PathBuf::from(a.str("out"))
     };
@@ -312,8 +314,11 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         adapt_every: a.usize("adapt-every")?,
     };
     // A tuned profile supplies defaults; flags the user typed still win.
+    // Loading shares one error path with the `[pipeline]`/`[job.*]`
+    // `profile` keys and the service's first-contact tuner.
     if !a.str("profile").is_empty() {
-        let prof = cugwas::tune::TunedProfile::load(Path::new(a.str("profile")))?;
+        let prof =
+            cugwas::tune::profile::load_or_default(Some(Path::new(a.str("profile"))), 0, 0)?;
         if !a.given("block") {
             cfg.block = prof.block;
         }

@@ -20,6 +20,6 @@ pub mod queue;
 pub mod report;
 pub mod scheduler;
 
-pub use queue::{Job, JobQueue, JobSpec, JobState, Priority};
+pub use queue::{Job, JobQueue, JobSpec, JobState, KnobPins, Priority};
 pub use report::{JobReport, ServiceReport};
 pub use scheduler::serve;

@@ -24,6 +24,20 @@ use std::path::PathBuf;
 /// Scheduling priority: higher runs first; FIFO within equal priority.
 pub type Priority = i32;
 
+/// Which pipeline knobs a job's config/spool file set *explicitly*.
+/// The service's tune-on-first-contact fills only unpinned knobs from a
+/// dataset's tuned profile — an operator's explicit key always wins,
+/// the same precedence `run --profile` gives CLI flags.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KnobPins {
+    pub block: bool,
+    pub ngpus: bool,
+    pub host_buffers: bool,
+    pub device_buffers: bool,
+    pub threads: bool,
+    pub lane_threads: bool,
+}
+
 /// Everything one queued study needs from the pipeline.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -59,6 +73,13 @@ pub struct JobSpec {
     /// jobs first (shortest-job-first); unprofiled jobs keep FIFO order
     /// after them.
     pub predicted_secs: Option<f64>,
+    /// Knobs the operator set explicitly (see [`KnobPins`]).
+    pub pins: KnobPins,
+    /// A profile has already been applied to this spec (an explicit
+    /// `profile` key, or the service's first-contact tuner). Guards
+    /// against the first-contact tuner overriding an operator-chosen
+    /// profile whose `predicted_secs` happens to be absent.
+    pub profile_attached: bool,
 }
 
 impl JobSpec {
@@ -82,7 +103,46 @@ impl JobSpec {
             adapt: false,
             adapt_every: 16,
             predicted_secs: None,
+            pins: KnobPins::default(),
+            profile_attached: false,
         }
+    }
+
+    /// Fill the unpinned pipeline knobs from a tuned profile and attach
+    /// its DES prediction for shortest-job-first admission. Pinned
+    /// knobs (explicit config keys) are left untouched.
+    pub fn apply_profile(&mut self, tuned: &crate::tune::TunedProfile) {
+        if !self.pins.block {
+            self.block = tuned.block;
+        }
+        if !self.pins.ngpus {
+            self.ngpus = tuned.ngpus;
+        }
+        if !self.pins.host_buffers {
+            self.host_buffers = tuned.host_buffers;
+        }
+        if !self.pins.device_buffers {
+            self.device_buffers = tuned.device_buffers;
+        }
+        if !self.pins.threads {
+            self.threads = tuned.threads;
+        }
+        if !self.pins.lane_threads {
+            self.lane_threads = tuned.lane_threads;
+        }
+        // The merged knobs must keep the block dividing across the
+        // lanes. An unpinned block rounds down to the lane multiple; a
+        // pinned block wins over a profile-supplied lane count instead
+        // (dropping to one lane rather than failing validation later).
+        if self.ngpus > 0 && self.block % self.ngpus != 0 {
+            if !self.pins.block {
+                self.block = ((self.block / self.ngpus) * self.ngpus).max(self.ngpus);
+            } else if !self.pins.ngpus {
+                self.ngpus = 1;
+            }
+        }
+        self.predicted_secs = tuned.predicted();
+        self.profile_attached = true;
     }
 
     /// Estimated steady-state host bytes for this job given the study's
@@ -198,6 +258,19 @@ impl JobQueue {
         Some(self.jobs[idx].clone())
     }
 
+    /// Whether any queued job could be admitted under `budget_left`.
+    /// Non-mutating twin of [`JobQueue::admit_next`]'s filter — the
+    /// dispatcher uses it to decide whether evicting idle warm engines
+    /// would actually unblock work (memory is the binding constraint)
+    /// rather than churning caches on a dataset lock.
+    pub fn would_admit(&self, budget_left: u64, busy_datasets: &HashSet<PathBuf>) -> bool {
+        self.jobs.iter().any(|j| {
+            j.state == JobState::Queued
+                && j.est_bytes <= budget_left
+                && !busy_datasets.contains(&j.dataset_key)
+        })
+    }
+
     /// Mark every queued job whose estimate exceeds the *total* budget as
     /// failed (it could never be admitted, even on an idle service) and
     /// return copies for reporting.
@@ -306,8 +379,11 @@ mod tests {
         assert!(q.admit_next(400, &no_busy()).is_none());
         assert_eq!(q.queued(), 1, "big is still queued, not cancelled");
         // Capacity frees up → big is admitted.
+        assert!(q.would_admit(1000, &no_busy()));
+        assert!(!q.would_admit(400, &no_busy()), "peek matches admit");
         let j = q.admit_next(1000, &no_busy()).expect("big fits now");
         assert_eq!(j.spec.name, "big");
+        assert!(!q.would_admit(u64::MAX, &no_busy()), "nothing queued anymore");
     }
 
     #[test]
@@ -350,6 +426,35 @@ mod tests {
         assert!(!q.is_drained());
         q.set_state(id, JobState::Done);
         assert!(q.is_drained());
+    }
+
+    #[test]
+    fn apply_profile_respects_pins_and_divisibility() {
+        let mut tuned = crate::tune::TunedProfile::safe_defaults(4096, 4);
+        tuned.block = 1000;
+        tuned.ngpus = 4;
+        tuned.predicted_secs = 2.0;
+        // Unpinned: everything applies (the tuned block divides its lanes).
+        let mut s = JobSpec::new("a", "/d");
+        s.apply_profile(&tuned);
+        assert_eq!((s.block, s.ngpus), (1000, 4));
+        assert_eq!(s.predicted_secs, Some(2.0));
+        assert!(s.profile_attached);
+        // A pinned block the tuned lane count does not divide: the pin
+        // wins and the lane count falls back to one.
+        let mut s = JobSpec::new("b", "/d");
+        s.block = 50;
+        s.pins.block = true;
+        s.apply_profile(&tuned);
+        assert_eq!((s.block, s.ngpus), (50, 1));
+        // A pinned lane count with a non-dividing tuned block: the
+        // block rounds down to the lane multiple.
+        let mut s = JobSpec::new("c", "/d");
+        s.ngpus = 3;
+        s.pins.ngpus = true;
+        s.apply_profile(&tuned);
+        assert_eq!(s.ngpus, 3);
+        assert_eq!(s.block, 999);
     }
 
     #[test]

@@ -25,6 +25,9 @@ pub struct JobReport {
     pub metrics: Option<Metrics>,
     /// `Some` means the job failed with this error.
     pub error: Option<String>,
+    /// The job rode a warm engine left by the previous job on the same
+    /// dataset (preprocess, reader, lanes and pools all reused).
+    pub reused_engine: bool,
 }
 
 impl JobReport {
@@ -42,6 +45,7 @@ impl JobReport {
             cache_misses: 0,
             metrics: None,
             error: Some(error),
+            reused_engine: false,
         }
     }
 
@@ -67,7 +71,14 @@ impl JobReport {
             cache_misses: metrics.count(Phase::CacheMiss),
             metrics: Some(metrics),
             error: None,
+            reused_engine: false,
         }
+    }
+
+    /// Mark whether this job ran on a reused engine.
+    pub fn with_reused_engine(mut self, reused: bool) -> Self {
+        self.reused_engine = reused;
+        self
     }
 
     pub fn ok(&self) -> bool {
@@ -134,12 +145,15 @@ impl ServiceReport {
                 out.push_str(&m.table(Duration::from_secs_f64(j.wall_secs)));
             }
         }
+        let reused = self.jobs.iter().filter(|j| j.reused_engine).count();
         out.push_str(&format!(
-            "\nservice: {} job(s) ({} failed) on {} worker lane(s), mem budget {}\n",
+            "\nservice: {} job(s) ({} failed) on {} worker lane(s), mem budget {}, \
+             {} warm-engine reuse(s)\n",
             self.jobs.len(),
             self.failed(),
             self.workers,
             human_bytes(self.mem_budget_bytes),
+            reused,
         ));
         out.push_str(&format!(
             "aggregate: {} SNPs in {} — {:.0} SNPs/s across the fleet\n",

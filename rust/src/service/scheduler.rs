@@ -6,25 +6,38 @@
 //!
 //! ```text
 //!   config [job.*] ─┐
-//!                   ├─▶ JobQueue ─admit─▶ worker lanes ──▶ coordinator::run
+//!                   ├─▶ JobQueue ─admit─▶ worker lanes ──▶ coordinator::Engine
 //!   spool *.toml ───┘   (priority,        (N threads,         │
 //!                        mem budget,       rendezvous          ▼
 //!                        dataset lock)     channels)      shared BlockCache
 //! ```
 //!
-//! The dispatcher thread owns the queue and the memory ledger; workers
-//! own nothing but the job they are streaming. Admission charges a job's
+//! The dispatcher thread owns the queue and the memory ledger; each
+//! worker owns the job it is streaming plus one *warm engine*: when the
+//! next job targets the same dataset with a compatible configuration,
+//! it executes on the resident [`Engine`] and inherits its preprocess,
+//! aio reader, device lanes and buffer rings — the serve-side payoff of
+//! the unified streaming core. A resident warm engine keeps its bytes
+//! charged against the memory ledger (its rings and preprocess are
+//! still alive) and is evicted — never a job starved — when queued work
+//! could only be admitted by reclaiming it. Admission charges a job's
 //! estimated host footprint against `mem_budget_bytes` and releases it
-//! on completion, so a burst of submissions degrades to queueing — never
-//! to swapping, which on the paper's analysis would destroy the
-//! disk-bound pipeline's sustained peak.
+//! on completion,
+//! so a burst of submissions degrades to queueing — never to swapping,
+//! which on the paper's analysis would destroy the disk-bound
+//! pipeline's sustained peak. Submission is also where
+//! **tune-on-first-contact** happens: a dataset arriving without a
+//! tuned profile is probed + planned once (cheap), the profile is
+//! persisted next to it, and its DES prediction feeds the queue's
+//! shortest-job-first ordering.
 
 use crate::config::ServiceConfig;
-use crate::coordinator::{self, PipelineConfig};
+use crate::coordinator::{Engine, PipelineConfig};
 use crate::error::{Error, Result};
 use crate::service::queue::{Job, JobQueue, JobSpec, JobState};
 use crate::service::report::{JobReport, ServiceReport};
 use crate::storage::{dataset, BlockCache};
+use crate::tune::{self, PlanOpts, ProbeOpts, TunedProfile};
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError, SyncSender};
@@ -36,8 +49,32 @@ use std::time::{Duration, Instant};
 /// jobs are in flight or the service is watching.
 const SPOOL_POLL: Duration = Duration::from_millis(200);
 
+/// Disk-probe budget for tune-on-first-contact — kept small so a new
+/// dataset's first submission costs milliseconds, not a second pass
+/// over the file.
+const FIRST_CONTACT_PROBE_BYTES: u64 = 8 << 20;
+
+/// How the dispatcher attaches profiles at submission time.
+#[derive(Clone, Copy)]
+struct SubmitOpts {
+    /// Probe + plan datasets that have no persisted profile.
+    auto_tune: bool,
+    /// Thread budget a job will actually run under (the worker share) —
+    /// what the probe calibrates and the planner searches.
+    plan_threads: usize,
+}
+
+/// What the dispatcher sends a worker lane.
+enum LaneMsg {
+    /// Stream this job.
+    Run(Job),
+    /// Release the warm engine (the dispatcher reclaims its budget to
+    /// admit queued work that would not otherwise fit).
+    DropEngine,
+}
+
 struct WorkerLane {
-    tx: Option<SyncSender<Job>>,
+    tx: Option<SyncSender<LaneMsg>>,
     handle: JoinHandle<()>,
     busy: bool,
 }
@@ -70,7 +107,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     let (res_tx, res_rx) = channel::<(usize, JobReport)>();
     let mut lanes: Vec<WorkerLane> = Vec::with_capacity(cfg.workers);
     for wi in 0..cfg.workers {
-        let (tx, rx) = sync_channel::<Job>(0);
+        let (tx, rx) = sync_channel::<LaneMsg>(0);
         let res_tx = res_tx.clone();
         // cache_bytes = 0 disables the cache entirely: jobs stream
         // straight from disk exactly as `cugwas run` does.
@@ -78,7 +115,18 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
         let handle = std::thread::Builder::new()
             .name(format!("cugwas-svc-{wi}"))
             .spawn(move || {
-                while let Ok(job) = rx.recv() {
+                // The lane's warm engine: back-to-back jobs on one
+                // dataset reuse its preprocess, aio reader, device lanes
+                // and buffer rings instead of rebuilding the world.
+                let mut engine: Option<Engine> = None;
+                while let Ok(msg) = rx.recv() {
+                    let job = match msg {
+                        LaneMsg::Run(job) => job,
+                        LaneMsg::DropEngine => {
+                            engine = None;
+                            continue;
+                        }
+                    };
                     // A panic inside the pipeline (poisoned pool assert,
                     // debug overflow, …) must become a failed report, not
                     // a silently dead lane: with other lanes still alive
@@ -86,7 +134,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                     // completion forever.
                     let cache = cache.clone();
                     let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || run_job(&job, cache, worker_threads),
+                        || run_job(&job, cache, worker_threads, &mut engine),
                     ))
                     .unwrap_or_else(|_| {
                         JobReport::failed(
@@ -107,13 +155,14 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     drop(res_tx); // workers hold the only senders now
 
     // Seed the queue from the config, then from the spool.
+    let submit_opts = SubmitOpts { auto_tune: cfg.auto_tune, plan_threads: worker_threads };
     let mut queue = JobQueue::new();
     let mut reports: Vec<JobReport> = Vec::new();
     for spec in &cfg.jobs {
-        submit_spec(&mut queue, spec.clone(), &mut reports);
+        submit_spec(&mut queue, spec.clone(), &mut reports, submit_opts);
     }
     let mut spool_state = SpoolState::default();
-    scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports);
+    scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports, submit_opts);
     for job in queue.fail_oversized(cfg.mem_budget_bytes) {
         reports.push(oversized_report(&job, cfg.mem_budget_bytes));
     }
@@ -122,12 +171,53 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     let mut mem_in_use = 0u64;
     let mut busy_datasets: HashSet<PathBuf> = HashSet::new();
     let mut inflight: HashMap<usize, Job> = HashMap::new();
+    // Per-lane residency of the warm engine: the dataset it is warm for
+    // and the host bytes it keeps alive. Resident engines stay charged
+    // against the admission budget (the rings and preprocess do not
+    // vanish when the job's ledger entry is released) until the lane is
+    // reused — or evicted, when queued work cannot otherwise fit.
+    let mut warm: Vec<Option<(PathBuf, u64)>> = vec![None; cfg.workers];
     loop {
         // Hand admissible jobs to idle lanes.
-        while let Some(wi) = lanes.iter().position(|l| !l.busy) {
-            let budget_left = cfg.mem_budget_bytes - mem_in_use;
-            let Some(job) = queue.admit_next(budget_left, &busy_datasets) else { break };
+        while lanes.iter().any(|l| !l.busy) {
+            let reserved: u64 = warm.iter().flatten().map(|(_, b)| *b).sum();
+            let budget_left =
+                cfg.mem_budget_bytes.saturating_sub(mem_in_use).saturating_sub(reserved);
+            let Some(job) = queue.admit_next(budget_left, &busy_datasets) else {
+                // Nothing fits. Evict idle warm engines only when their
+                // reserved bytes are what actually blocks admission —
+                // queued work beats a warm cache, but an engine must
+                // not be churned over a dataset lock.
+                let unblocks = reserved > 0
+                    && queue.would_admit(budget_left + reserved, &busy_datasets);
+                let mut evicted = false;
+                if unblocks {
+                    for (wi, lane) in lanes.iter().enumerate() {
+                        if lane.busy || warm[wi].is_none() {
+                            continue;
+                        }
+                        let tx = lane.tx.as_ref().expect("lane sender alive");
+                        if tx.send(LaneMsg::DropEngine).is_ok() {
+                            warm[wi] = None;
+                            evicted = true;
+                        }
+                    }
+                }
+                if evicted {
+                    continue;
+                }
+                break;
+            };
+            // Prefer the idle lane already warm on this job's dataset
+            // (the reuse the engine refactor pays for), else any idle.
+            let matching = (0..lanes.len()).filter(|&wi| !lanes[wi].busy).find(|&wi| {
+                warm[wi].as_ref().is_some_and(|(ds, _)| *ds == job.dataset_key)
+            });
+            let wi = matching
+                .or_else(|| (0..lanes.len()).find(|&wi| !lanes[wi].busy))
+                .expect("an idle lane exists");
             mem_in_use += job.est_bytes;
+            warm[wi] = None; // the resident engine is reused or replaced
             busy_datasets.insert(job.dataset_key.clone());
             queue.set_state(job.id, JobState::Streaming);
             inflight.insert(wi, job.clone());
@@ -136,7 +226,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             lane.tx
                 .as_ref()
                 .expect("lane sender alive")
-                .send(job)
+                .send(LaneMsg::Run(job))
                 .map_err(|_| Error::Pipeline("service worker lane died".into()))?;
         }
 
@@ -144,7 +234,13 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             // Idle. One more spool scan; exit unless watching, new work
             // arrived, or a spool file is still settling (mid-write).
             let before = queue.all().len();
-            scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports);
+            scan_spool(
+                cfg.spool.as_deref(),
+                &mut spool_state,
+                &mut queue,
+                &mut reports,
+                submit_opts,
+            );
             for job in queue.fail_oversized(cfg.mem_budget_bytes) {
                 reports.push(oversized_report(&job, cfg.mem_budget_bytes));
             }
@@ -163,6 +259,10 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             Ok((wi, report)) => {
                 let job = inflight.remove(&wi).expect("completion from a dispatched lane");
                 mem_in_use -= job.est_bytes;
+                // A successful run leaves the engine warm on this lane;
+                // its footprint stays charged until reuse or eviction.
+                // A failed run dropped the engine.
+                warm[wi] = report.ok().then(|| (job.dataset_key.clone(), job.est_bytes));
                 busy_datasets.remove(&job.dataset_key);
                 lanes[wi].busy = false;
                 queue.set_state(
@@ -176,7 +276,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 return Err(Error::Pipeline("all service worker lanes exited".into()));
             }
         }
-        scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports);
+        scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports, submit_opts);
         for job in queue.fail_oversized(cfg.mem_budget_bytes) {
             reports.push(oversized_report(&job, cfg.mem_budget_bytes));
         }
@@ -200,14 +300,102 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
 }
 
 /// Estimate a spec's host footprint from the dataset's metadata (cheap:
-/// reads `meta.txt` only).
+/// reads `meta.txt` only). The spec's knobs are the *planned* ones when
+/// a tuned profile was attached (first-contact or `profile` key), so
+/// admission bills the geometry the job will actually stream with
+/// instead of a static worst-case — a tuned small-block plan no longer
+/// gets rejected for a default ring it will never allocate.
 fn estimate_bytes(spec: &JobSpec) -> Result<u64> {
     let meta = dataset::load_meta(&spec.dataset)?;
     Ok(spec.host_bytes(meta.dims.n, meta.dims.p()))
 }
 
+/// Tune-on-first-contact: make sure the spec carries a profile before
+/// its footprint is estimated and its admission rank decided. An
+/// existing `<dataset>/tuned.toml` is loaded; with `auto_tune` on, a
+/// missing one is created by a cheap probe + plan and persisted next to
+/// the dataset for every later job (and every other tool) to reuse.
+/// Explicitly pinned knobs are never overridden; failures here only
+/// lose the optimization, never the job.
+fn attach_first_contact_profile(spec: &mut JobSpec, opts: SubmitOpts) {
+    if spec.profile_attached || !opts.auto_tune {
+        // An explicit `profile` key always wins over first contact, and
+        // `auto_tune = false` means "stream exactly the configured
+        // knobs" — neither probing nor applying a found profile.
+        return;
+    }
+    let path = TunedProfile::default_path(&spec.dataset);
+    let tuned = if path.exists() {
+        match tune::profile::load_or_default(Some(&path), 0, 0) {
+            Ok(t) => t,
+            Err(e) => {
+                crate::log_warn!("service", "ignoring unreadable profile {}: {e}", path.display());
+                return;
+            }
+        }
+    } else {
+        match tune_first_contact(spec, opts.plan_threads, &path) {
+            Some(t) => t,
+            None => return,
+        }
+    };
+    spec.apply_profile(&tuned);
+}
+
+/// Probe + plan a dataset the service has never seen, persisting the
+/// profile beside it. `None` when the dataset is unreadable (the
+/// estimate will fail the job with a better error) — probing never
+/// sinks a submission.
+///
+/// This runs synchronously on the dispatcher thread, so it briefly
+/// delays admission: ~10 MB of reads plus the quick kernel/memcpy
+/// probes (tens of milliseconds). It is paid once per dataset *ever* —
+/// the persisted profile short-circuits every later submission — and a
+/// spool burst of K new datasets costs K probes before the first
+/// dispatch, a bounded, amortized trade the module docs call out.
+fn tune_first_contact(spec: &JobSpec, plan_threads: usize, out: &Path) -> Option<TunedProfile> {
+    let meta = dataset::load_meta(&spec.dataset).ok()?;
+    let popts = ProbeOpts {
+        threads: plan_threads,
+        max_disk_bytes: FIRST_CONTACT_PROBE_BYTES,
+        read_throttle: spec.read_throttle,
+        quick: true,
+    };
+    let rates = tune::probe_dataset(&spec.dataset, &popts).ok()?;
+    let opts = PlanOpts {
+        total_threads: plan_threads.max(1),
+        max_lanes: spec.ngpus.max(1),
+        host_mem_bytes: 0,
+        max_block: 0,
+    };
+    let profile = tune::plan(&rates, meta.dims, &opts);
+    match profile.save(out) {
+        Ok(()) => crate::log_info!(
+            "service",
+            "first contact with {}: tuned block {} × {} lane(s), {} host / {} device buffers \
+             → {}",
+            spec.dataset.display(),
+            profile.block,
+            profile.ngpus,
+            profile.host_buffers,
+            profile.device_buffers,
+            out.display()
+        ),
+        Err(e) => {
+            crate::log_warn!("service", "could not persist {}: {e}", out.display());
+        }
+    }
+    Some(profile)
+}
+
 /// Queue a spec, or record an immediate failure (bad dataset, bad dims).
-fn submit_spec(queue: &mut JobQueue, spec: JobSpec, reports: &mut Vec<JobReport>) {
+fn submit_spec(
+    queue: &mut JobQueue,
+    mut spec: JobSpec,
+    reports: &mut Vec<JobReport>,
+    opts: SubmitOpts,
+) {
+    attach_first_contact_profile(&mut spec, opts);
     match estimate_bytes(&spec) {
         Ok(est) => {
             // Same canonicalization the pipeline keys the cache by.
@@ -224,13 +412,20 @@ fn submit_spec(queue: &mut JobQueue, spec: JobSpec, reports: &mut Vec<JobReport>
 }
 
 fn oversized_report(job: &Job, budget: u64) -> JobReport {
+    let spec = &job.spec;
     JobReport::failed(
-        job.spec.name.clone(),
-        job.spec.dataset.clone(),
-        job.spec.priority,
+        spec.name.clone(),
+        spec.dataset.clone(),
+        spec.priority,
         format!(
-            "estimated host footprint {} exceeds the service memory budget {}",
+            "estimated host footprint {} ({} geometry: block {} × {} lane(s), {} host / {} \
+             device buffers) exceeds the service memory budget {}",
             crate::util::human_bytes(job.est_bytes),
+            if spec.predicted_secs.is_some() { "tuned" } else { "requested" },
+            spec.block,
+            spec.ngpus,
+            spec.host_buffers,
+            spec.device_buffers,
             crate::util::human_bytes(budget)
         ),
     )
@@ -254,6 +449,7 @@ fn scan_spool(
     state: &mut SpoolState,
     queue: &mut JobQueue,
     reports: &mut Vec<JobReport>,
+    opts: SubmitOpts,
 ) {
     let Some(dir) = spool else { return };
     let Ok(entries) = std::fs::read_dir(dir) else { return };
@@ -274,7 +470,7 @@ fn scan_spool(
             Ok(spec) => {
                 state.seen.insert(path.clone());
                 state.pending_bad.remove(&path);
-                submit_spec(queue, spec, reports);
+                submit_spec(queue, spec, reports, opts);
             }
             Err(e) => {
                 let mtime = std::fs::metadata(&path).and_then(|m| m.modified()).ok();
@@ -311,10 +507,20 @@ fn scan_spool(
     }
 }
 
-/// Stream one job through the coordinator on this worker lane.
+/// Stream one job through the unified engine on this worker lane.
 /// `worker_threads` is this lane's share of the host cores; a job spec
-/// with an explicit `threads` overrides it.
-fn run_job(job: &Job, cache: Option<Arc<BlockCache>>, worker_threads: usize) -> JobReport {
+/// with an explicit `threads` overrides it. `slot` is the lane's warm
+/// engine: when the incoming job is compatible (same dataset identity,
+/// mode, backend, thread budget, cache), the job executes on it and the
+/// preprocess/reader/lanes/pools all carry over; otherwise a fresh
+/// engine is opened and becomes the new resident. A failed run drops
+/// the engine — the next job starts clean.
+fn run_job(
+    job: &Job,
+    cache: Option<Arc<BlockCache>>,
+    worker_threads: usize,
+    slot: &mut Option<Engine>,
+) -> JobReport {
     let spec = &job.spec;
     let cfg = PipelineConfig {
         dataset: spec.dataset.clone(),
@@ -333,22 +539,31 @@ fn run_job(job: &Job, cache: Option<Arc<BlockCache>>, worker_threads: usize) -> 
         adapt: spec.adapt,
         adapt_every: spec.adapt_every,
     };
-    match coordinator::run(&cfg) {
-        Ok(rep) => JobReport::done(
-            spec.name.clone(),
-            spec.dataset.clone(),
-            spec.priority,
-            rep.wall_secs,
-            rep.snps,
-            rep.blocks,
-            rep.metrics,
-        ),
-        Err(e) => JobReport::failed(
-            spec.name.clone(),
-            spec.dataset.clone(),
-            spec.priority,
-            e.to_string(),
-        ),
+    let failed = |e: &Error| {
+        JobReport::failed(spec.name.clone(), spec.dataset.clone(), spec.priority, e.to_string())
+    };
+    let (mut engine, reused) = match slot.take() {
+        Some(engine) if engine.compatible(&cfg) => (engine, true),
+        _ => match Engine::open(&cfg) {
+            Ok(engine) => (engine, false),
+            Err(e) => return failed(&e),
+        },
+    };
+    match engine.execute(&cfg) {
+        Ok(rep) => {
+            *slot = Some(engine);
+            JobReport::done(
+                spec.name.clone(),
+                spec.dataset.clone(),
+                spec.priority,
+                rep.wall_secs,
+                rep.snps,
+                rep.blocks,
+                rep.metrics,
+            )
+            .with_reused_engine(reused)
+        }
+        Err(e) => failed(&e),
     }
 }
 
@@ -372,6 +587,9 @@ mod tests {
             threads: 0,
             spool: None,
             watch: false,
+            // Off by default in tests: explicit blocks stay explicit and
+            // no probe noise; the first-contact test opts back in.
+            auto_tune: false,
             jobs,
         }
     }
@@ -456,5 +674,85 @@ mod tests {
     #[test]
     fn zero_workers_rejected() {
         assert!(serve(&small_cfg(vec![], 0, 0)).is_err());
+    }
+
+    #[test]
+    fn first_contact_tunes_persists_and_back_to_back_jobs_reuse_the_engine() {
+        use crate::coordinator::verify_against_oracle;
+        use crate::tune::TunedProfile;
+        let d = tmpdir("firstcontact");
+        generate(&d, Dims::new(48, 2, 512).unwrap(), 64, 21).unwrap();
+        assert!(!d.join("tuned.toml").exists());
+        // Two knob-free jobs on one dataset, one worker lane: the first
+        // submission tunes the dataset, the second rides both the
+        // persisted profile and the first job's warm engine.
+        let cfg = {
+            let mut c = small_cfg(vec![JobSpec::new("one", &d), JobSpec::new("two", &d)], 1, 16);
+            c.auto_tune = true;
+            c
+        };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.failed(), 0, "{}", rep.render());
+        // The profile was persisted next to the dataset (a tiny dataset
+        // probes degenerate — safe defaults still count as a profile)…
+        let prof = TunedProfile::load(&d.join("tuned.toml")).unwrap();
+        assert!(prof.block >= 1 && prof.threads >= 1);
+        // …the jobs streamed with its knobs…
+        let one = rep.jobs.iter().find(|j| j.name == "one").unwrap();
+        let two = rep.jobs.iter().find(|j| j.name == "two").unwrap();
+        assert_eq!(one.blocks, 512usize.div_ceil(prof.block));
+        // …and the second run rode the first's warm engine.
+        assert!(!one.reused_engine);
+        assert!(two.reused_engine, "{}", rep.render());
+        assert!(rep.render().contains("1 warm-engine reuse(s)"), "{}", rep.render());
+        verify_against_oracle(&d, 1e-8).unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn warm_engine_is_evicted_when_its_budget_blocks_the_next_job() {
+        // One worker, a budget that fits one job OR one warm engine but
+        // not both: after job a completes, its resident engine's bytes
+        // must be reclaimed (LaneMsg::DropEngine) so job b — a
+        // different dataset — can be admitted instead of queueing
+        // forever against memory the idle engine is holding.
+        let a = tmpdir("evict_a");
+        let b = tmpdir("evict_b");
+        generate(&a, Dims::new(24, 2, 32).unwrap(), 8, 1).unwrap();
+        generate(&b, Dims::new(24, 2, 32).unwrap(), 8, 2).unwrap();
+        let mut ja = JobSpec::new("a", &a);
+        ja.block = 8;
+        ja.priority = 1; // runs first, leaves its engine warm
+        let mut jb = JobSpec::new("b", &b);
+        jb.block = 8;
+        let est = ja.host_bytes(24, 3);
+        let mut cfg = small_cfg(vec![ja, jb], 1, 0);
+        cfg.mem_budget_bytes = est + est / 2;
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.jobs.len(), 2, "{}", rep.render());
+        assert_eq!(rep.failed(), 0, "{}", rep.render());
+        std::fs::remove_dir_all(&a).unwrap();
+        std::fs::remove_dir_all(&b).unwrap();
+    }
+
+    #[test]
+    fn pinned_knobs_survive_first_contact_tuning() {
+        let d = tmpdir("pinned");
+        generate(&d, Dims::new(32, 2, 256).unwrap(), 32, 9).unwrap();
+        // Persist a profile whose block differs from the pinned one.
+        let mut tuned = crate::tune::TunedProfile::safe_defaults(256, 2);
+        tuned.block = 128;
+        tuned.predicted_secs = 3.0;
+        tuned.save(&d.join("tuned.toml")).unwrap();
+        let mut j = JobSpec::new("pinned", &d);
+        j.block = 32;
+        j.pins.block = true;
+        let mut cfg = small_cfg(vec![j], 1, 0);
+        cfg.auto_tune = true;
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.failed(), 0, "{}", rep.render());
+        // 256 SNPs at the pinned block 32 → 8 windows, not 2.
+        assert_eq!(rep.jobs[0].blocks, 8);
+        std::fs::remove_dir_all(&d).unwrap();
     }
 }

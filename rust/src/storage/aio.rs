@@ -262,6 +262,10 @@ pub struct ReadProbe {
     pub bytes: u64,
     /// Wall seconds from first submission to last completion.
     pub secs: f64,
+    /// Read requests issued. Probing at two different window sizes and
+    /// comparing per-request times separates the device's per-request
+    /// latency from its linear bandwidth (see `tune::probe`).
+    pub ops: u64,
 }
 
 impl ReadProbe {
@@ -281,15 +285,26 @@ impl ReadProbe {
 /// throttle (if attached) is honored, which lets `cugwas tune` calibrate
 /// against an emulated slower device.
 pub fn probe_read_bandwidth(file: XrdFile, max_bytes: u64, depth: usize) -> Result<ReadProbe> {
+    // ~4 MB windows: big enough to amortize per-request overhead, small
+    // enough that several fit in flight at `depth` ≥ 2.
+    probe_read_bandwidth_windowed(file, max_bytes, depth, 4 << 20)
+}
+
+/// [`probe_read_bandwidth`] with an explicit request-window size. The
+/// autotuner probes twice (small + large windows) to fit the device's
+/// per-request latency alongside its linear bandwidth.
+pub fn probe_read_bandwidth_windowed(
+    file: XrdFile,
+    max_bytes: u64,
+    depth: usize,
+    window_bytes: u64,
+) -> Result<ReadProbe> {
     let h = *file.header();
     if h.rows == 0 || h.cols == 0 {
         return Err(Error::Config("probe: file has no data".into()));
     }
     let col_disk_bytes = h.rows * h.dtype.bytes();
-    // ~4 MB windows (never more than the caller's byte budget): big
-    // enough to amortize per-request overhead, small enough that several
-    // fit in flight at `depth` ≥ 2.
-    let window_bytes = (4u64 << 20).min(max_bytes.max(col_disk_bytes));
+    let window_bytes = window_bytes.max(1).min(max_bytes.max(col_disk_bytes));
     let wcols = (window_bytes / col_disk_bytes).clamp(1, h.cols);
     let engine = AioEngine::new(file);
     let depth = depth.max(1);
@@ -297,6 +312,7 @@ pub fn probe_read_bandwidth(file: XrdFile, max_bytes: u64, depth: usize) -> Resu
         std::collections::VecDeque::with_capacity(depth);
     let mut col0 = 0u64;
     let mut bytes = 0u64;
+    let mut ops = 0u64;
     let t0 = Instant::now();
     loop {
         while col0 < h.cols && bytes < max_bytes && inflight.len() < depth {
@@ -305,11 +321,12 @@ pub fn probe_read_bandwidth(file: XrdFile, max_bytes: u64, depth: usize) -> Resu
             inflight.push_back(engine.read_cols(col0, ncols, buf));
             col0 += ncols;
             bytes += ncols * col_disk_bytes;
+            ops += 1;
         }
         let Some(handle) = inflight.pop_front() else { break };
         handle.wait().1?;
     }
-    Ok(ReadProbe { bytes, secs: t0.elapsed().as_secs_f64() })
+    Ok(ReadProbe { bytes, secs: t0.elapsed().as_secs_f64(), ops })
 }
 
 #[cfg(test)]
@@ -448,9 +465,16 @@ mod tests {
         let probe = probe_read_bandwidth(XrdFile::open(&p).unwrap(), u64::MAX, 2).unwrap();
         assert_eq!(probe.bytes, 32 * 64 * 8);
         assert!(probe.mbps() > 0.0);
+        assert!(probe.ops >= 1);
         // A byte cap stops the probe early (whole windows only).
         let capped = probe_read_bandwidth(XrdFile::open(&p).unwrap(), 1, 2).unwrap();
         assert!(capped.bytes >= 32 * 8 && capped.bytes < 32 * 64 * 8);
+        // A small explicit window splits the same file into more requests.
+        let windowed =
+            probe_read_bandwidth_windowed(XrdFile::open(&p).unwrap(), u64::MAX, 2, 32 * 8)
+                .unwrap();
+        assert_eq!(windowed.bytes, 32 * 64 * 8);
+        assert!(windowed.ops > probe.ops, "{} vs {}", windowed.ops, probe.ops);
         std::fs::remove_file(&p).unwrap();
     }
 

@@ -9,7 +9,9 @@ pub mod dataset;
 pub mod format;
 pub mod xrd;
 
-pub use aio::{probe_read_bandwidth, AioEngine, AioHandle, AioStats, ReadProbe};
+pub use aio::{
+    probe_read_bandwidth, probe_read_bandwidth_windowed, AioEngine, AioHandle, AioStats, ReadProbe,
+};
 pub use cache::{BlockCache, BlockKey, CacheStats};
 pub use dataset::{
     generate, generate_with_dtype, load_meta, load_sidecars, load_xr_incore, DatasetPaths, Meta,

@@ -21,16 +21,23 @@
 //!    `serve` accept it via `--profile` / a `[job.*] profile` key, and
 //!    the service scheduler orders admission by the profile's predicted
 //!    duration (shortest-job-first within a priority).
-//! 4. **Adapt** ([`plan::replan_block`]) — at segment boundaries the
-//!    coordinator compares its live `Metrics` stall profile against the
-//!    model's prediction and re-plans the block size (read-starved →
-//!    larger blocks, compute-starved → smaller), journaling every
-//!    persisted window so resume stays correct across a switch.
+//! 4. **Adapt** ([`plan::replan_knobs`]) — at segment boundaries the
+//!    engine compares its live `Metrics` stall profile against the
+//!    model and re-plans the *full* knob depth (block size, host/device
+//!    buffer counts, lane-vs-S-loop thread split), pricing each
+//!    candidate switch with the DES over the remaining work plus its
+//!    transition cost ([`crate::devsim::transition_secs`]), journaling
+//!    every persisted window so resume stays correct across a switch.
+//!    ([`plan::replan_block`] remains as the block-only directional
+//!    variant.)
 
 pub mod plan;
 pub mod probe;
 pub mod profile;
 
-pub use plan::{candidates, plan, predict, replan_block, Candidate, LiveObs, PlanOpts};
-pub use probe::{probe_dataset, probe_kernels, KernelRates, ProbeOpts, ProbedRates};
-pub use profile::TunedProfile;
+pub use crate::devsim::SegmentKnobs;
+pub use plan::{candidates, plan, predict, replan_block, replan_knobs, Candidate, LiveObs, PlanOpts};
+pub use probe::{
+    fit_disk_latency, probe_dataset, probe_kernels, KernelRates, ProbeOpts, ProbedRates,
+};
+pub use profile::{load_or_default, TunedProfile};

@@ -16,7 +16,9 @@
 //! move against pipeline-structure regressions (fill/drain, buffer
 //! dependencies) before the switch is taken.
 
-use crate::devsim::{simulate_cugwas_with, HardwareProfile, SimConfig};
+use crate::devsim::{
+    simulate_cugwas_with, transition_secs, HardwareProfile, SegmentKnobs, SimConfig,
+};
 use crate::error::Result;
 use crate::gwas::problem::Dims;
 use crate::tune::probe::ProbedRates;
@@ -111,6 +113,7 @@ pub fn candidates(rates: &ProbedRates, dims: Dims, opts: &PlanOpts) -> Vec<Candi
                                 cpu_gflops: rates.gemm_at(coord_threads),
                                 pcie_gbps: rates.pcie_gbps,
                                 disk_mbps: rates.disk_mbps,
+                                disk_lat_secs: rates.disk_lat_secs.max(0.0),
                                 probabel_gflops: 0.1,
                             },
                         };
@@ -173,6 +176,7 @@ pub fn plan(rates: &ProbedRates, dims: Dims, opts: &PlanOpts) -> TunedProfile {
             lane_threads: c.lane_threads,
             predicted_secs: secs,
             disk_mbps: rates.disk_mbps,
+            disk_lat_secs: rates.disk_lat_secs.max(0.0),
             pcie_gbps: rates.pcie_gbps,
             trsm_gflops: c.profile.gpu_trsm_gflops,
             cpu_gflops: c.profile.cpu_gflops,
@@ -192,8 +196,14 @@ pub struct LiveObs {
     pub read_wait_secs: f64,
     /// Coordinator seconds stalled on device results (Phase::RecvWait).
     pub recv_wait_secs: f64,
-    /// Effective disk bandwidth from the reader engine's own accounting.
+    /// Effective disk bandwidth from the reader engine's own accounting
+    /// (asymptotic when a per-request latency has been separated out).
     pub disk_mbps: f64,
+    /// Per-request read latency (seconds; 0 = unknown). The coordinator
+    /// fits this live from per-request timings once two segments have
+    /// streamed at different block sizes — the in-flight analogue of the
+    /// probe's two-window measurement.
+    pub disk_lat_secs: f64,
     /// Observed lane trsm rate (device seconds vs trsm flops).
     pub trsm_gflops: f64,
     /// Observed coordinator S-loop rate (sloop seconds vs its flops).
@@ -254,6 +264,7 @@ pub fn replan_block(
         cpu_gflops: obs.cpu_gflops,
         pcie_gbps: obs.pcie_gbps,
         disk_mbps: obs.disk_mbps,
+        disk_lat_secs: obs.disk_lat_secs.max(0.0),
         probabel_gflops: 0.1,
     };
     let predict_at = |block: usize| -> Option<f64> {
@@ -278,6 +289,144 @@ pub fn replan_block(
     }
 }
 
+/// Minimum predicted improvement (including the transition cost) before
+/// a knob switch is taken — the hysteresis that keeps the pipeline from
+/// flapping between near-equivalent configurations.
+const SWITCH_GAIN: f64 = 0.98;
+
+/// Full-depth in-flight re-plan: search the one-step neighborhood of the
+/// current knobs (block ×2/÷2, host/device buffers ±1, lane threads
+/// ×2/÷2) with the DES as the objective, each candidate priced over the
+/// *remaining* columns **plus** its own [`transition_secs`]. With the
+/// per-request latency term in the live profile the model itself now
+/// favors larger blocks when read-starved — the DES *drives* the move
+/// instead of only veto-guarding a heuristic.
+///
+/// `dims.m` must be the remaining SNP columns; `total_threads` the run's
+/// resolved compute budget (the lane/coordinator split is re-derived per
+/// candidate). Returns `None` when the pipeline is balanced, the
+/// observations are degenerate, or no neighbor beats staying put by at
+/// least the hysteresis margin.
+pub fn replan_knobs(
+    obs: &LiveObs,
+    dims: Dims,
+    cur: SegmentKnobs,
+    ngpus: usize,
+    total_threads: usize,
+) -> Option<SegmentKnobs> {
+    if obs.wall_secs <= 0.0 {
+        return None;
+    }
+    let read_frac = obs.read_wait_secs / obs.wall_secs;
+    let recv_frac = obs.recv_wait_secs / obs.wall_secs;
+    if read_frac < STALL_THRESHOLD && recv_frac < STALL_THRESHOLD {
+        return None;
+    }
+    let rates = [obs.disk_mbps, obs.trsm_gflops, obs.cpu_gflops, obs.pcie_gbps];
+    if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
+        return None;
+    }
+    let p_cur = predict_switch(obs, dims, &cur, &cur, ngpus, total_threads)?;
+    let mut best: Option<(f64, SegmentKnobs)> = None;
+    for cand in knob_neighborhood(&cur, dims, ngpus, total_threads) {
+        let Some(secs) = predict_switch(obs, dims, &cand, &cur, ngpus, total_threads) else {
+            continue;
+        };
+        if best.as_ref().map_or(true, |(b, _)| secs < *b) {
+            best = Some((secs, cand));
+        }
+    }
+    match best {
+        Some((secs, cand)) if secs < p_cur * SWITCH_GAIN => Some(cand),
+        _ => None,
+    }
+}
+
+/// One-step neighbors of `cur`, deduplicated, every one respecting the
+/// pipeline invariants (block divides across lanes, buffers in the DES
+/// range, the coordinator keeps ≥ 1 thread).
+fn knob_neighborhood(
+    cur: &SegmentKnobs,
+    dims: Dims,
+    ngpus: usize,
+    total_threads: usize,
+) -> Vec<SegmentKnobs> {
+    let g = ngpus.max(1);
+    let clamp_block = |b: usize| -> usize {
+        let b = b.clamp(MIN_BLOCK.min(dims.m), MAX_BLOCK.min(dims.m));
+        ((b / g) * g).max(g)
+    };
+    let mut out = Vec::new();
+    for b in [cur.block.saturating_mul(2), cur.block / 2] {
+        let b = clamp_block(b);
+        if b != cur.block {
+            out.push(SegmentKnobs { block: b, ..*cur });
+        }
+    }
+    for hb in [cur.host_buffers + 1, cur.host_buffers.saturating_sub(1)] {
+        if (2..=8).contains(&hb) && hb != cur.host_buffers {
+            out.push(SegmentKnobs { host_buffers: hb, ..*cur });
+        }
+    }
+    for db in [cur.device_buffers + 1, cur.device_buffers.saturating_sub(1)] {
+        if (2..=8).contains(&db) && db != cur.device_buffers {
+            out.push(SegmentKnobs { device_buffers: db, ..*cur });
+        }
+    }
+    for lt in [cur.lane_threads.saturating_mul(2), cur.lane_threads / 2] {
+        // The coordinator must keep at least one thread for the S-loop.
+        if lt >= 1 && lt * g < total_threads.max(2) && lt != cur.lane_threads {
+            out.push(SegmentKnobs { lane_threads: lt, ..*cur });
+        }
+    }
+    out.dedup();
+    out
+}
+
+/// DES seconds for the remaining `dims` under `cand`, plus what it costs
+/// to get there from `cur`. Kernel rates were observed at the *current*
+/// thread split; a candidate that moves threads is priced with the
+/// observed rate scaled by its thread ratio (linear-scaling assumption —
+/// optimistic, which is why the hysteresis margin and the next segment's
+/// real observation both stand behind it).
+fn predict_switch(
+    obs: &LiveObs,
+    dims: Dims,
+    cand: &SegmentKnobs,
+    cur: &SegmentKnobs,
+    ngpus: usize,
+    total_threads: usize,
+) -> Option<f64> {
+    let g = ngpus.max(1);
+    let coord_of = |lt: usize| total_threads.saturating_sub(lt * g).max(1);
+    let lane_scale = cand.lane_threads as f64 / cur.lane_threads.max(1) as f64;
+    let coord_scale = coord_of(cand.lane_threads) as f64 / coord_of(cur.lane_threads) as f64;
+    let profile = HardwareProfile {
+        name: "live",
+        gpu_trsm_gflops: obs.trsm_gflops * lane_scale,
+        cpu_gflops: obs.cpu_gflops * coord_scale,
+        pcie_gbps: obs.pcie_gbps,
+        disk_mbps: obs.disk_mbps,
+        disk_lat_secs: obs.disk_lat_secs.max(0.0),
+        probabel_gflops: 0.1,
+    };
+    // Tail clamp: the remainder may be smaller than the block; keep the
+    // simulated block within it and divisible across lanes.
+    let block = ((cand.block.min(dims.m) / g) * g).max(g);
+    let cfg = SimConfig {
+        dims,
+        block,
+        ngpus: g,
+        host_buffers: cand.host_buffers.clamp(2, 8),
+        profile,
+    };
+    let steady = simulate_cugwas_with(&cfg, cand.device_buffers.clamp(2, 8))
+        .ok()
+        .map(|r| r.total_secs)
+        .filter(|s| s.is_finite())?;
+    Some(steady + transition_secs(cur, cand, dims.n, dims.p(), g, &profile))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +440,7 @@ mod tests {
         kernels.insert(4, KernelRates { trsm_gflops: 6.0, gemm_gflops: 8.0 });
         ProbedRates {
             disk_mbps: 120.0,
+            disk_lat_secs: 0.0,
             disk_bytes: 8 << 20,
             pcie_gbps: 8.0,
             kernels,
@@ -366,6 +516,7 @@ mod tests {
             read_wait_secs: 0.2,
             recv_wait_secs: 0.2,
             disk_mbps: 80.0,
+            disk_lat_secs: 0.0,
             trsm_gflops: 4.0,
             cpu_gflops: 4.0,
             pcie_gbps: 8.0,
@@ -405,5 +556,67 @@ mod tests {
         // Already at the floor/ceiling → no switch.
         let o = LiveObs { recv_wait_secs: 6.0, ..obs() };
         assert_eq!(replan_block(&o, dims, MIN_BLOCK, 1, 3, 2), None);
+    }
+
+    // ---- full-depth re-planning --------------------------------------
+
+    fn knobs(block: usize, hb: usize, db: usize, lt: usize) -> SegmentKnobs {
+        SegmentKnobs { block, host_buffers: hb, device_buffers: db, lane_threads: lt }
+    }
+
+    #[test]
+    fn balanced_pipeline_keeps_all_knobs() {
+        let dims = Dims::new(256, 3, 100_000).unwrap();
+        assert_eq!(replan_knobs(&obs(), dims, knobs(1024, 3, 2, 1), 1, 4), None);
+    }
+
+    #[test]
+    fn latency_heavy_read_starved_pipeline_grows_the_block_model_driven() {
+        // 5 ms per request at 80 MB/s: a 1024-column read (2 MiB at
+        // n=256) pays ~17% latency overhead, a 2048-column one half
+        // that. The DES itself — not a heuristic — must prefer the
+        // bigger block once read waits dominate.
+        let dims = Dims::new(256, 3, 100_000).unwrap();
+        let o = LiveObs { read_wait_secs: 6.0, disk_lat_secs: 5e-3, ..obs() };
+        let cur = knobs(1024, 3, 2, 1);
+        let picked = replan_knobs(&o, dims, cur, 1, 4).expect("must switch");
+        assert!(picked.block > cur.block, "picked {picked:?}");
+        // The same stall profile with a latency-free disk still has the
+        // directional rule available via `replan_block`; the deep
+        // planner only moves when the model predicts a real win.
+        let flat = LiveObs { read_wait_secs: 6.0, ..obs() };
+        if let Some(k) = replan_knobs(&flat, dims, cur, 1, 4) {
+            assert!(k != cur);
+        }
+    }
+
+    #[test]
+    fn neighborhood_respects_invariants() {
+        let dims = Dims::new(256, 3, 100_000).unwrap();
+        for cand in knob_neighborhood(&knobs(1024, 3, 2, 2), dims, 2, 8) {
+            assert!(cand.block % 2 == 0 && cand.block <= dims.m);
+            assert!((2..=8).contains(&cand.host_buffers));
+            assert!((2..=8).contains(&cand.device_buffers));
+            assert!(cand.lane_threads >= 1 && cand.lane_threads * 2 < 8);
+        }
+        // A 2-thread budget on one lane cannot move lane_threads at all
+        // (the coordinator must keep a thread).
+        for cand in knob_neighborhood(&knobs(1024, 3, 2, 1), dims, 1, 2) {
+            assert_eq!(cand.lane_threads, 1);
+        }
+    }
+
+    #[test]
+    fn transition_cost_vetoes_a_switch_near_the_end_of_the_stream() {
+        // Same starved observation, but only one tail window of work
+        // left: every neighbor's steady-state prediction collapses to
+        // the same tail-clamped schedule, so no candidate can pay for
+        // its own migration and the planner stays put.
+        let o = LiveObs { read_wait_secs: 6.0, disk_lat_secs: 5e-3, ..obs() };
+        let cur = knobs(1024, 3, 2, 1);
+        let plenty = Dims::new(256, 3, 100_000).unwrap();
+        let sliver = Dims::new(256, 3, 256).unwrap();
+        assert!(replan_knobs(&o, plenty, cur, 1, 2).is_some());
+        assert_eq!(replan_knobs(&o, sliver, cur, 1, 2), None);
     }
 }

@@ -17,7 +17,9 @@
 
 use crate::error::Result;
 use crate::linalg::{gemm, potrf, trsm_lower_left, Matrix};
-use crate::storage::{dataset::DatasetPaths, probe_read_bandwidth, Throttle, XrdFile};
+use crate::storage::{
+    dataset::DatasetPaths, probe_read_bandwidth_windowed, ReadProbe, Throttle, XrdFile,
+};
 use crate::util::{threads, XorShift};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -37,8 +39,14 @@ pub struct KernelRates {
 /// Everything the probe learned about this machine + dataset.
 #[derive(Debug, Clone)]
 pub struct ProbedRates {
-    /// Effective sequential disk read bandwidth (MB/s).
+    /// Asymptotic sequential disk read bandwidth (MB/s) — with the
+    /// per-request latency already separated out when the two-window
+    /// fit succeeded, else the effective rate of the large-window probe.
     pub disk_mbps: f64,
+    /// Per-request disk latency (seconds; 0 when the fit was not
+    /// possible). Fitted from probes at two window sizes:
+    /// `t_req = lat + bytes_req / bw` is two unknowns, two equations.
+    pub disk_lat_secs: f64,
     /// Bytes the disk probe actually streamed.
     pub disk_bytes: u64,
     /// Host memcpy bandwidth (GB/s) — the emulated PCIe link.
@@ -106,18 +114,59 @@ impl Default for ProbeOpts {
 /// Run the full probe against a dataset directory.
 pub fn probe_dataset(dir: &Path, opts: &ProbeOpts) -> Result<ProbedRates> {
     let paths = DatasetPaths::new(dir);
-    let xr = XrdFile::open(&paths.xr())?.with_throttle(opts.read_throttle);
-    let disk = probe_read_bandwidth(xr, opts.max_disk_bytes.max(1), 2)?;
+    let open = || -> Result<XrdFile> {
+        Ok(XrdFile::open(&paths.xr())?.with_throttle(opts.read_throttle))
+    };
+    // Two window sizes over the same file: the large windows measure the
+    // asymptotic stream rate, the small ones expose the per-request
+    // latency the linear model hides.
+    let budget = opts.max_disk_bytes.max(1);
+    let big = probe_read_bandwidth_windowed(open()?, budget, 2, 4 << 20)?;
+    let small = probe_read_bandwidth_windowed(open()?, (budget / 4).max(1), 2, 256 << 10)?;
     let total = if opts.threads == 0 { threads::available() } else { opts.threads };
     let kernels = probe_kernels(total, opts.quick)?;
     let pcie_gbps = probe_memcpy_gbps(if opts.quick { 4 << 20 } else { 32 << 20 });
-    let mbps = disk.mbps();
+    let (disk_lat_secs, mbps) = match fit_disk_latency(&small, &big) {
+        Some((lat, bw_bps)) => (lat, bw_bps / 1e6),
+        None => (0.0, big.mbps()),
+    };
     // `secs` floor is about clock resolution, not measurement quality —
     // a page-cached read of the minimum probe size can finish in tens
     // of microseconds and still yield a usable (if flattering) rate.
     let reliable =
-        disk.bytes >= MIN_DISK_PROBE_BYTES && disk.secs > 1e-5 && mbps.is_finite() && mbps > 0.0;
-    Ok(ProbedRates { disk_mbps: mbps, disk_bytes: disk.bytes, pcie_gbps, kernels, reliable })
+        big.bytes >= MIN_DISK_PROBE_BYTES && big.secs > 1e-5 && mbps.is_finite() && mbps > 0.0;
+    Ok(ProbedRates {
+        disk_mbps: mbps,
+        disk_lat_secs,
+        disk_bytes: big.bytes,
+        pcie_gbps,
+        kernels,
+        reliable,
+    })
+}
+
+/// Solve `t_req = lat + bytes_req / bw` from two probes at different
+/// request sizes. `None` when the windows were not distinct enough (a
+/// tiny file collapses both to one request) or the timings inverted
+/// (page-cache noise) — callers then fall back to a latency-free model,
+/// which is exactly the pre-fit behavior.
+pub fn fit_disk_latency(small: &ReadProbe, big: &ReadProbe) -> Option<(f64, f64)> {
+    if small.ops == 0 || big.ops == 0 {
+        return None;
+    }
+    let bs = small.bytes as f64 / small.ops as f64;
+    let ts = small.secs / small.ops as f64;
+    let bb = big.bytes as f64 / big.ops as f64;
+    let tb = big.secs / big.ops as f64;
+    if bb < bs * 1.5 || tb <= ts {
+        return None;
+    }
+    let bw = (bb - bs) / (tb - ts); // bytes/sec, latency-free
+    if !bw.is_finite() || bw <= 0.0 {
+        return None;
+    }
+    let lat = (ts - bs / bw).max(0.0);
+    lat.is_finite().then_some((lat, bw))
 }
 
 /// Time the trsm/gemm kernels at 1, 2, 4, … and `total_threads` threads.
@@ -217,6 +266,7 @@ mod tests {
         kernels.insert(4, KernelRates { trsm_gflops: 3.0, gemm_gflops: 4.0 });
         let r = ProbedRates {
             disk_mbps: 100.0,
+            disk_lat_secs: 0.0,
             disk_bytes: 2 << 20,
             pcie_gbps: 8.0,
             kernels,
@@ -236,6 +286,7 @@ mod tests {
         kernels.insert(1, KernelRates { trsm_gflops: 1.0, gemm_gflops: 1.0 });
         let good = ProbedRates {
             disk_mbps: 50.0,
+            disk_lat_secs: 0.0,
             disk_bytes: 2 << 20,
             pcie_gbps: 8.0,
             kernels: kernels.clone(),
@@ -251,5 +302,26 @@ mod tests {
     #[test]
     fn memcpy_probe_is_positive() {
         assert!(probe_memcpy_gbps(1 << 20) > 0.0);
+    }
+
+    #[test]
+    fn latency_fit_recovers_synthetic_device_parameters() {
+        // A device with 5 ms latency + 100 MB/s: windows of 256 KiB and
+        // 4 MiB must reproduce both constants exactly.
+        let (lat, bw) = (5e-3, 100e6);
+        let mk = |window: f64, ops: u64| ReadProbe {
+            bytes: (window * ops as f64) as u64,
+            secs: ops as f64 * (lat + window / bw),
+            ops,
+        };
+        let small = mk(256.0 * 1024.0, 16);
+        let big = mk(4.0 * 1024.0 * 1024.0, 4);
+        let (flat, fbw) = fit_disk_latency(&small, &big).unwrap();
+        assert!((flat - lat).abs() < 1e-9, "lat={flat}");
+        assert!((fbw - bw).abs() / bw < 1e-9, "bw={fbw}");
+        // Degenerate inputs refuse to fit instead of producing garbage.
+        assert!(fit_disk_latency(&small, &small).is_none(), "same window");
+        assert!(fit_disk_latency(&big, &small).is_none(), "inverted timings");
+        assert!(fit_disk_latency(&ReadProbe { bytes: 0, secs: 0.0, ops: 0 }, &big).is_none());
     }
 }

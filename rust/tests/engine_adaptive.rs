@@ -1,0 +1,172 @@
+//! Engine reuse + deep adaptation coverage: the unified engine must be
+//! able to switch host/device buffer counts, the lane-vs-S-loop thread
+//! split and the block size *mid-stream* — reusing lanes/pools whenever
+//! the switch doesn't resize them — without changing a single bit of
+//! `r.xrd`; and the v2 journal must carry a crash-resume across such a
+//! switch.
+
+use cugwas::coordinator::{
+    verify_against_oracle, Engine, PipelineConfig, SegmentKnobs, SegmentPlan,
+};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::dataset::DatasetPaths;
+use cugwas::storage::{generate, XrdFile};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_eng_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn knobs(block: usize, hb: usize, db: usize, lt: usize) -> SegmentKnobs {
+    SegmentKnobs { block, host_buffers: hb, device_buffers: db, lane_threads: lt }
+}
+
+fn plan(k: SegmentKnobs, windows: usize) -> SegmentPlan {
+    SegmentPlan { knobs: k, windows }
+}
+
+/// The acceptance scenario: a run split across segment boundaries that
+/// switch buffers and threads mid-stream is bit-identical to the plain
+/// single-configuration run — and the engine's stats prove lanes/pools
+/// were reused exactly when the switch left them unchanged.
+#[test]
+fn deep_knob_switches_mid_stream_are_bit_identical() {
+    let dir = tmpdir("deep");
+    let dims = Dims::new(96, 2, 3072).unwrap();
+    generate(&dir, dims, 256, 4711).unwrap();
+
+    // Reference: one configuration, one thread, start to finish.
+    let mut cfg = PipelineConfig::new(&dir, 512);
+    cfg.threads = 1;
+    cugwas::coordinator::run(&cfg).unwrap();
+    let ref_bytes = std::fs::read(dir.join("r.xrd")).unwrap();
+    let ref_diff = verify_against_oracle(&dir, 1e-8).unwrap();
+
+    // Same study, now as three segments that switch every knob class:
+    //   A: the starting configuration              (2 windows of 512)
+    //   B: smaller block, deeper rings, 2 lane threads (4 windows of 256)
+    //   C: block back to 512, shallow host ring, B's lanes (the rest)
+    let plans = [
+        plan(knobs(512, 3, 2, 1), 2),
+        plan(knobs(256, 4, 3, 2), 4),
+        plan(knobs(512, 2, 3, 2), usize::MAX),
+    ];
+    let mut engine = Engine::open(&cfg).unwrap();
+    let report = engine.execute_plans(&cfg, &plans).unwrap();
+    assert_eq!(report.snps, dims.m);
+    assert_eq!(report.blocks, 2 + 4 + 2, "512×2 + 256×4 + 512×2 windows");
+    assert_eq!(report.replans, 2, "B and C are switches; A is the starting config");
+
+    let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
+    assert_eq!(bytes, ref_bytes, "r.xrd changed across mid-stream knob switches");
+    let diff = verify_against_oracle(&dir, 1e-8).unwrap();
+    assert_eq!(diff.to_bits(), ref_diff.to_bits());
+
+    // Resource reuse accounting: B changed lane_threads + device_buffers
+    // (lane respawn); C kept B's lane key (native lanes are block-size-
+    // agnostic), so only the pools were re-rung.
+    let stats = engine.stats();
+    assert_eq!(stats.lane_builds, 2, "A builds, B rebuilds, C reuses");
+    assert_eq!(stats.pool_builds, 3, "every segment changed the ring geometry");
+    assert_eq!(stats.runs, 1);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Back-to-back runs on one engine (the `serve` path) reuse lanes and
+/// pools outright and still produce identical bytes.
+#[test]
+fn repeated_runs_on_one_engine_reuse_everything() {
+    let dir = tmpdir("reuse");
+    let dims = Dims::new(64, 2, 1024).unwrap();
+    generate(&dir, dims, 128, 99).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 256);
+    cfg.threads = 2;
+
+    let mut engine = Engine::open(&cfg).unwrap();
+    engine.execute(&cfg).unwrap();
+    let first = std::fs::read(dir.join("r.xrd")).unwrap();
+    engine.execute(&cfg).unwrap();
+    let second = std::fs::read(dir.join("r.xrd")).unwrap();
+    assert_eq!(first, second);
+    verify_against_oracle(&dir, 1e-8).unwrap();
+
+    let stats = engine.stats();
+    assert_eq!(stats.runs, 2);
+    assert_eq!(stats.lane_builds, 1, "second run must ride the warm lanes");
+    assert_eq!(stats.pool_builds, 1, "second run must ride the warm pools");
+
+    // An incompatible configuration is refused, not silently rebuilt —
+    // the caller decides whether to open a fresh engine.
+    let mut other = cfg.clone();
+    other.threads = 1;
+    assert!(!engine.compatible(&other));
+    assert!(engine.execute(&other).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Crash-resume across a mid-run knob switch: the v2 journal's
+/// column-range records carry mixed window widths, and a resumed run
+/// recomputes exactly the uncovered columns.
+#[test]
+fn crash_resume_across_a_mid_run_knob_switch() {
+    let dir = tmpdir("resume");
+    let dims = Dims::new(64, 2, 2048).unwrap();
+    generate(&dir, dims, 128, 13).unwrap();
+    let mut cfg = PipelineConfig::new(&dir, 128);
+    cfg.threads = 1;
+    cfg.resume = true; // journal every window
+
+    // A run whose second half streams under a switched configuration
+    // (wider block, deeper rings, two lane threads).
+    let plans = [
+        plan(knobs(128, 3, 2, 1), 8),
+        plan(knobs(256, 4, 3, 2), usize::MAX),
+    ];
+    Engine::open(&cfg).unwrap().execute_plans(&cfg, &plans).unwrap();
+    verify_against_oracle(&dir, 1e-8).unwrap();
+
+    // Parse the journal (24-byte header + 16-byte column-range records):
+    // the record stream must show both window widths.
+    let paths = DatasetPaths::new(&dir);
+    let bytes = std::fs::read(paths.progress()).unwrap();
+    assert_eq!(&bytes[..8], b"CGWJRNL2");
+    let ranges: Vec<(u64, u64)> = bytes[24..]
+        .chunks_exact(16)
+        .map(|r| {
+            (
+                u64::from_le_bytes(r[..8].try_into().unwrap()),
+                u64::from_le_bytes(r[8..].try_into().unwrap()),
+            )
+        })
+        .collect();
+    assert_eq!(ranges.iter().map(|&(_, n)| n).sum::<u64>(), dims.m as u64);
+    let widths: std::collections::HashSet<u64> = ranges.iter().map(|&(_, n)| n).collect();
+    assert!(widths.contains(&128) && widths.contains(&256), "{widths:?}");
+
+    // Crash: keep the journal's first half (which straddles nothing yet
+    // of the switched segment or some of it — either way mixed-geometry
+    // resume must hold), clobber every column the survivors do NOT
+    // cover, and resume with the ORIGINAL starting block.
+    let keep = ranges.len() / 2;
+    std::fs::write(paths.progress(), &bytes[..24 + keep * 16]).unwrap();
+    {
+        let covered = &ranges[..keep];
+        let f = XrdFile::open_rw(&paths.results()).unwrap();
+        let p = dims.pl as u64 + 1;
+        for col in 0..dims.m as u64 {
+            if !covered.iter().any(|&(c0, n)| col >= c0 && col < c0 + n) {
+                f.write_cols(col, 1, &vec![f64::NAN; p as usize]).unwrap();
+            }
+        }
+    }
+    let report = Engine::open(&cfg).unwrap().execute(&cfg).unwrap();
+    assert!(report.blocks >= 1, "uncovered columns must be recomputed");
+    verify_against_oracle(&dir, 1e-8).unwrap();
+
+    // A completed run resumes as a no-op.
+    let report = Engine::open(&cfg).unwrap().execute(&cfg).unwrap();
+    assert_eq!(report.blocks, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Perf-trajectory trend renderer + soft regression gate.
+
+CI's ``bench-smoke`` job uploads one ``BENCH_<short-sha>.json`` artifact
+per push (one JSON object per line, each with a ``bench`` field).  This
+script renders the accumulated artifacts as a markdown table — one row
+per push, one column per headline metric — and gates the build on the
+headline streaming throughput: the job fails when the current value
+drops more than ``GATE_DROP`` below the median of the recent history.
+
+Usage::
+
+    bench_trend.py CURRENT.json [HISTORY_DIR]
+
+``HISTORY_DIR`` holds previously downloaded ``BENCH_*.json`` files
+(oldest first by mtime).  With no history the gate passes trivially —
+the first push on a fresh repo must not fail itself.
+
+Exit status: 0 = ok (or no history), 1 = regression beyond the gate.
+"""
+
+import json
+import os
+import sys
+
+# The gated metric: live streaming throughput of the pipelined solver.
+GATE_BENCH = "headline_table"
+GATE_ROW = "live_cugwas_snps_per_sec"
+# Soft gate: fail only on a >20% drop vs. the recent median (medians
+# absorb one noisy CI runner; a hard cliff still fails loudly).
+GATE_DROP = 0.20
+# Columns of the trend table, as (bench, key) pairs.
+COLUMNS = [
+    ("headline_table", "live_cugwas"),
+    ("headline_table", "live_cugwas_snps_per_sec"),
+    ("headline_table", "cugwas1_vs_ooc"),
+    ("headline_table", "cugwas4_vs_ooc"),
+]
+
+
+def load(path):
+    """Parse one BENCH_*.json file into {(bench, key): value}."""
+    out = {}
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            bench = rec.get("bench")
+            key = rec.get("row") or ":".join(
+                str(rec[k])
+                for k in ("kernel", "shape", "threads", "case", "config")
+                if k in rec
+            )
+            val = next(
+                (rec[f] for f in ("value", "gflops", "wall_secs", "median_secs") if f in rec),
+                None,
+            )
+            if bench and key and isinstance(val, (int, float)):
+                out[(bench, key)] = float(val)
+    return out
+
+
+def sha_of(path):
+    name = os.path.basename(path)
+    return name[len("BENCH_"):-len(".json")] if name.startswith("BENCH_") else name
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    current_path = argv[1]
+    history_dir = argv[2] if len(argv) > 2 else None
+    history = []
+    if history_dir and os.path.isdir(history_dir):
+        files = [
+            os.path.join(history_dir, f)
+            for f in os.listdir(history_dir)
+            if f.startswith("BENCH_") and f.endswith(".json")
+        ]
+        files.sort(key=os.path.getmtime)
+        cur_name = os.path.basename(current_path)
+        history = [(sha_of(f), load(f)) for f in files if os.path.basename(f) != cur_name]
+    current = (sha_of(current_path) + " (this push)", load(current_path))
+
+    # ---- trend table ----------------------------------------------------
+    print("### perf trajectory")
+    print()
+    header = ["push"] + [f"{b}:{k}" for b, k in COLUMNS]
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for sha, metrics in history + [current]:
+        cells = [sha]
+        for col in COLUMNS:
+            v = metrics.get(col)
+            cells.append(f"{v:.4g}" if v is not None else "—")
+        print("| " + " | ".join(cells) + " |")
+    print()
+
+    # ---- regression gate ------------------------------------------------
+    cur_val = current[1].get((GATE_BENCH, GATE_ROW))
+    past = [m.get((GATE_BENCH, GATE_ROW)) for _, m in history]
+    past = [v for v in past if v is not None]
+    if cur_val is None:
+        print(f"gate: {GATE_ROW} missing from the current run — failing")
+        return 1
+    if not past:
+        print(f"gate: no history for {GATE_ROW} — passing (first data point)")
+        return 0
+    baseline = sorted(past)[len(past) // 2]
+    floor = baseline * (1.0 - GATE_DROP)
+    verdict = "OK" if cur_val >= floor else "REGRESSION"
+    print(
+        f"gate: {GATE_ROW} = {cur_val:.1f} vs median-of-{len(past)} baseline "
+        f"{baseline:.1f} (floor {floor:.1f}) → {verdict}"
+    )
+    return 0 if cur_val >= floor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
