@@ -15,8 +15,9 @@ use crate::gwas::preprocess::preprocess;
 use crate::gwas::sloop::{sloop_block, SloopScratch};
 use crate::linalg::Matrix;
 use crate::runtime::{ArtifactKey, Kind, Manifest};
-use crate::storage::{dataset, Header, Throttle, XrdFile};
+use crate::storage::{dataset, Header, SlabPool, Throttle, XrdFile};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Run summary.
@@ -57,7 +58,7 @@ pub fn run_naive(
             (Backend::Pjrt { entry }, nb)
         }
     };
-    let pre = preprocess(&kin, &xl, &y, dinv_nb)?;
+    let pre = Arc::new(preprocess(&kin, &xl, &y, dinv_nb)?);
 
     let paths = dataset::DatasetPaths::new(dataset_dir);
     let xr = XrdFile::open(&paths.xr())?.with_throttle(read_throttle);
@@ -70,21 +71,22 @@ pub fn run_naive(
     let cols_in =
         |b: usize| if (b + 1) * block <= dims.m { block } else { dims.m - b * block };
     let mut scratch = SloopScratch::new(dims.pl);
+    // One slab, fully recycled per block — even the naive schedule rides
+    // the zero-copy plane (the comparison isolates the *schedule*).
+    let slabs = SlabPool::new(1, n * block);
 
     for b in 0..nblocks {
         let live = cols_in(b);
         // Synchronous read — the device idles.
         let t0 = Instant::now();
-        let mut buf = vec![0.0; n * block];
-        {
-            let sub = &mut buf[..n * live];
-            xr.read_cols_into((b * block) as u64, live as u64, sub)?;
-        }
-        buf[n * live..].fill(0.0);
+        let mut buf = slabs.take(n * live)?;
+        xr.read_cols_into((b * block) as u64, live as u64, buf.as_mut_slice())?;
         metrics.add(Phase::ReadWait, t0.elapsed());
         // Send + trsm + recv, fully waited — the CPU idles.
         let t0 = Instant::now();
-        lane.submit(DevIn { block: b as u64, buf, live })?;
+        let published = buf.publish();
+        lane.submit(DevIn { block: b as u64, view: published.slice(0, n * live), live })?;
+        drop(published);
         let out = lane
             .rx_out
             .recv()

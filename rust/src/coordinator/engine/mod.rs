@@ -42,7 +42,7 @@ use crate::gwas::problem::Dims;
 use crate::gwas::sloop::SloopScratch;
 use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
 use crate::storage::{
-    dataset, AioEngine, AioStats, BlockCache, Header, ReadProbe, Throttle, XrdFile,
+    dataset, AioEngine, AioStats, BlockCache, Header, ReadProbe, SlabPool, Throttle, XrdFile,
 };
 use crate::tune::{fit_disk_latency, replan_knobs, LiveObs};
 use crate::util::threads;
@@ -78,13 +78,16 @@ struct LaneKey {
     mb_gpu: usize,
 }
 
-/// What the current buffer rings were built for.
+/// What the current buffer rings were built for. On the zero-copy plane
+/// the rings are the slab pool (read side) and the result ring (write
+/// side) — both sized by `block × host_buffers` only: the per-lane
+/// staging chunks that used to key on `device_buffers × ngpus` no longer
+/// exist (lanes borrow views into the slabs), so a device-buffer or
+/// lane-count switch leaves the pools untouched.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct PoolKey {
     block: usize,
     host_buffers: usize,
-    device_buffers: usize,
-    ngpus: usize,
 }
 
 /// Two-point live fit of the disk's per-request latency: once two
@@ -119,11 +122,19 @@ impl DiskLatFit {
     }
 }
 
+/// The "link rate" the live observer reports for the zero-copy plane.
+/// Staging a chunk is a reference handoff, so the link is never a
+/// constraint; timing the O(1) handoff and dividing nominal bytes by it
+/// would only feed the DES scheduler-preemption noise dressed up as a
+/// bandwidth. A large finite constant is the honest observation (and a
+/// PJRT literal boundary reports its real copy lane-side, via
+/// `DevOut::staged_copy_bytes`).
+const ZERO_COPY_LINK_GBPS: f64 = 1e3;
+
 /// Phase/engine counters at a segment boundary, for live-rate deltas.
 struct SegmentSnapshot {
     read_wait: Duration,
     recv_wait: Duration,
-    send: Duration,
     sloop: Duration,
     device: Duration,
     reader: AioStats,
@@ -134,7 +145,6 @@ impl SegmentSnapshot {
         SegmentSnapshot {
             read_wait: metrics.total(Phase::ReadWait),
             recv_wait: metrics.total(Phase::RecvWait),
-            send: metrics.total(Phase::Send),
             sloop: metrics.total(Phase::Sloop),
             device: metrics.total(Phase::DeviceCompute),
             reader,
@@ -157,7 +167,6 @@ impl SegmentSnapshot {
         let rate = |units: f64, secs: f64| if secs > 0.0 { units / secs } else { 0.0 };
         let device = secs(metrics.total(Phase::DeviceCompute), self.device);
         let sloop = secs(metrics.total(Phase::Sloop), self.sloop);
-        let send = secs(metrics.total(Phase::Send), self.send);
         let effective_mbps = reader.since(&self.reader).mbps();
         LiveObs {
             wall_secs,
@@ -167,7 +176,7 @@ impl SegmentSnapshot {
             disk_lat_secs: lat.lat_secs,
             trsm_gflops: rate(trsm_flops(n, cols), device) / 1e9,
             cpu_gflops: rate(sloop_flops(n, pl, cols), sloop) / 1e9,
-            pcie_gbps: rate((n * cols * 8) as f64, send) / 1e9,
+            pcie_gbps: ZERO_COPY_LINK_GBPS,
         }
     }
 }
@@ -187,14 +196,16 @@ pub struct Engine {
     total_threads: usize,
     // ---- long-lived resources ------------------------------------------
     meta: dataset::Meta,
-    pre: Preprocessed,
+    /// Shared with every device lane (read-only after preprocess).
+    pre: Arc<Preprocessed>,
     backend_proto: Option<ArtifactEntry>,
     reader: AioEngine,
     lanes: Vec<DeviceLane>,
     lane_key: Option<LaneKey>,
-    host_pool: BufPool,
+    /// Aligned slab ring the reads land in (blocks flow out of it by
+    /// reference — see [`crate::storage::slab`]).
+    slabs: SlabPool,
     result_pool: BufPool,
-    chunk_pools: Vec<BufPool>,
     pool_key: Option<PoolKey>,
     scratch: SloopScratch,
     stats: EngineStats,
@@ -230,9 +241,9 @@ impl Engine {
         };
 
         let total = if cfg.threads == 0 { threads::available() } else { cfg.threads };
-        let pre: Preprocessed = {
+        let pre: Arc<Preprocessed> = {
             let _full = threads::with_budget(total);
-            preprocess(&kin, &xl, &y, dinv_nb)?
+            Arc::new(preprocess(&kin, &xl, &y, dinv_nb)?)
         };
 
         let paths = dataset::DatasetPaths::new(&cfg.dataset);
@@ -258,9 +269,8 @@ impl Engine {
             reader,
             lanes: Vec::new(),
             lane_key: None,
-            host_pool: BufPool::new(0, 0),
+            slabs: SlabPool::new(0, 0),
             result_pool: BufPool::new(0, 0),
-            chunk_pools: Vec::new(),
             pool_key: None,
             scratch: SloopScratch::new(dims.pl),
             stats: EngineStats::default(),
@@ -449,15 +459,14 @@ impl Engine {
                     n,
                     p,
                     mb_gpu: knobs.block / cfg.ngpus,
-                    pre: &self.pre,
+                    pre: self.pre.as_ref(),
                     reader: &self.reader,
                     writer: &writer,
                     cache: self.cache.as_deref(),
                     cache_dataset: self.cache_dataset.as_deref(),
                     lanes: &self.lanes,
-                    host_pool: &mut self.host_pool,
+                    slabs: &self.slabs,
                     result_pool: &mut self.result_pool,
-                    chunk_pools: &mut self.chunk_pools,
                     scratch: &mut self.scratch,
                 };
                 run_segment(ctx, &items, &mut metrics, &mut journal, &mut device_secs)?;
@@ -570,17 +579,10 @@ impl Engine {
             self.lane_key = Some(lane_key);
             self.stats.lane_builds += 1;
         }
-        let pool_key = PoolKey {
-            block: knobs.block,
-            host_buffers: knobs.host_buffers,
-            device_buffers: knobs.device_buffers,
-            ngpus,
-        };
+        let pool_key = PoolKey { block: knobs.block, host_buffers: knobs.host_buffers };
         if self.pool_key != Some(pool_key) {
-            self.host_pool = BufPool::new(knobs.host_buffers, n * knobs.block);
+            self.slabs = SlabPool::new(knobs.host_buffers, n * knobs.block);
             self.result_pool = BufPool::new(knobs.host_buffers, p * knobs.block);
-            self.chunk_pools =
-                (0..ngpus).map(|_| BufPool::new(knobs.device_buffers, n * mb_gpu)).collect();
             self.pool_key = Some(pool_key);
             self.stats.pool_builds += 1;
         }

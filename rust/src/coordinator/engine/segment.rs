@@ -3,24 +3,34 @@
 //! resources.
 //!
 //! This is the body of paper Listing 1.3, lifted out of the old
-//! monolithic pipeline with one structural change: the device lanes are
-//! **not** closed at the end of the segment. The coordinator instead
-//! tracks how many chunks each lane still owes (`outstanding`) and
-//! drains exactly those, so the lane threads — and their warmed-up
-//! kernel workers — survive into the next segment. Only the write flush
-//! and the journal sync mark the boundary (a journaled window must be
-//! durable before it is recorded).
+//! monolithic pipeline with two structural changes:
+//!
+//! * The device lanes are **not** closed at the end of the segment. The
+//!   coordinator instead tracks how many chunks each lane still owes
+//!   (`outstanding`) and drains exactly those, so the lane threads — and
+//!   their warmed-up kernel workers — survive into the next segment.
+//!   Only the write flush and the journal sync mark the boundary (a
+//!   journaled window must be durable before it is recorded).
+//! * Blocks flow **by reference** (the zero-copy plane): the aio engine
+//!   reads disk bytes straight into an aligned slab, the published
+//!   [`Block`] is shared with the [`BlockCache`] by `Arc` clone, and
+//!   each lane receives a [`BlockSlice`] view of its chunk instead of a
+//!   memcpy'd staging buffer. A cache hit hands back the resident
+//!   handle — zero bytes move. The only per-block copies left are
+//!   compute-owned (the trsm solving the view into its own output, the
+//!   PJRT literal-boundary pad); `Metrics`' `bytes_copied` /
+//!   `bytes_borrowed` counters keep the plane honest.
 
 use crate::coordinator::lane::{DevIn, DevOut, DeviceLane, LaneOutputs};
-use crate::coordinator::metrics::{Metrics, Phase};
+use crate::coordinator::metrics::{Counter, Metrics, Phase};
 use crate::coordinator::pool::BufPool;
 use crate::devsim::SegmentKnobs;
 use crate::error::{Error, Result};
 use crate::gwas::preprocess::Preprocessed;
 use crate::gwas::sloop::{sloop_block_into, sloop_from_reductions_into, SloopScratch};
-use crate::storage::{AioEngine, AioHandle, BlockCache, BlockKey};
+use crate::storage::{AioEngine, AioHandle, Block, BlockCache, BlockKey, SlabHandle, SlabPool};
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
+use std::sync::mpsc::{RecvTimeoutError, TryRecvError, TrySendError};
 use std::time::{Duration, Instant};
 
 /// One entry of an explicit segment schedule (the testing/benchmark
@@ -72,10 +82,16 @@ pub(super) struct SegmentCtx<'a> {
     pub cache: Option<&'a BlockCache>,
     pub cache_dataset: Option<&'a str>,
     pub lanes: &'a [DeviceLane],
-    pub host_pool: &'a mut BufPool,
+    pub slabs: &'a SlabPool,
     pub result_pool: &'a mut BufPool,
-    pub chunk_pools: &'a mut [BufPool],
     pub scratch: &'a mut SloopScratch,
+}
+
+/// A window's block on its way to the lanes: either the shared handle a
+/// cache hit returned immediately, or a slab read still in flight.
+enum PendingBlock {
+    Hit(Block),
+    Read(SlabHandle),
 }
 
 /// Mutable streaming state of one segment.
@@ -111,8 +127,8 @@ fn process_out(
     let mb_gpu = ctx.mb_gpu;
     st.outstanding[out.lane] = st.outstanding[out.lane].saturating_sub(1);
     metrics.add(Phase::DeviceCompute, Duration::from_secs_f64(out.compute_secs));
+    metrics.add_bytes(Counter::BytesCopied, out.staged_copy_bytes);
     *device_secs += out.compute_secs;
-    ctx.chunk_pools[out.lane].put(out.inbuf);
     let live_total = *st
         .live_of
         .get(&col0)
@@ -190,6 +206,7 @@ pub(super) fn run_segment(
     let ngpus = ctx.lanes.len();
     let lanes = ctx.lanes; // shared ref, copied out so `ctx` can be &mut
     let reader = ctx.reader;
+    let slabs = ctx.slabs;
     let cache = ctx.cache;
     let cache_dataset = ctx.cache_dataset;
 
@@ -202,7 +219,7 @@ pub(super) fn run_segment(
         outstanding: vec![0; ngpus],
     };
     let njobs = items.len();
-    let read_ahead = ctx.host_pool.total().saturating_sub(1).max(1);
+    let read_ahead = slabs.target().saturating_sub(1).max(1);
     let block_key = |ds: &str, col0: u64, live: usize| BlockKey {
         dataset: ds.to_string(),
         col0,
@@ -210,42 +227,40 @@ pub(super) fn run_segment(
     };
 
     // ---- pipeline state ------------------------------------------------
-    // (window col0, in-flight read, whether it was served from the cache)
-    let mut pending_reads: VecDeque<(u64, AioHandle, bool)> = VecDeque::new();
+    // (window col0, the block: resident handle or in-flight slab read)
+    let mut pending_reads: VecDeque<(u64, PendingBlock)> = VecDeque::new();
     let mut next_read = 0usize; // index into `items`
 
-    // Submit disk reads up to the ring's read-ahead. With a shared cache
-    // attached, each window first probes it: a hit is an already-complete
-    // "read" served from RAM (no disk I/O), a miss goes to the engine as
-    // usual and is inserted into the cache on arrival.
+    // Stage windows up to the slab ring's read-ahead. With a shared
+    // cache attached, each window first probes it: a hit *is* the block
+    // (the resident handle, shared by reference — no disk I/O, no
+    // memcpy), a miss takes a slab and goes to the aio engine; the
+    // published block is inserted into the cache on arrival.
     macro_rules! pump_reads {
         () => {
             while next_read < njobs && pending_reads.len() < read_ahead {
-                match ctx.host_pool.take() {
-                    Some(mut buf) => {
-                        let (col0, live) = items[next_read];
-                        buf.truncate(n * live);
-                        let mut from_cache = false;
-                        if let (Some(cache), Some(ds)) = (cache, cache_dataset) {
-                            let key = block_key(ds, col0, live);
-                            let t0 = Instant::now();
-                            if cache.get_into(&key, &mut buf) {
-                                metrics.add(Phase::CacheHit, t0.elapsed());
-                                from_cache = true;
-                            } else {
-                                metrics.add(Phase::CacheMiss, Duration::ZERO);
-                            }
-                        }
-                        let h = if from_cache {
-                            AioHandle::ready(buf, Ok(()))
-                        } else {
-                            reader.read_cols(col0, live as u64, buf)
-                        };
-                        pending_reads.push_back((col0, h, from_cache));
-                        next_read += 1;
+                let (col0, live) = items[next_read];
+                let mut pending = None;
+                if let (Some(cache), Some(ds)) = (cache, cache_dataset) {
+                    let key = block_key(ds, col0, live);
+                    let t0 = Instant::now();
+                    if let Some(block) = cache.get(&key, n * live) {
+                        metrics.add(Phase::CacheHit, t0.elapsed());
+                        metrics.add_bytes(Counter::BytesBorrowed, block.bytes());
+                        pending = Some(PendingBlock::Hit(block));
+                    } else {
+                        metrics.add(Phase::CacheMiss, Duration::ZERO);
                     }
-                    None => break,
                 }
+                let pending = match pending {
+                    Some(p) => p,
+                    None => {
+                        let buf = slabs.take(n * live)?;
+                        PendingBlock::Read(reader.read_cols_slab(col0, live as u64, buf))
+                    }
+                };
+                pending_reads.push_back((col0, pending));
+                next_read += 1;
             }
         };
     }
@@ -254,45 +269,56 @@ pub(super) fn run_segment(
     for &(col0, live_total) in items {
         st.live_of.insert(col0, live_total);
         pump_reads!();
-        let (rc0, handle, from_cache) = pending_reads
+        let (rc0, pending) = pending_reads
             .pop_front()
-            .ok_or_else(|| Error::Pipeline("no pending read (pool starved?)".into()))?;
+            .ok_or_else(|| Error::Pipeline("no pending read (ring starved?)".into()))?;
         debug_assert_eq!(rc0, col0);
-        let t0 = Instant::now();
-        let (buf, res) = handle.wait(); // aio_wait Xr[b]
-        metrics.add(Phase::ReadWait, t0.elapsed());
-        res?;
-        // A freshly read (miss) window becomes cache residency for the
-        // next job streaming this dataset.
-        if !from_cache {
-            if let (Some(cache), Some(ds)) = (cache, cache_dataset) {
-                cache.insert(block_key(ds, col0, live_total), &buf);
+        let block = match pending {
+            PendingBlock::Hit(block) => block,
+            PendingBlock::Read(handle) => {
+                let t0 = Instant::now();
+                let (buf, res) = handle.wait(); // aio_wait Xr[b]
+                metrics.add(Phase::ReadWait, t0.elapsed());
+                res?;
+                let block = buf.expect("completed read returns its slab").publish();
+                // A freshly read (miss) window becomes cache residency
+                // for the next job streaming this dataset — an `Arc`
+                // clone of the very slab the disk filled, not a copy.
+                if let (Some(cache), Some(ds)) = (cache, cache_dataset) {
+                    cache.insert(block_key(ds, col0, live_total), &block);
+                    metrics.add_bytes(Counter::BytesBorrowed, block.bytes());
+                }
+                block
             }
-        }
+        };
         let chunks = live_total.div_ceil(mb_gpu);
 
-        // Split-send to lanes (cu_send; blocking on pool = cu_send_wait).
+        // Split-send views to the lanes (cu_send; a Full bounce is the
+        // paper's cu_send_wait — spent draining results, not idling:
+        // this is where the S-loop of block b-1 overlaps the trsm of b).
         for gi in 0..chunks {
             let live = (live_total - gi * mb_gpu).min(mb_gpu);
-            // Opportunistically drain results while waiting for a chunk buffer
-            // — this is where the S-loop of block b-1 overlaps the trsm of b.
-            let mut chunkbuf = loop {
-                if let Some(cb) = ctx.chunk_pools[gi].take() {
-                    break cb;
-                }
-                let t0 = Instant::now();
-                let out = lanes[gi].rx_out.recv().map_err(|_| lane_died(gi))?;
-                metrics.add(Phase::RecvWait, t0.elapsed());
-                process_out(&mut ctx, out, &mut st, metrics, device_secs)?;
-            };
             let t0 = Instant::now();
-            chunkbuf[..n * live].copy_from_slice(&buf[gi * mb_gpu * n..gi * mb_gpu * n + n * live]);
-            chunkbuf[n * live..].fill(0.0); // zero-pad the artifact width
+            let view = block.slice(gi * mb_gpu * n, n * live);
+            metrics.add_bytes(Counter::BytesBorrowed, (n * live * 8) as u64);
+            let mut item = DevIn { block: col0, view, live };
             metrics.add(Phase::Send, t0.elapsed());
-            lanes[gi].submit(DevIn { block: col0, buf: chunkbuf, live })?;
+            loop {
+                match lanes[gi].try_submit(item) {
+                    Ok(()) => break,
+                    Err(TrySendError::Full(bounced)) => {
+                        item = bounced;
+                        let t0 = Instant::now();
+                        let out = lanes[gi].rx_out.recv().map_err(|_| lane_died(gi))?;
+                        metrics.add(Phase::RecvWait, t0.elapsed());
+                        process_out(&mut ctx, out, &mut st, metrics, device_secs)?;
+                    }
+                    Err(TrySendError::Disconnected(_)) => return Err(lane_died(gi)),
+                }
+            }
             st.outstanding[gi] += 1;
         }
-        ctx.host_pool.put(buf);
+        drop(block); // lanes + cache hold their own references now
 
         // Drain any already-finished results without blocking.
         for gi in 0..ngpus {

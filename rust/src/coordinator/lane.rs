@@ -18,7 +18,9 @@ use crate::error::{Error, Result};
 use crate::gwas::preprocess::Preprocessed;
 use crate::linalg::{trsm_lower_left, Matrix};
 use crate::runtime::{dinv_to_rowmajor, matrix_to_rowmajor, ArtifactEntry, Engine, HostTensor};
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use crate::storage::BlockSlice;
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -52,27 +54,34 @@ pub enum Backend {
     Native,
 }
 
-/// Work item: one per-GPU chunk of a host block.
+/// Work item: one per-GPU chunk of a host block — a borrowed view into
+/// the shared slab the disk read landed in (`(n, live)` col-major, no
+/// padding: the PJRT path pads at the literal boundary). Holding it
+/// keeps the slab alive; the lane drops it as soon as the chunk is
+/// computed, releasing the slab back toward its pool.
 pub struct DevIn {
     /// Global block index.
     pub block: u64,
-    /// Chunk buffer, `(mb, n)` row-major == `(n, mb)` col-major, zero-padded
-    /// to the artifact width.
-    pub buf: Vec<f64>,
-    /// Live (non-padding) columns in this chunk.
+    /// Zero-copy chunk view, `n * live` elements.
+    pub view: BlockSlice,
+    /// Live columns in this chunk.
     pub live: usize,
 }
 
-/// Lane result for one chunk.
+/// Lane result for one chunk. (No input buffer rides back: the view is
+/// dropped lane-side — releasing a reference *is* the buffer rotation.)
 pub struct DevOut {
     pub block: u64,
     pub lane: usize,
-    /// The input buffer, returned for recycling (paper: buffer rotation).
-    pub inbuf: Vec<f64>,
     /// Mode-dependent outputs (see `process`).
     pub outs: LaneOutputs,
     /// Device-side compute seconds for this chunk.
     pub compute_secs: f64,
+    /// Host bytes the lane memcpy'd to stage the view into its
+    /// backend's input format: 0 for native (the kernels read the view
+    /// in place), `n·mb·8` for PJRT (the literal-boundary pad+copy).
+    /// The coordinator tallies this under `Counter::BytesCopied`.
+    pub staged_copy_bytes: u64,
 }
 
 /// Outputs by offload mode, always truncated to the live columns.
@@ -85,20 +94,27 @@ pub enum LaneOutputs {
     Solutions(Matrix),
 }
 
-/// Static data each lane needs (built once from [`Preprocessed`]).
+/// Row-major conversions of the constant artifact inputs — built only
+/// for PJRT lanes (XLA literals are row-major; the in-crate matrices
+/// are col-major).
+struct PjrtRows {
+    l_row: Vec<f64>,
+    dinv_row: Vec<f64>,
+    xlt_row: Vec<f64>,
+    stl_row: Vec<f64>,
+}
+
+/// Static data each lane needs. All lanes share one refcounted
+/// [`Preprocessed`] (`L`, `X̃_L`, `ỹ`, `S_TL`, `r̃_T`, …) instead of
+/// deep-cloning it per lane — at paper scale the Cholesky factor alone
+/// is `n²` f64, and it is read-only for the stream's whole life.
 struct LaneStatics {
     n: usize,
     pl: usize,
     mb: usize,
-    l_row: Vec<f64>,
-    dinv_row: Vec<f64>,
-    xlt_row: Vec<f64>,
-    yt: Vec<f64>,
-    stl_row: Vec<f64>,
-    rtop: Vec<f64>,
-    // Native-backend copies.
-    l: Matrix,
-    pre: Preprocessed,
+    pre: Arc<Preprocessed>,
+    /// `Some` only for PJRT backends.
+    rows: Option<PjrtRows>,
 }
 
 /// A running device lane.
@@ -121,35 +137,36 @@ impl DeviceLane {
         lane: usize,
         mode: OffloadMode,
         backend: Backend,
-        pre: &Preprocessed,
+        pre: &Arc<Preprocessed>,
         mb: usize,
         threads: usize,
         depth: usize,
     ) -> Result<DeviceLane> {
         let n = pre.l.rows();
         let pl = pre.xl_t.cols();
-        let statics = LaneStatics {
-            n,
-            pl,
-            mb,
-            l_row: matrix_to_rowmajor(&pre.l),
-            dinv_row: pre
+        // The row-major literal inputs are the only per-lane copies left
+        // — and only PJRT lanes pay them; native lanes borrow `pre`.
+        let rows = if matches!(backend, Backend::Pjrt { .. }) {
+            let dinv_row = pre
                 .dinv
                 .as_ref()
                 .map(|d| dinv_to_rowmajor(d, pre.dinv_nb, n))
-                .unwrap_or_default(),
-            xlt_row: matrix_to_rowmajor(&pre.xl_t),
-            yt: pre.y_t.clone(),
-            stl_row: matrix_to_rowmajor(&pre.stl),
-            rtop: pre.rtop.clone(),
-            l: pre.l.clone(),
-            pre: pre.clone(),
+                .unwrap_or_default();
+            if dinv_row.is_empty() {
+                return Err(Error::Config(
+                    "PJRT backend needs preprocess(dinv_nb > 0) matching the artifact".into(),
+                ));
+            }
+            Some(PjrtRows {
+                l_row: matrix_to_rowmajor(&pre.l),
+                dinv_row,
+                xlt_row: matrix_to_rowmajor(&pre.xl_t),
+                stl_row: matrix_to_rowmajor(&pre.stl),
+            })
+        } else {
+            None
         };
-        if matches!(backend, Backend::Pjrt { .. }) && statics.dinv_row.is_empty() {
-            return Err(Error::Config(
-                "PJRT backend needs preprocess(dinv_nb > 0) matching the artifact".into(),
-            ));
-        }
+        let statics = LaneStatics { n, pl, mb, pre: Arc::clone(pre), rows };
         if depth < 2 {
             return Err(Error::Config("device buffer depth must be ≥ 2".into()));
         }
@@ -175,6 +192,13 @@ impl DeviceLane {
             .expect("lane already closed")
             .send(item)
             .map_err(|_| Error::Pipeline(format!("lane {} died", self.lane)))
+    }
+
+    /// Non-blocking submit: `Full` hands the chunk back so the
+    /// coordinator can drain results (the S-loop of block `b-1`
+    /// overlapping the trsm of `b`) instead of idling in `cu_send_wait`.
+    pub fn try_submit(&self, item: DevIn) -> std::result::Result<(), TrySendError<DevIn>> {
+        self.tx.as_ref().expect("lane already closed").try_send(item)
     }
 
     /// Close the input side; the lane drains and exits.
@@ -215,18 +239,25 @@ fn lane_main(
         let statics = build_static_literals(mode, &st, entry)?;
         engine = Some((e, statics));
     }
-    while let Ok(DevIn { block, buf, live }) = rx.recv() {
+    // One reusable staging buffer for the PJRT literal boundary —
+    // allocated on the first chunk, recycled for the lane's whole life
+    // (the zero-copy plane's fixed-pool discipline, lane-side).
+    let mut staging: Vec<f64> = Vec::new();
+    while let Ok(DevIn { block, view, live }) = rx.recv() {
         let t0 = Instant::now();
-        let (outs, inbuf) = match &backend {
+        let (outs, staged_copy_bytes) = match &backend {
             Backend::Pjrt { entry } => {
                 let (eng, statics) = engine.as_mut().expect("engine initialized");
-                process_pjrt(mode, &st, eng, statics, entry, buf, live)?
+                process_pjrt(mode, &st, eng, statics, entry, &view, &mut staging)?
             }
-            Backend::Native => process_native(mode, &st, buf, live)?,
+            Backend::Native => (process_native(mode, &st, view.as_slice(), live)?, 0),
         };
+        // Release the slab reference before reporting the result: once
+        // the chunk is computed, nothing here still needs the block.
+        drop(view);
         let compute_secs = t0.elapsed().as_secs_f64();
         metrics.add(Phase::DeviceCompute, t0.elapsed());
-        if tx_out.send(DevOut { block, lane, inbuf, outs, compute_secs }).is_err() {
+        if tx_out.send(DevOut { block, lane, outs, compute_secs, staged_copy_bytes }).is_err() {
             break; // coordinator went away
         }
     }
@@ -241,40 +272,54 @@ fn build_static_literals(
 ) -> Result<Vec<xla::Literal>> {
     let (n, pl) = (st.n, st.pl);
     let nb = entry.nb;
+    let rows = st.rows.as_ref().expect("pjrt lanes carry row-major statics");
     let lit = |dims: Vec<i64>, data: &[f64]| {
         crate::runtime::exec::to_literal(&HostTensor::new(dims, data.to_vec())?)
     };
     let mut out = vec![
-        lit(vec![n as i64, n as i64], &st.l_row)?,
-        lit(vec![n as i64, nb as i64], &st.dinv_row)?,
+        lit(vec![n as i64, n as i64], &rows.l_row)?,
+        lit(vec![n as i64, nb as i64], &rows.dinv_row)?,
     ];
     if matches!(mode, OffloadMode::Block | OffloadMode::BlockFull) {
-        out.push(lit(vec![n as i64, pl as i64], &st.xlt_row)?);
-        out.push(lit(vec![n as i64], &st.yt)?);
+        out.push(lit(vec![n as i64, pl as i64], &rows.xlt_row)?);
+        out.push(lit(vec![n as i64], &st.pre.y_t)?);
     }
     if matches!(mode, OffloadMode::BlockFull) {
-        out.push(lit(vec![pl as i64, pl as i64], &st.stl_row)?);
-        out.push(lit(vec![pl as i64], &st.rtop)?);
+        out.push(lit(vec![pl as i64, pl as i64], &rows.stl_row)?);
+        out.push(lit(vec![pl as i64], &st.pre.rtop)?);
     }
     Ok(out)
 }
 
-/// Execute the AOT artifact for one chunk and unpack per mode.
+/// Execute the AOT artifact for one chunk and unpack per mode. Returns
+/// the outputs plus the staged bytes: PJRT is the one backend that must
+/// copy — the live view is padded to the artifact's chunk width at the
+/// literal boundary (the device cannot borrow host slabs). `staging` is
+/// the lane's reusable pad buffer: taken here, handed back after the
+/// literal is built, so the hot path never allocates.
 fn process_pjrt(
     mode: OffloadMode,
     st: &LaneStatics,
     engine: &mut Engine,
     statics: &[xla::Literal],
     entry: &ArtifactEntry,
-    buf: Vec<f64>,
-    live: usize,
-) -> Result<(LaneOutputs, Vec<f64>)> {
+    view: &BlockSlice,
+    staging: &mut Vec<f64>,
+) -> Result<(LaneOutputs, u64)> {
     let (n, pl, mb) = (st.n, st.pl, st.mb);
+    let live = view.len() / n;
     // Only the block crosses per call ("cu_send"); constants are cached.
-    // `to_literal` copies, so the chunk buffer survives for recycling.
-    let xb = HostTensor::new(vec![mb as i64, n as i64], buf)?;
+    // The pad+copy into the literal's layout is the single remaining
+    // host copy of the plane — reported for `Counter::BytesCopied`.
+    // The tail fill only does work on a short final chunk.
+    let mut padded = std::mem::take(staging);
+    padded.resize(n * mb, 0.0);
+    padded[..n * live].copy_from_slice(view.as_slice());
+    padded[n * live..].fill(0.0);
+    let staged_bytes = (n * mb * std::mem::size_of::<f64>()) as u64;
+    let xb = HostTensor::new(vec![mb as i64, n as i64], padded)?;
     let xb_lit = crate::runtime::exec::to_literal(&xb)?;
-    let inbuf = xb.data;
+    *staging = xb.data;
     let mut lits: Vec<&xla::Literal> = statics.iter().collect();
     lits.push(&xb_lit);
     let exe = engine.load(entry)?;
@@ -310,7 +355,7 @@ fn process_pjrt(
             LaneOutputs::Solutions(Matrix::from_vec(p, live, r_rows[..p * live].to_vec())?)
         }
     };
-    Ok((result, inbuf))
+    Ok((result, staged_bytes))
 }
 
 fn take(v: &mut Vec<HostTensor>, i: usize) -> Result<HostTensor> {
@@ -321,33 +366,38 @@ fn take(v: &mut Vec<HostTensor>, i: usize) -> Result<HostTensor> {
 }
 
 /// Native (in-crate) equivalent of the artifact, for artifact-free runs.
+/// Computes straight from the shared view: the trsm's input-to-output
+/// step (solving into its own `X̃_b` matrix) is the first compute op, not
+/// a staging copy — the immutable slab is never written.
 fn process_native(
     mode: OffloadMode,
     st: &LaneStatics,
-    buf: Vec<f64>,
+    view: &[f64],
     live: usize,
-) -> Result<(LaneOutputs, Vec<f64>)> {
+) -> Result<LaneOutputs> {
     let n = st.n;
-    // The chunk buffer is col-major (n, mb); solve only the live columns.
-    let mut xbt = Matrix::from_vec(n, live, buf[..n * live].to_vec())?;
-    trsm_lower_left(&st.l, &mut xbt)?;
+    let pre = &*st.pre;
+    // The view is col-major (n, live): solve it into the output matrix.
+    let mut xbt = Matrix::from_vec(n, live, view.to_vec())?;
+    trsm_lower_left(&pre.l, &mut xbt)?;
     let outs = match mode {
         OffloadMode::Trsm => LaneOutputs::Xbt(xbt),
         OffloadMode::Block => {
             let mut g = Matrix::zeros(st.pl, live);
-            crate::linalg::gemm(1.0, &st.pre.xl_tt, &xbt, 0.0, &mut g)?;
-            let rb: Vec<f64> = (0..live).map(|j| crate::linalg::dot(xbt.col(j), &st.yt)).collect();
+            crate::linalg::gemm(1.0, &pre.xl_tt, &xbt, 0.0, &mut g)?;
+            let yt = &pre.y_t;
+            let rb: Vec<f64> = (0..live).map(|j| crate::linalg::dot(xbt.col(j), yt)).collect();
             let d: Vec<f64> = (0..live).map(|j| crate::linalg::sumsq(xbt.col(j))).collect();
             LaneOutputs::Reductions { xbt, g, rb, d }
         }
         OffloadMode::BlockFull => {
             let mut out = Matrix::zeros(st.pl + 1, live);
             let mut scratch = crate::gwas::sloop::SloopScratch::new(st.pl);
-            crate::gwas::sloop::sloop_block(&st.pre, &xbt, &mut scratch, &mut out)?;
+            crate::gwas::sloop::sloop_block(pre, &xbt, &mut scratch, &mut out)?;
             LaneOutputs::Solutions(out)
         }
     };
-    Ok((outs, buf))
+    Ok(outs)
 }
 
 #[cfg(test)]
@@ -355,31 +405,34 @@ mod tests {
     use super::*;
     use crate::gwas::preprocess::preprocess;
     use crate::gwas::problem::{Dims, Problem};
+    use crate::storage::SlabPool;
 
-    fn setup(n: usize, pl: usize, m: usize) -> (Problem, Preprocessed) {
+    fn setup(n: usize, pl: usize, m: usize) -> (Problem, Arc<Preprocessed>) {
         let prob = Problem::synthetic(Dims::new(n, pl, m).unwrap(), 3).unwrap();
         let pre = preprocess(&prob.m, &prob.xl, &prob.y, 8).unwrap();
-        (prob, pre)
+        (prob, Arc::new(pre))
     }
 
-    /// Pack columns [c0, c0+live) of xr into a padded chunk buffer.
-    fn chunk(prob: &Problem, c0: usize, live: usize, mb: usize) -> Vec<f64> {
+    /// Publish columns [c0, c0+live) of xr as a shared block and hand
+    /// back the whole-block view (what the coordinator does per chunk).
+    fn chunk(pool: &SlabPool, prob: &Problem, c0: usize, live: usize) -> BlockSlice {
         let n = prob.dims.n;
-        let mut buf = vec![0.0; n * mb];
+        let mut bm = pool.take(n * live).unwrap();
         for j in 0..live {
-            buf[j * n..(j + 1) * n].copy_from_slice(prob.xr.col(c0 + j));
+            bm.as_mut_slice()[j * n..(j + 1) * n].copy_from_slice(prob.xr.col(c0 + j));
         }
-        buf
+        bm.publish().slice(0, n * live)
     }
 
     #[test]
     fn native_lane_trsm_roundtrip() {
         let (prob, pre) = setup(24, 3, 8);
+        let pool = SlabPool::new(2, 24 * 4);
         let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 4, 1, 2).unwrap();
-        lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 4, 4), live: 4 }).unwrap();
+        lane.submit(DevIn { block: 0, view: chunk(&pool, &prob, 0, 4), live: 4 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         assert_eq!(out.block, 0);
-        assert_eq!(out.inbuf.len(), 24 * 4);
+        assert_eq!(out.staged_copy_bytes, 0, "native lanes compute from the view");
         match out.outs {
             LaneOutputs::Xbt(xbt) => {
                 // L @ xbt == original columns
@@ -392,6 +445,8 @@ mod tests {
             }
             _ => panic!("wrong output kind"),
         }
+        // The lane dropped its view before reporting: the slab is home.
+        assert_eq!(pool.stats().free, 2);
         let metrics = lane.join().unwrap();
         assert_eq!(metrics.count(crate::coordinator::metrics::Phase::DeviceCompute), 1);
     }
@@ -399,9 +454,10 @@ mod tests {
     #[test]
     fn native_lane_blockfull_matches_incore() {
         let (prob, pre) = setup(20, 2, 6);
+        let pool = SlabPool::new(2, 20 * 6);
         let lane =
             DeviceLane::spawn(0, OffloadMode::BlockFull, Backend::Native, &pre, 6, 1, 2).unwrap();
-        lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 6, 6), live: 6 }).unwrap();
+        lane.submit(DevIn { block: 0, view: chunk(&pool, &prob, 0, 6), live: 6 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         let want = crate::gwas::solve_incore(&prob).unwrap();
         match out.outs {
@@ -412,10 +468,14 @@ mod tests {
     }
 
     #[test]
-    fn padded_tail_columns_are_dropped() {
+    fn tail_chunk_narrower_than_the_lane_width_is_handled() {
+        // mb = 8 but only 3 live columns: the view carries exactly the
+        // live data (no padding on the zero-copy plane) and the output
+        // is truncated to match.
         let (prob, pre) = setup(16, 2, 3);
+        let pool = SlabPool::new(2, 16 * 8);
         let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 8, 1, 2).unwrap();
-        lane.submit(DevIn { block: 0, buf: chunk(&prob, 0, 3, 8), live: 3 }).unwrap();
+        lane.submit(DevIn { block: 0, view: chunk(&pool, &prob, 0, 3), live: 3 }).unwrap();
         let out = lane.rx_out.recv().unwrap();
         match out.outs {
             LaneOutputs::Xbt(xbt) => assert_eq!(xbt.cols(), 3),
@@ -427,14 +487,15 @@ mod tests {
     #[test]
     fn lane_processes_stream_in_order() {
         let (prob, pre) = setup(16, 2, 8);
+        let pool = SlabPool::new(4, 16 * 2);
         let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 2, 1, 2).unwrap();
         // More submissions than device buffers: exercises backpressure.
         let feeder = std::thread::spawn({
-            let chunks: Vec<Vec<f64>> = (0..4).map(|b| chunk(&prob, b * 2, 2, 2)).collect();
+            let chunks: Vec<BlockSlice> = (0..4).map(|b| chunk(&pool, &prob, b * 2, 2)).collect();
             let tx = lane.tx.as_ref().unwrap().clone();
             move || {
                 for (b, c) in chunks.into_iter().enumerate() {
-                    tx.send(DevIn { block: b as u64, buf: c, live: 2 }).unwrap();
+                    tx.send(DevIn { block: b as u64, view: c, live: 2 }).unwrap();
                 }
             }
         });
@@ -444,5 +505,38 @@ mod tests {
         }
         feeder.join().unwrap();
         lane.join().unwrap();
+        assert_eq!(pool.stats().free, 4, "every view released");
+    }
+
+    #[test]
+    fn try_submit_drain_loop_delivers_every_chunk() {
+        // The coordinator's submit pattern: try_send, and on Full drain
+        // one result before retrying (never idle in cu_send_wait). Six
+        // chunks through a depth-2 lane must all come back, whatever
+        // interleaving of Full bounces the timing produces.
+        let (prob, pre) = setup(16, 2, 8);
+        let pool = SlabPool::new(4, 16 * 2);
+        let lane = DeviceLane::spawn(0, OffloadMode::Trsm, Backend::Native, &pre, 2, 1, 2).unwrap();
+        let mut received = 0u64;
+        for b in 0..6u64 {
+            let mut item = DevIn { block: b, view: chunk(&pool, &prob, 0, 2), live: 2 };
+            loop {
+                match lane.try_submit(item) {
+                    Ok(()) => break,
+                    Err(TrySendError::Full(bounced)) => {
+                        item = bounced;
+                        let _ = lane.rx_out.recv().unwrap();
+                        received += 1;
+                    }
+                    Err(TrySendError::Disconnected(_)) => panic!("lane died"),
+                }
+            }
+        }
+        while received < 6 {
+            let _ = lane.rx_out.recv().unwrap();
+            received += 1;
+        }
+        lane.join().unwrap();
+        assert_eq!(pool.stats().free, 4, "every view released");
     }
 }

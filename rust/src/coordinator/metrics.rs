@@ -63,10 +63,40 @@ impl Phase {
     ];
 }
 
-/// Accumulated phase durations + counts.
+/// Data-plane byte counters — the observable proof of the zero-copy
+/// refactor. Every block that crosses a stage boundary is tallied once:
+/// under `BytesCopied` when a host `memcpy` moved it (the pre-slab
+/// plane did this up to three times per block), under `BytesBorrowed`
+/// when only a reference crossed (a published slab shared with the
+/// cache, or a [`BlockSlice`](crate::storage::BlockSlice) view handed
+/// to a lane). `tests/zero_copy.rs` pins the steady-state cache-hit
+/// path at `BytesCopied == 0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Counter {
+    /// Block bytes memcpy'd on the host data plane (staging copies; the
+    /// PJRT literal-boundary copy is the one legitimate remainder).
+    BytesCopied,
+    /// Block bytes handed across a stage boundary by reference.
+    BytesBorrowed,
+}
+
+impl Counter {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Counter::BytesCopied => "bytes_copied",
+            Counter::BytesBorrowed => "bytes_borrowed",
+        }
+    }
+
+    pub const ALL: [Counter; 2] = [Counter::BytesCopied, Counter::BytesBorrowed];
+}
+
+/// Accumulated phase durations + counts, plus the data-plane byte
+/// counters.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     totals: BTreeMap<&'static str, (Duration, u64)>,
+    byte_totals: BTreeMap<&'static str, u64>,
 }
 
 impl Metrics {
@@ -80,12 +110,24 @@ impl Metrics {
         e.1 += 1;
     }
 
+    /// Tally data-plane bytes (see [`Counter`]).
+    pub fn add_bytes(&mut self, counter: Counter, bytes: u64) {
+        *self.byte_totals.entry(counter.as_str()).or_insert(0) += bytes;
+    }
+
+    pub fn bytes(&self, counter: Counter) -> u64 {
+        self.byte_totals.get(counter.as_str()).copied().unwrap_or(0)
+    }
+
     /// Merge another metrics object (e.g. a lane's) into this one.
     pub fn merge(&mut self, other: &Metrics) {
         for (k, (d, c)) in &other.totals {
             let e = self.totals.entry(k).or_insert((Duration::ZERO, 0));
             e.0 += *d;
             e.1 += *c;
+        }
+        for (k, b) in &other.byte_totals {
+            *self.byte_totals.entry(k).or_insert(0) += *b;
         }
     }
 
@@ -119,6 +161,13 @@ impl Metrics {
                 c,
                 pct
             ));
+        }
+        for counter in Counter::ALL {
+            let b = self.bytes(counter);
+            if b > 0 {
+                let human = crate::util::human_bytes(b);
+                out.push_str(&format!("{:<16}{:>12}\n", counter.as_str(), human));
+            }
         }
         out
     }
@@ -159,5 +208,23 @@ mod tests {
         assert!(t.contains("sloop"));
         assert!(!t.contains("recv_wait"));
         assert!(t.contains("50.0%"));
+        assert!(!t.contains("bytes_copied"), "zero byte counters stay hidden");
+    }
+
+    #[test]
+    fn byte_counters_accumulate_merge_and_render() {
+        let mut m = Metrics::new();
+        assert_eq!(m.bytes(Counter::BytesCopied), 0);
+        m.add_bytes(Counter::BytesBorrowed, 1000);
+        m.add_bytes(Counter::BytesBorrowed, 24);
+        m.add_bytes(Counter::BytesCopied, 8);
+        let mut other = Metrics::new();
+        other.add_bytes(Counter::BytesCopied, 2);
+        m.merge(&other);
+        assert_eq!(m.bytes(Counter::BytesBorrowed), 1024);
+        assert_eq!(m.bytes(Counter::BytesCopied), 10);
+        let t = m.table(Duration::from_millis(1));
+        assert!(t.contains("bytes_borrowed"), "{t}");
+        assert!(t.contains("bytes_copied"), "{t}");
     }
 }

@@ -8,9 +8,13 @@
 //! * [`pipeline`] — the configuration face (Listing 1.3's knobs):
 //!   [`PipelineConfig`], validation, the one-shot [`run`] wrapper, and
 //!   the oracle check.
-//! * [`lane`] — one worker thread per emulated GPU, PJRT or native.
-//! * [`pool`] — the fixed buffer pools that realize the rotation.
-//! * [`metrics`] — per-phase accounting (the live Fig. 3).
+//! * [`lane`] — one worker thread per emulated GPU, PJRT or native;
+//!   lanes receive zero-copy [`BlockSlice`](crate::storage::BlockSlice)
+//!   views into the shared read slabs.
+//! * [`pool`] — the fixed result-ring pool; the read side rotates
+//!   through the refcounted [`SlabPool`](crate::storage::SlabPool).
+//! * [`metrics`] — per-phase accounting (the live Fig. 3) plus the
+//!   data-plane `bytes_copied` / `bytes_borrowed` counters.
 //! * [`journal`] — the v2 checkpoint journal (parameter header +
 //!   column-range records) behind `--resume`.
 
@@ -25,6 +29,6 @@ pub use crate::devsim::SegmentKnobs;
 pub use engine::{Engine, EngineStats, SegmentPlan};
 pub use journal::Journal;
 pub use lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
-pub use metrics::{Metrics, Phase};
+pub use metrics::{Counter, Metrics, Phase};
 pub use pipeline::{run, verify_against_oracle, BackendKind, PipelineConfig, PipelineReport};
 pub use pool::BufPool;

@@ -1,5 +1,5 @@
 //! Fixed-capacity buffer pools — the in-code form of the paper's
-//! "3 host buffers / 2 device buffers".
+//! buffer rotation, used for the *result* ring (the write side).
 //!
 //! The paper rotates a fixed set of buffers by pointer swaps; in rust the
 //! same discipline is ownership moving through the pipeline stages and
@@ -7,6 +7,12 @@
 //! buffers of a stage are in flight, the producer blocks — exactly the
 //! stall the multibuffering analysis in §3.1 reasons about. Pool size is
 //! therefore a first-class experiment knob (see `ablation_buffers`).
+//!
+//! The *read* side (the streamed `X_R` blocks) rotates through the
+//! refcounted [`SlabPool`](crate::storage::SlabPool) instead: those
+//! buffers are shared by reference with the block cache and the device
+//! lanes, so their return to the pool is a refcount event, not an
+//! ownership hand-back.
 
 use std::collections::VecDeque;
 

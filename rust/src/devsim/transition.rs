@@ -50,21 +50,24 @@ pub fn transition_secs(
     let g = ngpus.max(1);
     let memcpy_bps = (profile.pcie_gbps * 1e9).max(1.0);
     let mut secs = 0.0;
-    // Ring geometry changed → the host ring, result ring, and per-lane
-    // staging chunks are reallocated, zeroed, and page-faulted.
-    if (cand.block, cand.host_buffers, cand.device_buffers)
-        != (cur.block, cur.host_buffers, cur.device_buffers)
-    {
-        let mb = cand.block / g;
+    // Ring geometry changed → the slab ring and the result ring are
+    // reallocated, zeroed, and page-faulted. (The per-lane staging
+    // chunks the pre-slab plane also rebuilt here no longer exist —
+    // lanes borrow views into the slabs — so a device-buffer-only
+    // switch is pool-free and priced purely as a lane respawn below.)
+    if (cand.block, cand.host_buffers) != (cur.block, cur.host_buffers) {
         let ring = cand.host_buffers * cand.block * (n + p);
-        let chunks = cand.device_buffers * g * n * mb;
-        secs += (8 * (ring + chunks)) as f64 / memcpy_bps;
+        secs += (8 * ring) as f64 / memcpy_bps;
     }
     // Lane thread budget or channel depth changed → every lane is torn
-    // down and respawned, re-cloning its statics (L plus the preprocess
-    // products, ≈ 3 n² f64).
+    // down and respawned. Since the zero-copy refactor the statics are
+    // one shared `Arc<Preprocessed>` — a respawn clones a pointer, not
+    // ≈ 3 n² f64 of preprocess products — so the cost is the thread
+    // spawn itself. (PJRT lanes would additionally rebuild their
+    // row-major literals, but the in-flight replanner that prices this
+    // is native-only: `--adapt` is refused with the PJRT backend.)
     if cand.lane_threads != cur.lane_threads || cand.device_buffers != cur.device_buffers {
-        secs += g as f64 * (LANE_SPAWN_SECS + (3 * n * n * 8) as f64 / memcpy_bps);
+        secs += g as f64 * LANE_SPAWN_SECS;
     }
     secs
 }
@@ -96,7 +99,7 @@ mod tests {
     #[test]
     fn lane_respawn_costs_more_than_a_pool_resize() {
         // Same ring geometry, threading changed vs a small block change:
-        // the lane teardown (fixed spawn cost + statics re-clone) must
+        // the lane teardown (one fixed spawn cost per lane) must
         // dominate at modest n.
         let p = HardwareProfile::quadro();
         let a = knobs(256, 3, 2, 2);

@@ -24,7 +24,10 @@
 //! * [`linalg`] — from-scratch dense f64 BLAS/LAPACK subset.
 //! * [`gwas`] — the GLS problem, native preprocessing and the in-core
 //!   oracle (paper Listing 1.1).
-//! * [`storage`] — the XRD on-disk block format and the async I/O engine.
+//! * [`storage`] — the XRD on-disk block format, the async I/O engine,
+//!   and the zero-copy slab plane ([`storage::slab`]): refcounted,
+//!   aligned block buffers shared by the reader, the block cache and
+//!   the device lanes.
 //! * [`runtime`] — PJRT artifact loading and typed execution.
 //! * [`devsim`] — discrete-event simulator with the paper's hardware
 //!   constants (Quadro 6000 / Tesla S2050 clusters).

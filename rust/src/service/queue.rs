@@ -146,17 +146,18 @@ impl JobSpec {
     }
 
     /// Estimated steady-state host bytes for this job given the study's
-    /// sample count `n` and result rows `p`: the host ring, the result
-    /// ring, the per-lane device staging chunks, and the dense sidecars
-    /// (kinship dominates at n²). Deliberately a slight over-estimate —
-    /// admission errs toward not thrashing.
+    /// sample count `n` and result rows `p`: the slab ring the reads
+    /// land in (`host_buffers` staged windows plus up to
+    /// `device_buffers` windows kept resident by in-flight lane views —
+    /// the ledger charges slabs, not the per-lane staging copies the
+    /// zero-copy plane eliminated), the result ring, and the dense
+    /// sidecars (kinship dominates at n²). Deliberately a slight
+    /// over-estimate — admission errs toward not thrashing.
     pub fn host_bytes(&self, n: usize, p: usize) -> u64 {
-        let mb_gpu = self.block / self.ngpus.max(1);
-        let host_ring = self.host_buffers * n * self.block;
+        let slab_ring = (self.host_buffers + self.device_buffers) * n * self.block;
         let result_ring = self.host_buffers * p * self.block;
-        let chunks = self.device_buffers * self.ngpus * n * mb_gpu;
         let sidecars = n * n + n * p + n;
-        (8 * (host_ring + result_ring + chunks + sidecars)) as u64
+        (8 * (slab_ring + result_ring + sidecars)) as u64
     }
 }
 

@@ -1,6 +1,7 @@
 //! Per-job and aggregate reporting for the multi-study service — the
 //! service-level counterpart of the pipeline's `Metrics` table.
 
+use crate::coordinator::metrics::Counter;
 use crate::coordinator::{Metrics, Phase};
 use crate::storage::CacheStats;
 use crate::util::{human_bytes, human_duration};
@@ -21,6 +22,10 @@ pub struct JobReport {
     /// Blocks served from the shared cache / read from disk.
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Data-plane bytes memcpy'd / handed over by reference while this
+    /// job streamed (see [`Counter`]) — the zero-copy plane's receipts.
+    pub bytes_copied: u64,
+    pub bytes_borrowed: u64,
     /// Full phase accounting (absent for jobs that never ran).
     pub metrics: Option<Metrics>,
     /// `Some` means the job failed with this error.
@@ -43,6 +48,8 @@ impl JobReport {
             snps_per_sec: 0.0,
             cache_hits: 0,
             cache_misses: 0,
+            bytes_copied: 0,
+            bytes_borrowed: 0,
             metrics: None,
             error: Some(error),
             reused_engine: false,
@@ -69,6 +76,8 @@ impl JobReport {
             snps_per_sec: snps as f64 / wall_secs.max(1e-12),
             cache_hits: metrics.count(Phase::CacheHit),
             cache_misses: metrics.count(Phase::CacheMiss),
+            bytes_copied: metrics.bytes(Counter::BytesCopied),
+            bytes_borrowed: metrics.bytes(Counter::BytesBorrowed),
             metrics: Some(metrics),
             error: None,
             reused_engine: false,
@@ -220,9 +229,12 @@ mod tests {
             m.add(Phase::CacheHit, Duration::ZERO);
         }
         m.add(Phase::CacheMiss, Duration::ZERO);
+        m.add_bytes(Counter::BytesBorrowed, 4096);
         let j = JobReport::done("x", PathBuf::from("/d"), 0, 1.0, 100, 4, m);
         assert_eq!(j.cache_hits, 3);
         assert_eq!(j.cache_misses, 1);
+        assert_eq!(j.bytes_borrowed, 4096);
+        assert_eq!(j.bytes_copied, 0);
         assert!(j.ok());
     }
 }

@@ -22,7 +22,11 @@
 //! still alive) and is evicted — never a job starved — when queued work
 //! could only be admitted by reclaiming it. Admission charges a job's
 //! estimated host footprint against `mem_budget_bytes` and releases it
-//! on completion,
+//! on completion — and since the zero-copy plane landed, that footprint
+//! bills the refcounted *slab* circulation ([`JobSpec::host_bytes`]):
+//! a block resident in the shared cache and streaming through a job is
+//! one slab, not a cache copy plus a ring copy plus per-lane staging
+//! duplicates,
 //! so a burst of submissions degrades to queueing — never to swapping,
 //! which on the paper's analysis would destroy the disk-bound
 //! pipeline's sustained peak. Submission is also where

@@ -8,13 +8,17 @@
 //! read/write finished and hands the buffer back. Buffers travel *through*
 //! the engine (moved, never copied), so the steady-state pipeline performs
 //! zero allocation — the same discipline the paper's buffer rotation
-//! enforces.
+//! enforces. Block reads go one step further: [`AioEngine::read_cols_slab`]
+//! reads straight into an aligned [`BlockMut`] slab that, once published,
+//! the cache and the device lanes share by reference (the zero-copy data
+//! plane — see [`crate::storage::slab`]).
 //!
 //! One engine per file keeps requests FIFO per device, which is both what
 //! `aio` on a single HDD gives you and what makes the sequential streaming
 //! pattern of the paper (`b+2` read while `b` computes) predictable.
 
 use crate::error::{Error, Result};
+use crate::storage::slab::BlockMut;
 use crate::storage::xrd::XrdFile;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,17 +37,6 @@ pub struct AioHandle {
 }
 
 impl AioHandle {
-    /// A handle that is already complete — e.g. a block served from the
-    /// shared [`BlockCache`](crate::storage::BlockCache) with no disk
-    /// read issued. Lets cache hits flow through the same `aio_wait`
-    /// plumbing as real reads.
-    pub fn ready(buf: Vec<f64>, res: Result<()>) -> AioHandle {
-        let (tx, rx) = channel();
-        let capacity = buf.len();
-        let _ = tx.send((buf, res));
-        AioHandle { rx, capacity }
-    }
-
     /// Replacement buffer for a request lost inside a dead engine.
     fn lost(&self) -> (Vec<f64>, Result<()>) {
         (
@@ -73,10 +66,36 @@ impl AioHandle {
     }
 }
 
+/// One completed slab read, or the news that the engine died with it.
+/// Unlike the `Vec` path there is nothing to mint on engine death: the
+/// dying thread's unwind drops the [`BlockMut`], whose recycler hands
+/// the slab straight back to its pool — a dead engine cannot grow
+/// resident memory past the budget.
+pub struct SlabHandle {
+    rx: Receiver<(BlockMut, Result<()>)>,
+}
+
+impl SlabHandle {
+    /// Block until the read completes. `None` means the engine died with
+    /// the slab (already recycled on the dying side); an `Err` status
+    /// with `Some` hands the slab back for reuse.
+    pub fn wait(self) -> (Option<BlockMut>, Result<()>) {
+        match self.rx.recv() {
+            Ok((buf, res)) => (Some(buf), res),
+            Err(_) => {
+                (None, Err(Error::Pipeline("aio engine died before completing request".into())))
+            }
+        }
+    }
+}
+
 enum Req {
     Read { block: u64, buf: Vec<f64>, done: Sender<(Vec<f64>, Result<()>)> },
     Write { block: u64, buf: Vec<f64>, done: Sender<(Vec<f64>, Result<()>)> },
     ReadCols { col0: u64, ncols: u64, buf: Vec<f64>, done: Sender<(Vec<f64>, Result<()>)> },
+    /// Read straight into an aligned slab — the zero-copy plane's entry
+    /// point: the disk bytes land in the buffer the lanes will view.
+    ReadColsSlab { col0: u64, ncols: u64, buf: BlockMut, done: Sender<(BlockMut, Result<()>)> },
     WriteCols { col0: u64, ncols: u64, buf: Vec<f64>, done: Sender<(Vec<f64>, Result<()>)> },
     Sync { done: Sender<(Vec<f64>, Result<()>)> },
     Shutdown,
@@ -170,6 +189,12 @@ impl AioEngine {
                             cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
                             let _ = done.send((buf, res));
                         }
+                        Req::ReadColsSlab { col0, ncols, mut buf, done } => {
+                            let t0 = Instant::now();
+                            let res = file.read_cols_into(col0, ncols, buf.as_mut_slice());
+                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
+                            let _ = done.send((buf, res));
+                        }
                         Req::WriteCols { col0, ncols, buf, done } => {
                             let t0 = Instant::now();
                             let res = file.write_cols(col0, ncols, &buf);
@@ -218,6 +243,16 @@ impl AioEngine {
         let capacity = buf.len();
         self.submit(Req::Write { block, buf, done });
         AioHandle { rx, capacity }
+    }
+
+    /// `aio_read` of a column range straight into an aligned slab. The
+    /// caller publishes the returned [`BlockMut`] once the read
+    /// completes; the cache and the device lanes then share the very
+    /// bytes the disk delivered — no host copy anywhere on the plane.
+    pub fn read_cols_slab(&self, col0: u64, ncols: u64, buf: BlockMut) -> SlabHandle {
+        let (done, rx) = channel();
+        self.submit(Req::ReadColsSlab { col0, ncols, buf, done });
+        SlabHandle { rx }
     }
 
     /// `aio_read` of an arbitrary column range (block-size-agnostic).
@@ -421,15 +456,51 @@ mod tests {
     }
 
     #[test]
-    fn ready_handle_completes_immediately() {
-        let h = AioHandle::ready(vec![3.0; 5], Ok(()));
-        let (buf, res) = h.wait();
+    fn slab_read_lands_disk_bytes_in_the_slab() {
+        use crate::storage::slab::SlabPool;
+        let p = tmpfile("slab");
+        let h = Header::new(8, 9, 3, 0).unwrap();
+        let eng = AioEngine::new(XrdFile::create(&p, h).unwrap());
+        let data: Vec<f64> = (0..24).map(|i| i as f64).collect();
+        eng.write(0, data.clone()).wait().1.unwrap();
+        let pool = SlabPool::new(2, 24);
+        let (bm, res) = eng.read_cols_slab(0, 3, pool.take(24).unwrap()).wait();
         res.unwrap();
-        assert_eq!(buf, vec![3.0; 5]);
-        // try_wait path too.
-        let h = AioHandle::ready(vec![1.0; 2], Ok(()));
-        let (buf, _) = h.try_wait().expect("ready");
-        assert_eq!(buf.len(), 2);
+        let block = bm.expect("engine alive").publish();
+        assert_eq!(block.as_slice(), &data[..]);
+        // Stats count the slab read like any other operation.
+        assert_eq!(eng.stats().ops, 2);
+        // An out-of-range slab read surfaces the error and the slab.
+        let (bm, res) = eng.read_cols_slab(7, 3, pool.take(24).unwrap()).wait();
+        assert!(res.is_err());
+        drop(bm.expect("slab survives an I/O error"));
+        drop(block);
+        assert_eq!(pool.stats().free, 2, "both slabs back in the pool");
+        drop(eng);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn dead_engine_returns_the_slab_to_its_pool() {
+        use crate::storage::slab::SlabPool;
+        // Simulate engine death with a slab read in flight: the request
+        // (and the BlockMut inside it) is dropped on the dying side, so
+        // the slab must land back in the pool — no replacement minted,
+        // no resident-memory growth past the budget.
+        let pool = SlabPool::new(1, 16);
+        let bm = pool.take(16).unwrap();
+        assert_eq!(pool.stats().free, 0);
+        let (tx, rx) = channel::<(BlockMut, Result<()>)>();
+        let holder = std::thread::spawn(move || drop(bm)); // the "dying engine"
+        holder.join().unwrap();
+        drop(tx);
+        let h = SlabHandle { rx };
+        let (buf, res) = h.wait();
+        assert!(buf.is_none(), "nothing minted for a lost slab");
+        assert!(res.is_err());
+        let s = pool.stats();
+        assert_eq!(s.free, 1, "slab recycled by the dying side's drop");
+        assert_eq!(s.minted, 0);
     }
 
     #[test]

@@ -11,23 +11,34 @@
 //!
 //! Design constraints, in the spirit of the pipeline's fixed pools:
 //!
-//! * **Hard byte budget** — the cache never exceeds `capacity_bytes`;
-//!   insertion evicts least-recently-used entries first. A budget of 0
-//!   disables caching entirely (every probe misses, nothing is stored).
-//! * **Copy in, copy out** — entries are owned copies. The pipeline's
-//!   buffer-rotation invariant (fixed pools, zero steady-state
-//!   allocation) is untouched; a hit is one `memcpy` at RAM speed,
-//!   which is exactly the regime the paper's Fig. 3 calls "free"
-//!   relative to an HDD read.
+//! * **Hard byte budget** — the cache never exceeds `capacity_bytes`
+//!   of *pinned* memory: entries are charged their slab's full capacity
+//!   ([`Block::resident_bytes`] — a tail window published short still
+//!   keeps its whole slab alive), and insertion evicts
+//!   least-recently-used entries (by those bytes, not entry count)
+//!   until the newcomer fits. A budget of 0 disables caching entirely
+//!   (every probe misses, nothing is stored).
+//! * **Share, don't copy** — entries are refcounted
+//!   [`Block`](crate::storage::slab::Block) handles into the very slabs
+//!   the aio engine read from disk: an insert is an `Arc` clone (no
+//!   `to_vec`), a hit hands the same `Arc` back (no memcpy), and an
+//!   eviction cannot invalidate a handle a pipeline still streams from —
+//!   the slab only returns to its pool when the last holder drops.
+//! * **O(1) eviction** — entries are threaded on an intrusive LRU list
+//!   (index links inside the node slab), so a hit's recency bump and an
+//!   eviction are both constant-time; the old full-map `min_by_key`
+//!   scan made every insert O(entries) once the budget filled.
 //! * **Shared + thread-safe** — one `Arc<BlockCache>` is handed to all
 //!   service workers; a single mutex suffices because the critical
-//!   sections are memcpys, orders of magnitude shorter than the disk
-//!   reads they replace.
+//!   sections are now pointer moves, orders of magnitude shorter than
+//!   the disk reads they replace.
 //!
 //! Hit/miss counts surface both here ([`CacheStats`]) and as
 //! `Phase::CacheHit` / `Phase::CacheMiss` in the per-job
-//! [`coordinator::metrics`](crate::coordinator::Metrics).
+//! [`coordinator::metrics`](crate::coordinator::Metrics); the bytes the
+//! sharing saves show up as the metrics' `bytes_borrowed` counter.
 
+use crate::storage::slab::Block;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -52,7 +63,8 @@ pub struct CacheStats {
     pub misses: u64,
     pub insertions: u64,
     pub evictions: u64,
-    /// Bytes currently resident.
+    /// Bytes currently resident — slab capacities pinned by the entries
+    /// ([`Block::resident_bytes`]), not just published lengths.
     pub bytes: u64,
     /// Entries currently resident.
     pub entries: usize,
@@ -60,25 +72,115 @@ pub struct CacheStats {
     pub capacity_bytes: u64,
 }
 
+/// Sentinel for "no neighbor" in the intrusive list.
+const NIL: usize = usize::MAX;
+
+/// One resident entry: the shared block handle plus its LRU links
+/// (indices into `Inner::nodes` — the intrusive list).
 #[derive(Debug)]
-struct Entry {
-    data: Vec<f64>,
-    /// Last-touch logical timestamp (monotone per cache).
-    stamp: u64,
+struct Node {
+    key: BlockKey,
+    block: Block,
+    prev: usize,
+    next: usize,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct Inner {
-    map: HashMap<BlockKey, Entry>,
+    map: HashMap<BlockKey, usize>,
+    /// Node slab; `None` slots are on the free list.
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    /// Most-recently-used node (NIL when empty)…
+    head: usize,
+    /// …and least-recently-used (the eviction end).
+    tail: usize,
     bytes: u64,
-    clock: u64,
     hits: u64,
     misses: u64,
     insertions: u64,
     evictions: u64,
 }
 
-/// Reference-counted LRU block cache (see module docs).
+impl Inner {
+    /// Unlink node `i` from the LRU list (it stays in the slab).
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = {
+            let n = self.nodes[i].as_ref().expect("linked node exists");
+            (n.prev, n.next)
+        };
+        match prev {
+            NIL => self.head = next,
+            p => self.nodes[p].as_mut().expect("prev exists").next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            x => self.nodes[x].as_mut().expect("next exists").prev = prev,
+        }
+    }
+
+    /// Link node `i` at the MRU end.
+    fn push_front(&mut self, i: usize) {
+        let old_head = self.head;
+        {
+            let n = self.nodes[i].as_mut().expect("node exists");
+            n.prev = NIL;
+            n.next = old_head;
+        }
+        match old_head {
+            NIL => self.tail = i,
+            h => self.nodes[h].as_mut().expect("head exists").prev = i,
+        }
+        self.head = i;
+    }
+
+    /// Remove node `i` entirely: unlink, free the slot, release the map
+    /// entry and its bytes. Returns the block handle (the caller decides
+    /// whether anything still references it).
+    fn remove(&mut self, i: usize) -> Block {
+        self.unlink(i);
+        let node = self.nodes[i].take().expect("node exists");
+        self.free.push(i);
+        self.map.remove(&node.key);
+        self.bytes -= node.block.resident_bytes();
+        node.block
+    }
+
+    fn insert_node(&mut self, key: BlockKey, block: Block) {
+        let node = Node { key: key.clone(), block, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(node);
+                i
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+    }
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+}
+
+/// Refcounted LRU block cache (see module docs).
 #[derive(Debug)]
 pub struct BlockCache {
     inner: Mutex<Inner>,
@@ -95,59 +197,57 @@ impl BlockCache {
         self.capacity_bytes
     }
 
-    /// Probe for `key`; on a hit, copy the block into `buf` (whose length
-    /// must equal the entry's) and refresh its recency. Every probe is
-    /// counted as a hit or a miss — the pipeline probes exactly once per
-    /// block, so `misses` equals the disk reads actually issued.
-    pub fn get_into(&self, key: &BlockKey, buf: &mut [f64]) -> bool {
+    /// Probe for `key`, expecting a block of `len` f64 elements. A hit
+    /// hands back a clone of the shared handle (zero memcpy) and bumps
+    /// its recency in O(1). Every probe is counted as a hit or a miss —
+    /// the pipeline probes exactly once per block, so `misses` equals
+    /// the disk reads actually issued. A resident entry whose length
+    /// disagrees with `len` counts as a miss (never alias bad geometry).
+    pub fn get(&self, key: &BlockKey, len: usize) -> Option<Block> {
         let mut guard = self.inner.lock().expect("cache lock poisoned");
         let inner = &mut *guard;
-        inner.clock += 1;
-        let stamp = inner.clock;
-        match inner.map.get_mut(key) {
-            Some(e) if e.data.len() == buf.len() => {
-                buf.copy_from_slice(&e.data);
-                e.stamp = stamp;
+        match inner.map.get(key).copied() {
+            Some(i) if inner.nodes[i].as_ref().expect("mapped node").block.len() == len => {
+                inner.unlink(i);
+                inner.push_front(i);
                 inner.hits += 1;
-                true
+                Some(inner.nodes[i].as_ref().expect("mapped node").block.clone())
             }
             _ => {
                 inner.misses += 1;
-                false
+                None
             }
         }
     }
 
-    /// Insert (a copy of) a block, evicting LRU entries until it fits.
-    /// Blocks larger than the whole budget are not cached.
-    pub fn insert(&self, key: BlockKey, data: &[f64]) {
-        let bytes = (data.len() * std::mem::size_of::<f64>()) as u64;
-        if bytes == 0 || bytes > self.capacity_bytes {
+    /// Insert a shared handle to `block` (an `Arc` clone — the cache and
+    /// the pipeline reference the same slab), evicting LRU entries until
+    /// its bytes fit. The budget is charged what the entry actually
+    /// *pins* — the slab's full capacity, not just the published length
+    /// (a tail window published short still keeps its whole slab
+    /// resident). Blocks pinning more than the whole budget are not
+    /// cached.
+    pub fn insert(&self, key: BlockKey, block: &Block) {
+        let bytes = block.resident_bytes();
+        if block.bytes() == 0 || bytes > self.capacity_bytes {
             return;
         }
         let mut guard = self.inner.lock().expect("cache lock poisoned");
         let inner = &mut *guard;
-        if let Some(old) = inner.map.remove(&key) {
-            inner.bytes -= (old.data.len() * std::mem::size_of::<f64>()) as u64;
+        if let Some(i) = inner.map.get(&key).copied() {
+            inner.remove(i);
         }
         while inner.bytes + bytes > self.capacity_bytes {
-            let Some(lru) = inner
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.stamp)
-                .map(|(k, _)| k.clone())
-            else {
+            let lru = inner.tail;
+            if lru == NIL {
                 break;
-            };
-            let old = inner.map.remove(&lru).expect("lru entry exists");
-            inner.bytes -= (old.data.len() * std::mem::size_of::<f64>()) as u64;
+            }
+            inner.remove(lru);
             inner.evictions += 1;
         }
-        inner.clock += 1;
-        let stamp = inner.clock;
         inner.bytes += bytes;
         inner.insertions += 1;
-        inner.map.insert(key, Entry { data: data.to_vec(), stamp });
+        inner.insert_node(key, block.clone());
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -167,21 +267,27 @@ impl BlockCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::slab::SlabPool;
 
     fn key(ds: &str, col0: u64) -> BlockKey {
         BlockKey { dataset: ds.to_string(), col0, ncols: 4 }
     }
 
+    fn block(pool: &SlabPool, len: usize, v: f64) -> Block {
+        let mut bm = pool.take(len).unwrap();
+        bm.as_mut_slice().fill(v);
+        bm.publish()
+    }
+
     #[test]
-    fn hit_returns_data_and_counts() {
+    fn hit_returns_the_shared_handle_and_counts() {
+        let pool = SlabPool::new(4, 4);
         let c = BlockCache::new(1 << 20);
-        let data = vec![1.0, 2.0, 3.0, 4.0];
-        c.insert(key("a", 0), &data);
-        let mut buf = vec![0.0; 4];
-        assert!(c.get_into(&key("a", 0), &mut buf));
-        assert_eq!(buf, data);
-        assert!(!c.get_into(&key("a", 4), &mut buf)); // absent
-        assert!(!c.get_into(&key("b", 0), &mut buf)); // other dataset
+        c.insert(key("a", 0), &block(&pool, 4, 1.5));
+        let got = c.get(&key("a", 0), 4).expect("hit");
+        assert_eq!(got.as_slice(), &[1.5; 4][..]);
+        assert!(c.get(&key("a", 4), 4).is_none()); // absent
+        assert!(c.get(&key("b", 0), 4).is_none()); // other dataset
         let s = c.stats();
         assert_eq!(s.hits, 1);
         assert_eq!(s.misses, 2);
@@ -192,18 +298,18 @@ mod tests {
 
     #[test]
     fn lru_eviction_under_budget() {
+        let pool = SlabPool::new(4, 4);
         // Budget of exactly two 4-element blocks (64 bytes).
         let c = BlockCache::new(64);
-        c.insert(key("a", 0), &[0.0; 4]);
-        c.insert(key("a", 4), &[1.0; 4]);
+        c.insert(key("a", 0), &block(&pool, 4, 0.0));
+        c.insert(key("a", 4), &block(&pool, 4, 1.0));
         // Touch block 0 so block 4 becomes the LRU.
-        let mut buf = vec![0.0; 4];
-        assert!(c.get_into(&key("a", 0), &mut buf));
+        assert!(c.get(&key("a", 0), 4).is_some());
         // A third block evicts the LRU (block 4), not the recently-used.
-        c.insert(key("a", 8), &[2.0; 4]);
-        assert!(c.get_into(&key("a", 0), &mut buf), "recently used survives");
-        assert!(c.get_into(&key("a", 8), &mut buf), "new entry resident");
-        assert!(!c.get_into(&key("a", 4), &mut buf), "LRU evicted");
+        c.insert(key("a", 8), &block(&pool, 4, 2.0));
+        assert!(c.get(&key("a", 0), 4).is_some(), "recently used survives");
+        assert!(c.get(&key("a", 8), 4).is_some(), "new entry resident");
+        assert!(c.get(&key("a", 4), 4).is_none(), "LRU evicted");
         let s = c.stats();
         assert_eq!(s.evictions, 1);
         assert_eq!(s.entries, 2);
@@ -211,9 +317,66 @@ mod tests {
     }
 
     #[test]
+    fn eviction_walks_the_lru_tail_in_order() {
+        let pool = SlabPool::new(8, 4);
+        // Six entries at 32 bytes each under a 4-entry budget: the two
+        // oldest *untouched* entries go, the refreshed one stays.
+        let c = BlockCache::new(4 * 32);
+        for i in 0..4u64 {
+            c.insert(key("a", i * 4), &block(&pool, 4, i as f64));
+        }
+        assert!(c.get(&key("a", 0), 4).is_some(), "refresh the oldest");
+        c.insert(key("a", 16), &block(&pool, 4, 4.0));
+        c.insert(key("a", 20), &block(&pool, 4, 5.0));
+        // Evicted in recency order: 4 then 8 (0 was refreshed).
+        assert!(c.get(&key("a", 4), 4).is_none());
+        assert!(c.get(&key("a", 8), 4).is_none());
+        assert!(c.get(&key("a", 0), 4).is_some());
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.stats().entries, 4);
+    }
+
+    #[test]
+    fn eviction_does_not_invalidate_outstanding_handles() {
+        let pool = SlabPool::new(2, 4);
+        let c = BlockCache::new(32); // exactly one block
+        c.insert(key("a", 0), &block(&pool, 4, 7.0));
+        let held = c.get(&key("a", 0), 4).expect("hit");
+        c.insert(key("a", 4), &block(&pool, 4, 8.0)); // evicts the held one
+        assert!(c.get(&key("a", 0), 4).is_none(), "evicted from the cache");
+        // …but the handle a pipeline already streams from stays valid:
+        // the slab returns to its pool only when the last holder drops.
+        assert_eq!(held.as_slice(), &[7.0; 4][..]);
+    }
+
+    #[test]
+    fn tail_window_is_charged_its_full_slab_capacity() {
+        // A block published shorter than its slab (a tail window) pins
+        // the whole slab: the budget must see the capacity, not the
+        // published length — else short blocks hide most of their
+        // allocation and residency overshoots the budget.
+        let pool = SlabPool::new(2, 8); // 64-byte slabs
+        let c = BlockCache::new(40); // fits a 4-elem payload, not a slab
+        let mut bm = pool.take(4).unwrap(); // published 32, pins 64
+        bm.as_mut_slice().fill(1.0);
+        c.insert(key("a", 0), &bm.publish());
+        assert_eq!(c.stats().entries, 0, "pinned bytes exceed the budget");
+        // Under a slab-sized budget it caches — and the ledger carries
+        // the pinned 64, not the published 32.
+        let c = BlockCache::new(64);
+        let mut bm = pool.take(4).unwrap();
+        bm.as_mut_slice().fill(2.0);
+        c.insert(key("a", 0), &bm.publish());
+        assert_eq!(c.stats().entries, 1);
+        assert_eq!(c.stats().bytes, 64);
+        assert!(c.get(&key("a", 0), 4).is_some());
+    }
+
+    #[test]
     fn oversized_block_is_not_cached() {
+        let pool = SlabPool::new(1, 4);
         let c = BlockCache::new(16); // < one 4-element block
-        c.insert(key("a", 0), &[0.0; 4]);
+        c.insert(key("a", 0), &block(&pool, 4, 0.0));
         let s = c.stats();
         assert_eq!(s.insertions, 0);
         assert_eq!(s.entries, 0);
@@ -222,47 +385,61 @@ mod tests {
 
     #[test]
     fn zero_budget_disables() {
+        let pool = SlabPool::new(1, 4);
         let c = BlockCache::new(0);
-        c.insert(key("a", 0), &[1.0; 4]);
-        let mut buf = vec![0.0; 4];
-        assert!(!c.get_into(&key("a", 0), &mut buf));
+        c.insert(key("a", 0), &block(&pool, 4, 1.0));
+        assert!(c.get(&key("a", 0), 4).is_none());
         assert_eq!(c.stats().entries, 0);
     }
 
     #[test]
     fn reinsert_replaces_without_leaking_bytes() {
+        let pool = SlabPool::new(2, 4);
         let c = BlockCache::new(1 << 10);
-        c.insert(key("a", 0), &[1.0; 4]);
-        c.insert(key("a", 0), &[2.0; 4]);
+        c.insert(key("a", 0), &block(&pool, 4, 1.0));
+        c.insert(key("a", 0), &block(&pool, 4, 2.0));
         let s = c.stats();
         assert_eq!(s.entries, 1);
         assert_eq!(s.bytes, 32);
-        let mut buf = vec![0.0; 4];
-        assert!(c.get_into(&key("a", 0), &mut buf));
-        assert_eq!(buf, vec![2.0; 4]);
+        assert_eq!(c.get(&key("a", 0), 4).unwrap().as_slice(), &[2.0; 4][..]);
     }
 
     #[test]
     fn length_mismatch_is_a_miss() {
+        let pool = SlabPool::new(1, 4);
         let c = BlockCache::new(1 << 10);
-        c.insert(key("a", 0), &[1.0; 4]);
-        let mut short = vec![0.0; 3];
-        assert!(!c.get_into(&key("a", 0), &mut short));
+        c.insert(key("a", 0), &block(&pool, 4, 1.0));
+        assert!(c.get(&key("a", 0), 3).is_none());
         assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn insert_shares_the_slab_instead_of_copying() {
+        let pool = SlabPool::new(1, 4);
+        let c = BlockCache::new(1 << 10);
+        let b = block(&pool, 4, 3.0);
+        c.insert(key("a", 0), &b);
+        drop(b);
+        // The cache's handle is the only holder now: the slab has NOT
+        // returned to the pool (no copy was made on insert), and a take
+        // must mint a replacement.
+        assert_eq!(pool.stats().free, 0);
+        pool.take(4).unwrap();
+        assert_eq!(pool.stats().minted, 1);
     }
 
     #[test]
     fn shared_across_threads() {
         use std::sync::Arc;
+        let pool = SlabPool::new(1, 4);
         let c = Arc::new(BlockCache::new(1 << 20));
-        c.insert(key("a", 0), &[7.0; 4]);
+        c.insert(key("a", 0), &block(&pool, 4, 7.0));
         let handles: Vec<_> = (0..4)
             .map(|_| {
                 let c = c.clone();
                 std::thread::spawn(move || {
-                    let mut buf = vec![0.0; 4];
-                    assert!(c.get_into(&key("a", 0), &mut buf));
-                    assert_eq!(buf, vec![7.0; 4]);
+                    let got = c.get(&key("a", 0), 4).expect("hit");
+                    assert_eq!(got.as_slice(), &[7.0; 4][..]);
                 })
             })
             .collect();

@@ -1,18 +1,22 @@
 //! Storage layer: the XRD on-disk block format, dataset directories, the
 //! synchronous positioned-I/O core, the asynchronous engine providing
-//! the paper's `aio_read` / `aio_wait` / `aio_write` primitives, and the
+//! the paper's `aio_read` / `aio_wait` / `aio_write` primitives, the
+//! refcounted slab plane that lets blocks flow by reference, and the
 //! shared block cache that amortizes disk reads across studies.
 
 pub mod aio;
 pub mod cache;
 pub mod dataset;
 pub mod format;
+pub mod slab;
 pub mod xrd;
 
 pub use aio::{
     probe_read_bandwidth, probe_read_bandwidth_windowed, AioEngine, AioHandle, AioStats, ReadProbe,
+    SlabHandle,
 };
 pub use cache::{BlockCache, BlockKey, CacheStats};
+pub use slab::{Block, BlockMut, BlockSlice, SlabPool, SlabStats};
 pub use dataset::{
     generate, generate_with_dtype, load_meta, load_sidecars, load_xr_incore, DatasetPaths, Meta,
 };

@@ -1,0 +1,444 @@
+//! Refcounted, cache-line-aligned block slabs — the zero-copy data plane.
+//!
+//! The paper's sustained-peak claim rests on the disk being the only data
+//! mover; every host-side `memcpy` of a streamed block is overhead the
+//! HDD analysis never budgeted for. This module makes blocks flow *by
+//! reference* instead of by copy:
+//!
+//! ```text
+//!   SlabPool::take ──▶ BlockMut (exclusive: the aio engine reads into it)
+//!                          │ publish()            — immutable from here on
+//!                          ▼
+//!                       Block (Arc) ──clone──▶ BlockCache entry (zero copy)
+//!                          │ slice()
+//!                          ▼
+//!                       BlockSlice ──▶ device lanes (one view per chunk)
+//!                          ╰─ last handle drops ──▶ slab returns to pool
+//! ```
+//!
+//! Aliasing is enforced by the type system: [`BlockMut`] is the only
+//! writable stage and [`BlockMut::publish`] consumes it, so once a
+//! [`Block`] exists no `&mut` path to the slab remains — a published
+//! block cannot be mutated while the cache or a lane holds a view
+//! (`tests/zero_copy.rs` exercises the runtime face of this via
+//! [`Block::try_unpublish`]).
+//!
+//! Pool discipline, in the spirit of [`crate::coordinator::pool::BufPool`]:
+//! the pool pre-faults `retain` slabs and recycles them through a drop
+//! hook, so a stream that releases its blocks as fast as it takes them
+//! allocates nothing. Unlike `BufPool` it may *mint* an extra slab when
+//! the free list is empty — which happens only while published blocks
+//! are retained elsewhere: by the shared [`BlockCache`], by lane views
+//! still in flight past the read-ahead, or inside a dying engine. The
+//! demand is structurally bounded (read-ahead + device-buffer depth),
+//! never open-ended, and excess returns beyond `retain` are freed, so
+//! residency converges back to the budget. [`SlabStats`] exposes the
+//! mint/recycle counters the tests pin this down with.
+//!
+//! [`BlockCache`]: crate::storage::BlockCache
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Cache-line size the slabs align to (bytes).
+pub const SLAB_ALIGN: usize = 64;
+const ALIGN_ELEMS: usize = SLAB_ALIGN / std::mem::size_of::<f64>();
+
+/// One aligned allocation. The backing `Vec` is over-allocated by one
+/// cache line and never grown, so the aligned offset computed at
+/// construction stays valid for the slab's whole life.
+#[derive(Debug)]
+struct Slab {
+    data: Vec<f64>,
+    /// Element offset of the first 64-byte-aligned f64.
+    off: usize,
+    /// Usable aligned capacity in elements.
+    cap: usize,
+}
+
+impl Slab {
+    fn new(cap: usize) -> Slab {
+        let data = vec![0.0f64; cap + ALIGN_ELEMS];
+        let addr = data.as_ptr() as usize;
+        let off = (SLAB_ALIGN - addr % SLAB_ALIGN) % SLAB_ALIGN / std::mem::size_of::<f64>();
+        Slab { data, off, cap }
+    }
+
+    fn slice(&self, len: usize) -> &[f64] {
+        debug_assert!(len <= self.cap);
+        &self.data[self.off..self.off + len]
+    }
+
+    fn slice_mut(&mut self, len: usize) -> &mut [f64] {
+        debug_assert!(len <= self.cap);
+        &mut self.data[self.off..self.off + len]
+    }
+}
+
+/// Pool counters (monotone, plus the current free count).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlabStats {
+    /// Slabs allocated beyond the pre-faulted set (free list was empty —
+    /// e.g. the cache retained a published block past the segment).
+    pub minted: u64,
+    /// Slabs returned to the free list by a released block.
+    pub recycled: u64,
+    /// Returns that found the free list already at `retain` and freed
+    /// the slab instead (residency converging back to the budget).
+    pub dropped: u64,
+    /// Slabs currently on the free list.
+    pub free: usize,
+}
+
+#[derive(Debug, Default)]
+struct StatsCells {
+    minted: AtomicU64,
+    recycled: AtomicU64,
+    dropped: AtomicU64,
+}
+
+#[derive(Debug)]
+struct PoolShared {
+    free: Mutex<Vec<Slab>>,
+    /// Free slabs retained for reuse (the tuned host-buffer budget).
+    retain: usize,
+    /// Aligned capacity of every slab (elements).
+    cap_elems: usize,
+    stats: StatsCells,
+}
+
+impl PoolShared {
+    /// Return a slab to the free list, or free it when already full.
+    fn recycle(&self, slab: Slab) {
+        let mut free = self.free.lock().expect("slab pool lock poisoned");
+        if free.len() < self.retain {
+            free.push(slab);
+            self.stats.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A pool of same-capacity aligned slabs recycled through the stream
+/// (see module docs for the discipline).
+#[derive(Debug)]
+pub struct SlabPool {
+    shared: Arc<PoolShared>,
+}
+
+impl SlabPool {
+    /// `retain` slabs of `cap_elems` aligned f64 elements, pre-faulted.
+    pub fn new(retain: usize, cap_elems: usize) -> SlabPool {
+        let free = (0..retain).map(|_| Slab::new(cap_elems)).collect();
+        SlabPool {
+            shared: Arc::new(PoolShared {
+                free: Mutex::new(free),
+                retain,
+                cap_elems,
+                stats: StatsCells::default(),
+            }),
+        }
+    }
+
+    /// The pool's retained-slab budget (the read-ahead sizing knob).
+    pub fn target(&self) -> usize {
+        self.shared.retain
+    }
+
+    /// Aligned capacity of each slab in elements.
+    pub fn cap_elems(&self) -> usize {
+        self.shared.cap_elems
+    }
+
+    /// Take a writable slab for `len` elements. Reuses a free slab when
+    /// one exists, mints a replacement otherwise (the free list only
+    /// runs dry while published blocks are retained elsewhere — the
+    /// shared cache, lane views in flight, or a dying engine).
+    pub fn take(&self, len: usize) -> Result<BlockMut> {
+        if len == 0 || len > self.shared.cap_elems {
+            return Err(Error::Config(format!(
+                "slab take of {len} elements outside pool capacity {}",
+                self.shared.cap_elems
+            )));
+        }
+        let slab = self.shared.free.lock().expect("slab pool lock poisoned").pop();
+        let slab = match slab {
+            Some(s) => s,
+            None => {
+                self.shared.stats.minted.fetch_add(1, Ordering::Relaxed);
+                Slab::new(self.shared.cap_elems)
+            }
+        };
+        let rec = Recycler { slab: Some(slab), pool: Arc::downgrade(&self.shared) };
+        Ok(BlockMut { rec, len })
+    }
+
+    pub fn stats(&self) -> SlabStats {
+        SlabStats {
+            minted: self.shared.stats.minted.load(Ordering::Relaxed),
+            recycled: self.shared.stats.recycled.load(Ordering::Relaxed),
+            dropped: self.shared.stats.dropped.load(Ordering::Relaxed),
+            free: self.shared.free.lock().expect("slab pool lock poisoned").len(),
+        }
+    }
+}
+
+/// Drop hook that returns the slab to its pool — however the holder
+/// dies. A lane dropping its last view, the cache evicting an entry,
+/// and an aio engine thread unwinding with a request in flight all
+/// funnel through here, so no path can leak a slab or mint a
+/// replacement for one that still exists.
+#[derive(Debug)]
+struct Recycler {
+    slab: Option<Slab>,
+    /// Weak: blocks may outlive their engine's pool (the shared cache
+    /// does this by design); the orphaned slab is then simply freed.
+    pool: Weak<PoolShared>,
+}
+
+impl Drop for Recycler {
+    fn drop(&mut self) {
+        if let (Some(slab), Some(pool)) = (self.slab.take(), self.pool.upgrade()) {
+            pool.recycle(slab);
+        }
+    }
+}
+
+/// The exclusive, writable stage of a block's life: the aio engine
+/// reads disk bytes straight into it. [`BlockMut::publish`] consumes it
+/// into an immutable [`Block`]; dropping it unpublished (error paths,
+/// a dying engine) returns the slab to the pool.
+#[derive(Debug)]
+pub struct BlockMut {
+    rec: Recycler,
+    len: usize,
+}
+
+impl BlockMut {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        self.rec.slab.as_ref().expect("slab present until drop").slice(self.len)
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        self.rec.slab.as_mut().expect("slab present until drop").slice_mut(self.len)
+    }
+
+    /// Freeze the slab: from here on only shared `&[f64]` access exists.
+    pub fn publish(self) -> Block {
+        let len = self.len;
+        Block { rec: Arc::new(self.rec), len }
+    }
+}
+
+/// A published, immutable, refcounted block. Cloning is an `Arc` clone;
+/// the slab returns to its pool when the last handle (cache entry, lane
+/// view, coordinator) drops.
+#[derive(Debug, Clone)]
+pub struct Block {
+    rec: Arc<Recycler>,
+    len: usize,
+}
+
+impl Block {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes of the published payload (the logical block).
+    pub fn bytes(&self) -> u64 {
+        (self.len * std::mem::size_of::<f64>()) as u64
+    }
+
+    /// Bytes this handle actually pins: the slab's full usable capacity,
+    /// which can exceed [`Block::bytes`] for a tail window published
+    /// short. Anything metering *residency* (the cache's byte budget)
+    /// must charge this, or a retained short block hides most of its
+    /// allocation from the ledger.
+    pub fn resident_bytes(&self) -> u64 {
+        let slab = self.rec.slab.as_ref().expect("slab present until drop");
+        (slab.cap * std::mem::size_of::<f64>()) as u64
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        self.rec.slab.as_ref().expect("slab present until drop").slice(self.len)
+    }
+
+    /// A borrowed view of `len` elements starting at `off` — what the
+    /// coordinator hands each device lane instead of a copied chunk.
+    pub fn slice(&self, off: usize, len: usize) -> BlockSlice {
+        assert!(
+            off + len <= self.len,
+            "block slice {off}+{len} out of bounds (block has {})",
+            self.len
+        );
+        BlockSlice { block: self.clone(), off, len }
+    }
+
+    /// Reclaim exclusive (mutable) access — succeeds only when this is
+    /// the *last* handle. While the cache or any lane still holds the
+    /// block, mutation is impossible: this is the runtime face of the
+    /// publish-freeze guarantee.
+    pub fn try_unpublish(self) -> std::result::Result<BlockMut, Block> {
+        let len = self.len;
+        match Arc::try_unwrap(self.rec) {
+            Ok(rec) => Ok(BlockMut { rec, len }),
+            Err(rec) => Err(Block { rec, len }),
+        }
+    }
+}
+
+/// A `(offset, width)` view into a published [`Block`] — the per-lane
+/// chunk of the zero-copy plane. Holding one keeps the whole slab alive.
+#[derive(Debug, Clone)]
+pub struct BlockSlice {
+    block: Block,
+    off: usize,
+    len: usize,
+}
+
+impl BlockSlice {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.block.as_slice()[self.off..self.off + self.len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(pool: &SlabPool, len: usize, v: f64) -> Block {
+        let mut bm = pool.take(len).unwrap();
+        bm.as_mut_slice().fill(v);
+        bm.publish()
+    }
+
+    #[test]
+    fn slabs_are_cache_line_aligned() {
+        for cap in [1usize, 7, 8, 1024, 4093] {
+            let pool = SlabPool::new(2, cap);
+            let bm = pool.take(cap).unwrap();
+            let addr = bm.as_slice().as_ptr() as usize;
+            assert_eq!(addr % SLAB_ALIGN, 0, "cap {cap}: {addr:#x}");
+        }
+    }
+
+    #[test]
+    fn steady_state_reuse_mints_nothing() {
+        let pool = SlabPool::new(3, 64);
+        for round in 0..10 {
+            let blocks: Vec<Block> = (0..3).map(|i| filled(&pool, 64, i as f64)).collect();
+            for (i, b) in blocks.iter().enumerate() {
+                assert_eq!(b.as_slice()[0], i as f64);
+            }
+            drop(blocks);
+            let s = pool.stats();
+            assert_eq!(s.minted, 0, "round {round}");
+            assert_eq!(s.free, 3);
+        }
+        assert_eq!(pool.stats().recycled, 30);
+    }
+
+    #[test]
+    fn retained_block_mints_replacement_then_converges() {
+        let pool = SlabPool::new(1, 16);
+        let held = filled(&pool, 16, 1.0); // the "cache" keeps this one
+        let b2 = filled(&pool, 16, 2.0); // free list empty → mint
+        assert_eq!(pool.stats().minted, 1);
+        drop(b2); // recycled: free list back at retain
+        assert_eq!(pool.stats().free, 1);
+        drop(held); // free list full → freed, not hoarded
+        let s = pool.stats();
+        assert_eq!(s.free, 1);
+        assert_eq!(s.dropped, 1);
+    }
+
+    #[test]
+    fn views_share_the_slab_and_keep_it_alive() {
+        let pool = SlabPool::new(2, 32);
+        let mut bm = pool.take(32).unwrap();
+        for (i, v) in bm.as_mut_slice().iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        let block = bm.publish();
+        let a = block.slice(0, 16);
+        let b = block.slice(16, 16);
+        drop(block); // views alone keep the slab resident
+        assert_eq!(a.as_slice()[3], 3.0);
+        assert_eq!(b.as_slice()[0], 16.0);
+        assert_eq!(pool.stats().free, 1, "slab still out while views live");
+        drop((a, b));
+        assert_eq!(pool.stats().free, 2, "recycled after the last view");
+        assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn published_block_cannot_be_mutated_while_viewed() {
+        let pool = SlabPool::new(1, 8);
+        let block = filled(&pool, 8, 7.0);
+        let view = block.slice(0, 4);
+        // A second handle exists → unpublish (the only path back to
+        // &mut) must refuse.
+        let block = block.try_unpublish().expect_err("view still alive");
+        drop(view);
+        // Sole handle → exclusive access again.
+        let mut bm = block.try_unpublish().expect("last handle");
+        bm.as_mut_slice()[0] = 9.0;
+        assert_eq!(bm.as_slice()[0], 9.0);
+    }
+
+    #[test]
+    fn blocks_outlive_their_pool() {
+        let pool = SlabPool::new(1, 8);
+        let block = filled(&pool, 8, 3.5);
+        drop(pool); // e.g. engine torn down while the cache holds the block
+        assert_eq!(block.as_slice(), &[3.5; 8][..]);
+        drop(block); // orphaned slab is freed, no panic
+    }
+
+    #[test]
+    fn take_rejects_oversize_and_zero() {
+        let pool = SlabPool::new(1, 8);
+        assert!(pool.take(9).is_err());
+        assert!(pool.take(0).is_err());
+        assert!(pool.take(8).is_ok());
+    }
+
+    #[test]
+    fn blocks_cross_threads() {
+        let pool = SlabPool::new(2, 128);
+        let block = filled(&pool, 128, 4.0);
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let view = block.slice(i * 32, 32);
+                std::thread::spawn(move || view.as_slice().iter().sum::<f64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 32.0 * 4.0);
+        }
+        drop(block);
+        assert_eq!(pool.stats().free, 2);
+    }
+}

@@ -55,13 +55,17 @@ pub struct Candidate {
     pub profile: HardwareProfile,
 }
 
-/// Steady-state host bytes of a candidate (host ring + result ring +
-/// device staging chunks) for the memory cap.
+/// Steady-state host bytes of a candidate for the memory cap: the slab
+/// ring (`host_buffers` staged reads) and the result ring, plus up to
+/// `device_buffers` windows' worth of slabs kept alive by lane views in
+/// flight. (The pre-slab plane spent the same `device_buffers` term on
+/// per-lane staging copies; zero-copy moves those bytes into shared
+/// slab residency, so the bill is unchanged — just no longer doubled
+/// when the cache also holds a block.)
 fn candidate_bytes(c: &Candidate, n: usize, p: usize) -> u64 {
-    let mb_gpu = c.block / c.ngpus;
-    let ring = c.host_buffers * c.block * (n + p);
-    let chunks = c.device_buffers * c.ngpus * n * mb_gpu;
-    (8 * (ring + chunks)) as u64
+    let slabs = (c.host_buffers + c.device_buffers) * c.block * n;
+    let results = c.host_buffers * c.block * p;
+    (8 * (slabs + results)) as u64
 }
 
 /// Enumerate the search space for `dims` under `opts`, pricing each point
@@ -208,7 +212,14 @@ pub struct LiveObs {
     pub trsm_gflops: f64,
     /// Observed coordinator S-loop rate (sloop seconds vs its flops).
     pub cpu_gflops: f64,
-    /// Observed staging-copy bandwidth (the emulated PCIe link).
+    /// Effective staging bandwidth. On the zero-copy plane the chunk
+    /// handoff is a borrowed view — the link is structurally never the
+    /// constraint — so the observer reports a large finite constant
+    /// (`ZERO_COPY_LINK_GBPS`) rather than a noise-seeded timing of an
+    /// O(1) handoff. The PJRT literal-boundary copy happens lane-side
+    /// and lands in device-compute time / `DevOut::staged_copy_bytes`,
+    /// not here — moot for this field's consumers, which only run with
+    /// the native backend (`--adapt` refuses PJRT).
     pub pcie_gbps: f64,
 }
 

@@ -23,9 +23,12 @@ import json
 import os
 import sys
 
-# The gated metric: live streaming throughput of the pipelined solver.
-GATE_BENCH = "headline_table"
-GATE_ROW = "live_cugwas_snps_per_sec"
+# The gated metrics: live streaming throughput of the pipelined solver,
+# and the cache-hit serving throughput of the zero-copy block plane.
+GATES = [
+    ("headline_table", "live_cugwas_snps_per_sec"),
+    ("service_throughput", "cache_hit_snps_per_sec"),
+]
 # Soft gate: fail only on a >20% drop vs. the recent median (medians
 # absorb one noisy CI runner; a hard cliff still fails loudly).
 GATE_DROP = 0.20
@@ -33,6 +36,8 @@ GATE_DROP = 0.20
 COLUMNS = [
     ("headline_table", "live_cugwas"),
     ("headline_table", "live_cugwas_snps_per_sec"),
+    ("service_throughput", "cache_hit_snps_per_sec"),
+    ("service_throughput", "shared_cache_speedup"),
     ("headline_table", "cugwas1_vs_ooc"),
     ("headline_table", "cugwas4_vs_ooc"),
 ]
@@ -102,24 +107,29 @@ def main(argv):
         print("| " + " | ".join(cells) + " |")
     print()
 
-    # ---- regression gate ------------------------------------------------
-    cur_val = current[1].get((GATE_BENCH, GATE_ROW))
-    past = [m.get((GATE_BENCH, GATE_ROW)) for _, m in history]
-    past = [v for v in past if v is not None]
-    if cur_val is None:
-        print(f"gate: {GATE_ROW} missing from the current run — failing")
-        return 1
-    if not past:
-        print(f"gate: no history for {GATE_ROW} — passing (first data point)")
-        return 0
-    baseline = sorted(past)[len(past) // 2]
-    floor = baseline * (1.0 - GATE_DROP)
-    verdict = "OK" if cur_val >= floor else "REGRESSION"
-    print(
-        f"gate: {GATE_ROW} = {cur_val:.1f} vs median-of-{len(past)} baseline "
-        f"{baseline:.1f} (floor {floor:.1f}) → {verdict}"
-    )
-    return 0 if cur_val >= floor else 1
+    # ---- regression gates -----------------------------------------------
+    status = 0
+    for gate_bench, gate_row in GATES:
+        cur_val = current[1].get((gate_bench, gate_row))
+        past = [m.get((gate_bench, gate_row)) for _, m in history]
+        past = [v for v in past if v is not None]
+        if cur_val is None:
+            print(f"gate: {gate_row} missing from the current run — failing")
+            status = 1
+            continue
+        if not past:
+            print(f"gate: no history for {gate_row} — passing (first data point)")
+            continue
+        baseline = sorted(past)[len(past) // 2]
+        floor = baseline * (1.0 - GATE_DROP)
+        verdict = "OK" if cur_val >= floor else "REGRESSION"
+        print(
+            f"gate: {gate_row} = {cur_val:.1f} vs median-of-{len(past)} baseline "
+            f"{baseline:.1f} (floor {floor:.1f}) → {verdict}"
+        )
+        if cur_val < floor:
+            status = 1
+    return status
 
 
 if __name__ == "__main__":
