@@ -51,6 +51,7 @@ fn main() {
             spool: None,
             watch: false,
             auto_tune: false, // measure the configured knobs, not a plan
+            metrics_addr: None,
             jobs: jobs(),
         };
         let rep = serve(&cfg).expect("service run");

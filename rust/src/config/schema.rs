@@ -40,6 +40,7 @@
 //! spool = "spool"      # optional: watched directory of job TOMLs
 //! watch = false        # keep serving after the queue drains
 //! auto_tune = true     # probe + plan each dataset on first contact
+//! metrics_addr = "127.0.0.1:9184" # optional: serve /metrics + /healthz
 //!
 //! [job.alpha]
 //! dataset = "data/s1"
@@ -346,6 +347,10 @@ pub struct ServiceConfig {
     /// `false` streams *exactly* the configured knobs — no probing and
     /// no profile application (an explicit `profile` key still works).
     pub auto_tune: bool,
+    /// Optional `host:port` to serve the Prometheus `/metrics` (and
+    /// `/healthz`) endpoint on; also turns the metrics plane on. The
+    /// `--metrics-addr` flag overrides this key.
+    pub metrics_addr: Option<String>,
     /// Jobs from `[job.*]` sections, in section (alphabetical) order —
     /// `priority` is the scheduling knob, not file order.
     pub jobs: Vec<JobSpec>,
@@ -379,8 +384,17 @@ impl ServiceConfig {
             }
         }
         for key in doc.keys_in("service") {
-            if !["workers", "mem_budget_mb", "cache_mb", "threads", "spool", "watch", "auto_tune"]
-                .contains(&key)
+            if ![
+                "workers",
+                "mem_budget_mb",
+                "cache_mb",
+                "threads",
+                "spool",
+                "watch",
+                "auto_tune",
+                "metrics_addr",
+            ]
+            .contains(&key)
             {
                 return Err(Error::Config(format!("unknown key service.{key}")));
             }
@@ -398,6 +412,19 @@ impl ServiceConfig {
         };
         let watch = doc.bool_or("service", "watch", false)?;
         let auto_tune = doc.bool_or("service", "auto_tune", true)?;
+        let metrics_addr = match doc.get("service", "metrics_addr") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    Error::Config("service.metrics_addr: expected string".into())
+                })?;
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(s.to_string())
+                }
+            }
+        };
         let mut jobs = Vec::new();
         for section in doc.sections() {
             if let Some(name) = section.strip_prefix("job.") {
@@ -412,6 +439,7 @@ impl ServiceConfig {
             spool,
             watch,
             auto_tune,
+            metrics_addr,
             jobs,
         })
     }
@@ -541,6 +569,18 @@ artifacts = "arts"
             BackendKind::Pjrt { artifacts } => assert_eq!(artifacts.to_str(), Some("arts")),
             _ => panic!("expected pjrt backend"),
         }
+    }
+
+    #[test]
+    fn metrics_addr_parses_and_defaults_off() {
+        let c = ServiceConfig::from_toml("[service]\nmetrics_addr = \"127.0.0.1:9184\"\n").unwrap();
+        assert_eq!(c.metrics_addr.as_deref(), Some("127.0.0.1:9184"));
+        // Absent or empty → off.
+        assert!(ServiceConfig::from_toml("").unwrap().metrics_addr.is_none());
+        let c = ServiceConfig::from_toml("[service]\nmetrics_addr = \"\"\n").unwrap();
+        assert!(c.metrics_addr.is_none());
+        // Non-string values rejected.
+        assert!(ServiceConfig::from_toml("[service]\nmetrics_addr = 9184\n").is_err());
     }
 
     #[test]

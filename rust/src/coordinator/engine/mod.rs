@@ -44,6 +44,7 @@ use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
 use crate::storage::{
     dataset, AioEngine, AioStats, BlockCache, Header, ReadProbe, SlabPool, Throttle, XrdFile,
 };
+use crate::telemetry::{self, StallVerdict};
 use crate::tune::{fit_disk_latency, replan_knobs, LiveObs};
 use crate::util::threads;
 use segment::{run_segment, take_windows, SegmentCtx};
@@ -430,6 +431,9 @@ impl Engine {
                     plan_cursor += 1;
                     if sp.knobs != knobs {
                         replans += 1;
+                        if telemetry::metrics_enabled() {
+                            telemetry::registry::global().replans_total.add(1);
+                        }
                         knobs = sp.knobs;
                     }
                     sp.windows
@@ -474,6 +478,24 @@ impl Engine {
             windows_done += items.len();
             lat_fit.update(self.reader.stats().since(&before.reader));
 
+            // Per-segment stall attribution: the same phase shares the
+            // re-planner reads, promoted to a verdict. Exported at every
+            // boundary (with the slab circulation) so the `/metrics`
+            // series tracks the live pipeline even on segments where no
+            // knob switch happens.
+            let seg_wall = t_seg.elapsed().as_secs_f64().max(1e-12);
+            let dsec = |now: Duration, then: Duration| now.saturating_sub(then).as_secs_f64();
+            let verdict = StallVerdict::from_shares(
+                dsec(metrics.total(Phase::ReadWait), before.read_wait) / seg_wall,
+                dsec(metrics.total(Phase::RecvWait), before.recv_wait) / seg_wall,
+                dsec(metrics.total(Phase::Sloop), before.sloop) / seg_wall,
+            );
+            if telemetry::metrics_enabled() {
+                let reg = telemetry::registry::global();
+                reg.record_stall(verdict);
+                reg.set_slabs(&self.slabs.stats(), self.slabs.target());
+            }
+
             let schedule_done = plans.map_or(true, |list| plan_cursor >= list.len());
             if cfg.adapt && !remaining.is_empty() && schedule_done {
                 let t0 = Instant::now();
@@ -493,7 +515,7 @@ impl Engine {
                     crate::log_info!(
                         "engine",
                         "adapt: block {}→{}, host {}→{}, device {}→{}, lane threads {}→{} \
-                         (read {:.0}%, recv {:.0}%, disk {:.0} MB/s + {:.2} ms/req)",
+                         (stall: {}; read {:.0}%, recv {:.0}%, disk {:.0} MB/s + {:.2} ms/req)",
                         knobs.block,
                         nk.block,
                         knobs.host_buffers,
@@ -502,6 +524,7 @@ impl Engine {
                         nk.device_buffers,
                         knobs.lane_threads,
                         nk.lane_threads,
+                        verdict.render(),
                         100.0 * obs.read_wait_secs / obs.wall_secs.max(1e-12),
                         100.0 * obs.recv_wait_secs / obs.wall_secs.max(1e-12),
                         obs.disk_mbps,
@@ -509,6 +532,9 @@ impl Engine {
                     );
                     knobs = nk;
                     replans += 1;
+                    if telemetry::metrics_enabled() {
+                        telemetry::registry::global().replans_total.add(1);
+                    }
                 }
                 metrics.add(Phase::Replan, t0.elapsed());
             }
@@ -516,14 +542,25 @@ impl Engine {
 
         self.stats.runs += 1;
         let wall_secs = t_wall.elapsed().as_secs_f64();
+        let snps_per_sec = dims.m as f64 / wall_secs.max(1e-12);
+        let stall = StallVerdict::from_metrics(&metrics, wall_secs);
+        if telemetry::metrics_enabled() {
+            telemetry::registry::global().job_done(
+                wall_secs,
+                dims.m as u64,
+                windows_done as u64,
+                snps_per_sec,
+            );
+        }
         Ok(PipelineReport {
             blocks: windows_done,
             snps: dims.m,
             wall_secs,
-            snps_per_sec: dims.m as f64 / wall_secs.max(1e-12),
+            snps_per_sec,
             metrics,
             device_secs,
             replans,
+            stall,
         })
     }
 

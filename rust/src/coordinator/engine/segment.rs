@@ -126,6 +126,7 @@ fn process_out(
     let p = ctx.p;
     let mb_gpu = ctx.mb_gpu;
     st.outstanding[out.lane] = st.outstanding[out.lane].saturating_sub(1);
+    crate::telemetry::lane_outstanding(out.lane, st.outstanding[out.lane]);
     metrics.add(Phase::DeviceCompute, Duration::from_secs_f64(out.compute_secs));
     metrics.add_bytes(Counter::BytesCopied, out.staged_copy_bytes);
     *device_secs += out.compute_secs;
@@ -144,7 +145,16 @@ fn process_out(
             })?;
             let t0 = Instant::now();
             let (wbuf, res) = h.wait();
-            metrics.add(Phase::WriteWait, t0.elapsed());
+            let waited = t0.elapsed();
+            metrics.add(Phase::WriteWait, waited);
+            crate::telemetry::span(
+                "write_wait",
+                "coordinator",
+                crate::telemetry::trace::TID_COORD,
+                t0,
+                waited,
+                &[("col0", wc0)],
+            );
             res?;
             st.completed.push((wc0, wlen));
             ctx.result_pool.put(wbuf);
@@ -178,7 +188,16 @@ fn process_out(
             asm.buf[c_off * p..(c_off + live) * p].copy_from_slice(rblk.as_slice());
         }
     }
-    metrics.add(Phase::Sloop, t0.elapsed());
+    let sloop_took = t0.elapsed();
+    metrics.add(Phase::Sloop, sloop_took);
+    crate::telemetry::span(
+        "sloop",
+        "coordinator",
+        crate::telemetry::trace::TID_COORD,
+        t0,
+        sloop_took,
+        &[("col0", col0), ("lane", out.lane as u64)],
+    );
     asm.chunks_left -= 1;
     if asm.chunks_left == 0 {
         let mut asm = st.assemblies.remove(&col0).expect("assembly exists");
@@ -245,7 +264,16 @@ pub(super) fn run_segment(
                     let key = block_key(ds, col0, live);
                     let t0 = Instant::now();
                     if let Some(block) = cache.get(&key, n * live) {
-                        metrics.add(Phase::CacheHit, t0.elapsed());
+                        let took = t0.elapsed();
+                        metrics.add(Phase::CacheHit, took);
+                        crate::telemetry::span(
+                            "cache_hit",
+                            "coordinator",
+                            crate::telemetry::trace::TID_COORD,
+                            t0,
+                            took,
+                            &[("col0", col0)],
+                        );
                         metrics.add_bytes(Counter::BytesBorrowed, block.bytes());
                         pending = Some(PendingBlock::Hit(block));
                     } else {
@@ -278,7 +306,16 @@ pub(super) fn run_segment(
             PendingBlock::Read(handle) => {
                 let t0 = Instant::now();
                 let (buf, res) = handle.wait(); // aio_wait Xr[b]
-                metrics.add(Phase::ReadWait, t0.elapsed());
+                let waited = t0.elapsed();
+                metrics.add(Phase::ReadWait, waited);
+                crate::telemetry::span(
+                    "read_wait",
+                    "coordinator",
+                    crate::telemetry::trace::TID_COORD,
+                    t0,
+                    waited,
+                    &[("col0", col0)],
+                );
                 res?;
                 let block = buf.expect("completed read returns its slab").publish();
                 // A freshly read (miss) window becomes cache residency
@@ -310,13 +347,23 @@ pub(super) fn run_segment(
                         item = bounced;
                         let t0 = Instant::now();
                         let out = lanes[gi].rx_out.recv().map_err(|_| lane_died(gi))?;
-                        metrics.add(Phase::RecvWait, t0.elapsed());
+                        let waited = t0.elapsed();
+                        metrics.add(Phase::RecvWait, waited);
+                        crate::telemetry::span(
+                            "recv_wait",
+                            "coordinator",
+                            crate::telemetry::trace::TID_COORD,
+                            t0,
+                            waited,
+                            &[("lane", gi as u64)],
+                        );
                         process_out(&mut ctx, out, &mut st, metrics, device_secs)?;
                     }
                     Err(TrySendError::Disconnected(_)) => return Err(lane_died(gi)),
                 }
             }
             st.outstanding[gi] += 1;
+            crate::telemetry::lane_outstanding(gi, st.outstanding[gi]);
         }
         drop(block); // lanes + cache hold their own references now
 
@@ -345,7 +392,16 @@ pub(super) fn run_segment(
         let t0 = Instant::now();
         match lanes[gi].rx_out.recv_timeout(Duration::from_millis(20)) {
             Ok(out) => {
-                metrics.add(Phase::RecvWait, t0.elapsed());
+                let waited = t0.elapsed();
+                metrics.add(Phase::RecvWait, waited);
+                crate::telemetry::span(
+                    "recv_wait",
+                    "coordinator",
+                    crate::telemetry::trace::TID_COORD,
+                    t0,
+                    waited,
+                    &[("lane", gi as u64)],
+                );
                 process_out(&mut ctx, out, &mut st, metrics, device_secs)?;
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -356,7 +412,16 @@ pub(super) fn run_segment(
     while let Some((wc0, wlen, h)) = st.pending_writes.pop_front() {
         let t0 = Instant::now();
         let (wbuf, res) = h.wait();
-        metrics.add(Phase::WriteWait, t0.elapsed());
+        let waited = t0.elapsed();
+        metrics.add(Phase::WriteWait, waited);
+        crate::telemetry::span(
+            "write_wait",
+            "coordinator",
+            crate::telemetry::trace::TID_COORD,
+            t0,
+            waited,
+            &[("col0", wc0)],
+        );
         res?;
         st.completed.push((wc0, wlen));
         ctx.result_pool.put(wbuf);

@@ -255,8 +255,20 @@ fn lane_main(
         // Release the slab reference before reporting the result: once
         // the chunk is computed, nothing here still needs the block.
         drop(view);
-        let compute_secs = t0.elapsed().as_secs_f64();
-        metrics.add(Phase::DeviceCompute, t0.elapsed());
+        let elapsed = t0.elapsed();
+        let compute_secs = elapsed.as_secs_f64();
+        // Local only: the coordinator re-records this chunk's compute
+        // time from `compute_secs` when it retires the result, and that
+        // is the copy the telemetry plane exports.
+        metrics.add_local(Phase::DeviceCompute, elapsed);
+        crate::telemetry::span(
+            "device_compute",
+            "lane",
+            crate::telemetry::trace::TID_LANE0 + lane as u32,
+            t0,
+            elapsed,
+            &[("block", block), ("lane", lane as u64)],
+        );
         if tx_out.send(DevOut { block, lane, outs, compute_secs, staged_copy_bytes }).is_err() {
             break; // coordinator went away
         }

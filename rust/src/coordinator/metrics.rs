@@ -61,6 +61,23 @@ impl Phase {
         Phase::Replan,
         Phase::Other,
     ];
+
+    /// Position in [`Phase::ALL`] — the telemetry registry's histogram
+    /// index for this phase.
+    pub fn index(&self) -> usize {
+        match self {
+            Phase::ReadWait => 0,
+            Phase::Send => 1,
+            Phase::DeviceCompute => 2,
+            Phase::RecvWait => 3,
+            Phase::Sloop => 4,
+            Phase::WriteWait => 5,
+            Phase::CacheHit => 6,
+            Phase::CacheMiss => 7,
+            Phase::Replan => 8,
+            Phase::Other => 9,
+        }
+    }
 }
 
 /// Data-plane byte counters — the observable proof of the zero-copy
@@ -105,6 +122,18 @@ impl Metrics {
     }
 
     pub fn add(&mut self, phase: Phase, d: Duration) {
+        crate::telemetry::phase_observe(phase.index(), d);
+        self.add_local(phase, d);
+    }
+
+    /// Like [`Metrics::add`], but without feeding the telemetry plane's
+    /// phase histograms. The device lanes use this for their
+    /// thread-local `DeviceCompute` accounting: the coordinator
+    /// re-records every chunk's compute time from
+    /// [`DevOut::compute_secs`](crate::coordinator::lane::DevOut) when
+    /// it retires the result, so exporting both sides would
+    /// double-count the global histogram.
+    pub fn add_local(&mut self, phase: Phase, d: Duration) {
         let e = self.totals.entry(phase.as_str()).or_insert((Duration::ZERO, 0));
         e.0 += d;
         e.1 += 1;
@@ -112,6 +141,7 @@ impl Metrics {
 
     /// Tally data-plane bytes (see [`Counter`]).
     pub fn add_bytes(&mut self, counter: Counter, bytes: u64) {
+        crate::telemetry::bytes_observe(matches!(counter, Counter::BytesCopied), bytes);
         *self.byte_totals.entry(counter.as_str()).or_insert(0) += bytes;
     }
 
@@ -140,9 +170,18 @@ impl Metrics {
     }
 
     /// Render a compact per-phase table (for logs / bench output).
+    ///
+    /// The duration column is labeled `busy Σ` because it is a *sum of
+    /// busy seconds*, not an interval: `device_compute` merges the
+    /// per-lane compute times, so with `g` lanes overlapping it can
+    /// legitimately sum past the job wall clock (and `%wall` past
+    /// 100%). A footnote flags the table whenever that happens so the
+    /// Fig. 3 reproduction isn't misread as >100% utilization of one
+    /// thread.
     pub fn table(&self, wall: Duration) -> String {
         let mut out = String::new();
-        out.push_str(&format!("{:<16}{:>12}{:>8}{:>8}\n", "phase", "total", "count", "%wall"));
+        out.push_str(&format!("{:<16}{:>12}{:>8}{:>8}\n", "phase", "busy Σ", "count", "%wall"));
+        let mut lane_merged_past_wall = false;
         for ph in Phase::ALL {
             let t = self.total(ph);
             let c = self.count(ph);
@@ -154,6 +193,9 @@ impl Metrics {
             } else {
                 0.0
             };
+            if t > wall {
+                lane_merged_past_wall = true;
+            }
             out.push_str(&format!(
                 "{:<16}{:>12}{:>8}{:>7.1}%\n",
                 ph.as_str(),
@@ -161,6 +203,11 @@ impl Metrics {
                 c,
                 pct
             ));
+        }
+        if lane_merged_past_wall {
+            out.push_str(
+                "(busy Σ sums per-lane busy seconds; with overlapping lanes %wall exceeds 100%)\n",
+            );
         }
         for counter in Counter::ALL {
             let b = self.bytes(counter);
@@ -205,10 +252,25 @@ mod tests {
         let mut m = Metrics::new();
         m.add(Phase::Sloop, Duration::from_millis(10));
         let t = m.table(Duration::from_millis(20));
+        assert!(t.contains("busy Σ"), "duration column labeled as a busy-seconds sum: {t}");
         assert!(t.contains("sloop"));
         assert!(!t.contains("recv_wait"));
         assert!(t.contains("50.0%"));
         assert!(!t.contains("bytes_copied"), "zero byte counters stay hidden");
+        assert!(!t.contains("overlapping lanes"), "no footnote when nothing exceeds wall");
+    }
+
+    #[test]
+    fn table_flags_lane_merged_time_past_wall() {
+        // Two lanes overlapping: device_compute sums to 2× the wall
+        // clock. The table must say so instead of implying >100%
+        // utilization of one thread.
+        let mut m = Metrics::new();
+        m.add(Phase::DeviceCompute, Duration::from_millis(10));
+        m.add(Phase::DeviceCompute, Duration::from_millis(10));
+        let t = m.table(Duration::from_millis(10));
+        assert!(t.contains("200.0%"), "{t}");
+        assert!(t.contains("overlapping lanes"), "footnote explains the >100% row: {t}");
     }
 
     #[test]

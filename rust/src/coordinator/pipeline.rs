@@ -30,6 +30,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::storage::{dataset, BlockCache, Throttle, XrdFile};
+use crate::telemetry::StallVerdict;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -133,6 +134,10 @@ pub struct PipelineReport {
     pub device_secs: f64,
     /// Adaptive knob switches taken (0 without `adapt`).
     pub replans: usize,
+    /// Whole-run stall attribution: which resource bounded the stream
+    /// (disk, device, or the S-loop CPU tail) and by what share of wall
+    /// time — [`StallVerdict::from_metrics`] over the phase totals.
+    pub stall: StallVerdict,
 }
 
 /// Run the streaming solver over a dataset; results land in `r.xrd`.

@@ -46,6 +46,12 @@
 //!   search the knob space with the DES as the objective, emit a
 //!   profile `run`/`serve` apply — and re-plan the full knob depth live
 //!   at segment boundaries, transition costs included.
+//! * [`telemetry`] — the observability plane: a Prometheus-style metric
+//!   registry + `/metrics` endpoint, a bounded span ring exportable as
+//!   Chrome trace JSON (the Fig. 3 timeline from a live run), and
+//!   per-segment stall attribution ([`telemetry::StallVerdict`]). Off
+//!   by default — disabled telemetry costs one atomic load per record
+//!   point.
 //! * [`baselines`] — naive offload (Fig. 3), OOC-HP-GWAS (Listing 1.2),
 //!   and a ProbABEL-like per-SNP solver.
 
@@ -63,6 +69,7 @@ pub mod runtime;
 pub mod service;
 pub mod stats;
 pub mod storage;
+pub mod telemetry;
 pub mod tune;
 pub mod util;
 

@@ -53,10 +53,47 @@ fn main() -> ExitCode {
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e}");
+            cugwas::log_error!("cli", "{e}");
             ExitCode::FAILURE
         }
     }
+}
+
+/// Shared observability flags: honored by `run` and `serve`.
+fn apply_telemetry_flags(a: &Args) {
+    if a.switch("log-json") {
+        cugwas::util::log::set_json(true);
+    }
+    if !a.str("trace-out").is_empty() {
+        cugwas::telemetry::set_trace_enabled(true);
+    }
+}
+
+/// After the command ran: write the Chrome trace if `--trace-out` named
+/// a path, and a machine-readable report if `--report-json` did.
+fn export_trace(a: &Args) -> Result<()> {
+    let path = a.str("trace-out");
+    if path.is_empty() {
+        return Ok(());
+    }
+    let sink = cugwas::telemetry::global_trace();
+    sink.export_chrome(Path::new(path))?;
+    cugwas::log_info!(
+        "cli",
+        "wrote {} trace span(s) to {path} (Perfetto / chrome://tracing)",
+        sink.len()
+    );
+    Ok(())
+}
+
+fn write_report_json(a: &Args, json: &str) -> Result<()> {
+    let path = a.str("report-json");
+    if path.is_empty() {
+        return Ok(());
+    }
+    std::fs::write(path, json).map_err(|e| Error::io(format!("writing report {path}"), e))?;
+    cugwas::log_info!("cli", "wrote machine-readable report to {path}");
+    Ok(())
 }
 
 fn print_global_usage() {
@@ -263,9 +300,12 @@ const RUN_FLAGS: &[Flag] = &[
     Flag::opt("write-mbps", "0", "throttle writes (0 = off)"),
     Flag::opt("profile", "", "tuned profile TOML (explicit flags still win)"),
     Flag::opt("adapt-every", "16", "blocks per adaptive segment"),
+    Flag::opt("trace-out", "", "write a Chrome/Perfetto trace JSON here"),
+    Flag::opt("report-json", "", "write the job report as JSON here"),
     Flag::switch("adapt", "re-plan block size live from the stall profile (native)"),
     Flag::switch("resume", "skip column ranges journaled in r.progress (crash recovery)"),
     Flag::switch("verify", "check r.xrd against the in-core oracle (small studies)"),
+    Flag::switch("log-json", "emit log lines as JSON objects (one per line)"),
 ];
 
 fn parse_mode(s: &str) -> Result<OffloadMode> {
@@ -296,6 +336,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let a = Args::parse(argv, RUN_FLAGS)?;
+    apply_telemetry_flags(&a);
     let mut cfg = PipelineConfig {
         dataset: PathBuf::from(a.str("dataset")),
         block: a.usize("block")?,
@@ -353,6 +394,20 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         },
     );
     print!("{}", report.metrics.table(Duration::from_secs_f64(report.wall_secs)));
+    println!("stall: {}", report.stall.render());
+    export_trace(&a)?;
+    if !a.str("report-json").is_empty() {
+        let j = cugwas::service::JobReport::done(
+            "run",
+            cfg.dataset.clone(),
+            0,
+            report.wall_secs,
+            report.snps,
+            report.blocks,
+            report.metrics.clone(),
+        );
+        write_report_json(&a, &j.to_json())?;
+    }
     if a.switch("verify") {
         let diff = coordinator::verify_against_oracle(Path::new(a.str("dataset")), 1e-7)?;
         println!("verified against in-core oracle: max |Δ| = {diff:.2e}");
@@ -366,7 +421,11 @@ const SERVE_FLAGS: &[Flag] = &[
     Flag::req("config", "service TOML ([service] + [job.*] sections)"),
     Flag::opt("spool", "", "spool directory of job TOMLs (overrides config)"),
     Flag::opt("threads", "0", "compute threads across workers (0 = config, then all cores)"),
+    Flag::opt("metrics-addr", "", "serve Prometheus /metrics + /healthz here (overrides config)"),
+    Flag::opt("trace-out", "", "write a Chrome/Perfetto trace JSON here"),
+    Flag::opt("report-json", "", "write the service report as JSON here"),
     Flag::switch("watch", "keep polling the spool after the queue drains"),
+    Flag::switch("log-json", "emit log lines as JSON objects (one per line)"),
 ];
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
@@ -376,6 +435,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let a = Args::parse(argv, SERVE_FLAGS)?;
+    apply_telemetry_flags(&a);
     let mut cfg = cugwas::config::ServiceConfig::load(Path::new(a.str("config")))?;
     if !a.str("spool").is_empty() {
         cfg.spool = Some(PathBuf::from(a.str("spool")));
@@ -387,8 +447,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if threads > 0 {
         cfg.threads = threads;
     }
+    if !a.str("metrics-addr").is_empty() {
+        cfg.metrics_addr = Some(a.str("metrics-addr").to_string());
+    }
+    // The endpoint outlives serve(): scrapes during AND after the run
+    // (final gauge/counter state) both work; Drop stops the listener.
+    let _metrics_server = match &cfg.metrics_addr {
+        Some(addr) => {
+            cugwas::telemetry::set_metrics_enabled(true);
+            let srv = cugwas::telemetry::MetricsServer::start(addr)?;
+            cugwas::log_info!("cli", "serving /metrics and /healthz on http://{}/", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let report = cugwas::service::serve(&cfg)?;
     print!("{}", report.render());
+    export_trace(&a)?;
+    write_report_json(&a, &report.to_json())?;
     if report.failed() > 0 {
         return Err(Error::Pipeline(format!("{} job(s) failed", report.failed())));
     }

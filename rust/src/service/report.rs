@@ -4,7 +4,9 @@
 use crate::coordinator::metrics::Counter;
 use crate::coordinator::{Metrics, Phase};
 use crate::storage::CacheStats;
-use crate::util::{human_bytes, human_duration};
+use crate::telemetry::StallVerdict;
+use crate::util::{human_bytes, human_duration, json};
+use std::fmt::Write;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -28,6 +30,9 @@ pub struct JobReport {
     pub bytes_borrowed: u64,
     /// Full phase accounting (absent for jobs that never ran).
     pub metrics: Option<Metrics>,
+    /// Whole-run stall attribution (absent for jobs that never ran):
+    /// which resource bounded the stream and by what share of wall time.
+    pub stall: Option<StallVerdict>,
     /// `Some` means the job failed with this error.
     pub error: Option<String>,
     /// The job rode a warm engine left by the previous job on the same
@@ -51,6 +56,7 @@ impl JobReport {
             bytes_copied: 0,
             bytes_borrowed: 0,
             metrics: None,
+            stall: None,
             error: Some(error),
             reused_engine: false,
         }
@@ -66,6 +72,7 @@ impl JobReport {
         blocks: usize,
         metrics: Metrics,
     ) -> Self {
+        let stall = StallVerdict::from_metrics(&metrics, wall_secs);
         JobReport {
             name: name.into(),
             dataset,
@@ -79,6 +86,7 @@ impl JobReport {
             bytes_copied: metrics.bytes(Counter::BytesCopied),
             bytes_borrowed: metrics.bytes(Counter::BytesBorrowed),
             metrics: Some(metrics),
+            stall: Some(stall),
             error: None,
             reused_engine: false,
         }
@@ -92,6 +100,77 @@ impl JobReport {
 
     pub fn ok(&self) -> bool {
         self.error.is_none()
+    }
+
+    /// One JSON object describing this job — the machine-readable face
+    /// of the report (`--report-json`). Hand-rolled against
+    /// [`crate::util::json`]; phase totals render only for phases that
+    /// fired.
+    pub fn to_json(&self) -> String {
+        let mut o = String::with_capacity(512);
+        let _ = write!(
+            o,
+            "{{\"name\":\"{}\",\"dataset\":\"{}\",\"priority\":{},\"ok\":{},",
+            json::escape(&self.name),
+            json::escape(&self.dataset.to_string_lossy()),
+            self.priority,
+            self.ok(),
+        );
+        match &self.error {
+            Some(e) => {
+                let _ = write!(o, "\"error\":\"{}\",", json::escape(e));
+            }
+            None => o.push_str("\"error\":null,"),
+        }
+        let _ = write!(
+            o,
+            "\"wall_secs\":{},\"snps\":{},\"blocks\":{},\"snps_per_sec\":{},\
+             \"cache_hits\":{},\"cache_misses\":{},\"bytes_copied\":{},\"bytes_borrowed\":{},\
+             \"reused_engine\":{},",
+            json::num(self.wall_secs),
+            self.snps,
+            self.blocks,
+            json::num(self.snps_per_sec),
+            self.cache_hits,
+            self.cache_misses,
+            self.bytes_copied,
+            self.bytes_borrowed,
+            self.reused_engine,
+        );
+        match &self.stall {
+            Some(v) => {
+                let _ = write!(
+                    o,
+                    "\"stall\":{{\"kind\":\"{}\",\"share\":{}}},",
+                    v.kind.as_str(),
+                    json::num(v.share)
+                );
+            }
+            None => o.push_str("\"stall\":null,"),
+        }
+        o.push_str("\"phases\":{");
+        if let Some(m) = &self.metrics {
+            let mut first = true;
+            for ph in Phase::ALL {
+                let c = m.count(ph);
+                if c == 0 {
+                    continue;
+                }
+                if !first {
+                    o.push(',');
+                }
+                first = false;
+                let _ = write!(
+                    o,
+                    "\"{}\":{{\"secs\":{},\"count\":{}}}",
+                    ph.as_str(),
+                    json::num(m.total(ph).as_secs_f64()),
+                    c
+                );
+            }
+        }
+        o.push_str("}}");
+        o
     }
 }
 
@@ -152,6 +231,9 @@ impl ServiceReport {
             if let Some(m) = &j.metrics {
                 out.push_str(&format!("\nphases for job '{}':\n", j.name));
                 out.push_str(&m.table(Duration::from_secs_f64(j.wall_secs)));
+                if let Some(v) = &j.stall {
+                    out.push_str(&format!("stall: {}\n", v.render()));
+                }
             }
         }
         let reused = self.jobs.iter().filter(|j| j.reused_engine).count();
@@ -181,6 +263,45 @@ impl ServiceReport {
             self.cache.evictions,
         ));
         out
+    }
+
+    /// The whole service run as one JSON object (`--report-json`):
+    /// aggregates, final cache counters, and one object per job in
+    /// completion order.
+    pub fn to_json(&self) -> String {
+        let mut o = String::with_capacity(1024 + 512 * self.jobs.len());
+        let _ = write!(
+            o,
+            "{{\"wall_secs\":{},\"workers\":{},\"mem_budget_bytes\":{},\"total_snps\":{},\
+             \"failed\":{},\"agg_snps_per_sec\":{},",
+            json::num(self.wall_secs),
+            self.workers,
+            self.mem_budget_bytes,
+            self.total_snps(),
+            self.failed(),
+            json::num(self.agg_snps_per_sec()),
+        );
+        let _ = write!(
+            o,
+            "\"cache\":{{\"hits\":{},\"misses\":{},\"insertions\":{},\"evictions\":{},\
+             \"bytes\":{},\"entries\":{},\"capacity_bytes\":{}}},",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.insertions,
+            self.cache.evictions,
+            self.cache.bytes,
+            self.cache.entries,
+            self.cache.capacity_bytes,
+        );
+        o.push_str("\"jobs\":[");
+        for (i, j) in self.jobs.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            o.push_str(&j.to_json());
+        }
+        o.push_str("]}");
+        o
     }
 }
 
@@ -236,5 +357,46 @@ mod tests {
         assert_eq!(j.bytes_borrowed, 4096);
         assert_eq!(j.bytes_copied, 0);
         assert!(j.ok());
+        assert!(j.stall.is_some());
+    }
+
+    #[test]
+    fn done_report_attributes_stall_from_metrics() {
+        let mut m = Metrics::new();
+        m.add(Phase::ReadWait, Duration::from_millis(700));
+        let j = JobReport::done("x", PathBuf::from("/d"), 0, 1.0, 100, 4, m);
+        let v = j.stall.unwrap();
+        assert_eq!(v.kind, crate::telemetry::StallKind::ReadBound);
+        assert!((v.share - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_report_is_well_formed_and_escaped() {
+        let mut m = Metrics::new();
+        m.add(Phase::Sloop, Duration::from_millis(250));
+        m.add(Phase::ReadWait, Duration::from_millis(500));
+        let rep = ServiceReport {
+            jobs: vec![
+                JobReport::done("alpha", PathBuf::from("/d1"), 1, 1.0, 100, 4, m),
+                JobReport::failed("bad\"name", PathBuf::from("/d2"), 0, "line1\nline2".into()),
+            ],
+            wall_secs: 1.5,
+            workers: 2,
+            mem_budget_bytes: 1 << 20,
+            cache: CacheStats { hits: 7, ..CacheStats::default() },
+        };
+        let s = rep.to_json();
+        // Structural spot checks (no JSON parser in a std-only crate):
+        // balanced braces/brackets and the fields the consumers grep for.
+        assert_eq!(s.matches('{').count(), s.matches('}').count(), "{s}");
+        assert_eq!(s.matches('[').count(), s.matches(']').count(), "{s}");
+        assert!(s.contains("\"total_snps\":100"), "{s}");
+        assert!(s.contains("\"failed\":1"), "{s}");
+        assert!(s.contains("\"hits\":7"), "{s}");
+        assert!(s.contains("\"stall\":{\"kind\":\"read_bound\""), "{s}");
+        assert!(s.contains("\"read_wait\":{\"secs\":0.5,\"count\":1}"), "{s}");
+        assert!(s.contains("bad\\\"name"), "quotes escaped: {s}");
+        assert!(s.contains("line1\\nline2"), "newlines escaped: {s}");
+        assert!(s.contains("\"stall\":null"), "failed job carries no verdict: {s}");
     }
 }

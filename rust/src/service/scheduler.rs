@@ -175,6 +175,8 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     let mut mem_in_use = 0u64;
     let mut busy_datasets: HashSet<PathBuf> = HashSet::new();
     let mut inflight: HashMap<usize, Job> = HashMap::new();
+    // Dispatch instants, for the per-job scheduler-track trace spans.
+    let mut dispatched: HashMap<usize, Instant> = HashMap::new();
     // Per-lane residency of the warm engine: the dataset it is warm for
     // and the host bytes it keeps alive. Resident engines stay charged
     // against the admission budget (the rings and preprocess do not
@@ -225,6 +227,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             busy_datasets.insert(job.dataset_key.clone());
             queue.set_state(job.id, JobState::Streaming);
             inflight.insert(wi, job.clone());
+            dispatched.insert(wi, Instant::now());
             let lane = &mut lanes[wi];
             lane.busy = true;
             lane.tx
@@ -232,6 +235,15 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 .expect("lane sender alive")
                 .send(LaneMsg::Run(job))
                 .map_err(|_| Error::Pipeline("service worker lane died".into()))?;
+        }
+
+        // Publish the admission state for this dispatch turn: a scrape
+        // renders pure registry state, so the gauges must be pushed
+        // wherever they change.
+        if crate::telemetry::metrics_enabled() {
+            let reg = crate::telemetry::registry::global();
+            reg.set_queue(queue.queued(), inflight.len(), mem_in_use, cfg.mem_budget_bytes);
+            reg.set_cache(&cache.stats());
         }
 
         if inflight.is_empty() && queue.is_drained() {
@@ -262,6 +274,19 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
         match res_rx.recv_timeout(SPOOL_POLL) {
             Ok((wi, report)) => {
                 let job = inflight.remove(&wi).expect("completion from a dispatched lane");
+                if let Some(t0) = dispatched.remove(&wi) {
+                    crate::telemetry::span(
+                        "job",
+                        "sched",
+                        crate::telemetry::trace::TID_SCHED,
+                        t0,
+                        t0.elapsed(),
+                        &[("id", job.id as u64), ("ok", u64::from(report.ok()))],
+                    );
+                }
+                if !report.ok() {
+                    note_job_failed();
+                }
                 mem_in_use -= job.est_bytes;
                 // A successful run leaves the engine warm on this lane;
                 // its footprint stays charged until reuse or eviction.
@@ -406,16 +431,29 @@ fn submit_spec(
             let key = dataset::canonical_key(&spec.dataset);
             queue.submit(spec, est, key);
         }
-        Err(e) => reports.push(JobReport::failed(
-            spec.name.clone(),
-            spec.dataset.clone(),
-            spec.priority,
-            format!("cannot estimate job footprint: {e}"),
-        )),
+        Err(e) => {
+            note_job_failed();
+            reports.push(JobReport::failed(
+                spec.name.clone(),
+                spec.dataset.clone(),
+                spec.priority,
+                format!("cannot estimate job footprint: {e}"),
+            ));
+        }
+    }
+}
+
+/// Count one failed job in the telemetry registry. Successes are
+/// counted by the engine when the run completes; failures never reach
+/// that point, so every site that mints a failure report notes it here.
+fn note_job_failed() {
+    if crate::telemetry::metrics_enabled() {
+        crate::telemetry::registry::global().jobs_failed_total.add(1);
     }
 }
 
 fn oversized_report(job: &Job, budget: u64) -> JobReport {
+    note_job_failed();
     let spec = &job.spec;
     JobReport::failed(
         spec.name.clone(),
@@ -483,6 +521,7 @@ fn scan_spool(
                     (Some(prev), Some(now)) if *prev == now => {
                         state.seen.insert(path.clone());
                         state.pending_bad.remove(&path);
+                        note_job_failed();
                         reports.push(JobReport::failed(
                             name,
                             path.clone(),
@@ -498,6 +537,7 @@ fn scan_spool(
                     (_, None) => {
                         state.seen.insert(path.clone());
                         state.pending_bad.remove(&path);
+                        note_job_failed();
                         reports.push(JobReport::failed(
                             name,
                             path.clone(),
@@ -594,6 +634,7 @@ mod tests {
             // Off by default in tests: explicit blocks stay explicit and
             // no probe noise; the first-contact test opts back in.
             auto_tune: false,
+            metrics_addr: None,
             jobs,
         }
     }

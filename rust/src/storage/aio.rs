@@ -169,36 +169,55 @@ impl AioEngine {
         let worker = std::thread::Builder::new()
             .name("cugwas-aio".into())
             .spawn(move || {
+                // Every op is timed anyway (the stats need it); the same
+                // measurement doubles as a trace span on the aio track.
+                let traced = |name: &'static str, key: &'static str, id: u64, t0: Instant| {
+                    let took = t0.elapsed();
+                    crate::telemetry::span(
+                        name,
+                        "io",
+                        crate::telemetry::trace::TID_AIO,
+                        t0,
+                        took,
+                        &[(key, id)],
+                    );
+                    took
+                };
                 while let Ok(req) = rx.recv() {
                     match req {
                         Req::Read { block, mut buf, done } => {
                             let t0 = Instant::now();
                             let res = file.read_block_into(block, &mut buf);
-                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
+                            let took = traced("read", "block", block, t0);
+                            cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
                         }
                         Req::Write { block, buf, done } => {
                             let t0 = Instant::now();
                             let res = file.write_block(block, &buf);
-                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
+                            let took = traced("write", "block", block, t0);
+                            cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
                         }
                         Req::ReadCols { col0, ncols, mut buf, done } => {
                             let t0 = Instant::now();
                             let res = file.read_cols_into(col0, ncols, &mut buf);
-                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
+                            let took = traced("read", "col0", col0, t0);
+                            cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
                         }
                         Req::ReadColsSlab { col0, ncols, mut buf, done } => {
                             let t0 = Instant::now();
                             let res = file.read_cols_into(col0, ncols, buf.as_mut_slice());
-                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
+                            let took = traced("read", "col0", col0, t0);
+                            cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
                         }
                         Req::WriteCols { col0, ncols, buf, done } => {
                             let t0 = Instant::now();
                             let res = file.write_cols(col0, ncols, &buf);
-                            cells.record(buf.len() as u64 * elem_bytes, t0.elapsed());
+                            let took = traced("write", "col0", col0, t0);
+                            cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
                         }
                         Req::Sync { done } => {

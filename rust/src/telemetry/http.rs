@@ -1,0 +1,116 @@
+//! A minimal HTTP responder for `/metrics` and `/healthz` — just enough
+//! protocol for a Prometheus scraper or a load-balancer probe, std-only.
+//!
+//! One background thread accepts connections on a non-blocking listener
+//! and answers each request from pure registry state (a scrape never
+//! calls into the live pipeline). `GET /metrics` returns the text
+//! exposition, `GET /healthz` returns `ok`; everything else is 404.
+//! Dropping the server stops the thread (bounded by the accept-poll
+//! interval), so `serve` shuts it down cleanly on exit.
+
+use crate::error::{Error, Result};
+use crate::telemetry::registry;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often the accept loop polls the stop flag.
+const POLL: Duration = Duration::from_millis(20);
+
+/// A running metrics endpoint. Construct with [`MetricsServer::start`];
+/// drop to stop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`; port `0` picks a free one)
+    /// and start answering in a background thread.
+    pub fn start(addr: &str) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::io(format!("binding metrics endpoint {addr}"), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io("metrics listener set_nonblocking", e))?;
+        let local = listener.local_addr().map_err(|e| Error::io("metrics local_addr", e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("cugwas-metrics-http".into())
+            .spawn(move || accept_loop(listener, stop2))
+            .map_err(|e| Error::io("spawning metrics thread", e))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((conn, _)) => {
+                // Serve inline: scrapes are rare (seconds apart) and the
+                // response is a few KB — a worker pool would be ceremony.
+                let _ = handle_conn(conn);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+}
+
+fn handle_conn(mut conn: TcpStream) -> std::io::Result<()> {
+    // The accepted socket does not inherit the listener's non-blocking
+    // mode on every platform — pin both, with a timeout so a stuck
+    // client can't wedge the accept loop.
+    conn.set_nonblocking(false)?;
+    conn.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 2048];
+    let mut used = 0;
+    loop {
+        match conn.read(&mut buf[used..]) {
+            Ok(0) => break,
+            Ok(n) => {
+                used += n;
+                if buf[..used].windows(4).any(|w| w == b"\r\n\r\n") || used == buf.len() {
+                    break;
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => break,
+            Err(e) => return Err(e),
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..used]);
+    let path = head.split_whitespace().nth(1).unwrap_or("/");
+    let (status, ctype, body) = match path {
+        p if p == "/metrics" || p.starts_with("/metrics?") => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            registry::global().render(),
+        ),
+        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(resp.as_bytes())
+}

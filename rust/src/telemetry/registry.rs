@@ -1,0 +1,526 @@
+//! The metrics registry: a fixed catalog of atomic counters, gauges and
+//! log-bucketed latency histograms with Prometheus text exposition.
+//!
+//! The catalog is a plain struct, not a dynamic map: every series the
+//! pipeline exports is known at compile time, so recording is a couple
+//! of relaxed atomic ops (no locks, no allocation, no hashing) and the
+//! exposition renders pure registry state — a scrape never calls back
+//! into the live pipeline. Values are *pushed* by the code that already
+//! owns the accounting: [`Metrics`](crate::coordinator::Metrics) feeds
+//! the phase histograms, the scheduler pushes queue/budget/cache state
+//! at every dispatch turn, and the engine pushes slab circulation and
+//! stall verdicts at segment boundaries.
+
+use crate::coordinator::metrics::Phase;
+use crate::storage::{CacheStats, SlabStats};
+use crate::telemetry::stall::{StallKind, StallVerdict};
+use std::fmt::Write;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in seconds: powers of 4 from 1 µs to
+/// ~67 s. Log-spaced so one layout covers a 4 µs cache hit and a
+/// minute-long job wall time; anything beyond the last bound lands in
+/// `+Inf` only.
+pub const BUCKET_BOUNDS: [f64; 14] = [
+    0.000001, 0.000004, 0.000016, 0.000064, 0.000256, 0.001024, 0.004096, 0.016384, 0.065536,
+    0.262144, 1.048576, 4.194304, 16.777216, 67.108864,
+];
+
+/// Most device lanes the per-lane gauges track (the knob space tops out
+/// far below this; extra lanes are simply not exported).
+pub const MAX_LANES: usize = 16;
+
+/// A monotone counter (integer).
+#[derive(Default)]
+pub struct CounterCell(AtomicU64);
+
+impl CounterCell {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite with an absolute value — used to mirror accounting that
+    /// is already cumulative at its source (e.g. [`CacheStats::hits`]).
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge (f64, stored as bits in an `AtomicU64`).
+#[derive(Default)]
+pub struct GaugeCell(AtomicU64);
+
+impl GaugeCell {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-bucketed latency histogram over [`BUCKET_BOUNDS`].
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKET_BOUNDS.len()],
+    sum_nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_nanos: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
+        let secs = d.as_secs_f64();
+        for (i, b) in BUCKET_BOUNDS.iter().enumerate() {
+            if secs <= *b {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        self.sum_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Cumulative bucket counts in bound order (the `+Inf` bucket is
+    /// [`Histogram::count`]). Monotone by construction.
+    pub fn cumulative(&self) -> [u64; BUCKET_BOUNDS.len()] {
+        let mut acc = 0u64;
+        std::array::from_fn(|i| {
+            acc += self.buckets[i].load(Ordering::Relaxed);
+            acc
+        })
+    }
+
+    /// Render the Prometheus `_bucket`/`_sum`/`_count` lines. `labels`
+    /// is an extra label set like `phase="read_wait"` (or empty).
+    fn render_into(&self, out: &mut String, name: &str, labels: &str) {
+        let sep = if labels.is_empty() { "" } else { "," };
+        for (i, cum) in self.cumulative().iter().enumerate() {
+            let _ =
+                writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{}\"}} {cum}", BUCKET_BOUNDS[i]);
+        }
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", self.count());
+        let braces = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let _ = writeln!(out, "{name}_sum{braces} {}", self.sum_secs());
+        let _ = writeln!(out, "{name}_count{braces} {}", self.count());
+    }
+}
+
+/// The full metric catalog (see module docs for who pushes what).
+pub struct Registry {
+    phase: Vec<Histogram>,
+    pub job_wall_seconds: Histogram,
+    pub bytes_copied_total: CounterCell,
+    pub bytes_borrowed_total: CounterCell,
+    pub snps_total: CounterCell,
+    pub blocks_total: CounterCell,
+    pub replans_total: CounterCell,
+    pub jobs_done_total: CounterCell,
+    pub jobs_failed_total: CounterCell,
+    pub snps_per_sec: GaugeCell,
+    pub queue_depth: GaugeCell,
+    pub jobs_inflight: GaugeCell,
+    pub mem_in_use_bytes: GaugeCell,
+    pub mem_budget_bytes: GaugeCell,
+    pub cache_hits_total: CounterCell,
+    pub cache_misses_total: CounterCell,
+    pub cache_insertions_total: CounterCell,
+    pub cache_evictions_total: CounterCell,
+    pub cache_resident_bytes: GaugeCell,
+    pub cache_entries: GaugeCell,
+    pub cache_capacity_bytes: GaugeCell,
+    pub slab_minted_total: CounterCell,
+    pub slab_recycled_total: CounterCell,
+    pub slab_dropped_total: CounterCell,
+    pub slab_free: GaugeCell,
+    pub slab_target: GaugeCell,
+    stall_total: [CounterCell; StallKind::ALL.len()],
+    pub stall_share: GaugeCell,
+    lane_outstanding: [GaugeCell; MAX_LANES],
+    lanes_seen: AtomicUsize,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            phase: Phase::ALL.iter().map(|_| Histogram::default()).collect(),
+            job_wall_seconds: Histogram::default(),
+            bytes_copied_total: CounterCell::default(),
+            bytes_borrowed_total: CounterCell::default(),
+            snps_total: CounterCell::default(),
+            blocks_total: CounterCell::default(),
+            replans_total: CounterCell::default(),
+            jobs_done_total: CounterCell::default(),
+            jobs_failed_total: CounterCell::default(),
+            snps_per_sec: GaugeCell::default(),
+            queue_depth: GaugeCell::default(),
+            jobs_inflight: GaugeCell::default(),
+            mem_in_use_bytes: GaugeCell::default(),
+            mem_budget_bytes: GaugeCell::default(),
+            cache_hits_total: CounterCell::default(),
+            cache_misses_total: CounterCell::default(),
+            cache_insertions_total: CounterCell::default(),
+            cache_evictions_total: CounterCell::default(),
+            cache_resident_bytes: GaugeCell::default(),
+            cache_entries: GaugeCell::default(),
+            cache_capacity_bytes: GaugeCell::default(),
+            slab_minted_total: CounterCell::default(),
+            slab_recycled_total: CounterCell::default(),
+            slab_dropped_total: CounterCell::default(),
+            slab_free: GaugeCell::default(),
+            slab_target: GaugeCell::default(),
+            stall_total: std::array::from_fn(|_| CounterCell::default()),
+            stall_share: GaugeCell::default(),
+            lane_outstanding: std::array::from_fn(|_| GaugeCell::default()),
+            lanes_seen: AtomicUsize::new(0),
+        }
+    }
+
+    /// Feed one duration into the histogram of the phase at `idx` (the
+    /// position in [`Phase::ALL`] — see [`Phase::index`]).
+    pub fn observe_phase(&self, idx: usize, d: Duration) {
+        if let Some(h) = self.phase.get(idx) {
+            h.observe(d);
+        }
+    }
+
+    /// The histogram backing phase `idx` (test/inspection access).
+    pub fn phase_hist(&self, idx: usize) -> &Histogram {
+        &self.phase[idx]
+    }
+
+    pub fn set_lane_outstanding(&self, lane: usize, depth: usize) {
+        if lane < MAX_LANES {
+            self.lane_outstanding[lane].set(depth as f64);
+            self.lanes_seen.fetch_max(lane + 1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one per-segment stall verdict and remember its share.
+    pub fn record_stall(&self, v: StallVerdict) {
+        self.stall_total[v.kind.index()].add(1);
+        self.stall_share.set(v.share);
+    }
+
+    pub fn stall_count(&self, kind: StallKind) -> u64 {
+        self.stall_total[kind.index()].get()
+    }
+
+    /// Mirror the shared block cache's cumulative accounting.
+    pub fn set_cache(&self, s: &CacheStats) {
+        self.cache_hits_total.set(s.hits);
+        self.cache_misses_total.set(s.misses);
+        self.cache_insertions_total.set(s.insertions);
+        self.cache_evictions_total.set(s.evictions);
+        self.cache_resident_bytes.set(s.bytes as f64);
+        self.cache_entries.set(s.entries as f64);
+        self.cache_capacity_bytes.set(s.capacity_bytes as f64);
+    }
+
+    /// Mirror a slab pool's circulation counters.
+    pub fn set_slabs(&self, s: &SlabStats, target: usize) {
+        self.slab_minted_total.set(s.minted);
+        self.slab_recycled_total.set(s.recycled);
+        self.slab_dropped_total.set(s.dropped);
+        self.slab_free.set(s.free as f64);
+        self.slab_target.set(target as f64);
+    }
+
+    /// Push the scheduler's admission state for this dispatch turn.
+    pub fn set_queue(&self, depth: usize, inflight: usize, mem_in_use: u64, budget: u64) {
+        self.queue_depth.set(depth as f64);
+        self.jobs_inflight.set(inflight as f64);
+        self.mem_in_use_bytes.set(mem_in_use as f64);
+        self.mem_budget_bytes.set(budget as f64);
+    }
+
+    /// Record one completed job.
+    pub fn job_done(&self, wall_secs: f64, snps: u64, blocks: u64, snps_per_sec: f64) {
+        self.job_wall_seconds.observe(Duration::from_secs_f64(wall_secs.max(0.0)));
+        self.snps_total.add(snps);
+        self.blocks_total.add(blocks);
+        self.jobs_done_total.add(1);
+        self.snps_per_sec.set(snps_per_sec);
+    }
+
+    /// Render the whole catalog as Prometheus text exposition (v0.0.4).
+    pub fn render(&self) -> String {
+        let mut o = String::with_capacity(16 * 1024);
+        let head = |o: &mut String, name: &str, help: &str, ty: &str| {
+            let _ = writeln!(o, "# HELP {name} {help}");
+            let _ = writeln!(o, "# TYPE {name} {ty}");
+        };
+        let counter = |o: &mut String, name: &str, help: &str, v: u64| {
+            head(o, name, help, "counter");
+            let _ = writeln!(o, "{name} {v}");
+        };
+        let gauge = |o: &mut String, name: &str, help: &str, v: f64| {
+            head(o, name, help, "gauge");
+            let _ = writeln!(o, "{name} {v}");
+        };
+
+        head(
+            &mut o,
+            "cugwas_phase_seconds",
+            "Per-event time in each pipeline phase (the live Fig. 3 profile).",
+            "histogram",
+        );
+        for (i, ph) in Phase::ALL.iter().enumerate() {
+            let labels = format!("phase=\"{}\"", ph.as_str());
+            self.phase[i].render_into(&mut o, "cugwas_phase_seconds", &labels);
+        }
+        head(
+            &mut o,
+            "cugwas_job_wall_seconds",
+            "End-to-end wall time of completed jobs.",
+            "histogram",
+        );
+        self.job_wall_seconds.render_into(&mut o, "cugwas_job_wall_seconds", "");
+
+        counter(
+            &mut o,
+            "cugwas_bytes_copied_total",
+            "Block bytes memcpy'd on the host data plane.",
+            self.bytes_copied_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_bytes_borrowed_total",
+            "Block bytes handed across a stage boundary by reference.",
+            self.bytes_borrowed_total.get(),
+        );
+        counter(&mut o, "cugwas_snps_total", "SNP columns solved.", self.snps_total.get());
+        counter(&mut o, "cugwas_blocks_total", "Column windows streamed.", self.blocks_total.get());
+        counter(
+            &mut o,
+            "cugwas_replans_total",
+            "Adaptive knob switches taken at segment boundaries.",
+            self.replans_total.get(),
+        );
+        counter(&mut o, "cugwas_jobs_done_total", "Jobs completed.", self.jobs_done_total.get());
+        counter(&mut o, "cugwas_jobs_failed_total", "Jobs failed.", self.jobs_failed_total.get());
+        gauge(
+            &mut o,
+            "cugwas_snps_per_sec",
+            "Streaming throughput of the most recently completed job.",
+            self.snps_per_sec.get(),
+        );
+
+        gauge(&mut o, "cugwas_queue_depth", "Jobs waiting for admission.", self.queue_depth.get());
+        gauge(
+            &mut o,
+            "cugwas_jobs_inflight",
+            "Jobs currently streaming.",
+            self.jobs_inflight.get(),
+        );
+        gauge(
+            &mut o,
+            "cugwas_mem_in_use_bytes",
+            "Host bytes admitted jobs hold against the budget.",
+            self.mem_in_use_bytes.get(),
+        );
+        gauge(
+            &mut o,
+            "cugwas_mem_budget_bytes",
+            "Host memory budget of the admission controller.",
+            self.mem_budget_bytes.get(),
+        );
+
+        counter(
+            &mut o,
+            "cugwas_cache_hits_total",
+            "Shared block cache hits.",
+            self.cache_hits_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_cache_misses_total",
+            "Shared block cache misses.",
+            self.cache_misses_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_cache_insertions_total",
+            "Blocks inserted into the shared cache.",
+            self.cache_insertions_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_cache_evictions_total",
+            "Blocks evicted from the shared cache.",
+            self.cache_evictions_total.get(),
+        );
+        gauge(
+            &mut o,
+            "cugwas_cache_resident_bytes",
+            "Bytes resident in the shared block cache.",
+            self.cache_resident_bytes.get(),
+        );
+        gauge(
+            &mut o,
+            "cugwas_cache_entries",
+            "Blocks resident in the shared cache.",
+            self.cache_entries.get(),
+        );
+        gauge(
+            &mut o,
+            "cugwas_cache_capacity_bytes",
+            "Byte capacity of the shared cache.",
+            self.cache_capacity_bytes.get(),
+        );
+
+        counter(
+            &mut o,
+            "cugwas_slab_minted_total",
+            "Aligned slabs allocated fresh by the pool.",
+            self.slab_minted_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_slab_recycled_total",
+            "Slab takes served from the free list.",
+            self.slab_recycled_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_slab_dropped_total",
+            "Slabs released past the pool's retain target.",
+            self.slab_dropped_total.get(),
+        );
+        gauge(&mut o, "cugwas_slab_free", "Slabs idle in the pool.", self.slab_free.get());
+        gauge(
+            &mut o,
+            "cugwas_slab_target",
+            "The pool's retain target (host_buffers).",
+            self.slab_target.get(),
+        );
+
+        head(
+            &mut o,
+            "cugwas_stall_segments_total",
+            "Segments by stall verdict (per-segment stall attribution).",
+            "counter",
+        );
+        for k in StallKind::ALL {
+            let _ = writeln!(
+                o,
+                "cugwas_stall_segments_total{{verdict=\"{}\"}} {}",
+                k.as_str(),
+                self.stall_total[k.index()].get()
+            );
+        }
+        gauge(
+            &mut o,
+            "cugwas_stall_share",
+            "Dominating phase's share of wall time in the latest verdict.",
+            self.stall_share.get(),
+        );
+
+        let lanes = self.lanes_seen.load(Ordering::Relaxed);
+        if lanes > 0 {
+            head(
+                &mut o,
+                "cugwas_lane_outstanding",
+                "Chunks submitted to each device lane and not yet retired.",
+                "gauge",
+            );
+            for lane in 0..lanes {
+                let _ = writeln!(
+                    o,
+                    "cugwas_lane_outstanding{{lane=\"{lane}\"}} {}",
+                    self.lane_outstanding[lane].get()
+                );
+            }
+        }
+        o
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry (materialized on first touch — which the
+/// disabled-telemetry fast path never performs).
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotone() {
+        let h = Histogram::default();
+        h.observe(Duration::from_micros(2)); // bucket 1 (4 µs)
+        h.observe(Duration::from_millis(2)); // 0.004096
+        h.observe(Duration::from_secs(100)); // beyond last bound: +Inf only
+        let cum = h.cumulative();
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "{cum:?}");
+        assert_eq!(cum[BUCKET_BOUNDS.len() - 1], 2, "overflow lands only in +Inf");
+        assert_eq!(h.count(), 3);
+        assert!((h.sum_secs() - 100.002002).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gauge_roundtrips_f64() {
+        let g = GaugeCell::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(1234.5);
+        assert_eq!(g.get(), 1234.5);
+    }
+
+    #[test]
+    fn render_covers_the_catalog() {
+        let r = Registry::new();
+        r.observe_phase(0, Duration::from_millis(1));
+        r.job_done(0.5, 1000, 4, 2000.0);
+        r.set_lane_outstanding(1, 2);
+        r.record_stall(StallVerdict { kind: StallKind::ReadBound, share: 0.7 });
+        let text = r.render();
+        for needle in [
+            "# TYPE cugwas_phase_seconds histogram",
+            "cugwas_phase_seconds_bucket{phase=\"read_wait\",le=\"+Inf\"} 1",
+            "cugwas_job_wall_seconds_count 1",
+            "# TYPE cugwas_snps_per_sec gauge",
+            "cugwas_snps_per_sec 2000",
+            "cugwas_cache_resident_bytes",
+            "cugwas_slab_recycled_total",
+            "cugwas_stall_segments_total{verdict=\"read_bound\"} 1",
+            "cugwas_lane_outstanding{lane=\"1\"} 2",
+            "cugwas_bytes_copied_total 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Lane 2 was never seen; lanes 0..=1 render.
+        assert!(!text.contains("lane=\"2\""));
+    }
+}

@@ -1,0 +1,134 @@
+//! Per-segment stall attribution: the adapt path's observed stall
+//! profile promoted to a first-class verdict.
+//!
+//! The paper's Fig. 4 (and the companion tuning work) reason about the
+//! pipeline in exactly these terms — which resource the coordinator is
+//! *waiting on*: the disk (`ReadWait` dominates), the device
+//! (`RecvWait`: results aren't back when the coordinator needs them),
+//! or its own CPU tail (`Sloop`). A verdict is derived from the same
+//! phase shares the re-planner reads, so every autotuner decision is
+//! auditable: the replan log line, the job report and the Prometheus
+//! exposition all carry the same attribution.
+
+use crate::coordinator::metrics::{Metrics, Phase};
+
+/// Which resource bounded a segment (or a whole run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallKind {
+    /// Disk-bound: the coordinator mostly waited on `aio_read`.
+    ReadBound,
+    /// Device-bound: mostly waited on lane results (`RecvWait`).
+    ComputeBound,
+    /// CPU-tail-bound: the S-loop dominated the coordinator's time.
+    SloopBound,
+    /// No single phase dominated — the pipeline is overlapping well.
+    Balanced,
+}
+
+impl StallKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StallKind::ReadBound => "read_bound",
+            StallKind::ComputeBound => "compute_bound",
+            StallKind::SloopBound => "sloop_bound",
+            StallKind::Balanced => "balanced",
+        }
+    }
+
+    pub const ALL: [StallKind; 4] =
+        [StallKind::ReadBound, StallKind::ComputeBound, StallKind::SloopBound, StallKind::Balanced];
+
+    /// Position in [`StallKind::ALL`] (registry counter index).
+    pub fn index(self) -> usize {
+        match self {
+            StallKind::ReadBound => 0,
+            StallKind::ComputeBound => 1,
+            StallKind::SloopBound => 2,
+            StallKind::Balanced => 3,
+        }
+    }
+}
+
+/// A verdict plus the dominating phase's share of wall time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StallVerdict {
+    pub kind: StallKind,
+    /// The dominating phase's fraction of wall time, in `[0, 1]` (for
+    /// `Balanced`: the largest share that still fell below the
+    /// domination threshold).
+    pub share: f64,
+}
+
+/// A phase must claim at least this fraction of wall time to bound the
+/// segment; below it the verdict is `Balanced`.
+const DOMINANT_SHARE: f64 = 0.15;
+
+impl StallVerdict {
+    /// Attribute from the three stall shares (fractions of wall time
+    /// spent in `ReadWait`, `RecvWait` and `Sloop` respectively — the
+    /// same numbers [`crate::tune::replan_knobs`] reads).
+    pub fn from_shares(read: f64, recv: f64, sloop: f64) -> StallVerdict {
+        let mut kind = StallKind::ReadBound;
+        let mut share = read;
+        if recv > share {
+            kind = StallKind::ComputeBound;
+            share = recv;
+        }
+        if sloop > share {
+            kind = StallKind::SloopBound;
+            share = sloop;
+        }
+        if share < DOMINANT_SHARE {
+            kind = StallKind::Balanced;
+        }
+        StallVerdict { kind, share: share.clamp(0.0, 1.0) }
+    }
+
+    /// Whole-run attribution from the accumulated phase totals.
+    pub fn from_metrics(m: &Metrics, wall_secs: f64) -> StallVerdict {
+        let w = wall_secs.max(1e-12);
+        StallVerdict::from_shares(
+            m.total(Phase::ReadWait).as_secs_f64() / w,
+            m.total(Phase::RecvWait).as_secs_f64() / w,
+            m.total(Phase::Sloop).as_secs_f64() / w,
+        )
+    }
+
+    /// Human rendering, e.g. `read_bound (62% of wall)`.
+    pub fn render(&self) -> String {
+        format!("{} ({:.0}% of wall)", self.kind.as_str(), 100.0 * self.share)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn dominating_phase_wins() {
+        let v = StallVerdict::from_shares(0.62, 0.10, 0.05);
+        assert_eq!(v.kind, StallKind::ReadBound);
+        assert!((v.share - 0.62).abs() < 1e-12);
+        assert_eq!(StallVerdict::from_shares(0.1, 0.5, 0.2).kind, StallKind::ComputeBound);
+        assert_eq!(StallVerdict::from_shares(0.1, 0.2, 0.5).kind, StallKind::SloopBound);
+    }
+
+    #[test]
+    fn small_shares_are_balanced() {
+        let v = StallVerdict::from_shares(0.05, 0.08, 0.02);
+        assert_eq!(v.kind, StallKind::Balanced);
+        assert!((v.share - 0.08).abs() < 1e-12);
+        assert!(v.render().contains("balanced"), "{}", v.render());
+    }
+
+    #[test]
+    fn from_metrics_uses_phase_totals() {
+        let mut m = Metrics::new();
+        m.add(Phase::ReadWait, Duration::from_millis(700));
+        m.add(Phase::Sloop, Duration::from_millis(100));
+        let v = StallVerdict::from_metrics(&m, 1.0);
+        assert_eq!(v.kind, StallKind::ReadBound);
+        assert!((v.share - 0.7).abs() < 1e-9);
+    }
+}

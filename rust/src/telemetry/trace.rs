@@ -1,0 +1,246 @@
+//! Structured tracing: a bounded ring of completed spans, exportable as
+//! Chrome trace-event JSON.
+//!
+//! Spans are recorded at the pipeline's *existing* `Instant::now()`
+//! timing points (segment loop, device lanes, aio workers, scheduler) —
+//! tracing observes durations the code already measures, it never adds
+//! its own synchronization to the compute path. The ring is fixed-size:
+//! when full, the oldest spans are overwritten, so a long `serve`
+//! session keeps the most recent window of activity and memory stays
+//! bounded.
+//!
+//! The export is the Chrome trace-event format (`ph: "X"` complete
+//! events, microsecond timestamps), which Perfetto and `chrome://tracing`
+//! load directly — the paper's Fig. 3 lane timeline, rendered from a
+//! live run. Track layout (`tid`): 0 = the coordinator thread,
+//! `1 + lane` = device lanes ([`TID_LANE0`]), [`TID_AIO`] = the aio
+//! workers, [`TID_SCHED`] = the service scheduler.
+
+use crate::error::{Error, Result};
+use crate::util::json::escape_into;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// `tid` of the coordinator (segment-loop) spans.
+pub const TID_COORD: u32 = 0;
+/// `tid` of device lane `i` is `TID_LANE0 + i`.
+pub const TID_LANE0: u32 = 1;
+/// `tid` of aio worker spans (reads and writes).
+pub const TID_AIO: u32 = 64;
+/// `tid` of service scheduler spans (job lifecycles).
+pub const TID_SCHED: u32 = 65;
+
+/// Ring capacity in spans (~3 MB resident when full).
+pub const CAPACITY: usize = 1 << 16;
+
+/// One completed span. `args` carries up to two id pairs (block /
+/// lane / column ids); keys are `""` past `nargs`.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRec {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub tid: u32,
+    /// Start, µs since the sink's epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub args: [(&'static str, u64); 2],
+    pub nargs: u8,
+}
+
+struct Ring {
+    spans: Vec<SpanRec>,
+    /// Next write slot once the ring has wrapped.
+    next: usize,
+    wrapped: bool,
+}
+
+/// A bounded span sink. The global one behind `--trace-out` lives in
+/// [`global_trace`]; tests construct their own.
+pub struct TraceSink {
+    epoch: Instant,
+    cap: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::with_capacity(CAPACITY)
+    }
+
+    pub fn with_capacity(cap: usize) -> TraceSink {
+        TraceSink {
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            ring: Mutex::new(Ring { spans: Vec::new(), next: 0, wrapped: false }),
+        }
+    }
+
+    /// Record one completed span that ran `[start, start + dur)`.
+    pub fn record(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        tid: u32,
+        start: Instant,
+        dur: Duration,
+        args: &[(&'static str, u64)],
+    ) {
+        let ts_us = start.checked_duration_since(self.epoch).unwrap_or_default().as_micros() as u64;
+        let mut a = [("", 0u64); 2];
+        let nargs = args.len().min(2);
+        a[..nargs].copy_from_slice(&args[..nargs]);
+        let rec = SpanRec {
+            name,
+            cat,
+            tid,
+            ts_us,
+            dur_us: dur.as_micros() as u64,
+            args: a,
+            nargs: nargs as u8,
+        };
+        let mut g = self.ring.lock().unwrap();
+        if g.spans.len() < self.cap {
+            g.spans.push(rec);
+        } else {
+            let slot = g.next;
+            g.spans[slot] = rec;
+            g.next = (slot + 1) % self.cap;
+            g.wrapped = true;
+        }
+    }
+
+    /// Spans recorded and retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Retained spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRec> {
+        let g = self.ring.lock().unwrap();
+        if g.wrapped {
+            let mut out = Vec::with_capacity(g.spans.len());
+            out.extend_from_slice(&g.spans[g.next..]);
+            out.extend_from_slice(&g.spans[..g.next]);
+            out
+        } else {
+            g.spans.clone()
+        }
+    }
+
+    /// Render the retained spans as Chrome trace-event JSON.
+    pub fn chrome_json(&self) -> String {
+        let spans = self.snapshot();
+        let mut o = String::with_capacity(spans.len() * 96 + 64);
+        o.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        for (i, s) in spans.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            o.push_str("{\"name\":\"");
+            escape_into(&mut o, s.name);
+            o.push_str("\",\"cat\":\"");
+            escape_into(&mut o, s.cat);
+            let _ = write!(
+                o,
+                "\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{}",
+                s.tid, s.ts_us, s.dur_us
+            );
+            if s.nargs > 0 {
+                o.push_str(",\"args\":{");
+                for (j, (k, v)) in s.args[..s.nargs as usize].iter().enumerate() {
+                    if j > 0 {
+                        o.push(',');
+                    }
+                    o.push('"');
+                    escape_into(&mut o, k);
+                    let _ = write!(o, "\":{v}");
+                }
+                o.push('}');
+            }
+            o.push('}');
+        }
+        o.push_str("]}");
+        o
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn export_chrome(&self, path: &std::path::Path) -> Result<()> {
+        let json = self.chrome_json();
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| Error::io(format!("creating trace file {}", path.display()), e))?;
+        f.write_all(json.as_bytes())
+            .map_err(|e| Error::io(format!("writing trace file {}", path.display()), e))?;
+        Ok(())
+    }
+}
+
+static GLOBAL: OnceLock<TraceSink> = OnceLock::new();
+
+/// The process-wide sink behind `--trace-out`. First touch pins the
+/// trace epoch; the disabled fast path never touches it.
+pub fn global_trace() -> &'static TraceSink {
+    GLOBAL.get_or_init(TraceSink::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_renders_chrome_events() {
+        let t = TraceSink::new();
+        let t0 = t.epoch;
+        t.record("read", "io", TID_AIO, t0, Duration::from_micros(120), &[("col0", 64)]);
+        t.record(
+            "compute",
+            "lane",
+            TID_LANE0,
+            t0 + Duration::from_micros(5),
+            Duration::from_micros(40),
+            &[("block", 0), ("lane", 0)],
+        );
+        assert_eq!(t.len(), 2);
+        let json = t.chrome_json();
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["), "{json}");
+        assert!(json.contains("\"name\":\"read\""), "{json}");
+        assert!(json.contains("\"ph\":\"X\""), "{json}");
+        assert!(json.contains("\"dur\":120"), "{json}");
+        assert!(json.contains("\"args\":{\"col0\":64}"), "{json}");
+        assert!(json.contains("\"args\":{\"block\":0,\"lane\":0}"), "{json}");
+        assert!(json.ends_with("]}"), "{json}");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let t = TraceSink::with_capacity(4);
+        let t0 = t.epoch;
+        for i in 0..6u64 {
+            t.record("s", "test", 0, t0 + Duration::from_micros(i), Duration::ZERO, &[("i", i)]);
+        }
+        assert_eq!(t.len(), 4);
+        let snap = t.snapshot();
+        let ids: Vec<u64> = snap.iter().map(|s| s.args[0].1).collect();
+        assert_eq!(ids, vec![2, 3, 4, 5], "oldest spans evicted, order kept");
+    }
+
+    #[test]
+    fn spans_before_the_epoch_clamp_to_zero() {
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let t = TraceSink::new();
+        t.record("early", "test", 0, t0, Duration::from_micros(1), &[]);
+        assert_eq!(t.snapshot()[0].ts_us, 0);
+    }
+}

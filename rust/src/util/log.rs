@@ -3,7 +3,7 @@
 //! levels, timestamps relative to process start, and zero allocation when
 //! a level is disabled.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
@@ -18,11 +18,23 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static JSON: AtomicBool = AtomicBool::new(false);
 static START: OnceLock<Instant> = OnceLock::new();
 
 /// Set the global verbosity.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Emit one JSON object per line instead of the human format
+/// (`--log-json`): `{"secs":…,"level":"info","target":"engine","msg":"…"}`.
+pub fn set_json(on: bool) {
+    JSON.store(on, Ordering::Relaxed);
+}
+
+/// Whether structured (JSON-lines) output is on.
+pub fn json_mode() -> bool {
+    JSON.load(Ordering::Relaxed)
 }
 
 /// Current verbosity.
@@ -48,6 +60,21 @@ pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     }
     let t0 = *START.get_or_init(Instant::now);
     let secs = t0.elapsed().as_secs_f64();
+    if json_mode() {
+        let name = match l {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        };
+        eprintln!(
+            "{{\"secs\":{secs:.3},\"level\":\"{name}\",\"target\":\"{}\",\"msg\":\"{}\"}}",
+            crate::util::json::escape(target),
+            crate::util::json::escape(&msg.to_string()),
+        );
+        return;
+    }
     let tag = match l {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",
@@ -88,6 +115,17 @@ mod tests {
         assert!(enabled(Level::Debug));
         assert!(!enabled(Level::Trace));
         set_level(prev);
+    }
+
+    #[test]
+    fn json_mode_toggles() {
+        // Only the stderr *format* changes with the flag, so briefly
+        // flipping it cannot break concurrent tests' assertions.
+        set_json(true);
+        assert!(json_mode());
+        log_error!("test", "a \"quoted\" {}", "msg");
+        set_json(false);
+        assert!(!json_mode());
     }
 
     #[test]

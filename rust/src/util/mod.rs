@@ -1,7 +1,9 @@
 //! Small shared utilities: deterministic RNG, wall-clock timers, humanized
-//! quantities, a leveled logger, and the compute thread pool. All std-only.
+//! quantities, JSON emission helpers, a leveled logger, and the compute
+//! thread pool. All std-only.
 
 pub mod human;
+pub mod json;
 pub mod log;
 pub mod rng;
 pub mod threads;

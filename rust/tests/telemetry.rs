@@ -1,0 +1,172 @@
+//! Telemetry-plane integration: with the metrics and trace flags ON,
+//! real pipeline/service runs populate the Prometheus exposition, the
+//! span ring exports Chrome-trace JSON, and the HTTP endpoint answers
+//! scrapes.
+//!
+//! This binary is its own process (unlike the lib unit tests), so it is
+//! the one place the global enable flags get flipped on. Tests within
+//! it may run concurrently against the shared global registry, so every
+//! assertion is monotone (`>=`, `contains`) rather than exact-count.
+
+use cugwas::config::ServiceConfig;
+use cugwas::coordinator::{run, PipelineConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::service::serve;
+use cugwas::storage::generate;
+use cugwas::telemetry::{self, registry, StallKind};
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_telemetry_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn enable() {
+    telemetry::set_metrics_enabled(true);
+    telemetry::set_trace_enabled(true);
+}
+
+/// Extract the value of an unlabeled counter/gauge line from the
+/// exposition text.
+fn series_value(text: &str, name: &str) -> f64 {
+    let line = text
+        .lines()
+        .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+        .unwrap_or_else(|| panic!("series {name} missing from exposition:\n{text}"));
+    line[name.len() + 1..].trim().parse().unwrap()
+}
+
+#[test]
+fn serve_run_populates_the_prometheus_exposition() {
+    enable();
+    let d = tmpdir("serve");
+    generate(&d, Dims::new(32, 2, 64).unwrap(), 16, 9).unwrap();
+    // Two jobs on one dataset: the second streams from the shared cache,
+    // so hit and miss phases both land in the histograms.
+    let toml = format!(
+        "[service]\nworkers = 1\ncache_mb = 16\n\n\
+         [job.first]\ndataset = \"{d}\"\nblock = 16\n\n\
+         [job.second]\ndataset = \"{d}\"\nblock = 16\n",
+        d = d.display()
+    );
+    let cfg = ServiceConfig::from_toml(&toml).unwrap();
+    let rep = serve(&cfg).unwrap();
+    assert_eq!(rep.failed(), 0, "{}", rep.render());
+
+    let text = registry::global().render();
+    // Required series from the acceptance criteria: phase histograms,
+    // queue/cache/slab gauges, the data-plane byte counters.
+    for needle in [
+        "# TYPE cugwas_phase_seconds histogram",
+        "cugwas_phase_seconds_bucket{phase=\"read_wait\",le=\"+Inf\"}",
+        "cugwas_phase_seconds_bucket{phase=\"sloop\",le=\"+Inf\"}",
+        "cugwas_phase_seconds_bucket{phase=\"cache_hit\",le=\"+Inf\"}",
+        "# TYPE cugwas_job_wall_seconds histogram",
+        "# TYPE cugwas_snps_per_sec gauge",
+        "cugwas_queue_depth",
+        "cugwas_mem_budget_bytes",
+        "cugwas_cache_hits_total",
+        "cugwas_cache_resident_bytes",
+        "cugwas_slab_recycled_total",
+        "cugwas_bytes_copied_total",
+        "cugwas_bytes_borrowed_total",
+        "cugwas_stall_segments_total{verdict=\"read_bound\"}",
+        "cugwas_stall_share",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in exposition:\n{text}");
+    }
+    assert!(series_value(&text, "cugwas_jobs_done_total") >= 2.0, "{text}");
+    assert!(series_value(&text, "cugwas_snps_total") >= 128.0, "{text}");
+    assert!(series_value(&text, "cugwas_blocks_total") >= 8.0, "{text}");
+    assert!(series_value(&text, "cugwas_cache_hits_total") >= 4.0, "{text}");
+    assert!(series_value(&text, "cugwas_snps_per_sec") > 0.0, "{text}");
+    // Every segment got a stall verdict.
+    let verdicts: u64 = StallKind::ALL.iter().map(|k| registry::global().stall_count(*k)).sum();
+    assert!(verdicts >= 1, "no stall verdicts recorded");
+
+    // Exposition validity: every sample line belongs to a # TYPE'd
+    // family, and bucket counts are cumulative (monotone, +Inf == count).
+    for line in text.lines() {
+        if line.starts_with('#') {
+            let mut it = line.split_whitespace();
+            assert!(matches!(it.next(), Some("#")));
+            assert!(matches!(it.next(), Some("HELP") | Some("TYPE")), "{line}");
+        } else {
+            assert!(line.starts_with("cugwas_"), "unprefixed sample: {line}");
+            assert!(line.rsplit(' ').next().unwrap().parse::<f64>().is_ok(), "{line}");
+        }
+    }
+    let read_wait = registry::global().phase_hist(0);
+    let cum = read_wait.cumulative();
+    assert!(cum.windows(2).all(|w| w[0] <= w[1]), "{cum:?}");
+    assert!(read_wait.count() >= *cum.last().unwrap(), "+Inf >= last bound");
+
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn pipeline_run_records_spans_and_exports_chrome_trace() {
+    enable();
+    let d = tmpdir("trace");
+    generate(&d, Dims::new(24, 2, 48).unwrap(), 8, 11).unwrap();
+    let cfg = PipelineConfig::new(&d, 8);
+    let report = run(&cfg).unwrap();
+    assert_eq!(report.snps, 48);
+    // The report carries whole-run stall attribution.
+    assert!((0.0..=1.0).contains(&report.stall.share));
+    assert!(!report.stall.render().is_empty());
+
+    let sink = telemetry::global_trace();
+    assert!(!sink.is_empty(), "a traced run must record spans");
+    let spans = sink.snapshot();
+    assert!(
+        spans.iter().any(|s| s.name == "device_compute"),
+        "lane compute spans missing"
+    );
+    assert!(spans.iter().any(|s| s.cat == "io"), "aio spans missing");
+
+    // Chrome trace-event schema: what Perfetto actually requires — a
+    // traceEvents array of complete ("X") events with name/tid/ts/dur.
+    let out = d.join("trace.json");
+    sink.export_chrome(&out).unwrap();
+    let json = std::fs::read_to_string(&out).unwrap();
+    assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["), "{json}");
+    assert!(json.ends_with("]}"), "{json}");
+    for needle in ["\"ph\":\"X\"", "\"pid\":1", "\"tid\":", "\"ts\":", "\"dur\":"] {
+        assert!(json.contains(needle), "missing {needle:?}");
+    }
+    let events = json.matches("\"ph\":\"X\"").count();
+    assert!(events >= sink.len().min(1), "no events rendered");
+    assert_eq!(json.matches('{').count(), json.matches('}').count(), "unbalanced JSON");
+
+    std::fs::remove_dir_all(&d).unwrap();
+}
+
+#[test]
+fn metrics_endpoint_answers_scrapes() {
+    enable();
+    let srv = telemetry::MetricsServer::start("127.0.0.1:0").unwrap();
+    let get = |path: &str| -> String {
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    let metrics = get("/metrics");
+    assert!(metrics.starts_with("HTTP/1.1 200 OK\r\n"), "{metrics}");
+    assert!(metrics.contains("text/plain; version=0.0.4"), "{metrics}");
+    assert!(metrics.contains("cugwas_snps_per_sec"), "{metrics}");
+    assert!(metrics.contains("cugwas_cache_resident_bytes"), "{metrics}");
+
+    let health = get("/healthz");
+    assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
+    assert!(health.contains("ok"), "{health}");
+
+    let missing = get("/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+}

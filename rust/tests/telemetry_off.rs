@@ -1,0 +1,52 @@
+//! Default-off telemetry: a full pipeline run in a process that never
+//! enables the flags must leave the trace ring empty and the registry
+//! untouched — the observability plane is a strict no-op unless asked
+//! for (the acceptance criterion behind keeping `determinism.rs`
+//! bit-identical and the hot path free of telemetry work).
+//!
+//! Own binary = own process: nothing else here can flip the globals.
+
+use cugwas::coordinator::{run, PipelineConfig};
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::generate;
+use cugwas::telemetry::{self, registry, StallKind};
+use std::path::PathBuf;
+
+#[test]
+fn disabled_telemetry_records_nothing() {
+    assert!(!telemetry::metrics_enabled());
+    assert!(!telemetry::trace_enabled());
+
+    let d: PathBuf =
+        std::env::temp_dir().join(format!("cugwas_telemetry_off_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    generate(&d, Dims::new(24, 2, 48).unwrap(), 8, 5).unwrap();
+    let report = run(&PipelineConfig::new(&d, 8)).unwrap();
+    assert_eq!(report.snps, 48);
+    // The in-report accounting still works (it predates the telemetry
+    // plane and never depended on the flags) …
+    assert!(report.wall_secs > 0.0);
+    assert!(!report.stall.render().is_empty());
+
+    // … but the global plane saw none of it. Reading the registry here
+    // materializes it — that is the test, not a contradiction: even
+    // after a full run, every cell still holds its initial value.
+    assert_eq!(telemetry::global_trace().len(), 0, "spans recorded with tracing off");
+    let reg = registry::global();
+    assert_eq!(reg.jobs_done_total.get(), 0);
+    assert_eq!(reg.snps_total.get(), 0);
+    assert_eq!(reg.blocks_total.get(), 0);
+    assert_eq!(reg.bytes_copied_total.get(), 0);
+    assert_eq!(reg.bytes_borrowed_total.get(), 0);
+    assert_eq!(reg.cache_misses_total.get(), 0);
+    assert_eq!(reg.slab_minted_total.get(), 0);
+    for idx in 0..10 {
+        assert_eq!(reg.phase_hist(idx).count(), 0, "phase {idx} observed with metrics off");
+    }
+    for k in StallKind::ALL {
+        assert_eq!(reg.stall_count(k), 0);
+    }
+    assert_eq!(reg.snps_per_sec.get(), 0.0);
+
+    std::fs::remove_dir_all(&d).unwrap();
+}

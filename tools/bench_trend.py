@@ -113,12 +113,15 @@ def main(argv):
         cur_val = current[1].get((gate_bench, gate_row))
         past = [m.get((gate_bench, gate_row)) for _, m in history]
         past = [v for v in past if v is not None]
+        if not past:
+            # A fresh repo (or a metric added this push) has nothing to
+            # compare against — there is no baseline to regress from, so
+            # the gate is skipped even if the current value is missing.
+            print(f"gate: {gate_row} — no baseline, gate skipped")
+            continue
         if cur_val is None:
             print(f"gate: {gate_row} missing from the current run — failing")
             status = 1
-            continue
-        if not past:
-            print(f"gate: no history for {gate_row} — passing (first data point)")
             continue
         baseline = sorted(past)[len(past) // 2]
         floor = baseline * (1.0 - GATE_DROP)
