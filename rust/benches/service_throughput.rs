@@ -53,6 +53,7 @@ fn main() {
             auto_tune: false, // measure the configured knobs, not a plan
             metrics_addr: None,
             jobs: jobs(),
+            fault: Default::default(),
         };
         let rep = serve(&cfg).expect("service run");
         assert_eq!(rep.failed(), 0);

@@ -4,5 +4,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{RunConfig, ServiceConfig, SimSection};
+pub use schema::{FaultToleranceConfig, RunConfig, ServiceConfig, SimSection};
 pub use toml::{Doc, Value};

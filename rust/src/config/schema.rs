@@ -57,6 +57,7 @@ use crate::devsim::HardwareProfile;
 use crate::error::{Error, Result};
 use crate::gwas::problem::Dims;
 use crate::service::JobSpec;
+use crate::storage::fault::{FaultPlan, RetryPolicy, NO_COL, NO_LANE};
 use crate::storage::Throttle;
 use std::path::{Path, PathBuf};
 
@@ -64,6 +65,94 @@ use std::path::{Path, PathBuf};
 #[derive(Debug, Clone)]
 pub struct SimSection {
     pub profile: HardwareProfile,
+}
+
+/// Parsed `[fault_tolerance]` section (shared by run and service
+/// configs): the retry/supervision policy, whether published blocks
+/// carry a verified checksum, and the chaos-injection plan (all-off
+/// unless `inject_*` keys are set — production configs never set them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultToleranceConfig {
+    pub policy: RetryPolicy,
+    pub integrity: bool,
+    pub plan: FaultPlan,
+}
+
+impl FaultToleranceConfig {
+    /// Install this configuration process-wide: policy, integrity flag
+    /// and (when any `inject_*` knob is live) the armed injector.
+    /// Called once at `run`/`serve` startup.
+    pub fn install(&self) {
+        crate::storage::fault::set_policy(self.policy);
+        crate::storage::fault::set_integrity_enabled(self.integrity);
+        crate::storage::fault::arm(self.plan);
+    }
+}
+
+/// Keys a `[fault_tolerance]` section may carry.
+const FAULT_KEYS: &[&str] = &[
+    "read_retries",
+    "retry_backoff_ms",
+    "retry_deadline_ms",
+    "integrity",
+    "lane_watchdog_ms",
+    "max_lane_respawns",
+    "job_retries",
+    "job_backoff_ms",
+    "quarantine_after",
+    "inject_seed",
+    "inject_read_fail_every",
+    "inject_read_fail_col",
+    "inject_read_delay_every",
+    "inject_read_delay_ms",
+    "inject_corrupt_every",
+    "inject_torn_append_at",
+    "inject_wedge_lane",
+    "inject_wedge_at_chunk",
+    "inject_wedge_ms",
+];
+
+/// Parse the `[fault_tolerance]` section (absent section → defaults:
+/// a few read retries, integrity off, injector off).
+fn fault_from_doc(doc: &Doc) -> Result<FaultToleranceConfig> {
+    let s = "fault_tolerance";
+    let key = |k, default, min, max| int_in(doc, s, k, default, min, max);
+    let d = RetryPolicy::default();
+    let policy = RetryPolicy {
+        read_retries: key("read_retries", d.read_retries as i64, 0, 1_000)? as u32,
+        retry_backoff_ms: key("retry_backoff_ms", d.retry_backoff_ms as i64, 0, 60_000)? as u64,
+        retry_deadline_ms: key("retry_deadline_ms", d.retry_deadline_ms as i64, 1, 3_600_000)?
+            as u64,
+        lane_watchdog_ms: key("lane_watchdog_ms", d.lane_watchdog_ms as i64, 0, 3_600_000)? as u64,
+        max_lane_respawns: key("max_lane_respawns", d.max_lane_respawns as i64, 0, 1_000)? as u32,
+        job_retries: key("job_retries", d.job_retries as i64, 0, 1_000)? as u32,
+        job_backoff_ms: key("job_backoff_ms", d.job_backoff_ms as i64, 0, 3_600_000)? as u64,
+        quarantine_after: key("quarantine_after", d.quarantine_after as i64, 1, 1_000)? as u32,
+    };
+    let integrity = doc.bool_or(s, "integrity", false)?;
+    let dp = FaultPlan::default();
+    let plan = FaultPlan {
+        seed: key("inject_seed", 0, 0, i64::MAX)? as u64,
+        read_fail_every: key("inject_read_fail_every", 0, 0, i64::MAX)? as u64,
+        // -1 = "no column targeted" (the sentinel is not expressible in
+        // TOML-friendly unsigned space).
+        read_fail_col: match key("inject_read_fail_col", -1, -1, i64::MAX)? {
+            -1 => NO_COL,
+            v => v as u64,
+        },
+        read_delay_every: key("inject_read_delay_every", 0, 0, i64::MAX)? as u64,
+        read_delay_ms: key("inject_read_delay_ms", 0, 0, 60_000)? as u64,
+        corrupt_every: key("inject_corrupt_every", 0, 0, i64::MAX)? as u64,
+        torn_append_at: key("inject_torn_append_at", 0, 0, i64::MAX)? as u64,
+        wedge_lane: match key("inject_wedge_lane", -1, -1, 4_096)? {
+            -1 => NO_LANE,
+            v => v as usize,
+        },
+        wedge_at_chunk: key("inject_wedge_at_chunk", dp.wedge_at_chunk as i64, 1, i64::MAX)?
+            as u64,
+        wedge_ms: key("inject_wedge_ms", dp.wedge_ms as i64, 0, 600_000)? as u64,
+    };
+    Ok(FaultToleranceConfig { policy, integrity, plan })
 }
 
 /// Full run configuration.
@@ -75,6 +164,7 @@ pub struct RunConfig {
     pub seed: u64,
     pub pipeline: PipelineConfig,
     pub sim: SimSection,
+    pub fault: FaultToleranceConfig,
 }
 
 impl RunConfig {
@@ -113,6 +203,7 @@ impl RunConfig {
                     "adapt_every",
                 ],
                 "sim" => &["profile"],
+                "fault_tolerance" => FAULT_KEYS,
                 "" => &[],
                 other => {
                     return Err(Error::Config(format!("unknown section [{other}]")));
@@ -182,6 +273,7 @@ impl RunConfig {
                 adapt_every,
             },
             sim: SimSection { profile },
+            fault: fault_from_doc(doc)?,
         })
     }
 
@@ -354,6 +446,9 @@ pub struct ServiceConfig {
     /// Jobs from `[job.*]` sections, in section (alphabetical) order —
     /// `priority` is the scheduling knob, not file order.
     pub jobs: Vec<JobSpec>,
+    /// Retry/supervision policy, integrity checking and (for the chaos
+    /// harness) fault injection — the `[fault_tolerance]` section.
+    pub fault: FaultToleranceConfig,
 }
 
 impl ServiceConfig {
@@ -374,6 +469,13 @@ impl ServiceConfig {
         for section in doc.sections() {
             match section {
                 "service" => {}
+                "fault_tolerance" => {
+                    for key in doc.keys_in(section) {
+                        if !FAULT_KEYS.contains(&key) {
+                            return Err(Error::Config(format!("unknown key {section}.{key}")));
+                        }
+                    }
+                }
                 "" => {
                     if let Some(key) = doc.keys_in("").first() {
                         return Err(Error::Config(format!("unknown top-level key {key}")));
@@ -441,6 +543,7 @@ impl ServiceConfig {
             auto_tune,
             metrics_addr,
             jobs,
+            fault: fault_from_doc(doc)?,
         })
     }
 
@@ -698,6 +801,40 @@ artifacts = "arts"
         // A missing profile file is a config error, not a silent default.
         assert!(RunConfig::from_toml("[pipeline]\nprofile = \"/nonexistent.toml\"\n").is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fault_tolerance_section_parses_and_defaults_off() {
+        let c = RunConfig::from_toml(
+            "[fault_tolerance]\nread_retries = 5\nintegrity = true\nlane_watchdog_ms = 50\n\
+             inject_read_fail_every = 7\ninject_wedge_lane = 0\n",
+        )
+        .unwrap();
+        assert_eq!(c.fault.policy.read_retries, 5);
+        assert!(c.fault.integrity);
+        assert_eq!(c.fault.policy.lane_watchdog_ms, 50);
+        assert_eq!(c.fault.plan.read_fail_every, 7);
+        assert_eq!(c.fault.plan.wedge_lane, 0);
+
+        // Absent section → defaults: injector off, integrity off.
+        let c = RunConfig::defaults();
+        assert_eq!(c.fault, FaultToleranceConfig::default());
+        assert!(!c.fault.integrity);
+        assert_eq!(c.fault.plan.read_fail_col, NO_COL);
+        assert_eq!(c.fault.plan.wedge_lane, NO_LANE);
+
+        // Service configs carry the same section.
+        let s = ServiceConfig::from_toml(
+            "[fault_tolerance]\njob_retries = 2\nquarantine_after = 4\n",
+        )
+        .unwrap();
+        assert_eq!(s.fault.policy.job_retries, 2);
+        assert_eq!(s.fault.policy.quarantine_after, 4);
+
+        // Typos and out-of-range values are config errors.
+        assert!(RunConfig::from_toml("[fault_tolerance]\nread_retrys = 1\n").is_err());
+        assert!(ServiceConfig::from_toml("[fault_tolerance]\nquarantine_after = 0\n").is_err());
+        assert!(RunConfig::from_toml("[fault_tolerance]\ninject_wedge_lane = -2\n").is_err());
     }
 
     #[test]

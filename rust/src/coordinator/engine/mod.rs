@@ -41,6 +41,7 @@ use crate::gwas::preprocess::{preprocess, Preprocessed};
 use crate::gwas::problem::Dims;
 use crate::gwas::sloop::SloopScratch;
 use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
+use crate::storage::fault;
 use crate::storage::{
     dataset, AioEngine, AioStats, BlockCache, Header, ReadProbe, SlabPool, Throttle, XrdFile,
 };
@@ -420,6 +421,10 @@ impl Engine {
         let mut replans = 0usize;
         let mut lat_fit = DiskLatFit::default();
         let mut plan_cursor = 0usize;
+        // Lane-respawn budget for the whole run: each recovery replays
+        // one segment, so the budget bounds the extra work a flapping
+        // device can extort before the run fails for real.
+        let mut respawns_used = 0u32;
         let t_wall = Instant::now();
 
         loop {
@@ -453,27 +458,68 @@ impl Engine {
 
             let before = SegmentSnapshot::take(&metrics, self.reader.stats());
             let t_seg = Instant::now();
-            {
-                // The coordinator thread keeps the S-loop's core share
-                // for this segment's split.
-                let lane_total = knobs.lane_threads * cfg.ngpus;
-                let coord = self.total_threads.saturating_sub(lane_total).max(1);
-                let _coord_budget = threads::with_budget(coord);
-                let ctx = SegmentCtx {
-                    n,
-                    p,
-                    mb_gpu: knobs.block / cfg.ngpus,
-                    pre: self.pre.as_ref(),
-                    reader: &self.reader,
-                    writer: &writer,
-                    cache: self.cache.as_deref(),
-                    cache_dataset: self.cache_dataset.as_deref(),
-                    lanes: &self.lanes,
-                    slabs: &self.slabs,
-                    result_pool: &mut self.result_pool,
-                    scratch: &mut self.scratch,
+            // Segment supervision: a lane that dies or wedges mid-stream
+            // surfaces as [`Error::LaneFault`]. Replay is safe because
+            // nothing from the failed attempt was journaled (records
+            // append only after the segment's data sync), result writes
+            // are idempotent positioned writes, and lanes carry no state
+            // across chunks — so recovery respawns the lane set and
+            // re-runs the same window list, bounded by the policy's
+            // respawn budget.
+            loop {
+                let res = {
+                    // The coordinator thread keeps the S-loop's core
+                    // share for this segment's split.
+                    let lane_total = knobs.lane_threads * cfg.ngpus;
+                    let coord = self.total_threads.saturating_sub(lane_total).max(1);
+                    let _coord_budget = threads::with_budget(coord);
+                    let ctx = SegmentCtx {
+                        n,
+                        p,
+                        mb_gpu: knobs.block / cfg.ngpus,
+                        pre: self.pre.as_ref(),
+                        reader: &self.reader,
+                        writer: &writer,
+                        cache: self.cache.as_deref(),
+                        cache_dataset: self.cache_dataset.as_deref(),
+                        lanes: &self.lanes,
+                        slabs: &self.slabs,
+                        result_pool: &mut self.result_pool,
+                        scratch: &mut self.scratch,
+                    };
+                    run_segment(ctx, &items, &mut metrics, &mut journal, &mut device_secs)
                 };
-                run_segment(ctx, &items, &mut metrics, &mut journal, &mut device_secs)?;
+                match res {
+                    Ok(()) => break,
+                    Err(Error::LaneFault { lane, msg }) => {
+                        let limit = fault::policy().max_lane_respawns;
+                        if respawns_used >= limit {
+                            return Err(Error::LaneFault { lane, msg });
+                        }
+                        respawns_used += 1;
+                        crate::log_info!(
+                            "engine",
+                            "lane {lane} fault: {msg} — respawning lanes and replaying the \
+                             segment (recovery {respawns_used}/{limit})"
+                        );
+                        fault::note_lane_respawn();
+                        // The old lanes may be dead or still waking from
+                        // a wedge; drain them without letting a poisoned
+                        // join abort the recovery, then rebuild lanes AND
+                        // pools so the replay starts from full rings (a
+                        // failed attempt can strand in-flight buffers).
+                        for mut l in self.lanes.drain(..) {
+                            l.close();
+                            if let Err(e) = l.join() {
+                                crate::log_info!("engine", "faulted lane exited with: {e}");
+                            }
+                        }
+                        self.lane_key = None;
+                        self.pool_key = None;
+                        self.ensure_resources(&knobs, cfg.ngpus)?;
+                    }
+                    Err(e) => return Err(e),
+                }
             }
             windows_done += items.len();
             lat_fit.update(self.reader.stats().since(&before.reader));

@@ -106,11 +106,69 @@ struct SegmentState {
     outstanding: Vec<usize>,
 }
 
-/// A lane's output channel disconnected mid-stream. The lane thread
-/// itself (and its underlying error, if any) is joined by the engine's
-/// error-path teardown.
+/// A lane's output channel disconnected mid-stream. Surfaced as the
+/// recoverable [`Error::LaneFault`]: the engine supervisor respawns the
+/// lanes and replays the segment (nothing journals until the segment
+/// boundary, so a replay recomputes exactly this segment's windows).
 fn lane_died(gi: usize) -> Error {
-    Error::Pipeline(format!("lane {gi} exited mid-stream"))
+    Error::LaneFault { lane: gi, msg: "exited mid-stream".into() }
+}
+
+/// The watchdog's verdict on a lane that owes chunks but has produced
+/// nothing for the whole watchdog window — wedged, not dead: its
+/// channel is still open, it just stopped answering.
+fn lane_wedged(gi: usize, outstanding: usize, wd_ms: u64) -> Error {
+    Error::LaneFault {
+        lane: gi,
+        msg: format!("wedged: {outstanding} chunk(s) outstanding, no progress in {wd_ms}ms"),
+    }
+}
+
+/// Re-verify a block's read-time checksum at the submit boundary; on
+/// mismatch, evict the (possibly corrupt) cache entry and re-read from
+/// disk — bounded by the retry policy — so corrupt bytes are never
+/// computed on. One relaxed load when integrity checking is off.
+#[allow(clippy::too_many_arguments)]
+fn verify_or_reread(
+    n: usize,
+    reader: &AioEngine,
+    slabs: &SlabPool,
+    cache: Option<&BlockCache>,
+    cache_dataset: Option<&str>,
+    mut block: Block,
+    col0: u64,
+    live: usize,
+) -> Result<Block> {
+    if !crate::storage::fault::integrity_enabled() {
+        return Ok(block);
+    }
+    let mut rereads = 0u32;
+    while !block.integrity_ok() {
+        let key = cache_dataset.map(|ds| BlockKey {
+            dataset: ds.to_string(),
+            col0,
+            ncols: live as u64,
+        });
+        if let (Some(cache), Some(key)) = (cache, &key) {
+            cache.invalidate(key);
+        }
+        rereads += 1;
+        if rereads > crate::storage::fault::policy().read_retries.max(1) {
+            return Err(Error::Pipeline(format!(
+                "block at cols {col0}..{} failed integrity verification after {rereads} read(s)",
+                col0 + live as u64
+            )));
+        }
+        crate::storage::fault::note_read_retry();
+        drop(block);
+        let (bm, res) = reader.read_cols_slab(col0, live as u64, slabs.take(n * live)?).wait();
+        res?;
+        block = bm.ok_or_else(|| Error::Pipeline("re-read lost its slab".into()))?.publish();
+        if let (Some(cache), Some(key)) = (cache, key) {
+            cache.insert(key, &block);
+        }
+    }
+    Ok(block)
 }
 
 /// Retire one lane result: run the CPU tail, fill the assembly, and
@@ -263,7 +321,19 @@ pub(super) fn run_segment(
                 if let (Some(cache), Some(ds)) = (cache, cache_dataset) {
                     let key = block_key(ds, col0, live);
                     let t0 = Instant::now();
-                    if let Some(block) = cache.get(&key, n * live) {
+                    // A resident block must still match its read-time
+                    // checksum; a corrupt entry is evicted and the
+                    // window falls through to a fresh disk read.
+                    let resident = cache.get(&key, n * live).filter(|b| {
+                        if !crate::storage::fault::integrity_enabled() || b.integrity_ok() {
+                            true
+                        } else {
+                            cache.invalidate(&key);
+                            crate::storage::fault::note_read_retry();
+                            false
+                        }
+                    });
+                    if let Some(block) = resident {
                         let took = t0.elapsed();
                         metrics.add(Phase::CacheHit, took);
                         crate::telemetry::span(
@@ -328,6 +398,11 @@ pub(super) fn run_segment(
                 block
             }
         };
+        // Integrity gate at the submit boundary: both a cache hit and a
+        // fresh read re-verify here, so corruption anywhere between the
+        // disk and this point is caught before any lane computes on it.
+        let block =
+            verify_or_reread(n, reader, slabs, cache, cache_dataset, block, col0, live_total)?;
         let chunks = live_total.div_ceil(mb_gpu);
 
         // Split-send views to the lanes (cu_send; a Full bounce is the
@@ -346,7 +421,21 @@ pub(super) fn run_segment(
                     Err(TrySendError::Full(bounced)) => {
                         item = bounced;
                         let t0 = Instant::now();
-                        let out = lanes[gi].rx_out.recv().map_err(|_| lane_died(gi))?;
+                        // Wait in watchdog-sized slices instead of a
+                        // bare recv(): a wedged lane would otherwise
+                        // park the coordinator here forever.
+                        let out = loop {
+                            match lanes[gi].rx_out.recv_timeout(Duration::from_millis(20)) {
+                                Ok(out) => break out,
+                                Err(RecvTimeoutError::Timeout) => {
+                                    let wd = crate::storage::fault::policy().lane_watchdog_ms;
+                                    if wd > 0 && t0.elapsed() >= Duration::from_millis(wd) {
+                                        return Err(lane_wedged(gi, st.outstanding[gi], wd));
+                                    }
+                                }
+                                Err(RecvTimeoutError::Disconnected) => return Err(lane_died(gi)),
+                            }
+                        };
                         let waited = t0.elapsed();
                         metrics.add(Phase::RecvWait, waited);
                         crate::telemetry::span(
@@ -381,7 +470,10 @@ pub(super) fn run_segment(
 
     // ---- drain ----------------------------------------------------------
     // The lanes stay alive (they are the engine's, not the segment's):
-    // collect exactly the chunks each lane still owes us.
+    // collect exactly the chunks each lane still owes us. The watchdog
+    // rides the existing 20ms poll: a lane owing chunks that produces
+    // nothing for the whole window is declared wedged (recoverable).
+    let mut last_progress = Instant::now();
     while st.retired < njobs {
         let Some(gi) = (0..ngpus).find(|&gi| st.outstanding[gi] > 0) else {
             return Err(Error::Pipeline(format!(
@@ -403,8 +495,14 @@ pub(super) fn run_segment(
                     &[("lane", gi as u64)],
                 );
                 process_out(&mut ctx, out, &mut st, metrics, device_secs)?;
+                last_progress = Instant::now();
             }
-            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Timeout) => {
+                let wd = crate::storage::fault::policy().lane_watchdog_ms;
+                if wd > 0 && last_progress.elapsed() >= Duration::from_millis(wd) {
+                    return Err(lane_wedged(gi, st.outstanding[gi], wd));
+                }
+            }
             Err(RecvTimeoutError::Disconnected) => return Err(lane_died(gi)),
         }
     }

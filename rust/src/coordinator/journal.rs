@@ -121,10 +121,25 @@ impl Journal {
         rec[..8].copy_from_slice(&col0.to_le_bytes());
         rec[8..].copy_from_slice(&ncols.to_le_bytes());
         self.file.seek(SeekFrom::End(0)).map_err(|e| Error::io("seeking journal", e))?;
+        // Chaos harness: a "torn append" writes a prefix of the record,
+        // makes it durable, and reports the crash — exactly the on-disk
+        // state a power loss mid-append leaves behind. `open_resume`
+        // must truncate it away.
+        if let Some(k) = crate::storage::fault::torn_append(RECORD_BYTES) {
+            self.file.write_all(&rec[..k]).map_err(|e| Error::io("appending journal", e))?;
+            let _ = self.file.sync_data();
+            return Err(Error::io(
+                "journal append torn mid-record (injected crash)",
+                std::io::Error::new(std::io::ErrorKind::WriteZero, "partial record"),
+            ));
+        }
         self.file.write_all(&rec).map_err(|e| Error::io("appending progress journal", e))
     }
 
-    /// Flush appended records to stable storage.
+    /// Flush appended records to stable storage — `fdatasync` on the
+    /// journal *file*, not just the writer's buffer, so a journaled
+    /// range survives power loss. The coordinator calls this at every
+    /// segment boundary, right after the data file's own sync.
     pub fn sync(&self) -> Result<()> {
         self.file.sync_data().map_err(|e| Error::io("syncing progress journal", e))
     }

@@ -244,6 +244,15 @@ fn lane_main(
     // (the zero-copy plane's fixed-pool discipline, lane-side).
     let mut staging: Vec<f64> = Vec::new();
     while let Ok(DevIn { block, view, live }) = rx.recv() {
+        // Chaos harness: a wedged lane releases its view, sleeps through
+        // the coordinator's watchdog window, and never reports the chunk
+        // — the stuck-device failure the supervision path must recover
+        // from (one relaxed load when faults are off).
+        if let Some(nap) = crate::storage::fault::lane_wedge(lane) {
+            drop(view);
+            std::thread::sleep(nap);
+            continue;
+        }
         let t0 = Instant::now();
         let (outs, staged_copy_bytes) = match &backend {
             Backend::Pjrt { entry } => {

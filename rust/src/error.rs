@@ -22,8 +22,13 @@ pub enum Error {
     Numerical(String),
     /// PJRT / XLA runtime failure.
     Runtime(String),
-    /// Pipeline-level failure (lane died, channel closed, drain mismatch).
+    /// Pipeline-level failure (channel closed, drain mismatch).
     Pipeline(String),
+    /// A device lane died or wedged mid-stream. Kept distinct from
+    /// [`Error::Pipeline`] because it is *recoverable*: the engine
+    /// supervisor responds by respawning the lanes and replaying the
+    /// segment instead of failing the job.
+    LaneFault { lane: usize, msg: String },
     /// Shape/dimension mismatch between operands.
     Shape(String),
 }
@@ -54,6 +59,7 @@ impl fmt::Display for Error {
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::LaneFault { lane, msg } => write!(f, "lane {lane} fault: {msg}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
         }
     }

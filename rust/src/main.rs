@@ -302,6 +302,9 @@ const RUN_FLAGS: &[Flag] = &[
     Flag::opt("adapt-every", "16", "blocks per adaptive segment"),
     Flag::opt("trace-out", "", "write a Chrome/Perfetto trace JSON here"),
     Flag::opt("report-json", "", "write the job report as JSON here"),
+    Flag::opt("read-retries", "3", "extra read attempts on transient I/O errors"),
+    Flag::opt("lane-watchdog-ms", "0", "declare a stalled device lane wedged after this (0 = off)"),
+    Flag::switch("integrity", "checksum blocks at read time, verify on cache hit and submit"),
     Flag::switch("adapt", "re-plan block size live from the stall profile (native)"),
     Flag::switch("resume", "skip column ranges journaled in r.progress (crash recovery)"),
     Flag::switch("verify", "check r.xrd against the in-core oracle (small studies)"),
@@ -337,6 +340,15 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     }
     let a = Args::parse(argv, RUN_FLAGS)?;
     apply_telemetry_flags(&a);
+    // Fault-tolerance policy: retried reads, the lane watchdog, and
+    // optional block integrity checking (`serve` reads the same knobs
+    // from the `[fault_tolerance]` config section instead).
+    cugwas::storage::fault::set_policy(cugwas::storage::fault::RetryPolicy {
+        read_retries: a.usize("read-retries")? as u32,
+        lane_watchdog_ms: a.usize("lane-watchdog-ms")? as u64,
+        ..Default::default()
+    });
+    cugwas::storage::fault::set_integrity_enabled(a.switch("integrity"));
     let mut cfg = PipelineConfig {
         dataset: PathBuf::from(a.str("dataset")),
         block: a.usize("block")?,
@@ -450,6 +462,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if !a.str("metrics-addr").is_empty() {
         cfg.metrics_addr = Some(a.str("metrics-addr").to_string());
     }
+    // Install the `[fault_tolerance]` section process-wide: retry
+    // policy, integrity checking, and (chaos testing only) the armed
+    // fault injector.
+    cfg.fault.install();
     // The endpoint outlives serve(): scrapes during AND after the run
     // (final gauge/counter state) both work; Drop stops the listener.
     let _metrics_server = match &cfg.metrics_addr {

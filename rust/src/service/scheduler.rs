@@ -40,6 +40,7 @@ use crate::coordinator::{Engine, PipelineConfig};
 use crate::error::{Error, Result};
 use crate::service::queue::{Job, JobQueue, JobSpec, JobState};
 use crate::service::report::{JobReport, ServiceReport};
+use crate::storage::fault;
 use crate::storage::{dataset, BlockCache};
 use crate::tune::{self, PlanOpts, ProbeOpts, TunedProfile};
 use std::collections::{HashMap, HashSet};
@@ -183,19 +184,32 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     // vanish when the job's ledger entry is released) until the lane is
     // reused — or evicted, when queued work cannot otherwise fit.
     let mut warm: Vec<Option<(PathBuf, u64)>> = vec![None; cfg.workers];
+    // Graceful-degradation state: per-job retry counts, per-dataset
+    // backoff deadlines (a re-queued job is not re-admitted until its
+    // dataset cools down), and per-dataset consecutive-failure streaks
+    // feeding the quarantine gate.
+    let mut attempts: HashMap<u64, u32> = HashMap::new();
+    let mut cooling: HashMap<PathBuf, Instant> = HashMap::new();
+    let mut fail_streak: HashMap<PathBuf, u32> = HashMap::new();
     loop {
         // Hand admissible jobs to idle lanes.
         while lanes.iter().any(|l| !l.busy) {
+            // Backoff: a dataset cooling down after a failure counts as
+            // busy for admission (and for the eviction probe below).
+            let now = Instant::now();
+            cooling.retain(|_, until| *until > now);
+            let mut blocked = busy_datasets.clone();
+            blocked.extend(cooling.keys().cloned());
             let reserved: u64 = warm.iter().flatten().map(|(_, b)| *b).sum();
             let budget_left =
                 cfg.mem_budget_bytes.saturating_sub(mem_in_use).saturating_sub(reserved);
-            let Some(job) = queue.admit_next(budget_left, &busy_datasets) else {
+            let Some(job) = queue.admit_next(budget_left, &blocked) else {
                 // Nothing fits. Evict idle warm engines only when their
                 // reserved bytes are what actually blocks admission —
                 // queued work beats a warm cache, but an engine must
                 // not be churned over a dataset lock.
                 let unblocks = reserved > 0
-                    && queue.would_admit(budget_left + reserved, &busy_datasets);
+                    && queue.would_admit(budget_left + reserved, &blocked);
                 let mut evicted = false;
                 if unblocks {
                     for (wi, lane) in lanes.iter().enumerate() {
@@ -214,6 +228,25 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 }
                 break;
             };
+            // Quarantine gate: a dataset that has failed this many jobs
+            // in a row is presumed broken (bad sectors, truncated file);
+            // burning a worker lane and the retry budget on every
+            // subsequent job just delays the rest of the queue.
+            let streak = fail_streak.get(&job.dataset_key).copied().unwrap_or(0);
+            if streak >= fault::policy().quarantine_after {
+                queue.set_state(job.id, JobState::Failed);
+                note_job_failed();
+                reports.push(JobReport::failed(
+                    job.spec.name.clone(),
+                    job.spec.dataset.clone(),
+                    job.spec.priority,
+                    format!(
+                        "dataset quarantined after {streak} consecutive job failures — \
+                         resolve the underlying fault and resubmit"
+                    ),
+                ));
+                continue;
+            }
             // Prefer the idle lane already warm on this job's dataset
             // (the reuse the engine refactor pays for), else any idle.
             let matching = (0..lanes.len()).filter(|&wi| !lanes[wi].busy).find(|&wi| {
@@ -284,9 +317,6 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                         &[("id", job.id as u64), ("ok", u64::from(report.ok()))],
                     );
                 }
-                if !report.ok() {
-                    note_job_failed();
-                }
                 mem_in_use -= job.est_bytes;
                 // A successful run leaves the engine warm on this lane;
                 // its footprint stays charged until reuse or eviction.
@@ -294,11 +324,46 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 warm[wi] = report.ok().then(|| (job.dataset_key.clone(), job.est_bytes));
                 busy_datasets.remove(&job.dataset_key);
                 lanes[wi].busy = false;
-                queue.set_state(
-                    job.id,
-                    if report.ok() { JobState::Done } else { JobState::Failed },
-                );
-                reports.push(report);
+                if report.ok() {
+                    attempts.remove(&job.id);
+                    cooling.remove(&job.dataset_key);
+                    fail_streak.remove(&job.dataset_key);
+                    queue.set_state(job.id, JobState::Done);
+                    reports.push(report);
+                } else {
+                    // Graceful degradation: a failed run re-enters the
+                    // queue (bounded, with per-dataset backoff) before
+                    // its failure is final — a transient fault costs a
+                    // retry, not the job.
+                    let tried = attempts.entry(job.id).or_insert(0);
+                    *tried += 1;
+                    let pol = fault::policy();
+                    if *tried <= pol.job_retries {
+                        let delay = Duration::from_millis(
+                            pol.job_backoff_ms.saturating_mul(1u64 << (*tried - 1).min(10)),
+                        );
+                        crate::log_warn!(
+                            "service",
+                            "job '{}' failed ({}); re-queueing attempt {}/{} after {:.0?}",
+                            job.spec.name,
+                            report.error.as_deref().unwrap_or("unknown error"),
+                            *tried,
+                            pol.job_retries,
+                            delay
+                        );
+                        cooling.insert(job.dataset_key.clone(), Instant::now() + delay);
+                        fault::note_job_retry();
+                        queue.set_state(job.id, JobState::Queued);
+                        // The report is not recorded: one report per
+                        // job, and this one's story isn't over.
+                    } else {
+                        attempts.remove(&job.id);
+                        *fail_streak.entry(job.dataset_key.clone()).or_insert(0) += 1;
+                        note_job_failed();
+                        queue.set_state(job.id, JobState::Failed);
+                        reports.push(report);
+                    }
+                }
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
@@ -517,10 +582,13 @@ fn scan_spool(
             Err(e) => {
                 let mtime = std::fs::metadata(&path).and_then(|m| m.modified()).ok();
                 match (state.pending_bad.get(&path), mtime) {
-                    // Unchanged since the last failing scan → genuinely bad.
+                    // Unchanged since the last failing scan → genuinely
+                    // bad: report it AND move it out of the inbox so it
+                    // is never re-scanned (or silently retried forever).
                     (Some(prev), Some(now)) if *prev == now => {
                         state.seen.insert(path.clone());
                         state.pending_bad.remove(&path);
+                        quarantine_spool_file(dir, &path, &e.to_string());
                         note_job_failed();
                         reports.push(JobReport::failed(
                             name,
@@ -549,6 +617,35 @@ fn scan_spool(
             }
         }
     }
+}
+
+/// Move a confirmed-bad spool file to `<spool>/quarantine/` with a
+/// `<name>.reason` sidecar explaining why, so the operator's inbox
+/// holds only live work and the diagnosis travels with the file. A
+/// failed move only loses the tidying (the file stays in `seen`, so it
+/// is not retried either way).
+fn quarantine_spool_file(spool: &Path, path: &Path, reason: &str) {
+    let qdir = spool.join("quarantine");
+    if let Err(e) = std::fs::create_dir_all(&qdir) {
+        crate::log_warn!("service", "cannot create {}: {e}", qdir.display());
+        return;
+    }
+    let Some(file_name) = path.file_name() else { return };
+    let dest = qdir.join(file_name);
+    if let Err(e) = std::fs::rename(path, &dest) {
+        crate::log_warn!(
+            "service",
+            "cannot quarantine {}: {e} (leaving it in place)",
+            path.display()
+        );
+        return;
+    }
+    let mut sidecar = dest.clone().into_os_string();
+    sidecar.push(".reason");
+    if let Err(e) = std::fs::write(&sidecar, format!("{reason}\n")) {
+        crate::log_warn!("service", "cannot write quarantine reason: {e}");
+    }
+    crate::log_warn!("service", "quarantined bad spool job file: {}", dest.display());
 }
 
 /// Stream one job through the unified engine on this worker lane.
@@ -636,6 +733,7 @@ mod tests {
             auto_tune: false,
             metrics_addr: None,
             jobs,
+            fault: Default::default(),
         }
     }
 
@@ -712,8 +810,49 @@ mod tests {
         assert_eq!(rep.jobs.len(), 2, "{}", rep.render());
         assert!(rep.jobs.iter().any(|j| j.name == "late" && j.ok()));
         assert!(rep.jobs.iter().any(|j| j.name == "broken" && !j.ok()));
+        // The confirmed-bad file moved out of the inbox, with its
+        // diagnosis in a sidecar.
+        assert!(!spool.join("broken.toml").exists(), "bad file must leave the inbox");
+        assert!(spool.join("quarantine/broken.toml").exists());
+        let reason =
+            std::fs::read_to_string(spool.join("quarantine/broken.toml.reason")).unwrap();
+        assert!(reason.contains("missing dataset"), "{reason}");
+        // Good files and strangers stay where the operator put them.
+        assert!(spool.join("late.toml").exists());
+        assert!(spool.join("notes.txt").exists());
         std::fs::remove_dir_all(&d).unwrap();
         std::fs::remove_dir_all(&spool).unwrap();
+    }
+
+    #[test]
+    fn failing_jobs_retry_then_quarantine_the_dataset() {
+        // Default policy: one retry per job, quarantine after three
+        // consecutive final failures on a dataset. Four jobs on a
+        // dataset whose data file vanished: the first three each run
+        // twice (retry) and fail for real; the fourth never reaches a
+        // worker lane — the quarantine gate fails it at admission.
+        let d = tmpdir("quarantine");
+        generate(&d, Dims::new(24, 2, 32).unwrap(), 8, 5).unwrap();
+        // Break the dataset *after* generation: the metadata stays
+        // readable (admission estimates still work), streaming fails.
+        std::fs::remove_file(dataset::DatasetPaths::new(&d).xr()).unwrap();
+        let jobs = (0..4)
+            .map(|i| {
+                let mut j = JobSpec::new(format!("j{i}"), &d);
+                j.block = 8;
+                j
+            })
+            .collect();
+        let rep = serve(&small_cfg(jobs, 1, 0)).unwrap();
+        assert_eq!(rep.jobs.len(), 4, "{}", rep.render());
+        assert_eq!(rep.failed(), 4, "{}", rep.render());
+        let quarantined: Vec<_> = rep
+            .jobs
+            .iter()
+            .filter(|j| j.error.as_deref().is_some_and(|e| e.contains("quarantined")))
+            .collect();
+        assert_eq!(quarantined.len(), 1, "{}", rep.render());
+        std::fs::remove_dir_all(&d).unwrap();
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! pattern of the paper (`b+2` read while `b` computes) predictable.
 
 use crate::error::{Error, Result};
+use crate::storage::fault;
 use crate::storage::slab::BlockMut;
 use crate::storage::xrd::XrdFile;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,29 +30,33 @@ use std::time::{Duration, Instant};
 /// A submitted I/O operation; `wait()` yields the buffer back.
 pub struct AioHandle {
     rx: Receiver<(Vec<f64>, Result<()>)>,
-    /// Element count of the submitted buffer. If the engine dies before
-    /// completing, the original buffer is lost inside the dead thread —
-    /// a replacement of this size keeps the caller's pool invariant
-    /// (fixed buffer count, fixed capacity) intact through the error.
-    capacity: usize,
+}
+
+/// Engine death loses the request's buffer inside the dead thread.
+/// Deliberately NOT replaced with a zeroed buffer of the right size:
+/// that is exactly the kind of silently-plausible data a caller might
+/// compute on. An empty buffer plus a hard `Error::Io` forces every
+/// caller to notice (pools are rebuilt on teardown, so the lost
+/// capacity never leaks into a healthy pipeline).
+fn lost() -> (Vec<f64>, Result<()>) {
+    (
+        Vec::new(),
+        Err(Error::io(
+            "aio engine died before completing request",
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, "completion channel closed"),
+        )),
+    )
 }
 
 impl AioHandle {
-    /// Replacement buffer for a request lost inside a dead engine.
-    fn lost(&self) -> (Vec<f64>, Result<()>) {
-        (
-            vec![0.0; self.capacity],
-            Err(Error::Pipeline("aio engine died before completing request".into())),
-        )
-    }
-
-    /// Block until the operation completes. Returns the buffer (always —
-    /// also on error or engine death, so callers can keep their pool
-    /// intact) plus status.
+    /// Block until the operation completes. On success or an ordinary
+    /// I/O error the submitted buffer comes back (so callers keep their
+    /// pool intact); on engine death the buffer is gone and the status
+    /// is `Err(Error::Io)` — never a zeroed stand-in.
     pub fn wait(self) -> (Vec<f64>, Result<()>) {
         match self.rx.recv() {
             Ok(pair) => pair,
-            Err(_) => self.lost(),
+            Err(_) => lost(),
         }
     }
 
@@ -61,7 +66,7 @@ impl AioHandle {
         match self.rx.try_recv() {
             Ok(pair) => Ok(pair),
             Err(std::sync::mpsc::TryRecvError::Empty) => Err(self),
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => Ok(self.lost()),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Ok(lost()),
         }
     }
 }
@@ -82,11 +87,54 @@ impl SlabHandle {
     pub fn wait(self) -> (Option<BlockMut>, Result<()>) {
         match self.rx.recv() {
             Ok((buf, res)) => (Some(buf), res),
-            Err(_) => {
-                (None, Err(Error::Pipeline("aio engine died before completing request".into())))
-            }
+            Err(_) => (None, lost().1),
         }
     }
+}
+
+/// Run one positioned read through the fault hook and the policy's
+/// bounded retry loop: first failure consults [`fault::policy`], then up
+/// to `read_retries` re-attempts with exponential backoff under a total
+/// deadline. Positioned reads are idempotent, so re-attempting is always
+/// safe. The final failure names the column range and attempt count —
+/// the error a permanently bad region surfaces to the caller.
+fn read_with_retry(col0: u64, ncols: u64, mut op: impl FnMut() -> Result<()>) -> Result<()> {
+    let mut attempt = |c0: u64, nc: u64| -> Result<()> {
+        fault::before_read_attempt(c0, nc).map_err(|e| Error::io("injected fault", e))?;
+        op()
+    };
+    let mut res = attempt(col0, ncols);
+    if res.is_ok() {
+        return res;
+    }
+    // Only now (a read already failed — off the fast path) is the
+    // policy consulted.
+    let pol = fault::policy();
+    let deadline = Instant::now() + Duration::from_millis(pol.retry_deadline_ms);
+    let mut attempts = 1u32;
+    while attempts <= pol.read_retries {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        std::thread::sleep(pol.backoff(attempts).min(deadline - now));
+        fault::note_read_retry();
+        attempts += 1;
+        res = attempt(col0, ncols);
+        if res.is_ok() {
+            return res;
+        }
+    }
+    res.map_err(|e| match e {
+        Error::Io { context, source } => Error::Io {
+            context: format!(
+                "read of cols {col0}..{} failed after {attempts} attempt(s): {context}",
+                col0 + ncols
+            ),
+            source,
+        },
+        other => other,
+    })
 }
 
 enum Req {
@@ -187,7 +235,10 @@ impl AioEngine {
                     match req {
                         Req::Read { block, mut buf, done } => {
                             let t0 = Instant::now();
-                            let res = file.read_block_into(block, &mut buf);
+                            let h = *file.header();
+                            let res = read_with_retry(block * h.block_cols, h.block_cols, || {
+                                file.read_block_into(block, &mut buf)
+                            });
                             let took = traced("read", "block", block, t0);
                             cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
@@ -201,14 +252,28 @@ impl AioEngine {
                         }
                         Req::ReadCols { col0, ncols, mut buf, done } => {
                             let t0 = Instant::now();
-                            let res = file.read_cols_into(col0, ncols, &mut buf);
+                            let res = read_with_retry(col0, ncols, || {
+                                file.read_cols_into(col0, ncols, &mut buf)
+                            });
                             let took = traced("read", "col0", col0, t0);
                             cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
                         }
                         Req::ReadColsSlab { col0, ncols, mut buf, done } => {
                             let t0 = Instant::now();
-                            let res = file.read_cols_into(col0, ncols, buf.as_mut_slice());
+                            let res = read_with_retry(col0, ncols, || {
+                                file.read_cols_into(col0, ncols, buf.as_mut_slice())
+                            });
+                            if res.is_ok() {
+                                // Checksum what the disk delivered; the
+                                // corruption hook fires *after* so rot
+                                // between here and the consumer is what
+                                // the verify points catch.
+                                if fault::integrity_enabled() {
+                                    buf.set_checksum(fault::checksum(buf.as_mut_slice()));
+                                }
+                                fault::corrupt_payload(buf.as_mut_slice());
+                            }
                             let took = traced("read", "col0", col0, t0);
                             cells.record(buf.len() as u64 * elem_bytes, took);
                             let _ = done.send((buf, res));
@@ -251,17 +316,15 @@ impl AioEngine {
     /// `aio_read`: fill `buf` from block `b` asynchronously.
     pub fn read(&self, block: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
-        let capacity = buf.len();
         self.submit(Req::Read { block, buf, done });
-        AioHandle { rx, capacity }
+        AioHandle { rx }
     }
 
     /// `aio_write`: write `buf` to block `b` asynchronously.
     pub fn write(&self, block: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
-        let capacity = buf.len();
         self.submit(Req::Write { block, buf, done });
-        AioHandle { rx, capacity }
+        AioHandle { rx }
     }
 
     /// `aio_read` of a column range straight into an aligned slab. The
@@ -277,24 +340,22 @@ impl AioEngine {
     /// `aio_read` of an arbitrary column range (block-size-agnostic).
     pub fn read_cols(&self, col0: u64, ncols: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
-        let capacity = buf.len();
         self.submit(Req::ReadCols { col0, ncols, buf, done });
-        AioHandle { rx, capacity }
+        AioHandle { rx }
     }
 
     /// `aio_write` of an arbitrary column range.
     pub fn write_cols(&self, col0: u64, ncols: u64, buf: Vec<f64>) -> AioHandle {
         let (done, rx) = channel();
-        let capacity = buf.len();
         self.submit(Req::WriteCols { col0, ncols, buf, done });
-        AioHandle { rx, capacity }
+        AioHandle { rx }
     }
 
     /// Queue a data sync behind all submitted operations.
     pub fn sync(&self) -> AioHandle {
         let (done, rx) = channel();
         self.submit(Req::Sync { done });
-        AioHandle { rx, capacity: 0 }
+        AioHandle { rx }
     }
 }
 
@@ -454,24 +515,58 @@ mod tests {
     }
 
     #[test]
-    fn dead_engine_returns_correctly_sized_buffer() {
+    fn dead_engine_surfaces_io_error_not_zeroed_buffer() {
         // Simulate engine death with a request in flight: the completion
         // sender is gone without ever delivering. The caller must get a
-        // buffer of the submitted size back, not an empty Vec — otherwise
-        // the pool would silently shrink its capacity on error.
+        // hard Error::Io and an EMPTY buffer — a correctly-sized zeroed
+        // replacement would be silently computable-on, which is exactly
+        // the corruption this path used to cause.
         let (tx, rx) = channel::<(Vec<f64>, Result<()>)>();
         drop(tx);
-        let h = AioHandle { rx, capacity: 24 };
+        let h = AioHandle { rx };
         let (buf, res) = h.wait();
-        assert!(res.is_err());
-        assert_eq!(buf.len(), 24);
+        assert!(buf.is_empty(), "no plausible stand-in buffer on engine death");
+        match res {
+            Err(Error::Io { context, source }) => {
+                assert!(context.contains("engine died"), "{context}");
+                assert_eq!(source.kind(), std::io::ErrorKind::BrokenPipe);
+            }
+            other => panic!("expected Error::Io, got {other:?}"),
+        }
 
         let (tx, rx) = channel::<(Vec<f64>, Result<()>)>();
         drop(tx);
-        let h = AioHandle { rx, capacity: 7 };
+        let h = AioHandle { rx };
         let (buf, res) = h.try_wait().expect("disconnected resolves immediately");
-        assert!(res.is_err());
-        assert_eq!(buf.len(), 7);
+        assert!(buf.is_empty());
+        assert!(matches!(res, Err(Error::Io { .. })), "{res:?}");
+    }
+
+    #[test]
+    fn read_retry_recovers_transients_and_names_the_range_on_permanents() {
+        // Transient: fails twice, succeeds on the third attempt (within
+        // the default policy's retry budget).
+        let mut calls = 0;
+        read_with_retry(0, 4, || {
+            calls += 1;
+            if calls < 3 {
+                Err(Error::io("flaky", std::io::Error::other("transient")))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap();
+        assert_eq!(calls, 3);
+        // Permanent: retries exhaust and the final error names the
+        // column range and attempt count.
+        let err = read_with_retry(10, 4, || {
+            Err(Error::io("bad sector", std::io::Error::other("medium error")))
+        })
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("cols 10..14"), "{msg}");
+        assert!(msg.contains("attempt"), "{msg}");
+        assert!(msg.contains("bad sector"), "{msg}");
     }
 
     #[test]

@@ -250,6 +250,23 @@ impl BlockCache {
         inner.insert_node(key, block.clone());
     }
 
+    /// Drop `key`'s entry, if resident. The fault-tolerance path calls
+    /// this when a resident block fails integrity verification — the
+    /// corrupt handle must not be served to the next probe. Returns
+    /// whether an entry was removed. Handles already held elsewhere stay
+    /// valid (refcounted), they are just no longer reachable here.
+    pub fn invalidate(&self, key: &BlockKey) -> bool {
+        let mut guard = self.inner.lock().expect("cache lock poisoned");
+        let inner = &mut *guard;
+        match inner.map.get(key).copied() {
+            Some(i) => {
+                inner.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
     pub fn stats(&self) -> CacheStats {
         let g = self.inner.lock().expect("cache lock poisoned");
         CacheStats {
@@ -411,6 +428,20 @@ mod tests {
         c.insert(key("a", 0), &block(&pool, 4, 1.0));
         assert!(c.get(&key("a", 0), 3).is_none());
         assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn invalidate_removes_the_entry_but_not_held_handles() {
+        let pool = SlabPool::new(2, 4);
+        let c = BlockCache::new(1 << 10);
+        c.insert(key("a", 0), &block(&pool, 4, 9.0));
+        let held = c.get(&key("a", 0), 4).expect("hit");
+        assert!(c.invalidate(&key("a", 0)), "entry was resident");
+        assert!(!c.invalidate(&key("a", 0)), "second invalidate is a no-op");
+        assert!(c.get(&key("a", 0), 4).is_none(), "no longer served");
+        assert_eq!(c.stats().entries, 0);
+        assert_eq!(c.stats().bytes, 0, "ledger released the pinned bytes");
+        assert_eq!(held.as_slice(), &[9.0; 4][..], "held handle survives");
     }
 
     #[test]

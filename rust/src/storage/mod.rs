@@ -1,12 +1,15 @@
 //! Storage layer: the XRD on-disk block format, dataset directories, the
 //! synchronous positioned-I/O core, the asynchronous engine providing
 //! the paper's `aio_read` / `aio_wait` / `aio_write` primitives, the
-//! refcounted slab plane that lets blocks flow by reference, and the
-//! shared block cache that amortizes disk reads across studies.
+//! refcounted slab plane that lets blocks flow by reference, the
+//! shared block cache that amortizes disk reads across studies, and the
+//! fault plane (injection, retry policy, block checksums) that keeps
+//! long streams alive through transient device errors.
 
 pub mod aio;
 pub mod cache;
 pub mod dataset;
+pub mod fault;
 pub mod format;
 pub mod slab;
 pub mod xrd;
@@ -16,6 +19,7 @@ pub use aio::{
     SlabHandle,
 };
 pub use cache::{BlockCache, BlockKey, CacheStats};
+pub use fault::{FaultCounters, FaultPlan, RetryPolicy};
 pub use slab::{Block, BlockMut, BlockSlice, SlabPool, SlabStats};
 pub use dataset::{
     generate, generate_with_dtype, load_meta, load_sidecars, load_xr_incore, DatasetPaths, Meta,

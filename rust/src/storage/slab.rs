@@ -171,7 +171,11 @@ impl SlabPool {
                 Slab::new(self.shared.cap_elems)
             }
         };
-        let rec = Recycler { slab: Some(slab), pool: Arc::downgrade(&self.shared) };
+        let rec = Recycler {
+            slab: Some(slab),
+            pool: Arc::downgrade(&self.shared),
+            checksum: AtomicU64::new(0),
+        };
         Ok(BlockMut { rec, len })
     }
 
@@ -196,6 +200,12 @@ struct Recycler {
     /// Weak: blocks may outlive their engine's pool (the shared cache
     /// does this by design); the orphaned slab is then simply freed.
     pool: Weak<PoolShared>,
+    /// Integrity checksum of the payload, recorded at read time by the
+    /// aio engine ([`crate::storage::fault::checksum`]); 0 = absent.
+    /// Lives on the recycler so every clone of a published block — the
+    /// cache entry, the lane views — shares the one value, and a fresh
+    /// `take()` starts clean.
+    checksum: AtomicU64,
 }
 
 impl Drop for Recycler {
@@ -231,6 +241,12 @@ impl BlockMut {
 
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         self.rec.slab.as_mut().expect("slab present until drop").slice_mut(self.len)
+    }
+
+    /// Record the payload's integrity checksum (the aio engine calls
+    /// this right after the disk bytes land; 0 means "absent").
+    pub fn set_checksum(&self, ck: u64) {
+        self.rec.checksum.store(ck, Ordering::Release);
     }
 
     /// Freeze the slab: from here on only shared `&[f64]` access exists.
@@ -286,6 +302,21 @@ impl Block {
             self.len
         );
         BlockSlice { block: self.clone(), off, len }
+    }
+
+    /// The checksum recorded at read time (0 = none was recorded, e.g.
+    /// integrity checking was off or the block never came from disk).
+    pub fn checksum(&self) -> u64 {
+        self.rec.checksum.load(Ordering::Acquire)
+    }
+
+    /// Re-verify the payload against its read-time checksum: false only
+    /// when a checksum exists and no longer matches the bytes — the
+    /// "corruption detected, re-read it" signal. Blocks without a
+    /// recorded checksum verify trivially.
+    pub fn integrity_ok(&self) -> bool {
+        let want = self.checksum();
+        want == 0 || crate::storage::fault::checksum(self.as_slice()) == want
     }
 
     /// Reclaim exclusive (mutable) access — succeeds only when this is
@@ -423,6 +454,34 @@ mod tests {
         assert!(pool.take(9).is_err());
         assert!(pool.take(0).is_err());
         assert!(pool.take(8).is_ok());
+    }
+
+    #[test]
+    fn checksum_travels_with_the_block_and_detects_corruption() {
+        let pool = SlabPool::new(1, 16);
+        let mut bm = pool.take(16).unwrap();
+        bm.as_mut_slice().fill(2.5);
+        // No checksum recorded → verifies trivially (integrity off).
+        let block = bm.publish();
+        assert_eq!(block.checksum(), 0);
+        assert!(block.integrity_ok());
+        // Record one, corrupt the payload through unpublish, re-verify.
+        let mut bm = block.try_unpublish().unwrap();
+        let ck = crate::storage::fault::checksum(bm.as_slice());
+        bm.set_checksum(ck);
+        let block = bm.publish();
+        let clone = block.clone(); // the "cache entry"
+        assert_eq!(clone.checksum(), ck, "clones share the recorded checksum");
+        assert!(block.integrity_ok() && clone.integrity_ok());
+        drop(block);
+        let mut bm = clone.try_unpublish().unwrap();
+        bm.as_mut_slice()[7] = f64::from_bits(bm.as_slice()[7].to_bits() ^ 1);
+        let block = bm.publish();
+        assert!(!block.integrity_ok(), "flipped bit must fail verification");
+        // A fresh take() of the recycled slab starts without a checksum.
+        drop(block);
+        let fresh = pool.take(16).unwrap().publish();
+        assert_eq!(fresh.checksum(), 0);
     }
 
     #[test]

@@ -157,6 +157,10 @@ pub struct Registry {
     pub slab_dropped_total: CounterCell,
     pub slab_free: GaugeCell,
     pub slab_target: GaugeCell,
+    pub faults_injected_total: CounterCell,
+    pub read_retries_total: CounterCell,
+    pub lane_respawns_total: CounterCell,
+    pub job_retries_total: CounterCell,
     stall_total: [CounterCell; StallKind::ALL.len()],
     pub stall_share: GaugeCell,
     lane_outstanding: [GaugeCell; MAX_LANES],
@@ -198,6 +202,10 @@ impl Registry {
             slab_dropped_total: CounterCell::default(),
             slab_free: GaugeCell::default(),
             slab_target: GaugeCell::default(),
+            faults_injected_total: CounterCell::default(),
+            read_retries_total: CounterCell::default(),
+            lane_respawns_total: CounterCell::default(),
+            job_retries_total: CounterCell::default(),
             stall_total: std::array::from_fn(|_| CounterCell::default()),
             stall_share: GaugeCell::default(),
             lane_outstanding: std::array::from_fn(|_| GaugeCell::default()),
@@ -424,6 +432,31 @@ impl Registry {
             self.slab_target.get(),
         );
 
+        counter(
+            &mut o,
+            "cugwas_faults_injected_total",
+            "Faults the chaos injector fired (read faults, corruption, torn appends, wedges).",
+            self.faults_injected_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_read_retries_total",
+            "Block reads retried after a transient failure or integrity mismatch.",
+            self.read_retries_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_lane_respawns_total",
+            "Device-lane sets respawned after a lane died or wedged mid-stream.",
+            self.lane_respawns_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_job_retries_total",
+            "Failed jobs re-queued by the scheduler's degradation policy.",
+            self.job_retries_total.get(),
+        );
+
         head(
             &mut o,
             "cugwas_stall_segments_total",
@@ -517,6 +550,10 @@ mod tests {
             "cugwas_stall_segments_total{verdict=\"read_bound\"} 1",
             "cugwas_lane_outstanding{lane=\"1\"} 2",
             "cugwas_bytes_copied_total 0",
+            "# TYPE cugwas_faults_injected_total counter",
+            "cugwas_read_retries_total 0",
+            "cugwas_lane_respawns_total 0",
+            "cugwas_job_retries_total 0",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

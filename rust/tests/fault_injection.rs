@@ -1,0 +1,177 @@
+//! Chaos matrix for the fault-tolerant streaming plane.
+//!
+//! The injector, policy and integrity switches are process-global, so
+//! this suite lives in its own test binary and every scenario runs
+//! under one lock: arm → stream → assert → disarm. The acceptance bar
+//! (ISSUE 7): with seeded transient read faults, payload corruption and
+//! a wedged device lane, a full run must complete with `r.xrd`
+//! *byte-identical* to the fault-free baseline and nonzero recovery
+//! counters; a permanent fault must fail with an error naming the
+//! column range; a torn journal append must truncate cleanly and
+//! resume must replay exactly the uncovered columns.
+
+use cugwas::coordinator::PipelineConfig;
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::fault::{self, FaultPlan, RetryPolicy};
+use cugwas::storage::{generate, BlockCache};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// One scenario at a time: the injector state is process-global.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_chaos_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A small study: 8 windows of 64 columns — enough chunks to wedge a
+/// lane mid-stream and still finish in well under a second.
+fn make_dataset(tag: &str) -> (PathBuf, Dims) {
+    let dir = tmpdir(tag);
+    let dims = Dims::new(64, 2, 512).unwrap();
+    generate(&dir, dims, 64, 2024).unwrap();
+    (dir, dims)
+}
+
+fn cfg_for(dir: &Path) -> PipelineConfig {
+    let mut cfg = PipelineConfig::new(dir, 64);
+    cfg.threads = 2;
+    cfg
+}
+
+/// The chaos policy: quick retries, a fast watchdog (the wedge sleeps
+/// well past it), and the default respawn/backoff budget.
+fn chaos_policy() -> RetryPolicy {
+    RetryPolicy {
+        read_retries: 4,
+        retry_backoff_ms: 1,
+        retry_deadline_ms: 2_000,
+        lane_watchdog_ms: 100,
+        ..Default::default()
+    }
+}
+
+/// Reset every process-global switch to its boot state.
+fn reset() {
+    fault::disarm();
+    fault::set_policy(RetryPolicy::default());
+    fault::set_integrity_enabled(false);
+}
+
+#[test]
+fn transient_faults_corruption_and_a_wedged_lane_recover_bit_identically() {
+    let _g = lock();
+    reset();
+    let (dir, dims) = make_dataset("recover");
+
+    // Fault-free baseline.
+    let cfg = cfg_for(&dir);
+    let rep = cugwas::coordinator::run(&cfg).unwrap();
+    assert_eq!(rep.snps, dims.m);
+    let baseline = std::fs::read(dir.join("r.xrd")).unwrap();
+
+    // Chaos: every 5th read attempt fails transiently, every 4th
+    // delivered payload has a bit flipped after its checksum was taken,
+    // and lane 0 wedges on its 2nd chunk for 300 ms (the 100 ms
+    // watchdog must catch it). Cache off, then on.
+    let plan = FaultPlan {
+        seed: 7,
+        read_fail_every: 5,
+        corrupt_every: 4,
+        wedge_lane: 0,
+        wedge_at_chunk: 2,
+        wedge_ms: 300,
+        ..Default::default()
+    };
+    let shared = Arc::new(BlockCache::new(64 << 20));
+    let matrix = [
+        ("no cache", None),
+        ("cold cache", Some(Arc::clone(&shared))),
+        ("warm cache", Some(shared)), // same Arc: every window now hits
+    ];
+    for (label, cache) in matrix {
+        fault::set_policy(chaos_policy());
+        fault::set_integrity_enabled(true);
+        fault::arm(plan); // rearm: counters and the one-shot wedge reset
+        let mut cfg = cfg_for(&dir);
+        cfg.cache = cache;
+        let rep = cugwas::coordinator::run(&cfg).unwrap();
+        assert_eq!(rep.snps, dims.m, "[{label}] chaos run must still cover every SNP");
+        let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
+        assert_eq!(bytes, baseline, "[{label}] diverged from the fault-free baseline");
+        let c = fault::counters();
+        assert!(c.injected > 0, "[{label}] injector never fired: {c:?}");
+        assert!(c.lane_respawns >= 1, "[{label}] the wedged lane was never respawned: {c:?}");
+        // The warm-cache pass streams from RAM — no disk reads, so no
+        // read faults to retry; its recovery story is the wedge above.
+        if label != "warm cache" {
+            assert!(c.read_retries > 0, "[{label}] no read was retried: {c:?}");
+        }
+    }
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn a_permanently_bad_column_fails_naming_the_range() {
+    let _g = lock();
+    reset();
+    let (dir, _) = make_dataset("permanent");
+
+    fault::set_policy(RetryPolicy {
+        read_retries: 1,
+        retry_backoff_ms: 1,
+        ..Default::default()
+    });
+    // Column 130 lives in the window 128..192 (block 64).
+    fault::arm(FaultPlan { read_fail_col: 130, ..Default::default() });
+    let err = cugwas::coordinator::run(&cfg_for(&dir)).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("read of cols 128..192"), "error must name the range: {msg}");
+    assert!(msg.contains("injected permanent read fault at column 130"), "{msg}");
+    assert!(msg.contains("attempt"), "error must show the retry count: {msg}");
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn a_torn_journal_append_is_truncated_and_resume_replays_the_rest() {
+    let _g = lock();
+    reset();
+    let (dir, dims) = make_dataset("torn");
+
+    // Baseline bytes for the final comparison.
+    cugwas::coordinator::run(&cfg_for(&dir)).unwrap();
+    let baseline = std::fs::read(dir.join("r.xrd")).unwrap();
+
+    // Tear the very first journal append mid-record: the run fails, and
+    // the journal is left with a durable partial record — exactly what
+    // a power cut mid-append leaves behind.
+    fault::arm(FaultPlan { torn_append_at: 1, ..Default::default() });
+    let err = cugwas::coordinator::run(&cfg_for(&dir)).unwrap_err();
+    assert!(err.to_string().contains("torn"), "{err}");
+    let jnl = std::fs::metadata(dir.join("r.progress")).unwrap().len();
+    assert_eq!(jnl, 24 + 8, "header plus half a record must be on disk");
+    fault::disarm();
+
+    // Resume: the torn tail is truncated away and the exact uncovered
+    // column range (here: everything — nothing was journaled whole) is
+    // recomputed, byte-identical to the baseline.
+    let mut cfg = cfg_for(&dir);
+    cfg.resume = true;
+    let rep = cugwas::coordinator::run(&cfg).unwrap();
+    assert_eq!(rep.snps, dims.m);
+    let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
+    assert_eq!(bytes, baseline, "resume after a torn append diverged");
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}

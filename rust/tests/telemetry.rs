@@ -75,6 +75,10 @@ fn serve_run_populates_the_prometheus_exposition() {
         "cugwas_bytes_borrowed_total",
         "cugwas_stall_segments_total{verdict=\"read_bound\"}",
         "cugwas_stall_share",
+        "# TYPE cugwas_faults_injected_total counter",
+        "cugwas_read_retries_total",
+        "cugwas_lane_respawns_total",
+        "cugwas_job_retries_total",
     ] {
         assert!(text.contains(needle), "missing {needle:?} in exposition:\n{text}");
     }
