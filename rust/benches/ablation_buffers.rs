@@ -36,6 +36,7 @@ fn main() {
                 block: 5_000,
                 ngpus: 1,
                 host_buffers: hb,
+                traits: 1,
                 profile,
             };
             secs.push(simulate(Algo::CuGwas, &cfg).unwrap().total_secs);

@@ -82,6 +82,7 @@ fn main() {
         max_lanes: 1,
         host_mem_bytes: 0,
         max_block: 4096,
+        traits: 1,
     };
     let profile = plan(&rates, dims, &opts);
     let mut tuned = PipelineConfig::new(&dir, profile.block);

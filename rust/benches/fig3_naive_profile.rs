@@ -53,6 +53,7 @@ fn main() {
         block: 5_000,
         ngpus: 1,
         host_buffers: 3,
+        traits: 1,
         profile: HardwareProfile::hdd(), // the title's HDD: transfers dominate
     };
     let naive = simulate(Algo::NaiveGpu, &cfg).unwrap();

@@ -64,6 +64,7 @@ fn main() {
             block: 5_000,
             ngpus: 1,
             host_buffers: 3,
+            traits: 1,
             profile: HardwareProfile::quadro(),
         };
         let ooc = simulate(Algo::OocCpu, &cfg).unwrap();

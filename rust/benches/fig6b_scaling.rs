@@ -34,6 +34,7 @@ fn main() {
             block: 5_000 * gpus,
             ngpus: gpus,
             host_buffers: 3,
+            traits: 1,
             profile: HardwareProfile::tesla(),
         };
         let rep = simulate(Algo::CuGwas, &cfg).unwrap();

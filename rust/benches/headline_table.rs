@@ -42,6 +42,7 @@ fn main() {
         block,
         ngpus,
         host_buffers: 3,
+        traits: 1,
         profile,
     };
     let ooc = simulate(Algo::OocCpu, &mk(5_000, 1, quadro)).unwrap();
@@ -63,12 +64,26 @@ fn main() {
     let ref_dims = Dims::new(1_500, 3, 220_833).unwrap();
     let cu_ref = simulate(
         Algo::CuGwas,
-        &SimConfig { dims: ref_dims, block: 20_000, ngpus: 4, host_buffers: 3, profile: tesla },
+        &SimConfig {
+            dims: ref_dims,
+            block: 20_000,
+            ngpus: 4,
+            host_buffers: 3,
+            traits: 1,
+            profile: tesla,
+        },
     )
     .unwrap();
     let pa_ref = simulate(
         Algo::Probabel,
-        &SimConfig { dims: ref_dims, block: 20_000, ngpus: 1, host_buffers: 3, profile: quadro },
+        &SimConfig {
+            dims: ref_dims,
+            block: 20_000,
+            ngpus: 1,
+            host_buffers: 3,
+            traits: 1,
+            profile: quadro,
+        },
     )
     .unwrap();
     t.row(&[

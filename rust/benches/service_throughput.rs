@@ -36,6 +36,10 @@ fn main() {
                 let mut j = JobSpec::new(format!("job-{i}"), &dir);
                 j.block = block;
                 j.read_throttle = throttle;
+                // Stagger an inert knob (adapt=false) so the jobs do
+                // not coalesce into one pass: this bench measures the
+                // follow-up passes streaming from the shared cache.
+                j.adapt_every = 16 + i;
                 j
             })
             .collect()
@@ -111,6 +115,33 @@ fn main() {
         "{{\"bench\":\"service_throughput\",\"row\":\"shared_cache_speedup\",\
          \"value\":{:.4},\"unit\":\"x\"}}",
         cold / warm.max(1e-12)
+    );
+
+    // Trait-batching headline: (SNP, trait) solves per second for one
+    // stream at t=1 vs t=32. The batch reuses the per-SNP factorization
+    // and the trsm-sized gemm across all 32 right-hand sides, so the
+    // batched rate must far exceed the single-trait rate — this is the
+    // third gated metric in tools/bench_trend.py.
+    use cugwas::coordinator::{run, PipelineConfig};
+    let wide = if fast { 8 } else { 32 };
+    let mut rates = Vec::new();
+    for traits in [1usize, wide] {
+        let mut cfg = PipelineConfig::new(&dir, block);
+        cfg.traits = traits;
+        cfg.perm_seed = 2013;
+        let rep = run(&cfg).expect("batched run");
+        let rate = (rep.snps * traits) as f64 / rep.wall_secs.max(1e-12);
+        println!(
+            "  t={traits:>2}: {} for m={m} → {:.0} SNP·trait/s",
+            human_duration(Duration::from_secs_f64(rep.wall_secs)),
+            rate
+        );
+        rates.push(rate);
+    }
+    println!(
+        "{{\"bench\":\"service_throughput\",\"row\":\"batched_snps_x_traits_per_sec\",\
+         \"value\":{:.3},\"unit\":\"snp_traits/s\"}}",
+        rates[1]
     );
     let _ = std::fs::remove_dir_all(&dir);
 }

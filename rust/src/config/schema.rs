@@ -23,6 +23,9 @@
 //! profile = ""       # tuned profile TOML (its knobs become the defaults)
 //! adapt = false      # re-plan block size live at segment boundaries
 //! adapt_every = 16   # blocks per adaptive segment
+//! traits = 1         # phenotype batch width (multi-trait in one pass)
+//! permutations = 0   # K seeded shuffles batched with the real phenotype
+//! perm_seed = 0      # RNG seed for the permutation columns
 //!
 //! [sim]
 //! profile = "quadro" # quadro | tesla | hdd
@@ -201,6 +204,9 @@ impl RunConfig {
                     "profile",
                     "adapt",
                     "adapt_every",
+                    "traits",
+                    "permutations",
+                    "perm_seed",
                 ],
                 "sim" => &["profile"],
                 "fault_tolerance" => FAULT_KEYS,
@@ -242,6 +248,7 @@ impl RunConfig {
         let backend = parse_backend(doc, "pipeline")?;
         let read_throttle = throttle_of(doc.float_or("pipeline", "read_mbps", 0.0)?);
         let write_throttle = throttle_of(doc.float_or("pipeline", "write_mbps", 0.0)?);
+        let (traits, perm_seed) = resolve_traits(doc, "pipeline")?;
 
         let profile = match doc.str_or("sim", "profile", "quadro")? {
             "quadro" => HardwareProfile::quadro(),
@@ -271,6 +278,8 @@ impl RunConfig {
                 lane_threads,
                 adapt,
                 adapt_every,
+                traits,
+                perm_seed,
             },
             sim: SimSection { profile },
             fault: fault_from_doc(doc)?,
@@ -308,6 +317,30 @@ fn throttle_of(mbps: f64) -> Option<Throttle> {
     } else {
         None
     }
+}
+
+/// Resolve the effective phenotype batch width from a section's
+/// `traits`/`permutations`/`perm_seed` keys (shared by `[pipeline]` and
+/// `[job.*]`). Permutation mode is sugar for a trait batch — the real
+/// phenotype in column 0 plus K seeded shuffles — so `permutations = K`
+/// implies `traits = K + 1`; spelling out both with different numbers
+/// is a config error, not a silent override.
+fn resolve_traits(doc: &Doc, section: &str) -> Result<(usize, u64)> {
+    let traits = int_in(doc, section, "traits", 1, 1, 1 << 20)? as usize;
+    let permutations = int_in(doc, section, "permutations", 0, 0, 1 << 20)? as usize;
+    let perm_seed = doc.int_or(section, "perm_seed", 0)? as u64;
+    let effective = if permutations > 0 {
+        if doc.get(section, "traits").is_some() && traits != permutations + 1 {
+            return Err(Error::Config(format!(
+                "{section}.traits = {traits} conflicts with {section}.permutations = \
+                 {permutations} (permutation mode implies traits = permutations + 1)"
+            )));
+        }
+        permutations + 1
+    } else {
+        traits
+    };
+    Ok((effective, perm_seed))
 }
 
 /// Resolve a section's `profile` key to a path (`None` when absent or
@@ -361,6 +394,9 @@ const JOB_KEYS: &[&str] = &[
     "profile",
     "adapt",
     "adapt_every",
+    "traits",
+    "permutations",
+    "perm_seed",
 ];
 
 /// Parse one job section into a [`JobSpec`]. `dataset` is required; a
@@ -412,6 +448,9 @@ fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
         int_in(doc, section, "priority", 0, i32::MIN as i64, i32::MAX as i64)? as i32;
     spec.read_throttle = throttle_of(doc.float_or(section, "read_mbps", 0.0)?);
     spec.write_throttle = throttle_of(doc.float_or(section, "write_mbps", 0.0)?);
+    let (traits, perm_seed) = resolve_traits(doc, section)?;
+    spec.traits = traits;
+    spec.perm_seed = perm_seed;
     Ok(spec)
 }
 

@@ -37,7 +37,7 @@ use crate::coordinator::pipeline::{validate, BackendKind, PipelineConfig, Pipeli
 use crate::coordinator::pool::BufPool;
 use crate::devsim::{sloop_flops, trsm_flops, SegmentKnobs};
 use crate::error::{Error, Result};
-use crate::gwas::preprocess::{preprocess, Preprocessed};
+use crate::gwas::preprocess::{phenotype_batch, preprocess_multi, Preprocessed};
 use crate::gwas::problem::Dims;
 use crate::gwas::sloop::SloopScratch;
 use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
@@ -163,6 +163,7 @@ impl SegmentSnapshot {
         n: usize,
         pl: usize,
         cols: usize,
+        traits: usize,
         lat: &DiskLatFit,
     ) -> LiveObs {
         let secs = |now: Duration, then: Duration| now.saturating_sub(then).as_secs_f64();
@@ -177,7 +178,7 @@ impl SegmentSnapshot {
             disk_mbps: if lat.bw_mbps > 0.0 { lat.bw_mbps } else { effective_mbps },
             disk_lat_secs: lat.lat_secs,
             trsm_gflops: rate(trsm_flops(n, cols), device) / 1e9,
-            cpu_gflops: rate(sloop_flops(n, pl, cols), sloop) / 1e9,
+            cpu_gflops: rate(sloop_flops(n, pl, cols, traits), sloop) / 1e9,
             pcie_gbps: ZERO_COPY_LINK_GBPS,
         }
     }
@@ -196,6 +197,12 @@ pub struct Engine {
     cache: Option<Arc<BlockCache>>,
     cache_dataset: Option<String>,
     total_threads: usize,
+    /// Trait-batch width the phenotype matrix was built for. Part of the
+    /// engine identity: the preprocess, the result geometry (`p·t` rows)
+    /// and the journal header all depend on it.
+    traits: usize,
+    /// Seed behind the shuffled phenotype columns (`traits > 1`).
+    perm_seed: u64,
     // ---- long-lived resources ------------------------------------------
     meta: dataset::Meta,
     /// Shared with every device lane (read-only after preprocess).
@@ -245,7 +252,10 @@ impl Engine {
         let total = if cfg.threads == 0 { threads::available() } else { cfg.threads };
         let pre: Arc<Preprocessed> = {
             let _full = threads::with_budget(total);
-            Arc::new(preprocess(&kin, &xl, &y, dinv_nb)?)
+            // The phenotype matrix: column 0 is y, columns 1.. are its
+            // seeded permutations — one preprocess serves all of them.
+            let ys = phenotype_batch(&y, cfg.traits.max(1), cfg.perm_seed);
+            Arc::new(preprocess_multi(&kin, &xl, &ys, dinv_nb)?)
         };
 
         let paths = dataset::DatasetPaths::new(&cfg.dataset);
@@ -265,6 +275,8 @@ impl Engine {
             cache: cfg.cache.clone(),
             cache_dataset,
             total_threads: total,
+            traits: cfg.traits.max(1),
+            perm_seed: cfg.perm_seed,
             meta,
             pre,
             backend_proto,
@@ -323,6 +335,10 @@ impl Engine {
             && cache_ok
             && self.mode == cfg.mode
             && self.total_threads == total
+            // Trait width changes the preprocess AND the result geometry;
+            // a different perm seed changes the phenotype columns.
+            && self.traits == cfg.traits.max(1)
+            && self.perm_seed == cfg.perm_seed
             && self.canonical == dataset::canonical_key(&cfg.dataset)
     }
 
@@ -376,19 +392,29 @@ impl Engine {
         }
         let dims = self.meta.dims;
         let (n, p) = (dims.n, dims.p());
+        let t = self.traits;
+        if telemetry::metrics_enabled() {
+            telemetry::registry::global().traits_width.set(t as f64);
+        }
 
         // Per-run outputs: results file + journal (resume validates the
         // journal header; a mismatched results file restarts clean).
+        // Result rows are `p·t`: trait k's solution stacked at rows
+        // [k·p, (k+1)·p) of every column.
         let paths = dataset::DatasetPaths::new(&self.dataset);
-        let r_header =
-            Header::new(p as u64, dims.m as u64, cfg.block.min(dims.m) as u64, self.meta.seed)?;
+        let r_header = Header::new(
+            (p * t) as u64,
+            dims.m as u64,
+            cfg.block.min(dims.m) as u64,
+            self.meta.seed,
+        )?;
         let fresh = |paths: &dataset::DatasetPaths| -> Result<(XrdFile, Journal)> {
-            let j = Journal::create(&paths.progress(), dims.m as u64, cfg.block as u64)?;
+            let j = Journal::create(&paths.progress(), dims.m as u64, cfg.block as u64, t as u64)?;
             Ok((XrdFile::create(&paths.results(), r_header)?, j))
         };
         let (rfile, mut journal, done_ranges) = if cfg.resume {
             let (journal, ranges) =
-                Journal::open_resume(&paths.progress(), dims.m as u64, cfg.block as u64)?;
+                Journal::open_resume(&paths.progress(), dims.m as u64, cfg.block as u64, t as u64)?;
             match XrdFile::open_rw(&paths.results()) {
                 Ok(f) if *f.header() == r_header => (f, journal, ranges),
                 _ => {
@@ -475,7 +501,9 @@ impl Engine {
                     let _coord_budget = threads::with_budget(coord);
                     let ctx = SegmentCtx {
                         n,
-                        p,
+                        // The segment's result-row stride: t stacked
+                        // p-vectors per SNP column.
+                        p: p * t,
                         mb_gpu: knobs.block / cfg.ngpus,
                         pre: self.pre.as_ref(),
                         reader: &self.reader,
@@ -552,11 +580,13 @@ impl Engine {
                     n,
                     dims.pl,
                     seg_cols,
+                    t,
                     &lat_fit,
                 );
                 let left: u64 = remaining.iter().map(|&(_, len)| len).sum();
                 let rdims = Dims::new(n, dims.pl, left as usize)?;
-                let switch = replan_knobs(&obs, rdims, knobs, cfg.ngpus, self.total_threads);
+                let switch =
+                    replan_knobs(&obs, rdims, knobs, cfg.ngpus, self.total_threads, t);
                 if let Some(nk) = switch {
                     crate::log_info!(
                         "engine",
@@ -665,7 +695,8 @@ impl Engine {
         let pool_key = PoolKey { block: knobs.block, host_buffers: knobs.host_buffers };
         if self.pool_key != Some(pool_key) {
             self.slabs = SlabPool::new(knobs.host_buffers, n * knobs.block);
-            self.result_pool = BufPool::new(knobs.host_buffers, p * knobs.block);
+            // Result buffers hold t stacked p-vectors per column.
+            self.result_pool = BufPool::new(knobs.host_buffers, p * self.traits * knobs.block);
             self.pool_key = Some(pool_key);
             self.stats.pool_builds += 1;
         }

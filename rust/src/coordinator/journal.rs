@@ -1,14 +1,16 @@
-//! Checkpoint journal v2 — crash-safe progress for multi-hour streams.
+//! Checkpoint journal v3 — crash-safe progress for multi-hour streams.
 //!
 //! The v1 journal was a bare sequence of block indices, which made a
 //! resumed run *silently mis-indexed* whenever the block size differed
 //! from the original run (a tuned profile is exactly such a change). v2
-//! fixes both problems at once:
+//! fixed both problems at once; v3 adds the trait-batch width `t` to the
+//! header, because a resumed multi-trait run with a different `t` would
+//! read/write result columns of the wrong height:
 //!
 //! * a **header** persists the run parameters that define block indices
-//!   (`m`, the starting block size `nb`) — resuming with different
-//!   parameters is refused with a clear [`Error::Config`], never
-//!   silently misread;
+//!   and the result geometry (`m`, the starting block size `nb`, the
+//!   trait width `t`) — resuming with different parameters is refused
+//!   with a clear [`Error::Config`], never silently misread;
 //! * records are **column ranges** `(col0, ncols)` rather than block
 //!   indices, so a run whose block size changed mid-stream (the adaptive
 //!   re-planner) journals each persisted window exactly as written and
@@ -17,21 +19,23 @@
 //! Layout (all little-endian u64):
 //!
 //! ```text
-//! magic "CGWJRNL2" | m | nb          — 24-byte header
-//! (col0, ncols)*                     — 16-byte records, appended after
-//!                                      the corresponding data sync
+//! magic "CGWJRNL3" | m | nb | t       — 32-byte header
+//! (col0, ncols)*                      — 16-byte records, appended after
+//!                                       the corresponding data sync
 //! ```
 //!
 //! A torn tail (crash mid-append) is truncated away on resume, so later
-//! appends can never land misaligned behind a partial record.
+//! appends can never land misaligned behind a partial record. A v2
+//! journal (no trait width) is refused as unrecognized — the engine's
+//! resume fallback recreates it fresh.
 
 use crate::error::{Error, Result};
 use std::io::{Seek, SeekFrom, Write};
 use std::path::Path;
 
 /// Format magic — bump the trailing digit on layout changes.
-pub const MAGIC: [u8; 8] = *b"CGWJRNL2";
-const HEADER_BYTES: usize = 24;
+pub const MAGIC: [u8; 8] = *b"CGWJRNL3";
+const HEADER_BYTES: usize = 32;
 const RECORD_BYTES: usize = 16;
 
 /// An open journal, positioned for appending.
@@ -41,7 +45,7 @@ pub struct Journal {
 
 impl Journal {
     /// Start a fresh journal (truncates any previous one).
-    pub fn create(path: &Path, m: u64, nb: u64) -> Result<Journal> {
+    pub fn create(path: &Path, m: u64, nb: u64, t: u64) -> Result<Journal> {
         let mut file = std::fs::OpenOptions::new()
             .read(true)
             .write(true)
@@ -53,6 +57,7 @@ impl Journal {
         header[..8].copy_from_slice(&MAGIC);
         header[8..16].copy_from_slice(&m.to_le_bytes());
         header[16..24].copy_from_slice(&nb.to_le_bytes());
+        header[24..32].copy_from_slice(&t.to_le_bytes());
         file.write_all(&header).map_err(|e| Error::io("writing journal header", e))?;
         Ok(Journal { file })
     }
@@ -60,19 +65,25 @@ impl Journal {
     /// Open an existing journal for resume, validating its header against
     /// this run's parameters. Returns the journal plus the persisted
     /// column ranges. A missing or header-less file starts clean; a
-    /// journal written under different `(m, nb)` is refused — resuming it
-    /// with this geometry would recompute the wrong columns.
-    pub fn open_resume(path: &Path, m: u64, nb: u64) -> Result<(Journal, Vec<(u64, u64)>)> {
+    /// journal written under different `(m, nb, t)` is refused — resuming
+    /// it with this geometry would recompute (or mis-slice) the wrong
+    /// columns.
+    pub fn open_resume(
+        path: &Path,
+        m: u64,
+        nb: u64,
+        t: u64,
+    ) -> Result<(Journal, Vec<(u64, u64)>)> {
         let bytes = match std::fs::read(path) {
             Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                return Ok((Journal::create(path, m, nb)?, Vec::new()));
+                return Ok((Journal::create(path, m, nb, t)?, Vec::new()));
             }
             Err(e) => return Err(Error::io("reading progress journal", e)),
         };
         if bytes.len() < HEADER_BYTES {
             // Crash before the header landed — nothing usable, start clean.
-            return Ok((Journal::create(path, m, nb)?, Vec::new()));
+            return Ok((Journal::create(path, m, nb, t)?, Vec::new()));
         }
         if bytes[..8] != MAGIC {
             return Err(Error::Config(format!(
@@ -82,11 +93,20 @@ impl Journal {
         }
         let jm = u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes"));
         let jnb = u64::from_le_bytes(bytes[16..24].try_into().expect("8 bytes"));
+        let jt = u64::from_le_bytes(bytes[24..32].try_into().expect("8 bytes"));
         if jm != m || jnb != nb {
             return Err(Error::Config(format!(
                 "{}: journal was written for m={jm}, block={jnb} but this run has m={m}, \
                  block={nb} — resume with the original --block, or delete the journal to \
                  recompute from scratch",
+                path.display()
+            )));
+        }
+        if jt != t {
+            return Err(Error::Config(format!(
+                "{}: journal was written for traits={jt} but this run has traits={t} — \
+                 resume with the original trait batch, or delete the journal to recompute \
+                 from scratch",
                 path.display()
             )));
         }
@@ -181,12 +201,12 @@ mod tests {
     #[test]
     fn create_append_resume_roundtrip() {
         let p = tmpfile("rt");
-        let mut j = Journal::create(&p, 40, 8).unwrap();
+        let mut j = Journal::create(&p, 40, 8, 1).unwrap();
         j.append(0, 8).unwrap();
         j.append(8, 8).unwrap();
         j.sync().unwrap();
         drop(j);
-        let (_j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8), (8, 8)]);
         assert_eq!(uncovered(40, &ranges), vec![(16, 24)]);
         std::fs::remove_file(&p).unwrap();
@@ -195,12 +215,43 @@ mod tests {
     #[test]
     fn mismatched_parameters_are_refused() {
         let p = tmpfile("mismatch");
-        Journal::create(&p, 40, 8).unwrap();
-        let err = Journal::open_resume(&p, 40, 12).unwrap_err();
+        Journal::create(&p, 40, 8, 1).unwrap();
+        let err = Journal::open_resume(&p, 40, 12, 1).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err}");
         assert!(err.to_string().contains("block=8"), "{err}");
-        let err = Journal::open_resume(&p, 48, 8).unwrap_err();
+        let err = Journal::open_resume(&p, 48, 8, 1).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn mismatched_trait_width_is_refused() {
+        // The v3 guarantee: a journal from a t-wide run cannot silently
+        // resume a run with a different trait batch — the result columns
+        // would have the wrong height.
+        let p = tmpfile("traits");
+        Journal::create(&p, 40, 8, 4).unwrap();
+        let err = Journal::open_resume(&p, 40, 8, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("traits=4"), "{err}");
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8, 4).unwrap();
+        assert!(ranges.is_empty());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn v2_journal_is_refused_as_unrecognized() {
+        // Old 24-byte-header files (magic CGWJRNL2) must not parse: the
+        // engine treats the Config error as "recreate fresh".
+        let p = tmpfile("v2");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"CGWJRNL2");
+        bytes.extend_from_slice(&40u64.to_le_bytes());
+        bytes.extend_from_slice(&8u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Journal::open_resume(&p, 40, 8, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("unrecognized"), "{err}");
         std::fs::remove_file(&p).unwrap();
     }
 
@@ -208,9 +259,9 @@ mod tests {
     fn foreign_file_is_refused_and_missing_starts_clean() {
         let p = tmpfile("foreign");
         std::fs::write(&p, b"not a journal, definitely long enough").unwrap();
-        assert!(matches!(Journal::open_resume(&p, 8, 4), Err(Error::Config(_))));
+        assert!(matches!(Journal::open_resume(&p, 8, 4, 1), Err(Error::Config(_))));
         std::fs::remove_file(&p).unwrap();
-        let (_j, ranges) = Journal::open_resume(&p, 8, 4).unwrap();
+        let (_j, ranges) = Journal::open_resume(&p, 8, 4, 1).unwrap();
         assert!(ranges.is_empty());
         std::fs::remove_file(&p).unwrap();
     }
@@ -218,17 +269,17 @@ mod tests {
     #[test]
     fn torn_tail_is_truncated_before_appending() {
         let p = tmpfile("torn");
-        let mut j = Journal::create(&p, 40, 8).unwrap();
+        let mut j = Journal::create(&p, 40, 8, 1).unwrap();
         j.append(0, 8).unwrap();
         drop(j);
         let mut bytes = std::fs::read(&p).unwrap();
         bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF]); // partial record
         std::fs::write(&p, &bytes).unwrap();
-        let (mut j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        let (mut j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8)]);
         j.append(8, 8).unwrap();
         drop(j);
-        let (_j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8), (8, 8)], "append after torn tail stays aligned");
         std::fs::remove_file(&p).unwrap();
     }
@@ -239,14 +290,14 @@ mod tests {
         // it: the survivors are a clean prefix, the rest is truncated
         // (those columns simply get recomputed).
         let p = tmpfile("midcorrupt");
-        let mut j = Journal::create(&p, 40, 8).unwrap();
+        let mut j = Journal::create(&p, 40, 8, 1).unwrap();
         j.append(0, 8).unwrap();
         j.append(0, 0).unwrap(); // corrupt: zero width
         j.append(16, 8).unwrap();
         drop(j);
-        let (_j, ranges) = Journal::open_resume(&p, 40, 8).unwrap();
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8)]);
-        assert_eq!(std::fs::metadata(&p).unwrap().len(), 24 + 16);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 32 + 16);
         std::fs::remove_file(&p).unwrap();
     }
 

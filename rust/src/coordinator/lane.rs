@@ -88,9 +88,13 @@ pub struct DevOut {
 pub enum LaneOutputs {
     /// `Trsm`: solved chunk `X̃_b`, col-major `(n, live)`.
     Xbt(Matrix),
-    /// `Block`: `(X̃_b, G (pl×live), rb, d)`.
+    /// `Block`: `(X̃_b, G (pl×live), rb, d)`. `rb` is SNP-major
+    /// `live·t` (trait `k` of SNP `j` at `j·t + k`) — the layout
+    /// [`sloop_from_reductions_into`](crate::gwas::sloop_from_reductions_into)
+    /// consumes.
     Reductions { xbt: Matrix, g: Matrix, rb: Vec<f64>, d: Vec<f64> },
-    /// `BlockFull`: solutions, col-major `(p, live)`.
+    /// `BlockFull`: solutions, col-major `(p·t, live)` — trait `k`'s
+    /// `p`-vector stacked at rows `[k·p, (k+1)·p)`.
     Solutions(Matrix),
 }
 
@@ -301,13 +305,15 @@ fn build_static_literals(
         lit(vec![n as i64, n as i64], &rows.l_row)?,
         lit(vec![n as i64, nb as i64], &rows.dinv_row)?,
     ];
+    // PJRT artifacts are compiled for a single phenotype (validate()
+    // rejects traits > 1 on this backend), so trait column 0 is the run.
     if matches!(mode, OffloadMode::Block | OffloadMode::BlockFull) {
         out.push(lit(vec![n as i64, pl as i64], &rows.xlt_row)?);
-        out.push(lit(vec![n as i64], &st.pre.y_t)?);
+        out.push(lit(vec![n as i64], st.pre.y_t.col(0))?);
     }
     if matches!(mode, OffloadMode::BlockFull) {
         out.push(lit(vec![pl as i64, pl as i64], &rows.stl_row)?);
-        out.push(lit(vec![pl as i64], &st.pre.rtop)?);
+        out.push(lit(vec![pl as i64], st.pre.rtop.col(0))?);
     }
     Ok(out)
 }
@@ -406,13 +412,21 @@ fn process_native(
         OffloadMode::Block => {
             let mut g = Matrix::zeros(st.pl, live);
             crate::linalg::gemm(1.0, &pre.xl_tt, &xbt, 0.0, &mut g)?;
-            let yt = &pre.y_t;
-            let rb: Vec<f64> = (0..live).map(|j| crate::linalg::dot(xbt.col(j), yt)).collect();
+            let t = pre.traits();
+            // SNP-major per-trait reductions, one `dot` per (SNP, trait)
+            // — the same accumulation order the CPU S-loop uses, so the
+            // fused path stays bit-identical to the Trsm path per trait.
+            let mut rb = Vec::with_capacity(live * t);
+            for j in 0..live {
+                for k in 0..t {
+                    rb.push(crate::linalg::dot(xbt.col(j), pre.y_t.col(k)));
+                }
+            }
             let d: Vec<f64> = (0..live).map(|j| crate::linalg::sumsq(xbt.col(j))).collect();
             LaneOutputs::Reductions { xbt, g, rb, d }
         }
         OffloadMode::BlockFull => {
-            let mut out = Matrix::zeros(st.pl + 1, live);
+            let mut out = Matrix::zeros((st.pl + 1) * pre.traits(), live);
             let mut scratch = crate::gwas::sloop::SloopScratch::new(st.pl);
             crate::gwas::sloop::sloop_block(pre, &xbt, &mut scratch, &mut out)?;
             LaneOutputs::Solutions(out)

@@ -15,8 +15,8 @@
 //!   through the refcounted [`SlabPool`](crate::storage::SlabPool).
 //! * [`metrics`] — per-phase accounting (the live Fig. 3) plus the
 //!   data-plane `bytes_copied` / `bytes_borrowed` counters.
-//! * [`journal`] — the v2 checkpoint journal (parameter header +
-//!   column-range records) behind `--resume`.
+//! * [`journal`] — the v3 checkpoint journal (parameter header incl.
+//!   trait width + column-range records) behind `--resume`.
 
 pub mod engine;
 pub mod journal;
@@ -30,5 +30,8 @@ pub use engine::{Engine, EngineStats, SegmentPlan};
 pub use journal::Journal;
 pub use lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
 pub use metrics::{Counter, Metrics, Phase};
-pub use pipeline::{run, verify_against_oracle, BackendKind, PipelineConfig, PipelineReport};
+pub use pipeline::{
+    run, verify_against_oracle, verify_against_oracle_multi, BackendKind, PipelineConfig,
+    PipelineReport,
+};
 pub use pool::BufPool;

@@ -94,6 +94,14 @@ pub struct PipelineConfig {
     pub adapt: bool,
     /// Blocks per adaptive segment (how often the re-planner looks).
     pub adapt_every: usize,
+    /// Trait-batch width `t` (≥ 1): one disk stream amortized over `t`
+    /// right-hand sides. `t = 1 + permutations` when permutation mode is
+    /// on; result columns hold `t` stacked `p`-vectors (journal v3 pins
+    /// `t` so resume refuses a width mismatch).
+    pub traits: usize,
+    /// Seed for the Fisher–Yates phenotype shuffles when `traits > 1`
+    /// (see [`crate::gwas::phenotype_batch`]).
+    pub perm_seed: u64,
 }
 
 impl PipelineConfig {
@@ -117,6 +125,8 @@ impl PipelineConfig {
             lane_threads: 0,
             adapt: false,
             adapt_every: 16,
+            traits: 1,
+            perm_seed: 0,
         }
     }
 }
@@ -167,6 +177,16 @@ pub(crate) fn validate(cfg: &PipelineConfig) -> Result<()> {
     if !(2..=64).contains(&cfg.device_buffers) {
         return Err(Error::Config("device_buffers must be in 2..=64".into()));
     }
+    if cfg.traits == 0 {
+        return Err(Error::Config("traits must be ≥ 1".into()));
+    }
+    if cfg.traits > 1 && matches!(cfg.backend, BackendKind::Pjrt { .. }) {
+        return Err(Error::Config(
+            "multi-trait batching requires the native backend \
+             (PJRT literals are compiled for a single phenotype)"
+                .into(),
+        ));
+    }
     if cfg.adapt {
         if cfg.adapt_every == 0 {
             return Err(Error::Config("adapt_every must be ≥ 1".into()));
@@ -184,16 +204,30 @@ pub(crate) fn validate(cfg: &PipelineConfig) -> Result<()> {
 
 /// Compare the pipeline's `r.xrd` against the in-core oracle (test sizes).
 pub fn verify_against_oracle(dataset_dir: &std::path::Path, tol: f64) -> Result<f64> {
+    verify_against_oracle_multi(dataset_dir, tol, 1, 0)
+}
+
+/// [`verify_against_oracle`] for a `t`-trait run: re-derives the batched
+/// phenotype from `(traits, perm_seed)` and checks the `(p·t) × m` result
+/// file against [`crate::gwas::solve_incore_multi`].
+pub fn verify_against_oracle_multi(
+    dataset_dir: &std::path::Path,
+    tol: f64,
+    traits: usize,
+    perm_seed: u64,
+) -> Result<f64> {
     let (meta, kin, xl, y) = dataset::load_sidecars(dataset_dir)?;
     let xr = dataset::load_xr_incore(dataset_dir)?;
+    let t = traits.max(1);
+    let ys = crate::gwas::phenotype_batch(&y, t, perm_seed);
     let prob = crate::gwas::problem::Problem { dims: meta.dims, m: kin, xl, y, xr };
-    let want = crate::gwas::solve_incore(&prob)?;
+    let (want, _) = crate::gwas::solve_incore_multi(&prob, &ys)?;
     let paths = dataset::DatasetPaths::new(dataset_dir);
     let rfile = XrdFile::open(&paths.results())?;
-    let p = meta.dims.p();
-    let mut got = vec![0.0; p * meta.dims.m];
+    let rows = meta.dims.p() * t;
+    let mut got = vec![0.0; rows * meta.dims.m];
     rfile.read_cols_into(0, meta.dims.m as u64, &mut got)?;
-    let got = Matrix::from_vec(p, meta.dims.m, got)?;
+    let got = Matrix::from_vec(rows, meta.dims.m, got)?;
     let diff = got.max_abs_diff(&want);
     if diff > tol {
         return Err(Error::Numerical(format!(

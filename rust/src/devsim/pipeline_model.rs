@@ -43,6 +43,9 @@ pub struct SimConfig {
     pub ngpus: usize,
     /// Host-side buffers (paper: 3; set 2 for the ablation that stalls).
     pub host_buffers: usize,
+    /// Trait-batch width `t`: the S-loop solves `t` right-hand sides per
+    /// SNP and writes `p·t` result rows per column. 1 = the paper's run.
+    pub traits: usize,
     pub profile: HardwareProfile,
 }
 
@@ -102,6 +105,9 @@ fn validate(cfg: &SimConfig) -> Result<()> {
     if !(2..=8).contains(&cfg.host_buffers) {
         return Err(Error::Config("host_buffers must be in 2..=8".into()));
     }
+    if cfg.traits == 0 {
+        return Err(Error::Config("traits must be ≥ 1".into()));
+    }
     Ok(())
 }
 
@@ -117,9 +123,9 @@ fn block_cols(cfg: &SimConfig, b: usize) -> usize {
     }
 }
 
-/// Result block bytes: p×mb f64 (what the S-loop writes back).
+/// Result block bytes: (p·t)×mb f64 (what the S-loop writes back).
 fn r_bytes(cfg: &SimConfig, mb: usize) -> u64 {
-    (cfg.dims.p() * mb * 8) as u64
+    (cfg.dims.p() * cfg.traits * mb * 8) as u64
 }
 
 fn xr_bytes(cfg: &SimConfig, mb: usize) -> u64 {
@@ -168,7 +174,7 @@ fn build_cugwas(cfg: &SimConfig, db: usize) -> Des {
         let sl = des.task(
             format!("sloop[{b}]"),
             "cpu",
-            p.t_sloop_cpu(n, cfg.dims.pl, mb),
+            p.t_sloop_cpu(n, cfg.dims.pl, mb, cfg.traits),
             &recvs,
         );
         recv.push(recvs);
@@ -237,7 +243,7 @@ fn build_naive(cfg: &SimConfig) -> Des {
             t = chain(&mut des, format!("trsm[{b}.{gi}]"), format!("gpu{gi}"), p.t_trsm_gpu(n, mb_gpu), Some(t));
             t = chain(&mut des, format!("recv[{b}.{gi}]"), "pcie".into(), p.t_pcie(n, mb_gpu), Some(t));
         }
-        t = chain(&mut des, format!("sloop[{b}]"), "cpu".into(), p.t_sloop_cpu(n, cfg.dims.pl, mb), Some(t));
+        t = chain(&mut des, format!("sloop[{b}]"), "cpu".into(), p.t_sloop_cpu(n, cfg.dims.pl, mb, cfg.traits), Some(t));
         t = chain(&mut des, format!("write[{b}]"), "disk_w".into(), p.t_disk(r_bytes(cfg, mb)), Some(t));
         prev = Some(t);
     }
@@ -262,7 +268,7 @@ fn build_ooc_cpu(cfg: &SimConfig) -> Des {
         let comp = des.task(
             format!("compute[{b}]"),
             "cpu",
-            p.t_trsm_cpu(n, mb) + p.t_sloop_cpu(n, cfg.dims.pl, mb),
+            p.t_trsm_cpu(n, mb) + p.t_sloop_cpu(n, cfg.dims.pl, mb, cfg.traits),
             &[rd],
         );
         compute.push(comp);
@@ -328,6 +334,7 @@ mod tests {
             block,
             ngpus,
             host_buffers: 3,
+            traits: 1,
             profile: HardwareProfile::quadro(),
         }
     }

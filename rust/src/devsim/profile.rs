@@ -80,9 +80,9 @@ impl HardwareProfile {
     }
 
     /// S-loop over a block: gemm `(pl×n)(n×mb)` + per-column syrk/gemv +
-    /// m tiny posv solves.
-    pub fn t_sloop_cpu(&self, n: usize, pl: usize, mb: usize) -> f64 {
-        sloop_flops(n, pl, mb) / (self.cpu_gflops * 1e9)
+    /// m tiny posv solves, batched over `traits` right-hand sides.
+    pub fn t_sloop_cpu(&self, n: usize, pl: usize, mb: usize, traits: usize) -> f64 {
+        sloop_flops(n, pl, mb, traits) / (self.cpu_gflops * 1e9)
     }
 
     /// Host↔device transfer of a block (n×mb f64).
@@ -117,13 +117,19 @@ pub fn trsm_flops(n: usize, mb: usize) -> f64 {
 }
 
 /// Flops of the CPU S-loop over an `mb`-column block (gemm + per-column
-/// syrk/gemv + `mb` tiny posv solves).
-pub fn sloop_flops(n: usize, pl: usize, mb: usize) -> f64 {
+/// syrk/gemv + `mb` tiny posv solves), batched over `traits` right-hand
+/// sides. At `traits = 1` this is exactly the single-phenotype count;
+/// each extra trait reuses the per-SNP factorization and adds only one
+/// `dot` (`2n`) and one pair of triangular solves (`~2p²`) per column —
+/// the model-side statement of the amortization the batch buys.
+pub fn sloop_flops(n: usize, pl: usize, mb: usize, traits: usize) -> f64 {
     let p = (pl + 1) as f64;
     let gemm = 2.0 * (pl as f64) * (n as f64) * (mb as f64);
     let vec_ops = 4.0 * (n as f64) * (mb as f64); // syrk col + gemv
     let posv = (mb as f64) * p * p * p / 3.0;
-    gemm + vec_ops + posv
+    let extra_traits =
+        traits.saturating_sub(1) as f64 * (2.0 * (n as f64) + 2.0 * p * p) * (mb as f64);
+    gemm + vec_ops + posv + extra_traits
 }
 
 #[cfg(test)]
@@ -152,7 +158,18 @@ mod tests {
     fn sloop_is_cheaper_than_trsm_at_scale() {
         // The pipeline premise: the delayed S-loop hides under the trsm.
         let p = HardwareProfile::quadro();
-        assert!(p.t_sloop_cpu(10_000, 3, 5_000) < p.t_trsm_gpu(10_000, 5_000));
+        assert!(p.t_sloop_cpu(10_000, 3, 5_000, 1) < p.t_trsm_gpu(10_000, 5_000));
+    }
+
+    #[test]
+    fn trait_batch_cost_is_sublinear() {
+        // 32 traits on one stream must cost far less than 32 streams:
+        // the trsm-sized gemm and the factorization are paid once.
+        let p = HardwareProfile::quadro();
+        let one = p.t_sloop_cpu(10_000, 3, 5_000, 1);
+        let batched = p.t_sloop_cpu(10_000, 3, 5_000, 32);
+        assert!(batched > one, "extra traits cost something");
+        assert!(batched < 32.0 * one * 0.5, "batched={batched}, one={one}");
     }
 
     #[test]

@@ -9,8 +9,8 @@ pub mod preprocess;
 pub mod problem;
 pub mod sloop;
 
-pub use incore::{solve_incore, solve_incore_with_stats};
-pub use preprocess::{preprocess, Preprocessed};
+pub use incore::{solve_incore, solve_incore_multi, solve_incore_with_stats};
+pub use preprocess::{phenotype_batch, preprocess, preprocess_multi, Preprocessed};
 pub use problem::{Dims, Problem};
 pub use sloop::{
     sloop_block, sloop_block_into, sloop_block_stats, sloop_block_stats_into,

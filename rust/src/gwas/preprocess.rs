@@ -4,12 +4,20 @@
 //! Runs once per study, cost `O(n^3)`; the paper measures it "in the order
 //! of seconds" and excludes it from the streaming timings. Everything the
 //! per-block hot path needs is captured in [`Preprocessed`].
+//!
+//! Multi-trait batching: the phenotype is a matrix `Y ∈ R^{n×t}` — one
+//! column per trait (or per permGWAS-style shuffled phenotype, see
+//! [`phenotype_batch`]). All per-trait products (`Ỹ`, `R̃_T`, `ỹ_k·ỹ_k`)
+//! are computed column by column with the same kernels the single-trait
+//! path used, so column `k` of a batched study is bit-identical to an
+//! independent single-trait study on that column.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg::{
-    gemv_t, potrf, potrf_invert_diag_blocks, syrk_t_pretransposed, trsm_lower_left, trsv_lower,
-    Matrix,
+    dot, gemv_t, potrf, potrf_invert_diag_blocks, syrk_t_pretransposed, trsm_lower_left,
+    trsv_lower, Matrix,
 };
+use crate::util::XorShift;
 
 /// Everything the streaming loop needs, computed once.
 #[derive(Debug, Clone)]
@@ -22,37 +30,104 @@ pub struct Preprocessed {
     /// `G = X̃_L^T X̃_b` never re-transposes (or re-allocates) in the
     /// steady state.
     pub xl_tt: Matrix,
-    /// `ỹ = L^-1 y`.
-    pub y_t: Vec<f64>,
+    /// `Ỹ = L^-1 Y` (n × t) — one column per trait.
+    pub y_t: Matrix,
     /// `S_TL = X̃_L^T X̃_L` (pl × pl).
     pub stl: Matrix,
-    /// `r̃_T = X̃_L^T ỹ` (pl).
-    pub rtop: Vec<f64>,
+    /// `R̃_T = X̃_L^T Ỹ` (pl × t) — one column per trait.
+    pub rtop: Matrix,
     /// Inverted `nb×nb` diagonal blocks of `L`, side by side (nb × nb·ceil(n/nb)).
     /// Consumed by the L1 Pallas trsm kernel; `None` when running CPU-only.
     pub dinv: Option<Matrix>,
     /// Diagonal block size used for `dinv`.
     pub dinv_nb: usize,
-    /// `ỹ·ỹ` — precomputed for the per-SNP residual variance (assoc stats).
-    pub yty: f64,
+    /// Per-trait `ỹ_k·ỹ_k` — precomputed for the per-SNP residual
+    /// variance (assoc stats).
+    pub yty: Vec<f64>,
 }
 
-/// Run the preprocessing over `(M, X_L, y)`.
+impl Preprocessed {
+    /// Number of batched traits `t` (≥ 1).
+    pub fn traits(&self) -> usize {
+        self.y_t.cols()
+    }
+
+    /// Sample count `n`.
+    pub fn n(&self) -> usize {
+        self.y_t.rows()
+    }
+}
+
+/// Run the preprocessing over `(M, X_L, y)` for a single phenotype.
 ///
 /// `dinv_nb` — diagonal block size for the accelerator trsm formulation;
 /// pass 0 to skip computing `dinv` (CPU-only paths).
 pub fn preprocess(m: &Matrix, xl: &Matrix, y: &[f64], dinv_nb: usize) -> Result<Preprocessed> {
+    let mut ys = Matrix::zeros(y.len(), 1);
+    ys.col_mut(0).copy_from_slice(y);
+    preprocess_multi(m, xl, &ys, dinv_nb)
+}
+
+/// [`preprocess`] over a phenotype matrix `Y ∈ R^{n×t}`. Every per-trait
+/// product runs column-wise through the exact single-trait kernels
+/// (`trsv`, `gemv_t`, `dot`), so batching never changes a bit of any
+/// individual trait's results.
+pub fn preprocess_multi(
+    m: &Matrix,
+    xl: &Matrix,
+    ys: &Matrix,
+    dinv_nb: usize,
+) -> Result<Preprocessed> {
+    let t = ys.cols();
+    if t == 0 || ys.rows() != m.rows() {
+        return Err(Error::shape(format!(
+            "preprocess: Y is {}x{t}, kinship is {}x{}",
+            ys.rows(),
+            m.rows(),
+            m.cols()
+        )));
+    }
     let l = potrf(m)?; // L ← potrf M
     let mut xl_t = xl.clone();
     trsm_lower_left(&l, &mut xl_t)?; // X̃_L ← trsm L, X_L
-    let mut y_t = y.to_vec();
-    trsv_lower(&l, &mut y_t)?; // ỹ ← trsv L, y
-    let rtop = gemv_t(&xl_t, &y_t)?; // r̃_T ← gemv X̃_L, ỹ
+    let mut y_t = ys.clone();
+    for k in 0..t {
+        trsv_lower(&l, y_t.col_mut(k))?; // ỹ_k ← trsv L, y_k
+    }
+    let mut rtop = Matrix::zeros(xl.cols(), t);
+    for k in 0..t {
+        let rk = gemv_t(&xl_t, y_t.col(k))?; // r̃_T,k ← gemv X̃_L, ỹ_k
+        rtop.col_mut(k).copy_from_slice(&rk);
+    }
     let xl_tt = xl_t.transpose(); // cached once: syrk below + per-block G reductions
     let stl = syrk_t_pretransposed(&xl_tt, &xl_t); // S_TL ← syrk X̃_L
     let dinv = if dinv_nb > 0 { Some(potrf_invert_diag_blocks(&l, dinv_nb)?) } else { None };
-    let yty = crate::linalg::dot(&y_t, &y_t);
+    let yty = (0..t).map(|k| dot(y_t.col(k), y_t.col(k))).collect();
     Ok(Preprocessed { l, xl_t, xl_tt, y_t, stl, rtop, dinv, dinv_nb, yty })
+}
+
+/// Build the batched phenotype matrix `Y ∈ R^{n×t}` for permutation mode:
+/// column 0 is the measured phenotype, columns `1..t` are Fisher–Yates
+/// shuffles of it, each drawn from its own deterministic stream seeded by
+/// `(perm_seed, k)`. Column `k` depends only on `(y, perm_seed, k)` — not
+/// on `t` — so widening the batch never changes earlier columns, and the
+/// whole batch is reproducible under `--perm-seed`.
+pub fn phenotype_batch(y: &[f64], traits: usize, perm_seed: u64) -> Matrix {
+    let n = y.len();
+    let t = traits.max(1);
+    let mut ys = Matrix::zeros(n, t);
+    ys.col_mut(0).copy_from_slice(y);
+    for k in 1..t {
+        let col = ys.col_mut(k);
+        col.copy_from_slice(y);
+        let mut rng =
+            XorShift::new(perm_seed ^ (k as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+        for i in (1..n).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            col.swap(i, j);
+        }
+    }
+    ys
 }
 
 #[cfg(test)]
@@ -69,6 +144,8 @@ mod tests {
     fn preprocess_invariants() {
         let p = small_problem();
         let pre = preprocess(&p.m, &p.xl, &p.y, 8).unwrap();
+        assert_eq!(pre.traits(), 1);
+        assert_eq!(pre.n(), 32);
 
         // L L^T == M
         let mut rec = Matrix::zeros(32, 32);
@@ -84,14 +161,15 @@ mod tests {
         }
 
         // L ỹ == y
-        let ly = gemv_n(&pre.l, &pre.y_t).unwrap();
+        let ly = gemv_n(&pre.l, pre.y_t.col(0)).unwrap();
         for (a, b) in ly.iter().zip(&p.y) {
             assert!((a - b).abs() < 1e-9);
         }
 
-        // S_TL symmetric pl×pl, r̃_T length pl
+        // S_TL symmetric pl×pl, r̃_T pl×1
         assert_eq!(pre.stl.rows(), 3);
-        assert_eq!(pre.rtop.len(), 3);
+        assert_eq!(pre.rtop.rows(), 3);
+        assert_eq!(pre.rtop.cols(), 1);
 
         // Cached transpose is exactly X̃_L^T.
         assert_eq!(pre.xl_tt, pre.xl_t.transpose());
@@ -116,5 +194,56 @@ mod tests {
         let mut bad = p.m.clone();
         bad.set(0, 0, -5.0);
         assert!(preprocess(&bad, &p.xl, &p.y, 0).is_err());
+    }
+
+    #[test]
+    fn batched_columns_match_independent_single_trait_preprocess() {
+        // The bit-identity contract at the preprocess layer: column k of a
+        // batched study equals an independent single-trait study on y_k.
+        let p = small_problem();
+        let ys = phenotype_batch(&p.y, 4, 7);
+        let multi = preprocess_multi(&p.m, &p.xl, &ys, 8).unwrap();
+        assert_eq!(multi.traits(), 4);
+        for k in 0..4 {
+            let single = preprocess(&p.m, &p.xl, ys.col(k), 8).unwrap();
+            assert_eq!(multi.y_t.col(k), single.y_t.col(0), "trait {k}");
+            assert_eq!(multi.rtop.col(k), single.rtop.col(0), "trait {k}");
+            assert_eq!(multi.yty[k], single.yty[0], "trait {k}");
+            // Trait-independent products are untouched by batching.
+            assert_eq!(multi.stl, single.stl);
+            assert_eq!(multi.xl_tt, single.xl_tt);
+        }
+    }
+
+    #[test]
+    fn phenotype_batch_is_seeded_and_prefix_stable() {
+        let p = small_problem();
+        let a = phenotype_batch(&p.y, 5, 42);
+        let b = phenotype_batch(&p.y, 5, 42);
+        assert_eq!(a, b, "same seed must reproduce the batch");
+        let c = phenotype_batch(&p.y, 5, 43);
+        assert_ne!(a.col(1), c.col(1), "different seed must shuffle differently");
+        // Column k depends on (y, seed, k) only — not on t.
+        let wide = phenotype_batch(&p.y, 8, 42);
+        for k in 0..5 {
+            assert_eq!(a.col(k), wide.col(k), "column {k} changed when t grew");
+        }
+        // Column 0 is the phenotype itself; shuffles are permutations.
+        assert_eq!(a.col(0), &p.y[..]);
+        for k in 1..5 {
+            let mut orig = p.y.clone();
+            let mut perm = a.col(k).to_vec();
+            orig.sort_by(f64::total_cmp);
+            perm.sort_by(f64::total_cmp);
+            assert_eq!(orig, perm, "column {k} is not a permutation");
+            assert_ne!(a.col(k), a.col(0), "column {k} left unshuffled");
+        }
+    }
+
+    #[test]
+    fn preprocess_multi_rejects_bad_shapes() {
+        let p = small_problem();
+        assert!(preprocess_multi(&p.m, &p.xl, &Matrix::zeros(32, 0), 0).is_err());
+        assert!(preprocess_multi(&p.m, &p.xl, &Matrix::zeros(31, 2), 0).is_err());
     }
 }

@@ -6,14 +6,26 @@
 //!
 //! * [`sloop_block`] — the pure-native version: computes the block
 //!   reductions itself (`G = X̃_L^T X̃_b` via gemm, `d_j = ‖x̃_j‖²`,
-//!   `rb = X̃_b^T ỹ`) then assembles + solves per SNP.
+//!   `rb = X̃_b^T Ỹ`) then assembles + solves per SNP.
 //! * [`sloop_from_reductions`] — the offload-ablation version: the
 //!   reductions were already produced by the L1 `sloop` kernel on the
 //!   device; only the tiny per-SNP `posv`s remain.
 //!
 //! The `*_into` variants write straight into a caller-provided
-//! column-major `p × mb` slice (the pipeline points them at its block
+//! column-major `(p·t) × mb` slice (the pipeline points them at its block
 //! assembly buffer, so the retire path never allocates or copies).
+//!
+//! Multi-trait batching: the system `S_i` depends only on the SNP, not
+//! the trait, so each SNP pays **one** Cholesky factorization
+//! ([`posv_small_factor`]) reused across all `t` right-hand sides
+//! ([`chol_solve_small`]) — the paper's amortization argument applied to
+//! the S-loop. Output column `j` holds the `t` solutions stacked:
+//! trait `k` occupies rows `[k·p, (k+1)·p)`; statistics stack the same
+//! way in `STAT_ROWS`-tall groups. Per-trait arithmetic goes through the
+//! same per-column kernels as a single-trait run (`dot` per (SNP, trait),
+//! the split factor/solve is bit-identical to the fused `posv_small`), so
+//! trait column `k` of a batched run is byte-identical to an independent
+//! single-trait run on that phenotype.
 //!
 //! Parallelism: the SNP columns are independent, so both the reductions
 //! and the per-SNP solves shard their columns across the compute pool
@@ -29,7 +41,10 @@
 use crate::error::{Error, Result};
 use crate::gwas::assoc::{inv_pp_from_factor, sigma2, stat_column, STAT_ROWS};
 use crate::gwas::preprocess::Preprocessed;
-use crate::linalg::{chol::posv_small, dot, gemm, sumsq, Matrix};
+use crate::linalg::{
+    chol::{chol_solve_small, posv_small_factor},
+    dot, gemm, sumsq, Matrix,
+};
 use crate::util::threads;
 
 /// Column-panel width for sharding SNP columns across the pool.
@@ -73,12 +88,16 @@ impl BlockScratch {
         BlockScratch { g: Matrix::zeros(0, 0), d: Vec::new(), rb: Vec::new() }
     }
 
-    /// Fill `G = X̃_L^T X̃_b` (pl × mb), `d_j = ‖x̃_j‖²`, `rb_j = x̃_j · ỹ`.
-    /// `G` goes through the parallel gemm; `d`/`rb` shard their columns
-    /// directly. Buffers only reallocate when the block geometry changes.
+    /// Fill `G = X̃_L^T X̃_b` (pl × mb), `d_j = ‖x̃_j‖²`, and the SNP-major
+    /// trait reductions `rb[j·t + k] = x̃_j · ỹ_k`. `G` goes through the
+    /// parallel gemm; `d`/`rb` shard their columns directly — one `dot`
+    /// per (SNP, trait), never a register-blocked gemm, so trait `k`'s
+    /// accumulation order matches a single-trait run exactly. Buffers
+    /// only reallocate when the block geometry changes.
     fn reduce(&mut self, pre: &Preprocessed, xb_t: &Matrix) -> Result<()> {
         let pl = pre.xl_t.cols();
         let mb = xb_t.cols();
+        let t = pre.traits();
         if self.g.rows() != pl || self.g.cols() != mb {
             self.g = Matrix::zeros(pl, mb);
         }
@@ -86,19 +105,22 @@ impl BlockScratch {
         self.d.clear();
         self.d.resize(mb, 0.0);
         self.rb.clear();
-        self.rb.resize(mb, 0.0);
-        let nt = threads::for_flops(4.0 * pre.y_t.len() as f64 * mb as f64);
+        self.rb.resize(mb * t, 0.0);
+        let nt =
+            threads::for_flops((2.0 + 2.0 * t as f64) * pre.n() as f64 * mb as f64);
         let chunks: Vec<(&mut [f64], &mut [f64])> = self
             .d
             .chunks_mut(SLOOP_PANEL)
-            .zip(self.rb.chunks_mut(SLOOP_PANEL))
+            .zip(self.rb.chunks_mut(SLOOP_PANEL * t))
             .collect();
         threads::scatter(nt, chunks, || (), |_, ci, (dc, rc)| {
             let j0 = ci * SLOOP_PANEL;
-            for (jj, (dv, rv)) in dc.iter_mut().zip(rc.iter_mut()).enumerate() {
+            for (jj, dv) in dc.iter_mut().enumerate() {
                 let col = xb_t.col(j0 + jj);
                 *dv = sumsq(col);
-                *rv = dot(col, &pre.y_t);
+                for k in 0..t {
+                    rc[jj * t + k] = dot(col, pre.y_t.col(k));
+                }
             }
             Ok(())
         })
@@ -120,8 +142,9 @@ impl SloopScratch {
     }
 }
 
-/// Native S-loop over a solved block `xb_t = X̃_b` (n × mb). Appends one
-/// `p`-vector `r_i` per SNP column into `out` (column-major `p × mb`).
+/// Native S-loop over a solved block `xb_t = X̃_b` (n × mb). Appends the
+/// `t` stacked `p`-vectors `r_{i,k}` per SNP column into `out`
+/// (column-major `(p·t) × mb`).
 pub fn sloop_block(
     pre: &Preprocessed,
     xb_t: &Matrix,
@@ -132,8 +155,8 @@ pub fn sloop_block(
 }
 
 /// [`sloop_block`] plus optional association statistics: when `stats` is
-/// given (a `3 × mb` matrix), each column receives `[beta_snp, se, z]`
-/// (see [`crate::gwas::assoc`]).
+/// given (a `(STAT_ROWS·t) × mb` matrix), each column receives the
+/// stacked `[beta_snp, se, z]` per trait (see [`crate::gwas::assoc`]).
 pub fn sloop_block_stats(
     pre: &Preprocessed,
     xb_t: &Matrix,
@@ -143,12 +166,14 @@ pub fn sloop_block_stats(
 ) -> Result<()> {
     let pl = pre.xl_t.cols();
     let mb = xb_t.cols();
-    check_out(out, pl, mb)?;
+    let t = pre.traits();
+    check_out(out, pl, mb, t)?;
     let stats_slice = match stats {
         Some(st) => {
-            if st.rows() != STAT_ROWS || st.cols() != mb {
+            if st.rows() != STAT_ROWS * t || st.cols() != mb {
                 return Err(Error::shape(format!(
-                    "stats must be {STAT_ROWS}x{mb}, got {}x{}",
+                    "stats must be {}x{mb}, got {}x{}",
+                    STAT_ROWS * t,
                     st.rows(),
                     st.cols()
                 )));
@@ -161,8 +186,8 @@ pub fn sloop_block_stats(
 }
 
 /// [`sloop_block_stats`] writing into raw column-major slices: `out` is
-/// `p × mb`, `stats` (optional) is `3 × mb`. The pipeline points `out`
-/// at its block assembly buffer so retiring a chunk never allocates.
+/// `(p·t) × mb`, `stats` (optional) is `(3·t) × mb`. The pipeline points
+/// `out` at its block assembly buffer so retiring a chunk never allocates.
 pub fn sloop_block_stats_into(
     pre: &Preprocessed,
     xb_t: &Matrix,
@@ -172,7 +197,8 @@ pub fn sloop_block_stats_into(
 ) -> Result<()> {
     let pl = pre.xl_t.cols();
     let mb = xb_t.cols();
-    check_out_len(out.len(), pl, mb)?;
+    let t = pre.traits();
+    check_out_len(out.len(), pl, mb, t)?;
     if xb_t.rows() != pre.xl_t.rows() {
         return Err(Error::shape(format!(
             "sloop_block: X̃_b has {} rows, X̃_L has {}",
@@ -197,6 +223,7 @@ pub fn sloop_block_into(
 
 /// S-loop tail when the reductions `(G, d, rb)` come from the device
 /// (the fused L1 kernel): only assembly + the per-SNP `posv` runs here.
+/// `rb` is SNP-major (`mb·t`, trait `k` of SNP `j` at `j·t + k`).
 pub fn sloop_from_reductions(
     pre: &Preprocessed,
     g: &Matrix,
@@ -206,11 +233,11 @@ pub fn sloop_from_reductions(
     out: &mut Matrix,
 ) -> Result<()> {
     let pl = pre.xl_t.cols();
-    check_out(out, pl, d.len())?;
+    check_out(out, pl, d.len(), pre.traits())?;
     sloop_from_reductions_into(pre, g, d, rb, scratch, out.as_mut_slice())
 }
 
-/// [`sloop_from_reductions`] writing into a raw column-major `p × mb`
+/// [`sloop_from_reductions`] writing into a raw column-major `(p·t) × mb`
 /// slice (the pipeline's assembly buffer).
 pub fn sloop_from_reductions_into(
     pre: &Preprocessed,
@@ -222,14 +249,16 @@ pub fn sloop_from_reductions_into(
 ) -> Result<()> {
     let pl = pre.xl_t.cols();
     let mb = d.len();
-    check_out_len(out.len(), pl, mb)?;
-    if g.rows() != pl || g.cols() != mb || rb.len() != mb {
+    let t = pre.traits();
+    check_out_len(out.len(), pl, mb, t)?;
+    if g.rows() != pl || g.cols() != mb || rb.len() != mb * t {
         return Err(Error::shape(format!(
-            "sloop_from_reductions: G {}x{}, d {}, rb {}",
+            "sloop_from_reductions: G {}x{}, d {}, rb {} (want {})",
             g.rows(),
             g.cols(),
             mb,
-            rb.len()
+            rb.len(),
+            mb * t
         )));
     }
     solve_columns(pre, g, d, rb, &mut scratch.snp, out, None)
@@ -238,9 +267,9 @@ pub fn sloop_from_reductions_into(
 /// Shared per-SNP assembly + solve:
 ///
 /// ```text
-/// S_i = | S_TL      g_i |      rhs_i = | r̃_T  |
-///       | g_i^T     d_i |              | rb_i |
-/// r_i = S_i^-1 rhs_i
+/// S_i = | S_TL      g_i |      rhs_{i,k} = | r̃_{T,k}  |
+///       | g_i^T     d_i |                  | rb_{i,k} |
+/// r_{i,k} = S_i^-1 rhs_{i,k}     (one factorization, t solves)
 /// ```
 ///
 /// Columns are sharded across the pool in [`SLOOP_PANEL`]-wide panels,
@@ -259,12 +288,14 @@ fn solve_columns(
 ) -> Result<()> {
     let pl = pre.stl.rows();
     let p = pl + 1;
+    let t = pre.traits();
     let mb = d.len();
     debug_assert_eq!(snp.p, p, "scratch built for wrong p");
     if let Some(st) = stats.as_deref() {
-        if st.len() != STAT_ROWS * mb {
+        if st.len() != STAT_ROWS * t * mb {
             return Err(Error::shape(format!(
-                "stats must be {STAT_ROWS}x{mb}, got {} elements",
+                "stats must be {}x{mb}, got {} elements",
+                STAT_ROWS * t,
                 st.len()
             )));
         }
@@ -272,7 +303,7 @@ fn solve_columns(
     if mb == 0 {
         return Ok(());
     }
-    let nt = threads::for_flops(SLOOP_COL_COST * mb as f64)
+    let nt = threads::for_flops(SLOOP_COL_COST * (mb * t) as f64)
         .min(mb / SLOOP_COLS_PER_WORKER)
         .max(1);
     if nt <= 1 {
@@ -280,11 +311,11 @@ fn solve_columns(
     }
     let nchunks = mb.div_ceil(SLOOP_PANEL);
     let stat_chunks: Vec<Option<&mut [f64]>> = match stats {
-        Some(st) => st.chunks_mut(SLOOP_PANEL * STAT_ROWS).map(Some).collect(),
+        Some(st) => st.chunks_mut(SLOOP_PANEL * STAT_ROWS * t).map(Some).collect(),
         None => (0..nchunks).map(|_| None).collect(),
     };
     let items: Vec<(&mut [f64], Option<&mut [f64]>)> =
-        out.chunks_mut(SLOOP_PANEL * p).zip(stat_chunks).collect();
+        out.chunks_mut(SLOOP_PANEL * p * t).zip(stat_chunks).collect();
     threads::scatter(nt, items, || SnpScratch::new(p), |sc, ci, (outp, stp)| {
         solve_panel(pre, g, d, rb, sc, ci * SLOOP_PANEL, outp, stp)
     })
@@ -305,8 +336,9 @@ fn solve_panel(
 ) -> Result<()> {
     let pl = pre.stl.rows();
     let p = pl + 1;
-    let n = pre.y_t.len();
-    let ncols = out.len() / p;
+    let t = pre.traits();
+    let n = pre.n();
+    let ncols = out.len() / (p * t);
     for jj in 0..ncols {
         let j = j0 + jj;
         let s = &mut snp.s;
@@ -323,30 +355,34 @@ fn solve_panel(
             s[r * p + pl] = v; // last row
         }
         s[pl * p + pl] = d[j];
-        // RHS.
-        snp.rhs[..pl].copy_from_slice(&pre.rtop);
-        snp.rhs[pl] = rb[j];
-        snp.rhs_orig.copy_from_slice(&snp.rhs);
-        posv_small(s, &mut snp.rhs, p)
+        // One factorization per SNP, reused for every trait's RHS.
+        posv_small_factor(s, p)
             .map_err(|e| Error::Numerical(format!("S-loop posv failed at column {j}: {e}")))?;
-        out[jj * p..(jj + 1) * p].copy_from_slice(&snp.rhs);
-        if let Some(st) = stats.as_deref_mut() {
-            // `s` now holds the Cholesky factor of S_j (posv_small is
-            // in-place), so the extra statistics are nearly free.
-            let var_pp = inv_pp_from_factor(s, p);
-            let s2 = sigma2(pre.yty, &snp.rhs, &snp.rhs_orig, n, p)?;
-            let col = stat_column(snp.rhs[pl], var_pp, s2);
-            st[jj * STAT_ROWS..(jj + 1) * STAT_ROWS].copy_from_slice(&col);
+        for k in 0..t {
+            snp.rhs[..pl].copy_from_slice(pre.rtop.col(k));
+            snp.rhs[pl] = rb[j * t + k];
+            snp.rhs_orig.copy_from_slice(&snp.rhs);
+            chol_solve_small(s, &mut snp.rhs, p);
+            out[(jj * t + k) * p..(jj * t + k + 1) * p].copy_from_slice(&snp.rhs);
+            if let Some(st) = stats.as_deref_mut() {
+                // `s` holds the Cholesky factor of S_j, so the extra
+                // statistics are nearly free.
+                let var_pp = inv_pp_from_factor(s, p);
+                let s2 = sigma2(pre.yty[k], &snp.rhs, &snp.rhs_orig, n, p)?;
+                let col = stat_column(snp.rhs[pl], var_pp, s2);
+                st[(jj * t + k) * STAT_ROWS..(jj * t + k + 1) * STAT_ROWS]
+                    .copy_from_slice(&col);
+            }
         }
     }
     Ok(())
 }
 
-fn check_out(out: &Matrix, pl: usize, mb: usize) -> Result<()> {
-    if out.rows() != pl + 1 || out.cols() != mb {
+fn check_out(out: &Matrix, pl: usize, mb: usize, t: usize) -> Result<()> {
+    if out.rows() != (pl + 1) * t || out.cols() != mb {
         return Err(Error::shape(format!(
             "sloop out must be {}x{mb}, got {}x{}",
-            pl + 1,
+            (pl + 1) * t,
             out.rows(),
             out.cols()
         )));
@@ -354,12 +390,12 @@ fn check_out(out: &Matrix, pl: usize, mb: usize) -> Result<()> {
     Ok(())
 }
 
-fn check_out_len(len: usize, pl: usize, mb: usize) -> Result<()> {
-    if len != (pl + 1) * mb {
+fn check_out_len(len: usize, pl: usize, mb: usize, t: usize) -> Result<()> {
+    if len != (pl + 1) * t * mb {
         return Err(Error::shape(format!(
             "sloop out slice must hold {}x{mb} = {} elements, got {len}",
-            pl + 1,
-            (pl + 1) * mb
+            (pl + 1) * t,
+            (pl + 1) * t * mb
         )));
     }
     Ok(())
@@ -368,7 +404,7 @@ fn check_out_len(len: usize, pl: usize, mb: usize) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gwas::preprocess::preprocess;
+    use crate::gwas::preprocess::{phenotype_batch, preprocess, preprocess_multi};
     use crate::gwas::problem::{Dims, Problem};
     use crate::linalg::trsm_lower_left;
 
@@ -438,7 +474,7 @@ mod tests {
         let mut g = Matrix::zeros(pl, mb);
         gemm(1.0, &pre.xl_tt, &xb_t, 0.0, &mut g).unwrap();
         let d: Vec<f64> = (0..mb).map(|j| sumsq(xb_t.col(j))).collect();
-        let rb: Vec<f64> = (0..mb).map(|j| dot(xb_t.col(j), &pre.y_t)).collect();
+        let rb: Vec<f64> = (0..mb).map(|j| dot(xb_t.col(j), pre.y_t.col(0))).collect();
         let mut out_red = Matrix::zeros(pl + 1, mb);
         sloop_from_reductions(&pre, &g, &d, &rb, &mut scratch, &mut out_red).unwrap();
         assert!(out_native.max_abs_diff(&out_red) < 1e-12);
@@ -466,6 +502,70 @@ mod tests {
     }
 
     #[test]
+    fn batched_traits_are_bit_identical_to_single_trait_runs() {
+        // The tentpole contract: trait column k of a t-wide batch equals
+        // an independent single-trait S-loop on phenotype k, bit for bit
+        // — results *and* statistics.
+        let (prob, _, _) = setup(24, 2, 40, 17);
+        let ys = phenotype_batch(&prob.y, 5, 3);
+        let multi = preprocess_multi(&prob.m, &prob.xl, &ys, 0).unwrap();
+        let mut xb_t = prob.xr.clone();
+        trsm_lower_left(&multi.l, &mut xb_t).unwrap();
+        let (pl, p, mb, t) = (2, 3, 40, 5);
+        let mut out = Matrix::zeros(p * t, mb);
+        let mut stats = Matrix::zeros(STAT_ROWS * t, mb);
+        let mut scratch = SloopScratch::new(pl);
+        sloop_block_stats(&multi, &xb_t, &mut scratch, &mut out, Some(&mut stats)).unwrap();
+
+        for k in 0..t {
+            let single = preprocess(&prob.m, &prob.xl, ys.col(k), 0).unwrap();
+            let mut out1 = Matrix::zeros(p, mb);
+            let mut stats1 = Matrix::zeros(STAT_ROWS, mb);
+            let mut scr1 = SloopScratch::new(pl);
+            sloop_block_stats(&single, &xb_t, &mut scr1, &mut out1, Some(&mut stats1))
+                .unwrap();
+            for j in 0..mb {
+                assert_eq!(
+                    &out.col(j)[k * p..(k + 1) * p],
+                    out1.col(j),
+                    "snp {j} trait {k}"
+                );
+                assert_eq!(
+                    &stats.col(j)[k * STAT_ROWS..(k + 1) * STAT_ROWS],
+                    stats1.col(j),
+                    "stats snp {j} trait {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_trait_reductions_path_matches_native_path() {
+        let (prob, _, _) = setup(18, 2, 6, 29);
+        let ys = phenotype_batch(&prob.y, 3, 11);
+        let pre = preprocess_multi(&prob.m, &prob.xl, &ys, 0).unwrap();
+        let mut xb_t = prob.xr.clone();
+        trsm_lower_left(&pre.l, &mut xb_t).unwrap();
+        let (pl, mb, t) = (2, 6, 3);
+        let mut out_native = Matrix::zeros((pl + 1) * t, mb);
+        let mut scratch = SloopScratch::new(pl);
+        sloop_block(&pre, &xb_t, &mut scratch, &mut out_native).unwrap();
+
+        let mut g = Matrix::zeros(pl, mb);
+        gemm(1.0, &pre.xl_tt, &xb_t, 0.0, &mut g).unwrap();
+        let d: Vec<f64> = (0..mb).map(|j| sumsq(xb_t.col(j))).collect();
+        let mut rb = vec![0.0; mb * t];
+        for j in 0..mb {
+            for k in 0..t {
+                rb[j * t + k] = dot(xb_t.col(j), pre.y_t.col(k));
+            }
+        }
+        let mut out_red = Matrix::zeros((pl + 1) * t, mb);
+        sloop_from_reductions(&pre, &g, &d, &rb, &mut scratch, &mut out_red).unwrap();
+        assert_eq!(out_native, out_red);
+    }
+
+    #[test]
     fn sharded_sloop_is_bit_identical_to_serial() {
         // Enough columns that the work gate (SLOOP_COL_COST * mb) and the
         // per-worker column floor both clear, so the parallel path
@@ -485,6 +585,33 @@ mod tests {
             let mut scratch = SloopScratch::new(2);
             let mut out = Matrix::zeros(p, mb);
             let mut stats = Matrix::zeros(STAT_ROWS, mb);
+            sloop_block_stats(&pre, &xb_t, &mut scratch, &mut out, Some(&mut stats)).unwrap();
+            assert_eq!(out, out_serial, "threads={nt}");
+            assert_eq!(stats, stats_serial, "threads={nt}");
+        }
+    }
+
+    #[test]
+    fn sharded_multi_trait_sloop_is_bit_identical_to_serial() {
+        let prob = Problem::synthetic(Dims::new(16, 2, 4096).unwrap(), 13).unwrap();
+        let ys = phenotype_batch(&prob.y, 4, 9);
+        let pre = preprocess_multi(&prob.m, &prob.xl, &ys, 0).unwrap();
+        let mut xb_t = prob.xr.clone();
+        trsm_lower_left(&pre.l, &mut xb_t).unwrap();
+        let (p, mb, t) = (3, 4096, 4);
+        let mut out_serial = Matrix::zeros(p * t, mb);
+        let mut stats_serial = Matrix::zeros(STAT_ROWS * t, mb);
+        {
+            let _g = crate::util::threads::with_budget(1);
+            let mut scratch = SloopScratch::new(2);
+            sloop_block_stats(&pre, &xb_t, &mut scratch, &mut out_serial, Some(&mut stats_serial))
+                .unwrap();
+        }
+        for nt in [2, 8] {
+            let _g = crate::util::threads::with_budget(nt);
+            let mut scratch = SloopScratch::new(2);
+            let mut out = Matrix::zeros(p * t, mb);
+            let mut stats = Matrix::zeros(STAT_ROWS * t, mb);
             sloop_block_stats(&pre, &xb_t, &mut scratch, &mut out, Some(&mut stats)).unwrap();
             assert_eq!(out, out_serial, "threads={nt}");
             assert_eq!(stats, stats_serial, "threads={nt}");

@@ -149,8 +149,17 @@ pub fn posv(s: &Matrix, b: &mut [f64]) -> Result<()> {
 /// (given as a flat column-major `n×n` slice) in place and solves into `b`.
 /// This is the S-loop hot call — no `Matrix`, no `Vec`.
 pub fn posv_small(s: &mut [f64], b: &mut [f64], n: usize) -> Result<()> {
+    posv_small_factor(s, n)?;
+    chol_solve_small(s, b, n);
+    Ok(())
+}
+
+/// Factor half of [`posv_small`]: in-place lower Cholesky of a flat
+/// column-major `n×n` SPD slice. Exposed separately so the multi-trait
+/// S-loop can factor each SNP's system once and reuse it for every
+/// trait's right-hand side via [`chol_solve_small`].
+pub fn posv_small_factor(s: &mut [f64], n: usize) -> Result<()> {
     debug_assert_eq!(s.len(), n * n);
-    debug_assert_eq!(b.len(), n);
     // Cholesky in place (lower).
     for j in 0..n {
         let mut d = s[j * n + j];
@@ -171,6 +180,15 @@ pub fn posv_small(s: &mut [f64], b: &mut [f64], n: usize) -> Result<()> {
             s[j * n + i] = v / djj;
         }
     }
+    Ok(())
+}
+
+/// Solve half of [`posv_small`]: forward + backward substitution against
+/// a factor produced by [`posv_small_factor`], overwriting `b` with the
+/// solution. Arithmetic is identical to the fused path bit for bit.
+pub fn chol_solve_small(s: &[f64], b: &mut [f64], n: usize) {
+    debug_assert_eq!(s.len(), n * n);
+    debug_assert_eq!(b.len(), n);
     // L z = b (forward).
     for j in 0..n {
         b[j] /= s[j * n + j];
@@ -187,7 +205,6 @@ pub fn posv_small(s: &mut [f64], b: &mut [f64], n: usize) -> Result<()> {
         }
         b[j] = v / s[j * n + j];
     }
-    Ok(())
 }
 
 /// Solve `L^T x = b` in place for lower-triangular `L`.
@@ -317,6 +334,30 @@ mod tests {
             posv_small(&mut s_flat, &mut b, n).unwrap();
             for (a, r) in b.iter().zip(&b_ref) {
                 assert!((a - r).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn factor_then_solve_is_bit_identical_to_fused_posv_small() {
+        // The multi-trait S-loop factors once and solves t RHS; every
+        // solve must match what the fused call would have produced bit
+        // for bit, or batched runs drift from single-trait runs.
+        let mut rng = XorShift::new(35);
+        for &n in &[1, 3, 6, 9] {
+            let s = Matrix::rand_spd(n, 2.0, &mut rng);
+            let rhs: Vec<Vec<f64>> =
+                (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+            let mut factored = s.as_slice().to_vec();
+            posv_small_factor(&mut factored, n).unwrap();
+            for b0 in &rhs {
+                let mut fused_s = s.as_slice().to_vec();
+                let mut fused_b = b0.clone();
+                posv_small(&mut fused_s, &mut fused_b, n).unwrap();
+                assert_eq!(fused_s, factored, "factor differs at n={n}");
+                let mut b = b0.clone();
+                chol_solve_small(&factored, &mut b, n);
+                assert_eq!(b, fused_b, "solve differs at n={n}");
             }
         }
     }

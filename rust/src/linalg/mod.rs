@@ -29,5 +29,5 @@ pub mod matrix;
 pub use blas1::{axpy, dot, nrm2, sumsq};
 pub use blas2::{gemv_n, gemv_t, trsv_lower};
 pub use blas3::{gemm, syrk_t, syrk_t_pretransposed, trsm_lower_left};
-pub use chol::{posv, potrf, potrf_invert_diag_blocks};
+pub use chol::{chol_solve_small, posv, posv_small_factor, potrf, potrf_invert_diag_blocks};
 pub use matrix::Matrix;

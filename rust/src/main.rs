@@ -207,6 +207,7 @@ const TUNE_FLAGS: &[Flag] = &[
     Flag::opt("probe-mb", "64", "disk-probe read budget (MB)"),
     Flag::opt("read-mbps", "0", "probe through an emulated storage throttle (0 = off)"),
     Flag::opt("host-mem-mb", "0", "cap the rings' host memory (0 = no cap)"),
+    Flag::opt("traits", "1", "phenotype batch width the plan should price in"),
     Flag::switch("quick", "smaller kernel probes (CI smoke)"),
 ];
 
@@ -252,6 +253,7 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
         max_lanes: a.usize("max-lanes")?.max(1),
         host_mem_bytes: a.u64("host-mem-mb")? << 20,
         max_block: a.usize("max-block")?,
+        traits: a.usize("traits")?.max(1),
     };
     let profile = plan(&rates, meta.dims, &opts);
     let out = if a.str("out").is_empty() {
@@ -304,6 +306,9 @@ const RUN_FLAGS: &[Flag] = &[
     Flag::opt("report-json", "", "write the job report as JSON here"),
     Flag::opt("read-retries", "3", "extra read attempts on transient I/O errors"),
     Flag::opt("lane-watchdog-ms", "0", "declare a stalled device lane wedged after this (0 = off)"),
+    Flag::opt("traits", "1", "phenotype batch width: solve this many traits in one pass"),
+    Flag::opt("permutations", "0", "permutation-test mode: batch K shuffled phenotypes with the real one"),
+    Flag::opt("perm-seed", "0", "RNG seed for the permutation shuffles (reproducible)"),
     Flag::switch("integrity", "checksum blocks at read time, verify on cache hit and submit"),
     Flag::switch("adapt", "re-plan block size live from the stall profile (native)"),
     Flag::switch("resume", "skip column ranges journaled in r.progress (crash recovery)"),
@@ -349,6 +354,22 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         ..Default::default()
     });
     cugwas::storage::fault::set_integrity_enabled(a.switch("integrity"));
+    // Permutation mode is sugar for a trait batch: the observed phenotype
+    // rides in column 0 and K seeded shuffles fill the rest, so one
+    // streaming pass prices the whole null distribution. When both flags
+    // are given they must agree, so a typo cannot silently change K.
+    let mut traits = a.usize("traits")?.max(1);
+    let permutations = a.usize("permutations")?;
+    let perm_seed = a.u64("perm-seed")?;
+    if permutations > 0 {
+        if a.given("traits") && traits != permutations + 1 {
+            return Err(Error::Config(format!(
+                "--traits {traits} conflicts with --permutations {permutations} \
+                 (permutation mode implies traits = permutations + 1)"
+            )));
+        }
+        traits = permutations + 1;
+    }
     let mut cfg = PipelineConfig {
         dataset: PathBuf::from(a.str("dataset")),
         block: a.usize("block")?,
@@ -365,6 +386,8 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         lane_threads: a.usize("lane-threads")?,
         adapt: a.switch("adapt"),
         adapt_every: a.usize("adapt-every")?,
+        traits,
+        perm_seed,
     };
     // A tuned profile supplies defaults; flags the user typed still win.
     // Loading shares one error path with the `[pipeline]`/`[job.*]`
@@ -421,7 +444,12 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         write_report_json(&a, &j.to_json())?;
     }
     if a.switch("verify") {
-        let diff = coordinator::verify_against_oracle(Path::new(a.str("dataset")), 1e-7)?;
+        let diff = coordinator::verify_against_oracle_multi(
+            Path::new(a.str("dataset")),
+            1e-7,
+            cfg.traits,
+            cfg.perm_seed,
+        )?;
         println!("verified against in-core oracle: max |Δ| = {diff:.2e}");
     }
     Ok(())
@@ -607,6 +635,7 @@ const SIM_FLAGS: &[Flag] = &[
     Flag::opt("block", "5000", "SNP columns per iteration"),
     Flag::opt("ngpus", "1", "GPUs"),
     Flag::opt("host-buffers", "3", "host buffers"),
+    Flag::opt("traits", "1", "phenotype batch width (multi-trait / permutation batching)"),
     Flag::opt("timeline", "", "write the task timeline as CSV to this path"),
 ];
 
@@ -638,6 +667,7 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         ngpus: a.usize("ngpus")?,
         host_buffers: a.usize("host-buffers")?,
         profile: parse_profile(a.str("profile"))?,
+        traits: a.usize("traits")?.max(1),
     };
     let rep = simulate(algo, &cfg)?;
     println!(

@@ -73,6 +73,14 @@ pub struct JobSpec {
     /// jobs first (shortest-job-first); unprofiled jobs keep FIFO order
     /// after them.
     pub predicted_secs: Option<f64>,
+    /// Phenotype batch width: solve this many traits (or 1 + K
+    /// permutations) in one streaming pass. Part of the engine-reuse
+    /// and job-coalescing identity — jobs only merge onto one pass when
+    /// their widths agree.
+    pub traits: usize,
+    /// RNG seed for permutation columns (column 0 is always the
+    /// observed phenotype; the seed only matters when `traits > 1`).
+    pub perm_seed: u64,
     /// Knobs the operator set explicitly (see [`KnobPins`]).
     pub pins: KnobPins,
     /// A profile has already been applied to this spec (an explicit
@@ -102,6 +110,8 @@ impl JobSpec {
             lane_threads: 0,
             adapt: false,
             adapt_every: 16,
+            traits: 1,
+            perm_seed: 0,
             predicted_secs: None,
             pins: KnobPins::default(),
             profile_attached: false,
@@ -153,10 +163,49 @@ impl JobSpec {
     /// zero-copy plane eliminated), the result ring, and the dense
     /// sidecars (kinship dominates at n²). Deliberately a slight
     /// over-estimate — admission errs toward not thrashing.
+    /// Whether this spec would stream the *identical* pipeline as
+    /// `other` over the same dataset — the gate for job coalescing.
+    /// Every knob that shapes the pass (geometry, offload mode,
+    /// backend, throttles, thread budget, adaptivity, and the phenotype
+    /// batch identity) must agree; a job that pins even one knob
+    /// differently (say, a different `block`) keeps its own pass.
+    /// Priority and name are scheduling/reporting facts, not pipeline
+    /// facts, so they do not participate.
+    pub fn coalesces_with(&self, other: &JobSpec) -> bool {
+        let throttle_eq = |a: &Option<Throttle>, b: &Option<Throttle>| match (a, b) {
+            (None, None) => true,
+            (Some(x), Some(y)) => x.bytes_per_sec == y.bytes_per_sec,
+            _ => false,
+        };
+        let backend_eq = match (&self.backend, &other.backend) {
+            (BackendKind::Native, BackendKind::Native) => true,
+            (BackendKind::Pjrt { artifacts: a }, BackendKind::Pjrt { artifacts: b }) => a == b,
+            _ => false,
+        };
+        self.dataset == other.dataset
+            && self.block == other.block
+            && self.ngpus == other.ngpus
+            && self.host_buffers == other.host_buffers
+            && self.device_buffers == other.device_buffers
+            && self.mode == other.mode
+            && backend_eq
+            && throttle_eq(&self.read_throttle, &other.read_throttle)
+            && throttle_eq(&self.write_throttle, &other.write_throttle)
+            && self.threads == other.threads
+            && self.lane_threads == other.lane_threads
+            && self.adapt == other.adapt
+            && self.adapt_every == other.adapt_every
+            && self.traits == other.traits
+            && self.perm_seed == other.perm_seed
+    }
+
     pub fn host_bytes(&self, n: usize, p: usize) -> u64 {
+        // A t-trait batch widens the result rows (p·t per SNP) and the
+        // phenotype sidecar (n×t), but not the genotype slab ring.
+        let t = self.traits.max(1);
         let slab_ring = (self.host_buffers + self.device_buffers) * n * self.block;
-        let result_ring = self.host_buffers * p * self.block;
-        let sidecars = n * n + n * p + n;
+        let result_ring = self.host_buffers * p * t * self.block;
+        let sidecars = n * n + n * p + n * t;
         (8 * (slab_ring + result_ring + sidecars)) as u64
     }
 }
@@ -284,6 +333,26 @@ impl JobQueue {
             }
         }
         failed
+    }
+
+    /// Pull every still-queued job that would stream the *identical*
+    /// pipeline as `leader` over the same dataset (see
+    /// [`JobSpec::coalesces_with`]) and mark it `Streaming`: the
+    /// leader's single pass will answer them all, and the dispatcher
+    /// mirrors the leader's report back onto each rider on completion.
+    pub fn take_coalescable(&mut self, leader: &Job) -> Vec<Job> {
+        let mut riders = Vec::new();
+        for j in &mut self.jobs {
+            if j.id != leader.id
+                && j.state == JobState::Queued
+                && j.dataset_key == leader.dataset_key
+                && j.spec.coalesces_with(&leader.spec)
+            {
+                j.state = JobState::Streaming;
+                riders.push(j.clone());
+            }
+        }
+        riders
     }
 
     pub fn set_state(&mut self, id: u64, state: JobState) {

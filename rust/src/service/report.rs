@@ -38,6 +38,11 @@ pub struct JobReport {
     /// The job rode a warm engine left by the previous job on the same
     /// dataset (preprocess, reader, lanes and pools all reused).
     pub reused_engine: bool,
+    /// `Some(leader)` when the scheduler coalesced this job onto the
+    /// named job's streaming pass instead of streaming it separately —
+    /// the two specs resolved to identical pipelines over the same
+    /// dataset, so one pass answers both.
+    pub coalesced_into: Option<String>,
 }
 
 impl JobReport {
@@ -59,6 +64,7 @@ impl JobReport {
             stall: None,
             error: Some(error),
             reused_engine: false,
+            coalesced_into: None,
         }
     }
 
@@ -89,12 +95,19 @@ impl JobReport {
             stall: Some(stall),
             error: None,
             reused_engine: false,
+            coalesced_into: None,
         }
     }
 
     /// Mark whether this job ran on a reused engine.
     pub fn with_reused_engine(mut self, reused: bool) -> Self {
         self.reused_engine = reused;
+        self
+    }
+
+    /// Mark this report as a coalesced rider on `leader`'s pass.
+    pub fn with_coalesced_into(mut self, leader: impl Into<String>) -> Self {
+        self.coalesced_into = Some(leader.into());
         self
     }
 
@@ -137,6 +150,12 @@ impl JobReport {
             self.bytes_borrowed,
             self.reused_engine,
         );
+        match &self.coalesced_into {
+            Some(leader) => {
+                let _ = write!(o, "\"coalesced_into\":\"{}\",", json::escape(leader));
+            }
+            None => o.push_str("\"coalesced_into\":null,"),
+        }
         match &self.stall {
             Some(v) => {
                 let _ = write!(

@@ -34,9 +34,18 @@
 //! tuned profile is probed + planned once (cheap), the profile is
 //! persisted next to it, and its DES prediction feeds the queue's
 //! shortest-job-first ordering.
+//!
+//! **Job coalescing**: at dispatch time, every still-queued job that
+//! would stream the *identical* pipeline over the leader's dataset
+//! (same knobs, same offload mode/backend/throttles, same phenotype
+//! batch — see [`JobSpec::coalesces_with`]) rides the leader's single
+//! streaming pass instead of waiting for its own. Riders mirror the
+//! leader's report under their own names with `coalesced_into` set; a
+//! failed leader re-queues its riders untouched (they spent no retry
+//! budget). A job pinning even one knob differently keeps its own pass.
 
 use crate::config::ServiceConfig;
-use crate::coordinator::{Engine, PipelineConfig};
+use crate::coordinator::{Engine, Metrics, PipelineConfig};
 use crate::error::{Error, Result};
 use crate::service::queue::{Job, JobQueue, JobSpec, JobState};
 use crate::service::report::{JobReport, ServiceReport};
@@ -176,6 +185,9 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     let mut mem_in_use = 0u64;
     let mut busy_datasets: HashSet<PathBuf> = HashSet::new();
     let mut inflight: HashMap<usize, Job> = HashMap::new();
+    // Riders coalesced onto the leader streaming on each lane — they
+    // share its pass and its outcome (see the module docs).
+    let mut riders: HashMap<usize, Vec<Job>> = HashMap::new();
     // Dispatch instants, for the per-job scheduler-track trace spans.
     let mut dispatched: HashMap<usize, Instant> = HashMap::new();
     // Per-lane residency of the warm engine: the dataset it is warm for
@@ -259,6 +271,24 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             warm[wi] = None; // the resident engine is reused or replaced
             busy_datasets.insert(job.dataset_key.clone());
             queue.set_state(job.id, JobState::Streaming);
+            // Coalesce compatible queued work onto this pass: one
+            // stream over the dataset answers every identical spec.
+            let lane_riders = queue.take_coalescable(&job);
+            if !lane_riders.is_empty() {
+                crate::log_info!(
+                    "service",
+                    "coalescing {} queued job(s) onto '{}' over {}",
+                    lane_riders.len(),
+                    job.spec.name,
+                    job.dataset_key.display()
+                );
+                if crate::telemetry::metrics_enabled() {
+                    crate::telemetry::registry::global()
+                        .jobs_coalesced_total
+                        .add(lane_riders.len() as u64);
+                }
+                riders.insert(wi, lane_riders);
+            }
             inflight.insert(wi, job.clone());
             dispatched.insert(wi, Instant::now());
             let lane = &mut lanes[wi];
@@ -324,13 +354,39 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 warm[wi] = report.ok().then(|| (job.dataset_key.clone(), job.est_bytes));
                 busy_datasets.remove(&job.dataset_key);
                 lanes[wi].busy = false;
+                let lane_riders = riders.remove(&wi).unwrap_or_default();
                 if report.ok() {
                     attempts.remove(&job.id);
                     cooling.remove(&job.dataset_key);
                     fail_streak.remove(&job.dataset_key);
                     queue.set_state(job.id, JobState::Done);
+                    // Riders share the leader's outcome: the one pass
+                    // answered them all, so each mirrors the leader's
+                    // numbers under its own name, stamped with whose
+                    // stream carried it.
+                    for r in &lane_riders {
+                        queue.set_state(r.id, JobState::Done);
+                        reports.push(
+                            JobReport::done(
+                                r.spec.name.clone(),
+                                r.spec.dataset.clone(),
+                                r.spec.priority,
+                                report.wall_secs,
+                                report.snps,
+                                report.blocks,
+                                report.metrics.clone().unwrap_or_else(Metrics::new),
+                            )
+                            .with_coalesced_into(report.name.clone()),
+                        );
+                    }
                     reports.push(report);
                 } else {
+                    // A failed pass answered nobody: riders go straight
+                    // back to the queue with their retry budgets intact
+                    // (only the leader's attempt counter advances).
+                    for r in &lane_riders {
+                        queue.set_state(r.id, JobState::Queued);
+                    }
                     // Graceful degradation: a failed run re-enters the
                     // queue (bounded, with per-dataset backoff) before
                     // its failure is final — a transient fault costs a
@@ -461,6 +517,7 @@ fn tune_first_contact(spec: &JobSpec, plan_threads: usize, out: &Path) -> Option
         max_lanes: spec.ngpus.max(1),
         host_mem_bytes: 0,
         max_block: 0,
+        traits: spec.traits.max(1),
     };
     let profile = tune::plan(&rates, meta.dims, &opts);
     match profile.save(out) {
@@ -679,6 +736,8 @@ fn run_job(
         lane_threads: spec.lane_threads,
         adapt: spec.adapt,
         adapt_every: spec.adapt_every,
+        traits: spec.traits.max(1),
+        perm_seed: spec.perm_seed,
     };
     let failed = |e: &Error| {
         JobReport::failed(spec.name.clone(), spec.dataset.clone(), spec.priority, e.to_string())
@@ -750,6 +809,10 @@ mod tests {
         j1.priority = 2; // runs first → faults the cache in
         let mut j2 = JobSpec::new("shared-b", &d1);
         j2.block = 16;
+        // This test is about the shared cache, so shared-b must stream
+        // its own pass: nudge an (inert while adapt=false) knob so it
+        // does not coalesce onto shared-a's pass instead.
+        j2.adapt_every = 32;
         let mut j3 = JobSpec::new("solo", &d2);
         j3.block = 16;
         let rep = serve(&small_cfg(vec![j1, j2, j3], 2, 64)).unwrap();
@@ -867,11 +930,19 @@ mod tests {
         let d = tmpdir("firstcontact");
         generate(&d, Dims::new(48, 2, 512).unwrap(), 64, 21).unwrap();
         assert!(!d.join("tuned.toml").exists());
-        // Two knob-free jobs on one dataset, one worker lane: the first
+        // Two jobs on one dataset, one worker lane: the first
         // submission tunes the dataset, the second rides both the
-        // persisted profile and the first job's warm engine.
+        // persisted profile and the first job's warm engine. The warm-
+        // engine path needs job two to actually *run*, so it differs in
+        // a knob that blocks coalescing (adapt_every is inert while
+        // adapt=false) yet keeps the engine identity intact.
+        let two = {
+            let mut j = JobSpec::new("two", &d);
+            j.adapt_every = 32;
+            j
+        };
         let cfg = {
-            let mut c = small_cfg(vec![JobSpec::new("one", &d), JobSpec::new("two", &d)], 1, 16);
+            let mut c = small_cfg(vec![JobSpec::new("one", &d), two], 1, 16);
             c.auto_tune = true;
             c
         };
@@ -917,6 +988,44 @@ mod tests {
         assert_eq!(rep.failed(), 0, "{}", rep.render());
         std::fs::remove_dir_all(&a).unwrap();
         std::fs::remove_dir_all(&b).unwrap();
+    }
+
+    /// Compatible queued jobs sharing a dataset merge into one pass:
+    /// the rider's answer IS the leader's streamed result, so it never
+    /// occupies a worker lane. A job whose pinned knobs shape a
+    /// different pipeline must NOT merge — it pays its own pass.
+    #[test]
+    fn compatible_jobs_coalesce_into_one_streaming_pass() {
+        use crate::coordinator::verify_against_oracle;
+        let d = tmpdir("coalesce");
+        generate(&d, Dims::new(32, 2, 96).unwrap(), 16, 11).unwrap();
+        let mut ja = JobSpec::new("lead", &d);
+        ja.block = 16;
+        ja.priority = 2; // dispatches first → becomes the pass leader
+        let mut jb = JobSpec::new("rider", &d);
+        jb.block = 16; // identical pipeline shape → rides lead's pass
+        let mut jc = JobSpec::new("own-pass", &d);
+        jc.block = 32; // pinned to a different block → incompatible
+        jc.pins.block = true;
+        assert!(ja.coalesces_with(&jb));
+        assert!(!ja.coalesces_with(&jc));
+        let rep = serve(&small_cfg(vec![ja, jb, jc], 1, 0)).unwrap();
+        assert_eq!(rep.jobs.len(), 3, "{}", rep.render());
+        assert_eq!(rep.failed(), 0, "{}", rep.render());
+        let lead = rep.jobs.iter().find(|j| j.name == "lead").unwrap();
+        let rider = rep.jobs.iter().find(|j| j.name == "rider").unwrap();
+        let own = rep.jobs.iter().find(|j| j.name == "own-pass").unwrap();
+        // The rider's report mirrors the leader's single pass.
+        assert_eq!(rider.coalesced_into.as_deref(), Some("lead"), "{}", rep.render());
+        assert_eq!(rider.snps, lead.snps);
+        assert_eq!(rider.blocks, lead.blocks);
+        assert_eq!(lead.coalesced_into, None);
+        assert_eq!(lead.blocks, 6, "96 SNPs at block 16 → 6 windows");
+        // The incompatible job streamed its own (differently-shaped) pass.
+        assert_eq!(own.coalesced_into, None, "pinned block must not merge");
+        assert_eq!(own.blocks, 3, "96 SNPs at block 32 → 3 windows");
+        verify_against_oracle(&d, 1e-8).unwrap();
+        std::fs::remove_dir_all(&d).unwrap();
     }
 
     #[test]

@@ -140,7 +140,9 @@ pub struct Registry {
     pub replans_total: CounterCell,
     pub jobs_done_total: CounterCell,
     pub jobs_failed_total: CounterCell,
+    pub jobs_coalesced_total: CounterCell,
     pub snps_per_sec: GaugeCell,
+    pub traits_width: GaugeCell,
     pub queue_depth: GaugeCell,
     pub jobs_inflight: GaugeCell,
     pub mem_in_use_bytes: GaugeCell,
@@ -185,7 +187,9 @@ impl Registry {
             replans_total: CounterCell::default(),
             jobs_done_total: CounterCell::default(),
             jobs_failed_total: CounterCell::default(),
+            jobs_coalesced_total: CounterCell::default(),
             snps_per_sec: GaugeCell::default(),
+            traits_width: GaugeCell::default(),
             queue_depth: GaugeCell::default(),
             jobs_inflight: GaugeCell::default(),
             mem_in_use_bytes: GaugeCell::default(),
@@ -336,11 +340,23 @@ impl Registry {
         );
         counter(&mut o, "cugwas_jobs_done_total", "Jobs completed.", self.jobs_done_total.get());
         counter(&mut o, "cugwas_jobs_failed_total", "Jobs failed.", self.jobs_failed_total.get());
+        counter(
+            &mut o,
+            "cugwas_jobs_coalesced_total",
+            "Queued jobs answered by riding a compatible job's streaming pass.",
+            self.jobs_coalesced_total.get(),
+        );
         gauge(
             &mut o,
             "cugwas_snps_per_sec",
             "Streaming throughput of the most recently completed job.",
             self.snps_per_sec.get(),
+        );
+        gauge(
+            &mut o,
+            "cugwas_traits",
+            "Phenotype batch width of the engine's current streaming pass.",
+            self.traits_width.get(),
         );
 
         gauge(&mut o, "cugwas_queue_depth", "Jobs waiting for admission.", self.queue_depth.get());
@@ -554,6 +570,8 @@ mod tests {
             "cugwas_read_retries_total 0",
             "cugwas_lane_respawns_total 0",
             "cugwas_job_retries_total 0",
+            "cugwas_jobs_coalesced_total 0",
+            "# TYPE cugwas_traits gauge",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

@@ -35,11 +35,16 @@ pub struct PlanOpts {
     pub host_mem_bytes: u64,
     /// Largest block size to consider (0 = 65536).
     pub max_block: usize,
+    /// Trait-batch width the run will stream with (≥ 1). Widens the
+    /// S-loop and the result ring in every priced candidate, so the
+    /// planner trades block size against batch width instead of sizing
+    /// the pipeline for a single phenotype it won't run.
+    pub traits: usize,
 }
 
 impl Default for PlanOpts {
     fn default() -> Self {
-        PlanOpts { total_threads: 1, max_lanes: 1, host_mem_bytes: 0, max_block: 0 }
+        PlanOpts { total_threads: 1, max_lanes: 1, host_mem_bytes: 0, max_block: 0, traits: 1 }
     }
 }
 
@@ -52,6 +57,9 @@ pub struct Candidate {
     pub ngpus: usize,
     pub lane_threads: usize,
     pub coord_threads: usize,
+    /// Trait-batch width this candidate is priced for (from
+    /// [`PlanOpts::traits`]).
+    pub traits: usize,
     pub profile: HardwareProfile,
 }
 
@@ -64,7 +72,8 @@ pub struct Candidate {
 /// when the cache also holds a block.)
 fn candidate_bytes(c: &Candidate, n: usize, p: usize) -> u64 {
     let slabs = (c.host_buffers + c.device_buffers) * c.block * n;
-    let results = c.host_buffers * c.block * p;
+    // Result buffers hold t stacked p-vectors per column.
+    let results = c.host_buffers * c.block * p * c.traits.max(1);
     (8 * (slabs + results)) as u64
 }
 
@@ -111,6 +120,7 @@ pub fn candidates(rates: &ProbedRates, dims: Dims, opts: &PlanOpts) -> Vec<Candi
                             ngpus,
                             lane_threads,
                             coord_threads,
+                            traits: opts.traits.max(1),
                             profile: HardwareProfile {
                                 name: "probed",
                                 gpu_trsm_gflops: rates.trsm_at(lane_threads),
@@ -142,6 +152,7 @@ pub fn predict(c: &Candidate, dims: Dims) -> Result<f64> {
         block: c.block,
         ngpus: c.ngpus,
         host_buffers: c.host_buffers.clamp(2, 8),
+        traits: c.traits.max(1),
         profile: c.profile,
     };
     Ok(simulate_cugwas_with(&cfg, c.device_buffers.clamp(2, 8))?.total_secs)
@@ -279,11 +290,14 @@ pub fn replan_block(
         probabel_gflops: 0.1,
     };
     let predict_at = |block: usize| -> Option<f64> {
+        // The directional fallback predates trait batching and only runs
+        // single-phenotype streams; the deep planner carries `traits`.
         let cfg = SimConfig {
             dims,
             block,
             ngpus,
             host_buffers: host_buffers.clamp(2, 8),
+            traits: 1,
             profile,
         };
         simulate_cugwas_with(&cfg, device_buffers.clamp(2, 8))
@@ -315,15 +329,17 @@ const SWITCH_GAIN: f64 = 0.98;
 ///
 /// `dims.m` must be the remaining SNP columns; `total_threads` the run's
 /// resolved compute budget (the lane/coordinator split is re-derived per
-/// candidate). Returns `None` when the pipeline is balanced, the
-/// observations are degenerate, or no neighbor beats staying put by at
-/// least the hysteresis margin.
+/// candidate); `traits` the run's batch width (the S-loop and result
+/// geometry every candidate is priced with). Returns `None` when the
+/// pipeline is balanced, the observations are degenerate, or no neighbor
+/// beats staying put by at least the hysteresis margin.
 pub fn replan_knobs(
     obs: &LiveObs,
     dims: Dims,
     cur: SegmentKnobs,
     ngpus: usize,
     total_threads: usize,
+    traits: usize,
 ) -> Option<SegmentKnobs> {
     if obs.wall_secs <= 0.0 {
         return None;
@@ -337,10 +353,11 @@ pub fn replan_knobs(
     if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
         return None;
     }
-    let p_cur = predict_switch(obs, dims, &cur, &cur, ngpus, total_threads)?;
+    let p_cur = predict_switch(obs, dims, &cur, &cur, ngpus, total_threads, traits)?;
     let mut best: Option<(f64, SegmentKnobs)> = None;
     for cand in knob_neighborhood(&cur, dims, ngpus, total_threads) {
-        let Some(secs) = predict_switch(obs, dims, &cand, &cur, ngpus, total_threads) else {
+        let Some(secs) = predict_switch(obs, dims, &cand, &cur, ngpus, total_threads, traits)
+        else {
             continue;
         };
         if best.as_ref().map_or(true, |(b, _)| secs < *b) {
@@ -400,6 +417,7 @@ fn knob_neighborhood(
 /// observed rate scaled by its thread ratio (linear-scaling assumption —
 /// optimistic, which is why the hysteresis margin and the next segment's
 /// real observation both stand behind it).
+#[allow(clippy::too_many_arguments)]
 fn predict_switch(
     obs: &LiveObs,
     dims: Dims,
@@ -407,6 +425,7 @@ fn predict_switch(
     cur: &SegmentKnobs,
     ngpus: usize,
     total_threads: usize,
+    traits: usize,
 ) -> Option<f64> {
     let g = ngpus.max(1);
     let coord_of = |lt: usize| total_threads.saturating_sub(lt * g).max(1);
@@ -424,18 +443,22 @@ fn predict_switch(
     // Tail clamp: the remainder may be smaller than the block; keep the
     // simulated block within it and divisible across lanes.
     let block = ((cand.block.min(dims.m) / g) * g).max(g);
+    let t = traits.max(1);
     let cfg = SimConfig {
         dims,
         block,
         ngpus: g,
         host_buffers: cand.host_buffers.clamp(2, 8),
+        traits: t,
         profile,
     };
     let steady = simulate_cugwas_with(&cfg, cand.device_buffers.clamp(2, 8))
         .ok()
         .map(|r| r.total_secs)
         .filter(|s| s.is_finite())?;
-    Some(steady + transition_secs(cur, cand, dims.n, dims.p(), g, &profile))
+    // Transition pricing sees the widened result rows (`p·t`): a bigger
+    // batch makes ring re-allocation proportionally more expensive.
+    Some(steady + transition_secs(cur, cand, dims.n, dims.p() * t, g, &profile))
 }
 
 #[cfg(test)]
@@ -465,7 +488,13 @@ mod tests {
         // fastest — recompute every prediction independently and check
         // the argmin matches.
         let dims = Dims::new(256, 3, 4096).unwrap();
-        let opts = PlanOpts { total_threads: 4, max_lanes: 2, host_mem_bytes: 0, max_block: 2048 };
+        let opts = PlanOpts {
+            total_threads: 4,
+            max_lanes: 2,
+            host_mem_bytes: 0,
+            max_block: 2048,
+            traits: 1,
+        };
         let r = rates();
         let chosen = plan(&r, dims, &opts);
         let mut best = f64::INFINITY;
@@ -504,8 +533,13 @@ mod tests {
     #[test]
     fn candidates_respect_memory_cap_and_block_bounds() {
         let dims = Dims::new(256, 3, 4096).unwrap();
-        let mut opts =
-            PlanOpts { total_threads: 4, max_lanes: 2, host_mem_bytes: 0, max_block: 2048 };
+        let mut opts = PlanOpts {
+            total_threads: 4,
+            max_lanes: 2,
+            host_mem_bytes: 0,
+            max_block: 2048,
+            traits: 1,
+        };
         let all = candidates(&rates(), dims, &opts);
         assert!(!all.is_empty());
         for c in &all {
@@ -519,6 +553,28 @@ mod tests {
         assert!(!capped.is_empty());
         assert!(capped.iter().all(|c| c.block < 2048));
         assert!(capped.len() < all.len());
+    }
+
+    #[test]
+    fn trait_batch_widens_predicted_cost_and_memory() {
+        // The same geometry priced at t=32 must simulate slower than at
+        // t=1 (more S-loop work, bigger write-back) but nowhere near 32×
+        // (the stream and the factorizations are shared).
+        let dims = Dims::new(256, 3, 4096).unwrap();
+        let base =
+            PlanOpts { total_threads: 4, max_lanes: 1, host_mem_bytes: 0, max_block: 1024, traits: 1 };
+        let wide = PlanOpts { traits: 32, ..base };
+        let one = &candidates(&rates(), dims, &base)[0];
+        let batched = &candidates(&rates(), dims, &wide)[0];
+        assert_eq!(one.block, batched.block);
+        let p1 = predict(one, dims).unwrap();
+        let p32 = predict(batched, dims).unwrap();
+        assert!(p32 > p1, "t=32 must cost more: {p32} vs {p1}");
+        assert!(p32 < 32.0 * p1, "t=32 must amortize the stream: {p32} vs {p1}");
+        // And the memory cap sees the widened result ring.
+        assert!(
+            candidate_bytes(batched, dims.n, dims.p()) > candidate_bytes(one, dims.n, dims.p())
+        );
     }
 
     fn obs() -> LiveObs {
@@ -578,7 +634,7 @@ mod tests {
     #[test]
     fn balanced_pipeline_keeps_all_knobs() {
         let dims = Dims::new(256, 3, 100_000).unwrap();
-        assert_eq!(replan_knobs(&obs(), dims, knobs(1024, 3, 2, 1), 1, 4), None);
+        assert_eq!(replan_knobs(&obs(), dims, knobs(1024, 3, 2, 1), 1, 4, 1), None);
     }
 
     #[test]
@@ -590,14 +646,19 @@ mod tests {
         let dims = Dims::new(256, 3, 100_000).unwrap();
         let o = LiveObs { read_wait_secs: 6.0, disk_lat_secs: 5e-3, ..obs() };
         let cur = knobs(1024, 3, 2, 1);
-        let picked = replan_knobs(&o, dims, cur, 1, 4).expect("must switch");
+        let picked = replan_knobs(&o, dims, cur, 1, 4, 1).expect("must switch");
         assert!(picked.block > cur.block, "picked {picked:?}");
         // The same stall profile with a latency-free disk still has the
         // directional rule available via `replan_block`; the deep
         // planner only moves when the model predicts a real win.
         let flat = LiveObs { read_wait_secs: 6.0, ..obs() };
-        if let Some(k) = replan_knobs(&flat, dims, cur, 1, 4) {
+        if let Some(k) = replan_knobs(&flat, dims, cur, 1, 4, 1) {
             assert!(k != cur);
+        }
+        // A wide trait batch re-prices the neighborhood but must still
+        // produce a valid decision (any switch keeps the invariants).
+        if let Some(k) = replan_knobs(&o, dims, cur, 1, 4, 16) {
+            assert!(k.block % 1 == 0 && k.host_buffers >= 2);
         }
     }
 
@@ -627,7 +688,7 @@ mod tests {
         let cur = knobs(1024, 3, 2, 1);
         let plenty = Dims::new(256, 3, 100_000).unwrap();
         let sliver = Dims::new(256, 3, 256).unwrap();
-        assert!(replan_knobs(&o, plenty, cur, 1, 2).is_some());
-        assert_eq!(replan_knobs(&o, sliver, cur, 1, 2), None);
+        assert!(replan_knobs(&o, plenty, cur, 1, 2, 1).is_some());
+        assert_eq!(replan_knobs(&o, sliver, cur, 1, 2, 1), None);
     }
 }

@@ -5,10 +5,11 @@
 //! byte-identical for `threads = 1, 2, 8` on the same dataset, in every
 //! offload mode and lane count.
 
-use cugwas::coordinator::{run, verify_against_oracle, OffloadMode, PipelineConfig};
+use cugwas::coordinator::{run, verify_against_oracle_multi, OffloadMode, PipelineConfig};
+use cugwas::gwas::phenotype_batch;
 use cugwas::gwas::problem::Dims;
-use cugwas::storage::generate;
-use std::path::PathBuf;
+use cugwas::storage::{generate, XrdFile};
+use std::path::{Path, PathBuf};
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("cugwas_det_{}_{tag}", std::process::id()));
@@ -29,8 +30,20 @@ fn results_at(
     mutate(&mut cfg);
     run(&cfg).unwrap();
     let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
-    let diff = verify_against_oracle(dir, 1e-7).unwrap();
+    let diff = verify_against_oracle_multi(dir, 1e-7, cfg.traits, cfg.perm_seed).unwrap();
     (bytes, diff)
+}
+
+/// Copy a dataset but replace its phenotype with `y` — how the matrix
+/// cell below materializes "the single-trait study whose phenotype IS
+/// trait column j of the batch".
+fn clone_dataset_with_phenotype(src: &Path, dst: &Path, y: &[f64]) {
+    std::fs::create_dir_all(dst).unwrap();
+    for f in ["meta.txt", "kinship.bin", "covariates.bin", "xr.xrd"] {
+        std::fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+    let bytes: Vec<u8> = y.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(dst.join("phenotype.bin"), bytes).unwrap();
 }
 
 #[test]
@@ -57,11 +70,19 @@ fn pipeline_results_are_bit_identical_across_thread_counts() {
 }
 
 /// One cell of the CI determinism matrix: CUGWAS_DET_THREADS ×
-/// CUGWAS_DET_LANES select a configuration from the environment, and its
-/// `r.xrd` must be byte-identical to the single-thread run of the same
-/// lane count. CI fans this out over threads ∈ {1,2,8} × lanes ∈ {1,2}
-/// on every push, so the bit-identical guarantee is enforced there, not
-/// just locally. Without the env vars it checks the 2-thread/1-lane cell.
+/// CUGWAS_DET_LANES × CUGWAS_DET_TRAITS select a configuration from the
+/// environment, and its `r.xrd` must be byte-identical to the
+/// single-thread run of the same lane count and batch width. CI fans
+/// this out over threads ∈ {1,2,8} × lanes ∈ {1,2} × traits ∈ {1,16} on
+/// every push, so the bit-identical guarantee is enforced there, not
+/// just locally. Without the env vars it checks the
+/// 2-thread/1-lane/1-trait cell.
+///
+/// A multi-trait cell additionally proves the batching theorem the
+/// whole feature rests on: trait column `j` of the batched result is
+/// byte-identical to a plain single-trait run over the same dataset
+/// with that column as its phenotype — with the shared block cache on
+/// and off.
 #[test]
 fn matrix_cell_from_env_is_bit_identical() {
     let threads: usize = std::env::var("CUGWAS_DET_THREADS")
@@ -72,14 +93,65 @@ fn matrix_cell_from_env_is_bit_identical() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
-    let dir = tmpdir(&format!("matrix_t{threads}_l{lanes}"));
+    let traits: usize = std::env::var("CUGWAS_DET_TRAITS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    const PERM_SEED: u64 = 0xDE7;
+    let dir = tmpdir(&format!("matrix_t{threads}_l{lanes}_w{traits}"));
     let dims = Dims::new(96, 2, 2048).unwrap();
     generate(&dir, dims, 256, 99).unwrap();
-    let mutate = |c: &mut PipelineConfig| c.ngpus = lanes;
+    let mutate = |c: &mut PipelineConfig| {
+        c.ngpus = lanes;
+        c.traits = traits;
+        c.perm_seed = PERM_SEED;
+    };
     let (ref_bytes, ref_diff) = results_at(&dir, 1024, 1, mutate);
     let (bytes, diff) = results_at(&dir, 1024, threads, mutate);
-    assert_eq!(bytes, ref_bytes, "r.xrd changed at threads={threads}, lanes={lanes}");
+    assert_eq!(
+        bytes, ref_bytes,
+        "r.xrd changed at threads={threads}, lanes={lanes}, traits={traits}"
+    );
     assert_eq!(diff.to_bits(), ref_diff.to_bits());
+
+    // Cache on/off must not move a bit either: the cache only changes
+    // where blocks are read from, never what is computed.
+    let cache = std::sync::Arc::new(cugwas::storage::BlockCache::new(64 << 20));
+    let (cached_bytes, _) = results_at(&dir, 1024, threads, |c: &mut PipelineConfig| {
+        mutate(c);
+        c.cache = Some(std::sync::Arc::clone(&cache));
+    });
+    assert_eq!(cached_bytes, ref_bytes, "cache on/off changed the batched result");
+
+    if traits > 1 {
+        let p = dims.pl + 1;
+        let rfile = XrdFile::open(&dir.join("r.xrd")).unwrap();
+        let mut batched = vec![0.0f64; p * traits * dims.m];
+        rfile.read_cols_into(0, dims.m as u64, &mut batched).unwrap();
+        let (_, _, _, y) = cugwas::storage::dataset::load_sidecars(&dir).unwrap();
+        let ys = phenotype_batch(&y, traits, PERM_SEED);
+        for j in 0..traits {
+            let sdir = tmpdir(&format!("matrix_single_w{traits}_{j}"));
+            clone_dataset_with_phenotype(&dir, &sdir, ys.col(j));
+            let mut cfg = PipelineConfig::new(&sdir, 1024);
+            cfg.threads = threads;
+            cfg.ngpus = lanes;
+            run(&cfg).unwrap();
+            let sfile = XrdFile::open(&sdir.join("r.xrd")).unwrap();
+            let mut single = vec![0.0f64; p * dims.m];
+            sfile.read_cols_into(0, dims.m as u64, &mut single).unwrap();
+            for c in 0..dims.m {
+                for r in 0..p {
+                    assert_eq!(
+                        batched[c * p * traits + j * p + r].to_bits(),
+                        single[c * p + r].to_bits(),
+                        "trait {j}, snp {c}, row {r} diverged from the single-trait run"
+                    );
+                }
+            }
+            std::fs::remove_dir_all(&sdir).unwrap();
+        }
+    }
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

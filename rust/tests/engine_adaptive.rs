@@ -106,7 +106,7 @@ fn repeated_runs_on_one_engine_reuse_everything() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
-/// Crash-resume across a mid-run knob switch: the v2 journal's
+/// Crash-resume across a mid-run knob switch: the v3 journal's
 /// column-range records carry mixed window widths, and a resumed run
 /// recomputes exactly the uncovered columns.
 #[test]
@@ -127,12 +127,14 @@ fn crash_resume_across_a_mid_run_knob_switch() {
     Engine::open(&cfg).unwrap().execute_plans(&cfg, &plans).unwrap();
     verify_against_oracle(&dir, 1e-8).unwrap();
 
-    // Parse the journal (24-byte header + 16-byte column-range records):
-    // the record stream must show both window widths.
+    // Parse the journal (32-byte v3 header + 16-byte column-range
+    // records): the record stream must show both window widths, and the
+    // header's trait width must pin this single-phenotype run at 1.
     let paths = DatasetPaths::new(&dir);
     let bytes = std::fs::read(paths.progress()).unwrap();
-    assert_eq!(&bytes[..8], b"CGWJRNL2");
-    let ranges: Vec<(u64, u64)> = bytes[24..]
+    assert_eq!(&bytes[..8], b"CGWJRNL3");
+    assert_eq!(u64::from_le_bytes(bytes[24..32].try_into().unwrap()), 1);
+    let ranges: Vec<(u64, u64)> = bytes[32..]
         .chunks_exact(16)
         .map(|r| {
             (
@@ -150,7 +152,7 @@ fn crash_resume_across_a_mid_run_knob_switch() {
     // resume must hold), clobber every column the survivors do NOT
     // cover, and resume with the ORIGINAL starting block.
     let keep = ranges.len() / 2;
-    std::fs::write(paths.progress(), &bytes[..24 + keep * 16]).unwrap();
+    std::fs::write(paths.progress(), &bytes[..32 + keep * 16]).unwrap();
     {
         let covered = &ranges[..keep];
         let f = XrdFile::open_rw(&paths.results()).unwrap();

@@ -159,7 +159,7 @@ fn a_torn_journal_append_is_truncated_and_resume_replays_the_rest() {
     let err = cugwas::coordinator::run(&cfg_for(&dir)).unwrap_err();
     assert!(err.to_string().contains("torn"), "{err}");
     let jnl = std::fs::metadata(dir.join("r.progress")).unwrap().len();
-    assert_eq!(jnl, 24 + 8, "header plus half a record must be on disk");
+    assert_eq!(jnl, 32 + 8, "header plus half a record must be on disk");
     fault::disarm();
 
     // Resume: the torn tail is truncated away and the exact uncovered

@@ -1,0 +1,220 @@
+//! Multi-trait & permutation batching acceptance: one streamed pass
+//! over `X_R` must answer `t` phenotypes exactly as `t` independent
+//! single-trait passes would — bit for bit, across thread counts, lane
+//! counts and the shared block cache — permutation mode must be
+//! reproducible from its seed alone, and the v3 journal must carry the
+//! trait dimension across a crash + mid-run knob switch.
+
+use cugwas::coordinator::{
+    run, verify_against_oracle_multi, Engine, PipelineConfig, SegmentKnobs, SegmentPlan,
+};
+use cugwas::gwas::phenotype_batch;
+use cugwas::gwas::problem::Dims;
+use cugwas::storage::dataset::DatasetPaths;
+use cugwas::storage::{generate, BlockCache, XrdFile};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_mt_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Copy a dataset but swap its phenotype for `y` (raw LE f64 file).
+fn clone_with_phenotype(src: &Path, dst: &Path, y: &[f64]) {
+    std::fs::create_dir_all(dst).unwrap();
+    for f in ["meta.txt", "kinship.bin", "covariates.bin", "xr.xrd"] {
+        std::fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+    let bytes: Vec<u8> = y.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(dst.join("phenotype.bin"), bytes).unwrap();
+}
+
+/// Read the full `r.xrd` payload as f64s (rows × m, column-major).
+fn read_results(dir: &Path, rows: usize, m: usize) -> Vec<f64> {
+    let f = XrdFile::open(&dir.join("r.xrd")).unwrap();
+    let mut out = vec![0.0f64; rows * m];
+    f.read_cols_into(0, m as u64, &mut out).unwrap();
+    out
+}
+
+/// Acceptance (a): the batched `t`-trait pipeline output is column-
+/// identical to `t` independent single-trait runs — across thread
+/// counts, lane counts, and with the shared block cache on.
+#[test]
+fn batched_pass_matches_independent_single_trait_runs_bitwise() {
+    const TRAITS: usize = 4;
+    const SEED: u64 = 2013;
+    let dir = tmpdir("batch_vs_singles");
+    let dims = Dims::new(80, 2, 1024).unwrap();
+    generate(&dir, dims, 128, 31).unwrap();
+    let p = dims.p();
+
+    // Single-trait references: one run per batched phenotype column.
+    let (_, _, _, y) = cugwas::storage::dataset::load_sidecars(&dir).unwrap();
+    let ys = phenotype_batch(&y, TRAITS, SEED);
+    let mut singles: Vec<Vec<f64>> = Vec::new();
+    for j in 0..TRAITS {
+        let sdir = tmpdir(&format!("single_{j}"));
+        clone_with_phenotype(&dir, &sdir, ys.col(j));
+        let mut cfg = PipelineConfig::new(&sdir, 256);
+        cfg.threads = 1;
+        run(&cfg).unwrap();
+        singles.push(read_results(&sdir, p, dims.m));
+        std::fs::remove_dir_all(&sdir).unwrap();
+    }
+
+    // The batched pass under several parallel/caching shapes.
+    let cache = Arc::new(BlockCache::new(32 << 20));
+    for (threads, lanes, cached) in [(1, 1, false), (4, 1, false), (4, 2, false), (4, 2, true)] {
+        let mut cfg = PipelineConfig::new(&dir, 256);
+        cfg.threads = threads;
+        cfg.ngpus = lanes;
+        cfg.traits = TRAITS;
+        cfg.perm_seed = SEED;
+        cfg.cache = cached.then(|| Arc::clone(&cache));
+        run(&cfg).unwrap();
+        let batched = read_results(&dir, p * TRAITS, dims.m);
+        for (j, single) in singles.iter().enumerate() {
+            for c in 0..dims.m {
+                for r in 0..p {
+                    assert_eq!(
+                        batched[c * p * TRAITS + j * p + r].to_bits(),
+                        single[c * p + r].to_bits(),
+                        "trait {j}, snp {c}, row {r} at threads={threads}, lanes={lanes}, \
+                         cache={cached}"
+                    );
+                }
+            }
+        }
+        verify_against_oracle_multi(&dir, 1e-8, TRAITS, SEED).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Acceptance (b): permutation mode is a pure function of `perm_seed` —
+/// same seed, same bytes; a different seed moves the permuted columns
+/// but never the observed phenotype in column 0.
+#[test]
+fn permutation_mode_is_reproducible_under_its_seed() {
+    const TRAITS: usize = 3; // 1 observed + 2 permutations
+    let dir = tmpdir("perm_seed");
+    let dims = Dims::new(64, 2, 512).unwrap();
+    generate(&dir, dims, 128, 7).unwrap();
+    let p = dims.p();
+
+    let run_with = |seed: u64| {
+        let mut cfg = PipelineConfig::new(&dir, 128);
+        cfg.threads = 2;
+        cfg.traits = TRAITS;
+        cfg.perm_seed = seed;
+        run(&cfg).unwrap();
+        read_results(&dir, p * TRAITS, dims.m)
+    };
+
+    let a = run_with(41);
+    let b = run_with(41);
+    assert!(
+        a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "same perm seed must reproduce every byte"
+    );
+    let c = run_with(42);
+    // Column 0 is the observed phenotype — seed-invariant.
+    for snp in 0..dims.m {
+        for r in 0..p {
+            assert_eq!(
+                a[snp * p * TRAITS + r].to_bits(),
+                c[snp * p * TRAITS + r].to_bits(),
+                "observed-trait results must not depend on the permutation seed"
+            );
+        }
+    }
+    // The shuffled columns must actually move with the seed.
+    assert!(
+        a.iter().zip(&c).any(|(x, y)| x.to_bits() != y.to_bits()),
+        "permuted columns should differ between seeds"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Acceptance (c): crash-resume across a mid-run knob switch preserves
+/// the trait dimension. The v3 journal pins `t` in its header; a
+/// truncated journal resumes exactly the uncovered columns at full
+/// `p·t` rows, and a resume attempt with a different width is refused.
+#[test]
+fn journal_v3_resume_preserves_the_trait_dimension_across_a_replan() {
+    const TRAITS: usize = 3;
+    const SEED: u64 = 99;
+    let dir = tmpdir("resume_traits");
+    let dims = Dims::new(64, 2, 1024).unwrap();
+    generate(&dir, dims, 64, 17).unwrap();
+    let p = dims.p();
+    let mut cfg = PipelineConfig::new(&dir, 64);
+    cfg.threads = 1;
+    cfg.traits = TRAITS;
+    cfg.perm_seed = SEED;
+    cfg.resume = true; // journal every window
+
+    // A run whose second half streams under switched knobs.
+    let knobs = |block, hb, db, lt| SegmentKnobs {
+        block,
+        host_buffers: hb,
+        device_buffers: db,
+        lane_threads: lt,
+    };
+    let plans = [
+        SegmentPlan { knobs: knobs(64, 3, 2, 1), windows: 6 },
+        SegmentPlan { knobs: knobs(128, 4, 3, 1), windows: usize::MAX },
+    ];
+    Engine::open(&cfg).unwrap().execute_plans(&cfg, &plans).unwrap();
+    verify_against_oracle_multi(&dir, 1e-8, TRAITS, SEED).unwrap();
+
+    // The v3 header pins the batch width.
+    let paths = DatasetPaths::new(&dir);
+    let bytes = std::fs::read(paths.progress()).unwrap();
+    assert_eq!(&bytes[..8], b"CGWJRNL3");
+    assert_eq!(
+        u64::from_le_bytes(bytes[24..32].try_into().unwrap()),
+        TRAITS as u64,
+        "journal header must carry the trait width"
+    );
+    let ranges: Vec<(u64, u64)> = bytes[32..]
+        .chunks_exact(16)
+        .map(|r| {
+            (
+                u64::from_le_bytes(r[..8].try_into().unwrap()),
+                u64::from_le_bytes(r[8..].try_into().unwrap()),
+            )
+        })
+        .collect();
+    assert_eq!(ranges.iter().map(|&(_, n)| n).sum::<u64>(), dims.m as u64);
+
+    // Crash: keep half the journal, clobber every column the survivors
+    // do not cover — all p·t rows of it — then resume.
+    let keep = ranges.len() / 2;
+    std::fs::write(paths.progress(), &bytes[..32 + keep * 16]).unwrap();
+    {
+        let covered = &ranges[..keep];
+        let f = XrdFile::open_rw(&paths.results()).unwrap();
+        for col in 0..dims.m as u64 {
+            if !covered.iter().any(|&(c0, n)| col >= c0 && col < c0 + n) {
+                f.write_cols(col, 1, &vec![f64::NAN; p * TRAITS]).unwrap();
+            }
+        }
+    }
+    let report = Engine::open(&cfg).unwrap().execute(&cfg).unwrap();
+    assert!(report.blocks >= 1, "uncovered columns must be recomputed");
+    verify_against_oracle_multi(&dir, 1e-8, TRAITS, SEED).unwrap();
+
+    // Width mismatch is refused, not silently recomputed: the journal
+    // was written for t=3, so a t=2 resume must fail loudly.
+    let mut narrow = cfg.clone();
+    narrow.traits = 2;
+    let err = Engine::open(&narrow).unwrap().execute(&narrow).unwrap_err();
+    assert!(
+        err.to_string().contains("traits=3"),
+        "resume across a width change must name the journal's width: {err}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

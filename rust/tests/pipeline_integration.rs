@@ -197,9 +197,9 @@ fn f32_results_file_roundtrips_with_precision_loss_bounded() {
 
 // ---- checkpoint / resume (long runs must survive interruption) ----------
 
-/// v2 journal layout: 24-byte header (magic + m + block) then 16-byte
-/// (col0, ncols) records.
-const JHEADER: usize = 24;
+/// v3 journal layout: 32-byte header (magic + m + block + traits) then
+/// 16-byte (col0, ncols) records.
+const JHEADER: usize = 32;
 const JRECORD: usize = 16;
 
 #[test]

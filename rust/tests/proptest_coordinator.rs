@@ -118,6 +118,7 @@ fn prop_sim_pipelined_never_loses_to_naive() {
             block,
             ngpus,
             host_buffers: g.usize_in(2, 4),
+            traits: 1,
             profile,
         };
         let cu = simulate(Algo::CuGwas, &cfg).map_err(|e| e.to_string())?;
@@ -151,6 +152,7 @@ fn prop_sim_timeline_covers_every_block_once() {
             block,
             ngpus,
             host_buffers: 3,
+            traits: 1,
             profile: HardwareProfile::quadro(),
         };
         let rep = simulate(Algo::CuGwas, &cfg).map_err(|e| e.to_string())?;

@@ -42,6 +42,9 @@ block = 16
 [job.gamma]
 dataset = "{s1}"
 block = 16
+# Inert while adapt=false, but it keeps gamma from coalescing onto
+# alpha's pass — this test wants gamma to stream (from the cache).
+adapt_every = 32
 "#,
         s1 = s1.display(),
         s2 = s2.display(),

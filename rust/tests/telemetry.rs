@@ -45,11 +45,14 @@ fn serve_run_populates_the_prometheus_exposition() {
     let d = tmpdir("serve");
     generate(&d, Dims::new(32, 2, 64).unwrap(), 16, 9).unwrap();
     // Two jobs on one dataset: the second streams from the shared cache,
-    // so hit and miss phases both land in the histograms.
+    // so hit and miss phases both land in the histograms. Its
+    // adapt_every nudge (inert while adapt=false) keeps it from
+    // coalescing onto the first job's pass — this test needs the second
+    // pass to actually stream.
     let toml = format!(
         "[service]\nworkers = 1\ncache_mb = 16\n\n\
          [job.first]\ndataset = \"{d}\"\nblock = 16\n\n\
-         [job.second]\ndataset = \"{d}\"\nblock = 16\n",
+         [job.second]\ndataset = \"{d}\"\nblock = 16\nadapt_every = 32\n",
         d = d.display()
     );
     let cfg = ServiceConfig::from_toml(&toml).unwrap();

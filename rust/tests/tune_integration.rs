@@ -31,7 +31,8 @@ fn tune_plan_apply_roundtrip_matches_oracle() {
     assert!(rates.reliable, "2 MiB dataset must probe reliably");
     assert!(rates.disk_mbps > 0.0 && rates.pcie_gbps > 0.0);
 
-    let opts = PlanOpts { total_threads: 2, max_lanes: 1, host_mem_bytes: 0, max_block: 1024 };
+    let opts =
+        PlanOpts { total_threads: 2, max_lanes: 1, host_mem_bytes: 0, max_block: 1024, traits: 1 };
     let profile = plan(&rates, dims, &opts);
     assert!(profile.predicted().is_some(), "reliable probe must yield a prediction");
     assert!(profile.block >= 64 && profile.block <= 1024);
@@ -73,12 +74,12 @@ fn degenerate_probe_on_tiny_dataset_falls_back_to_safe_defaults() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
-/// Parse the v2 journal's records (the test double-checks the on-disk
+/// Parse the v3 journal's records (the test double-checks the on-disk
 /// format the adaptive path journals its mixed-width windows in).
 fn journal_ranges(path: &std::path::Path) -> Vec<(u64, u64)> {
     let bytes = std::fs::read(path).unwrap();
-    assert!(bytes.len() >= 24 && &bytes[..8] == b"CGWJRNL2", "v2 journal header");
-    bytes[24..]
+    assert!(bytes.len() >= 32 && &bytes[..8] == b"CGWJRNL3", "v3 journal header");
+    bytes[32..]
         .chunks_exact(16)
         .map(|r| {
             (
@@ -118,7 +119,7 @@ fn adaptive_run_is_correct_observed_in_metrics_and_resumable_mid_switch() {
     assert_eq!(ranges.iter().map(|&(_, n)| n).sum::<u64>(), dims.m as u64);
     let keep = ranges.len() / 2;
     let bytes = std::fs::read(paths.progress()).unwrap();
-    std::fs::write(&paths.progress(), &bytes[..24 + keep * 16]).unwrap();
+    std::fs::write(&paths.progress(), &bytes[..32 + keep * 16]).unwrap();
     {
         use cugwas::storage::XrdFile;
         let covered: Vec<(u64, u64)> = ranges[..keep].to_vec();

@@ -24,10 +24,12 @@ import os
 import sys
 
 # The gated metrics: live streaming throughput of the pipelined solver,
-# and the cache-hit serving throughput of the zero-copy block plane.
+# the cache-hit serving throughput of the zero-copy block plane, and the
+# multi-trait batching rate (SNP·trait solves/s at the wide batch width).
 GATES = [
     ("headline_table", "live_cugwas_snps_per_sec"),
     ("service_throughput", "cache_hit_snps_per_sec"),
+    ("service_throughput", "batched_snps_x_traits_per_sec"),
 ]
 # Soft gate: fail only on a >20% drop vs. the recent median (medians
 # absorb one noisy CI runner; a hard cliff still fails loudly).
@@ -38,6 +40,7 @@ COLUMNS = [
     ("headline_table", "live_cugwas_snps_per_sec"),
     ("service_throughput", "cache_hit_snps_per_sec"),
     ("service_throughput", "shared_cache_speedup"),
+    ("service_throughput", "batched_snps_x_traits_per_sec"),
     ("headline_table", "cugwas1_vs_ooc"),
     ("headline_table", "cugwas4_vs_ooc"),
 ]
@@ -114,10 +117,12 @@ def main(argv):
         past = [m.get((gate_bench, gate_row)) for _, m in history]
         past = [v for v in past if v is not None]
         if not past:
-            # A fresh repo (or a metric added this push) has nothing to
-            # compare against — there is no baseline to regress from, so
-            # the gate is skipped even if the current value is missing.
-            print(f"gate: {gate_row} — no baseline, gate skipped")
+            # A fresh repo — or a headline that first appears in this
+            # push — has no history for this series. A new series has no
+            # baseline to regress from, so the gate is skipped even if
+            # the current value is missing; it starts being enforced on
+            # the next push, once today's value is in the history.
+            print(f"gate: {gate_row} — new series (no baseline), gate skipped")
             continue
         if cur_val is None:
             print(f"gate: {gate_row} missing from the current run — failing")
