@@ -12,14 +12,20 @@
 //! The sweep also re-checks determinism on the spot: each parallel
 //! result is compared bit-for-bit against the single-thread result, so a
 //! kernel regression that breaks the reduction order fails this bench
-//! loudly rather than shifting numbers quietly.
+//! loudly rather than shifting numbers quietly. The microkernel section
+//! does the same across *paths*: the register-tiled microkernel and the
+//! scalar reference nest must agree bit for bit on every element, and
+//! the headline `gemm_gflops`/`trsm_gflops` rows (gated by
+//! `tools/bench_trend.py`) report the microkernel rate alongside its
+//! speedup over the reference and the fraction of the tuner's probed
+//! kernel rate it reaches.
 //!
 //! ```bash
 //! cargo bench --bench linalg_micro
 //! ```
 
 use cugwas::bench::{Bench, Table};
-use cugwas::linalg::{gemm, potrf, trsm_lower_left, Matrix};
+use cugwas::linalg::{gemm, micro, potrf, trsm_lower_left, Matrix};
 use cugwas::util::{threads, XorShift};
 
 fn json_line(kernel: &str, shape: &str, nthreads: usize, median_secs: f64, gflops: f64) {
@@ -27,6 +33,21 @@ fn json_line(kernel: &str, shape: &str, nthreads: usize, median_secs: f64, gflop
         "{{\"bench\":\"linalg_micro\",\"kernel\":\"{kernel}\",\"shape\":\"{shape}\",\
          \"threads\":{nthreads},\"median_secs\":{median_secs:.6},\"gflops\":{gflops:.3}}}"
     );
+}
+
+/// A headline row `tools/bench_trend.py` tracks (and, for the gated
+/// rows, enforces) across pushes.
+fn headline(row: &str, value: f64) {
+    println!("{{\"bench\":\"linalg_micro\",\"row\":\"{row}\",\"value\":{value:.3}}}");
+}
+
+/// Bit-exact comparison across kernel paths: value equality is not
+/// enough (it conflates `-0.0`/`0.0`), the per-element contract is on
+/// the bits.
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: element {i} differs: {x:e} vs {y:e}");
+    }
 }
 
 fn main() {
@@ -176,4 +197,87 @@ fn main() {
         }
     }
     ts.print();
+
+    // ---- microkernel vs scalar reference (the tentpole metric) ----------
+    // Forced-path runs on the same inputs: parity is asserted bit for
+    // bit, the speedup and headline GFlop/s are emitted for the trend
+    // gate, and each headline is also reported as a fraction of the
+    // tuner's probed kernel rate (the "roofline" the DES prices with).
+    // `main` is single-threaded here, so flipping the forced path is
+    // race-free; it is restored to auto before exit.
+    let probed = cugwas::tune::probe_kernels(1, false).expect("kernel probe");
+    let peak = probed[&1];
+    let mut tm = Table::new(
+        "microkernel vs reference (1 thread)",
+        &["kernel", "shape", "micro", "reference", "micro GFlop/s", "speedup"],
+    );
+
+    {
+        let (m, k, n) = (512usize, 512usize, 512usize);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        let _g = threads::with_budget(1);
+        let mut run = |forced: bool, label: &str| {
+            micro::set_forced(Some(forced));
+            let mut c = Matrix::zeros(m, n);
+            let meas = bench.measure(label, || {
+                gemm(1.0, &a, &b, 0.0, &mut c).unwrap();
+            });
+            (c, meas.median())
+        };
+        let (c_micro, d_micro) = run(true, "gemm 512³ micro");
+        let (c_ref, d_ref) = run(false, "gemm 512³ reference");
+        micro::set_forced(None);
+        assert_bits_eq(&c_micro, &c_ref, "gemm micro vs reference");
+        let gflops = flops / d_micro.as_secs_f64() / 1e9;
+        let speedup = d_ref.as_secs_f64() / d_micro.as_secs_f64();
+        headline("gemm_gflops", gflops);
+        headline("gemm_micro_speedup", speedup);
+        headline("gemm_roofline_frac", gflops / peak.gemm_gflops.max(1e-12));
+        tm.row(&[
+            "gemm".into(),
+            format!("{m}x{k}x{n}"),
+            cugwas::bench::dur_cell(d_micro),
+            cugwas::bench::dur_cell(d_ref),
+            format!("{gflops:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+
+    {
+        let (nn, nrhs) = (512usize, 256usize);
+        let spd = Matrix::rand_spd(nn, 4.0, &mut rng);
+        let l = potrf(&spd).unwrap();
+        let b0 = Matrix::randn(nn, nrhs, &mut rng);
+        let flops = (nn * nn * nrhs) as f64;
+        let _g = threads::with_budget(1);
+        let mut run = |forced: bool, label: &str| {
+            micro::set_forced(Some(forced));
+            let mut b = b0.clone();
+            let meas = bench.measure(label, || {
+                b = b0.clone();
+                trsm_lower_left(&l, &mut b).unwrap();
+            });
+            (b, meas.median())
+        };
+        let (x_micro, d_micro) = run(true, "trsm 512x256 micro");
+        let (x_ref, d_ref) = run(false, "trsm 512x256 reference");
+        micro::set_forced(None);
+        assert_bits_eq(&x_micro, &x_ref, "trsm micro vs reference");
+        let gflops = flops / d_micro.as_secs_f64() / 1e9;
+        let speedup = d_ref.as_secs_f64() / d_micro.as_secs_f64();
+        headline("trsm_gflops", gflops);
+        headline("trsm_micro_speedup", speedup);
+        headline("trsm_roofline_frac", gflops / peak.trsm_gflops.max(1e-12));
+        tm.row(&[
+            "trsm".into(),
+            format!("{nn}x{nrhs}"),
+            cugwas::bench::dur_cell(d_micro),
+            cugwas::bench::dur_cell(d_ref),
+            format!("{gflops:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    tm.print();
 }

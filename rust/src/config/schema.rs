@@ -110,6 +110,7 @@ const FAULT_KEYS: &[&str] = &[
     "inject_read_delay_ms",
     "inject_corrupt_every",
     "inject_torn_append_at",
+    "inject_commit_crash_at",
     "inject_wedge_lane",
     "inject_wedge_at_chunk",
     "inject_wedge_ms",
@@ -147,6 +148,7 @@ fn fault_from_doc(doc: &Doc) -> Result<FaultToleranceConfig> {
         read_delay_ms: key("inject_read_delay_ms", 0, 0, 60_000)? as u64,
         corrupt_every: key("inject_corrupt_every", 0, 0, i64::MAX)? as u64,
         torn_append_at: key("inject_torn_append_at", 0, 0, i64::MAX)? as u64,
+        commit_crash_at: key("inject_commit_crash_at", 0, 0, i64::MAX)? as u64,
         wedge_lane: match key("inject_wedge_lane", -1, -1, 4_096)? {
             -1 => NO_LANE,
             v => v as usize,

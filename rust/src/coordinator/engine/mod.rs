@@ -43,7 +43,8 @@ use crate::gwas::sloop::SloopScratch;
 use crate::runtime::{ArtifactEntry, ArtifactKey, Kind, Manifest};
 use crate::storage::fault;
 use crate::storage::{
-    dataset, AioEngine, AioStats, BlockCache, Header, ReadProbe, SlabPool, Throttle, XrdFile,
+    dataset, AioEngine, AioHandle, AioStats, BlockCache, Header, ReadProbe, SlabPool, Throttle,
+    XrdFile,
 };
 use crate::telemetry::{self, StallVerdict};
 use crate::tune::{fit_disk_latency, replan_knobs, LiveObs};
@@ -51,7 +52,7 @@ use crate::util::threads;
 use segment::{run_segment, take_windows, SegmentCtx};
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub use segment::SegmentPlan;
@@ -412,7 +413,7 @@ impl Engine {
             let j = Journal::create(&paths.progress(), dims.m as u64, cfg.block as u64, t as u64)?;
             Ok((XrdFile::create(&paths.results(), r_header)?, j))
         };
-        let (rfile, mut journal, done_ranges) = if cfg.resume {
+        let (rfile, journal, done_ranges) = if cfg.resume {
             let (journal, ranges) =
                 Journal::open_resume(&paths.progress(), dims.m as u64, cfg.block as u64, t as u64)?;
             match XrdFile::open_rw(&paths.results()) {
@@ -430,6 +431,13 @@ impl Engine {
             (f, j, Vec::new())
         };
         let writer = AioEngine::new(rfile.with_throttle(cfg.write_throttle));
+        // Shared with the writer's I/O thread: the two-phase boundary
+        // appends intents on the coordinator thread and the background
+        // `sync_then` task appends the durable commit record.
+        let journal = Arc::new(Mutex::new(journal));
+        // The in-flight durable commit of the previous segment boundary
+        // (reaped at the next boundary, or after the last segment below).
+        let mut pending_commit: Option<AioHandle> = None;
 
         // Work list: the uncovered column ranges, streamed as windows.
         let mut remaining: VecDeque<(u64, u64)> =
@@ -485,11 +493,12 @@ impl Engine {
             let before = SegmentSnapshot::take(&metrics, self.reader.stats());
             let t_seg = Instant::now();
             // Segment supervision: a lane that dies or wedges mid-stream
-            // surfaces as [`Error::LaneFault`]. Replay is safe because
-            // nothing from the failed attempt was journaled (records
-            // append only after the segment's data sync), result writes
-            // are idempotent positioned writes, and lanes carry no state
-            // across chunks — so recovery respawns the lane set and
+            // surfaces as [`Error::LaneFault`]. Replay is safe because a
+            // failed attempt never reaches the boundary, so it appends no
+            // intent records (and schedules no commit) — resume ignores
+            // any intent without a covering commit anyway — result
+            // writes are idempotent positioned writes, and lanes carry
+            // no state across chunks. Recovery respawns the lane set and
             // re-runs the same window list, bounded by the policy's
             // respawn budget.
             loop {
@@ -515,7 +524,14 @@ impl Engine {
                         result_pool: &mut self.result_pool,
                         scratch: &mut self.scratch,
                     };
-                    run_segment(ctx, &items, &mut metrics, &mut journal, &mut device_secs)
+                    run_segment(
+                        ctx,
+                        &items,
+                        &mut metrics,
+                        &journal,
+                        &mut pending_commit,
+                        &mut device_secs,
+                    )
                 };
                 match res {
                     Ok(()) => break,
@@ -614,6 +630,25 @@ impl Engine {
                 }
                 metrics.add(Phase::Replan, t0.elapsed());
             }
+        }
+
+        // The last segment's durable commit is still on the writer's I/O
+        // thread — reap it so the run only reports success once every
+        // journaled window is actually committed on disk.
+        if let Some(h) = pending_commit.take() {
+            let t0 = Instant::now();
+            let (_, res) = h.wait();
+            let waited = t0.elapsed();
+            metrics.add(Phase::WriteWait, waited);
+            telemetry::span(
+                "journal_commit_wait",
+                "coordinator",
+                telemetry::trace::TID_COORD,
+                t0,
+                waited,
+                &[],
+            );
+            res?;
         }
 
         self.stats.runs += 1;

@@ -9,8 +9,13 @@
 //!   coordinator instead tracks how many chunks each lane still owes
 //!   (`outstanding`) and drains exactly those, so the lane threads — and
 //!   their warmed-up kernel workers — survive into the next segment.
-//!   Only the write flush and the journal sync mark the boundary (a
-//!   journaled window must be durable before it is recorded).
+//!   Only the write flush and the journal *intent* append mark the
+//!   boundary; the durable commit record is synced by a task running on
+//!   the writer aio engine's background thread
+//!   ([`AioEngine::sync_then`]) and is reaped at the **next** segment
+//!   boundary, so the commit fsync overlaps the following segment's
+//!   reads instead of stalling this one. Resume treats an intent with
+//!   no covering commit as uncommitted and replays the segment.
 //! * Blocks flow **by reference** (the zero-copy plane): the aio engine
 //!   reads disk bytes straight into an aligned slab, the published
 //!   [`Block`] is shared with the [`BlockCache`] by `Arc` clone, and
@@ -31,6 +36,7 @@ use crate::gwas::sloop::{sloop_block_into, sloop_from_reductions_into, SloopScra
 use crate::storage::{AioEngine, AioHandle, Block, BlockCache, BlockKey, SlabHandle, SlabPool};
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{RecvTimeoutError, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One entry of an explicit segment schedule (the testing/benchmark
@@ -269,13 +275,22 @@ fn process_out(
 }
 
 /// Stream one batch of column windows under a single knob configuration.
-/// The journal is appended (after the data sync) for every persisted
-/// window; device-compute seconds accumulate into `device_secs`.
+///
+/// The boundary is two-phase: every persisted window gets an *intent*
+/// record (buffered append, no fsync) once its data write has been
+/// flushed, and the *durable commit* — data fsync + commit record +
+/// journal fsync — is scheduled on the writer aio engine's background
+/// thread via [`AioEngine::sync_then`]. The commit handle lands in
+/// `pending_commit` and is reaped at the start of the **next** boundary
+/// (or by the caller after the last segment), so the fsync latency
+/// overlaps the next segment's reads. Device-compute seconds accumulate
+/// into `device_secs`.
 pub(super) fn run_segment(
     mut ctx: SegmentCtx<'_>,
     items: &[(u64, usize)],
     metrics: &mut Metrics,
-    journal: &mut crate::coordinator::journal::Journal,
+    journal: &Arc<Mutex<crate::coordinator::journal::Journal>>,
+    pending_commit: &mut Option<AioHandle>,
     device_secs: &mut f64,
 ) -> Result<()> {
     let n = ctx.n;
@@ -524,11 +539,50 @@ pub(super) fn run_segment(
         st.completed.push((wc0, wlen));
         ctx.result_pool.put(wbuf);
     }
-    ctx.writer.sync().wait().1?;
-    // Journal after the data sync so a journaled window is truly durable.
-    for (wc0, wlen) in st.completed.drain(..) {
-        journal.append(wc0, wlen)?;
+    // ---- two-phase journal boundary --------------------------------------
+    // Reap the *previous* segment's durable commit before appending this
+    // segment's intents: the on-disk record order stays strictly
+    // `intents, commit, intents, commit, …`, which is what resume's
+    // "a commit covers exactly the pending intents before it" rule
+    // expects. A commit failure therefore surfaces one boundary late —
+    // but always before any newer intents are written over it.
+    if let Some(h) = pending_commit.take() {
+        let t0 = Instant::now();
+        let (_, res) = h.wait();
+        let waited = t0.elapsed();
+        metrics.add(Phase::WriteWait, waited);
+        crate::telemetry::span(
+            "journal_commit_wait",
+            "coordinator",
+            crate::telemetry::trace::TID_COORD,
+            t0,
+            waited,
+            &[],
+        );
+        res?;
     }
-    journal.sync()?;
+    // Intent phase: record what this segment handed to the writer. No
+    // fsync here — an intent without a covering commit is replayed on
+    // resume (result writes are idempotent), so a buffered append is
+    // enough and the boundary never stalls on the journal.
+    let n_intents = {
+        let mut jn = journal.lock().unwrap_or_else(|e| e.into_inner());
+        let mut n = 0u64;
+        for (wc0, wlen) in st.completed.drain(..) {
+            jn.append_intent(wc0, wlen)?;
+            n += 1;
+        }
+        n
+    };
+    // Durable phase: data fsync + commit record + journal fsync, all on
+    // the writer's I/O thread *behind* every write queued above (the
+    // queue is FIFO). The next segment's reads overlap this.
+    if n_intents > 0 {
+        let jn = Arc::clone(journal);
+        *pending_commit = Some(ctx.writer.sync_then(move |sync_res| {
+            sync_res?;
+            jn.lock().unwrap_or_else(|e| e.into_inner()).commit(n_intents)
+        }));
+    }
     Ok(())
 }

@@ -1,42 +1,57 @@
-//! Checkpoint journal v3 — crash-safe progress for multi-hour streams.
+//! Checkpoint journal v4 — crash-safe progress with a two-phase commit
+//! that keeps the segment boundary off the pipeline's critical path.
 //!
 //! The v1 journal was a bare sequence of block indices, which made a
 //! resumed run *silently mis-indexed* whenever the block size differed
-//! from the original run (a tuned profile is exactly such a change). v2
-//! fixed both problems at once; v3 adds the trait-batch width `t` to the
-//! header, because a resumed multi-trait run with a different `t` would
-//! read/write result columns of the wrong height:
+//! from the original run. v2 added a parameter header and column-range
+//! records; v3 added the trait-batch width `t`. All three shared one
+//! performance flaw: every record was appended *after* the segment's
+//! data sync and followed by its own journal sync, so the boundary
+//! quiesced the whole pipeline — reads, compute and writes all waited
+//! on two serial fsyncs. v4 splits the record in two:
 //!
-//! * a **header** persists the run parameters that define block indices
-//!   and the result geometry (`m`, the starting block size `nb`, the
-//!   trait width `t`) — resuming with different parameters is refused
-//!   with a clear [`Error::Config`], never silently misread;
-//! * records are **column ranges** `(col0, ncols)` rather than block
-//!   indices, so a run whose block size changed mid-stream (the adaptive
-//!   re-planner) journals each persisted window exactly as written and
-//!   resume recomputes precisely the uncovered columns.
+//! * an **intent** record (`kind = 1`) is appended *without* any sync
+//!   the moment a segment's results are handed to the writer — it costs
+//!   one buffered `write(2)`;
+//! * a **commit** record (`kind = 2`, carrying the number of intents it
+//!   covers) is appended and `fdatasync`ed by [`Journal::commit`], which
+//!   the engine schedules on the aio writer's background thread *after*
+//!   the data sync, while the next segment's reads are already in
+//!   flight.
+//!
+//! Resume trusts only intents covered by a following valid commit: an
+//! intent without a durable commit mark is dropped (and its tail
+//! truncated away), so those columns are recomputed — safe because the
+//! result writes are idempotent (same column ⇒ same offset ⇒ same
+//! bytes). A torn tail (crash mid-append) truncates the same way.
 //!
 //! Layout (all little-endian u64):
 //!
 //! ```text
-//! magic "CGWJRNL3" | m | nb | t       — 32-byte header
-//! (col0, ncols)*                      — 16-byte records, appended after
-//!                                       the corresponding data sync
+//! magic "CGWJRNL4" | m | nb | t        — 32-byte header
+//! (kind, a, b)*                        — 24-byte records:
+//!     kind 1 (intent): a = col0, b = ncols
+//!     kind 2 (commit): a = 0,    b = count of intents it covers
 //! ```
 //!
-//! A torn tail (crash mid-append) is truncated away on resume, so later
-//! appends can never land misaligned behind a partial record. A v2
-//! journal (no trait width) is refused as unrecognized — the engine's
-//! resume fallback recreates it fresh.
+//! The header persists the run parameters that define block indices and
+//! the result geometry (`m`, starting block size `nb`, trait width `t`)
+//! — resuming with different parameters is refused with a clear
+//! [`Error::Config`], never silently misread. A v3-or-older journal is
+//! refused as unrecognized — the engine's resume fallback recreates it
+//! fresh.
 
 use crate::error::{Error, Result};
 use std::io::{Seek, SeekFrom, Write};
 use std::path::Path;
 
 /// Format magic — bump the trailing digit on layout changes.
-pub const MAGIC: [u8; 8] = *b"CGWJRNL3";
+pub const MAGIC: [u8; 8] = *b"CGWJRNL4";
 const HEADER_BYTES: usize = 32;
-const RECORD_BYTES: usize = 16;
+const RECORD_BYTES: usize = 24;
+
+const KIND_INTENT: u64 = 1;
+const KIND_COMMIT: u64 = 2;
 
 /// An open journal, positioned for appending.
 pub struct Journal {
@@ -63,11 +78,12 @@ impl Journal {
     }
 
     /// Open an existing journal for resume, validating its header against
-    /// this run's parameters. Returns the journal plus the persisted
-    /// column ranges. A missing or header-less file starts clean; a
-    /// journal written under different `(m, nb, t)` is refused — resuming
-    /// it with this geometry would recompute (or mis-slice) the wrong
-    /// columns.
+    /// this run's parameters. Returns the journal plus the *committed*
+    /// column ranges — intents not covered by a durable commit mark are
+    /// dropped and truncated away (their columns get recomputed). A
+    /// missing or header-less file starts clean; a journal written under
+    /// different `(m, nb, t)` is refused — resuming it with this
+    /// geometry would recompute (or mis-slice) the wrong columns.
     pub fn open_resume(
         path: &Path,
         m: u64,
@@ -111,43 +127,56 @@ impl Journal {
             )));
         }
         // Parse records up to the first invalid one: everything after it
-        // is untrustworthy, and truncating exactly there keeps the file a
-        // valid prefix (a mid-file filter would misalign the truncation
-        // length against the surviving bytes).
-        let mut ranges = Vec::new();
+        // is untrustworthy. Only intents sealed by a following commit
+        // record (whose count must match the open intents exactly) are
+        // returned; the file is truncated right after the last valid
+        // commit, so uncommitted intents and torn tails both vanish and
+        // future appends stay record-aligned.
+        let mut committed = Vec::new();
+        let mut pending: Vec<(u64, u64)> = Vec::new();
+        let mut records = 0usize;
+        let mut valid_records = 0usize;
         for rec in bytes[HEADER_BYTES..].chunks_exact(RECORD_BYTES) {
-            let col0 = u64::from_le_bytes(rec[..8].try_into().expect("8 bytes"));
-            let ncols = u64::from_le_bytes(rec[8..].try_into().expect("8 bytes"));
-            if ncols == 0 || !col0.checked_add(ncols).is_some_and(|end| end <= m) {
-                break;
+            let kind = u64::from_le_bytes(rec[..8].try_into().expect("8 bytes"));
+            let a = u64::from_le_bytes(rec[8..16].try_into().expect("8 bytes"));
+            let b = u64::from_le_bytes(rec[16..].try_into().expect("8 bytes"));
+            match kind {
+                KIND_INTENT if b > 0 && a.checked_add(b).is_some_and(|end| end <= m) => {
+                    pending.push((a, b));
+                }
+                KIND_COMMIT if a == 0 && !pending.is_empty() && b as usize == pending.len() => {
+                    committed.append(&mut pending);
+                    valid_records = records + 1;
+                }
+                _ => break,
             }
-            ranges.push((col0, ncols));
+            records += 1;
         }
-        let valid = (HEADER_BYTES + ranges.len() * RECORD_BYTES) as u64;
+        let valid = (HEADER_BYTES + valid_records * RECORD_BYTES) as u64;
         let file = std::fs::OpenOptions::new()
             .read(true)
             .write(true)
             .open(path)
             .map_err(|e| Error::io("opening progress journal", e))?;
-        // Drop a torn tail so future appends stay record-aligned.
-        file.set_len(valid).map_err(|e| Error::io("truncating torn journal tail", e))?;
-        Ok((Journal { file }, ranges))
+        file.set_len(valid).map_err(|e| Error::io("truncating journal tail", e))?;
+        Ok((Journal { file }, committed))
     }
 
-    /// Append one persisted column range (call only after the data sync —
-    /// a journaled range must be durable on disk).
-    pub fn append(&mut self, col0: u64, ncols: u64) -> Result<()> {
-        let mut rec = [0u8; RECORD_BYTES];
-        rec[..8].copy_from_slice(&col0.to_le_bytes());
-        rec[8..].copy_from_slice(&ncols.to_le_bytes());
+    /// Phase one: record the *intent* to persist one column range. No
+    /// sync — this is a buffered append on the retire path, called the
+    /// moment the segment's results are handed to the writer. The range
+    /// is not trusted on resume until [`Journal::commit`] seals it.
+    pub fn append_intent(&mut self, col0: u64, ncols: u64) -> Result<()> {
+        let rec = encode(KIND_INTENT, col0, ncols);
         self.file.seek(SeekFrom::End(0)).map_err(|e| Error::io("seeking journal", e))?;
         // Chaos harness: a "torn append" writes a prefix of the record,
         // makes it durable, and reports the crash — exactly the on-disk
         // state a power loss mid-append leaves behind. `open_resume`
-        // must truncate it away.
+        // must truncate it away. The sync error is surfaced: a failed
+        // durability sync must never report success.
         if let Some(k) = crate::storage::fault::torn_append(RECORD_BYTES) {
             self.file.write_all(&rec[..k]).map_err(|e| Error::io("appending journal", e))?;
-            let _ = self.file.sync_data();
+            self.file.sync_data().map_err(|e| Error::io("syncing torn journal append", e))?;
             return Err(Error::io(
                 "journal append torn mid-record (injected crash)",
                 std::io::Error::new(std::io::ErrorKind::WriteZero, "partial record"),
@@ -156,13 +185,37 @@ impl Journal {
         self.file.write_all(&rec).map_err(|e| Error::io("appending progress journal", e))
     }
 
-    /// Flush appended records to stable storage — `fdatasync` on the
-    /// journal *file*, not just the writer's buffer, so a journaled
-    /// range survives power loss. The coordinator calls this at every
-    /// segment boundary, right after the data file's own sync.
-    pub fn sync(&self) -> Result<()> {
-        self.file.sync_data().map_err(|e| Error::io("syncing progress journal", e))
+    /// Phase two: seal the `n` intent records appended since the last
+    /// commit with a durable commit mark — one record append plus one
+    /// `fdatasync` of the journal *file* (not just the writer's buffer),
+    /// so the sealed ranges survive power loss. The engine runs this on
+    /// the aio writer's background thread, after the segment's data
+    /// sync, while the next segment's reads are in flight. A failed
+    /// sync surfaces as [`Error::Io`] — it is the durable-commit error
+    /// path, never swallowed.
+    pub fn commit(&mut self, n: u64) -> Result<()> {
+        debug_assert!(n > 0, "commit with no intents to seal");
+        // Chaos harness: a crash after the intents landed but before the
+        // commit mark — resume must drop the unsealed intents and replay.
+        if crate::storage::fault::commit_crash() {
+            return Err(Error::io(
+                "journal commit crashed before durable mark (injected)",
+                std::io::Error::new(std::io::ErrorKind::Interrupted, "injected crash"),
+            ));
+        }
+        let rec = encode(KIND_COMMIT, 0, n);
+        self.file.seek(SeekFrom::End(0)).map_err(|e| Error::io("seeking journal", e))?;
+        self.file.write_all(&rec).map_err(|e| Error::io("appending journal commit", e))?;
+        self.file.sync_data().map_err(|e| Error::io("syncing journal commit", e))
     }
+}
+
+fn encode(kind: u64, a: u64, b: u64) -> [u8; RECORD_BYTES] {
+    let mut rec = [0u8; RECORD_BYTES];
+    rec[..8].copy_from_slice(&kind.to_le_bytes());
+    rec[8..16].copy_from_slice(&a.to_le_bytes());
+    rec[16..].copy_from_slice(&b.to_le_bytes());
+    rec
 }
 
 /// Complement of the persisted ranges over `[0, m)`: the column spans a
@@ -199,16 +252,68 @@ mod tests {
     }
 
     #[test]
-    fn create_append_resume_roundtrip() {
+    fn create_append_commit_resume_roundtrip() {
         let p = tmpfile("rt");
         let mut j = Journal::create(&p, 40, 8, 1).unwrap();
-        j.append(0, 8).unwrap();
-        j.append(8, 8).unwrap();
-        j.sync().unwrap();
+        j.append_intent(0, 8).unwrap();
+        j.append_intent(8, 8).unwrap();
+        j.commit(2).unwrap();
         drop(j);
         let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8), (8, 8)]);
         assert_eq!(uncovered(40, &ranges), vec![(16, 24)]);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn uncommitted_intents_are_dropped_and_truncated() {
+        // The two-phase contract: an intent without a durable commit
+        // mark is exactly a crash between handing results to the writer
+        // and the background commit — resume must replay those columns.
+        let p = tmpfile("uncommitted");
+        let mut j = Journal::create(&p, 40, 8, 1).unwrap();
+        j.append_intent(0, 8).unwrap();
+        j.commit(1).unwrap();
+        j.append_intent(8, 8).unwrap();
+        j.append_intent(16, 8).unwrap();
+        drop(j); // crash before commit
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
+        assert_eq!(ranges, vec![(0, 8)], "unsealed intents must not count as done");
+        assert_eq!(
+            std::fs::metadata(&p).unwrap().len(),
+            32 + 2 * 24,
+            "truncated right after the last valid commit"
+        );
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn commit_count_mismatch_invalidates_the_tail() {
+        // A commit that doesn't cover the open intents exactly is
+        // corruption: nothing after it can be trusted.
+        let p = tmpfile("badcount");
+        let mut j = Journal::create(&p, 40, 8, 1).unwrap();
+        j.append_intent(0, 8).unwrap();
+        j.commit(5).unwrap(); // wrong count
+        drop(j);
+        let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
+        assert!(ranges.is_empty());
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 32);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn multiple_commit_cycles_accumulate() {
+        let p = tmpfile("cycles");
+        let mut j = Journal::create(&p, 64, 8, 1).unwrap();
+        j.append_intent(0, 8).unwrap();
+        j.append_intent(8, 8).unwrap();
+        j.commit(2).unwrap();
+        j.append_intent(16, 8).unwrap();
+        j.commit(1).unwrap();
+        drop(j);
+        let (_j, ranges) = Journal::open_resume(&p, 64, 8, 1).unwrap();
+        assert_eq!(ranges, vec![(0, 8), (8, 8), (16, 8)]);
         std::fs::remove_file(&p).unwrap();
     }
 
@@ -226,9 +331,9 @@ mod tests {
 
     #[test]
     fn mismatched_trait_width_is_refused() {
-        // The v3 guarantee: a journal from a t-wide run cannot silently
-        // resume a run with a different trait batch — the result columns
-        // would have the wrong height.
+        // A journal from a t-wide run cannot silently resume a run with
+        // a different trait batch — the result columns would have the
+        // wrong height.
         let p = tmpfile("traits");
         Journal::create(&p, 40, 8, 4).unwrap();
         let err = Journal::open_resume(&p, 40, 8, 1).unwrap_err();
@@ -240,13 +345,17 @@ mod tests {
     }
 
     #[test]
-    fn v2_journal_is_refused_as_unrecognized() {
-        // Old 24-byte-header files (magic CGWJRNL2) must not parse: the
-        // engine treats the Config error as "recreate fresh".
-        let p = tmpfile("v2");
+    fn v3_journal_is_refused_as_unrecognized() {
+        // Old single-phase files (magic CGWJRNL3, 16-byte records) must
+        // not parse: the engine treats the Config error as "recreate
+        // fresh" rather than misreading ranges at the wrong stride.
+        let p = tmpfile("v3");
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(b"CGWJRNL2");
+        bytes.extend_from_slice(b"CGWJRNL3");
         bytes.extend_from_slice(&40u64.to_le_bytes());
+        bytes.extend_from_slice(&8u64.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // one v3 record
         bytes.extend_from_slice(&8u64.to_le_bytes());
         std::fs::write(&p, &bytes).unwrap();
         let err = Journal::open_resume(&p, 40, 8, 1).unwrap_err();
@@ -270,14 +379,16 @@ mod tests {
     fn torn_tail_is_truncated_before_appending() {
         let p = tmpfile("torn");
         let mut j = Journal::create(&p, 40, 8, 1).unwrap();
-        j.append(0, 8).unwrap();
+        j.append_intent(0, 8).unwrap();
+        j.commit(1).unwrap();
         drop(j);
         let mut bytes = std::fs::read(&p).unwrap();
         bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF]); // partial record
         std::fs::write(&p, &bytes).unwrap();
         let (mut j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8)]);
-        j.append(8, 8).unwrap();
+        j.append_intent(8, 8).unwrap();
+        j.commit(1).unwrap();
         drop(j);
         let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8), (8, 8)], "append after torn tail stays aligned");
@@ -291,13 +402,15 @@ mod tests {
         // (those columns simply get recomputed).
         let p = tmpfile("midcorrupt");
         let mut j = Journal::create(&p, 40, 8, 1).unwrap();
-        j.append(0, 8).unwrap();
-        j.append(0, 0).unwrap(); // corrupt: zero width
-        j.append(16, 8).unwrap();
+        j.append_intent(0, 8).unwrap();
+        j.commit(1).unwrap();
+        j.append_intent(0, 0).unwrap(); // corrupt: zero width
+        j.append_intent(16, 8).unwrap();
+        j.commit(2).unwrap();
         drop(j);
         let (_j, ranges) = Journal::open_resume(&p, 40, 8, 1).unwrap();
         assert_eq!(ranges, vec![(0, 8)]);
-        assert_eq!(std::fs::metadata(&p).unwrap().len(), 32 + 16);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 32 + 2 * 24);
         std::fs::remove_file(&p).unwrap();
     }
 

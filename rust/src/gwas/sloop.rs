@@ -17,15 +17,16 @@
 //!
 //! Multi-trait batching: the system `S_i` depends only on the SNP, not
 //! the trait, so each SNP pays **one** Cholesky factorization
-//! ([`posv_small_factor`]) reused across all `t` right-hand sides
-//! ([`chol_solve_small`]) — the paper's amortization argument applied to
-//! the S-loop. Output column `j` holds the `t` solutions stacked:
-//! trait `k` occupies rows `[k·p, (k+1)·p)`; statistics stack the same
-//! way in `STAT_ROWS`-tall groups. Per-trait arithmetic goes through the
-//! same per-column kernels as a single-trait run (`dot` per (SNP, trait),
-//! the split factor/solve is bit-identical to the fused `posv_small`), so
-//! trait column `k` of a batched run is byte-identical to an independent
-//! single-trait run on that phenotype.
+//! ([`posv_small_factor`]) reused across all `t` right-hand sides — the
+//! paper's amortization argument applied to the S-loop. Output column
+//! `j` holds the `t` solutions stacked: trait `k` occupies rows
+//! `[k·p, (k+1)·p)`; statistics stack the same way in `STAT_ROWS`-tall
+//! groups. The trait loops are batched through the fused kernels of
+//! [`crate::linalg::micro`] — [`micro::dot_many`] for the per-(SNP,
+//! trait) reductions, [`micro::chol_solve_multi`] for the `t` solves —
+//! both of which replicate the solo kernel's per-element operation
+//! order exactly, so trait column `k` of a batched run is byte-identical
+//! to an independent single-trait run on that phenotype.
 //!
 //! Parallelism: the SNP columns are independent, so both the reductions
 //! and the per-SNP solves shard their columns across the compute pool
@@ -41,10 +42,7 @@
 use crate::error::{Error, Result};
 use crate::gwas::assoc::{inv_pp_from_factor, sigma2, stat_column, STAT_ROWS};
 use crate::gwas::preprocess::Preprocessed;
-use crate::linalg::{
-    chol::{chol_solve_small, posv_small_factor},
-    dot, gemm, sumsq, Matrix,
-};
+use crate::linalg::{chol::posv_small_factor, gemm, micro, sumsq, Matrix};
 use crate::util::threads;
 
 /// Column-panel width for sharding SNP columns across the pool.
@@ -59,8 +57,10 @@ const SLOOP_COLS_PER_WORKER: usize = 128;
 /// the hot retire path must not pay a spawn for microseconds of work.
 const SLOOP_COL_COST: f64 = 4000.0;
 
-/// Per-SNP assembly scratch: the `p×p` system, its right-hand side, and
-/// the RHS copy the statistics path needs.
+/// Per-SNP assembly scratch: the `p×p` system plus the stacked `p·t`
+/// right-hand sides (all traits solved in one fused
+/// [`micro::chol_solve_multi`] call) and the RHS copy the statistics
+/// path needs. The RHS buffers grow to `p·t` lazily in `solve_panel`.
 #[derive(Debug, Clone)]
 struct SnpScratch {
     p: usize,
@@ -90,10 +90,11 @@ impl BlockScratch {
 
     /// Fill `G = X̃_L^T X̃_b` (pl × mb), `d_j = ‖x̃_j‖²`, and the SNP-major
     /// trait reductions `rb[j·t + k] = x̃_j · ỹ_k`. `G` goes through the
-    /// parallel gemm; `d`/`rb` shard their columns directly — one `dot`
-    /// per (SNP, trait), never a register-blocked gemm, so trait `k`'s
-    /// accumulation order matches a single-trait run exactly. Buffers
-    /// only reallocate when the block geometry changes.
+    /// parallel gemm; `d`/`rb` shard their columns directly — the trait
+    /// reductions batch through [`micro::dot_many`], which keeps each
+    /// output on `blas1::dot`'s exact partial-sum scheme, so trait `k`'s
+    /// accumulation order matches a single-trait run bit for bit.
+    /// Buffers only reallocate when the block geometry changes.
     fn reduce(&mut self, pre: &Preprocessed, xb_t: &Matrix) -> Result<()> {
         let pl = pre.xl_t.cols();
         let mb = xb_t.cols();
@@ -108,6 +109,7 @@ impl BlockScratch {
         self.rb.resize(mb * t, 0.0);
         let nt =
             threads::for_flops((2.0 + 2.0 * t as f64) * pre.n() as f64 * mb as f64);
+        let yrefs: Vec<&[f64]> = (0..t).map(|k| pre.y_t.col(k)).collect();
         let chunks: Vec<(&mut [f64], &mut [f64])> = self
             .d
             .chunks_mut(SLOOP_PANEL)
@@ -118,9 +120,7 @@ impl BlockScratch {
             for (jj, dv) in dc.iter_mut().enumerate() {
                 let col = xb_t.col(j0 + jj);
                 *dv = sumsq(col);
-                for k in 0..t {
-                    rc[jj * t + k] = dot(col, pre.y_t.col(k));
-                }
+                micro::dot_many(col, &yrefs, &mut rc[jj * t..(jj + 1) * t]);
             }
             Ok(())
         })
@@ -339,6 +339,10 @@ fn solve_panel(
     let t = pre.traits();
     let n = pre.n();
     let ncols = out.len() / (p * t);
+    if snp.rhs.len() != p * t {
+        snp.rhs.resize(p * t, 0.0);
+        snp.rhs_orig.resize(p * t, 0.0);
+    }
     for jj in 0..ncols {
         let j = j0 + jj;
         let s = &mut snp.s;
@@ -358,18 +362,25 @@ fn solve_panel(
         // One factorization per SNP, reused for every trait's RHS.
         posv_small_factor(s, p)
             .map_err(|e| Error::Numerical(format!("S-loop posv failed at column {j}: {e}")))?;
+        // All t right-hand sides stacked, solved in one fused call
+        // (each RHS sees `chol_solve_small`'s exact operation order).
         for k in 0..t {
-            snp.rhs[..pl].copy_from_slice(pre.rtop.col(k));
-            snp.rhs[pl] = rb[j * t + k];
-            snp.rhs_orig.copy_from_slice(&snp.rhs);
-            chol_solve_small(s, &mut snp.rhs, p);
-            out[(jj * t + k) * p..(jj * t + k + 1) * p].copy_from_slice(&snp.rhs);
-            if let Some(st) = stats.as_deref_mut() {
-                // `s` holds the Cholesky factor of S_j, so the extra
-                // statistics are nearly free.
-                let var_pp = inv_pp_from_factor(s, p);
-                let s2 = sigma2(pre.yty[k], &snp.rhs, &snp.rhs_orig, n, p)?;
-                let col = stat_column(snp.rhs[pl], var_pp, s2);
+            snp.rhs[k * p..k * p + pl].copy_from_slice(pre.rtop.col(k));
+            snp.rhs[k * p + pl] = rb[j * t + k];
+        }
+        snp.rhs_orig.copy_from_slice(&snp.rhs);
+        micro::chol_solve_multi(s, &mut snp.rhs, p, t);
+        out[jj * t * p..(jj + 1) * t * p].copy_from_slice(&snp.rhs);
+        if let Some(st) = stats.as_deref_mut() {
+            // `s` holds the Cholesky factor of S_j, so the extra
+            // statistics are nearly free; the (p,p) inverse entry
+            // depends only on the factor — one evaluation per SNP.
+            let var_pp = inv_pp_from_factor(s, p);
+            for k in 0..t {
+                let sol = &snp.rhs[k * p..(k + 1) * p];
+                let orig = &snp.rhs_orig[k * p..(k + 1) * p];
+                let s2 = sigma2(pre.yty[k], sol, orig, n, p)?;
+                let col = stat_column(sol[pl], var_pp, s2);
                 st[(jj * t + k) * STAT_ROWS..(jj * t + k + 1) * STAT_ROWS]
                     .copy_from_slice(&col);
             }
@@ -406,7 +417,7 @@ mod tests {
     use super::*;
     use crate::gwas::preprocess::{phenotype_batch, preprocess, preprocess_multi};
     use crate::gwas::problem::{Dims, Problem};
-    use crate::linalg::trsm_lower_left;
+    use crate::linalg::{dot, trsm_lower_left};
 
     fn setup(n: usize, pl: usize, m: usize, seed: u64) -> (Problem, Preprocessed, Matrix) {
         let prob = Problem::synthetic(Dims::new(n, pl, m).unwrap(), seed).unwrap();

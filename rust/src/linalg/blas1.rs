@@ -1,7 +1,11 @@
 //! BLAS-1: vector-vector kernels. The S-loop's `dot`s land here.
 
-/// `x · y`. Unrolled 4-way to let LLVM vectorize without `-ffast-math`
-/// (independent partial sums re-associate the reduction explicitly).
+/// `x · y`. Unrolled 4-way with fused multiply-adds: the independent
+/// partial sums re-associate the reduction explicitly (so LLVM can
+/// vectorize without `-ffast-math`) and each partial advances through
+/// one `mul_add` per element. [`crate::linalg::micro::dot_many`]
+/// replicates this exact scheme per output, which is what makes the
+/// batched and the one-at-a-time reductions bitwise interchangeable.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
@@ -10,14 +14,14 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
     for k in 0..chunks {
         let i = k * 4;
-        s0 += x[i] * y[i];
-        s1 += x[i + 1] * y[i + 1];
-        s2 += x[i + 2] * y[i + 2];
-        s3 += x[i + 3] * y[i + 3];
+        s0 = x[i].mul_add(y[i], s0);
+        s1 = x[i + 1].mul_add(y[i + 1], s1);
+        s2 = x[i + 2].mul_add(y[i + 2], s2);
+        s3 = x[i + 3].mul_add(y[i + 3], s3);
     }
     let mut s = (s0 + s1) + (s2 + s3);
     for i in chunks * 4..n {
-        s += x[i] * y[i];
+        s = x[i].mul_add(y[i], s);
     }
     s
 }

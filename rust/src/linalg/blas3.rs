@@ -3,9 +3,17 @@
 //! S-loop) beats per-SNP BLAS-2 by an order of magnitude; these native
 //! implementations back the CPU baselines and the S-loop lane.
 //!
-//! `gemm` uses a two-level scheme: an outer cache tiling (MC×KC×NC) and an
-//! inner 4×4 register micro-kernel over unit-stride columns. Not MKL, but
-//! within a small factor of peak for the sizes the pipeline feeds it — see
+//! Every kernel is a thin driver over the register-tiled microkernel in
+//! [`super::micro`]: operands are packed into zero-padded tile strips
+//! (any scale — gemm's `alpha`, the `-1` of the trsm update — folded
+//! into `W` at pack time), then one [`micro::sweep`] applies the rank-k
+//! update `C[i,j] += Σ_p A[i,p]·W[p,j]` with `MR×NR` accumulator tiles
+//! and explicit `f64::mul_add` chains. The sweep vectorizes across
+//! *independent output elements* only, so each element's accumulation
+//! order never changes — the scalar reference path behind
+//! `CUGWAS_NO_MICROKERNEL` produces bit-identical output (see
+//! `micro.rs` and `tests/kernel_parity.rs`). Not MKL, but within a
+//! small factor of peak for the sizes the pipeline feeds it — see
 //! EXPERIMENTS.md §Perf for measured GFlop/s.
 //!
 //! §Perf (threading): `gemm`, `trsm` and `syrk_t` fan their NC-wide
@@ -21,15 +29,13 @@
 //! parallel region when each worker gets ≥ ~1 ms of arithmetic.
 
 use super::matrix::Matrix;
+use super::micro::{self, PackBuf};
 use crate::error::{Error, Result};
 use crate::util::threads;
 
-/// Cache-tile sizes for the gemm loop nest (f64 elements).
-const MC: usize = 128;
-const KC: usize = 256;
-/// Column-panel width: the cache tile of the serial loop nest and the
-/// unit of parallel work distribution (a multiple of the 4-column
-/// micro-kernel, so panel boundaries never split a register block).
+/// Column-panel width: the unit of parallel work distribution (a
+/// multiple of the microkernel's NR columns, so panel boundaries never
+/// split a register tile).
 const NC: usize = 64;
 
 /// `C += A^T_or_A * B` driver — here the plain `C = alpha*A*B + beta*C`
@@ -59,16 +65,21 @@ pub fn gemm(alpha: f64, a: &Matrix, b: &Matrix, beta: f64, c: &mut Matrix) -> Re
     let b_rows = b.rows();
     let c_rows = m;
     let panels: Vec<&mut [f64]> = c.as_mut_slice().chunks_mut(NC * c_rows).collect();
-    threads::scatter(nt, panels, || (), |_, pi, panel| {
+    threads::scatter(nt, panels, PackBuf::new, |pack, pi, panel| {
         let nb = panel.len() / c_rows;
-        gemm_panel(alpha, a_data, m, k, b_data, b_rows, pi * NC, panel, c_rows, nb);
+        gemm_panel(pack, alpha, a_data, m, k, b_data, b_rows, pi * NC, panel, c_rows, nb);
         Ok(())
     })
 }
 
-/// Serial loop nest over one NC-wide panel: columns `[jc, jc+nb)` of C
-/// (`panel` is their contiguous column-major storage).
+/// One NC-wide panel: columns `[jc, jc+nb)` of C (`panel` is their
+/// contiguous column-major storage). Packs `A` into MR-row strips and
+/// `alpha·B[:, jc..jc+nb]` into NR-column strips, then runs one
+/// full-`k` microkernel sweep — tails ride the pack's zero padding, so
+/// odd shapes take the same code path as whole tiles.
+#[allow(clippy::too_many_arguments)]
 fn gemm_panel(
+    pack: &mut PackBuf,
     alpha: f64,
     a_data: &[f64],
     m: usize,
@@ -80,95 +91,9 @@ fn gemm_panel(
     c_rows: usize,
     nb: usize,
 ) {
-    for pc in (0..k).step_by(KC) {
-        let kb = KC.min(k - pc);
-        for ic in (0..m).step_by(MC) {
-            let mb = MC.min(m - ic);
-            gemm_block(alpha, a_data, m, b_data, b_rows, jc, panel, c_rows, ic, pc, mb, nb, kb);
-        }
-    }
-}
-
-/// Inner block: panel[ic..ic+mb, 0..nb] += alpha * A[ic.., pc..] * B[pc.., jc..].
-/// 4-column × 2-rank register kernel; columns of A, B, C are contiguous
-/// so all accesses below are unit-stride. Each loaded A column feeds four
-/// output columns and two k-ranks are fused per sweep, which cuts C
-/// traffic 2× and A traffic 4× vs the naive axpy form (§Perf: 8.6 →
-/// ~11 GFlop/s at 512³ on this machine).
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn gemm_block(
-    alpha: f64,
-    a_data: &[f64],
-    m: usize,
-    b_data: &[f64],
-    b_rows: usize,
-    jc: usize,
-    panel: &mut [f64],
-    c_rows: usize,
-    ic: usize,
-    pc: usize,
-    mb: usize,
-    nb: usize,
-    kb: usize,
-) {
-    let w_at = |p: usize, j: usize| alpha * b_data[(jc + j) * b_rows + pc + p];
-    // 4-column panels of C.
-    let mut j = 0;
-    while j + 4 <= nb {
-        let mut p = 0;
-        // Two ranks fused per sweep: C[:,j..j+4] += a_p w_p^T + a_q w_q^T.
-        while p + 2 <= kb {
-            let a0 = &a_data[(pc + p) * m + ic..(pc + p) * m + ic + mb];
-            let a1 = &a_data[(pc + p + 1) * m + ic..(pc + p + 1) * m + ic + mb];
-            let (w00, w01, w02, w03) = (w_at(p, j), w_at(p, j + 1), w_at(p, j + 2), w_at(p, j + 3));
-            let (w10, w11, w12, w13) =
-                (w_at(p + 1, j), w_at(p + 1, j + 1), w_at(p + 1, j + 2), w_at(p + 1, j + 3));
-            let o0 = j * c_rows + ic;
-            let o1 = (j + 1) * c_rows + ic;
-            let o2 = (j + 2) * c_rows + ic;
-            let o3 = (j + 3) * c_rows + ic;
-            for i in 0..mb {
-                let (x, y) = (a0[i], a1[i]);
-                panel[o0 + i] += w00 * x + w10 * y;
-                panel[o1 + i] += w01 * x + w11 * y;
-                panel[o2 + i] += w02 * x + w12 * y;
-                panel[o3 + i] += w03 * x + w13 * y;
-            }
-            p += 2;
-        }
-        if p < kb {
-            let a0 = &a_data[(pc + p) * m + ic..(pc + p) * m + ic + mb];
-            let (w0, w1, w2, w3) = (w_at(p, j), w_at(p, j + 1), w_at(p, j + 2), w_at(p, j + 3));
-            let o0 = j * c_rows + ic;
-            let o1 = (j + 1) * c_rows + ic;
-            let o2 = (j + 2) * c_rows + ic;
-            let o3 = (j + 3) * c_rows + ic;
-            for i in 0..mb {
-                let x = a0[i];
-                panel[o0 + i] += w0 * x;
-                panel[o1 + i] += w1 * x;
-                panel[o2 + i] += w2 * x;
-                panel[o3 + i] += w3 * x;
-            }
-        }
-        j += 4;
-    }
-    // Remainder columns: simple axpy sweeps.
-    while j < nb {
-        for p in 0..kb {
-            let acol = &a_data[(pc + p) * m + ic..(pc + p) * m + ic + mb];
-            let w = w_at(p, j);
-            if w == 0.0 {
-                continue;
-            }
-            let c_off = j * c_rows + ic;
-            for i in 0..mb {
-                panel[c_off + i] += w * acol[i];
-            }
-        }
-        j += 1;
-    }
+    pack.pack_a(m, k, |i, p| a_data[p * m + i]);
+    pack.pack_w(k, nb, |p, j| alpha * b_data[(jc + j) * b_rows + p]);
+    micro::sweep(pack, m, nb, k, panel, c_rows, 0, 0);
 }
 
 /// `C = A^T A` (the paper's `syrk`, transposed variant: `S_TL = X̃_L^T X̃_L`,
@@ -238,14 +163,14 @@ pub fn trsm_lower_left(l: &Matrix, b: &mut Matrix) -> Result<()> {
     let nt = threads::for_flops(n as f64 * n as f64 * nrhs as f64);
     let l_data = l.as_slice();
     let panels: Vec<&mut [f64]> = b.as_mut_slice().chunks_mut(NC * n).collect();
-    threads::scatter(nt, panels, || (), |_, _, panel| {
-        trsm_panel(l_data, n, panel);
+    threads::scatter(nt, panels, PackBuf::new, |pack, _, panel| {
+        trsm_panel(pack, l_data, n, panel);
         Ok(())
     })
 }
 
 /// Blocked forward substitution over one panel of RHS columns.
-fn trsm_panel(l_data: &[f64], n: usize, panel: &mut [f64]) {
+fn trsm_panel(pack: &mut PackBuf, l_data: &[f64], n: usize, panel: &mut [f64]) {
     let ncols = panel.len() / n;
     let mut k0 = 0;
     while k0 < n {
@@ -258,91 +183,23 @@ fn trsm_panel(l_data: &[f64], n: usize, panel: &mut [f64]) {
                 let row = k0 + r;
                 let mut v = col[row];
                 for s in 0..r {
-                    v -= l_data[(k0 + s) * n + row] * col[k0 + s];
+                    v = (-l_data[(k0 + s) * n + row]).mul_add(col[k0 + s], v);
                 }
                 col[row] = v / l_data[row * n + row];
             }
         }
-        // 2) Update the trailing rows with a gemm:
-        //    B[k0+kb.., :] -= L[k0+kb.., k0..k0+kb] * B[diag rows, :]
+        // 2) Update the trailing rows with a microkernel sweep:
+        //    B[k0+kb.., :] -= L[k0+kb.., k0..k0+kb] * B[diag rows, :].
+        //    The -1 is folded into W at pack time; the sweep writes the
+        //    strided trailing window in place (no sub-matrix copies).
         let rest = n - k0 - kb;
         if rest > 0 {
-            update_trailing(l_data, n, panel, ncols, k0, kb, rest);
+            let row0 = k0 + kb;
+            pack.pack_a(rest, kb, |i, p| l_data[(k0 + p) * n + row0 + i]);
+            pack.pack_w(kb, ncols, |p, j| -panel[j * n + k0 + p]);
+            micro::sweep(pack, rest, ncols, kb, panel, n, row0, 0);
         }
         k0 += kb;
-    }
-}
-
-/// Trailing update of the blocked trsm, written directly over the strided
-/// sub-block (avoids materializing sub-matrices). Same 4-column × 2-rank
-/// register kernel as `gemm_block` — each loaded L column feeds four RHS
-/// columns (§Perf).
-#[inline]
-fn update_trailing(
-    l_data: &[f64],
-    n: usize,
-    bdata: &mut [f64],
-    ncols: usize,
-    k0: usize,
-    kb: usize,
-    rest: usize,
-) {
-    let row0 = k0 + kb;
-    let mut j = 0;
-    while j + 4 <= ncols {
-        let (o0, o1, o2, o3) = (j * n, (j + 1) * n, (j + 2) * n, (j + 3) * n);
-        let mut p = 0;
-        while p + 2 <= kb {
-            let lc0 = &l_data[(k0 + p) * n + row0..(k0 + p) * n + row0 + rest];
-            let lc1 = &l_data[(k0 + p + 1) * n + row0..(k0 + p + 1) * n + row0 + rest];
-            let (w00, w01, w02, w03) = (
-                bdata[o0 + k0 + p],
-                bdata[o1 + k0 + p],
-                bdata[o2 + k0 + p],
-                bdata[o3 + k0 + p],
-            );
-            let (w10, w11, w12, w13) = (
-                bdata[o0 + k0 + p + 1],
-                bdata[o1 + k0 + p + 1],
-                bdata[o2 + k0 + p + 1],
-                bdata[o3 + k0 + p + 1],
-            );
-            for i in 0..rest {
-                let (x, y) = (lc0[i], lc1[i]);
-                bdata[o0 + row0 + i] -= w00 * x + w10 * y;
-                bdata[o1 + row0 + i] -= w01 * x + w11 * y;
-                bdata[o2 + row0 + i] -= w02 * x + w12 * y;
-                bdata[o3 + row0 + i] -= w03 * x + w13 * y;
-            }
-            p += 2;
-        }
-        if p < kb {
-            let lc = &l_data[(k0 + p) * n + row0..(k0 + p) * n + row0 + rest];
-            let (w0, w1, w2, w3) =
-                (bdata[o0 + k0 + p], bdata[o1 + k0 + p], bdata[o2 + k0 + p], bdata[o3 + k0 + p]);
-            for i in 0..rest {
-                let x = lc[i];
-                bdata[o0 + row0 + i] -= w0 * x;
-                bdata[o1 + row0 + i] -= w1 * x;
-                bdata[o2 + row0 + i] -= w2 * x;
-                bdata[o3 + row0 + i] -= w3 * x;
-            }
-        }
-        j += 4;
-    }
-    while j < ncols {
-        let off = j * n;
-        for p in 0..kb {
-            let w = bdata[off + k0 + p];
-            if w == 0.0 {
-                continue;
-            }
-            let lcol = &l_data[(k0 + p) * n + row0..(k0 + p) * n + row0 + rest];
-            for i in 0..rest {
-                bdata[off + row0 + i] -= w * lcol[i];
-            }
-        }
-        j += 1;
     }
 }
 

@@ -6,6 +6,7 @@
 //! over caller buffers.
 
 use super::matrix::Matrix;
+use super::micro::{self, PackBuf};
 use crate::error::{Error, Result};
 
 /// Panel width for the blocked factorization.
@@ -13,14 +14,16 @@ const POTRF_NB: usize = 48;
 
 /// In-place lower Cholesky: `M = L L^T`, returns `L` (strictly-upper part
 /// zeroed). Blocked right-looking: unblocked panel factorizations plus a
-/// BLAS-3 trailing update with the same 4-column × 2-rank register kernel
-/// as `gemm` (§Perf: 1.4 → ~8 GFlop/s at n=512). `M` must be SPD.
+/// BLAS-3 trailing update through the register-tiled microkernel sweep
+/// of [`super::micro`] (§Perf: 1.4 → ~8 GFlop/s at n=512 with the old
+/// 4×2 kernel; the sweep does better). `M` must be SPD.
 pub fn potrf(m: &Matrix) -> Result<Matrix> {
     let n = m.rows();
     if m.cols() != n {
         return Err(Error::shape(format!("potrf: matrix is {}x{}", m.rows(), m.cols())));
     }
     let mut l = m.clone();
+    let mut pack = PackBuf::new();
     let mut k0 = 0;
     while k0 < n {
         let kb = POTRF_NB.min(n - k0);
@@ -30,7 +33,7 @@ pub fn potrf(m: &Matrix) -> Result<Matrix> {
             let mut d = l.get(j, j);
             for s in k0..j {
                 let v = l.get(j, s);
-                d -= v * v;
+                d = (-v).mul_add(v, d);
             }
             if d <= 0.0 {
                 return Err(Error::Numerical(format!(
@@ -42,7 +45,7 @@ pub fn potrf(m: &Matrix) -> Result<Matrix> {
             for i in j + 1..n {
                 let mut v = l.get(i, j);
                 for s in k0..j {
-                    v -= l.get(i, s) * l.get(j, s);
+                    v = (-l.get(i, s)).mul_add(l.get(j, s), v);
                 }
                 l.set(i, j, v / djj);
             }
@@ -52,7 +55,7 @@ pub fn potrf(m: &Matrix) -> Result<Matrix> {
         // are never read by later panels and get zeroed at the end).
         let t = k0 + kb;
         if t < n {
-            potrf_trailing(&mut l, k0, kb, t, n);
+            potrf_trailing(&mut pack, &mut l, k0, kb, t, n);
         }
         k0 += kb;
     }
@@ -66,69 +69,17 @@ pub fn potrf(m: &Matrix) -> Result<Matrix> {
 }
 
 /// Trailing update `A[t.., t..] -= A[t.., k0..k0+kb] * A[t.., k0..k0+kb]^T`
-/// (full rectangle), 4-column × 2-rank fused.
+/// (full rectangle) via one microkernel sweep: the panel rows pack as
+/// `A`, their transpose (negated at pack time) as `W`, and the sweep
+/// writes the trailing square in place — tail widths < NR ride the
+/// pack's zero padding instead of a separate scalar nest.
 #[inline]
-fn potrf_trailing(l: &mut Matrix, k0: usize, kb: usize, t: usize, n: usize) {
+fn potrf_trailing(pack: &mut PackBuf, l: &mut Matrix, k0: usize, kb: usize, t: usize, n: usize) {
     let data = l.as_mut_slice();
-    let w_at = |data: &[f64], p: usize, j: usize| data[(k0 + p) * n + j]; // L[j, k0+p]
     let rest = n - t;
-    let mut j = t;
-    while j + 4 <= n {
-        let (o0, o1, o2, o3) = (j * n + t, (j + 1) * n + t, (j + 2) * n + t, (j + 3) * n + t);
-        let mut p = 0;
-        while p + 2 <= kb {
-            let c0 = (k0 + p) * n + t;
-            let c1 = (k0 + p + 1) * n + t;
-            let (w00, w01, w02, w03) = (
-                w_at(data, p, j),
-                w_at(data, p, j + 1),
-                w_at(data, p, j + 2),
-                w_at(data, p, j + 3),
-            );
-            let (w10, w11, w12, w13) = (
-                w_at(data, p + 1, j),
-                w_at(data, p + 1, j + 1),
-                w_at(data, p + 1, j + 2),
-                w_at(data, p + 1, j + 3),
-            );
-            for i in 0..rest {
-                let (x, y) = (data[c0 + i], data[c1 + i]);
-                data[o0 + i] -= w00 * x + w10 * y;
-                data[o1 + i] -= w01 * x + w11 * y;
-                data[o2 + i] -= w02 * x + w12 * y;
-                data[o3 + i] -= w03 * x + w13 * y;
-            }
-            p += 2;
-        }
-        if p < kb {
-            let c0 = (k0 + p) * n + t;
-            let (w0, w1, w2, w3) = (
-                w_at(data, p, j),
-                w_at(data, p, j + 1),
-                w_at(data, p, j + 2),
-                w_at(data, p, j + 3),
-            );
-            for i in 0..rest {
-                let x = data[c0 + i];
-                data[o0 + i] -= w0 * x;
-                data[o1 + i] -= w1 * x;
-                data[o2 + i] -= w2 * x;
-                data[o3 + i] -= w3 * x;
-            }
-        }
-        j += 4;
-    }
-    while j < n {
-        let off = j * n + t;
-        for p in 0..kb {
-            let w = w_at(data, p, j);
-            let c = (k0 + p) * n + t;
-            for i in 0..rest {
-                data[off + i] -= w * data[c + i];
-            }
-        }
-        j += 1;
-    }
+    pack.pack_a(rest, kb, |i, p| data[(k0 + p) * n + t + i]);
+    pack.pack_w(kb, rest, |p, j| -data[(k0 + p) * n + t + j]);
+    micro::sweep(pack, rest, rest, kb, data, n, t, t);
 }
 
 /// Solve `S x = b` for SPD `S` via Cholesky (the paper's `posv`), writing
@@ -165,7 +116,7 @@ pub fn posv_small_factor(s: &mut [f64], n: usize) -> Result<()> {
         let mut d = s[j * n + j];
         for k in 0..j {
             let v = s[k * n + j];
-            d -= v * v;
+            d = (-v).mul_add(v, d);
         }
         if d <= 0.0 {
             return Err(Error::Numerical(format!("posv_small: pivot {d:.3e} at {j}")));
@@ -175,7 +126,7 @@ pub fn posv_small_factor(s: &mut [f64], n: usize) -> Result<()> {
         for i in j + 1..n {
             let mut v = s[j * n + i];
             for k in 0..j {
-                v -= s[k * n + i] * s[k * n + j];
+                v = (-s[k * n + i]).mul_add(s[k * n + j], v);
             }
             s[j * n + i] = v / djj;
         }
@@ -185,7 +136,10 @@ pub fn posv_small_factor(s: &mut [f64], n: usize) -> Result<()> {
 
 /// Solve half of [`posv_small`]: forward + backward substitution against
 /// a factor produced by [`posv_small_factor`], overwriting `b` with the
-/// solution. Arithmetic is identical to the fused path bit for bit.
+/// solution. Arithmetic is identical to the fused path bit for bit, and
+/// the per-element `mul_add` sequence here is exactly what
+/// [`super::micro::chol_solve_multi`] runs per RHS — keep the two in
+/// lockstep or batched solves drift from solo ones.
 pub fn chol_solve_small(s: &[f64], b: &mut [f64], n: usize) {
     debug_assert_eq!(s.len(), n * n);
     debug_assert_eq!(b.len(), n);
@@ -194,14 +148,14 @@ pub fn chol_solve_small(s: &[f64], b: &mut [f64], n: usize) {
         b[j] /= s[j * n + j];
         let bj = b[j];
         for i in j + 1..n {
-            b[i] -= bj * s[j * n + i];
+            b[i] = (-bj).mul_add(s[j * n + i], b[i]);
         }
     }
     // L^T x = z (backward).
     for j in (0..n).rev() {
         let mut v = b[j];
         for i in j + 1..n {
-            v -= s[j * n + i] * b[i];
+            v = (-s[j * n + i]).mul_add(b[i], v);
         }
         b[j] = v / s[j * n + j];
     }

@@ -1,0 +1,476 @@
+//! Register-tiled microkernels behind the dense BLAS-3 drivers.
+//!
+//! Every hot kernel in this crate reduces to one primitive: a
+//! rank-k update `C[i,j] += Σ_p A[i,p]·W[p,j]` over some window of a
+//! column-major buffer (gemm panels, trsm trailing updates, the
+//! Cholesky trailing square). This module implements that primitive
+//! twice over one shared packed layout:
+//!
+//! * [`micro_sweep`] — the fast path: `MR×NR` register tiles walked
+//!   down a full-`k` chain of `f64::mul_add` FMAs, operands packed
+//!   into contiguous zero-padded strips so the inner loop is pure
+//!   unit-stride loads + fused multiply-adds.
+//! * [`reference_sweep`] — the scalar nest, selectable with
+//!   `CUGWAS_NO_MICROKERNEL=1` (or [`set_forced`]) for parity testing.
+//!
+//! **Why the two paths are bit-identical.** The microkernel vectorizes
+//! across *independent output elements* only: tile position `(r, cc)`
+//! accumulates element `C[i0+r, j0+cc]` and nothing else, with `p`
+//! ascending through the full `k` range in one register chain. Per
+//! element, both paths therefore execute the exact same operation
+//! sequence — load `C[i,j]`, then `acc = A[i,p].mul_add(W[p,j], acc)`
+//! for `p = 0..k`, then store — so every output bit matches by
+//! construction, at any shape, tail or thread count. Scale factors
+//! (gemm's `alpha`, the `-1` of the trsm/Cholesky updates) are folded
+//! into `W` **once at pack time**, so both paths see the identical
+//! pre-scaled operand. Tails smaller than a tile are handled by the
+//! pack's zero padding (dead lanes compute on zeros and are never
+//! stored), which is the "exactly one code path per kernel" the
+//! bit-identity contract wants.
+//!
+//! The same vectorize-across-outputs rule shapes the two batched
+//! helpers the S-loop uses: [`dot_many`] fuses many dot products
+//! against one shared vector while replicating `blas1::dot`'s exact
+//! 4-way partial-sum scheme per output, and [`chol_solve_multi`]
+//! marches a group of right-hand sides through forward/backward
+//! substitution in lockstep, each RHS seeing the per-element operation
+//! order of a solo [`super::chol::chol_solve_small`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Register-tile rows (unit-stride direction of column-major C).
+pub const MR: usize = 8;
+/// Register-tile columns.
+pub const NR: usize = 4;
+
+// 0 = auto (environment), 1 = force micro, 2 = force reference.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+static ENV_DISABLED: OnceLock<bool> = OnceLock::new();
+
+/// Override the path selection (tests and benches). `None` restores
+/// the `CUGWAS_NO_MICROKERNEL` environment decision. Process-global:
+/// callers that flip it must not race concurrent kernel users.
+pub fn set_forced(v: Option<bool>) {
+    let code = match v {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    FORCED.store(code, Ordering::SeqCst);
+}
+
+/// Whether the register-tiled path is live. `CUGWAS_NO_MICROKERNEL=1`
+/// (or `true`) selects the scalar reference nest; anything else — the
+/// default — selects the microkernel. One relaxed load on the hot
+/// path once the environment has been read.
+pub fn enabled() -> bool {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => !*ENV_DISABLED.get_or_init(|| {
+            std::env::var("CUGWAS_NO_MICROKERNEL")
+                .map(|v| v.trim() == "1" || v.trim().eq_ignore_ascii_case("true"))
+                .unwrap_or(false)
+        }),
+    }
+}
+
+/// Reusable packing scratch: operands land in tile-strip layouts
+/// (`A` in `MR`-row strips, `W` in `NR`-column strips), zero-padded to
+/// whole tiles so the kernel never branches on a tail. One `PackBuf`
+/// per worker, allocation amortized across panels.
+#[derive(Debug)]
+pub struct PackBuf {
+    ap: Vec<f64>,
+    wp: Vec<f64>,
+}
+
+impl Default for PackBuf {
+    fn default() -> Self {
+        PackBuf::new()
+    }
+}
+
+impl PackBuf {
+    pub const fn new() -> PackBuf {
+        PackBuf { ap: Vec::new(), wp: Vec::new() }
+    }
+
+    /// Pack the `m×k` left operand: `a(i, p)` lands at
+    /// `ap[(i/MR)·k·MR + p·MR + i%MR]`; rows past `m` are zero.
+    pub fn pack_a(&mut self, m: usize, k: usize, a: impl Fn(usize, usize) -> f64) {
+        let strips = m.div_ceil(MR);
+        self.ap.clear();
+        self.ap.resize(strips * k * MR, 0.0);
+        for s in 0..strips {
+            let base = s * k * MR;
+            let rows = (m - s * MR).min(MR);
+            for p in 0..k {
+                for r in 0..rows {
+                    self.ap[base + p * MR + r] = a(s * MR + r, p);
+                }
+            }
+        }
+    }
+
+    /// Pack the `k×np` right operand with any scale already folded in:
+    /// `w(p, j)` lands at `wp[(j/NR)·k·NR + p·NR + j%NR]`; columns past
+    /// `np` are zero.
+    pub fn pack_w(&mut self, k: usize, np: usize, w: impl Fn(usize, usize) -> f64) {
+        let strips = np.div_ceil(NR);
+        self.wp.clear();
+        self.wp.resize(strips * k * NR, 0.0);
+        for s in 0..strips {
+            let base = s * k * NR;
+            let cols = (np - s * NR).min(NR);
+            for p in 0..k {
+                for c in 0..cols {
+                    self.wp[base + p * NR + c] = w(p, s * NR + c);
+                }
+            }
+        }
+    }
+}
+
+/// Apply `C[i,j] += Σ_p A[i,p]·W[p,j]` for the packed `m×k` / `k×np`
+/// operands to the column-major window of `c` (leading dimension
+/// `ldc`) whose top-left element is `(row0, col0)`. Dispatches to the
+/// register-tiled or the scalar reference path — bit-identical per
+/// element either way (module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep(
+    pack: &PackBuf,
+    m: usize,
+    np: usize,
+    k: usize,
+    c: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+) {
+    if m == 0 || np == 0 || k == 0 {
+        return;
+    }
+    if enabled() {
+        micro_sweep(pack, m, np, k, c, ldc, row0, col0);
+    } else {
+        reference_sweep(pack, m, np, k, c, ldc, row0, col0);
+    }
+}
+
+/// The register-tiled path: `MR×NR` accumulator tiles, full-`k`
+/// `mul_add` chains, live lanes loaded from / stored to `C`, dead
+/// lanes riding the pack's zero padding.
+#[allow(clippy::too_many_arguments)]
+pub fn micro_sweep(
+    pack: &PackBuf,
+    m: usize,
+    np: usize,
+    k: usize,
+    c: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+) {
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = (m - i0).min(MR);
+        let ap = &pack.ap[(i0 / MR) * k * MR..][..k * MR];
+        let mut j0 = 0;
+        while j0 < np {
+            let nr = (np - j0).min(NR);
+            let wp = &pack.wp[(j0 / NR) * k * NR..][..k * NR];
+            let mut acc = [[0.0f64; MR]; NR];
+            for (cc, col) in acc.iter_mut().enumerate().take(nr) {
+                let base = (col0 + j0 + cc) * ldc + row0 + i0;
+                col[..mr].copy_from_slice(&c[base..base + mr]);
+            }
+            for (a, w) in ap.chunks_exact(MR).zip(wp.chunks_exact(NR)) {
+                let a: &[f64; MR] = a.try_into().unwrap();
+                let w: &[f64; NR] = w.try_into().unwrap();
+                for (col, &wv) in acc.iter_mut().zip(w.iter()) {
+                    for (av, cv) in a.iter().zip(col.iter_mut()) {
+                        *cv = av.mul_add(wv, *cv);
+                    }
+                }
+            }
+            for (cc, col) in acc.iter().enumerate().take(nr) {
+                let base = (col0 + j0 + cc) * ldc + row0 + i0;
+                c[base..base + mr].copy_from_slice(&col[..mr]);
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// The scalar reference path over the same packed operands: one
+/// element at a time, the identical ascending-`p` `mul_add` chain.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_sweep(
+    pack: &PackBuf,
+    m: usize,
+    np: usize,
+    k: usize,
+    c: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+) {
+    for j in 0..np {
+        let wp = &pack.wp[(j / NR) * k * NR..][..k * NR];
+        let jc = j % NR;
+        for i in 0..m {
+            let ap = &pack.ap[(i / MR) * k * MR..][..k * MR];
+            let ir = i % MR;
+            let idx = (col0 + j) * ldc + row0 + i;
+            let mut acc = c[idx];
+            for p in 0..k {
+                acc = ap[p * MR + ir].mul_add(wp[p * NR + jc], acc);
+            }
+            c[idx] = acc;
+        }
+    }
+}
+
+/// How many dot products [`dot_many`] fuses per pass over `x`.
+const DOT_GROUP: usize = 8;
+
+/// Batched dot products against one shared left vector:
+/// `out[q] = x · ys[q]`. The fused path loads each `x` chunk once per
+/// group of [`DOT_GROUP`] outputs while keeping, per output, the exact
+/// 4-way partial-sum scheme of [`super::blas1::dot`] — so
+/// `dot_many(x, ys, out)` is bitwise `out[q] = dot(x, ys[q])` for
+/// every `q`, on either path.
+pub fn dot_many(x: &[f64], ys: &[&[f64]], out: &mut [f64]) {
+    assert_eq!(ys.len(), out.len(), "dot_many: one output per right-hand vector");
+    if !enabled() {
+        for (o, y) in out.iter_mut().zip(ys) {
+            *o = super::blas1::dot(x, y);
+        }
+        return;
+    }
+    let n = x.len();
+    for y in ys {
+        assert_eq!(y.len(), n, "dot_many: every vector must match x's length");
+    }
+    let chunks = n / 4;
+    for (ys_g, out_g) in ys.chunks(DOT_GROUP).zip(out.chunks_mut(DOT_GROUP)) {
+        let mut part = [[0.0f64; 4]; DOT_GROUP];
+        for i in 0..chunks {
+            let b = 4 * i;
+            let xb: &[f64; 4] = x[b..b + 4].try_into().unwrap();
+            for (p, y) in part.iter_mut().zip(ys_g.iter()) {
+                let yb: &[f64; 4] = y[b..b + 4].try_into().unwrap();
+                p[0] = xb[0].mul_add(yb[0], p[0]);
+                p[1] = xb[1].mul_add(yb[1], p[1]);
+                p[2] = xb[2].mul_add(yb[2], p[2]);
+                p[3] = xb[3].mul_add(yb[3], p[3]);
+            }
+        }
+        for ((o, y), p) in out_g.iter_mut().zip(ys_g.iter()).zip(part.iter()) {
+            let mut s = (p[0] + p[1]) + (p[2] + p[3]);
+            for i in 4 * chunks..n {
+                s = x[i].mul_add(y[i], s);
+            }
+            *o = s;
+        }
+    }
+}
+
+/// How many right-hand sides [`chol_solve_multi`] marches in lockstep.
+const SOLVE_GROUP: usize = 8;
+
+/// Solve `L·Lᵀ x = b` for `t` stacked right-hand sides (`rhs[q·n..
+/// (q+1)·n]` is RHS `q`) against one factored `n×n` system `s` (lower
+/// triangle of the column-major factor). The fused path interleaves a
+/// group of RHS per pass so the factor's columns are loaded once per
+/// group; per RHS, the operation sequence is exactly
+/// [`super::chol::chol_solve_small`]'s — bitwise equal on either path.
+pub fn chol_solve_multi(s: &[f64], rhs: &mut [f64], n: usize, t: usize) {
+    if n == 0 || t == 0 {
+        return;
+    }
+    if !enabled() {
+        for chunk in rhs.chunks_exact_mut(n).take(t) {
+            super::chol::chol_solve_small(s, chunk, n);
+        }
+        return;
+    }
+    for chunk in rhs[..n * t].chunks_mut(n * SOLVE_GROUP) {
+        let g = chunk.len() / n;
+        // Forward substitution: L y = b, `g` systems in lockstep.
+        for j in 0..n {
+            let sjj = s[j * n + j];
+            for q in 0..g {
+                chunk[q * n + j] /= sjj;
+            }
+            for i in (j + 1)..n {
+                let sij = s[j * n + i];
+                for q in 0..g {
+                    let bj = chunk[q * n + j];
+                    chunk[q * n + i] = (-bj).mul_add(sij, chunk[q * n + i]);
+                }
+            }
+        }
+        // Backward substitution: Lᵀ x = y, accumulators in registers.
+        for j in (0..n).rev() {
+            let sjj = s[j * n + j];
+            let mut v = [0.0f64; SOLVE_GROUP];
+            for (q, vq) in v.iter_mut().enumerate().take(g) {
+                *vq = chunk[q * n + j];
+            }
+            for i in (j + 1)..n {
+                let sij = s[j * n + i];
+                for (q, vq) in v.iter_mut().enumerate().take(g) {
+                    *vq = (-sij).mul_add(chunk[q * n + i], *vq);
+                }
+            }
+            for (q, vq) in v.iter().enumerate().take(g) {
+                chunk[q * n + j] = vq / sjj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    // NOTE: `set_forced` is process-global and lib unit tests share one
+    // process, so these tests never touch it — they call the two sweep
+    // paths directly. Whole-driver parity under forced selection lives
+    // in `tests/kernel_parity.rs`, which serializes on its own lock.
+
+    fn randn(rng: &mut XorShift, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+    }
+
+    fn pack_for(a: &[f64], w: &[f64], m: usize, k: usize, np: usize) -> PackBuf {
+        let mut pack = PackBuf::new();
+        pack.pack_a(m, k, |i, p| a[p * m + i]);
+        pack.pack_w(k, np, |p, j| w[j * k + p]);
+        pack
+    }
+
+    #[test]
+    fn micro_and_reference_sweeps_are_bitwise_identical() {
+        let mut rng = XorShift::new(0x5EED_01CE);
+        for &(m, np, k) in &[
+            (1usize, 1usize, 1usize),
+            (8, 4, 16),
+            (7, 3, 5),
+            (9, 5, 1),
+            (17, 2, 33),
+            (130, 70, 65),
+            (64, 64, 64),
+            (3, 129, 7),
+        ] {
+            let a = randn(&mut rng, m * k);
+            let w = randn(&mut rng, k * np);
+            let c0 = randn(&mut rng, m * np);
+            let pack = pack_for(&a, &w, m, k, np);
+            let mut c_micro = c0.clone();
+            micro_sweep(&pack, m, np, k, &mut c_micro, m, 0, 0);
+            let mut c_ref = c0.clone();
+            reference_sweep(&pack, m, np, k, &mut c_ref, m, 0, 0);
+            for (i, (x, y)) in c_micro.iter().zip(c_ref.iter()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "element {i} diverged at shape ({m},{np},{k})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_matches_naive_product_within_tolerance() {
+        let mut rng = XorShift::new(77);
+        let (m, np, k) = (23usize, 11usize, 19usize);
+        let a = randn(&mut rng, m * k);
+        let w = randn(&mut rng, k * np);
+        let mut c = vec![0.0f64; m * np];
+        let pack = pack_for(&a, &w, m, k, np);
+        micro_sweep(&pack, m, np, k, &mut c, m, 0, 0);
+        for j in 0..np {
+            for i in 0..m {
+                let naive: f64 = (0..k).map(|p| a[p * m + i] * w[j * k + p]).sum();
+                assert!((c[j * m + i] - naive).abs() < 1e-12 * (k as f64), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_respects_the_window_and_leaves_the_rest_untouched() {
+        let mut rng = XorShift::new(31);
+        let (ldc, rows, cols) = (10usize, 10usize, 8usize);
+        let (m, np, k) = (4usize, 3usize, 6usize);
+        let (row0, col0) = (5usize, 2usize);
+        let a = randn(&mut rng, m * k);
+        let w = randn(&mut rng, k * np);
+        let c0 = randn(&mut rng, ldc * cols);
+        let pack = pack_for(&a, &w, m, k, np);
+        let mut c = c0.clone();
+        micro_sweep(&pack, m, np, k, &mut c, ldc, row0, col0);
+        for j in 0..cols {
+            for i in 0..rows {
+                let inside = (row0..row0 + m).contains(&i) && (col0..col0 + np).contains(&j);
+                if !inside {
+                    assert_eq!(
+                        c[j * ldc + i].to_bits(),
+                        c0[j * ldc + i].to_bits(),
+                        "({i},{j}) outside the window moved"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_many_is_bitwise_equal_to_repeated_dot() {
+        let mut rng = XorShift::new(2024);
+        for &(n, t) in &[(1usize, 1usize), (4, 3), (7, 8), (129, 17), (256, 9)] {
+            let x = randn(&mut rng, n);
+            let cols: Vec<Vec<f64>> = (0..t).map(|_| randn(&mut rng, n)).collect();
+            let ys: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+            let mut out = vec![0.0f64; t];
+            dot_many(&x, &ys, &mut out);
+            for (q, y) in ys.iter().enumerate() {
+                assert_eq!(
+                    out[q].to_bits(),
+                    crate::linalg::blas1::dot(&x, y).to_bits(),
+                    "output {q} diverged at n={n}, t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chol_solve_multi_is_bitwise_equal_to_per_rhs_solves() {
+        let mut rng = XorShift::new(99);
+        for &(n, t) in &[(1usize, 1usize), (3, 2), (4, 8), (5, 17), (8, 9)] {
+            // A well-conditioned synthetic lower factor: unit-ish
+            // diagonal plus small off-diagonal noise.
+            let mut s = vec![0.0f64; n * n];
+            for j in 0..n {
+                s[j * n + j] = 2.0 + rng.uniform();
+                for i in (j + 1)..n {
+                    s[j * n + i] = 0.25 * (rng.uniform() - 0.5);
+                }
+            }
+            let rhs0 = randn(&mut rng, n * t);
+            let mut fused = rhs0.clone();
+            chol_solve_multi(&s, &mut fused, n, t);
+            let mut solo = rhs0.clone();
+            for chunk in solo.chunks_exact_mut(n) {
+                crate::linalg::chol::chol_solve_small(&s, chunk, n);
+            }
+            for (i, (a, b)) in fused.iter().zip(solo.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "rhs element {i} at n={n}, t={t}");
+            }
+        }
+    }
+}

@@ -16,18 +16,23 @@
 //! | `posv`     | [`chol::posv`] |
 //!
 //! Layout is column-major (BLAS convention, and the layout of blocks of
-//! `X_R` on disk: one SNP = one contiguous column). The BLAS-3 kernels are
-//! register-blocked and cache-tiled; see `blas3.rs` for the micro-kernel
-//! notes and `EXPERIMENTS.md` §Perf for measured rates.
+//! `X_R` on disk: one SNP = one contiguous column). The BLAS-3 kernels
+//! all bottom out in the register-tiled `mul_add` microkernels of
+//! [`micro`] (with a scalar reference path behind
+//! `CUGWAS_NO_MICROKERNEL` that is bit-identical per element); see
+//! `micro.rs` for the tile/packing notes and `EXPERIMENTS.md` §Perf
+//! for measured rates.
 
 pub mod blas1;
 pub mod blas2;
 pub mod blas3;
 pub mod chol;
 pub mod matrix;
+pub mod micro;
 
 pub use blas1::{axpy, dot, nrm2, sumsq};
 pub use blas2::{gemv_n, gemv_t, trsv_lower};
 pub use blas3::{gemm, syrk_t, syrk_t_pretransposed, trsm_lower_left};
 pub use chol::{chol_solve_small, posv, posv_small_factor, potrf, potrf_invert_diag_blocks};
 pub use matrix::Matrix;
+pub use micro::PackBuf;

@@ -146,6 +146,14 @@ enum Req {
     ReadColsSlab { col0: u64, ncols: u64, buf: BlockMut, done: Sender<(BlockMut, Result<()>)> },
     WriteCols { col0: u64, ncols: u64, buf: Vec<f64>, done: Sender<(Vec<f64>, Result<()>)> },
     Sync { done: Sender<(Vec<f64>, Result<()>)> },
+    /// Data-sync the file, then run `task` with the sync result on this
+    /// background thread — the two-phase journal's durable-commit leg:
+    /// the commit record and its own fsync ride the aio thread while
+    /// the caller streams the next segment.
+    SyncThen {
+        task: Box<dyn FnOnce(Result<()>) -> Result<()> + Send>,
+        done: Sender<(Vec<f64>, Result<()>)>,
+    },
     Shutdown,
 }
 
@@ -288,6 +296,12 @@ impl AioEngine {
                         Req::Sync { done } => {
                             let _ = done.send((Vec::new(), file.sync()));
                         }
+                        Req::SyncThen { task, done } => {
+                            let t0 = Instant::now();
+                            let res = task(file.sync());
+                            traced("sync_then", "ops", 0, t0);
+                            let _ = done.send((Vec::new(), res));
+                        }
                         Req::Shutdown => break,
                     }
                 }
@@ -355,6 +369,22 @@ impl AioEngine {
     pub fn sync(&self) -> AioHandle {
         let (done, rx) = channel();
         self.submit(Req::Sync { done });
+        AioHandle { rx }
+    }
+
+    /// Queue a data sync behind all submitted operations, then run
+    /// `task(sync_result)` on the I/O thread. The FIFO request queue
+    /// guarantees every previously submitted write lands before the
+    /// sync; the handle resolves to `task`'s result. This is how the
+    /// coordinator overlaps the journal's durable commit with the next
+    /// segment's reads: the boundary only *schedules* the sync+commit
+    /// and reaps it one segment later.
+    pub fn sync_then(
+        &self,
+        task: impl FnOnce(Result<()>) -> Result<()> + Send + 'static,
+    ) -> AioHandle {
+        let (done, rx) = channel();
+        self.submit(Req::SyncThen { task: Box::new(task), done });
         AioHandle { rx }
     }
 }
@@ -670,6 +700,38 @@ mod tests {
         let eng = AioEngine::new(XrdFile::create(&p, h).unwrap());
         eng.write(0, vec![1.0; 8]).wait().1.unwrap();
         eng.sync().wait().1.unwrap();
+        drop(eng);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn sync_then_runs_the_task_behind_queued_writes() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let p = tmpfile("syncthen");
+        let h = Header::new(4, 4, 2, 0).unwrap();
+        let eng = AioEngine::new(XrdFile::create(&p, h).unwrap());
+        // Submit a write and, without waiting, the sync+task: FIFO
+        // ordering must run the task only after the write landed.
+        let wh = eng.write(0, vec![2.5; 8]);
+        let ran = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&ran);
+        let th = eng.sync_then(move |sync_res| {
+            sync_res?;
+            flag.store(true, Ordering::SeqCst);
+            Ok(())
+        });
+        th.wait().1.unwrap();
+        assert!(ran.load(Ordering::SeqCst));
+        wh.wait().1.unwrap();
+        // The task's own failure surfaces through the handle.
+        let (_, res) = eng
+            .sync_then(|sync_res| {
+                sync_res?;
+                Err(Error::io("commit failed", std::io::Error::other("boom")))
+            })
+            .wait();
+        assert!(res.unwrap_err().to_string().contains("commit failed"));
         drop(eng);
         std::fs::remove_file(&p).unwrap();
     }

@@ -253,6 +253,10 @@ pub struct FaultPlan {
     /// The Nth journal append (1-based) writes half a record and
     /// reports failure, simulating a crash mid-append (0 = off).
     pub torn_append_at: u64,
+    /// The Nth journal *commit* (1-based) fails before its durable mark
+    /// lands, simulating a crash between the intent records and the
+    /// commit sync — resume must replay the unsealed segment (0 = off).
+    pub commit_crash_at: u64,
     /// Lane to wedge ([`NO_LANE`] = off)…
     pub wedge_lane: usize,
     /// …on receiving its Nth chunk (1-based)…
@@ -271,6 +275,7 @@ impl Default for FaultPlan {
             read_delay_ms: 0,
             corrupt_every: 0,
             torn_append_at: 0,
+            commit_crash_at: 0,
             wedge_lane: NO_LANE,
             wedge_at_chunk: 1,
             wedge_ms: 3_000,
@@ -285,6 +290,7 @@ impl FaultPlan {
             || self.read_delay_every > 0
             || self.corrupt_every > 0
             || self.torn_append_at > 0
+            || self.commit_crash_at > 0
             || self.wedge_lane != NO_LANE
     }
 }
@@ -296,6 +302,7 @@ struct FaultState {
     read_attempts: u64,
     published: u64,
     appends: u64,
+    commits: u64,
     chunks: u64,
     wedged: bool,
 }
@@ -319,6 +326,7 @@ pub fn arm(plan: FaultPlan) {
         read_attempts: 0,
         published: 0,
         appends: 0,
+        commits: 0,
         chunks: 0,
         wedged: false,
     });
@@ -409,7 +417,7 @@ pub fn corrupt_payload(data: &mut [f64]) -> bool {
     true
 }
 
-/// Called by `Journal::append`: `Some(k)` tears the current append
+/// Called by `Journal::append_intent`: `Some(k)` tears the current append
 /// after `k` of its `len` record bytes (simulated crash — the caller
 /// writes the prefix, syncs, and reports failure).
 pub fn torn_append(len: usize) -> Option<usize> {
@@ -427,6 +435,24 @@ pub fn torn_append(len: usize) -> Option<usize> {
     } else {
         None
     }
+}
+
+/// Called by `Journal::commit` before the durable mark is appended:
+/// `true` means this commit crashes (simulated) with neither the mark
+/// nor the sync on disk — the preceding intents stay unsealed.
+pub fn commit_crash() -> bool {
+    if !faults_enabled() {
+        return false;
+    }
+    let hit = with_state(|st| {
+        st.commits += 1;
+        st.plan.commit_crash_at > 0 && st.commits == st.plan.commit_crash_at
+    })
+    .unwrap_or(false);
+    if hit {
+        note_injected();
+    }
+    hit
 }
 
 /// Called by a device lane per received chunk: `Some(d)` tells lane
@@ -471,6 +497,7 @@ mod tests {
         assert!(!corrupt_payload(&mut v));
         assert_eq!(v, vec![1.0; 4]);
         assert_eq!(torn_append(16), None);
+        assert!(!commit_crash());
         assert_eq!(lane_wedge(0), None);
     }
 

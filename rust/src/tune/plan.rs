@@ -124,7 +124,10 @@ pub fn candidates(rates: &ProbedRates, dims: Dims, opts: &PlanOpts) -> Vec<Candi
                             profile: HardwareProfile {
                                 name: "probed",
                                 gpu_trsm_gflops: rates.trsm_at(lane_threads),
-                                cpu_gflops: rates.gemm_at(coord_threads),
+                                // The coordinator's CPU work is the
+                                // S-loop — priced with the skinny-gemm
+                                // rate, not the square-panel one.
+                                cpu_gflops: rates.sloop_at(coord_threads),
                                 pcie_gbps: rates.pcie_gbps,
                                 disk_mbps: rates.disk_mbps,
                                 disk_lat_secs: rates.disk_lat_secs.max(0.0),
@@ -469,9 +472,14 @@ mod tests {
 
     fn rates() -> ProbedRates {
         let mut kernels = BTreeMap::new();
-        kernels.insert(1, KernelRates { trsm_gflops: 2.0, gemm_gflops: 2.5 });
-        kernels.insert(2, KernelRates { trsm_gflops: 3.6, gemm_gflops: 4.5 });
-        kernels.insert(4, KernelRates { trsm_gflops: 6.0, gemm_gflops: 8.0 });
+        // sloop rates mirror the old gemm fixture values so the argmin
+        // checks below exercise the same decision landscape.
+        kernels
+            .insert(1, KernelRates { trsm_gflops: 2.0, gemm_gflops: 2.5, sloop_gflops: 2.5 });
+        kernels
+            .insert(2, KernelRates { trsm_gflops: 3.6, gemm_gflops: 4.5, sloop_gflops: 4.5 });
+        kernels
+            .insert(4, KernelRates { trsm_gflops: 6.0, gemm_gflops: 8.0, sloop_gflops: 8.0 });
         ProbedRates {
             disk_mbps: 120.0,
             disk_lat_secs: 0.0,

@@ -34,6 +34,11 @@ pub const MIN_DISK_PROBE_BYTES: u64 = 1 << 20;
 pub struct KernelRates {
     pub trsm_gflops: f64,
     pub gemm_gflops: f64,
+    /// gemm on the S-loop's skinny shape (a handful of rows against the
+    /// full column panel) — the microkernel's rate here differs from the
+    /// square-ish `gemm_gflops` by an integer factor, so the DES prices
+    /// CPU compute with the rate of the kernel it actually runs.
+    pub sloop_gflops: f64,
 }
 
 /// Everything the probe learned about this machine + dataset.
@@ -69,6 +74,12 @@ impl ProbedRates {
         self.at(threads).map(|k| k.gemm_gflops).unwrap_or(0.0)
     }
 
+    /// Skinny (S-loop-shaped) gemm rate at the largest probed thread
+    /// count ≤ `threads`.
+    pub fn sloop_at(&self, threads: usize) -> f64 {
+        self.at(threads).map(|k| k.sloop_gflops).unwrap_or(0.0)
+    }
+
     fn at(&self, threads: usize) -> Option<&KernelRates> {
         self.kernels
             .range(..=threads.max(1))
@@ -88,7 +99,10 @@ impl ProbedRates {
             || bad(self.disk_mbps)
             || bad(self.pcie_gbps)
             || self.kernels.is_empty()
-            || self.kernels.values().any(|k| bad(k.trsm_gflops) || bad(k.gemm_gflops))
+            || self
+                .kernels
+                .values()
+                .any(|k| bad(k.trsm_gflops) || bad(k.gemm_gflops) || bad(k.sloop_gflops))
     }
 }
 
@@ -189,6 +203,10 @@ pub fn probe_kernels(total_threads: usize, quick: bool) -> Result<BTreeMap<usize
     let a = Matrix::randn(nn, nn, &mut rng);
     let b = Matrix::randn(nn, rhs, &mut rng);
     let b0 = Matrix::randn(nn, rhs, &mut rng);
+    // The S-loop's gemm shape: a short strip of output rows against the
+    // same k-depth — few enough rows that only partial microkernel tiles
+    // run, which is why its rate is probed separately.
+    let a_s = Matrix::randn(16, nn, &mut rng);
     let reps = if quick { 1 } else { 2 };
     let mut out = BTreeMap::new();
     for &t in &ladder {
@@ -211,7 +229,16 @@ pub fn probe_kernels(total_threads: usize, quick: bool) -> Result<BTreeMap<usize
             trsm_lower_left(&l, &mut x)?;
         }
         let trsm_gflops = gflops(trsm_flops, reps, t0.elapsed().as_secs_f64());
-        out.insert(t, KernelRates { trsm_gflops, gemm_gflops });
+
+        let sloop_flops = 2.0 * (16 * nn * rhs) as f64;
+        let mut c_s = Matrix::zeros(16, rhs);
+        gemm(1.0, &a_s, &b, 0.0, &mut c_s)?; // warm
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            gemm(1.0, &a_s, &b, 0.0, &mut c_s)?;
+        }
+        let sloop_gflops = gflops(sloop_flops, reps, t0.elapsed().as_secs_f64());
+        out.insert(t, KernelRates { trsm_gflops, gemm_gflops, sloop_gflops });
     }
     Ok(out)
 }
@@ -255,15 +282,18 @@ mod tests {
         assert!(rates.contains_key(&1));
         assert!(rates.contains_key(&2));
         for k in rates.values() {
-            assert!(k.trsm_gflops > 0.0 && k.gemm_gflops > 0.0, "{k:?}");
+            assert!(
+                k.trsm_gflops > 0.0 && k.gemm_gflops > 0.0 && k.sloop_gflops > 0.0,
+                "{k:?}"
+            );
         }
     }
 
     #[test]
     fn rate_lookup_floors_to_probed_counts() {
         let mut kernels = BTreeMap::new();
-        kernels.insert(1, KernelRates { trsm_gflops: 1.0, gemm_gflops: 1.5 });
-        kernels.insert(4, KernelRates { trsm_gflops: 3.0, gemm_gflops: 4.0 });
+        kernels.insert(1, KernelRates { trsm_gflops: 1.0, gemm_gflops: 1.5, sloop_gflops: 1.2 });
+        kernels.insert(4, KernelRates { trsm_gflops: 3.0, gemm_gflops: 4.0, sloop_gflops: 3.5 });
         let r = ProbedRates {
             disk_mbps: 100.0,
             disk_lat_secs: 0.0,
@@ -276,6 +306,8 @@ mod tests {
         assert_eq!(r.trsm_at(3), 1.0, "floors to the largest probed count ≤ 3");
         assert_eq!(r.trsm_at(4), 3.0);
         assert_eq!(r.gemm_at(100), 4.0);
+        assert_eq!(r.sloop_at(2), 1.2);
+        assert_eq!(r.sloop_at(4), 3.5);
         assert_eq!(r.trsm_at(0), 1.0, "clamps up to the smallest probed count");
         assert!(!r.degenerate());
     }
@@ -283,7 +315,7 @@ mod tests {
     #[test]
     fn degenerate_probes_are_flagged() {
         let mut kernels = BTreeMap::new();
-        kernels.insert(1, KernelRates { trsm_gflops: 1.0, gemm_gflops: 1.0 });
+        kernels.insert(1, KernelRates { trsm_gflops: 1.0, gemm_gflops: 1.0, sloop_gflops: 1.0 });
         let good = ProbedRates {
             disk_mbps: 50.0,
             disk_lat_secs: 0.0,

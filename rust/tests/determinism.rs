@@ -73,10 +73,16 @@ fn pipeline_results_are_bit_identical_across_thread_counts() {
 /// CUGWAS_DET_LANES × CUGWAS_DET_TRAITS select a configuration from the
 /// environment, and its `r.xrd` must be byte-identical to the
 /// single-thread run of the same lane count and batch width. CI fans
-/// this out over threads ∈ {1,2,8} × lanes ∈ {1,2} × traits ∈ {1,16} on
-/// every push, so the bit-identical guarantee is enforced there, not
-/// just locally. Without the env vars it checks the
-/// 2-thread/1-lane/1-trait cell.
+/// this out over threads ∈ {1,2,8} × lanes ∈ {1,2} × traits ∈ {1,16}
+/// (plus CUGWAS_NO_MICROKERNEL ∈ {0,1} cells) on every push, so the
+/// bit-identical guarantee is enforced there, not just locally. Without
+/// the env vars it checks the 2-thread/1-lane/1-trait cell.
+///
+/// When any of those env vars is explicitly set (i.e. under the CI
+/// matrix, where this test runs alone in its process), the cell also
+/// re-runs with the microkernel path *flipped* and asserts the bytes
+/// still match: the register-tiled kernels and the scalar reference
+/// must be indistinguishable at the `r.xrd` level.
 ///
 /// A multi-trait cell additionally proves the batching theorem the
 /// whole feature rests on: trait column `j` of the batched result is
@@ -113,6 +119,30 @@ fn matrix_cell_from_env_is_bit_identical() {
         "r.xrd changed at threads={threads}, lanes={lanes}, traits={traits}"
     );
     assert_eq!(diff.to_bits(), ref_diff.to_bits());
+
+    // Under the CI matrix (env vars set ⇒ this test runs alone via the
+    // exact-name filter, so the process-global switch is race-free),
+    // flip the kernel path and demand the same bytes. Locally, with no
+    // env set, this is skipped — parallel tests in this binary must not
+    // see a forced path.
+    let env_driven = ["CUGWAS_DET_THREADS", "CUGWAS_DET_LANES", "CUGWAS_DET_TRAITS"]
+        .iter()
+        .any(|v| std::env::var_os(v).is_some())
+        || std::env::var_os("CUGWAS_NO_MICROKERNEL").is_some();
+    if env_driven {
+        let no_micro = std::env::var("CUGWAS_NO_MICROKERNEL")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        cugwas::linalg::micro::set_forced(Some(no_micro)); // the *other* path
+        let (flip_bytes, flip_diff) = results_at(&dir, 1024, threads, mutate);
+        cugwas::linalg::micro::set_forced(None);
+        assert_eq!(
+            flip_bytes, ref_bytes,
+            "microkernel vs reference path changed r.xrd at threads={threads}, \
+             lanes={lanes}, traits={traits}"
+        );
+        assert_eq!(flip_diff.to_bits(), ref_diff.to_bits());
+    }
 
     // Cache on/off must not move a bit either: the cache only changes
     // where blocks are read from, never what is computed.

@@ -159,7 +159,7 @@ fn a_torn_journal_append_is_truncated_and_resume_replays_the_rest() {
     let err = cugwas::coordinator::run(&cfg_for(&dir)).unwrap_err();
     assert!(err.to_string().contains("torn"), "{err}");
     let jnl = std::fs::metadata(dir.join("r.progress")).unwrap().len();
-    assert_eq!(jnl, 32 + 8, "header plus half a record must be on disk");
+    assert_eq!(jnl, 32 + 12, "header plus half a 24-byte record must be on disk");
     fault::disarm();
 
     // Resume: the torn tail is truncated away and the exact uncovered
@@ -171,6 +171,52 @@ fn a_torn_journal_append_is_truncated_and_resume_replays_the_rest() {
     assert_eq!(rep.snps, dims.m);
     let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
     assert_eq!(bytes, baseline, "resume after a torn append diverged");
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn a_crash_between_intent_and_commit_replays_the_segment_bit_identically() {
+    let _g = lock();
+    reset();
+    let (dir, dims) = make_dataset("twophase");
+
+    // Baseline bytes for the final comparison.
+    cugwas::coordinator::run(&cfg_for(&dir)).unwrap();
+    let baseline = std::fs::read(dir.join("r.xrd")).unwrap();
+
+    // Crash the first journal commit after its intents landed but
+    // before the durable mark — the exact window the two-phase design
+    // opens by taking the commit fsync off the critical path.
+    fault::arm(FaultPlan { commit_crash_at: 1, ..Default::default() });
+    let err = cugwas::coordinator::run(&cfg_for(&dir)).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("commit"), "{msg}");
+    assert!(msg.contains("injected"), "{msg}");
+    // On disk: the header plus one intent per window (a single segment
+    // streams all 8 windows with adaptation off) and no commit record —
+    // the buffered intents landed, the durable mark never did.
+    let jnl = std::fs::metadata(dir.join("r.progress")).unwrap().len();
+    assert_eq!(jnl, 32 + 8 * 24, "all intents, no commit mark: {jnl}");
+    assert!(fault::counters().injected > 0);
+    fault::disarm();
+
+    // Resume must treat every unsealed intent as not-done and replay the
+    // whole segment; the idempotent result writes make the replay land
+    // byte-identical.
+    let mut cfg = cfg_for(&dir);
+    cfg.resume = true;
+    let rep = cugwas::coordinator::run(&cfg).unwrap();
+    assert_eq!(rep.snps, dims.m, "resume must recompute every unsealed column");
+    let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
+    assert_eq!(bytes, baseline, "replay after a commit crash diverged");
+    // And the replayed run's journal now ends in a durable commit: a
+    // second resume finds nothing left to do.
+    let mut cfg = cfg_for(&dir);
+    cfg.resume = true;
+    let rep = cugwas::coordinator::run(&cfg).unwrap();
+    assert_eq!(rep.blocks, 0, "a committed journal must leave no windows to replay");
 
     reset();
     std::fs::remove_dir_all(&dir).unwrap();

@@ -1,0 +1,150 @@
+//! Microkernel ⇔ reference parity, bit for bit.
+//!
+//! The register-tiled microkernels (`linalg::micro`) vectorize across
+//! *independent output elements*, so every element's accumulation order
+//! is identical to the scalar reference nest — which makes the two
+//! paths comparable with `to_bits()`, not a tolerance. These tests
+//! force each path in turn through the public drivers (`gemm`,
+//! `trsm_lower_left`, `syrk_t`, `potrf`) and assert the outputs are
+//! byte-identical across adversarial shapes: degenerate (1×1×1, k = 1,
+//! single row/column), odd everything, and sub-tile tails straddling
+//! the MR/NR register tile, the TRSM/POTRF panel widths and the NC
+//! column-panel split.
+//!
+//! The forced-path switch is process-global, so every test serializes
+//! on one mutex and restores the auto path (env-driven) on exit — even
+//! on panic, via the drop guard.
+
+use cugwas::linalg::{gemm, micro, potrf, syrk_t, trsm_lower_left, Matrix};
+use cugwas::util::{threads, XorShift};
+use std::sync::{Mutex, MutexGuard};
+
+static FORCED: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    FORCED.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the auto (env-driven) path even if an assertion panics.
+struct Restore;
+impl Drop for Restore {
+    fn drop(&mut self) {
+        micro::set_forced(None);
+    }
+}
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.as_slice().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `f` once per forced path and return (micro, reference) outputs.
+fn both(mut f: impl FnMut() -> Matrix) -> (Matrix, Matrix) {
+    let _restore = Restore;
+    micro::set_forced(Some(true));
+    let fast = f();
+    micro::set_forced(Some(false));
+    let slow = f();
+    (fast, slow)
+}
+
+fn assert_paths_match(fast: &Matrix, slow: &Matrix, what: &str) {
+    assert_eq!(bits(fast), bits(slow), "{what}: microkernel differs from reference");
+}
+
+#[test]
+fn gemm_paths_are_bit_identical_across_adversarial_shapes() {
+    let _l = lock();
+    let mut rng = XorShift::new(0x05EE_D0A1);
+    // (m, k, n): degenerate, odd, and tails around MR=8 / NR=4 / NC=64.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 5, 1),
+        (5, 1, 9),   // k = 1: a single mul_add per element
+        (7, 3, 5),   // everything below one tile
+        (8, 4, 4),   // exactly one MR×NR-aligned strip
+        (9, 5, 5),   // one row past the tile
+        (63, 33, 65), // straddles the NC=64 column panel
+        (130, 65, 67),
+    ];
+    for &(m, k, n) in &shapes {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let c0 = Matrix::randn(m, n, &mut rng);
+        for &(alpha, beta) in &[(1.0f64, 0.0f64), (0.75, 0.5), (-1.0, 1.0)] {
+            let (fast, slow) = both(|| {
+                let mut c = c0.clone();
+                gemm(alpha, &a, &b, beta, &mut c).unwrap();
+                c
+            });
+            assert_paths_match(&fast, &slow, &format!("gemm {m}x{k}x{n} α={alpha} β={beta}"));
+        }
+    }
+}
+
+#[test]
+fn gemm_parallel_panels_keep_the_parity() {
+    // The scatter hands each NC-wide panel to a worker with its own
+    // pack buffers; the per-element order (and hence the bits) must not
+    // depend on the path even when several panels run concurrently.
+    let _l = lock();
+    let mut rng = XorShift::new(0x0BAD_5EED);
+    let (m, k, n) = (96usize, 48usize, 200usize); // four NC panels, odd tail
+    let a = Matrix::randn(m, k, &mut rng);
+    let b = Matrix::randn(k, n, &mut rng);
+    let _t = threads::with_budget(3);
+    let (fast, slow) = both(|| {
+        let mut c = Matrix::zeros(m, n);
+        gemm(1.0, &a, &b, 0.0, &mut c).unwrap();
+        c
+    });
+    assert_paths_match(&fast, &slow, "parallel gemm 96x48x200");
+}
+
+#[test]
+fn trsm_paths_are_bit_identical_across_adversarial_shapes() {
+    let _l = lock();
+    let mut rng = XorShift::new(0x7125_0001);
+    // (n, nrhs) around the TRSM_NB=32 panel and the NC=64 rhs split.
+    let shapes = [
+        (1usize, 1usize),
+        (7, 5),
+        (32, 64),  // exactly one diagonal panel, one rhs panel
+        (33, 65),  // one past both
+        (64, 1),   // single rhs column
+        (70, 130),
+    ];
+    for &(n, nrhs) in &shapes {
+        let spd = Matrix::rand_spd(n, 4.0, &mut rng);
+        let l = potrf(&spd).unwrap();
+        let b0 = Matrix::randn(n, nrhs, &mut rng);
+        let (fast, slow) = both(|| {
+            let mut b = b0.clone();
+            trsm_lower_left(&l, &mut b).unwrap();
+            b
+        });
+        assert_paths_match(&fast, &slow, &format!("trsm {n}x{nrhs}"));
+    }
+}
+
+#[test]
+fn syrk_paths_are_bit_identical_across_adversarial_shapes() {
+    let _l = lock();
+    let mut rng = XorShift::new(0x5712_C001);
+    for &(rows, cols) in &[(1usize, 1usize), (7, 5), (64, 33), (129, 66)] {
+        let a = Matrix::randn(rows, cols, &mut rng);
+        let (fast, slow) = both(|| syrk_t(&a));
+        assert_paths_match(&fast, &slow, &format!("syrk_t {rows}x{cols}"));
+    }
+}
+
+#[test]
+fn potrf_paths_are_bit_identical_across_adversarial_shapes() {
+    let _l = lock();
+    let mut rng = XorShift::new(0x90_7F_2F_01);
+    // n around the POTRF_NB=48 panel: sub-panel, exact, one past, multi.
+    for &n in &[1usize, 5, 47, 48, 49, 100] {
+        let spd = Matrix::rand_spd(n, 4.0, &mut rng);
+        let (fast, slow) = both(|| potrf(&spd).unwrap());
+        assert_paths_match(&fast, &slow, &format!("potrf {n}"));
+    }
+}

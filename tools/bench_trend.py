@@ -24,12 +24,15 @@ import os
 import sys
 
 # The gated metrics: live streaming throughput of the pipelined solver,
-# the cache-hit serving throughput of the zero-copy block plane, and the
-# multi-trait batching rate (SNP·trait solves/s at the wide batch width).
+# the cache-hit serving throughput of the zero-copy block plane, the
+# multi-trait batching rate (SNP·trait solves/s at the wide batch width),
+# and the register-tiled microkernel's headline gemm/trsm GFlop/s.
 GATES = [
     ("headline_table", "live_cugwas_snps_per_sec"),
     ("service_throughput", "cache_hit_snps_per_sec"),
     ("service_throughput", "batched_snps_x_traits_per_sec"),
+    ("linalg_micro", "gemm_gflops"),
+    ("linalg_micro", "trsm_gflops"),
 ]
 # Soft gate: fail only on a >20% drop vs. the recent median (medians
 # absorb one noisy CI runner; a hard cliff still fails loudly).
@@ -41,6 +44,9 @@ COLUMNS = [
     ("service_throughput", "cache_hit_snps_per_sec"),
     ("service_throughput", "shared_cache_speedup"),
     ("service_throughput", "batched_snps_x_traits_per_sec"),
+    ("linalg_micro", "gemm_gflops"),
+    ("linalg_micro", "trsm_gflops"),
+    ("linalg_micro", "gemm_micro_speedup"),
     ("headline_table", "cugwas1_vs_ooc"),
     ("headline_table", "cugwas4_vs_ooc"),
 ]
