@@ -44,11 +44,15 @@
 //! watch = false        # keep serving after the queue drains
 //! auto_tune = true     # probe + plan each dataset on first contact
 //! metrics_addr = "127.0.0.1:9184" # optional: serve /metrics + /healthz
+//! wal = "service.wal"  # lifecycle WAL (default: <spool>/service.wal)
+//! drain_timeout_secs = 30  # graceful-drain checkpoint budget
+//! disk_low_water_mb = 0    # pause admission below this free space (0 = off)
 //!
 //! [job.alpha]
 //! dataset = "data/s1"
 //! block = 256
 //! priority = 2         # higher runs first; FIFO within a priority
+//! deadline_secs = 0    # cancel (checkpointed) past this wall time (0 = none)
 //!
 //! [job.beta]
 //! dataset = "data/s1"  # same dataset → second pass hits the cache
@@ -60,7 +64,7 @@ use crate::devsim::HardwareProfile;
 use crate::error::{Error, Result};
 use crate::gwas::problem::Dims;
 use crate::service::JobSpec;
-use crate::storage::fault::{FaultPlan, RetryPolicy, NO_COL, NO_LANE};
+use crate::storage::fault::{FaultPlan, RetryPolicy, NO_COL, NO_DISK, NO_LANE};
 use crate::storage::Throttle;
 use std::path::{Path, PathBuf};
 
@@ -114,6 +118,10 @@ const FAULT_KEYS: &[&str] = &[
     "inject_wedge_lane",
     "inject_wedge_at_chunk",
     "inject_wedge_ms",
+    "inject_wal_torn_append_at",
+    "inject_wal_crash_at",
+    "inject_quarantine_crash_at",
+    "inject_fake_disk_free_mb",
 ];
 
 /// Parse the `[fault_tolerance]` section (absent section → defaults:
@@ -156,6 +164,14 @@ fn fault_from_doc(doc: &Doc) -> Result<FaultToleranceConfig> {
         wedge_at_chunk: key("inject_wedge_at_chunk", dp.wedge_at_chunk as i64, 1, i64::MAX)?
             as u64,
         wedge_ms: key("inject_wedge_ms", dp.wedge_ms as i64, 0, 600_000)? as u64,
+        wal_torn_append_at: key("inject_wal_torn_append_at", 0, 0, i64::MAX)? as u64,
+        wal_crash_at: key("inject_wal_crash_at", 0, 0, i64::MAX)? as u64,
+        quarantine_crash_at: key("inject_quarantine_crash_at", 0, 0, i64::MAX)? as u64,
+        // -1 = "no override" (the NO_DISK sentinel, like NO_COL above).
+        fake_disk_free_mb: match key("inject_fake_disk_free_mb", -1, -1, i64::MAX)? {
+            -1 => NO_DISK,
+            v => v as u64,
+        },
     };
     Ok(FaultToleranceConfig { policy, integrity, plan })
 }
@@ -282,6 +298,9 @@ impl RunConfig {
                 adapt_every,
                 traits,
                 perm_seed,
+                shutdown: None,
+                deadline_at: None,
+                disk_low_water: 0,
             },
             sim: SimSection { profile },
             fault: fault_from_doc(doc)?,
@@ -399,6 +418,7 @@ const JOB_KEYS: &[&str] = &[
     "traits",
     "permutations",
     "perm_seed",
+    "deadline_secs",
 ];
 
 /// Parse one job section into a [`JobSpec`]. `dataset` is required; a
@@ -453,6 +473,10 @@ fn job_from_doc(doc: &Doc, section: &str, name: &str) -> Result<JobSpec> {
     let (traits, perm_seed) = resolve_traits(doc, section)?;
     spec.traits = traits;
     spec.perm_seed = perm_seed;
+    // A year bounds out absurd values while leaving any real deadline
+    // expressible; 0 (the default) means none.
+    spec.deadline_secs =
+        int_in(doc, section, "deadline_secs", 0, 0, 365 * 86_400)? as u64;
     Ok(spec)
 }
 
@@ -484,6 +508,19 @@ pub struct ServiceConfig {
     /// `/healthz`) endpoint on; also turns the metrics plane on. The
     /// `--metrics-addr` flag overrides this key.
     pub metrics_addr: Option<String>,
+    /// Path of the service lifecycle WAL. Defaults to
+    /// `<spool>/service.wal` when a spool is configured, else no WAL
+    /// (a WAL-less serve is not crash-restartable). The `--wal` flag
+    /// overrides this key.
+    pub wal: Option<PathBuf>,
+    /// How long a graceful drain waits for in-flight jobs to checkpoint
+    /// at a segment boundary before abandoning them (their journals are
+    /// still committed through the last finished segment).
+    pub drain_timeout_secs: u64,
+    /// Free-space low-water mark: below this many MB free on the spool
+    /// (or active dataset) filesystem, admission pauses and the shared
+    /// cache is shed; 0 disables the sentinel.
+    pub disk_low_water_mb: u64,
     /// Jobs from `[job.*]` sections, in section (alphabetical) order —
     /// `priority` is the scheduling knob, not file order.
     pub jobs: Vec<JobSpec>,
@@ -536,6 +573,9 @@ impl ServiceConfig {
                 "watch",
                 "auto_tune",
                 "metrics_addr",
+                "wal",
+                "drain_timeout_secs",
+                "disk_low_water_mb",
             ]
             .contains(&key)
             {
@@ -568,6 +608,23 @@ impl ServiceConfig {
                 }
             }
         };
+        let wal = match doc.get("service", "wal") {
+            None => None,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| Error::Config("service.wal: expected string".into()))?;
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(PathBuf::from(s))
+                }
+            }
+        };
+        let drain_timeout_secs =
+            int_in(doc, "service", "drain_timeout_secs", 30, 1, 86_400)? as u64;
+        let disk_low_water_mb =
+            int_in(doc, "service", "disk_low_water_mb", 0, 0, 1 << 40)? as u64;
         let mut jobs = Vec::new();
         for section in doc.sections() {
             if let Some(name) = section.strip_prefix("job.") {
@@ -583,6 +640,9 @@ impl ServiceConfig {
             watch,
             auto_tune,
             metrics_addr,
+            wal,
+            drain_timeout_secs,
+            disk_low_water_mb,
             jobs,
             fault: fault_from_doc(doc)?,
         })
@@ -737,7 +797,32 @@ artifacts = "arts"
         assert!(c.spool.is_none());
         assert!(!c.watch);
         assert!(c.auto_tune, "first-contact tuning is on by default");
+        assert!(c.wal.is_none(), "no WAL unless a spool or explicit path supplies one");
+        assert_eq!(c.drain_timeout_secs, 30);
+        assert_eq!(c.disk_low_water_mb, 0, "disk sentinel defaults off");
         assert!(c.jobs.is_empty());
+    }
+
+    #[test]
+    fn lifecycle_keys_parse_and_reject_garbage() {
+        let c = ServiceConfig::from_toml(
+            "[service]\nwal = \"svc.wal\"\ndrain_timeout_secs = 5\ndisk_low_water_mb = 512\n\n\
+             [job.a]\ndataset = \"d\"\ndeadline_secs = 90\n",
+        )
+        .unwrap();
+        assert_eq!(c.wal.as_deref(), Some(std::path::Path::new("svc.wal")));
+        assert_eq!(c.drain_timeout_secs, 5);
+        assert_eq!(c.disk_low_water_mb, 512);
+        assert_eq!(c.jobs[0].deadline_secs, 90);
+        // Empty wal string → default resolution (spool-based), like
+        // metrics_addr.
+        assert!(ServiceConfig::from_toml("[service]\nwal = \"\"\n").unwrap().wal.is_none());
+        assert!(ServiceConfig::from_toml("[service]\nwal = 3\n").is_err());
+        assert!(ServiceConfig::from_toml("[service]\ndrain_timeout_secs = 0\n").is_err());
+        assert!(ServiceConfig::from_toml("[service]\ndisk_low_water_mb = -1\n").is_err());
+        assert!(
+            ServiceConfig::from_toml("[job.a]\ndataset = \"d\"\ndeadline_secs = -5\n").is_err()
+        );
     }
 
     #[test]
@@ -864,13 +949,20 @@ artifacts = "arts"
         assert_eq!(c.fault.plan.read_fail_col, NO_COL);
         assert_eq!(c.fault.plan.wedge_lane, NO_LANE);
 
-        // Service configs carry the same section.
+        // Service configs carry the same section, including the
+        // lifecycle-chaos knobs (off by default).
         let s = ServiceConfig::from_toml(
-            "[fault_tolerance]\njob_retries = 2\nquarantine_after = 4\n",
+            "[fault_tolerance]\njob_retries = 2\nquarantine_after = 4\n\
+             inject_wal_torn_append_at = 3\ninject_fake_disk_free_mb = 1\n",
         )
         .unwrap();
         assert_eq!(s.fault.policy.job_retries, 2);
         assert_eq!(s.fault.policy.quarantine_after, 4);
+        assert_eq!(s.fault.plan.wal_torn_append_at, 3);
+        assert_eq!(s.fault.plan.fake_disk_free_mb, 1);
+        assert_eq!(s.fault.plan.wal_crash_at, 0);
+        assert_eq!(s.fault.plan.quarantine_crash_at, 0);
+        assert_eq!(RunConfig::defaults().fault.plan.fake_disk_free_mb, NO_DISK);
 
         // Typos and out-of-range values are config errors.
         assert!(RunConfig::from_toml("[fault_tolerance]\nread_retrys = 1\n").is_err());

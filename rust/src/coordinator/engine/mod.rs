@@ -413,7 +413,12 @@ impl Engine {
             let j = Journal::create(&paths.progress(), dims.m as u64, cfg.block as u64, t as u64)?;
             Ok((XrdFile::create(&paths.results(), r_header)?, j))
         };
-        let (rfile, journal, done_ranges) = if cfg.resume {
+        // Resuming with no journal on disk is a fresh start, not an
+        // error: WAL replay resubmits jobs that *may* have streamed
+        // (admitted, cancelled from the queue, …) with `resume` set,
+        // and a job that never reached its first boundary has nothing
+        // to resume from.
+        let (rfile, journal, done_ranges) = if cfg.resume && paths.progress().exists() {
             let (journal, ranges) =
                 Journal::open_resume(&paths.progress(), dims.m as u64, cfg.block as u64, t as u64)?;
             match XrdFile::open_rw(&paths.results()) {
@@ -486,6 +491,51 @@ impl Engine {
                     break;
                 }
                 continue; // zero-window plan entry: knobs applied, no work
+            }
+            // Cooperative stop points, honored only here — between
+            // segments — so a stopped run is always checkpoint-clean:
+            // the previous boundary's durable commit is reaped first,
+            // then the run returns with the journal sealed at a segment
+            // edge and every committed window resumable. A run whose
+            // work list just drained never stops "cancelled" — the
+            // empty-items branch above breaks out before these checks.
+            let stop = if cfg.shutdown.as_ref().is_some_and(|t| t.is_triggered()) {
+                Some("drain requested — checkpointed at the segment boundary".to_string())
+            } else if cfg.deadline_at.is_some_and(|d| Instant::now() >= d) {
+                Some(format!(
+                    "deadline exceeded after {:.1}s — checkpointed at the segment boundary",
+                    t_wall.elapsed().as_secs_f64()
+                ))
+            } else {
+                None
+            };
+            if let Some(why) = stop {
+                if let Some(h) = pending_commit.take() {
+                    let (_, res) = h.wait();
+                    res?;
+                }
+                return Err(Error::Cancelled(why));
+            }
+            // Disk-space sentinel: a filesystem running dry mid-stream
+            // fails the job *here*, at a boundary with the journal
+            // consistent, naming the path — never via a torn journal
+            // append or a half-written result block later.
+            if cfg.disk_low_water > 0 {
+                if let Some(free) = crate::util::disk_free_bytes(&self.dataset) {
+                    if free < cfg.disk_low_water {
+                        if let Some(h) = pending_commit.take() {
+                            let (_, res) = h.wait();
+                            res?;
+                        }
+                        return Err(Error::Pipeline(format!(
+                            "free space on {} fell below the low-water mark ({} < {}) — \
+                             job checkpointed at the segment boundary",
+                            self.dataset.display(),
+                            crate::util::human_bytes(free),
+                            crate::util::human_bytes(cfg.disk_low_water),
+                        )));
+                    }
+                }
             }
             let seg_cols: usize = items.iter().map(|&(_, live)| live).sum();
             self.ensure_resources(&knobs, cfg.ngpus)?;

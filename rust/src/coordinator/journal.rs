@@ -74,6 +74,13 @@ impl Journal {
         header[16..24].copy_from_slice(&nb.to_le_bytes());
         header[24..32].copy_from_slice(&t.to_le_bytes());
         file.write_all(&header).map_err(|e| Error::io("writing journal header", e))?;
+        file.sync_data().map_err(|e| Error::io("syncing journal header", e))?;
+        // File sync alone does not make the *name* durable: on a power
+        // cut the directory entry itself can vanish, leaving a resumed
+        // run with no journal and a result file it would recompute from
+        // zero. Sync the parent directory so create-then-crash leaves
+        // either no journal or a whole one — never a named-but-lost file.
+        sync_parent_dir(path)?;
         Ok(Journal { file })
     }
 
@@ -208,6 +215,22 @@ impl Journal {
         self.file.write_all(&rec).map_err(|e| Error::io("appending journal commit", e))?;
         self.file.sync_data().map_err(|e| Error::io("syncing journal commit", e))
     }
+}
+
+/// `fsync` the directory holding `path`, making a freshly created or
+/// renamed entry durable. File data syncs (`sync_data`/`sync_all`) only
+/// cover the inode — the *directory entry* needs its own sync on Linux,
+/// or a power cut can forget the name while keeping the bytes. Shared
+/// by journal creation, the service WAL, and the scheduler's
+/// quarantine/spool renames.
+pub fn sync_parent_dir(path: &Path) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    std::fs::File::open(dir)
+        .and_then(|d| d.sync_all())
+        .map_err(|e| Error::io(format!("syncing directory {}", dir.display()), e))
 }
 
 fn encode(kind: u64, a: u64, b: u64) -> [u8; RECORD_BYTES] {

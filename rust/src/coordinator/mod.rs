@@ -32,6 +32,6 @@ pub use lane::{Backend, DevIn, DevOut, DeviceLane, LaneOutputs, OffloadMode};
 pub use metrics::{Counter, Metrics, Phase};
 pub use pipeline::{
     run, verify_against_oracle, verify_against_oracle_multi, BackendKind, PipelineConfig,
-    PipelineReport,
+    PipelineReport, ShutdownToken,
 };
 pub use pool::BufPool;

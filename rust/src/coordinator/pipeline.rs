@@ -34,6 +34,40 @@ use crate::telemetry::StallVerdict;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+/// A cooperative stop request threaded from the service scheduler down
+/// to the engine's segment loop.
+///
+/// The engine checks it only at segment boundaries — the one place the
+/// progress journal is (or is about to be) durably committed — so a
+/// triggered token never tears a segment: in-flight windows finish,
+/// the boundary's intents+commit land, and the run returns
+/// [`Error::Cancelled`] with everything before the boundary resumable
+/// via `--resume`. Cloning shares the flag (it is an `Arc`), which is
+/// how one drain request fans out to every in-flight job.
+#[derive(Clone, Default)]
+pub struct ShutdownToken(Arc<std::sync::atomic::AtomicBool>);
+
+impl ShutdownToken {
+    pub fn new() -> ShutdownToken {
+        ShutdownToken::default()
+    }
+
+    /// Request a cooperative stop (idempotent, thread-safe).
+    pub fn trigger(&self) {
+        self.0.store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        self.0.load(std::sync::atomic::Ordering::Acquire)
+    }
+}
+
+impl std::fmt::Debug for ShutdownToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ShutdownToken({})", if self.is_triggered() { "triggered" } else { "armed" })
+    }
+}
+
 /// Which compute backend the lanes use.
 #[derive(Debug, Clone)]
 pub enum BackendKind {
@@ -102,6 +136,20 @@ pub struct PipelineConfig {
     /// Seed for the Fisher–Yates phenotype shuffles when `traits > 1`
     /// (see [`crate::gwas::phenotype_batch`]).
     pub perm_seed: u64,
+    /// Cooperative stop: when triggered, the engine checkpoints at the
+    /// next segment boundary and returns [`Error::Cancelled`]. `None`
+    /// (the default) costs nothing — no check is even reached.
+    pub shutdown: Option<ShutdownToken>,
+    /// Absolute per-job deadline: past this instant the engine
+    /// checkpoints at the next segment boundary and returns
+    /// [`Error::Cancelled`] naming the budget. `None` = no deadline.
+    pub deadline_at: Option<std::time::Instant>,
+    /// Disk-space low-water mark in bytes for the dataset's filesystem
+    /// (where `r.xrd` and `r.progress` live). Checked at segment
+    /// boundaries; falling under it fails the run with an error naming
+    /// the path — after the boundary's commit was reaped, so the
+    /// journal is never torn. 0 disables the sentinel.
+    pub disk_low_water: u64,
 }
 
 impl PipelineConfig {
@@ -127,6 +175,9 @@ impl PipelineConfig {
             adapt_every: 16,
             traits: 1,
             perm_seed: 0,
+            shutdown: None,
+            deadline_at: None,
+            disk_low_water: 0,
         }
     }
 }

@@ -31,6 +31,13 @@ pub enum Error {
     LaneFault { lane: usize, msg: String },
     /// Shape/dimension mismatch between operands.
     Shape(String),
+    /// The job was stopped cooperatively at a segment boundary (drain,
+    /// per-job deadline, or an explicit cancel). Distinct from the
+    /// failure variants because the work is *checkpointed*: the journal
+    /// holds a durable commit for everything finished, so a later
+    /// `resume` continues instead of restarting — the scheduler reports
+    /// these jobs as cancelled, not failed.
+    Cancelled(String),
 }
 
 impl Error {
@@ -61,6 +68,7 @@ impl fmt::Display for Error {
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
             Error::LaneFault { lane, msg } => write!(f, "lane {lane} fault: {msg}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
         }
     }
 }

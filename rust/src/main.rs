@@ -388,6 +388,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         adapt_every: a.usize("adapt-every")?,
         traits,
         perm_seed,
+        shutdown: None,
+        deadline_at: None,
+        disk_low_water: 0,
     };
     // A tuned profile supplies defaults; flags the user typed still win.
     // Loading shares one error path with the `[pipeline]`/`[job.*]`
@@ -462,6 +465,8 @@ const SERVE_FLAGS: &[Flag] = &[
     Flag::opt("spool", "", "spool directory of job TOMLs (overrides config)"),
     Flag::opt("threads", "0", "compute threads across workers (0 = config, then all cores)"),
     Flag::opt("metrics-addr", "", "serve Prometheus /metrics + /healthz here (overrides config)"),
+    Flag::opt("wal", "", "service lifecycle WAL path (overrides config; default <spool>/service.wal)"),
+    Flag::opt("drain-timeout", "0", "graceful-drain checkpoint budget in seconds (0 = config)"),
     Flag::opt("trace-out", "", "write a Chrome/Perfetto trace JSON here"),
     Flag::opt("report-json", "", "write the service report as JSON here"),
     Flag::switch("watch", "keep polling the spool after the queue drains"),
@@ -490,6 +495,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if !a.str("metrics-addr").is_empty() {
         cfg.metrics_addr = Some(a.str("metrics-addr").to_string());
     }
+    if !a.str("wal").is_empty() {
+        cfg.wal = Some(PathBuf::from(a.str("wal")));
+    }
+    let drain_timeout = a.usize("drain-timeout")?;
+    if drain_timeout > 0 {
+        cfg.drain_timeout_secs = drain_timeout as u64;
+    }
+    // Ctrl-C becomes a graceful drain: admission stops, in-flight jobs
+    // checkpoint at their next segment boundary, the WAL is sealed, and
+    // the report still prints. A second Ctrl-C during the drain is
+    // absorbed by the same latch; the drain timeout bounds the wait.
+    cugwas::service::install_drain_on_ctrl_c();
     // Install the `[fault_tolerance]` section process-wide: retry
     // policy, integrity checking, and (chaos testing only) the armed
     // fault injector.

@@ -12,6 +12,9 @@
 //!   `coordinator::run`, a watched spool directory, the dispatch loop.
 //! * [`report`] — [`JobReport`] / [`ServiceReport`]: per-job phase
 //!   metrics and aggregate throughput, printed by `cugwas serve`.
+//! * [`wal`] — [`Wal`]: the append-only, checksummed lifecycle log
+//!   that makes `serve` crash-restartable (replayed on startup; torn
+//!   tails truncated; sealed on clean exit).
 //!
 //! Configuration comes from the `[service]` and `[job.*]` sections of a
 //! TOML file (see [`crate::config::ServiceConfig`]).
@@ -19,7 +22,9 @@
 pub mod queue;
 pub mod report;
 pub mod scheduler;
+pub mod wal;
 
 pub use queue::{Job, JobQueue, JobSpec, JobState, KnobPins, Priority};
 pub use report::{JobReport, ServiceReport};
-pub use scheduler::serve;
+pub use scheduler::{drain_requested, install_drain_on_ctrl_c, request_drain, serve};
+pub use wal::{Wal, WalEvent, WalRecord};

@@ -81,6 +81,11 @@ pub struct JobSpec {
     /// RNG seed for permutation columns (column 0 is always the
     /// observed phenotype; the seed only matters when `traits > 1`).
     pub perm_seed: u64,
+    /// Wall-clock deadline in seconds from the moment the job starts
+    /// streaming (0 = none). A job past its deadline is checkpointed at
+    /// the next segment boundary and reported cancelled — its progress
+    /// journal survives, so a resubmission resumes rather than restarts.
+    pub deadline_secs: u64,
     /// Knobs the operator set explicitly (see [`KnobPins`]).
     pub pins: KnobPins,
     /// A profile has already been applied to this spec (an explicit
@@ -112,6 +117,7 @@ impl JobSpec {
             adapt_every: 16,
             traits: 1,
             perm_seed: 0,
+            deadline_secs: 0,
             predicted_secs: None,
             pins: KnobPins::default(),
             profile_attached: false,
@@ -197,6 +203,10 @@ impl JobSpec {
             && self.adapt_every == other.adapt_every
             && self.traits == other.traits
             && self.perm_seed == other.perm_seed
+            // Deadlines cancel a *pass*, not a rider: a rider with a
+            // tighter deadline than its leader would be cancelled late
+            // (or drag its leader down). Only identical deadlines merge.
+            && self.deadline_secs == other.deadline_secs
     }
 
     pub fn host_bytes(&self, n: usize, p: usize) -> u64 {
@@ -223,6 +233,10 @@ pub enum JobState {
     Done,
     /// Failed (admission impossible, dataset missing, or pipeline error).
     Failed,
+    /// Stopped cooperatively at a segment boundary (drain, deadline, or
+    /// an explicit cancel). Not a failure: the job's progress journal
+    /// was checkpointed, so resubmitting it resumes where it stopped.
+    Cancelled,
 }
 
 impl JobState {
@@ -233,6 +247,7 @@ impl JobState {
             JobState::Streaming => "streaming",
             JobState::Done => "done",
             JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
         }
     }
 }
@@ -249,6 +264,10 @@ pub struct Job {
     /// Canonical dataset identity (for the one-job-per-dataset rule and
     /// the shared cache key).
     pub dataset_key: PathBuf,
+    /// Resume from this job's progress journal instead of starting
+    /// fresh. Set by WAL replay when a previous `serve` process died
+    /// while the job was streaming.
+    pub resume: bool,
 }
 
 /// The service's job queue (see module docs for the ordering rules).
@@ -267,8 +286,23 @@ impl JobQueue {
     pub fn submit(&mut self, spec: JobSpec, est_bytes: u64, dataset_key: PathBuf) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.jobs.push(Job { id, spec, state: JobState::Queued, est_bytes, dataset_key });
+        self.jobs.push(Job {
+            id,
+            spec,
+            state: JobState::Queued,
+            est_bytes,
+            dataset_key,
+            resume: false,
+        });
         id
+    }
+
+    /// Mark a queued job as a journal resume (WAL replay found it
+    /// streaming when the previous process died).
+    pub fn set_resume(&mut self, id: u64) {
+        if let Some(j) = self.jobs.iter_mut().find(|j| j.id == id) {
+            j.resume = true;
+        }
     }
 
     /// Admit the next runnable job: highest priority first; within a
@@ -378,7 +412,7 @@ impl JobQueue {
     pub fn is_drained(&self) -> bool {
         self.jobs
             .iter()
-            .all(|j| matches!(j.state, JobState::Done | JobState::Failed))
+            .all(|j| matches!(j.state, JobState::Done | JobState::Failed | JobState::Cancelled))
     }
 }
 

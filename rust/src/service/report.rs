@@ -35,6 +35,12 @@ pub struct JobReport {
     pub stall: Option<StallVerdict>,
     /// `Some` means the job failed with this error.
     pub error: Option<String>,
+    /// The job was checkpointed and stopped at a segment boundary
+    /// (drain, deadline, or explicit cancel) rather than run to
+    /// completion. Deliberately **not** a failure: `error` stays `None`
+    /// so a drained service exits 0, and the job's progress journal
+    /// survives for a later resume.
+    pub cancelled: bool,
     /// The job rode a warm engine left by the previous job on the same
     /// dataset (preprocess, reader, lanes and pools all reused).
     pub reused_engine: bool,
@@ -63,6 +69,36 @@ impl JobReport {
             metrics: None,
             stall: None,
             error: Some(error),
+            cancelled: false,
+            reused_engine: false,
+            coalesced_into: None,
+        }
+    }
+
+    /// A job stopped cooperatively at a segment boundary with its
+    /// progress checkpointed (drain, deadline, or explicit cancel).
+    pub fn cancelled(
+        name: impl Into<String>,
+        dataset: PathBuf,
+        priority: i32,
+        wall_secs: f64,
+    ) -> Self {
+        JobReport {
+            name: name.into(),
+            dataset,
+            priority,
+            wall_secs,
+            snps: 0,
+            blocks: 0,
+            snps_per_sec: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+            bytes_copied: 0,
+            bytes_borrowed: 0,
+            metrics: None,
+            stall: None,
+            error: None,
+            cancelled: true,
             reused_engine: false,
             coalesced_into: None,
         }
@@ -94,6 +130,7 @@ impl JobReport {
             metrics: Some(metrics),
             stall: Some(stall),
             error: None,
+            cancelled: false,
             reused_engine: false,
             coalesced_into: None,
         }
@@ -129,6 +166,7 @@ impl JobReport {
             self.priority,
             self.ok(),
         );
+        let _ = write!(o, "\"cancelled\":{},", self.cancelled);
         match &self.error {
             Some(e) => {
                 let _ = write!(o, "\"error\":\"{}\",", json::escape(e));
@@ -215,6 +253,11 @@ impl ServiceReport {
         self.jobs.iter().filter(|j| !j.ok()).count()
     }
 
+    /// Jobs checkpointed and stopped rather than completed (resumable).
+    pub fn cancelled(&self) -> usize {
+        self.jobs.iter().filter(|j| j.cancelled).count()
+    }
+
     /// Aggregate throughput: all streamed SNPs over the service wall time.
     pub fn agg_snps_per_sec(&self) -> f64 {
         self.total_snps() as f64 / self.wall_secs.max(1e-12)
@@ -229,7 +272,13 @@ impl ServiceReport {
             "job", "state", "prio", "blocks", "snps", "wall", "SNPs/s", "hits", "miss"
         ));
         for j in &self.jobs {
-            let state = if j.ok() { "done" } else { "failed" };
+            let state = if j.cancelled {
+                "cancelled"
+            } else if j.ok() {
+                "done"
+            } else {
+                "failed"
+            };
             out.push_str(&format!(
                 "{:<16}{:>9}{:>6}{:>8}{:>10}{:>12}{:>12.0}{:>8}{:>8}\n",
                 truncate(&j.name, 15),
@@ -257,10 +306,11 @@ impl ServiceReport {
         }
         let reused = self.jobs.iter().filter(|j| j.reused_engine).count();
         out.push_str(&format!(
-            "\nservice: {} job(s) ({} failed) on {} worker lane(s), mem budget {}, \
-             {} warm-engine reuse(s)\n",
+            "\nservice: {} job(s) ({} failed, {} cancelled) on {} worker lane(s), \
+             mem budget {}, {} warm-engine reuse(s)\n",
             self.jobs.len(),
             self.failed(),
+            self.cancelled(),
             self.workers,
             human_bytes(self.mem_budget_bytes),
             reused,
@@ -387,6 +437,29 @@ mod tests {
         let v = j.stall.unwrap();
         assert_eq!(v.kind, crate::telemetry::StallKind::ReadBound);
         assert!((v.share - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancelled_jobs_are_not_failures() {
+        let rep = ServiceReport {
+            jobs: vec![
+                JobReport::cancelled("halted", PathBuf::from("/d1"), 0, 1.25),
+                JobReport::failed("broken", PathBuf::from("/d2"), 0, "boom".into()),
+            ],
+            wall_secs: 2.0,
+            workers: 1,
+            mem_budget_bytes: 1 << 20,
+            cache: CacheStats::default(),
+        };
+        assert_eq!(rep.failed(), 1, "cancellation must not count as failure");
+        assert_eq!(rep.cancelled(), 1);
+        assert!(rep.jobs[0].ok(), "cancelled job carries no error");
+        let s = rep.render();
+        assert!(s.contains("cancelled"), "{s}");
+        assert!(s.contains("1 failed, 1 cancelled"), "{s}");
+        let j = rep.jobs[0].to_json();
+        assert!(j.contains("\"cancelled\":true"), "{j}");
+        assert!(rep.jobs[1].to_json().contains("\"cancelled\":false"));
     }
 
     #[test]

@@ -45,15 +45,18 @@
 //! budget). A job pinning even one knob differently keeps its own pass.
 
 use crate::config::ServiceConfig;
-use crate::coordinator::{Engine, Metrics, PipelineConfig};
+use crate::coordinator::{Engine, Metrics, PipelineConfig, ShutdownToken};
 use crate::error::{Error, Result};
 use crate::service::queue::{Job, JobQueue, JobSpec, JobState};
 use crate::service::report::{JobReport, ServiceReport};
+use crate::service::wal::{self, Wal, WalEvent};
 use crate::storage::fault;
 use crate::storage::{dataset, BlockCache};
 use crate::tune::{self, PlanOpts, ProbeOpts, TunedProfile};
+use crate::util::human_bytes;
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -68,6 +71,48 @@ const SPOOL_POLL: Duration = Duration::from_millis(200);
 /// over the file.
 const FIRST_CONTACT_PROBE_BYTES: u64 = 8 << 20;
 
+/// Process-global drain request — the one mailbox every drain source
+/// writes to: the SIGINT handler (async-signal-safe: a store is all it
+/// may do), the telemetry server's `POST /drain`, and the spool's
+/// `control/drain` file. The dispatcher polls it once per turn.
+static DRAIN_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Ask the running service to drain: admission stops, in-flight jobs
+/// checkpoint at their next segment boundary, the WAL is sealed, and
+/// `serve` returns its report with exit status success.
+pub fn request_drain() {
+    DRAIN_REQUESTED.store(true, Ordering::Release);
+}
+
+/// Whether a drain has been requested (and not yet consumed by a new
+/// `serve` run starting).
+pub fn drain_requested() -> bool {
+    DRAIN_REQUESTED.load(Ordering::Acquire)
+}
+
+extern "C" fn sigint_drain(_signum: i32) {
+    // Async-signal-safe by construction: a single atomic store.
+    DRAIN_REQUESTED.store(true, Ordering::Release);
+}
+
+/// Route Ctrl-C into a graceful drain instead of the default
+/// kill-the-process. std has no signal API, so this declares libc's
+/// `signal` directly (always linked on the unix targets this crate
+/// supports); on other platforms Ctrl-C keeps its default meaning and
+/// the control file / HTTP endpoint remain the drain levers.
+pub fn install_drain_on_ctrl_c() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        unsafe {
+            signal(SIGINT, sigint_drain);
+        }
+    }
+}
+
 /// How the dispatcher attaches profiles at submission time.
 #[derive(Clone, Copy)]
 struct SubmitOpts {
@@ -80,8 +125,9 @@ struct SubmitOpts {
 
 /// What the dispatcher sends a worker lane.
 enum LaneMsg {
-    /// Stream this job.
-    Run(Job),
+    /// Stream this job; the token is the dispatcher's cancel/drain lever
+    /// (checked by the engine at segment boundaries).
+    Run(Job, ShutdownToken),
     /// Release the warm engine (the dispatcher reclaims its budget to
     /// admit queued work that would not otherwise fit).
     DropEngine,
@@ -104,6 +150,11 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     if cfg.mem_budget_bytes == 0 {
         return Err(Error::Config("service.mem_budget_mb must be > 0".into()));
     }
+    // A fresh serve consumes any stale drain request: the global is a
+    // mailbox shared with signal handlers and the HTTP control endpoint,
+    // and a previous run's drain must not abort this one at birth.
+    DRAIN_REQUESTED.store(false, Ordering::Release);
+    let low_water = cfg.disk_low_water_mb << 20;
     let cache = Arc::new(BlockCache::new(cfg.cache_bytes));
     // Partition the compute cores across the worker lanes: each job
     // inherits an equal share unless its spec pins `threads` itself.
@@ -134,8 +185,8 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 // and buffer rings instead of rebuilding the world.
                 let mut engine: Option<Engine> = None;
                 while let Ok(msg) = rx.recv() {
-                    let job = match msg {
-                        LaneMsg::Run(job) => job,
+                    let (job, stop) = match msg {
+                        LaneMsg::Run(job, stop) => (job, stop),
                         LaneMsg::DropEngine => {
                             engine = None;
                             continue;
@@ -148,7 +199,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                     // completion forever.
                     let cache = cache.clone();
                     let report = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || run_job(&job, cache, worker_threads, &mut engine),
+                        || run_job(&job, cache, worker_threads, &mut engine, &stop, low_water),
                     ))
                     .unwrap_or_else(|_| {
                         JobReport::failed(
@@ -168,6 +219,21 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     }
     drop(res_tx); // workers hold the only senders now
 
+    // The service WAL: explicit path, or `<spool>/service.wal` when a
+    // spool exists, else off. Opening replays whatever the previous
+    // process managed to record before it died.
+    let wal_path =
+        cfg.wal.clone().or_else(|| cfg.spool.as_ref().map(|s| s.join("service.wal")));
+    let mut wal_records: Vec<wal::WalRecord> = Vec::new();
+    let wal = match &wal_path {
+        Some(p) => {
+            let (w, records) = Wal::open(p)?;
+            wal_records = records;
+            Some(w)
+        }
+        None => None,
+    };
+
     // Seed the queue from the config, then from the spool.
     let submit_opts = SubmitOpts { auto_tune: cfg.auto_tune, plan_threads: worker_threads };
     let mut queue = JobQueue::new();
@@ -179,6 +245,64 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports, submit_opts);
     for job in queue.fail_oversized(cfg.mem_budget_bytes) {
         reports.push(oversized_report(&job, cfg.mem_budget_bytes));
+    }
+
+    // WAL replay: reconcile the re-discovered jobs (config + spool are
+    // the durable spec store; the WAL never persists full specs) against
+    // the previous process's lifecycle records, keyed by canonical spec
+    // hash. Terminal outcomes are not re-run; jobs the old process died
+    // holding resume from their v4 progress journals — a `kill -9`
+    // mid-segment costs at most one replayed segment.
+    let mut walled: HashSet<u64> = HashSet::new();
+    if let Some(w) = &wal {
+        if !wal_records.is_empty() {
+            let states = wal::latest_states(&wal_records);
+            let mut resumed = 0u64;
+            let mut skipped = 0u64;
+            for job in queue.all().to_vec() {
+                match states.get(&wal::spec_hash(&job.spec)) {
+                    Some(WalEvent::Done) => {
+                        queue.set_state(job.id, JobState::Done);
+                        walled.insert(job.id);
+                        skipped += 1;
+                    }
+                    Some(WalEvent::Failed) => {
+                        queue.set_state(job.id, JobState::Failed);
+                        walled.insert(job.id);
+                        skipped += 1;
+                    }
+                    Some(WalEvent::Streaming | WalEvent::Cancelled) => {
+                        // Streaming: the process died mid-pass. Cancelled:
+                        // a drain/deadline checkpointed it deliberately.
+                        // Either way the journal holds its committed
+                        // segments; resume instead of restarting.
+                        queue.set_resume(job.id);
+                        walled.insert(job.id);
+                        resumed += 1;
+                    }
+                    Some(_) => {
+                        // Submitted / admitted / coalesced: queued again
+                        // from scratch — no progress reached the journal.
+                        walled.insert(job.id);
+                    }
+                    None => {}
+                }
+            }
+            crate::log_info!(
+                "service",
+                "WAL replay: {} record(s) from {} — {} job(s) resuming, {} already terminal",
+                wal_records.len(),
+                w.path().display(),
+                resumed,
+                skipped
+            );
+            if crate::telemetry::metrics_enabled() {
+                let reg = crate::telemetry::registry::global();
+                reg.wal_replays_total.add(1);
+                reg.jobs_resumed_total.add(resumed);
+            }
+        }
+        wal_note_new(w, &queue, &mut walled)?;
     }
 
     // ---- dispatch loop --------------------------------------------------
@@ -203,9 +327,101 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
     let mut attempts: HashMap<u64, u32> = HashMap::new();
     let mut cooling: HashMap<PathBuf, Instant> = HashMap::new();
     let mut fail_streak: HashMap<PathBuf, u32> = HashMap::new();
+    // Lifecycle state: the per-lane shutdown tokens (cancel/drain reach
+    // a streaming job through these), the drain latch and its timeout,
+    // and the disk-space sentinel's pause flag.
+    let mut tokens: HashMap<usize, ShutdownToken> = HashMap::new();
+    let mut draining = false;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut drain_timed_out = false;
+    let mut disk_paused = false;
     loop {
-        // Hand admissible jobs to idle lanes.
-        while lanes.iter().any(|l| !l.busy) {
+        // Control plane: the spool's `control/drain` and `control/cancel`
+        // files are consumed here; SIGINT and `POST /drain` land in the
+        // same global the drain file feeds.
+        for name in poll_controls(cfg.spool.as_deref()) {
+            cancel_job(&name, &mut queue, &inflight, &tokens, &wal, &mut reports)?;
+        }
+        if drain_requested() && !draining {
+            draining = true;
+            let timeout = cfg.drain_timeout_secs.max(1);
+            drain_deadline = Some(Instant::now() + Duration::from_secs(timeout));
+            crate::log_info!(
+                "service",
+                "drain requested: admission stopped, {} in-flight job(s) checkpointing \
+                 (timeout {timeout}s)",
+                inflight.len()
+            );
+            if crate::telemetry::metrics_enabled() {
+                crate::telemetry::registry::global().drains_total.add(1);
+            }
+            for tok in tokens.values() {
+                tok.trigger();
+            }
+        }
+        // Disk-space sentinel (admission side): below the low-water mark
+        // the service stops admitting, sheds the shared cache, and — when
+        // nothing is in flight to free space organically and nobody is
+        // watching — fails the queued jobs with an error naming the
+        // starved path rather than deadlocking.
+        if low_water > 0 && !draining {
+            if let Some(p) = disk_probe_path(cfg, &queue, &inflight) {
+                match crate::util::disk_free_bytes(&p) {
+                    Some(free) if free < low_water => {
+                        if !disk_paused {
+                            disk_paused = true;
+                            let shed = cache.shed(0);
+                            crate::log_warn!(
+                                "service",
+                                "free space on {} is below the low-water mark ({} < {}): \
+                                 admission paused, {} of shared cache shed",
+                                p.display(),
+                                human_bytes(free),
+                                human_bytes(low_water),
+                                human_bytes(shed)
+                            );
+                            if crate::telemetry::metrics_enabled() {
+                                crate::telemetry::registry::global().disk_low_water_total.add(1);
+                            }
+                        }
+                        if inflight.is_empty() && !cfg.watch {
+                            for job in queue.all().to_vec() {
+                                if job.state != JobState::Queued {
+                                    continue;
+                                }
+                                queue.set_state(job.id, JobState::Failed);
+                                wal_append(&wal, WalEvent::Failed, &job.spec, None)?;
+                                note_job_failed();
+                                reports.push(JobReport::failed(
+                                    job.spec.name.clone(),
+                                    job.spec.dataset.clone(),
+                                    job.spec.priority,
+                                    format!(
+                                        "free space on {} is below the service low-water \
+                                         mark ({} < {}) — free disk space and resubmit",
+                                        p.display(),
+                                        human_bytes(free),
+                                        human_bytes(low_water)
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                    Some(_) if disk_paused => {
+                        disk_paused = false;
+                        crate::log_info!(
+                            "service",
+                            "free space recovered on {} — admission resumed",
+                            p.display()
+                        );
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Hand admissible jobs to idle lanes (never while draining or
+        // starved for disk — both gates pause admission, not the queue).
+        while !draining && !disk_paused && lanes.iter().any(|l| !l.busy) {
             // Backoff: a dataset cooling down after a failure counts as
             // busy for admission (and for the eviction probe below).
             let now = Instant::now();
@@ -264,13 +480,26 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             let matching = (0..lanes.len()).filter(|&wi| !lanes[wi].busy).find(|&wi| {
                 warm[wi].as_ref().is_some_and(|(ds, _)| *ds == job.dataset_key)
             });
-            let wi = matching
-                .or_else(|| (0..lanes.len()).find(|&wi| !lanes[wi].busy))
-                .expect("an idle lane exists");
+            let Some(wi) = matching.or_else(|| (0..lanes.len()).find(|&wi| !lanes[wi].busy))
+            else {
+                // Defensive: the while-condition saw an idle lane, but if
+                // the bookkeeping ever disagrees mid-turn this must fail
+                // the dispatch turn — roll the admission back and retry
+                // next tick — not panic the whole service.
+                crate::log_warn!(
+                    "service",
+                    "no idle lane for admitted job '{}' — re-queueing for the next \
+                     dispatch turn",
+                    job.spec.name
+                );
+                queue.set_state(job.id, JobState::Queued);
+                break;
+            };
             mem_in_use += job.est_bytes;
             warm[wi] = None; // the resident engine is reused or replaced
             busy_datasets.insert(job.dataset_key.clone());
             queue.set_state(job.id, JobState::Streaming);
+            wal_append(&wal, WalEvent::Admitted, &job.spec, None)?;
             // Coalesce compatible queued work onto this pass: one
             // stream over the dataset answers every identical spec.
             let lane_riders = queue.take_coalescable(&job);
@@ -287,8 +516,18 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                         .jobs_coalesced_total
                         .add(lane_riders.len() as u64);
                 }
+                for r in &lane_riders {
+                    wal_append(&wal, WalEvent::Coalesced, &r.spec, None)?;
+                }
                 riders.insert(wi, lane_riders);
             }
+            // The streaming record carries the progress-journal path the
+            // engine will write — the breadcrumb a post-crash operator
+            // (or debugger) follows from the WAL to the journal.
+            let journal_path = dataset::DatasetPaths::new(&job.spec.dataset).progress();
+            wal_append(&wal, WalEvent::Streaming, &job.spec, Some(&journal_path))?;
+            let stop = ShutdownToken::new();
+            tokens.insert(wi, stop.clone());
             inflight.insert(wi, job.clone());
             dispatched.insert(wi, Instant::now());
             let lane = &mut lanes[wi];
@@ -296,7 +535,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             lane.tx
                 .as_ref()
                 .expect("lane sender alive")
-                .send(LaneMsg::Run(job))
+                .send(LaneMsg::Run(job, stop))
                 .map_err(|_| Error::Pipeline("service worker lane died".into()))?;
         }
 
@@ -309,7 +548,25 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             reg.set_cache(&cache.stats());
         }
 
-        if inflight.is_empty() && queue.is_drained() {
+        if draining {
+            // Draining: no admission, no ingestion — the loop only waits
+            // for the in-flight jobs to checkpoint, bounded by the
+            // timeout (their journals are committed through their last
+            // finished segment either way).
+            if inflight.is_empty() {
+                break;
+            }
+            if drain_deadline.is_some_and(|d| Instant::now() >= d) {
+                crate::log_warn!(
+                    "service",
+                    "drain timeout: abandoning {} in-flight job(s) still streaming \
+                     (their journals are committed through the last segment boundary)",
+                    inflight.len()
+                );
+                drain_timed_out = true;
+                break;
+            }
+        } else if inflight.is_empty() && queue.is_drained() {
             // Idle. One more spool scan; exit unless watching, new work
             // arrived, or a spool file is still settling (mid-write).
             let before = queue.all().len();
@@ -322,6 +579,9 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
             );
             for job in queue.fail_oversized(cfg.mem_budget_bytes) {
                 reports.push(oversized_report(&job, cfg.mem_budget_bytes));
+            }
+            if let Some(w) = &wal {
+                wal_note_new(w, &queue, &mut walled)?;
             }
             if queue.all().len() > before {
                 continue;
@@ -337,6 +597,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
         match res_rx.recv_timeout(SPOOL_POLL) {
             Ok((wi, report)) => {
                 let job = inflight.remove(&wi).expect("completion from a dispatched lane");
+                tokens.remove(&wi);
                 if let Some(t0) = dispatched.remove(&wi) {
                     crate::telemetry::span(
                         "job",
@@ -350,22 +611,45 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 mem_in_use -= job.est_bytes;
                 // A successful run leaves the engine warm on this lane;
                 // its footprint stays charged until reuse or eviction.
-                // A failed run dropped the engine.
-                warm[wi] = report.ok().then(|| (job.dataset_key.clone(), job.est_bytes));
+                // A failed OR cancelled run dropped the engine.
+                warm[wi] = (report.ok() && !report.cancelled)
+                    .then(|| (job.dataset_key.clone(), job.est_bytes));
                 busy_datasets.remove(&job.dataset_key);
                 lanes[wi].busy = false;
                 let lane_riders = riders.remove(&wi).unwrap_or_default();
-                if report.ok() {
+                if report.cancelled {
+                    // Cooperative stop (drain, deadline, cancel): the
+                    // pass checkpointed at a segment boundary. Not a
+                    // failure — no retry budget spent, no streak, and
+                    // the WAL's `cancelled` record makes the next serve
+                    // resume the journal instead of restarting. Riders
+                    // rode a pass that stopped early: back to the queue
+                    // untouched (a drain reports them cancelled at exit).
+                    attempts.remove(&job.id);
+                    cooling.remove(&job.dataset_key);
+                    fail_streak.remove(&job.dataset_key);
+                    for r in &lane_riders {
+                        queue.set_state(r.id, JobState::Queued);
+                    }
+                    queue.set_state(job.id, JobState::Cancelled);
+                    wal_append(&wal, WalEvent::Cancelled, &job.spec, None)?;
+                    if crate::telemetry::metrics_enabled() {
+                        crate::telemetry::registry::global().jobs_cancelled_total.add(1);
+                    }
+                    reports.push(report);
+                } else if report.ok() {
                     attempts.remove(&job.id);
                     cooling.remove(&job.dataset_key);
                     fail_streak.remove(&job.dataset_key);
                     queue.set_state(job.id, JobState::Done);
+                    wal_append(&wal, WalEvent::Done, &job.spec, None)?;
                     // Riders share the leader's outcome: the one pass
                     // answered them all, so each mirrors the leader's
                     // numbers under its own name, stamped with whose
                     // stream carried it.
                     for r in &lane_riders {
                         queue.set_state(r.id, JobState::Done);
+                        wal_append(&wal, WalEvent::Done, &r.spec, None)?;
                         reports.push(
                             JobReport::done(
                                 r.spec.name.clone(),
@@ -417,6 +701,7 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                         *fail_streak.entry(job.dataset_key.clone()).or_insert(0) += 1;
                         note_job_failed();
                         queue.set_state(job.id, JobState::Failed);
+                        wal_append(&wal, WalEvent::Failed, &job.spec, None)?;
                         reports.push(report);
                     }
                 }
@@ -426,18 +711,67 @@ pub fn serve(cfg: &ServiceConfig) -> Result<ServiceReport> {
                 return Err(Error::Pipeline("all service worker lanes exited".into()));
             }
         }
-        scan_spool(cfg.spool.as_deref(), &mut spool_state, &mut queue, &mut reports, submit_opts);
-        for job in queue.fail_oversized(cfg.mem_budget_bytes) {
-            reports.push(oversized_report(&job, cfg.mem_budget_bytes));
+        if !draining {
+            scan_spool(
+                cfg.spool.as_deref(),
+                &mut spool_state,
+                &mut queue,
+                &mut reports,
+                submit_opts,
+            );
+            for job in queue.fail_oversized(cfg.mem_budget_bytes) {
+                reports.push(oversized_report(&job, cfg.mem_budget_bytes));
+            }
+            if let Some(w) = &wal {
+                wal_note_new(w, &queue, &mut walled)?;
+            }
         }
     }
 
-    // Drop the submission side so lanes exit, then join them.
+    // A drain reports the work it deliberately did not finish: queued
+    // jobs it refused to start and (on timeout) in-flight jobs it
+    // abandoned. They stay non-terminal in the WAL, so the next serve
+    // re-queues or resumes them — cancelled, never failed.
+    if draining {
+        for job in queue.all().to_vec() {
+            if matches!(job.state, JobState::Queued | JobState::Admitted) {
+                queue.set_state(job.id, JobState::Cancelled);
+                reports.push(JobReport::cancelled(
+                    job.spec.name.clone(),
+                    job.spec.dataset.clone(),
+                    job.spec.priority,
+                    0.0,
+                ));
+            }
+        }
+        for job in inflight.values() {
+            reports.push(JobReport::cancelled(
+                job.spec.name.clone(),
+                job.spec.dataset.clone(),
+                job.spec.priority,
+                0.0,
+            ));
+        }
+    }
+
+    // Drop the submission side so lanes exit, then join them — unless
+    // the drain timed out with a lane still streaming: joining would
+    // block on the very work the timeout gave up waiting for, so those
+    // threads are detached instead (the results channel closes when
+    // this function returns, and the lane exits at its next send).
     for lane in &mut lanes {
         lane.tx.take();
     }
-    for lane in lanes {
-        let _ = lane.handle.join();
+    if !drain_timed_out {
+        for lane in lanes {
+            let _ = lane.handle.join();
+        }
+    }
+
+    // Seal the WAL: the durable receipt that every record above was on
+    // disk when the service exited cleanly.
+    if let Some(w) = &wal {
+        w.seal()?;
     }
 
     Ok(ServiceReport {
@@ -565,6 +899,130 @@ fn submit_spec(
     }
 }
 
+/// Append one lifecycle record when a WAL is configured (a WAL-less
+/// service pays nothing here). WAL failures are fatal to `serve`: a
+/// service that cannot record its promises must stop making them — and
+/// the chaos tests exploit exactly this to simulate a crash between a
+/// state change and its record.
+fn wal_append(
+    wal: &Option<Wal>,
+    ev: WalEvent,
+    spec: &JobSpec,
+    journal: Option<&Path>,
+) -> Result<()> {
+    match wal {
+        Some(w) => w.append(ev, wal::spec_hash(spec), &spec.name, journal),
+        None => Ok(()),
+    }
+}
+
+/// Append a `submitted` record for every queued job the WAL has not
+/// seen yet (new config sections, fresh spool arrivals). Jobs whose
+/// replayed state already covers them are pre-seeded into `walled` so a
+/// resumed job's `streaming` record is never regressed to `submitted`.
+fn wal_note_new(wal: &Wal, queue: &JobQueue, walled: &mut HashSet<u64>) -> Result<()> {
+    for job in queue.all() {
+        if job.state == JobState::Queued && !walled.contains(&job.id) {
+            wal.append(WalEvent::Submitted, wal::spec_hash(&job.spec), &job.spec.name, None)?;
+            walled.insert(job.id);
+        }
+    }
+    Ok(())
+}
+
+/// Consume the spool's control files: `control/drain` (its existence is
+/// the request) feeds the same global as SIGINT and `POST /drain`;
+/// `control/cancel` holds job names, one per line (`#` comments
+/// allowed), returned for [`cancel_job`]. Both are noticed once, then
+/// deleted — the control directory is a mailbox, not state.
+fn poll_controls(spool: Option<&Path>) -> Vec<String> {
+    let Some(dir) = spool else { return Vec::new() };
+    let ctl = dir.join("control");
+    let drain = ctl.join("drain");
+    if drain.exists() {
+        let _ = std::fs::remove_file(&drain);
+        crate::log_info!("service", "drain control file noticed at {}", drain.display());
+        request_drain();
+    }
+    let cancel = ctl.join("cancel");
+    let Ok(text) = std::fs::read_to_string(&cancel) else { return Vec::new() };
+    let _ = std::fs::remove_file(&cancel);
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect()
+}
+
+/// Cancel a job by name: a queued job is cancelled outright (terminal
+/// this run, re-queued by the next serve since config/spool still list
+/// it); a streaming job has its shutdown token triggered and
+/// checkpoints at its next segment boundary, flowing back through the
+/// normal completion path as cancelled.
+fn cancel_job(
+    name: &str,
+    queue: &mut JobQueue,
+    inflight: &HashMap<usize, Job>,
+    tokens: &HashMap<usize, ShutdownToken>,
+    wal: &Option<Wal>,
+    reports: &mut Vec<JobReport>,
+) -> Result<()> {
+    let mut hit = false;
+    for job in queue.all().to_vec() {
+        if job.spec.name == name && matches!(job.state, JobState::Queued | JobState::Admitted) {
+            hit = true;
+            queue.set_state(job.id, JobState::Cancelled);
+            wal_append(wal, WalEvent::Cancelled, &job.spec, None)?;
+            if crate::telemetry::metrics_enabled() {
+                crate::telemetry::registry::global().jobs_cancelled_total.add(1);
+            }
+            reports.push(JobReport::cancelled(
+                job.spec.name.clone(),
+                job.spec.dataset.clone(),
+                job.spec.priority,
+                0.0,
+            ));
+            crate::log_info!("service", "cancelled queued job '{name}'");
+        }
+    }
+    for (wi, job) in inflight {
+        if job.spec.name == name {
+            hit = true;
+            if let Some(tok) = tokens.get(wi) {
+                tok.trigger();
+                crate::log_info!(
+                    "service",
+                    "cancel requested for streaming job '{name}' — checkpointing at the \
+                     next segment boundary"
+                );
+            }
+        }
+    }
+    if !hit {
+        crate::log_warn!("service", "cancel control named unknown job '{name}'");
+    }
+    Ok(())
+}
+
+/// Where the disk-space sentinel looks: the spool's filesystem when one
+/// exists (it holds the WAL and the control plane), else the filesystem
+/// of whichever dataset the service is about to touch.
+fn disk_probe_path(
+    cfg: &ServiceConfig,
+    queue: &JobQueue,
+    inflight: &HashMap<usize, Job>,
+) -> Option<PathBuf> {
+    if let Some(s) = &cfg.spool {
+        return Some(s.clone());
+    }
+    queue
+        .all()
+        .iter()
+        .find(|j| j.state == JobState::Queued)
+        .map(|j| j.dataset_key.clone())
+        .or_else(|| inflight.values().next().map(|j| j.dataset_key.clone()))
+}
+
 /// Count one failed job in the telemetry registry. Successes are
 /// counted by the engine when the run completes; failures never reach
 /// that point, so every site that mints a failure report notes it here.
@@ -681,7 +1139,16 @@ fn scan_spool(
 /// holds only live work and the diagnosis travels with the file. A
 /// failed move only loses the tidying (the file stays in `seen`, so it
 /// is not retried either way).
-fn quarantine_spool_file(spool: &Path, path: &Path, reason: &str) {
+///
+/// Durability: a rename is only atomic *in memory* until both directory
+/// entries are synced — a crash in between can resurrect the file in
+/// the inbox, or leave it moved with nothing recorded. Both directories
+/// are fsynced after the rename, and the function is idempotent: a
+/// retry that finds the file already moved (source gone, destination
+/// present — exactly what a crash between rename and sync leaves)
+/// completes the durable half instead of erroring. `pub(crate)` so the
+/// lifecycle tests can drive the recovery path directly.
+pub(crate) fn quarantine_spool_file(spool: &Path, path: &Path, reason: &str) {
     let qdir = spool.join("quarantine");
     if let Err(e) = std::fs::create_dir_all(&qdir) {
         crate::log_warn!("service", "cannot create {}: {e}", qdir.display());
@@ -689,13 +1156,36 @@ fn quarantine_spool_file(spool: &Path, path: &Path, reason: &str) {
     }
     let Some(file_name) = path.file_name() else { return };
     let dest = qdir.join(file_name);
-    if let Err(e) = std::fs::rename(path, &dest) {
+    match std::fs::rename(path, &dest) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound && dest.exists() => {
+            // Torn-rename recovery: a previous attempt crashed after the
+            // rename — finish the syncs and the sidecar below.
+        }
+        Err(e) => {
+            crate::log_warn!(
+                "service",
+                "cannot quarantine {}: {e} (leaving it in place)",
+                path.display()
+            );
+            return;
+        }
+    }
+    if fault::quarantine_crash() {
         crate::log_warn!(
             "service",
-            "cannot quarantine {}: {e} (leaving it in place)",
-            path.display()
+            "injected crash after quarantine rename of {} (directory syncs skipped)",
+            dest.display()
         );
         return;
+    }
+    // Make the move durable on both ends: the destination directory
+    // first (the entry must exist somewhere), then the source (the
+    // inbox's forgetting of it).
+    if let Err(e) = crate::coordinator::journal::sync_parent_dir(&dest)
+        .and_then(|()| crate::coordinator::journal::sync_parent_dir(path))
+    {
+        crate::log_warn!("service", "cannot sync quarantine directories: {e}");
     }
     let mut sidecar = dest.clone().into_os_string();
     sidecar.push(".reason");
@@ -718,6 +1208,8 @@ fn run_job(
     cache: Option<Arc<BlockCache>>,
     worker_threads: usize,
     slot: &mut Option<Engine>,
+    stop: &ShutdownToken,
+    disk_low_water: u64,
 ) -> JobReport {
     let spec = &job.spec;
     let cfg = PipelineConfig {
@@ -730,7 +1222,7 @@ fn run_job(
         backend: spec.backend.clone(),
         read_throttle: spec.read_throttle,
         write_throttle: spec.write_throttle,
-        resume: false,
+        resume: job.resume,
         cache,
         threads: if spec.threads > 0 { spec.threads } else { worker_threads },
         lane_threads: spec.lane_threads,
@@ -738,6 +1230,10 @@ fn run_job(
         adapt_every: spec.adapt_every,
         traits: spec.traits.max(1),
         perm_seed: spec.perm_seed,
+        shutdown: Some(stop.clone()),
+        deadline_at: (spec.deadline_secs > 0)
+            .then(|| Instant::now() + Duration::from_secs(spec.deadline_secs)),
+        disk_low_water,
     };
     let failed = |e: &Error| {
         JobReport::failed(spec.name.clone(), spec.dataset.clone(), spec.priority, e.to_string())
@@ -749,6 +1245,7 @@ fn run_job(
             Err(e) => return failed(&e),
         },
     };
+    let t0 = Instant::now();
     match engine.execute(&cfg) {
         Ok(rep) => {
             *slot = Some(engine);
@@ -762,6 +1259,19 @@ fn run_job(
                 rep.metrics,
             )
             .with_reused_engine(reused)
+        }
+        Err(Error::Cancelled(why)) => {
+            // Cooperative stop at a segment boundary: the journal holds
+            // every committed window, so this is a checkpoint, not a
+            // failure. The engine is dropped (the slot stays empty) —
+            // the lane starts clean if the job is ever resumed here.
+            crate::log_info!("service", "job '{}' checkpointed: {why}", spec.name);
+            JobReport::cancelled(
+                spec.name.clone(),
+                spec.dataset.clone(),
+                spec.priority,
+                t0.elapsed().as_secs_f64(),
+            )
         }
         Err(e) => failed(&e),
     }
@@ -791,6 +1301,9 @@ mod tests {
             // no probe noise; the first-contact test opts back in.
             auto_tune: false,
             metrics_addr: None,
+            wal: None,
+            drain_timeout_secs: 30,
+            disk_low_water_mb: 0,
             jobs,
             fault: Default::default(),
         }
@@ -921,6 +1434,99 @@ mod tests {
     #[test]
     fn zero_workers_rejected() {
         assert!(serve(&small_cfg(vec![], 0, 0)).is_err());
+    }
+
+    /// A pre-requested drain stops admission before anything streams:
+    /// queued jobs are reported cancelled (not failed), serve returns
+    /// Ok, and the WAL is sealed — then a second serve picks the same
+    /// jobs up from config and runs them to completion.
+    #[test]
+    fn drain_refuses_admission_and_the_next_serve_finishes_the_work() {
+        let d = tmpdir("drainq");
+        generate(&d, Dims::new(24, 2, 32).unwrap(), 8, 5).unwrap();
+        let spool = tmpdir("drainspool");
+        std::fs::create_dir_all(spool.join("control")).unwrap();
+        std::fs::write(spool.join("control/drain"), "").unwrap();
+        let mut j = JobSpec::new("held", &d);
+        j.block = 8;
+        let mut cfg = small_cfg(vec![j], 1, 0);
+        cfg.spool = Some(spool.clone());
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.failed(), 0, "drain must not fail jobs: {}", rep.render());
+        assert_eq!(rep.cancelled(), 1, "{}", rep.render());
+        assert_eq!(rep.total_snps(), 0, "nothing streamed under a pre-drain");
+        assert!(!spool.join("control/drain").exists(), "control file consumed");
+        // The implicit spool WAL was created and sealed.
+        let wal_text = std::fs::read_to_string(spool.join("service.wal")).unwrap();
+        assert!(wal_text.contains("\tsubmitted\t"), "{wal_text}");
+        assert!(wal_text.lines().last().unwrap().contains("\tsealed\t"), "{wal_text}");
+        // Restart: the job (still listed in config, non-terminal in the
+        // WAL) runs to completion this time.
+        let rep2 = serve(&cfg).unwrap();
+        assert_eq!(rep2.failed(), 0, "{}", rep2.render());
+        assert_eq!(rep2.total_snps(), 32, "{}", rep2.render());
+        // Third serve: the WAL now records `done`, so nothing re-runs.
+        let rep3 = serve(&cfg).unwrap();
+        assert_eq!(rep3.total_snps(), 0, "terminal jobs must not re-run");
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&spool).unwrap();
+    }
+
+    /// The cancel control file kills a queued job by name without
+    /// touching its siblings.
+    #[test]
+    fn cancel_control_file_cancels_a_queued_job_by_name() {
+        let d = tmpdir("cancelq");
+        generate(&d, Dims::new(24, 2, 32).unwrap(), 8, 5).unwrap();
+        let spool = tmpdir("cancelspool");
+        std::fs::create_dir_all(spool.join("control")).unwrap();
+        // The victim is named before serve starts; the survivor runs.
+        std::fs::write(spool.join("control/cancel"), "# operator note\nvictim\n").unwrap();
+        let mut victim = JobSpec::new("victim", &d);
+        victim.block = 8;
+        let mut survivor = JobSpec::new("survivor", &d);
+        survivor.block = 8;
+        survivor.adapt_every = 32; // don't coalesce with the victim
+        survivor.priority = 1;
+        let mut cfg = small_cfg(vec![victim, survivor], 1, 0);
+        cfg.spool = Some(spool.clone());
+        cfg.wal = Some(spool.join("svc.wal"));
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.failed(), 0, "{}", rep.render());
+        assert_eq!(rep.cancelled(), 1, "{}", rep.render());
+        let v = rep.jobs.iter().find(|j| j.name == "victim").unwrap();
+        assert!(v.cancelled && v.ok());
+        let s = rep.jobs.iter().find(|j| j.name == "survivor").unwrap();
+        assert!(!s.cancelled && s.ok() && s.snps == 32);
+        let wal_text = std::fs::read_to_string(spool.join("svc.wal")).unwrap();
+        assert!(wal_text.contains("\tcancelled\t"), "{wal_text}");
+        std::fs::remove_dir_all(&d).unwrap();
+        std::fs::remove_dir_all(&spool).unwrap();
+    }
+
+    /// The torn-rename recovery: a retry that finds the spool file
+    /// already moved (source gone, destination present) completes the
+    /// sidecar instead of erroring — the idempotent half of the
+    /// quarantine durability story (the injected-crash half lives in
+    /// `tests/service_lifecycle.rs`, which owns the fault injector).
+    #[test]
+    fn quarantine_retry_after_a_completed_rename_is_idempotent() {
+        let spool = tmpdir("qidem");
+        std::fs::create_dir_all(&spool).unwrap();
+        let bad = spool.join("bad.toml");
+        std::fs::write(&bad, "not toml at all").unwrap();
+        quarantine_spool_file(&spool, &bad, "unparsable");
+        assert!(!bad.exists());
+        assert!(spool.join("quarantine/bad.toml").exists());
+        // Simulate the crash-recovery retry: source is gone, destination
+        // exists, and the sidecar from the first pass was lost.
+        std::fs::remove_file(spool.join("quarantine/bad.toml.reason")).unwrap();
+        quarantine_spool_file(&spool, &bad, "unparsable");
+        let reason =
+            std::fs::read_to_string(spool.join("quarantine/bad.toml.reason")).unwrap();
+        assert!(reason.contains("unparsable"), "{reason}");
+        assert!(spool.join("quarantine/bad.toml").exists(), "no double-move");
+        std::fs::remove_dir_all(&spool).unwrap();
     }
 
     #[test]

@@ -1,0 +1,446 @@
+//! The service write-ahead log — durable job lifecycle state that
+//! outlives the `serve` process.
+//!
+//! The per-run progress journal (`coordinator::journal`) makes one
+//! *run* crash-restartable; this WAL makes the *service* restartable:
+//! every job lifecycle transition (submitted → admitted → streaming →
+//! done/failed/cancelled, plus coalesced riders) is appended as one
+//! checksummed record before the scheduler acts on it. On startup
+//! `serve` replays the WAL and reconciles: jobs with a terminal record
+//! are not re-run, jobs that were queued re-enter the queue, and jobs
+//! that were *streaming* are resubmitted with `resume` set so their v4
+//! journal picks up at the last committed segment — a `kill -9`
+//! mid-segment costs at most one replayed segment, never a restart
+//! from zero.
+//!
+//! Zero-cost-when-off: the WAL only exists when the service configures
+//! a path (`[service] wal`, or implicitly `<spool>/service.wal`); a
+//! WAL-less `serve` carries an `Option::None` and no code here runs.
+//!
+//! Format — line-oriented, tab-separated, one record per line:
+//!
+//! ```text
+//! <seq> \t <event> \t <spec-hash:016x> \t <name> \t <journal> \t <fnv64:016x> \n
+//! ```
+//!
+//! The trailing field is an FNV-1a-64 checksum of everything before
+//! it; replay accepts the longest prefix of intact lines and truncates
+//! the rest away (a torn tail is exactly what a power cut mid-append
+//! leaves). `spec-hash` is a canonical hash of the job's pipeline-
+//! shaping spec, which is how a restart matches WAL records against
+//! the jobs it re-discovers from config sections and spool files —
+//! the service never persists full specs, because config and spool are
+//! already the durable spec store.
+
+use crate::coordinator::journal::sync_parent_dir;
+use crate::error::{Error, Result};
+use crate::service::queue::JobSpec;
+use crate::storage::fault::{self, WalFault};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One job lifecycle transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalEvent {
+    /// The job entered the queue.
+    Submitted,
+    /// Admission control accepted it (budget charged, lane assigned).
+    Admitted,
+    /// It was answered by riding a compatible job's streaming pass.
+    Coalesced,
+    /// Its engine run started — a journal now tracks its progress.
+    Streaming,
+    Done,
+    Failed,
+    Cancelled,
+    /// Clean shutdown marker appended by [`Wal::seal`]; not a job state.
+    Sealed,
+}
+
+impl WalEvent {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WalEvent::Submitted => "submitted",
+            WalEvent::Admitted => "admitted",
+            WalEvent::Coalesced => "coalesced",
+            WalEvent::Streaming => "streaming",
+            WalEvent::Done => "done",
+            WalEvent::Failed => "failed",
+            WalEvent::Cancelled => "cancelled",
+            WalEvent::Sealed => "sealed",
+        }
+    }
+
+    fn parse(s: &str) -> Option<WalEvent> {
+        Some(match s {
+            "submitted" => WalEvent::Submitted,
+            "admitted" => WalEvent::Admitted,
+            "coalesced" => WalEvent::Coalesced,
+            "streaming" => WalEvent::Streaming,
+            "done" => WalEvent::Done,
+            "failed" => WalEvent::Failed,
+            "cancelled" => WalEvent::Cancelled,
+            "sealed" => WalEvent::Sealed,
+            _ => return None,
+        })
+    }
+
+    /// Whether this event ends a job's lifecycle (no replay needed).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, WalEvent::Done | WalEvent::Failed | WalEvent::Cancelled)
+    }
+}
+
+/// One replayed record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub event: WalEvent,
+    /// Canonical spec hash — the replay key (see [`spec_hash`]).
+    pub spec_hash: u64,
+    pub name: String,
+    /// Progress-journal path recorded at streaming time (`-` = none).
+    pub journal: String,
+}
+
+/// FNV-1a-64 over raw bytes (the record checksum — same family as the
+/// block checksums in `storage::fault`, byte-granular here because WAL
+/// records are text).
+fn fnv64(data: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for b in data {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Canonical hash of every spec field that shapes the work a job does.
+/// Two submissions hash equal exactly when a WAL record for one is an
+/// authoritative statement about the other: same name, same dataset,
+/// same pipeline knobs, same trait batch. Runtime bookkeeping
+/// (`profile_attached`, pins) is deliberately excluded — a first-
+/// contact tune must not orphan the WAL history of the job it tuned.
+/// Scheduling *policy* (`deadline_secs`, `priority`) is excluded too:
+/// a deadline-cancelled job resubmitted without the deadline is the
+/// same work, and must match its `cancelled` record so the next serve
+/// resumes the journal instead of streaming from scratch.
+pub fn spec_hash(spec: &JobSpec) -> u64 {
+    let canon = format!(
+        "{}|{}|{}|{}|{}|{}|{:?}|{:?}|{}|{}|{}|{}|{}|{}",
+        spec.name,
+        spec.dataset.display(),
+        spec.block,
+        spec.ngpus,
+        spec.host_buffers,
+        spec.device_buffers,
+        spec.mode,
+        spec.backend,
+        spec.threads,
+        spec.lane_threads,
+        spec.adapt,
+        spec.adapt_every,
+        spec.traits,
+        spec.perm_seed,
+    );
+    fnv64(canon.as_bytes())
+}
+
+/// Collapse a replayed record stream to each job's *latest* lifecycle
+/// event (seal markers skipped). Records arrive in append order, so
+/// the last write wins.
+pub fn latest_states(records: &[WalRecord]) -> HashMap<u64, WalEvent> {
+    let mut out = HashMap::new();
+    for r in records {
+        if r.event != WalEvent::Sealed {
+            out.insert(r.spec_hash, r.event);
+        }
+    }
+    out
+}
+
+/// An open WAL, positioned for appending.
+pub struct Wal {
+    file: Mutex<std::fs::File>,
+    /// Next sequence number to append.
+    seq: AtomicU64,
+    path: PathBuf,
+}
+
+impl Wal {
+    /// Open (or create) the WAL at `path`, replaying whatever survives:
+    /// the longest prefix of checksum-intact lines is returned and the
+    /// torn/corrupt tail is truncated away, so future appends start on
+    /// a clean line boundary. Appends continue the replayed sequence.
+    pub fn open(path: &Path) -> Result<(Wal, Vec<WalRecord>)> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| Error::io(format!("creating WAL directory {}", dir.display()), e))?;
+            }
+        }
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(Error::io(format!("reading WAL {}", path.display()), e)),
+        };
+        let (records, valid_bytes) = parse(&bytes);
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .map_err(|e| Error::io(format!("opening WAL {}", path.display()), e))?;
+        if valid_bytes as u64 != file.metadata().map_err(|e| Error::io("WAL metadata", e))?.len() {
+            file.set_len(valid_bytes as u64)
+                .map_err(|e| Error::io("truncating torn WAL tail", e))?;
+            file.sync_data().map_err(|e| Error::io("syncing truncated WAL", e))?;
+        }
+        // A freshly created WAL gets the same durability treatment as
+        // the progress journal: the directory entry must survive a
+        // power cut or a restart finds bytes with no name.
+        sync_parent_dir(path)?;
+        let next = records.last().map(|r| r.seq + 1).unwrap_or(0);
+        Ok((
+            Wal { file: Mutex::new(file), seq: AtomicU64::new(next), path: path.to_path_buf() },
+            records,
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one lifecycle record and make it durable (`fdatasync`).
+    /// Transitions are per-job, not per-block — a handful of syncs per
+    /// job is noise next to the stream it describes.
+    pub fn append(
+        &self,
+        event: WalEvent,
+        spec_hash: u64,
+        name: &str,
+        journal: Option<&Path>,
+    ) -> Result<()> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let jn = journal.map(|p| p.display().to_string()).unwrap_or_else(|| "-".to_string());
+        let body = format!(
+            "{seq}\t{}\t{spec_hash:016x}\t{}\t{}",
+            event.as_str(),
+            sanitize(name),
+            sanitize(&jn)
+        );
+        let line = format!("{body}\t{:016x}\n", fnv64(body.as_bytes()));
+        let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        use std::io::Seek;
+        file.seek(std::io::SeekFrom::End(0)).map_err(|e| Error::io("seeking WAL", e))?;
+        // Chaos harness: a torn append leaves a durable partial line
+        // (power cut mid-write); a crash fault stops before any byte
+        // lands (the window between the journal's state and the WAL's
+        // record of it). Both report failure — the scheduler treats a
+        // WAL write error as fatal, exactly like the real crash.
+        match fault::wal_append_fault(line.len()) {
+            Some(WalFault::Torn(k)) => {
+                file.write_all(&line.as_bytes()[..k])
+                    .map_err(|e| Error::io("appending WAL", e))?;
+                file.sync_data().map_err(|e| Error::io("syncing torn WAL append", e))?;
+                return Err(Error::io(
+                    "WAL append torn mid-record (injected crash)",
+                    std::io::Error::new(std::io::ErrorKind::WriteZero, "partial record"),
+                ));
+            }
+            Some(WalFault::Crash) => {
+                return Err(Error::io(
+                    "crashed before WAL append (injected)",
+                    std::io::Error::new(std::io::ErrorKind::Interrupted, "injected crash"),
+                ));
+            }
+            None => {}
+        }
+        file.write_all(line.as_bytes()).map_err(|e| Error::io("appending WAL", e))?;
+        file.sync_data().map_err(|e| Error::io("syncing WAL append", e))
+    }
+
+    /// Append the clean-shutdown marker and sync everything, including
+    /// the directory entry. A sealed WAL is the drain path's receipt:
+    /// every record before the marker was durable when the process
+    /// exited 0.
+    pub fn seal(&self) -> Result<()> {
+        self.append(WalEvent::Sealed, 0, "-", None)?;
+        sync_parent_dir(&self.path)
+    }
+}
+
+/// Replace the record's two structural characters so a hostile job
+/// name cannot forge record boundaries.
+fn sanitize(s: &str) -> String {
+    if s.contains(['\t', '\n']) {
+        s.replace(['\t', '\n'], "_")
+    } else {
+        s.to_string()
+    }
+}
+
+/// Parse the longest valid prefix: returns the records plus the byte
+/// length they occupy (the truncation point for everything after).
+fn parse(bytes: &[u8]) -> (Vec<WalRecord>, usize) {
+    let mut records = Vec::new();
+    let mut consumed = 0usize;
+    let text = String::from_utf8_lossy(bytes);
+    for line in text.split_inclusive('\n') {
+        let Some(stripped) = line.strip_suffix('\n') else { break }; // torn tail
+        let Some(rec) = parse_line(stripped) else { break };
+        // Sequence numbers must ascend — a stale line block-copied into
+        // the middle would otherwise replay out of order.
+        if records.last().is_some_and(|p: &WalRecord| rec.seq <= p.seq) {
+            break;
+        }
+        consumed += line.len();
+        records.push(rec);
+    }
+    (records, consumed)
+}
+
+fn parse_line(line: &str) -> Option<WalRecord> {
+    let (body, crc_hex) = line.rsplit_once('\t')?;
+    let crc = u64::from_str_radix(crc_hex, 16).ok()?;
+    if fnv64(body.as_bytes()) != crc {
+        return None;
+    }
+    let mut f = body.splitn(5, '\t');
+    let seq = f.next()?.parse().ok()?;
+    let event = WalEvent::parse(f.next()?)?;
+    let spec_hash = u64::from_str_radix(f.next()?, 16).ok()?;
+    let name = f.next()?.to_string();
+    let journal = f.next()?.to_string();
+    Some(WalRecord { seq, event, spec_hash, name, journal })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("cugwas_wal_{}_{tag}.wal", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn append_replay_roundtrip_continues_the_sequence() {
+        let p = tmpfile("rt");
+        let (wal, replayed) = Wal::open(&p).unwrap();
+        assert!(replayed.is_empty());
+        wal.append(WalEvent::Submitted, 0xabc, "jobA", None).unwrap();
+        wal.append(WalEvent::Streaming, 0xabc, "jobA", Some(Path::new("/d/r.progress"))).unwrap();
+        drop(wal);
+        let (wal, replayed) = Wal::open(&p).unwrap();
+        assert_eq!(replayed.len(), 2);
+        assert_eq!(replayed[0].event, WalEvent::Submitted);
+        assert_eq!(replayed[1].event, WalEvent::Streaming);
+        assert_eq!(replayed[1].spec_hash, 0xabc);
+        assert_eq!(replayed[1].journal, "/d/r.progress");
+        wal.append(WalEvent::Done, 0xabc, "jobA", None).unwrap();
+        drop(wal);
+        let (_w, replayed) = Wal::open(&p).unwrap();
+        assert_eq!(replayed.len(), 3, "append after reopen stays aligned");
+        assert_eq!(replayed[2].seq, 2, "sequence continues across reopen");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_appends_recover() {
+        let p = tmpfile("torn");
+        let (wal, _) = Wal::open(&p).unwrap();
+        wal.append(WalEvent::Submitted, 1, "a", None).unwrap();
+        drop(wal);
+        // A power cut mid-append: half a line, no newline.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let keep = bytes.len();
+        bytes.extend_from_slice(b"9\tdone\tdeadbeef");
+        std::fs::write(&p, &bytes).unwrap();
+        let (wal, replayed) = Wal::open(&p).unwrap();
+        assert_eq!(replayed.len(), 1, "torn tail must not replay");
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), keep as u64, "tail truncated");
+        wal.append(WalEvent::Done, 1, "a", None).unwrap();
+        drop(wal);
+        let (_w, replayed) = Wal::open(&p).unwrap();
+        assert_eq!(replayed.len(), 2);
+        assert_eq!(replayed[1].event, WalEvent::Done);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn corrupt_checksum_stops_replay_at_the_bad_line() {
+        let p = tmpfile("crc");
+        let (wal, _) = Wal::open(&p).unwrap();
+        wal.append(WalEvent::Submitted, 1, "a", None).unwrap();
+        wal.append(WalEvent::Done, 1, "a", None).unwrap();
+        drop(wal);
+        // Flip one byte inside the *first* record's name field: both
+        // lines are whole, but line 1's checksum no longer matches, so
+        // nothing (including the intact line after it) may be trusted.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let i = bytes.iter().position(|&b| b == b'a').unwrap();
+        bytes[i] = b'z';
+        std::fs::write(&p, &bytes).unwrap();
+        let (_w, replayed) = Wal::open(&p).unwrap();
+        assert!(replayed.is_empty(), "corruption invalidates the line and its tail");
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 0);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn latest_states_keeps_the_last_event_per_job() {
+        let p = tmpfile("latest");
+        let (wal, _) = Wal::open(&p).unwrap();
+        wal.append(WalEvent::Submitted, 1, "a", None).unwrap();
+        wal.append(WalEvent::Submitted, 2, "b", None).unwrap();
+        wal.append(WalEvent::Streaming, 1, "a", None).unwrap();
+        wal.append(WalEvent::Done, 2, "b", None).unwrap();
+        wal.seal().unwrap();
+        drop(wal);
+        let (_w, replayed) = Wal::open(&p).unwrap();
+        let states = latest_states(&replayed);
+        assert_eq!(states.get(&1), Some(&WalEvent::Streaming));
+        assert_eq!(states.get(&2), Some(&WalEvent::Done));
+        assert_eq!(states.len(), 2, "the seal marker is not a job");
+        assert_eq!(replayed.last().unwrap().event, WalEvent::Sealed);
+        assert!(WalEvent::Done.is_terminal() && WalEvent::Cancelled.is_terminal());
+        assert!(!WalEvent::Streaming.is_terminal());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn spec_hash_tracks_work_shaping_fields_only() {
+        let a = JobSpec::new("j", "/data/s1");
+        let mut b = JobSpec::new("j", "/data/s1");
+        assert_eq!(spec_hash(&a), spec_hash(&b));
+        b.profile_attached = true; // bookkeeping: same identity
+        assert_eq!(spec_hash(&a), spec_hash(&b));
+        b.block = a.block * 2; // work-shaping: new identity
+        assert_ne!(spec_hash(&a), spec_hash(&b));
+        let mut c = JobSpec::new("j", "/data/s1");
+        c.deadline_secs = 60; // scheduling policy: same identity —
+        // dropping a deadline must not orphan the job's WAL history
+        assert_eq!(spec_hash(&a), spec_hash(&c));
+    }
+
+    #[test]
+    fn hostile_names_cannot_forge_record_boundaries() {
+        let p = tmpfile("hostile");
+        let (wal, _) = Wal::open(&p).unwrap();
+        wal.append(WalEvent::Submitted, 7, "evil\tdone\tjob\n9", None).unwrap();
+        drop(wal);
+        let (_w, replayed) = Wal::open(&p).unwrap();
+        assert_eq!(replayed.len(), 1);
+        assert_eq!(replayed[0].event, WalEvent::Submitted);
+        assert_eq!(replayed[0].name, "evil_done_job_9");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

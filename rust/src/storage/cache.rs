@@ -267,6 +267,27 @@ impl BlockCache {
         }
     }
 
+    /// Evict LRU entries until at most `target_bytes` remain resident,
+    /// returning the bytes released. The disk-space sentinel calls this
+    /// with 0 when a filesystem drops under its low-water mark: cached
+    /// blocks are pure amortization, so they are the first ballast
+    /// overboard. Handles still held by a streaming pipeline stay valid
+    /// (refcounted) — only the cache's own pins are released.
+    pub fn shed(&self, target_bytes: u64) -> u64 {
+        let mut guard = self.inner.lock().expect("cache lock poisoned");
+        let inner = &mut *guard;
+        let before = inner.bytes;
+        while inner.bytes > target_bytes {
+            let lru = inner.tail;
+            if lru == NIL {
+                break;
+            }
+            inner.remove(lru);
+            inner.evictions += 1;
+        }
+        before - inner.bytes
+    }
+
     pub fn stats(&self) -> CacheStats {
         let g = self.inner.lock().expect("cache lock poisoned");
         CacheStats {
@@ -457,6 +478,28 @@ mod tests {
         assert_eq!(pool.stats().free, 0);
         pool.take(4).unwrap();
         assert_eq!(pool.stats().minted, 1);
+    }
+
+    #[test]
+    fn shed_releases_lru_entries_down_to_the_target() {
+        let pool = SlabPool::new(4, 4);
+        let c = BlockCache::new(1 << 10);
+        for i in 0..4u64 {
+            c.insert(key("a", i * 4), &block(&pool, 4, i as f64));
+        }
+        assert_eq!(c.stats().bytes, 4 * 32);
+        // Refresh entry 0 so it is the MRU survivor.
+        assert!(c.get(&key("a", 0), 4).is_some());
+        let released = c.shed(32);
+        assert_eq!(released, 3 * 32);
+        assert_eq!(c.stats().bytes, 32);
+        assert!(c.get(&key("a", 0), 4).is_some(), "MRU survives a partial shed");
+        // A held handle survives a full shed; the cache itself empties.
+        let held = c.get(&key("a", 0), 4).expect("hit");
+        assert_eq!(c.shed(0), 32);
+        assert_eq!(c.stats().entries, 0);
+        assert_eq!(held.as_slice(), &[0.0; 4][..]);
+        assert_eq!(c.shed(0), 0, "shedding an empty cache is a no-op");
     }
 
     #[test]

@@ -36,6 +36,9 @@ use std::time::Duration;
 pub const NO_COL: u64 = u64::MAX;
 /// Sentinel for "no lane targeted" in [`FaultPlan::wedge_lane`].
 pub const NO_LANE: usize = usize::MAX;
+/// Sentinel for "no free-space override" in
+/// [`FaultPlan::fake_disk_free_mb`].
+pub const NO_DISK: u64 = u64::MAX;
 
 static FAULTS_ON: AtomicBool = AtomicBool::new(false);
 static INTEGRITY_ON: AtomicBool = AtomicBool::new(false);
@@ -263,6 +266,24 @@ pub struct FaultPlan {
     pub wedge_at_chunk: u64,
     /// …by sleeping this long before dropping the chunk on the floor.
     pub wedge_ms: u64,
+    /// The Nth service-WAL append (1-based) writes half its record and
+    /// reports a crash — a power cut mid-append; replay must drop the
+    /// torn tail (0 = off).
+    pub wal_torn_append_at: u64,
+    /// The Nth service-WAL append (1-based) crashes *before* the record
+    /// lands — the crash window between the progress journal's state
+    /// and the WAL's record of it; restart must reconcile from the
+    /// journal, not the WAL (0 = off).
+    pub wal_crash_at: u64,
+    /// The Nth quarantine/spool rename (1-based) crashes after the
+    /// rename but before the directory sync that makes it durable —
+    /// recovery must tolerate the entry landing in either directory
+    /// (0 = off).
+    pub quarantine_crash_at: u64,
+    /// Report this many MB free to the disk-space sentinel instead of
+    /// asking the filesystem — the deterministic way to rehearse
+    /// ENOSPC degradation ([`NO_DISK`] = off).
+    pub fake_disk_free_mb: u64,
 }
 
 impl Default for FaultPlan {
@@ -279,6 +300,10 @@ impl Default for FaultPlan {
             wedge_lane: NO_LANE,
             wedge_at_chunk: 1,
             wedge_ms: 3_000,
+            wal_torn_append_at: 0,
+            wal_crash_at: 0,
+            quarantine_crash_at: 0,
+            fake_disk_free_mb: NO_DISK,
         }
     }
 }
@@ -292,6 +317,10 @@ impl FaultPlan {
             || self.torn_append_at > 0
             || self.commit_crash_at > 0
             || self.wedge_lane != NO_LANE
+            || self.wal_torn_append_at > 0
+            || self.wal_crash_at > 0
+            || self.quarantine_crash_at > 0
+            || self.fake_disk_free_mb != NO_DISK
     }
 }
 
@@ -305,6 +334,8 @@ struct FaultState {
     commits: u64,
     chunks: u64,
     wedged: bool,
+    wal_appends: u64,
+    quarantine_renames: u64,
 }
 
 static STATE: Mutex<Option<FaultState>> = Mutex::new(None);
@@ -329,6 +360,8 @@ pub fn arm(plan: FaultPlan) {
         commits: 0,
         chunks: 0,
         wedged: false,
+        wal_appends: 0,
+        quarantine_renames: 0,
     });
     FAULTS_ON.store(on, Ordering::Release);
 }
@@ -455,6 +488,67 @@ pub fn commit_crash() -> bool {
     hit
 }
 
+/// Verdict of [`wal_append_fault`] for one service-WAL append.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalFault {
+    /// Write only this many of the record's bytes, then report a crash.
+    Torn(usize),
+    /// Crash before any of the record lands.
+    Crash,
+}
+
+/// Called by `Wal::append` once per record, before writing `len` bytes.
+/// Both WAL injectors share one append counter so a plan arming both
+/// schedules them against the same event stream.
+pub fn wal_append_fault(len: usize) -> Option<WalFault> {
+    if !faults_enabled() {
+        return None;
+    }
+    let hit = with_state(|st| {
+        st.wal_appends += 1;
+        let p = &st.plan;
+        if p.wal_crash_at > 0 && st.wal_appends == p.wal_crash_at {
+            Some(WalFault::Crash)
+        } else if p.wal_torn_append_at > 0 && st.wal_appends == p.wal_torn_append_at {
+            Some(WalFault::Torn(len / 2))
+        } else {
+            None
+        }
+    })
+    .flatten()?;
+    note_injected();
+    Some(hit)
+}
+
+/// Called by the scheduler's quarantine/spool mover after the rename
+/// but before the directory sync: `true` simulates a crash in the
+/// window where the rename is visible but not yet durable.
+pub fn quarantine_crash() -> bool {
+    if !faults_enabled() {
+        return false;
+    }
+    let hit = with_state(|st| {
+        st.quarantine_renames += 1;
+        st.plan.quarantine_crash_at > 0 && st.quarantine_renames == st.plan.quarantine_crash_at
+    })
+    .unwrap_or(false);
+    if hit {
+        note_injected();
+    }
+    hit
+}
+
+/// Free-bytes override for the disk-space sentinel: `Some(bytes)` makes
+/// every probe report exactly that much free, letting tests rehearse
+/// low-water degradation without filling a real filesystem.
+pub fn fake_disk_free() -> Option<u64> {
+    if !faults_enabled() {
+        return None;
+    }
+    with_state(|st| (st.plan.fake_disk_free_mb != NO_DISK).then(|| st.plan.fake_disk_free_mb << 20))
+        .flatten()
+}
+
 /// Called by a device lane per received chunk: `Some(d)` tells lane
 /// `lane` to sleep `d` and drop the chunk (a one-shot wedge — the
 /// watchdog, not the lane, is supposed to notice).
@@ -499,6 +593,9 @@ mod tests {
         assert_eq!(torn_append(16), None);
         assert!(!commit_crash());
         assert_eq!(lane_wedge(0), None);
+        assert_eq!(wal_append_fault(64), None);
+        assert!(!quarantine_crash());
+        assert_eq!(fake_disk_free(), None);
     }
 
     #[test]

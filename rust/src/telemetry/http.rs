@@ -4,7 +4,11 @@
 //! One background thread accepts connections on a non-blocking listener
 //! and answers each request from pure registry state (a scrape never
 //! calls into the live pipeline). `GET /metrics` returns the text
-//! exposition, `GET /healthz` returns `ok`; everything else is 404.
+//! exposition, `GET /healthz` returns `ok`, and `POST /drain` asks the
+//! running service to drain gracefully (the one write endpoint — it
+//! flips the same process-global flag as SIGINT and the spool's
+//! `control/drain` file, so the response is immediate while the drain
+//! itself proceeds at the next dispatch turn); everything else is 404.
 //! Dropping the server stops the thread (bounded by the accept-poll
 //! interval), so `serve` shuts it down cleanly on exit.
 
@@ -98,14 +102,20 @@ fn handle_conn(mut conn: TcpStream) -> std::io::Result<()> {
         }
     }
     let head = String::from_utf8_lossy(&buf[..used]);
-    let path = head.split_whitespace().nth(1).unwrap_or("/");
-    let (status, ctype, body) = match path {
-        p if p == "/metrics" || p.starts_with("/metrics?") => (
+    let mut req = head.split_whitespace();
+    let method = req.next().unwrap_or("GET");
+    let path = req.next().unwrap_or("/");
+    let (status, ctype, body) = match (method, path) {
+        ("GET", p) if p == "/metrics" || p.starts_with("/metrics?") => (
             "200 OK",
             "text/plain; version=0.0.4; charset=utf-8",
             registry::global().render(),
         ),
-        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        ("GET", "/healthz") => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        ("POST", "/drain") => {
+            crate::service::request_drain();
+            ("200 OK", "text/plain; charset=utf-8", "draining\n".to_string())
+        }
         _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
     };
     let resp = format!(

@@ -163,6 +163,11 @@ pub struct Registry {
     pub read_retries_total: CounterCell,
     pub lane_respawns_total: CounterCell,
     pub job_retries_total: CounterCell,
+    pub wal_replays_total: CounterCell,
+    pub jobs_resumed_total: CounterCell,
+    pub jobs_cancelled_total: CounterCell,
+    pub drains_total: CounterCell,
+    pub disk_low_water_total: CounterCell,
     stall_total: [CounterCell; StallKind::ALL.len()],
     pub stall_share: GaugeCell,
     lane_outstanding: [GaugeCell; MAX_LANES],
@@ -210,6 +215,11 @@ impl Registry {
             read_retries_total: CounterCell::default(),
             lane_respawns_total: CounterCell::default(),
             job_retries_total: CounterCell::default(),
+            wal_replays_total: CounterCell::default(),
+            jobs_resumed_total: CounterCell::default(),
+            jobs_cancelled_total: CounterCell::default(),
+            drains_total: CounterCell::default(),
+            disk_low_water_total: CounterCell::default(),
             stall_total: std::array::from_fn(|_| CounterCell::default()),
             stall_share: GaugeCell::default(),
             lane_outstanding: std::array::from_fn(|_| GaugeCell::default()),
@@ -473,6 +483,37 @@ impl Registry {
             self.job_retries_total.get(),
         );
 
+        counter(
+            &mut o,
+            "cugwas_wal_replays_total",
+            "Service starts that replayed lifecycle records from the WAL.",
+            self.wal_replays_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_jobs_resumed_total",
+            "Jobs resumed from their progress journals after a crash or drain.",
+            self.jobs_resumed_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_jobs_cancelled_total",
+            "Jobs checkpointed by a drain, deadline, or cancel request.",
+            self.jobs_cancelled_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_drains_total",
+            "Graceful drains the service has begun.",
+            self.drains_total.get(),
+        );
+        counter(
+            &mut o,
+            "cugwas_disk_low_water_total",
+            "Times free disk space fell below the low-water mark and paused admission.",
+            self.disk_low_water_total.get(),
+        );
+
         head(
             &mut o,
             "cugwas_stall_segments_total",
@@ -571,6 +612,11 @@ mod tests {
             "cugwas_lane_respawns_total 0",
             "cugwas_job_retries_total 0",
             "cugwas_jobs_coalesced_total 0",
+            "cugwas_wal_replays_total 0",
+            "cugwas_jobs_resumed_total 0",
+            "cugwas_jobs_cancelled_total 0",
+            "cugwas_drains_total 0",
+            "cugwas_disk_low_water_total 0",
             "# TYPE cugwas_traits gauge",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");

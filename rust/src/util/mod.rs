@@ -2,6 +2,7 @@
 //! quantities, JSON emission helpers, a leveled logger, and the compute
 //! thread pool. All std-only.
 
+pub mod disk;
 pub mod human;
 pub mod json;
 pub mod log;
@@ -9,6 +10,7 @@ pub mod rng;
 pub mod threads;
 pub mod timer;
 
+pub use disk::disk_free_bytes;
 pub use human::{human_bytes, human_duration, human_rate};
 pub use rng::XorShift;
 pub use timer::Timer;

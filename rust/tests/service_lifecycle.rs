@@ -1,0 +1,362 @@
+//! Crash-restart / drain / deadline / disk-degradation matrix for the
+//! durable service lifecycle (ISSUE 10).
+//!
+//! The injector and the drain flag are process-global, so this suite
+//! lives in its own test binary and every scenario runs under one lock:
+//! arm → serve → assert → disarm. The acceptance bar: a `kill -9`
+//! simulated at seeded kill points (journal-commit crash, WAL-append
+//! crash, torn WAL append) must cost at most the uncommitted segments —
+//! the restarted serve resumes from the v4 progress journal and the
+//! final `r.xrd` is *byte-identical* to the fault-free baseline, with
+//! nonzero recovery counters; a drain must refuse admission, checkpoint
+//! in-flight work and exit 0; a deadline must cancel (not fail) within
+//! a segment; a disk below the low-water mark must pause admission and
+//! fail the right job naming the starved path.
+
+use cugwas::config::ServiceConfig;
+use cugwas::gwas::problem::Dims;
+use cugwas::service::{serve, JobSpec};
+use cugwas::storage::fault::{self, FaultPlan, RetryPolicy};
+use cugwas::storage::{generate, Throttle};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One scenario at a time: injector state and the drain flag are
+/// process-global.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cugwas_life_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A small study: 8 windows of 64 columns — enough segment boundaries
+/// for checkpoints while finishing in well under a second unthrottled.
+fn make_dataset(tag: &str) -> (PathBuf, Dims) {
+    let dir = tmpdir(tag);
+    let dims = Dims::new(64, 2, 512).unwrap();
+    generate(&dir, dims, 64, 2024).unwrap();
+    (dir, dims)
+}
+
+/// One worker lane, adaptation on so the engine commits (and checks its
+/// stop points) every `adapt_every` windows.
+fn job(name: &str, dir: &Path) -> JobSpec {
+    let mut j = JobSpec::new(name, dir);
+    j.block = 64;
+    j.adapt = true;
+    j.adapt_every = 2;
+    j
+}
+
+fn svc_cfg(jobs: Vec<JobSpec>, cache_mb: u64, wal: Option<PathBuf>) -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        mem_budget_bytes: 1 << 30,
+        cache_bytes: cache_mb << 20,
+        threads: 2,
+        spool: None,
+        watch: false,
+        auto_tune: false,
+        metrics_addr: None,
+        wal,
+        drain_timeout_secs: 30,
+        disk_low_water_mb: 0,
+        jobs,
+        fault: Default::default(),
+    }
+}
+
+/// Reset every process-global switch to its boot state.
+fn reset() {
+    fault::disarm();
+    fault::set_policy(RetryPolicy::default());
+    fault::set_integrity_enabled(false);
+}
+
+/// Scrub a dataset back to "never streamed": result and journal gone.
+fn scrub(dir: &Path) {
+    let _ = std::fs::remove_file(dir.join("r.xrd"));
+    let _ = std::fs::remove_file(dir.join("r.progress"));
+}
+
+/// The tentpole: crash the process at two seeded kill points — the
+/// engine's journal commit (power cut mid-segment) AND the WAL append
+/// recording the outcome (the window between the journal's state and
+/// the WAL's record of it) — then restart. The WAL replay must resume
+/// the job from its progress journal, replay only the uncommitted
+/// windows, and land `r.xrd` byte-identical. Cache off, then on.
+#[test]
+fn crash_at_seeded_kill_points_then_restart_resumes_bit_identically() {
+    let _g = lock();
+    reset();
+    cugwas::telemetry::set_metrics_enabled(true);
+    for (label, cache_mb) in [("no cache", 0u64), ("cache", 64)] {
+        let (dir, dims) = make_dataset(&format!("crash{cache_mb}"));
+        let wal = dir.join("svc.wal");
+
+        // Fault-free baseline bytes (no WAL: this pass must not leave a
+        // `done` record that would make the chaos serve skip the job).
+        let rep = serve(&svc_cfg(vec![job("study", &dir)], cache_mb, None)).unwrap();
+        assert_eq!(rep.failed(), 0, "[{label}] {}", rep.render());
+        assert_eq!(rep.total_snps(), dims.m, "[{label}]");
+        let baseline = std::fs::read(dir.join("r.xrd")).unwrap();
+        scrub(&dir);
+
+        // Kill point 1 fires inside the engine: the 2nd segment commit
+        // crashes, so the journal holds segment 1 committed and segment
+        // 2's intents only. Kill point 2 fires in the scheduler: the 4th
+        // WAL append — the `failed` record for that very outcome —
+        // crashes too, so the WAL's last word is `streaming`. That is
+        // exactly what `kill -9` mid-segment leaves on disk.
+        fault::set_policy(RetryPolicy { job_retries: 0, ..Default::default() });
+        fault::arm(FaultPlan { commit_crash_at: 2, wal_crash_at: 4, ..Default::default() });
+        let err = serve(&svc_cfg(vec![job("study", &dir)], cache_mb, Some(wal.clone())))
+            .unwrap_err();
+        assert!(err.to_string().contains("injected"), "[{label}] {err}");
+        assert!(fault::counters().injected > 0, "[{label}]");
+        reset();
+
+        // Restart: replay finds `streaming`, resumes the journal, and
+        // recomputes only the windows that never reached a durable
+        // commit — strictly fewer than the whole study.
+        let reg = cugwas::telemetry::global();
+        let replays0 = reg.wal_replays_total.get();
+        let resumed0 = reg.jobs_resumed_total.get();
+        let rep2 = serve(&svc_cfg(vec![job("study", &dir)], cache_mb, Some(wal.clone())))
+            .unwrap();
+        assert_eq!(rep2.failed(), 0, "[{label}] {}", rep2.render());
+        let replayed = rep2.total_snps();
+        assert!(
+            replayed > 0 && replayed < dims.m,
+            "[{label}] resume must replay only the uncommitted tail, got {replayed}/{}",
+            dims.m
+        );
+        assert!(reg.wal_replays_total.get() > replays0, "[{label}] replay counter");
+        assert!(reg.jobs_resumed_total.get() > resumed0, "[{label}] resume counter");
+        let bytes = std::fs::read(dir.join("r.xrd")).unwrap();
+        assert_eq!(bytes, baseline, "[{label}] restart diverged from the baseline");
+
+        // One more restart: the WAL now ends in `done` + a seal — the
+        // job is terminal and must not run a third time.
+        let rep3 =
+            serve(&svc_cfg(vec![job("study", &dir)], cache_mb, Some(wal))).unwrap();
+        assert_eq!(rep3.total_snps(), 0, "[{label}] terminal jobs must not re-run");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    reset();
+}
+
+/// A WAL append torn mid-record (power cut mid-write) fails that serve;
+/// the next serve truncates the torn tail on open and runs the job to
+/// completion from the surviving prefix.
+#[test]
+fn a_torn_wal_append_is_truncated_on_reopen() {
+    let _g = lock();
+    reset();
+    let (dir, dims) = make_dataset("tornwal");
+    let wal = dir.join("svc.wal");
+
+    // The very first append (the job's `submitted` record) tears.
+    fault::arm(FaultPlan { wal_torn_append_at: 1, ..Default::default() });
+    let err = serve(&svc_cfg(vec![job("study", &dir)], 0, Some(wal.clone()))).unwrap_err();
+    assert!(err.to_string().contains("torn"), "{err}");
+    let torn_len = std::fs::metadata(&wal).unwrap().len();
+    assert!(torn_len > 0, "the torn half-record must be durable");
+    fault::disarm();
+
+    let rep = serve(&svc_cfg(vec![job("study", &dir)], 0, Some(wal.clone()))).unwrap();
+    assert_eq!(rep.failed(), 0, "{}", rep.render());
+    assert_eq!(rep.total_snps(), dims.m);
+    // The reopen truncated the torn tail before appending new records:
+    // every line in the surviving WAL is intact (checksummed).
+    let text = std::fs::read_to_string(&wal).unwrap();
+    assert!(text.lines().count() >= 4, "{text}");
+    assert!(text.lines().last().unwrap().contains("\tsealed\t"), "{text}");
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A drain requested mid-stream checkpoints the in-flight job at its
+/// next segment boundary, reports it cancelled (exit 0 — not failed),
+/// and the next serve resumes it byte-identically.
+#[test]
+fn drain_mid_stream_checkpoints_and_a_restart_completes_the_job() {
+    let _g = lock();
+    reset();
+    cugwas::telemetry::set_metrics_enabled(true);
+    let (dir, dims) = make_dataset("drain");
+    let wal = dir.join("svc.wal");
+
+    // Baseline bytes, then scrub.
+    serve(&svc_cfg(vec![job("study", &dir)], 0, None)).unwrap();
+    let baseline = std::fs::read(dir.join("r.xrd")).unwrap();
+    scrub(&dir);
+
+    // Throttle the stream so the drain lands mid-pass (~0.5 s/window,
+    // stop points every window), and request it from another thread —
+    // the same flag SIGINT and `POST /drain` set.
+    let mut slow = job("study", &dir);
+    slow.adapt_every = 1;
+    slow.read_throttle = Some(Throttle { bytes_per_sec: 64_000.0 });
+    let trigger = std::thread::spawn(|| {
+        std::thread::sleep(Duration::from_millis(400));
+        cugwas::service::request_drain();
+    });
+    let reg = cugwas::telemetry::global();
+    let drains0 = reg.drains_total.get();
+    let cancelled0 = reg.jobs_cancelled_total.get();
+    let rep = serve(&svc_cfg(vec![slow], 0, Some(wal.clone()))).unwrap();
+    trigger.join().unwrap();
+    assert_eq!(rep.failed(), 0, "a drain must not fail jobs: {}", rep.render());
+    assert_eq!(rep.cancelled(), 1, "{}", rep.render());
+    assert!(rep.total_snps() < dims.m, "the drain must interrupt the pass");
+    assert!(reg.drains_total.get() > drains0);
+    assert!(reg.jobs_cancelled_total.get() > cancelled0);
+    let text = std::fs::read_to_string(&wal).unwrap();
+    assert!(text.contains("\tcancelled\t"), "{text}");
+    assert!(text.lines().last().unwrap().contains("\tsealed\t"), "drain seals the WAL");
+
+    // Restart (unthrottled — throttles are runtime policy, not job
+    // identity, though the work-shaping `adapt_every` is): the
+    // `cancelled` record resumes the journal and the final bytes match
+    // the uninterrupted baseline.
+    let mut fresh = job("study", &dir);
+    fresh.adapt_every = 1;
+    let rep2 = serve(&svc_cfg(vec![fresh], 0, Some(wal))).unwrap();
+    assert_eq!(rep2.failed(), 0, "{}", rep2.render());
+    let replayed = rep2.total_snps();
+    assert!(replayed > 0 && replayed < dims.m, "resumed, not restarted: {replayed}");
+    assert_eq!(std::fs::read(dir.join("r.xrd")).unwrap(), baseline);
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A job past its deadline is cancelled (checkpointed) at the next
+/// segment boundary — freeing the lane — and a resubmission *without*
+/// the deadline resumes its journal: scheduling policy is not job
+/// identity.
+#[test]
+fn a_deadline_cancels_within_a_segment_and_the_job_stays_resumable() {
+    let _g = lock();
+    reset();
+    let (dir, dims) = make_dataset("deadline");
+    let wal = dir.join("svc.wal");
+
+    serve(&svc_cfg(vec![job("study", &dir)], 0, None)).unwrap();
+    let baseline = std::fs::read(dir.join("r.xrd")).unwrap();
+    scrub(&dir);
+
+    // ~0.5 s/window against a 1 s deadline: the cancel fires one
+    // segment boundary after the deadline passes, a few windows in.
+    let mut slow = job("study", &dir);
+    slow.adapt_every = 1;
+    slow.read_throttle = Some(Throttle { bytes_per_sec: 64_000.0 });
+    slow.deadline_secs = 1;
+    let t0 = std::time::Instant::now();
+    let rep = serve(&svc_cfg(vec![slow], 0, Some(wal.clone()))).unwrap();
+    assert_eq!(rep.failed(), 0, "a deadline is a cancel, not a failure: {}", rep.render());
+    assert_eq!(rep.cancelled(), 1, "{}", rep.render());
+    assert!(rep.total_snps() < dims.m, "the deadline must interrupt the pass");
+    // Lane freed promptly: well before the ~4 s a full throttled pass
+    // would take (deadline 1 s + at most ~one window past it + slack).
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "deadline took {:?} to free the lane",
+        t0.elapsed()
+    );
+
+    // Resubmitted with no deadline (and no throttle): scheduling policy
+    // is excluded from the spec hash, so this is the *same* job and the
+    // WAL's `cancelled` record resumes its journal.
+    let mut fresh = job("study", &dir);
+    fresh.adapt_every = 1;
+    let rep2 = serve(&svc_cfg(vec![fresh], 0, Some(wal))).unwrap();
+    assert_eq!(rep2.failed(), 0, "{}", rep2.render());
+    let replayed = rep2.total_snps();
+    assert!(replayed > 0 && replayed < dims.m, "resumed, not restarted: {replayed}");
+    assert_eq!(std::fs::read(dir.join("r.xrd")).unwrap(), baseline);
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Free space below the low-water mark with nothing in flight: the
+/// sentinel pauses admission and fails the queued jobs with an error
+/// naming the starved path — never a hang, never a torn journal. With
+/// the fault cleared, the same dataset streams to completion.
+#[test]
+fn disk_below_low_water_fails_queued_jobs_naming_the_path() {
+    let _g = lock();
+    reset();
+    cugwas::telemetry::set_metrics_enabled(true);
+    let (dir, dims) = make_dataset("lowwater");
+
+    fault::arm(FaultPlan { fake_disk_free_mb: 1, ..Default::default() });
+    let mut cfg = svc_cfg(vec![job("study", &dir)], 0, Some(dir.join("svc.wal")));
+    cfg.disk_low_water_mb = 10;
+    let reg = cugwas::telemetry::global();
+    let low0 = reg.disk_low_water_total.get();
+    let rep = serve(&cfg).unwrap();
+    assert_eq!(rep.failed(), 1, "{}", rep.render());
+    assert_eq!(rep.total_snps(), 0, "nothing may stream under ENOSPC");
+    let err = rep.jobs[0].error.as_deref().unwrap();
+    assert!(err.contains("low-water"), "{err}");
+    assert!(err.contains(dir.file_name().unwrap().to_str().unwrap()), "must name the path: {err}");
+    assert!(reg.disk_low_water_total.get() > low0, "sentinel counter");
+    fault::disarm();
+
+    // Space recovered: a fresh submission (fresh WAL — the failed job is
+    // terminal in the old one) streams normally.
+    let rep2 = serve(&svc_cfg(vec![job("study", &dir)], 0, None)).unwrap();
+    assert_eq!(rep2.failed(), 0, "{}", rep2.render());
+    assert_eq!(rep2.total_snps(), dims.m);
+
+    reset();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A crash injected between the quarantine rename and its directory
+/// syncs: the bad spool file still leaves the inbox exactly once, the
+/// service reports it and keeps running, and the on-disk state is the
+/// recoverable half-move the idempotent retry (unit-tested in the
+/// scheduler) completes.
+#[test]
+fn a_crash_mid_quarantine_rename_leaves_recoverable_state() {
+    let _g = lock();
+    reset();
+    let spool = tmpdir("qcrash");
+    std::fs::create_dir_all(&spool).unwrap();
+    std::fs::write(spool.join("bad.toml"), "[job]\nblock = 8\n").unwrap(); // no dataset
+
+    fault::arm(FaultPlan { quarantine_crash_at: 1, ..Default::default() });
+    let mut cfg = svc_cfg(vec![], 0, None);
+    cfg.spool = Some(spool.clone());
+    let rep = serve(&cfg).unwrap();
+    assert_eq!(rep.failed(), 1, "{}", rep.render());
+    assert!(rep.jobs[0].error.as_deref().unwrap().contains("missing dataset"));
+    assert!(fault::counters().injected > 0, "the quarantine crash never fired");
+    // The rename landed; the crash skipped the syncs and the sidecar —
+    // the exact torn state a retry must (and does) tolerate.
+    assert!(!spool.join("bad.toml").exists(), "the bad file must leave the inbox");
+    assert!(spool.join("quarantine/bad.toml").exists());
+    assert!(
+        !spool.join("quarantine/bad.toml.reason").exists(),
+        "the crash fires before the sidecar"
+    );
+    // The service's own WAL (implicit at <spool>/service.wal) was still
+    // sealed cleanly — a control-plane crash never tears the data plane.
+    let text = std::fs::read_to_string(spool.join("service.wal")).unwrap();
+    assert!(text.lines().last().unwrap().contains("\tsealed\t"), "{text}");
+
+    reset();
+    std::fs::remove_dir_all(&spool).unwrap();
+}

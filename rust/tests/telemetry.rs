@@ -156,19 +156,31 @@ fn pipeline_run_records_spans_and_exports_chrome_trace() {
 fn metrics_endpoint_answers_scrapes() {
     enable();
     let srv = telemetry::MetricsServer::start("127.0.0.1:0").unwrap();
-    let get = |path: &str| -> String {
+    let req = |method: &str, path: &str| -> String {
         let mut s = TcpStream::connect(srv.addr()).unwrap();
-        write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+        write!(s, "{method} {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+            .unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         out
     };
+    let get = |path: &str| req("GET", path);
 
     let metrics = get("/metrics");
     assert!(metrics.starts_with("HTTP/1.1 200 OK\r\n"), "{metrics}");
     assert!(metrics.contains("text/plain; version=0.0.4"), "{metrics}");
     assert!(metrics.contains("cugwas_snps_per_sec"), "{metrics}");
     assert!(metrics.contains("cugwas_cache_resident_bytes"), "{metrics}");
+    // The lifecycle counters are part of the scrape catalog from boot.
+    for needle in [
+        "cugwas_wal_replays_total",
+        "cugwas_jobs_resumed_total",
+        "cugwas_jobs_cancelled_total",
+        "cugwas_drains_total",
+        "cugwas_disk_low_water_total",
+    ] {
+        assert!(metrics.contains(needle), "missing {needle} in scrape:\n{metrics}");
+    }
 
     let health = get("/healthz");
     assert!(health.starts_with("HTTP/1.1 200 OK\r\n"), "{health}");
@@ -176,4 +188,13 @@ fn metrics_endpoint_answers_scrapes() {
 
     let missing = get("/nope");
     assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+    // The one write endpoint: POST /drain flips the service's drain
+    // flag; a GET of the same path stays a 404 (method-aware routing).
+    assert!(req("GET", "/drain").starts_with("HTTP/1.1 404"));
+    assert!(!cugwas::service::drain_requested());
+    let drain = req("POST", "/drain");
+    assert!(drain.starts_with("HTTP/1.1 200 OK\r\n"), "{drain}");
+    assert!(drain.contains("draining"), "{drain}");
+    assert!(cugwas::service::drain_requested(), "POST /drain must request a drain");
 }
